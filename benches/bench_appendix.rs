@@ -1,0 +1,117 @@
+//! Appendix reproductions: Table 8 (GSM8K/MobileLLM), Table 10 (data
+//! formats), Table 11 (LLM generalization, |T|=1), Fig 17 (Pareto front),
+//! Table 12 (vLLM-integrated iso-batch throughput), Table 14 (TPR +
+//! Intelligence/Watt).
+
+use thinkv::bench::{bench_len_scale, bench_seeds, write_results, Table};
+use thinkv::quant::Precision;
+use thinkv::sim::harness::{EvictKind, Method, SimConfig, ThinKvSim};
+use thinkv::sim::oracle::{fidelity, fidelity_int};
+use thinkv::sim::{run_method, DatasetProfile, GpuProfile, LrmProfile, ServingCost, Trace};
+
+fn avg_pass1(ds: &DatasetProfile, m: &Method, budget: usize, scale: f64) -> (f64, f64) {
+    let seeds = bench_seeds();
+    let (mut a, mut mem) = (0.0, 0.0);
+    for &s in &seeds {
+        let t = Trace::generate(ds, s, scale);
+        let r = run_method(&t, m, &SimConfig { budget, seed: s, stride: 4, rollouts: 24 });
+        a += r.pass1;
+        mem += r.mem_frac;
+    }
+    let n = seeds.len() as f64;
+    (a / n, mem / n)
+}
+
+fn main() {
+    let scale = bench_len_scale();
+
+    // Table 8: MobileLLM-R1-950M on GSM8K, k=256
+    let gsm = DatasetProfile::gsm8k();
+    let mut t8 = Table::new("Table 8 (E.6): GSM8K, MobileLLM-R1-950M profile, k=256", &["method", "compression_x", "acc"]);
+    let (a, m) = avg_pass1(&gsm, &Method::FullKv, usize::MAX, scale);
+    t8.row(&["FullKV".into(), format!("{:.0}", 1.0 / m.max(1e-9)), format!("{:.1}", a * 100.0)]);
+    let (a, m) = avg_pass1(&gsm, &Method::Evict(EvictKind::Rkv), 256, scale);
+    t8.row(&["R-KV".into(), format!("{:.0}", 1.0 / m), format!("{:.1}", a * 100.0)]);
+    let (a, m) = avg_pass1(&gsm, &Method::ThinKv(ThinKvSim::default()), 256, scale);
+    t8.row(&["ThinKV".into(), format!("{:.0}", 1.0 / m), format!("{:.1}", a * 100.0)]);
+    t8.print();
+
+    // Table 10: NVFP4/ternary vs INT4/INT2 element formats
+    let mut t10 = Table::new("Table 10 (E.8): data-format fidelity", &["format", "fidelity"]);
+    t10.row(&["NVFP4".into(), format!("{:.3}", fidelity(Some(Precision::Nvfp4)))]);
+    t10.row(&["INT4".into(), format!("{:.3}", fidelity_int(4))]);
+    t10.row(&["Ternary(+E4M3 scale)".into(), format!("{:.3}", fidelity(Some(Precision::Ternary)))]);
+    t10.row(&["INT2".into(), format!("{:.3}", fidelity_int(2))]);
+    t10.print();
+
+    // Table 11: LLM generalization (LongWriter, |T| = 1)
+    let lw = DatasetProfile::longwriter();
+    let mut t11 = Table::new("Table 11 (E.10): LLM long-response generalization (|T|=1)", &["method", "acc", "mem_%"]);
+    let (a, _) = avg_pass1(&lw, &Method::FullKv, usize::MAX, scale);
+    t11.row(&["FullKV".into(), format!("{:.1}", a * 100.0), "100".into()]);
+    let (a, m) = avg_pass1(&lw, &Method::Evict(EvictKind::H2O), 300, scale);
+    t11.row(&["H2O (5%)".into(), format!("{:.1}", a * 100.0), format!("{:.1}", m * 100.0)]);
+    let tk1 = ThinKvSim { n_thoughts: 1, thresholds: vec![], ..Default::default() };
+    let (a, m) = avg_pass1(&lw, &Method::ThinKv(tk1), 300, scale);
+    t11.row(&["ThinKV".into(), format!("{:.1}", a * 100.0), format!("{:.1}", m * 100.0)]);
+    t11.print();
+
+    // Fig 17: Pareto front — accuracy vs KV size across config sweeps
+    let aime = DatasetProfile::aime();
+    let mut f17 = Table::new("Fig 17 (E.11): Pareto sweep, acc vs mem (AIME)", &["method", "config", "mem_%", "acc"]);
+    for b in [256usize, 1024, 4096] {
+        let (a, m) = avg_pass1(&aime, &Method::ThinKv(ThinKvSim::default()), b, scale);
+        f17.row(&["ThinKV".into(), format!("k={b}"), format!("{:.2}", m * 100.0), format!("{:.1}", a * 100.0)]);
+        let (a, m) = avg_pass1(&aime, &Method::Evict(EvictKind::Rkv), b, scale);
+        f17.row(&["R-KV".into(), format!("k={b}"), format!("{:.2}", m * 100.0), format!("{:.1}", a * 100.0)]);
+    }
+    let (a, m) = avg_pass1(&aime, &Method::Kivi { prec: Precision::Ternary }, usize::MAX, scale);
+    f17.row(&["KIVI-2".into(), "-".into(), format!("{:.2}", m * 100.0), format!("{:.1}", a * 100.0)]);
+    f17.print();
+
+    // Table 12: vLLM-integrated iso-batch throughput (cost model at B=8/256)
+    let cost = ServingCost::new(GpuProfile::a100_80gb(), LrmProfile::r1_llama_8b());
+    let mut t12 = Table::new("Table 12 (E.12): iso-batch throughput in the serving stack", &["method", "batch", "tok_s"]);
+    for batch in [8usize, 256] {
+        let full = cost.decode_step(batch, cost.model.fullkv_bytes_per_token() * 16_384.0, 0.0, false, 0.0);
+        if batch == 8 {
+            t12.row(&["FullKV".into(), format!("{batch}"), format!("{:.1}", cost.throughput_tok_s(batch, &full))]);
+        }
+        let kv16 = cost.model.kv_bytes_per_token(16.0) * 1024.0;
+        let ovl = cost.decode_step(batch, kv16, kv16 * 0.05, true, 1.0);
+        t12.row(&["R-KV (ovl)".into(), format!("{batch}"), format!("{:.1}", cost.throughput_tok_s(batch, &ovl))]);
+        let tk = cost.decode_step(batch, cost.model.kv_bytes_per_token(3.4) * 1024.0, 0.0, false, 2.0);
+        t12.row(&["ThinKV".into(), format!("{batch}"), format!("{:.1}", cost.throughput_tok_s(batch, &tk))]);
+    }
+    t12.print();
+
+    // Table 14: time-per-request + Intelligence/Watt
+    let mut t14 = Table::new("Table 14 (E.15): TPR + Intelligence/Watt (AIME, R1-8B profile)", &["method", "budget", "TPR_s", "acc", "intel_per_watt"]);
+    let gen = 9020.0;
+    let watt = 400.0; // A100 board power
+    for (name, kv_bits, budget, gather, m) in [
+        ("FullKV", 16.0, usize::MAX, false, Method::FullKv),
+        ("R-KV (seq)", 16.0, 1024, true, Method::Evict(EvictKind::Rkv)),
+        ("ThinKV", 3.4, 1024, false, Method::ThinKv(ThinKvSim::default())),
+    ] {
+        let live = if budget == usize::MAX { gen / 2.0 } else { budget as f64 };
+        let kv = cost.model.kv_bytes_per_token(kv_bits) * live;
+        let g = if gather { kv * 0.05 } else { 0.0 };
+        let step = cost.decode_step(8, kv, g, false, 0.0);
+        let tpr = step.total_us() * gen / 1e6;
+        let (a, _) = avg_pass1(&aime, &m, budget, scale);
+        // intelligence/watt: accuracy per joule-second normalized
+        let ipw = a * 100.0 / (tpr * watt) * 100.0;
+        t14.row(&[name.into(), if budget == usize::MAX { "-".into() } else { budget.to_string() },
+                  format!("{:.1}", tpr), format!("{:.1}", a * 100.0), format!("{:.2}", ipw)]);
+    }
+    t14.print();
+
+    let mut j = t8.to_json();
+    j.set("table10", t10.to_json());
+    j.set("table11", t11.to_json());
+    j.set("fig17", f17.to_json());
+    j.set("table12", t12.to_json());
+    j.set("table14", t14.to_json());
+    write_results("appendix", j);
+}

@@ -1,0 +1,48 @@
+//! Figure 8: pass@1 vs KV budget across datasets and methods — the paper's
+//! main accuracy grid. ThinKV achieves near-lossless accuracy at budgets
+//! where token-level baselines collapse.
+
+use thinkv::bench::{bench_len_scale, bench_seeds, write_results, Table};
+use thinkv::sim::harness::{EvictKind, Method, SimConfig, ThinKvSim};
+use thinkv::sim::{run_method, DatasetProfile, Trace};
+
+fn main() {
+    let scale = bench_len_scale();
+    let seeds = bench_seeds();
+    let budgets = [64usize, 256, 1024, 4096];
+    let methods: Vec<(&str, Method)> = vec![
+        ("ThinKV", Method::ThinKv(ThinKvSim::default())),
+        ("R-KV", Method::Evict(EvictKind::Rkv)),
+        ("H2O", Method::Evict(EvictKind::H2O)),
+        ("LazyEviction", Method::Evict(EvictKind::LazyEviction)),
+        ("RaaS", Method::Evict(EvictKind::RaaS)),
+        ("StreamingLLM", Method::Evict(EvictKind::StreamingLlm)),
+    ];
+    for ds in [DatasetProfile::aime(), DatasetProfile::livecodebench(), DatasetProfile::math500()] {
+        let mut t = Table::new(
+            &format!("Figure 8: pass@1 vs budget — {} (FullKV base {:.1})", ds.name, ds.base_acc * 100.0),
+            &["method", "k=64", "k=256", "k=1024", "k=4096", "mem%@1024"],
+        );
+        for (name, m) in &methods {
+            let mut cells = vec![name.to_string()];
+            let mut mem1024 = 0.0;
+            for &b in &budgets {
+                let mut acc = 0.0;
+                for &s in &seeds {
+                    let trace = Trace::generate(&ds, s, scale);
+                    let r = run_method(&trace, m, &SimConfig { budget: b, seed: s, stride: 4, rollouts: 24 });
+                    acc += r.pass1;
+                    if b == 1024 {
+                        mem1024 += r.mem_frac;
+                    }
+                }
+                cells.push(format!("{:.1}", acc / seeds.len() as f64 * 100.0));
+            }
+            cells.push(format!("{:.2}", mem1024 / seeds.len() as f64 * 100.0));
+            t.row(&cells);
+        }
+        t.print();
+        write_results(&format!("fig8_accuracy_{}", ds.name.to_ascii_lowercase().replace('-', "")), t.to_json());
+    }
+    println!("\nExpected shape (paper): ThinKV near-lossless at k=1024 (<3.7% of FullKV\nmemory) and degrades gracefully to k=64; baselines need >=4x larger budgets\nfor similar accuracy, recency-based ones collapse (anchor loss -> loops).");
+}

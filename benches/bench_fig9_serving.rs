@@ -1,0 +1,75 @@
+//! Figure 9: multi-user system throughput vs per-user latency (vLLM-style
+//! dynamic serving analysis) — cost-model sweep plus a real coordinator
+//! mini-run at laptop scale.
+
+use thinkv::bench::{write_results, Table};
+use thinkv::sim::{GpuProfile, LrmProfile, ServingCost};
+
+fn main() {
+    let cost = ServingCost::new(GpuProfile::a100_80gb(), LrmProfile::r1_llama_8b());
+    let gen = 9020.0; // AIME mean generation
+    let mut t = Table::new(
+        "Figure 9: reqs/s vs user latency (R1-Llama-8B profile, AIME, k=1024)",
+        &["method", "batch", "reqs_per_s", "user_latency_s", "note"],
+    );
+    for batch in [1usize, 8, 32, 64, 128, 256] {
+        // FullKV: cache grows with generation; max batch ~13
+        if batch <= 13 {
+            let kv = cost.model.fullkv_bytes_per_token() * gen / 2.0;
+            let step = cost.decode_step(batch, kv, 0.0, false, 0.0);
+            let lat = step.total_us() * gen / 1e6;
+            t.row(&["FullKV".into(), format!("{batch}"), format!("{:.3}", batch as f64 / lat), format!("{:.0}", lat), "".into()]);
+        }
+        // R-KV: 1024 fp16 + gather every step
+        let kv_rkv = cost.model.kv_bytes_per_token(16.0) * 1024.0;
+        let step = cost.decode_step(batch, kv_rkv, kv_rkv * 0.05, true, 0.0);
+        let lat = step.total_us() * gen / 1e6;
+        t.row(&["R-KV (ovl)".into(), format!("{batch}"), format!("{:.3}", batch as f64 / lat), format!("{:.0}", lat), "".into()]);
+        // ThinKV: 1024 @ 3.4 bits, no gather, ~5% steps with TBE overhead
+        let kv_tk = cost.model.kv_bytes_per_token(3.4) * 1024.0;
+        let step = cost.decode_step(batch, kv_tk, 0.0, false, 2.0);
+        let lat = step.total_us() * gen / 1e6;
+        t.row(&["ThinKV".into(), format!("{batch}"), format!("{:.3}", batch as f64 / lat), format!("{:.0}", lat), "".into()]);
+    }
+    t.print();
+
+    // real coordinator mini-run (CPU PJRT, tiny model)
+    if std::path::Path::new(&format!("{}/model_config.json", thinkv::model::default_artifacts_dir())).exists()
+        && std::env::var("THINKV_BENCH_REAL").map(|v| v == "1").unwrap_or(true)
+    {
+        use thinkv::coordinator::{CompressionMode, Coordinator, ServeConfig};
+        let mut t2 = Table::new(
+            "Real coordinator mini-run (CPU PJRT, 32 tokens/request)",
+            &["mode", "users", "reqs_per_s", "mean_latency_ms"],
+        );
+        for (mode, label) in [
+            (CompressionMode::thinkv_default(), "ThinKV"),
+            (CompressionMode::FullKv, "FullKV"),
+        ] {
+            for users in [1usize, 4] {
+                let cfg = ServeConfig {
+                    mode: mode.clone(),
+                    budget: 256,
+                    max_new_tokens: 32,
+                    workers: 2,
+                    ..ServeConfig::default()
+                };
+                let c = Coordinator::start(cfg).unwrap();
+                let prompts: Vec<Vec<i32>> = (0..users)
+                    .map(|u| (0..64).map(|i| ((i * 3 + u) % 512) as i32).collect())
+                    .collect();
+                // warmup compile
+                let _ = c.run_batch(vec![prompts[0].clone()]);
+                let t0 = std::time::Instant::now();
+                let rs = c.run_batch(prompts).unwrap();
+                let wall = t0.elapsed().as_secs_f64();
+                let mean_lat: f64 = rs.iter().map(|r| r.total_ms).sum::<f64>() / rs.len() as f64;
+                t2.row(&[label.into(), format!("{users}"), format!("{:.2}", users as f64 / wall), format!("{:.0}", mean_lat)]);
+            }
+        }
+        t2.print();
+        write_results("fig9_serving_real", t2.to_json());
+    }
+    write_results("fig9_serving", t.to_json());
+    println!("\nExpected shape (paper): FullKV saturates at B<=13; at iso-batch ThinKV gives\n~58% lower latency vs FullKV@8 and higher reqs/s + lower latency than R-KV at\nB=256 (no gather, smaller cache reads).");
+}

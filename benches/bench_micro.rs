@@ -1,0 +1,99 @@
+//! Microbenchmarks of the real hot paths (perf-pass instrumentation):
+//! decode-step execution (quant vs fp32 HLO), standalone fused attention,
+//! Rust-side group quantization, k-means eviction, gather compaction.
+
+use thinkv::bench::{time_ms, write_results, Table};
+use thinkv::compress::kmeans_select;
+use thinkv::kvcache::Fp32Cache;
+use thinkv::quant::{quant_groups, Precision};
+use thinkv::runtime::{Engine, QuantCache};
+use thinkv::util::rng::Rng;
+
+fn main() {
+    let mut t = Table::new("Microbenchmarks (real CPU timings)", &["op", "config", "mean_ms", "best_ms"]);
+
+    // rust group quantization (cache-write path)
+    let mut rng = Rng::new(1);
+    let mut x = vec![0f32; 64];
+    rng.fill_normal_f32(&mut x, 0.0, 1.0);
+    let mut codes = vec![0u8; 64];
+    let mut scales = vec![0f32; 4];
+    for p in [Precision::Ternary, Precision::Nvfp4, Precision::Fp8] {
+        let (mean, best) = time_ms(2000, || {
+            quant_groups(std::hint::black_box(&x), p, &mut codes, &mut scales);
+        });
+        t.row(&[format!("quant_groups x64"), format!("{p:?}"), format!("{:.5}", mean), format!("{:.5}", best)]);
+    }
+
+    // k-means eviction policy
+    let pts: Vec<Vec<f32>> = (0..128).map(|_| {
+        let mut v = vec![0f32; 64];
+        rng.fill_normal_f32(&mut v, 0.0, 1.0);
+        v
+    }).collect();
+    let (mean, best) = time_ms(50, || {
+        std::hint::black_box(kmeans_select(&pts, 32, 7, 8));
+    });
+    t.row(&["kmeans_select".into(), "128 keys -> 32".into(), format!("{:.3}", mean), format!("{:.3}", best)]);
+
+    // gather compaction (baseline cost ThinKV avoids)
+    let (mean, best) = time_ms(30, || {
+        let mut c = Fp32Cache::new(4, 2048, 64, 16);
+        let k = vec![1.0f32; 4 * 2048 * 64];
+        c.write_prefill(&k.clone(), &k, 2048);
+        let evict: Vec<usize> = (0..2048).step_by(2).collect();
+        c.evict_positions(&evict);
+        c.compact_gather();
+    });
+    t.row(&["gather_compact".into(), "4L x 2048 x 64".into(), format!("{:.3}", mean), format!("{:.3}", best)]);
+
+    // real PJRT decode steps
+    if std::path::Path::new(&format!("{}/model_config.json", thinkv::model::default_artifacts_dir())).exists() {
+        let eng = Engine::new().unwrap();
+        let m = eng.model().clone();
+        for cap in eng.manifest.quant_caps.clone() {
+            let (l, hkv, dh, g, b) = (m.n_layers, m.n_kv_heads, m.d_head, m.groups(), m.buf_slots);
+            let k_codes = vec![0u8; l * cap * hkv * dh];
+            let k_scales = vec![0f32; l * cap * hkv * g];
+            let v_codes = k_codes.clone();
+            let v_scales = k_scales.clone();
+            let tags = vec![1u8; l * cap];
+            let mask = vec![1f32; l * cap];
+            let buf_k = vec![0f32; l * b * hkv * dh];
+            let buf_v = buf_k.clone();
+            let buf_mask = vec![0f32; l * b];
+            let cache = QuantCache {
+                capacity: cap, k_codes: &k_codes, k_scales: &k_scales,
+                v_codes: &v_codes, v_scales: &v_scales, tags: &tags, mask: &mask,
+                buf_k: &buf_k, buf_v: &buf_v, buf_mask: &buf_mask,
+            };
+            let _ = eng.decode_quant(1, 0, 0, &cache); // compile
+            let (mean, best) = time_ms(30, || {
+                let _ = std::hint::black_box(eng.decode_quant(1, 64, 0, &cache));
+            });
+            t.row(&[format!("decode_quant (PJRT)"), format!("C={cap}"), format!("{:.3}", mean), format!("{:.3}", best)]);
+        }
+        for cap in [eng.manifest.fp32_caps[0]] {
+            let (l, hkv, dh, b) = (m.n_layers, m.n_kv_heads, m.d_head, m.buf_slots);
+            let k = vec![0f32; l * cap * hkv * dh];
+            let v = k.clone();
+            let mask = vec![1f32; l * cap];
+            let buf_k = vec![0f32; l * b * hkv * dh];
+            let buf_v = buf_k.clone();
+            let buf_mask = vec![0f32; l * b];
+            let _ = eng.decode_fp32(cap, 1, 0, 0, &k, &v, &mask, &buf_k, &buf_v, &buf_mask);
+            let (mean, best) = time_ms(30, || {
+                let _ = std::hint::black_box(eng.decode_fp32(cap, 1, 64, 0, &k, &v, &mask, &buf_k, &buf_v, &buf_mask));
+            });
+            t.row(&["decode_fp32 (PJRT)".into(), format!("C={cap}"), format!("{:.3}", mean), format!("{:.3}", best)]);
+        }
+        // engine exec-only time share
+        println!(
+            "\nengine exec totals: {} calls, {:.1} ms total",
+            eng.exec_calls.get(),
+            eng.exec_nanos.get() as f64 / 1e6
+        );
+    }
+    t.print();
+    write_results("micro", t.to_json());
+}

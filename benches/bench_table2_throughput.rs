@@ -1,0 +1,92 @@
+//! Table 2: end-to-end throughput on A100-80GB and GH200 (cost model),
+//! R1-Llama-8B, 32K-token continuous generation, including the iso-batch
+//! iso-compression comparison.
+
+use thinkv::bench::{write_results, Table};
+use thinkv::sim::{GpuProfile, LrmProfile, ServingCost};
+
+fn row(
+    t: &mut Table,
+    name: &str,
+    budget: Option<usize>,
+    mem_pct: f64,
+    entries: &[(usize, f64)],
+) {
+    let mut cells = vec![
+        name.to_string(),
+        budget.map(|b| b.to_string()).unwrap_or("-".into()),
+        format!("{:.2}", mem_pct),
+    ];
+    for (b, tok) in entries {
+        cells.push(format!("{b}"));
+        cells.push(format!("{:.1}", tok));
+    }
+    t.row(&cells);
+}
+
+fn main() {
+    let model = LrmProfile::r1_llama_8b();
+    let gen = 32_768.0;
+    let fullkv_bytes = model.fullkv_bytes_per_token() * gen;
+    let mut t = Table::new(
+        "Table 2: throughput (tok/s), R1-Llama-8B, 32K generation",
+        &["method", "budget", "mem_%", "A100_batch", "A100_tok_s", "GH200_batch", "GH200_tok_s"],
+    );
+    let configs: Vec<(&str, Option<usize>, f64, f64, bool, f64)> = vec![
+        // (name, budget, kv_bytes/req, gather_bytes/req, overlapped, overhead_us)
+        ("FullKV", None, fullkv_bytes / 2.0, 0.0, false, 0.0),
+        // R-KV gathers on ~83% of steps; amortized rewrite traffic is a
+        // fraction of the live cache per step (Table 5: gather ~= 0.6x
+        // attention time)
+        ("R-KV (seq)", Some(1024), model.kv_bytes_per_token(16.0) * 1024.0,
+         model.kv_bytes_per_token(16.0) * 1024.0 * 0.05, false, 1.0),
+        ("R-KV (ovl)", Some(1024), model.kv_bytes_per_token(16.0) * 1024.0,
+         model.kv_bytes_per_token(16.0) * 1024.0 * 0.05, true, 1.0),
+        ("ThinKV", Some(1024), model.kv_bytes_per_token(3.4) * 1024.0, 0.0, false, 2.0),
+    ];
+    for (name, budget, kv, gather, ovl, oh) in &configs {
+        let mut entries = Vec::new();
+        let mut mem_pct = 0.0;
+        for gpu in [GpuProfile::a100_80gb(), GpuProfile::gh200()] {
+            let cost = ServingCost::new(gpu, model.clone());
+            // FullKV cache grows: size at steady state ~ gen/2 used for batch,
+            // but peak (admission) uses full gen
+            let admission = if budget.is_none() { fullkv_bytes } else { *kv };
+            let batch = cost.max_batch(admission).max(1);
+            let step = cost.decode_step(batch, *kv, *gather, *ovl, *oh);
+            entries.push((batch, cost.throughput_tok_s(batch, &step)));
+            mem_pct = admission / fullkv_bytes * 100.0;
+        }
+        row(&mut t, name, *budget, mem_pct, &entries);
+    }
+    t.print();
+
+    // iso-batch, iso-compression comparison at batch 256
+    let mut t2 = Table::new(
+        "Table 2 (cont.): iso-batch (256) iso-compression comparison",
+        &["method", "budget", "mem_%", "A100_tok_s", "GH200_tok_s"],
+    );
+    let iso: Vec<(&str, f64, f64, bool, f64, f64)> = vec![
+        ("R-KV (seq)", model.kv_bytes_per_token(16.0) * 1024.0,
+         model.kv_bytes_per_token(16.0) * 1024.0 * 0.05, false, 1.0, 5.48),
+        ("R-KV (ovl)", model.kv_bytes_per_token(16.0) * 1024.0,
+         model.kv_bytes_per_token(16.0) * 1024.0 * 0.05, true, 1.0, 5.48),
+        // ThinKV w/o TBQ: same token budget, fp16 storage, but CT (no gather)
+        ("ThinKV w/o TBQ", model.kv_bytes_per_token(16.0) * 1024.0 * 1.055,
+         0.0, false, 2.0, 5.78),
+    ];
+    for (name, kv, gather, ovl, oh, mem) in iso {
+        let mut cells = vec![name.to_string(), "1024".to_string(), format!("{mem:.2}")];
+        for gpu in [GpuProfile::a100_80gb(), GpuProfile::gh200()] {
+            let cost = ServingCost::new(gpu, model.clone());
+            let step = cost.decode_step(256, kv, gather, ovl, oh);
+            cells.push(format!("{:.1}", cost.throughput_tok_s(256, &step)));
+        }
+        t2.row(&cells);
+    }
+    t2.print();
+    let mut j = t.to_json();
+    j.set("iso_batch", t2.to_json());
+    write_results("table2_throughput", j);
+    println!("\nExpected shape (paper Table 2): FullKV batch ~13 @ ~300 tok/s on A100;\nThinKV sustains ~3x R-KV's batch and up to ~5.8x R-KV(seq) / ~3.6x R-KV(ovl)\nthroughput; iso-batch iso-compression still ~3.2x/1.6x from CT alone.");
+}

@@ -1,0 +1,58 @@
+//! Table 5: per-layer/per-operation time breakdown and call rates,
+//! measured on the REAL coordinator (CPU PJRT) for ThinKV vs R-KV, plus
+//! the sim-harness call-rate comparison at paper scale.
+
+use thinkv::bench::{bench_len_scale, write_results, Table};
+use thinkv::coordinator::{CompressionMode, Coordinator, ServeConfig};
+use thinkv::sim::harness::{EvictKind, Method, SimConfig, ThinKvSim};
+use thinkv::sim::{run_method, DatasetProfile, Trace};
+
+fn main() {
+    // --- real measured breakdown on the tiny PJRT model ------------------
+    if std::path::Path::new(&format!("{}/model_config.json", thinkv::model::default_artifacts_dir())).exists() {
+        for (mode, label, budget) in [
+            (CompressionMode::thinkv_default(), "ThinKV", 192usize),
+            (CompressionMode::Evict(EvictKind::Rkv), "R-KV", 96),
+        ] {
+            let cfg = ServeConfig {
+                mode,
+                budget,
+                max_new_tokens: 192,
+                workers: 1,
+                ..ServeConfig::default()
+            };
+            let c = Coordinator::start(cfg).unwrap();
+            let prompt: Vec<i32> = (0..64).map(|i| (i * 5 % 512) as i32).collect();
+            let _ = c.submit(prompt.clone()).unwrap().wait(); // warmup/compile
+            let r = c.submit(prompt).unwrap().wait().unwrap();
+            let mut t = Table::new(
+                &format!("Table 5 (measured, CPU PJRT): {label} per-op breakdown"),
+                &["operation", "time_%", "calls_%"],
+            );
+            for (name, pct, calls) in r.breakdown.rows() {
+                if pct > 0.005 || calls > 0.0 {
+                    t.row(&[name.into(), format!("{pct:.2}"), format!("{calls:.1}")]);
+                }
+            }
+            t.print();
+            write_results(&format!("table5_breakdown_{}", label.to_lowercase().replace('-', "")), t.to_json());
+        }
+    }
+
+    // --- call-rate comparison at paper scale (sim) ------------------------
+    let scale = bench_len_scale();
+    let aime = DatasetProfile::aime();
+    let trace = Trace::generate(&aime, 5, scale);
+    let cfgs = SimConfig { budget: 1024, seed: 5, stride: 4, rollouts: 8 };
+    let think = run_method(&trace, &Method::ThinKv(ThinKvSim::default()), &cfgs);
+    let rkv = run_method(&trace, &Method::Evict(EvictKind::Rkv), &cfgs);
+    let mut t = Table::new(
+        "Table 5 (call rates, paper-scale sim, k=1024)",
+        &["method", "evict_calls_%", "gather_per_step_tokens"],
+    );
+    t.row(&["ThinKV".into(), format!("{:.2}", think.evict_call_rate * 100.0), "0".into()]);
+    t.row(&["R-KV".into(), format!("{:.2}", rkv.evict_call_rate * 100.0), format!("{:.0}", rkv.gather_bytes_per_step)]);
+    t.print();
+    write_results("table5_callrates", t.to_json());
+    println!("\nExpected shape (paper Table 5): ThinKV eviction fires on ~4.6% of steps\n(proactive, segment-granular) vs R-KV ~83% (per-token, budget-saturated);\ngather time is identically zero for ThinKV.");
+}

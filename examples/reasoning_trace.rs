@@ -1,0 +1,120 @@
+//! Reasoning-trace walkthrough: the paper's Figure 6 / Figure 10(b)
+//! mechanics on a simulated AIME-style chain of thought.
+//!
+//! Shows, segment by segment: the classifier's thought labels vs ground
+//! truth, TBQ precision assignment, TBE annealing at transitions (the
+//! sawtooth eviction curve), the CT block table state with slot reuse, and
+//! the final accuracy verdict from the counterfactual oracle.
+
+use thinkv::compress::tbe::{Tbe, TbeConfig};
+use thinkv::kvcache::{CacheConfig, CtCache, Thought};
+use thinkv::quant::Precision;
+use thinkv::sim::harness::{run_method, Method, SimConfig, ThinKvSim};
+use thinkv::sim::{DatasetProfile, Trace};
+use thinkv::util::rng::Rng;
+
+fn main() {
+    println!("ThinKV reasoning-trace walkthrough\n");
+    let dataset = DatasetProfile::aime();
+    let trace = Trace::generate(&dataset, 4242, 0.3);
+    println!(
+        "simulated {} CoT: {} tokens, {} thought segments, breakdown R/E/T = {:.0}%/{:.0}%/{:.0}%",
+        dataset.name,
+        trace.gen_len,
+        trace.segments.len(),
+        trace.thought_breakdown()[0],
+        trace.thought_breakdown()[1],
+        trace.thought_breakdown()[2],
+    );
+
+    // --- drive a real CtCache + TBE over the trace (Fig 10b sawtooth) ----
+    let cfg = CacheConfig {
+        layers: 2,
+        capacity: 2048,
+        block_size: 8,
+        hkv: 2,
+        dh: 32,
+        buf_slots: 16,
+    };
+    let mut cache = CtCache::new(cfg.clone());
+    let mut tbe = Tbe::new(TbeConfig::new(1024));
+    let mut rng = Rng::new(1);
+    let psi = |t: Thought| match t {
+        Thought::Transition => Precision::Ternary,
+        _ => Precision::Nvfp4,
+    };
+    println!("\nsegment timeline (budget 1024, schedule R={:?}):", tbe.cfg.retention);
+    let mut curve = Vec::new();
+    for seg in trace.segments.iter().skip(1).take(14) {
+        let sid = cache.open_segment(seg.thought, seg.start);
+        for i in 0..seg.len.min(160) {
+            let n = cfg.layers * cfg.kv_dim();
+            let mut k = vec![0f32; n];
+            let mut v = vec![0f32; n];
+            rng.fill_normal_f32(&mut k, 0.0, 1.0);
+            rng.fill_normal_f32(&mut v, 0.0, 1.0);
+            if cache.push_token(&k, &v, seg.start + i, sid, seg.thought) {
+                while cache.flush_buffer(&psi).is_err() {
+                    tbe.ensure_budget(&mut cache);
+                }
+            }
+        }
+        if seg.thought == Thought::Transition {
+            tbe.on_transition_end(&mut cache, sid);
+        }
+        tbe.ensure_budget(&mut cache);
+        curve.push(cache.live_tokens());
+        println!(
+            "  seg {:2} [{}] pos {:5}..{:5}  live-after={:5}  reuses={:3}  evicted-total={}",
+            seg.id,
+            seg.thought.letter(),
+            seg.start,
+            seg.end(),
+            cache.live_tokens(),
+            cache.tables[0].reuse_count,
+            tbe.stats.tokens_evicted,
+        );
+    }
+    println!("\neviction curve (live tokens after each segment): {curve:?}");
+    println!(
+        "TBE stats: anneals={}, case1={}, case2={}, tokens evicted={}",
+        tbe.stats.anneal_calls, tbe.stats.case1_events, tbe.stats.case2_events, tbe.stats.tokens_evicted
+    );
+
+    // CT block table peek
+    let t0 = &cache.tables[0];
+    println!(
+        "\nCT block table (layer 0): {} blocks allocated, {} in-place reuses, {} free",
+        t0.allocated_blocks(),
+        t0.reuse_count,
+        t0.free_blocks_left()
+    );
+    for b in t0.blocks.iter().take(5) {
+        println!(
+            "  block {:3} [{}] filled {}/{} evict_mask {:08b} segments {:?}",
+            b.phys,
+            b.thought.letter(),
+            b.filled,
+            t0.block_size,
+            b.eviction_mask,
+            b.start_indices
+        );
+    }
+
+    // --- full harness comparison on the same trace -----------------------
+    println!("\naccuracy verdicts (oracle, budget 512):");
+    let sim_cfg = SimConfig { budget: 512, seed: 9, stride: 4, rollouts: 128 };
+    for m in [
+        Method::FullKv,
+        Method::ThinKv(ThinKvSim::default()),
+        Method::Evict(thinkv::sim::harness::EvictKind::Rkv),
+        Method::Kivi { prec: Precision::Ternary },
+    ] {
+        let r = run_method(&trace, &m, &sim_cfg);
+        println!(
+            "  {:16} pass@1 {:.3}  mem {:5.2}%  bits {:4.1}  recall@10 {:.2}  inflation {:.2}x",
+            r.method, r.pass1, r.mem_frac * 100.0, r.avg_bits, r.recall10, r.len_inflation
+        );
+    }
+    println!("\nreasoning_trace OK");
+}

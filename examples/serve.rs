@@ -1,0 +1,76 @@
+//! Multi-user serving demo (the Figure-9 scenario at laptop scale):
+//! starts the TCP JSON server with a ThinKV coordinator, then drives B
+//! concurrent clients and reports system throughput vs per-user latency.
+//!
+//!     cargo run --release --example serve -- --users 4 --max-tokens 48
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use thinkv::coordinator::{CompressionMode, ServeConfig};
+use thinkv::server::{Client, Server};
+use thinkv::util::cli::Args;
+use thinkv::util::rng::Rng;
+use thinkv::util::stats::{mean, percentile};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let users = args.usize_or("users", 4);
+    let reqs_per_user = args.usize_or("requests", 2);
+    let max_tokens = args.usize_or("max-tokens", 48);
+    let mode = CompressionMode::parse(&args.str_or("mode", "thinkv"))
+        .unwrap_or_else(CompressionMode::thinkv_default);
+
+    println!("ThinKV serving demo: {} users x {} requests, mode={}", users, reqs_per_user, mode.label());
+    let cfg = ServeConfig {
+        mode,
+        budget: args.usize_or("budget", 512),
+        max_new_tokens: max_tokens,
+        workers: args.usize_or("workers", 2),
+        ..ServeConfig::default()
+    };
+    let server = Server::start("127.0.0.1:0", cfg)?;
+    let addr = server.addr.clone();
+    println!("server on {addr}");
+
+    let done = Arc::new(AtomicUsize::new(0));
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for u in 0..users {
+        let addr = addr.clone();
+        let done = Arc::clone(&done);
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+            let mut rng = Rng::new(77 + u as u64);
+            let mut client = Client::connect(&addr)?;
+            let mut latencies = Vec::new();
+            for r in 0..reqs_per_user {
+                let prompt: Vec<i32> = (0..64).map(|_| rng.below(512) as i32).collect();
+                let t = std::time::Instant::now();
+                let resp = client.request(&prompt, (u * 100 + r) as u64)?;
+                let ms = t.elapsed().as_secs_f64() * 1e3;
+                latencies.push(ms);
+                done.fetch_add(1, Ordering::SeqCst);
+                let toks = resp.get("tokens").and_then(|t| t.as_arr()).map(|a| a.len()).unwrap_or(0);
+                println!("  user {u} req {r}: {toks} tokens in {ms:.0} ms");
+            }
+            Ok(latencies)
+        }));
+    }
+    let mut all = Vec::new();
+    for h in handles {
+        all.extend(h.join().expect("client thread")?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total = done.load(Ordering::SeqCst);
+    println!("\nsystem throughput: {:.2} reqs/s ({total} requests in {wall:.1}s)", total as f64 / wall);
+    println!("user latency: mean {:.0} ms, p50 {:.0} ms, p99 {:.0} ms",
+             mean(&all), percentile(&all, 50.0), percentile(&all, 99.0));
+
+    // server stats round-trip
+    let mut c = Client::connect(&addr)?;
+    let stats = c.stats()?;
+    println!("server stats: {}", stats.to_string());
+    server.shutdown();
+    println!("serve demo OK");
+    Ok(())
+}

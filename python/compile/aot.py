@@ -1,0 +1,226 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts consumed by the Rust L3.
+
+Run once via `make artifacts`.  Emits into `artifacts/`:
+
+  prefill_p64.hlo.txt          prompt prefill (P=64)
+  decode_quant_c{512,1024,2048}.hlo.txt   ThinKV decode step (fused kernel)
+  decode_fp32_c{1024,2048,4096}.hlo.txt   FullKV/eviction-baseline decode step
+  attn_micro_c1024.hlo.txt     standalone fused attention (Rust microbench)
+  weights.bin                  seeded model weights (TKVW format)
+  model_config.json            dims + artifact + weight-order manifest
+  quant_golden.bin             ref quantizer vectors (Rust bit-exact check)
+  attn_golden.bin              ref attention vectors (Rust runtime check)
+
+Interchange is HLO **text**, not `.serialize()`: jax>=0.5 emits protos with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import struct
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import formats as F
+from compile import model as M
+from compile.kernels import ref as R
+
+QUANT_CAPS = [512, 1024, 2048]
+FP32_CAPS = [1024, 2048, 4096]
+MICRO_C = 1024
+GOLDEN_ATTN_C = 128
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default elides big
+    # constant arrays as `constant({...})`, which the XLA 0.5.1 text parser
+    # silently reconstructs as garbage — the kernel's dequant tables are
+    # such constants.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def write_weights_bin(path: str, cfg: M.ModelConfig, weights) -> None:
+    """TKVW format: magic, version u32, count u32, then per tensor:
+    name_len u32, name bytes, ndim u32, dims u32[], data f32 LE."""
+    with open(path, "wb") as f:
+        f.write(b"TKVW")
+        f.write(struct.pack("<II", 1, len(weights)))
+        for (name, shape), w in zip(cfg.weight_specs(), weights):
+            arr = np.asarray(w, dtype=np.float32)
+            assert tuple(arr.shape) == tuple(shape), (name, arr.shape, shape)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype("<f4").tobytes())
+
+
+def write_quant_golden(path: str, seed: int = 7, n: int = 8, d: int = 64) -> None:
+    """TKVG format: magic, version, ntags, n, d, g u32; then per tag
+    (0,1,2): x f32[n,d], codes u8[n,d], scales f32[n,d/g], deq f32[n,d]."""
+    rng = np.random.default_rng(seed)
+    g = F.GROUP_SIZE
+    with open(path, "wb") as f:
+        f.write(b"TKVG")
+        f.write(struct.pack("<IIIII", 1, 3, n, d, g))
+        for tag in (F.TAG_TERNARY, F.TAG_NVFP4, F.TAG_FP8):
+            x = (rng.normal(size=(n, d)) * rng.uniform(0.2, 3.0)).astype(np.float32)
+            codes, scales = R.quant_groups_ref(x, tag)
+            deq = R.dequant_groups_ref(codes, scales, tag)
+            f.write(x.astype("<f4").tobytes())
+            f.write(codes.astype(np.uint8).tobytes())
+            f.write(scales.astype("<f4").tobytes())
+            f.write(deq.astype("<f4").tobytes())
+
+
+def write_attn_golden(path: str, cfg: M.ModelConfig, seed: int = 11) -> None:
+    """TKVA format: one fused-attention case at C=GOLDEN_ATTN_C.
+
+    Header: magic, version, H, Hkv, D, G, C, BUF u32.  Arrays in order:
+    q f32[H,D], k_codes u8[C,Hkv,D], k_scales f32[C,Hkv,G], v_codes,
+    v_scales, tags u8[C], mask f32[C], buf_k f32[BUF,Hkv,D], buf_v,
+    buf_mask f32[BUF], out f32[H,D], probs f32[H,C+BUF].
+    """
+    rng = np.random.default_rng(seed)
+    H, Hkv, D, G, BUF, C = (cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+                            cfg.groups, cfg.buf_slots, GOLDEN_ATTN_C)
+    q = rng.normal(size=(H, D)).astype(np.float32)
+    kf = rng.normal(size=(C, Hkv, D)).astype(np.float32)
+    vf = rng.normal(size=(C, Hkv, D)).astype(np.float32)
+    tags = rng.integers(0, 3, size=(C,)).astype(np.uint8)
+    mask = (rng.random(C) < 0.75).astype(np.float32)
+    kc = np.zeros((C, Hkv, D), np.uint8)
+    ks = np.zeros((C, Hkv, G), np.float32)
+    vc = np.zeros_like(kc)
+    vs = np.zeros_like(ks)
+    for i in range(C):
+        kc[i], ks[i] = R.quant_groups_ref(kf[i], int(tags[i]))
+        vc[i], vs[i] = R.quant_groups_ref(vf[i], int(tags[i]))
+    bk = rng.normal(size=(BUF, Hkv, D)).astype(np.float32)
+    bv = rng.normal(size=(BUF, Hkv, D)).astype(np.float32)
+    bm = (rng.random(BUF) < 0.5).astype(np.float32)
+    out, probs = R.fused_paged_attention_ref(q, kc, ks, vc, vs, tags, mask, bk, bv, bm)
+    with open(path, "wb") as f:
+        f.write(b"TKVA")
+        f.write(struct.pack("<IIIIIII", 1, H, Hkv, D, G, C, BUF))
+        for arr in (q, kc, ks, vc, vs, tags, mask, bk, bv, bm, out, probs):
+            a = np.asarray(arr)
+            f.write(a.astype("<f4").tobytes() if a.dtype != np.uint8 else a.tobytes())
+
+
+def weight_structs(cfg: M.ModelConfig):
+    return [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in cfg.weight_specs()]
+
+
+def lower_all(outdir: str, cfg: M.ModelConfig, verbose: bool = True):
+    os.makedirs(outdir, exist_ok=True)
+    ws = weight_structs(cfg)
+    S = jax.ShapeDtypeStruct
+    artifacts = {}
+
+    def emit(name, fn, *args):
+        if verbose:
+            print(f"  lowering {name} ...", flush=True)
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[name] = f"{name}.hlo.txt"
+        if verbose:
+            print(f"    -> {len(text)} chars", flush=True)
+
+    # Prefill
+    emit(f"prefill_p{cfg.prefill_len}",
+         functools.partial(M.prefill, cfg),
+         ws, S((cfg.prefill_len,), jnp.int32))
+
+    # Quantized decode variants
+    for c in QUANT_CAPS:
+        sh = M.decode_quant_shapes(cfg, c)
+        emit(f"decode_quant_c{c}",
+             functools.partial(M.decode_step_quant, cfg),
+             ws, sh["token"], sh["pos"], sh["buf_idx"],
+             sh["k_codes"], sh["k_scales"], sh["v_codes"], sh["v_scales"],
+             sh["tags"], sh["mask"], sh["buf_k"], sh["buf_v"], sh["buf_mask"])
+
+    # FP32 decode variants
+    for c in FP32_CAPS:
+        sh = M.decode_fp32_shapes(cfg, c)
+        emit(f"decode_fp32_c{c}",
+             functools.partial(M.decode_step_fp32, cfg),
+             ws, sh["token"], sh["pos"], sh["buf_idx"],
+             sh["k_cache"], sh["v_cache"], sh["mask"],
+             sh["buf_k"], sh["buf_v"], sh["buf_mask"])
+
+    # Standalone fused attention microbench
+    from compile.kernels import paged_attn as PA
+    H, Hkv, D, G, B = (cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.groups,
+                       cfg.buf_slots)
+    emit(f"attn_micro_c{MICRO_C}",
+         lambda *a: PA.fused_paged_attention(*a),
+         S((H, D), jnp.float32),
+         S((MICRO_C, Hkv, D), jnp.uint8), S((MICRO_C, Hkv, G), jnp.float32),
+         S((MICRO_C, Hkv, D), jnp.uint8), S((MICRO_C, Hkv, G), jnp.float32),
+         S((MICRO_C,), jnp.uint8), S((MICRO_C,), jnp.float32),
+         S((B, Hkv, D), jnp.float32), S((B, Hkv, D), jnp.float32),
+         S((B,), jnp.float32))
+
+    return artifacts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--seed", type=int, default=1234)
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    cfg = M.ModelConfig()
+
+    print("ThinKV AOT export", flush=True)
+    weights = M.init_weights(cfg, seed=args.seed)
+    write_weights_bin(os.path.join(outdir, "weights.bin"), cfg, weights)
+    write_quant_golden(os.path.join(outdir, "quant_golden.bin"))
+    write_attn_golden(os.path.join(outdir, "attn_golden.bin"), cfg)
+
+    artifacts = lower_all(outdir, cfg)
+
+    config = {
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads, "d_head": cfg.d_head,
+            "d_ffn": cfg.d_ffn, "rope_base": cfg.rope_base,
+            "buf_slots": cfg.buf_slots, "prefill_len": cfg.prefill_len,
+            "obs_window": cfg.obs_window, "group_size": F.GROUP_SIZE,
+        },
+        "capacities": {"quant": QUANT_CAPS, "fp32": FP32_CAPS},
+        "micro_c": MICRO_C,
+        "golden_attn_c": GOLDEN_ATTN_C,
+        "artifacts": artifacts,
+        "weights": [{"name": n, "shape": list(s)} for n, s in cfg.weight_specs()],
+        "seed": args.seed,
+    }
+    with open(os.path.join(outdir, "model_config.json"), "w") as f:
+        json.dump(config, f, indent=1)
+    print(f"wrote {len(artifacts)} HLO artifacts + weights/golden/config to {outdir}")
+
+
+if __name__ == "__main__":
+    main()

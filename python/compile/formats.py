@@ -1,0 +1,83 @@
+"""Shared numeric-format definitions for ThinKV quantization.
+
+Single source of truth for the three cache element formats the paper uses
+(§4.2, §D.3).  The Rust cache-write path mirrors these tables bit-for-bit
+(cross-checked via artifacts/quant_golden.json produced by aot.py):
+
+* FP8 E4M3  (tag=2): 1-4-3, bias 7, no inf, S.1111.111 = NaN, max 448.
+  Per-(token, head) fp32 scale (the paper's "per-tensor" at cache-entry
+  granularity), itself snapped to the E4M3 grid.
+* NVFP4     (tag=1): E2M1 codes {0, .5, 1, 1.5, 2, 3, 4, 6} with a sign bit,
+  group size g=16 along d_head, group scale = max|x|/6 on the E4M3 grid.
+* Ternary   (tag=0): {-1, 0, +1}, g=16, group scale = mean|x| on the E4M3
+  grid (2-bit codes; storage-packing accounted analytically, see DESIGN §4).
+
+Storage layout on the XLA side is uniform u8 per element (low bits carry the
+code); *reported* memory uses packed accounting.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+GROUP_SIZE = 16
+
+TAG_TERNARY = 0
+TAG_NVFP4 = 1
+TAG_FP8 = 2
+
+# NVFP4 (E2M1) magnitude table; code = sign*8 + magnitude-index.
+NVFP4_MAG = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], dtype=np.float32)
+NVFP4_MAX = 6.0
+
+FP8_MAX = 448.0
+
+
+def _e4m3_decode_table() -> np.ndarray:
+    """256-entry decode table for FP8 E4M3 (OCP variant: no inf, 0x7f/0xff NaN).
+
+    NaN codes are mapped to 0.0 — the encoder never emits them.
+    """
+    tab = np.zeros(256, dtype=np.float32)
+    for code in range(256):
+        s = -1.0 if (code & 0x80) else 1.0
+        e = (code >> 3) & 0xF
+        m = code & 0x7
+        if e == 0xF and m == 0x7:
+            val = 0.0  # NaN slot, unused by the encoder
+        elif e == 0:
+            val = (m / 8.0) * 2.0 ** (-6)  # subnormal
+        else:
+            val = (1.0 + m / 8.0) * 2.0 ** (e - 7)
+        tab[code] = s * val
+    return tab
+
+
+E4M3_TABLE = _e4m3_decode_table()
+
+# Sorted non-negative magnitudes (with their codes) for nearest-neighbour
+# encoding. 120 finite positive values + zero.
+_pos = [(E4M3_TABLE[c], c) for c in range(0x80) if not (c >> 3 == 0xF and (c & 7) == 7)]
+_pos.sort()
+E4M3_POS_VALUES = np.array([v for v, _ in _pos], dtype=np.float32)
+E4M3_POS_CODES = np.array([c for _, c in _pos], dtype=np.uint8)
+
+
+def e4m3_encode(x: np.ndarray) -> np.ndarray:
+    """Round-to-nearest E4M3 encode (numpy reference; ties toward smaller)."""
+    x = np.asarray(x, dtype=np.float32)
+    mag = np.clip(np.abs(x), 0.0, FP8_MAX)
+    idx = np.searchsorted(E4M3_POS_VALUES, mag)
+    idx = np.clip(idx, 1, len(E4M3_POS_VALUES) - 1)
+    lo = E4M3_POS_VALUES[idx - 1]
+    hi = E4M3_POS_VALUES[idx]
+    pick_hi = (mag - lo) > (hi - mag)
+    idx = np.where(pick_hi, idx, idx - 1)
+    code = E4M3_POS_CODES[idx]
+    code = np.where(np.signbit(x), code | 0x80, code).astype(np.uint8)
+    return code
+
+
+def e4m3_snap(x: np.ndarray) -> np.ndarray:
+    """Snap values onto the E4M3 grid (decode(encode(x)))."""
+    return E4M3_TABLE[e4m3_encode(x)]

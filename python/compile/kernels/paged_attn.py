@@ -1,0 +1,220 @@
+"""L1 Pallas kernels: fused dequantization + paged decode attention.
+
+The paper's compute hot-spot (§5, §6.1 "System Optimizations"): decode-step
+attention over a slot-structured (paged) KV cache whose entries are stored
+in mixed precision (FP8 / NVFP4 / ternary per thought type), with
+dequantization *fused* into the attention kernel ("we fuse dequantization
+with matrix multiplication to reduce overhead", §6.1).
+
+Hardware adaptation (DESIGN §3): the CUDA/Triton threadblock schedule of the
+paper becomes a Pallas grid over physical KV blocks; each grid step stages
+one `[BS, Hkv, D]` code tile (+ scales/tags/mask) from HBM into VMEM via
+BlockSpec and accumulates a streaming (flash) softmax.  Slot order is
+irrelevant — attention is permutation invariant (paper Theorem 1) — which is
+exactly what lets Continuous Thinking reuse evicted slots in place.
+
+Everything is lowered `interpret=True` (CPU PJRT cannot run Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import formats as F
+from compile.kernels import quant as Q
+
+NEG = -1e30
+
+
+def _flash_block(q, k, v, mask, i, scores_ref, acc_ref, m_ref, l_ref):
+    """One streaming-softmax accumulation step.
+
+    q: (H, D); k, v: (BS, H, D) already expanded to query heads;
+    mask: (BS,).  Writes raw masked scores for this block and updates the
+    running (max, denom, acc) carried in the output refs.
+    """
+    h, d = q.shape
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, NEG, jnp.float32)
+        l_ref[...] = jnp.zeros(l_ref.shape, jnp.float32)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    # Contractions are written as broadcast-multiply-reduce: with tiny H/D
+    # they lower to plain elementwise+reduce HLO that XLA fuses into the
+    # surrounding kernel body (verified equivalent to einsum vs ref.py).
+    s = jnp.sum(k * q[None, :, :], axis=-1).T / math.sqrt(d)  # (H, BS)
+    s = jnp.where(mask[None, :] > 0, s, NEG)
+    scores_ref[...] = s
+
+    m_prev = m_ref[...][:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None]) * (mask[None, :] > 0)
+    pv = jnp.sum(p.T[:, :, None] * v, axis=0)  # (H, D)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+    l_ref[...] = l_ref[...] * alpha[:, None] + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new[:, None]
+
+
+def _fused_kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref, tag_ref, mask_ref,
+                  t0, t1, t2, t3,
+                  scores_ref, acc_ref, m_ref, l_ref, *, rep: int):
+    i = pl.program_id(0)
+    q = q_ref[...]
+    tags = tag_ref[...]
+    t = Q.Tables(t0[...], t1[...], t2[...], t3[...])
+    k = Q.dequant_any_jnp(kc_ref[...], ks_ref[...], tags[:, None], t)
+    v = Q.dequant_any_jnp(vc_ref[...], vs_ref[...], tags[:, None], t)
+    k = jnp.repeat(k, rep, axis=1)  # (BS, H, D)
+    v = jnp.repeat(v, rep, axis=1)
+    _flash_block(q, k, v, mask_ref[...], i, scores_ref, acc_ref, m_ref, l_ref)
+
+
+def _fp32_kernel(q_ref, k_ref, v_ref, mask_ref,
+                 scores_ref, acc_ref, m_ref, l_ref, *, rep: int):
+    i = pl.program_id(0)
+    q = q_ref[...]
+    k = jnp.repeat(k_ref[...], rep, axis=1)
+    v = jnp.repeat(v_ref[...], rep, axis=1)
+    _flash_block(q, k, v, mask_ref[...], i, scores_ref, acc_ref, m_ref, l_ref)
+
+
+
+def _pick_block(c: int, block: int) -> int:
+    """Largest tile size <= `block` that divides the region length."""
+    b = min(block, c)
+    while c % b != 0:
+        b -= 1
+    return b
+
+def _common_specs(h, d, g, hkv, block):
+    q_spec = pl.BlockSpec((h, d), lambda i: (0, 0))
+    out_specs = [
+        pl.BlockSpec((h, block), lambda i: (0, i)),  # scores
+        pl.BlockSpec((h, d), lambda i: (0, 0)),      # acc
+        pl.BlockSpec((h, 1), lambda i: (0, 0)),      # m
+        pl.BlockSpec((h, 1), lambda i: (0, 0)),      # l
+    ]
+    return q_spec, out_specs
+
+
+def _out_shapes(h, d, c):
+    return [
+        jax.ShapeDtypeStruct((h, c), jnp.float32),
+        jax.ShapeDtypeStruct((h, d), jnp.float32),
+        jax.ShapeDtypeStruct((h, 1), jnp.float32),
+        jax.ShapeDtypeStruct((h, 1), jnp.float32),
+    ]
+
+
+def fused_paged_attention_parts(q, k_codes, k_scales, v_codes, v_scales, tags,
+                                mask, *, block: int = 128):
+    """Flash accumulation over the quantized region only.
+
+    Returns (scores (H,C) raw, acc (H,D), m (H,1), l (H,1)) — merged with the
+    full-precision ring buffer by `merge_buffer`.
+    """
+    h, d = q.shape
+    c, hkv, _ = k_codes.shape
+    g = F.GROUP_SIZE
+    rep = h // hkv
+    block = _pick_block(c, block)
+    q_spec, out_specs = _common_specs(h, d, g, hkv, block)
+    t = Q.tables_jnp()
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, rep=rep),
+        grid=(c // block,),
+        in_specs=[
+            q_spec,
+            pl.BlockSpec((block, hkv, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block, hkv, d // g), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block, hkv, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block, hkv, d // g), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ] + [
+            pl.BlockSpec((256,), lambda i: (0,)),
+            pl.BlockSpec((t.pos_vals.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((t.pos_codes.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((8,), lambda i: (0,)),
+        ],
+        out_specs=out_specs,
+        out_shape=_out_shapes(h, d, c),
+        interpret=True,
+    )(q, k_codes, k_scales, v_codes, v_scales, tags, mask, *t)
+
+
+def paged_attention_fp32_parts(q, k, v, mask, *, block: int = 128):
+    """Flash accumulation over an f32 cache region (FullKV / eviction-only)."""
+    h, d = q.shape
+    c, hkv, _ = k.shape
+    g = F.GROUP_SIZE
+    rep = h // hkv
+    block = _pick_block(c, block)
+    q_spec, out_specs = _common_specs(h, d, g, hkv, block)
+    return pl.pallas_call(
+        functools.partial(_fp32_kernel, rep=rep),
+        grid=(c // block,),
+        in_specs=[
+            q_spec,
+            pl.BlockSpec((block, hkv, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block, hkv, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=out_specs,
+        out_shape=_out_shapes(h, d, c),
+        interpret=True,
+    )(q, k, v, mask)
+
+
+def merge_buffer(parts, q, buf_k, buf_v, buf_mask):
+    """Merge the flash partials with the full-precision ring buffer region.
+
+    This is the standard flash-merge epilogue: the buffer is tiny (B_buf =
+    group size g per paper §4.2) so it runs as plain fused HLO in the same
+    jitted module.  Returns (out (H,D), probs (H, C+BUF)).
+    """
+    scores_q, acc, m, l = parts
+    h, d = q.shape
+    rep = h // buf_k.shape[1]
+    kb = jnp.repeat(buf_k, rep, axis=1)  # (BUF, H, D)
+    vb = jnp.repeat(buf_v, rep, axis=1)
+    sb = jnp.sum(kb * q[None, :, :], axis=-1).T / math.sqrt(d)  # (H, BUF)
+    sb = jnp.where(buf_mask[None, :] > 0, sb, NEG)
+
+    m_tot = jnp.maximum(m[:, 0], jnp.max(sb, axis=1))
+    alpha = jnp.exp(m[:, 0] - m_tot)
+    pb = jnp.exp(sb - m_tot[:, None]) * (buf_mask[None, :] > 0)
+    acc_tot = acc * alpha[:, None] + jnp.sum(pb.T[:, :, None] * vb, axis=0)
+    l_tot = l[:, 0] * alpha + jnp.sum(pb, axis=1)
+    out = acc_tot / jnp.where(l_tot > 0, l_tot, 1.0)[:, None]
+
+    # Joint softmax row for the thought classifier / baselines.
+    s_all = jnp.concatenate([scores_q, sb], axis=1)
+    m_all = jnp.max(s_all, axis=1, keepdims=True)
+    e = jnp.exp(s_all - m_all)
+    e = jnp.where(s_all <= NEG / 2, 0.0, e)
+    z = jnp.sum(e, axis=1, keepdims=True)
+    probs = e / jnp.where(z > 0, z, 1.0)
+    return out, probs
+
+
+def fused_paged_attention(q, k_codes, k_scales, v_codes, v_scales, tags, mask,
+                          buf_k, buf_v, buf_mask, *, block: int = 128):
+    """Full fused path: quantized paged region + fp ring buffer."""
+    parts = fused_paged_attention_parts(
+        q, k_codes, k_scales, v_codes, v_scales, tags, mask, block=block)
+    return merge_buffer(parts, q, buf_k, buf_v, buf_mask)
+
+
+def paged_attention_fp32(q, k, v, mask, buf_k, buf_v, buf_mask, *, block: int = 128):
+    """FullKV / eviction-baseline path: f32 paged region + fp ring buffer."""
+    parts = paged_attention_fp32_parts(q, k, v, mask, block=block)
+    return merge_buffer(parts, q, buf_k, buf_v, buf_mask)

@@ -1,0 +1,178 @@
+"""L1 Pallas group-quantization kernels + jnp format helpers.
+
+Implements the paper's TBQ data formats (§4.2, §D.3) as Pallas kernels:
+FP8 E4M3 / NVFP4 (E2M1, g=16) / Ternary (g=16), each with E4M3-snapped
+scales.  `interpret=True` everywhere: real-TPU lowering would emit a Mosaic
+custom-call the CPU PJRT plugin cannot run (see DESIGN §Hardware-Adaptation).
+
+Pallas kernels cannot capture constant arrays, so the format lookup tables
+are threaded through as explicit kernel inputs (`Tables`).  The jnp helpers
+are shared with the fused attention kernel so the decode path and the quant
+path use identical tables.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import formats as F
+
+
+class Tables(NamedTuple):
+    """Format lookup tables, passed explicitly into Pallas kernels."""
+
+    e4m3_table: jax.Array  # (256,) f32 decode table
+    pos_vals: jax.Array    # (121,) f32 sorted non-negative E4M3 magnitudes
+    pos_codes: jax.Array   # (121,) u8 codes for pos_vals
+    nvfp4_mag: jax.Array   # (8,) f32 E2M1 magnitudes
+
+
+def tables_jnp() -> Tables:
+    return Tables(
+        jnp.asarray(F.E4M3_TABLE),
+        jnp.asarray(F.E4M3_POS_VALUES),
+        jnp.asarray(F.E4M3_POS_CODES),
+        jnp.asarray(F.NVFP4_MAG),
+    )
+
+
+# --------------------------------------------------------------------------
+# jnp format primitives (shared by quant + attention kernels)
+# --------------------------------------------------------------------------
+
+def e4m3_encode_jnp(x, t: Tables):
+    """Nearest-value FP8 E4M3 encode; ties toward the smaller magnitude."""
+    mag = jnp.clip(jnp.abs(x), 0.0, F.FP8_MAX)
+    idx = jnp.argmin(jnp.abs(mag[..., None] - t.pos_vals), axis=-1)
+    code = t.pos_codes[idx]
+    return jnp.where(jnp.signbit(x), code | jnp.uint8(0x80), code)
+
+
+def e4m3_decode_jnp(codes, t: Tables):
+    return t.e4m3_table[codes.astype(jnp.int32)]
+
+
+def e4m3_snap_jnp(x, t: Tables):
+    return e4m3_decode_jnp(e4m3_encode_jnp(x, t), t)
+
+
+def nvfp4_encode_jnp(x, t: Tables):
+    """Encode already-scaled values to NVFP4 codes (sign*8 + mag idx)."""
+    idx = jnp.argmin(jnp.abs(jnp.abs(x)[..., None] - t.nvfp4_mag), axis=-1)
+    sign = (x < 0).astype(jnp.uint8)
+    return (sign * jnp.uint8(8) + idx.astype(jnp.uint8)).astype(jnp.uint8)
+
+
+def nvfp4_decode_jnp(codes, t: Tables):
+    c = codes.astype(jnp.int32)
+    mag = t.nvfp4_mag[c & 7]
+    sign = jnp.where((c & 8) != 0, -1.0, 1.0).astype(jnp.float32)
+    return sign * mag
+
+
+def ternary_encode_jnp(x):
+    return jnp.where(x > 0.5, jnp.uint8(1), jnp.where(x < -0.5, jnp.uint8(2), jnp.uint8(0)))
+
+
+def ternary_decode_jnp(codes):
+    c = codes.astype(jnp.int32)
+    return jnp.where(c == 1, 1.0, jnp.where(c == 2, -1.0, 0.0)).astype(jnp.float32)
+
+
+def dequant_any_jnp(codes, scales, tags, t: Tables):
+    """Tag-dispatched dequantization.
+
+    codes: (..., D) u8; scales: (..., D/g) f32; tags: broadcastable to the
+    leading axes of codes (one tag per cache slot).
+    """
+    g = F.GROUP_SIZE
+    sc = jnp.repeat(scales, g, axis=-1)
+    fp8 = e4m3_decode_jnp(codes, t) * sc
+    nv4 = nvfp4_decode_jnp(codes, t) * sc
+    ter = ternary_decode_jnp(codes) * sc
+    tt = tags.astype(jnp.int32)
+    while tt.ndim < codes.ndim:
+        tt = tt[..., None]
+    return jnp.where(tt == F.TAG_FP8, fp8, jnp.where(tt == F.TAG_NVFP4, nv4, ter))
+
+
+def quant_groups_jnp(x, tag: int, t: Tables):
+    """jnp mirror of ref.quant_groups_ref (used inside the Pallas kernel)."""
+    g = F.GROUP_SIZE
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    gs = x.reshape(*lead, d // g, g)
+    if tag == F.TAG_FP8:
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        scale = e4m3_snap_jnp(amax / F.FP8_MAX, t)
+        scale = jnp.where(scale <= 0, 1.0, scale)
+        codes = e4m3_encode_jnp(x / scale, t)
+        scales = jnp.broadcast_to(scale, (*lead, d // g))
+        return codes, scales.astype(jnp.float32)
+    if tag == F.TAG_NVFP4:
+        amax = jnp.max(jnp.abs(gs), axis=-1, keepdims=True)
+        scale = e4m3_snap_jnp(amax / F.NVFP4_MAX, t)
+        scale = jnp.where(scale <= 0, 1.0, scale)
+        codes = nvfp4_encode_jnp(gs / scale, t)
+        return codes.reshape(*lead, d), scale[..., 0].astype(jnp.float32)
+    if tag == F.TAG_TERNARY:
+        amean = jnp.mean(jnp.abs(gs), axis=-1, keepdims=True)
+        scale = e4m3_snap_jnp(amean, t)
+        scale = jnp.where(scale <= 0, 1.0, scale)
+        codes = ternary_encode_jnp(gs / scale)
+        return codes.reshape(*lead, d), scale[..., 0].astype(jnp.float32)
+    raise ValueError(f"unknown tag {tag}")
+
+
+# --------------------------------------------------------------------------
+# Pallas kernel
+# --------------------------------------------------------------------------
+
+def _quant_kernel(x_ref, t0, t1, t2, t3, codes_ref, scales_ref, *, tag: int):
+    t = Tables(t0[...], t1[...], t2[...], t3[...])
+    codes, scales = quant_groups_jnp(x_ref[...], tag, t)
+    codes_ref[...] = codes
+    scales_ref[...] = scales
+
+
+def _table_specs():
+    return [
+        pl.BlockSpec((256,), lambda i: (0,)),
+        pl.BlockSpec((F.E4M3_POS_VALUES.shape[0],), lambda i: (0,)),
+        pl.BlockSpec((F.E4M3_POS_CODES.shape[0],), lambda i: (0,)),
+        pl.BlockSpec((8,), lambda i: (0,)),
+    ]
+
+
+@functools.partial(jax.jit, static_argnames=("tag", "block_rows"))
+def group_quantize(x, *, tag: int, block_rows: int = 8):
+    """Pallas group quantization over rows of `x` (N, D).
+
+    Returns (codes u8 (N, D), scales f32 (N, D/g)).  The grid tiles rows so a
+    row-block's activations stay VMEM-resident while its group statistics,
+    scale snap, and code search run fused in one pass.
+    """
+    n, d = x.shape
+    g = F.GROUP_SIZE
+    assert d % g == 0 and n % block_rows == 0, (n, d)
+    grid = (n // block_rows,)
+    t = tables_jnp()
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, tag=tag),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))] + _table_specs(),
+        out_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d // g), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.uint8),
+            jax.ShapeDtypeStruct((n, d // g), jnp.float32),
+        ],
+        interpret=True,
+    )(x, *t)

@@ -1,0 +1,167 @@
+"""Pure-jnp/numpy oracles for every L1 kernel.
+
+These are the correctness ground truth: pytest asserts that the Pallas
+kernels (interpret=True) match these references, and aot.py emits golden
+vectors from *these* functions so the Rust quantizer can be cross-checked
+against the same source of truth.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from compile import formats as F
+
+
+# --------------------------------------------------------------------------
+# Group quantization references (numpy; exact intended semantics)
+# --------------------------------------------------------------------------
+
+def quant_groups_ref(x: np.ndarray, tag: int):
+    """Quantize `x` (..., D) with format `tag`, groups of g=16 on the last dim.
+
+    Returns (codes u8 (..., D), scales f32 (..., D/g)).
+    """
+    g = F.GROUP_SIZE
+    x = np.asarray(x, dtype=np.float32)
+    assert x.shape[-1] % g == 0
+    gs = x.reshape(*x.shape[:-1], x.shape[-1] // g, g)
+
+    if tag == F.TAG_FP8:
+        # Per-entry scale = max|x| over the whole vector / FP8_MAX, snapped to
+        # the E4M3 grid and replicated across groups (uniform interface).
+        amax = np.max(np.abs(x), axis=-1, keepdims=True)
+        scale = F.e4m3_snap(amax / F.FP8_MAX)
+        scale = np.where(scale <= 0, np.float32(1.0), scale)
+        codes = F.e4m3_encode(x / scale)
+        scales = np.broadcast_to(scale, (*x.shape[:-1], x.shape[-1] // g)).copy()
+        return codes.astype(np.uint8), scales.astype(np.float32)
+
+    if tag == F.TAG_NVFP4:
+        amax = np.max(np.abs(gs), axis=-1, keepdims=True)
+        scale = F.e4m3_snap(amax / F.NVFP4_MAX)
+        scale = np.where(scale <= 0, np.float32(1.0), scale)
+        t = gs / scale
+        # nearest of the 8 magnitudes, with sign
+        mag = np.abs(t)[..., None]  # (..., g, 1)
+        idx = np.argmin(np.abs(mag - F.NVFP4_MAG), axis=-1)
+        sign = (t < 0).astype(np.uint8)
+        codes = (sign * 8 + idx.astype(np.uint8)).astype(np.uint8)
+        return (
+            codes.reshape(*x.shape),
+            scale[..., 0].astype(np.float32),
+        )
+
+    if tag == F.TAG_TERNARY:
+        amean = np.mean(np.abs(gs), axis=-1, keepdims=True)
+        scale = F.e4m3_snap(amean)
+        scale = np.where(scale <= 0, np.float32(1.0), scale)
+        t = gs / scale
+        # codes: 0 -> 0, 1 -> +1, 2 -> -1
+        codes = np.where(t > 0.5, np.uint8(1), np.where(t < -0.5, np.uint8(2), np.uint8(0)))
+        return codes.reshape(*x.shape).astype(np.uint8), scale[..., 0].astype(np.float32)
+
+    raise ValueError(f"unknown tag {tag}")
+
+
+def dequant_groups_ref(codes: np.ndarray, scales: np.ndarray, tag: int) -> np.ndarray:
+    """Inverse of quant_groups_ref (codes (...,D), scales (...,D/g)) -> f32."""
+    g = F.GROUP_SIZE
+    codes = np.asarray(codes)
+    sc = np.repeat(np.asarray(scales, dtype=np.float32), g, axis=-1)
+    if tag == F.TAG_FP8:
+        return F.E4M3_TABLE[codes] * sc
+    if tag == F.TAG_NVFP4:
+        mag = F.NVFP4_MAG[codes & 7]
+        sign = np.where((codes & 8) != 0, np.float32(-1.0), np.float32(1.0))
+        return sign * mag * sc
+    if tag == F.TAG_TERNARY:
+        val = np.where(codes == 1, np.float32(1.0), np.where(codes == 2, np.float32(-1.0), np.float32(0.0)))
+        return val * sc
+    raise ValueError(f"unknown tag {tag}")
+
+
+def dequant_any_ref(codes: np.ndarray, scales: np.ndarray, tags: np.ndarray) -> np.ndarray:
+    """Per-slot tagged dequantization.
+
+    codes: (C, Hkv, D) u8, scales: (C, Hkv, D/g) f32, tags: (C,) u8.
+    """
+    codes = np.asarray(codes)
+    out = np.zeros(codes.shape, dtype=np.float32)
+    tags = np.asarray(tags)
+    for t in (F.TAG_TERNARY, F.TAG_NVFP4, F.TAG_FP8):
+        sel = tags == t
+        if sel.any():
+            out[sel] = dequant_groups_ref(codes[sel], np.asarray(scales)[sel], t)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Attention references
+# --------------------------------------------------------------------------
+
+def paged_attention_fp32_ref(q, k, v, mask):
+    """Masked decode attention, f32 cache.
+
+    q: (H, D); k, v: (C, Hkv, D); mask: (C,) in {0,1}.
+    Returns (out (H, D), probs (H, C)).
+    """
+    q = np.asarray(q, np.float32)
+    k = np.asarray(k, np.float32)
+    v = np.asarray(v, np.float32)
+    mask = np.asarray(mask, np.float32)
+    H, D = q.shape
+    C, Hkv, _ = k.shape
+    rep = H // Hkv
+    out = np.zeros((H, D), np.float32)
+    probs = np.zeros((H, C), np.float32)
+    for h in range(H):
+        kh = k[:, h // rep, :]
+        vh = v[:, h // rep, :]
+        s = kh @ q[h] / np.sqrt(D)
+        s = np.where(mask > 0, s, -np.inf)
+        m = np.max(s)
+        if not np.isfinite(m):
+            continue  # fully masked
+        e = np.where(mask > 0, np.exp(s - m), 0.0)
+        z = e.sum()
+        p = e / z
+        probs[h] = p
+        out[h] = p @ vh
+    return out, probs
+
+
+def fused_paged_attention_ref(q, k_codes, k_scales, v_codes, v_scales, tags, mask,
+                              buf_k, buf_v, buf_mask):
+    """Reference for the fused dequant + paged attention kernel.
+
+    Quantized region (C slots) + full-precision ring buffer (BUF slots).
+    Returns (out (H, D), probs (H, C+BUF)).
+    """
+    k_deq = dequant_any_ref(k_codes, k_scales, tags)
+    v_deq = dequant_any_ref(v_codes, v_scales, tags)
+    k_all = np.concatenate([k_deq, np.asarray(buf_k, np.float32)], axis=0)
+    v_all = np.concatenate([v_deq, np.asarray(buf_v, np.float32)], axis=0)
+    m_all = np.concatenate([np.asarray(mask, np.float32), np.asarray(buf_mask, np.float32)])
+    return paged_attention_fp32_ref(q, k_all, v_all, m_all)
+
+
+# --------------------------------------------------------------------------
+# Model-side references
+# --------------------------------------------------------------------------
+
+def rmsnorm_ref(x, w, eps=1e-5):
+    x = np.asarray(x, np.float32)
+    return x / np.sqrt(np.mean(x * x, axis=-1, keepdims=True) + eps) * w
+
+
+def rope_ref(x, pos, *, base=10000.0):
+    """x: (..., D) with D even; pos: scalar int."""
+    x = np.asarray(x, np.float32)
+    D = x.shape[-1]
+    half = D // 2
+    inv = base ** (-np.arange(half, dtype=np.float32) / half)
+    ang = pos * inv
+    cos, sin = np.cos(ang), np.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return np.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)

@@ -1,0 +1,241 @@
+"""L2: the JAX reasoning-model forward pass (build-time only).
+
+A decoder-only transformer (RMSNorm, RoPE, GQA, GELU MLP) whose decode step
+attends over the ThinKV **quantized paged cache** through the L1 fused
+Pallas kernel.  `aot.py` lowers these functions once to HLO text; the Rust
+coordinator executes them via PJRT and owns every byte of cache state —
+Python never runs on the request path.
+
+Cache layout seen by the decode step (one tensor set per layer):
+  k_codes/v_codes u8   [L, C, Hkv, Dh]   quantized slots (uniform u8 lanes)
+  k_scales/v_scales f32[L, C, Hkv, Dh/g] E4M3-snapped group scales
+  tags u8             [L, C]             slot precision (0=ternary,1=nvfp4,2=fp8)
+  mask f32            [L, C]             slot validity (CT eviction mask ∘ fill)
+  buf_k/buf_v f32     [L, BUF, Hkv, Dh]  full-precision ring buffer (B_buf, §4.2)
+  buf_mask f32        [L, BUF]
+Slot order is arbitrary (attention is permutation invariant, Theorem 1) —
+that is the property Continuous Thinking exploits for in-place slot reuse.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from compile import formats as F
+from compile.kernels import paged_attn as PA
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_head: int = 32
+    d_ffn: int = 256
+    rope_base: float = 10000.0
+    buf_slots: int = 16          # B_buf — must equal the quant group size g
+    prefill_len: int = 64
+    obs_window: int = 8          # SnapKV observation window
+    eps: float = 1e-5
+
+    @property
+    def groups(self) -> int:
+        return self.d_head // F.GROUP_SIZE
+
+    def weight_specs(self) -> List[tuple]:
+        """(name, shape) in the exact flattened parameter order of the HLO."""
+        specs = [("embed", (self.vocab, self.d_model))]
+        for l in range(self.n_layers):
+            specs += [
+                (f"l{l}.ln1", (self.d_model,)),
+                (f"l{l}.wq", (self.d_model, self.n_heads * self.d_head)),
+                (f"l{l}.wk", (self.d_model, self.n_kv_heads * self.d_head)),
+                (f"l{l}.wv", (self.d_model, self.n_kv_heads * self.d_head)),
+                (f"l{l}.wo", (self.n_heads * self.d_head, self.d_model)),
+                (f"l{l}.ln2", (self.d_model,)),
+                (f"l{l}.w1", (self.d_model, self.d_ffn)),
+                (f"l{l}.w2", (self.d_ffn, self.d_model)),
+            ]
+        specs += [("lnf", (self.d_model,)), ("lm_head", (self.d_model, self.vocab))]
+        return specs
+
+
+def init_weights(cfg: ModelConfig, seed: int = 1234) -> List[jnp.ndarray]:
+    """Seeded random weights (scaled for stable logits); order = weight_specs."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in cfg.weight_specs():
+        if name.endswith(("ln1", "ln2")) or name == "lnf":
+            w = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[0]
+            w = rng.normal(0.0, 1.0 / np.sqrt(fan_in), size=shape).astype(np.float32)
+        out.append(jnp.asarray(w))
+    return out
+
+
+def rmsnorm(x, w, eps):
+    return x / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * w
+
+
+def rope(x, pos, base):
+    """x: (..., D); pos: scalar or (...,)-broadcastable int32 position(s)."""
+    d = x.shape[-1]
+    half = d // 2
+    inv = base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = jnp.asarray(pos, jnp.float32)[..., None] * inv  # (..., half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _unpack_weights(cfg: ModelConfig, weights):
+    it = iter(weights)
+    embed = next(it)
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(tuple(next(it) for _ in range(8)))
+    lnf = next(it)
+    lm_head = next(it)
+    return embed, layers, lnf, lm_head
+
+
+def _mlp(x, w1, w2):
+    return jax.nn.gelu(x @ w1) @ w2
+
+
+def decode_step_quant(cfg: ModelConfig, weights, token, pos, buf_idx,
+                      k_codes, k_scales, v_codes, v_scales, tags, mask,
+                      buf_k, buf_v, buf_mask):
+    """One decode step over the quantized paged cache (the ThinKV hot path).
+
+    Returns (logits (V,), new_k (L,Hkv,Dh) post-RoPE, new_v (L,Hkv,Dh),
+    probs (L,H,C+BUF)).  The caller (Rust) quantizes new_k/new_v by the
+    active thought type and writes them into slots chosen by CT.
+    """
+    embed, layers, lnf, lm_head = _unpack_weights(cfg, weights)
+    x = embed[token[0]]
+    p = pos[0]
+    new_ks, new_vs, prob_rows = [], [], []
+    for l, (ln1, wq, wk, wv, wo, ln2, w1, w2) in enumerate(layers):
+        h = rmsnorm(x, ln1, cfg.eps)
+        q = rope((h @ wq).reshape(cfg.n_heads, cfg.d_head), p, cfg.rope_base)
+        k = rope((h @ wk).reshape(cfg.n_kv_heads, cfg.d_head), p, cfg.rope_base)
+        v = (h @ wv).reshape(cfg.n_kv_heads, cfg.d_head)
+        # Current token enters the fp ring buffer at buf_idx.
+        bk = jax.lax.dynamic_update_slice(buf_k[l], k[None], (buf_idx[0], 0, 0))
+        bv = jax.lax.dynamic_update_slice(buf_v[l], v[None], (buf_idx[0], 0, 0))
+        bm = buf_mask[l].at[buf_idx[0]].set(1.0)
+        attn, probs = PA.fused_paged_attention(
+            q, k_codes[l], k_scales[l], v_codes[l], v_scales[l],
+            tags[l], mask[l], bk, bv, bm)
+        x = x + attn.reshape(-1) @ wo
+        x = x + _mlp(rmsnorm(x, ln2, cfg.eps), w1, w2)
+        new_ks.append(k)
+        new_vs.append(v)
+        prob_rows.append(probs)
+    logits = rmsnorm(x, lnf, cfg.eps) @ lm_head
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs), jnp.stack(prob_rows)
+
+
+def decode_step_fp32(cfg: ModelConfig, weights, token, pos, buf_idx,
+                     k_cache, v_cache, mask, buf_k, buf_v, buf_mask):
+    """FullKV / eviction-only baselines: f32 paged cache, same structure."""
+    embed, layers, lnf, lm_head = _unpack_weights(cfg, weights)
+    x = embed[token[0]]
+    p = pos[0]
+    new_ks, new_vs, prob_rows = [], [], []
+    for l, (ln1, wq, wk, wv, wo, ln2, w1, w2) in enumerate(layers):
+        h = rmsnorm(x, ln1, cfg.eps)
+        q = rope((h @ wq).reshape(cfg.n_heads, cfg.d_head), p, cfg.rope_base)
+        k = rope((h @ wk).reshape(cfg.n_kv_heads, cfg.d_head), p, cfg.rope_base)
+        v = (h @ wv).reshape(cfg.n_kv_heads, cfg.d_head)
+        bk = jax.lax.dynamic_update_slice(buf_k[l], k[None], (buf_idx[0], 0, 0))
+        bv = jax.lax.dynamic_update_slice(buf_v[l], v[None], (buf_idx[0], 0, 0))
+        bm = buf_mask[l].at[buf_idx[0]].set(1.0)
+        attn, probs = PA.paged_attention_fp32(
+            q, k_cache[l], v_cache[l], mask[l], bk, bv, bm)
+        x = x + attn.reshape(-1) @ wo
+        x = x + _mlp(rmsnorm(x, ln2, cfg.eps), w1, w2)
+        new_ks.append(k)
+        new_vs.append(v)
+        prob_rows.append(probs)
+    logits = rmsnorm(x, lnf, cfg.eps) @ lm_head
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs), jnp.stack(prob_rows)
+
+
+def prefill(cfg: ModelConfig, weights, tokens):
+    """Prompt prefill (P tokens, full causal attention, plain fused HLO).
+
+    Returns (logits (V,) for the last position, k (L,P,Hkv,Dh) post-RoPE,
+    v (L,P,Hkv,Dh), obs (L,P) = mean attention received by each position
+    from the last `obs_window` queries — the SnapKV observation statistic).
+    """
+    embed, layers, lnf, lm_head = _unpack_weights(cfg, weights)
+    P = tokens.shape[0]
+    x = embed[tokens]  # (P, Dm)
+    positions = jnp.arange(P)
+    causal = jnp.tril(jnp.ones((P, P), jnp.float32))
+    rep = cfg.n_heads // cfg.n_kv_heads
+    ks, vs, obs_rows = [], [], []
+    for (ln1, wq, wk, wv, wo, ln2, w1, w2) in layers:
+        h = rmsnorm(x, ln1, cfg.eps)
+        q = rope((h @ wq).reshape(P, cfg.n_heads, cfg.d_head).transpose(1, 0, 2),
+                 positions[None, :], cfg.rope_base)     # (H, P, Dh)
+        k = rope((h @ wk).reshape(P, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2),
+                 positions[None, :], cfg.rope_base)     # (Hkv, P, Dh)
+        v = (h @ wv).reshape(P, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+        kx = jnp.repeat(k, rep, axis=0)                 # (H, P, Dh)
+        vx = jnp.repeat(v, rep, axis=0)
+        s = jnp.einsum("hqd,hkd->hqk", q, kx) / jnp.sqrt(jnp.float32(cfg.d_head))
+        s = jnp.where(causal[None] > 0, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)                  # (H, Q, K)
+        attn = jnp.einsum("hqk,hkd->hqd", p, vx)
+        attn = attn.transpose(1, 0, 2).reshape(P, -1)
+        x = x + attn @ wo
+        x = x + _mlp(rmsnorm(x, ln2, cfg.eps), w1, w2)
+        ks.append(k.transpose(1, 0, 2))                 # (P, Hkv, Dh)
+        vs.append(v.transpose(1, 0, 2))
+        obs_rows.append(jnp.mean(p[:, P - cfg.obs_window:, :], axis=(0, 1)))  # (P,)
+    logits = rmsnorm(x[-1], lnf, cfg.eps) @ lm_head
+    return logits, jnp.stack(ks), jnp.stack(vs), jnp.stack(obs_rows)
+
+
+# ---------------------------------------------------------------------------
+# Shape helpers for lowering (aot.py) and tests
+# ---------------------------------------------------------------------------
+
+def decode_quant_shapes(cfg: ModelConfig, capacity: int):
+    L, C, Hkv, Dh, G, B = (cfg.n_layers, capacity, cfg.n_kv_heads,
+                           cfg.d_head, cfg.groups, cfg.buf_slots)
+    f32, u8, i32 = jnp.float32, jnp.uint8, jnp.int32
+    S = jax.ShapeDtypeStruct
+    return dict(
+        token=S((1,), i32), pos=S((1,), i32), buf_idx=S((1,), i32),
+        k_codes=S((L, C, Hkv, Dh), u8), k_scales=S((L, C, Hkv, G), f32),
+        v_codes=S((L, C, Hkv, Dh), u8), v_scales=S((L, C, Hkv, G), f32),
+        tags=S((L, C), u8), mask=S((L, C), f32),
+        buf_k=S((L, B, Hkv, Dh), f32), buf_v=S((L, B, Hkv, Dh), f32),
+        buf_mask=S((L, B), f32),
+    )
+
+
+def decode_fp32_shapes(cfg: ModelConfig, capacity: int):
+    L, C, Hkv, Dh, B = cfg.n_layers, capacity, cfg.n_kv_heads, cfg.d_head, cfg.buf_slots
+    f32, i32 = jnp.float32, jnp.int32
+    S = jax.ShapeDtypeStruct
+    return dict(
+        token=S((1,), i32), pos=S((1,), i32), buf_idx=S((1,), i32),
+        k_cache=S((L, C, Hkv, Dh), f32), v_cache=S((L, C, Hkv, Dh), f32),
+        mask=S((L, C), f32),
+        buf_k=S((L, B, Hkv, Dh), f32), buf_v=S((L, B, Hkv, Dh), f32),
+        buf_mask=S((L, B), f32),
+    )

@@ -1,0 +1,291 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-numpy oracle.
+
+This is the CORE correctness signal for the compute hot path: every
+quantization format and both attention kernels are swept over shapes,
+dtypes of content (scale regimes), mask patterns, and tag mixes with
+hypothesis, and asserted allclose (bit-exact for integer codes) against
+`compile.kernels.ref`.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import formats as F
+from compile.kernels import quant as Q
+from compile.kernels import ref as R
+from compile.kernels import paged_attn as PA
+
+TAGS = (F.TAG_TERNARY, F.TAG_NVFP4, F.TAG_FP8)
+
+
+def rand(rng, *shape, scale=1.0):
+    return (rng.normal(size=shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Format tables
+# ---------------------------------------------------------------------------
+
+class TestE4M3:
+    def test_table_size_and_symmetry(self):
+        t = F.E4M3_TABLE
+        assert t.shape == (256,)
+        # sign symmetry (except the NaN slots which decode to 0)
+        for c in range(0x80):
+            if (c >> 3) == 0xF and (c & 7) == 7:
+                continue
+            assert t[c] == -t[c | 0x80]
+
+    def test_extremes(self):
+        assert F.E4M3_TABLE[0x7E] == 448.0          # max finite
+        assert F.E4M3_TABLE[0x01] == pytest.approx(2.0 ** -9)  # min subnormal
+        assert F.E4M3_TABLE[0x00] == 0.0
+
+    def test_encode_roundtrip_on_grid(self):
+        # every finite table value encodes to itself
+        for c in range(256):
+            if (c & 0x7F) >> 3 == 0xF and (c & 7) == 7:
+                continue
+            v = F.E4M3_TABLE[c]
+            if v == 0.0:
+                continue
+            assert F.E4M3_TABLE[F.e4m3_encode(np.float32(v))] == v
+
+    def test_encode_clips_at_max(self):
+        assert abs(F.E4M3_TABLE[F.e4m3_encode(np.float32(1e9))]) == 448.0
+        assert abs(F.E4M3_TABLE[F.e4m3_encode(np.float32(-1e9))]) == 448.0
+
+    @given(st.floats(-500, 500, allow_nan=False, width=32))
+    @settings(max_examples=200, deadline=None)
+    def test_encode_is_nearest(self, x):
+        x = np.float32(x)
+        got = F.E4M3_TABLE[F.e4m3_encode(x)]
+        best = F.E4M3_POS_VALUES[np.argmin(np.abs(F.E4M3_POS_VALUES - min(abs(x), 448.0)))]
+        assert abs(abs(got) - best) <= 1e-7
+
+    def test_jnp_encode_matches_numpy(self):
+        rng = np.random.default_rng(0)
+        x = rand(rng, 256, scale=10.0)
+        t = Q.tables_jnp()
+        assert np.array_equal(np.asarray(Q.e4m3_encode_jnp(jnp.asarray(x), t)),
+                              F.e4m3_encode(x))
+
+
+class TestNVFP4:
+    def test_code_table(self):
+        assert list(F.NVFP4_MAG) == [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+
+    def test_decode_all_codes(self):
+        t = Q.tables_jnp()
+        codes = jnp.arange(16, dtype=jnp.uint8)
+        vals = np.asarray(Q.nvfp4_decode_jnp(codes, t))
+        assert np.array_equal(vals[:8], F.NVFP4_MAG)
+        assert np.array_equal(vals[8:], -F.NVFP4_MAG)
+
+
+# ---------------------------------------------------------------------------
+# Group quantization kernel vs ref
+# ---------------------------------------------------------------------------
+
+class TestGroupQuantize:
+    @pytest.mark.parametrize("tag", TAGS)
+    @pytest.mark.parametrize("shape", [(8, 16), (8, 64), (16, 128), (32, 32)])
+    def test_kernel_matches_ref(self, tag, shape):
+        rng = np.random.default_rng(42)
+        x = rand(rng, *shape, scale=2.0)
+        c_ref, s_ref = R.quant_groups_ref(x, tag)
+        c_k, s_k = Q.group_quantize(jnp.asarray(x), tag=tag)
+        np.testing.assert_array_equal(np.asarray(c_k), c_ref)
+        np.testing.assert_allclose(np.asarray(s_k), s_ref, rtol=0, atol=0)
+
+    @given(
+        tag=st.sampled_from(TAGS),
+        rows=st.sampled_from([8, 16, 24]),
+        dcols=st.sampled_from([16, 32, 64, 128]),
+        scale=st.floats(1e-3, 100.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_kernel_matches_ref_hypothesis(self, tag, rows, dcols, scale, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, rows, dcols, scale=scale)
+        c_ref, s_ref = R.quant_groups_ref(x, tag)
+        c_k, s_k = Q.group_quantize(jnp.asarray(x), tag=tag)
+        np.testing.assert_array_equal(np.asarray(c_k), c_ref)
+        np.testing.assert_array_equal(np.asarray(s_k), s_ref)
+
+    @pytest.mark.parametrize("tag", TAGS)
+    def test_zero_input(self, tag):
+        x = np.zeros((8, 32), np.float32)
+        c, s = Q.group_quantize(jnp.asarray(x), tag=tag)
+        deq = R.dequant_groups_ref(np.asarray(c), np.asarray(s), tag)
+        np.testing.assert_array_equal(deq, x)
+
+    @pytest.mark.parametrize("tag,max_rel", [(F.TAG_FP8, 0.08), (F.TAG_NVFP4, 0.35)])
+    def test_relative_error_bound(self, tag, max_rel):
+        rng = np.random.default_rng(3)
+        x = rand(rng, 16, 64, scale=1.0)
+        c, s = R.quant_groups_ref(x, tag)
+        deq = R.dequant_groups_ref(c, s, tag)
+        rel = np.abs(deq - x).mean() / np.abs(x).mean()
+        assert rel < max_rel
+
+    def test_error_hierarchy_fp8_lt_nvfp4_lt_ternary(self):
+        """Quantization error must respect the precision hierarchy (§D.3)."""
+        rng = np.random.default_rng(5)
+        x = rand(rng, 32, 64)
+        errs = {}
+        for tag in TAGS:
+            c, s = R.quant_groups_ref(x, tag)
+            errs[tag] = np.abs(R.dequant_groups_ref(c, s, tag) - x).mean()
+        assert errs[F.TAG_FP8] < errs[F.TAG_NVFP4] < errs[F.TAG_TERNARY]
+
+
+# ---------------------------------------------------------------------------
+# Fused paged attention kernel vs ref
+# ---------------------------------------------------------------------------
+
+def make_quant_cache(rng, C, Hkv, D, tags):
+    G = D // F.GROUP_SIZE
+    kf = rand(rng, C, Hkv, D)
+    vf = rand(rng, C, Hkv, D)
+    kc = np.zeros((C, Hkv, D), np.uint8)
+    ks = np.zeros((C, Hkv, G), np.float32)
+    vc = np.zeros_like(kc)
+    vs = np.zeros_like(ks)
+    for i in range(C):
+        kc[i], ks[i] = R.quant_groups_ref(kf[i], int(tags[i]))
+        vc[i], vs[i] = R.quant_groups_ref(vf[i], int(tags[i]))
+    return kc, ks, vc, vs
+
+
+class TestFusedPagedAttention:
+    @pytest.mark.parametrize("C,block", [(64, 64), (128, 64), (256, 64), (128, 32)])
+    def test_matches_ref(self, C, block):
+        rng = np.random.default_rng(C + block)
+        H, Hkv, D, BUF = 4, 2, 32, 16
+        q = rand(rng, H, D)
+        tags = rng.integers(0, 3, size=C).astype(np.uint8)
+        mask = (rng.random(C) < 0.7).astype(np.float32)
+        kc, ks, vc, vs = make_quant_cache(rng, C, Hkv, D, tags)
+        bk, bv = rand(rng, BUF, Hkv, D), rand(rng, BUF, Hkv, D)
+        bm = (rng.random(BUF) < 0.5).astype(np.float32)
+        o_ref, p_ref = R.fused_paged_attention_ref(q, kc, ks, vc, vs, tags, mask, bk, bv, bm)
+        o_k, p_k = PA.fused_paged_attention(
+            *map(jnp.asarray, (q, kc, ks, vc, vs, tags, mask, bk, bv, bm)), block=block)
+        np.testing.assert_allclose(np.asarray(o_k), o_ref, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(p_k), p_ref, atol=1e-5)
+
+    def test_fully_masked_cache_attends_buffer_only(self):
+        rng = np.random.default_rng(9)
+        H, Hkv, D, C, BUF = 4, 2, 32, 64, 16
+        q = rand(rng, H, D)
+        tags = np.ones(C, np.uint8)
+        mask = np.zeros(C, np.float32)
+        kc, ks, vc, vs = make_quant_cache(rng, C, Hkv, D, tags)
+        bk, bv = rand(rng, BUF, Hkv, D), rand(rng, BUF, Hkv, D)
+        bm = np.zeros(BUF, np.float32)
+        bm[0] = 1.0
+        o_k, p_k = PA.fused_paged_attention(
+            *map(jnp.asarray, (q, kc, ks, vc, vs, tags, mask, bk, bv, bm)))
+        p = np.asarray(p_k)
+        # all probability mass on the single valid buffer slot
+        np.testing.assert_allclose(p[:, C], 1.0, atol=1e-6)
+        assert np.abs(p[:, :C]).max() == 0.0
+
+    def test_everything_masked_returns_zeros(self):
+        rng = np.random.default_rng(10)
+        H, Hkv, D, C, BUF = 4, 2, 32, 64, 16
+        q = rand(rng, H, D)
+        tags = np.zeros(C, np.uint8)
+        kc, ks, vc, vs = make_quant_cache(rng, C, Hkv, D, tags)
+        o_k, p_k = PA.fused_paged_attention(
+            *map(jnp.asarray, (q, kc, ks, vc, vs, tags,
+                               np.zeros(C, np.float32),
+                               np.zeros((BUF, Hkv, D), np.float32),
+                               np.zeros((BUF, Hkv, D), np.float32),
+                               np.zeros(BUF, np.float32))))
+        assert np.abs(np.asarray(o_k)).max() == 0.0
+
+    def test_permutation_invariance(self):
+        """Theorem 1: permuting cache slots leaves the output unchanged."""
+        rng = np.random.default_rng(11)
+        H, Hkv, D, C, BUF = 4, 2, 32, 128, 16
+        q = rand(rng, H, D)
+        tags = rng.integers(0, 3, size=C).astype(np.uint8)
+        mask = (rng.random(C) < 0.8).astype(np.float32)
+        kc, ks, vc, vs = make_quant_cache(rng, C, Hkv, D, tags)
+        bk, bv = rand(rng, BUF, Hkv, D), rand(rng, BUF, Hkv, D)
+        bm = np.ones(BUF, np.float32)
+        o1, _ = PA.fused_paged_attention(
+            *map(jnp.asarray, (q, kc, ks, vc, vs, tags, mask, bk, bv, bm)))
+        perm = rng.permutation(C)
+        o2, _ = PA.fused_paged_attention(
+            *map(jnp.asarray, (q, kc[perm], ks[perm], vc[perm], vs[perm],
+                               tags[perm], mask[perm], bk, bv, bm)))
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        C=st.sampled_from([64, 128, 192]),
+        density=st.floats(0.1, 1.0),
+        homogeneous_tag=st.sampled_from([None, 0, 1, 2]),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_matches_ref_hypothesis(self, seed, C, density, homogeneous_tag):
+        rng = np.random.default_rng(seed)
+        H, Hkv, D, BUF = 4, 2, 32, 16
+        q = rand(rng, H, D)
+        if homogeneous_tag is None:
+            tags = rng.integers(0, 3, size=C).astype(np.uint8)
+        else:
+            tags = np.full(C, homogeneous_tag, np.uint8)
+        mask = (rng.random(C) < density).astype(np.float32)
+        kc, ks, vc, vs = make_quant_cache(rng, C, Hkv, D, tags)
+        bk, bv = rand(rng, BUF, Hkv, D), rand(rng, BUF, Hkv, D)
+        bm = (rng.random(BUF) < 0.5).astype(np.float32)
+        o_ref, p_ref = R.fused_paged_attention_ref(q, kc, ks, vc, vs, tags, mask, bk, bv, bm)
+        o_k, p_k = PA.fused_paged_attention(
+            *map(jnp.asarray, (q, kc, ks, vc, vs, tags, mask, bk, bv, bm)))
+        np.testing.assert_allclose(np.asarray(o_k), o_ref, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(p_k), p_ref, atol=2e-5)
+
+
+class TestPagedAttentionFp32:
+    @pytest.mark.parametrize("C", [64, 256])
+    def test_matches_ref(self, C):
+        rng = np.random.default_rng(C)
+        H, Hkv, D, BUF = 4, 2, 32, 16
+        q = rand(rng, H, D)
+        k, v = rand(rng, C, Hkv, D), rand(rng, C, Hkv, D)
+        mask = (rng.random(C) < 0.6).astype(np.float32)
+        bk, bv = rand(rng, BUF, Hkv, D), rand(rng, BUF, Hkv, D)
+        bm = (rng.random(BUF) < 0.5).astype(np.float32)
+        o_k, p_k = PA.paged_attention_fp32(*map(jnp.asarray, (q, k, v, mask, bk, bv, bm)))
+        o_ref, p_ref = R.paged_attention_fp32_ref(
+            q, np.concatenate([k, bk]), np.concatenate([v, bv]), np.concatenate([mask, bm]))
+        np.testing.assert_allclose(np.asarray(o_k), o_ref, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(p_k), p_ref, atol=1e-5)
+
+    def test_quantized_path_approximates_fp32(self):
+        """End-to-end sanity: fused quantized attention ~ fp32 attention."""
+        rng = np.random.default_rng(77)
+        H, Hkv, D, C, BUF = 4, 2, 32, 128, 16
+        q = rand(rng, H, D)
+        kf, vf = rand(rng, C, Hkv, D), rand(rng, C, Hkv, D)
+        mask = np.ones(C, np.float32)
+        tags = np.full(C, F.TAG_FP8, np.uint8)
+        kc = np.zeros((C, Hkv, D), np.uint8)
+        ks = np.zeros((C, Hkv, D // 16), np.float32)
+        vc, vs = np.zeros_like(kc), np.zeros_like(ks)
+        for i in range(C):
+            kc[i], ks[i] = R.quant_groups_ref(kf[i], F.TAG_FP8)
+            vc[i], vs[i] = R.quant_groups_ref(vf[i], F.TAG_FP8)
+        z = np.zeros((BUF, Hkv, D), np.float32)
+        bm = np.zeros(BUF, np.float32)
+        o_q, _ = PA.fused_paged_attention(
+            *map(jnp.asarray, (q, kc, ks, vc, vs, tags, mask, z, z, bm)))
+        o_f, _ = PA.paged_attention_fp32(*map(jnp.asarray, (q, kf, vf, mask, z, z, bm)))
+        np.testing.assert_allclose(np.asarray(o_q), np.asarray(o_f), atol=0.06)

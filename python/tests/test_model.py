@@ -1,0 +1,166 @@
+"""L2 model correctness: decode step vs an incremental pure-numpy transformer.
+
+Builds a numpy re-implementation of the transformer and checks that
+(a) prefill matches it, (b) the quantized decode step at FP8 precision with
+full retention tracks the fp32 reference closely, (c) the fp32 decode path
+with the cache filled from prefill reproduces full causal attention exactly,
+and (d) shapes/manifest invariants hold.
+"""
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import formats as F
+from compile import model as M
+from compile.kernels import ref as R
+
+CFG = M.ModelConfig()
+WS = M.init_weights(CFG, seed=1234)
+WS_NP = [np.asarray(w) for w in WS]
+
+
+def np_forward_tokens(tokens):
+    """Full causal forward over `tokens` with numpy; returns logits for every
+    position plus per-layer post-RoPE K/V."""
+    cfg = CFG
+    specs = dict(zip([n for n, _ in cfg.weight_specs()], WS_NP))
+    x = specs["embed"][tokens]
+    P = len(tokens)
+    rep = cfg.n_heads // cfg.n_kv_heads
+    ks, vs = [], []
+    for l in range(cfg.n_layers):
+        h = R.rmsnorm_ref(x, specs[f"l{l}.ln1"])
+        q = (h @ specs[f"l{l}.wq"]).reshape(P, cfg.n_heads, cfg.d_head)
+        k = (h @ specs[f"l{l}.wk"]).reshape(P, cfg.n_kv_heads, cfg.d_head)
+        v = (h @ specs[f"l{l}.wv"]).reshape(P, cfg.n_kv_heads, cfg.d_head)
+        q = np.stack([R.rope_ref(q[i], i, base=cfg.rope_base) for i in range(P)])
+        k = np.stack([R.rope_ref(k[i], i, base=cfg.rope_base) for i in range(P)])
+        attn = np.zeros((P, cfg.n_heads, cfg.d_head), np.float32)
+        for i in range(P):
+            kk = k[: i + 1]
+            vv = v[: i + 1]
+            o, _ = R.paged_attention_fp32_ref(q[i], kk, vv, np.ones(i + 1, np.float32))
+            attn[i] = o
+        x = x + attn.reshape(P, -1) @ specs[f"l{l}.wo"]
+        h2 = R.rmsnorm_ref(x, specs[f"l{l}.ln2"])
+        # jax.nn.gelu default is tanh-approx=False? jax.nn.gelu(approximate=True) default.
+        g = 0.5 * (h2 @ specs[f"l{l}.w1"]) * (1 + np.tanh(np.sqrt(2 / np.pi) * ((h2 @ specs[f"l{l}.w1"]) + 0.044715 * (h2 @ specs[f"l{l}.w1"]) ** 3)))
+        x = x + g @ specs[f"l{l}.w2"]
+        ks.append(k)
+        vs.append(v)
+    xf = R.rmsnorm_ref(x, specs["lnf"])
+    return xf @ specs["lm_head"], np.stack(ks), np.stack(vs)
+
+
+@pytest.fixture(scope="module")
+def prefill_out():
+    tokens = np.arange(CFG.prefill_len, dtype=np.int32) % CFG.vocab
+    fn = jax.jit(functools.partial(M.prefill, CFG))
+    logits, k, v, obs = fn(WS, jnp.asarray(tokens))
+    return tokens, np.asarray(logits), np.asarray(k), np.asarray(v), np.asarray(obs)
+
+
+class TestPrefill:
+    def test_shapes(self, prefill_out):
+        _, logits, k, v, obs = prefill_out
+        P = CFG.prefill_len
+        assert logits.shape == (CFG.vocab,)
+        assert k.shape == (CFG.n_layers, P, CFG.n_kv_heads, CFG.d_head)
+        assert v.shape == k.shape
+        assert obs.shape == (CFG.n_layers, P)
+
+    def test_matches_numpy_reference(self, prefill_out):
+        tokens, logits, k, v, _ = prefill_out
+        ref_logits, ref_k, ref_v = np_forward_tokens(tokens)
+        np.testing.assert_allclose(k, ref_k.transpose(0, 1, 2, 3), atol=1e-4)
+        np.testing.assert_allclose(v, ref_v, atol=1e-4)
+        np.testing.assert_allclose(logits, ref_logits[-1], atol=1e-3)
+
+    def test_obs_rows_are_distributions(self, prefill_out):
+        *_, obs = prefill_out
+        np.testing.assert_allclose(obs.sum(axis=1), 1.0, atol=1e-4)
+
+
+class TestDecodeFp32:
+    def test_decode_continues_prefill_exactly(self, prefill_out):
+        """Fill the f32 paged cache from prefill, decode one token, compare
+        against the full-sequence numpy forward."""
+        tokens, _, k, v, _ = prefill_out
+        C = 1024
+        L, P = CFG.n_layers, CFG.prefill_len
+        k_cache = np.zeros((L, C, CFG.n_kv_heads, CFG.d_head), np.float32)
+        v_cache = np.zeros_like(k_cache)
+        mask = np.zeros((L, C), np.float32)
+        k_cache[:, :P] = k
+        v_cache[:, :P] = v
+        mask[:, :P] = 1.0
+        B = CFG.buf_slots
+        buf_k = np.zeros((L, B, CFG.n_kv_heads, CFG.d_head), np.float32)
+        buf_v = np.zeros_like(buf_k)
+        buf_mask = np.zeros((L, B), np.float32)
+        next_tok = np.int32(17)
+        fn = jax.jit(functools.partial(M.decode_step_fp32, CFG))
+        logits, nk, nv, probs = fn(
+            WS, jnp.asarray([next_tok]), jnp.asarray([P], jnp.int32),
+            jnp.asarray([0], jnp.int32),
+            *map(jnp.asarray, (k_cache, v_cache, mask, buf_k, buf_v, buf_mask)))
+        full = np.concatenate([tokens, [next_tok]]).astype(np.int32)
+        ref_logits, ref_k, _ = np_forward_tokens(full)
+        np.testing.assert_allclose(np.asarray(logits), ref_logits[-1], atol=1e-3)
+        np.testing.assert_allclose(np.asarray(nk), ref_k[:, -1], atol=1e-4)
+        # probability over the P cache slots + self must sum to 1
+        p = np.asarray(probs)
+        np.testing.assert_allclose(p.sum(axis=2), 1.0, atol=1e-4)
+
+    def test_quant_path_tracks_fp32(self, prefill_out):
+        """FP8-quantize the prefill cache; decode logits stay close to fp32."""
+        tokens, _, k, v, _ = prefill_out
+        C = 512
+        L, P = CFG.n_layers, CFG.prefill_len
+        G = CFG.groups
+        kc = np.zeros((L, C, CFG.n_kv_heads, CFG.d_head), np.uint8)
+        ks = np.zeros((L, C, CFG.n_kv_heads, G), np.float32)
+        vc, vs = np.zeros_like(kc), np.zeros_like(ks)
+        tags = np.full((L, C), F.TAG_FP8, np.uint8)
+        mask = np.zeros((L, C), np.float32)
+        for l in range(L):
+            for i in range(P):
+                kc[l, i], ks[l, i] = R.quant_groups_ref(k[l, i], F.TAG_FP8)
+                vc[l, i], vs[l, i] = R.quant_groups_ref(v[l, i], F.TAG_FP8)
+        mask[:, :P] = 1.0
+        B = CFG.buf_slots
+        buf_k = np.zeros((L, B, CFG.n_kv_heads, CFG.d_head), np.float32)
+        buf_v = np.zeros_like(buf_k)
+        buf_mask = np.zeros((L, B), np.float32)
+        fnq = jax.jit(functools.partial(M.decode_step_quant, CFG))
+        logits_q, *_ = fnq(
+            WS, jnp.asarray([17], jnp.int32), jnp.asarray([P], jnp.int32),
+            jnp.asarray([0], jnp.int32),
+            *map(jnp.asarray, (kc, ks, vc, vs, tags, mask, buf_k, buf_v, buf_mask)))
+        full = np.concatenate([tokens, [17]]).astype(np.int32)
+        ref_logits, _, _ = np_forward_tokens(full)
+        # top-1 must agree and logits must be close
+        assert int(np.argmax(np.asarray(logits_q))) == int(np.argmax(ref_logits[-1]))
+        np.testing.assert_allclose(np.asarray(logits_q), ref_logits[-1], atol=0.15)
+
+
+class TestManifest:
+    def test_weight_specs_cover_all(self):
+        names = [n for n, _ in CFG.weight_specs()]
+        assert len(names) == 2 + 8 * CFG.n_layers + 1
+        assert names[0] == "embed" and names[-1] == "lm_head"
+        assert len(set(names)) == len(names)
+
+    def test_init_weights_deterministic(self):
+        w1 = M.init_weights(CFG, seed=99)
+        w2 = M.init_weights(CFG, seed=99)
+        for a, b in zip(w1, w2):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_buf_slots_equals_group_size(self):
+        # B_buf must equal quant group size g (paper §4.2)
+        assert CFG.buf_slots == F.GROUP_SIZE

@@ -1,0 +1,588 @@
+//! Eviction baselines (paper §1.1, §6.1).
+//!
+//! Every policy sees, per decode step, the attention mass each cached CoT
+//! position received (mean over layers and heads) and keeps whatever
+//! statistics the original system keeps. `select_evictions` is called when
+//! the live set must shrink to `target` positions.
+
+use std::collections::BTreeMap;
+
+/// Attention received per CoT position at one decode step.
+#[derive(Debug, Clone, Default)]
+pub struct PosAttn {
+    pub step: usize,
+    /// (position, attention mass) — positions currently visible.
+    pub attn: Vec<(usize, f32)>,
+}
+
+impl PosAttn {
+    pub fn get(&self, pos: usize) -> f32 {
+        self.attn
+            .iter()
+            .find(|(p, _)| *p == pos)
+            .map(|(_, a)| *a)
+            .unwrap_or(0.0)
+    }
+}
+
+pub trait EvictionPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Observe one decode step's attention row.
+    fn observe(&mut self, attn: &PosAttn);
+
+    /// Choose positions (from `live`) to evict so ~`target` remain.
+    /// `live` is ascending. Must return distinct members of `live`.
+    fn select_evictions(&mut self, live: &[usize], target: usize) -> Vec<usize>;
+
+    /// Whether evictions leave non-contiguous holes needing gather
+    /// compaction (R-KV and friends) — drives the Figure-7 cost model.
+    fn needs_gather(&self) -> bool {
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FullKV
+// ---------------------------------------------------------------------------
+
+/// No compression: the FullKV reference.
+#[derive(Debug, Default)]
+pub struct FullKv;
+
+impl EvictionPolicy for FullKv {
+    fn name(&self) -> &'static str {
+        "FullKV"
+    }
+
+    fn observe(&mut self, _attn: &PosAttn) {}
+
+    fn select_evictions(&mut self, _live: &[usize], _target: usize) -> Vec<usize> {
+        Vec::new()
+    }
+
+    fn needs_gather(&self) -> bool {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// H2O (Zhang et al., 2023)
+// ---------------------------------------------------------------------------
+
+/// Heavy-Hitter Oracle: keep the top-scoring "heavy hitters" (cumulative
+/// attention) plus a recency window; ring-buffer semantics in the original
+/// mean evictions are taken from the *oldest non-heavy* region.
+#[derive(Debug)]
+pub struct H2O {
+    cum: BTreeMap<usize, f64>,
+    last_step: usize,
+    /// Fraction of the budget reserved for heavy hitters (rest = recent).
+    pub heavy_frac: f64,
+}
+
+impl H2O {
+    pub fn new() -> H2O {
+        H2O { cum: BTreeMap::new(), last_step: 0, heavy_frac: 0.5 }
+    }
+}
+
+impl Default for H2O {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EvictionPolicy for H2O {
+    fn name(&self) -> &'static str {
+        "H2O"
+    }
+
+    fn observe(&mut self, attn: &PosAttn) {
+        self.last_step = attn.step;
+        for (p, a) in &attn.attn {
+            *self.cum.entry(*p).or_insert(0.0) += *a as f64;
+        }
+    }
+
+    fn select_evictions(&mut self, live: &[usize], target: usize) -> Vec<usize> {
+        if live.len() <= target {
+            return Vec::new();
+        }
+        let heavy_n = ((target as f64) * self.heavy_frac) as usize;
+        let recent_n = target - heavy_n;
+        // recency-protected tail
+        let recent: std::collections::BTreeSet<usize> =
+            live.iter().rev().take(recent_n).copied().collect();
+        // heavy hitters among the rest
+        let mut rest: Vec<usize> = live.iter().filter(|p| !recent.contains(p)).copied().collect();
+        rest.sort_by(|a, b| {
+            let sa = self.cum.get(a).copied().unwrap_or(0.0);
+            let sb = self.cum.get(b).copied().unwrap_or(0.0);
+            sb.partial_cmp(&sa).unwrap()
+        });
+        rest.into_iter().skip(heavy_n).collect()
+    }
+
+    fn needs_gather(&self) -> bool {
+        // the original uses a ring buffer; no gather kernels on the hot path
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// R-KV (Cai et al., 2025)
+// ---------------------------------------------------------------------------
+
+/// Redundancy-aware KV: importance (cumulative attention, recency-decayed)
+/// combined with redundancy (similarity to already-kept positions in
+/// *attention-pattern* space). Evicts the lowest combined score; leaves
+/// non-contiguous holes, so the original needs gather compaction — the
+/// §5.1 cost this repo reproduces.
+#[derive(Debug)]
+pub struct Rkv {
+    cum: BTreeMap<usize, f64>,
+    recent: BTreeMap<usize, f64>, // exponentially decayed
+    pub lambda: f64,              // importance vs redundancy mix
+    decay: f64,
+}
+
+impl Rkv {
+    pub fn new() -> Rkv {
+        Rkv { cum: BTreeMap::new(), recent: BTreeMap::new(), lambda: 0.7, decay: 0.95 }
+    }
+}
+
+impl Default for Rkv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EvictionPolicy for Rkv {
+    fn name(&self) -> &'static str {
+        "R-KV"
+    }
+
+    fn observe(&mut self, attn: &PosAttn) {
+        for v in self.recent.values_mut() {
+            *v *= self.decay;
+        }
+        for (p, a) in &attn.attn {
+            *self.cum.entry(*p).or_insert(0.0) += *a as f64;
+            *self.recent.entry(*p).or_insert(0.0) += *a as f64;
+        }
+    }
+
+    fn select_evictions(&mut self, live: &[usize], target: usize) -> Vec<usize> {
+        if live.len() <= target {
+            return Vec::new();
+        }
+        // score = λ·importance + (1-λ)·recent-uniqueness; redundancy proxy:
+        // positions adjacent to higher-scored neighbours are redundant.
+        let imp: Vec<f64> = live
+            .iter()
+            .map(|p| self.cum.get(p).copied().unwrap_or(0.0))
+            .collect();
+        let rec: Vec<f64> = live
+            .iter()
+            .map(|p| self.recent.get(p).copied().unwrap_or(0.0))
+            .collect();
+        let maxi = imp.iter().cloned().fold(1e-12, f64::max);
+        let maxr = rec.iter().cloned().fold(1e-12, f64::max);
+        let mut scored: Vec<(f64, usize)> = live
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| {
+                let redundancy = if i > 0 && imp[i - 1] >= imp[i] { 0.3 } else { 0.0 };
+                let s = self.lambda * imp[i] / maxi + (1.0 - self.lambda) * rec[i] / maxr
+                    - redundancy * (imp[i] / maxi);
+                (s, p)
+            })
+            .collect();
+        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        scored
+            .into_iter()
+            .take(live.len() - target)
+            .map(|(_, p)| p)
+            .collect()
+    }
+
+    fn needs_gather(&self) -> bool {
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LazyEviction (Zhang et al., 2025a)
+// ---------------------------------------------------------------------------
+
+/// Lagged eviction with attention-pattern observation: tokens whose
+/// attention *recurred* recently are protected for a lag window even if
+/// their cumulative score is low.
+#[derive(Debug)]
+pub struct LazyEviction {
+    cum: BTreeMap<usize, f64>,
+    last_attended: BTreeMap<usize, usize>,
+    /// Positions that re-emerged (were dormant > lag, then attended again).
+    recurrent: BTreeMap<usize, usize>,
+    step: usize,
+    pub lag: usize,
+    pub attend_threshold: f32,
+}
+
+impl LazyEviction {
+    pub fn new() -> LazyEviction {
+        LazyEviction {
+            cum: BTreeMap::new(),
+            last_attended: BTreeMap::new(),
+            recurrent: BTreeMap::new(),
+            step: 0,
+            lag: 64,
+            attend_threshold: 0.0,
+        }
+    }
+}
+
+impl Default for LazyEviction {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EvictionPolicy for LazyEviction {
+    fn name(&self) -> &'static str {
+        "LazyEviction"
+    }
+
+    fn observe(&mut self, attn: &PosAttn) {
+        self.step = attn.step;
+        let rel = (self.attend_threshold as f64)
+            .max(1.4 / attn.attn.len().max(1) as f64) as f32;
+        for (p, a) in &attn.attn {
+            *self.cum.entry(*p).or_insert(0.0) += *a as f64;
+            if *a > rel {
+                if let Some(&prev) = self.last_attended.get(p) {
+                    if attn.step.saturating_sub(prev) > self.lag {
+                        // dormant then re-attended: a recurrence event —
+                        // LazyEviction's signal that eviction must lag
+                        self.recurrent.insert(*p, attn.step);
+                    }
+                }
+                self.last_attended.insert(*p, attn.step);
+            }
+        }
+    }
+
+    fn select_evictions(&mut self, live: &[usize], target: usize) -> Vec<usize> {
+        if live.len() <= target {
+            return Vec::new();
+        }
+        let need = live.len() - target;
+        // protected: tokens with a *recurrence* event within the lag window
+        let mut candidates: Vec<(f64, usize)> = live
+            .iter()
+            .filter(|p| {
+                self.recurrent
+                    .get(p)
+                    .map(|&s| self.step.saturating_sub(s) > self.lag)
+                    .unwrap_or(true)
+            })
+            .map(|&p| (self.cum.get(&p).copied().unwrap_or(0.0), p))
+            .collect();
+        candidates.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut out: Vec<usize> = candidates.into_iter().take(need).map(|(_, p)| p).collect();
+        if out.len() < need {
+            // lag protection exceeded the budget: fall back to lowest score
+            let chosen: std::collections::BTreeSet<usize> = out.iter().copied().collect();
+            let mut rest: Vec<(f64, usize)> = live
+                .iter()
+                .filter(|p| !chosen.contains(p))
+                .map(|&p| (self.cum.get(&p).copied().unwrap_or(0.0), p))
+                .collect();
+            rest.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            out.extend(rest.into_iter().take(need - out.len()).map(|(_, p)| p));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RaaS (Hu et al., 2025)
+// ---------------------------------------------------------------------------
+
+/// Reasoning-aware attention sparsity: "milestone" tokens get timestamps
+/// refreshed whenever they re-emerge; eviction removes the stalest
+/// timestamps first.
+#[derive(Debug)]
+pub struct RaaS {
+    timestamp: BTreeMap<usize, usize>,
+    step: usize,
+    pub milestone_threshold: f32,
+}
+
+impl RaaS {
+    pub fn new() -> RaaS {
+        RaaS { timestamp: BTreeMap::new(), step: 0, milestone_threshold: 0.0 }
+    }
+}
+
+impl Default for RaaS {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EvictionPolicy for RaaS {
+    fn name(&self) -> &'static str {
+        "RaaS"
+    }
+
+    fn observe(&mut self, attn: &PosAttn) {
+        self.step = attn.step;
+        // milestone threshold is relative to the mean row mass: with n live
+        // positions, "re-emergent" means clearly above uniform attention.
+        let rel = (self.milestone_threshold as f64)
+            .max(1.4 / attn.attn.len().max(1) as f64) as f32;
+        for (p, a) in &attn.attn {
+            let e = self.timestamp.entry(*p).or_insert(attn.step);
+            if *a > rel {
+                *e = attn.step; // re-emergent importance refreshes the clock
+            }
+        }
+    }
+
+    fn select_evictions(&mut self, live: &[usize], target: usize) -> Vec<usize> {
+        if live.len() <= target {
+            return Vec::new();
+        }
+        let mut ts: Vec<(usize, usize)> = live
+            .iter()
+            .map(|&p| (self.timestamp.get(&p).copied().unwrap_or(0), p))
+            .collect();
+        ts.sort();
+        ts.into_iter()
+            .take(live.len() - target)
+            .map(|(_, p)| p)
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SnapKV (Li et al., 2024) — prefill compression + recency decode window
+// ---------------------------------------------------------------------------
+
+/// SnapKV selects prompt positions by pooled observation-window attention
+/// at prefill; during decode it keeps a sliding recent window (it was
+/// designed for long inputs, which is why it underperforms on long outputs
+/// — Figure 8).
+#[derive(Debug)]
+pub struct SnapKv {
+    /// Positions chosen at prefill (protected).
+    pub prefill_keep: Vec<usize>,
+}
+
+impl SnapKv {
+    /// `obs[pos]` = prefill observation scores; keep top `keep_n`.
+    pub fn from_prefill_obs(obs: &[f32], keep_n: usize) -> SnapKv {
+        let keep = crate::util::stats::top_k(obs, keep_n);
+        SnapKv { prefill_keep: keep }
+    }
+}
+
+impl EvictionPolicy for SnapKv {
+    fn name(&self) -> &'static str {
+        "SnapKV"
+    }
+
+    fn observe(&mut self, _attn: &PosAttn) {}
+
+    fn select_evictions(&mut self, live: &[usize], target: usize) -> Vec<usize> {
+        if live.len() <= target {
+            return Vec::new();
+        }
+        let need = live.len() - target;
+        let protected: std::collections::BTreeSet<usize> =
+            self.prefill_keep.iter().copied().collect();
+        // evict oldest unprotected first
+        let mut out = Vec::new();
+        for &p in live {
+            if out.len() == need {
+                break;
+            }
+            if !protected.contains(&p) {
+                out.push(p);
+            }
+        }
+        // if everything old is protected, evict oldest protected
+        let mut i = 0;
+        while out.len() < need && i < live.len() {
+            if !out.contains(&live[i]) {
+                out.push(live[i]);
+            }
+            i += 1;
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StreamingLLM (Xiao et al., 2023) — attention sinks + sliding window
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct StreamingLlm {
+    pub sinks: usize,
+}
+
+impl StreamingLlm {
+    pub fn new(sinks: usize) -> StreamingLlm {
+        StreamingLlm { sinks }
+    }
+}
+
+impl EvictionPolicy for StreamingLlm {
+    fn name(&self) -> &'static str {
+        "StreamingLLM"
+    }
+
+    fn observe(&mut self, _attn: &PosAttn) {}
+
+    fn select_evictions(&mut self, live: &[usize], target: usize) -> Vec<usize> {
+        if live.len() <= target {
+            return Vec::new();
+        }
+        let need = live.len() - target;
+        live.iter()
+            .filter(|&&p| p >= self.sinks) // sinks are immortal
+            .take(need)
+            .copied()
+            .collect()
+    }
+
+    fn needs_gather(&self) -> bool {
+        false // contiguous window: ring-buffer friendly
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn steps(policy: &mut dyn EvictionPolicy, rows: &[Vec<(usize, f32)>]) {
+        for (i, r) in rows.iter().enumerate() {
+            policy.observe(&PosAttn { step: i, attn: r.clone() });
+        }
+    }
+
+    #[test]
+    fn fullkv_never_evicts() {
+        let mut p = FullKv;
+        assert!(p.select_evictions(&[0, 1, 2, 3], 1).is_empty());
+        assert!(!p.needs_gather());
+    }
+
+    #[test]
+    fn h2o_keeps_heavy_hitters_and_recent() {
+        let mut p = H2O::new();
+        // position 2 is a heavy hitter
+        let rows: Vec<Vec<(usize, f32)>> = (0..10)
+            .map(|_| vec![(0, 0.01), (1, 0.01), (2, 0.9), (3, 0.01), (4, 0.02)])
+            .collect();
+        steps(&mut p, &rows);
+        let evicted = p.select_evictions(&[0, 1, 2, 3, 4], 2);
+        assert!(!evicted.contains(&2), "heavy hitter evicted: {evicted:?}");
+        assert!(!evicted.contains(&4), "most recent evicted: {evicted:?}");
+        assert_eq!(evicted.len(), 3);
+    }
+
+    #[test]
+    fn rkv_evicts_low_importance() {
+        let mut p = Rkv::new();
+        let rows: Vec<Vec<(usize, f32)>> = (0..20)
+            .map(|_| vec![(0, 0.4), (1, 0.005), (2, 0.4), (3, 0.005), (4, 0.19)])
+            .collect();
+        steps(&mut p, &rows);
+        let evicted = p.select_evictions(&[0, 1, 2, 3, 4], 3);
+        assert_eq!(evicted.len(), 2);
+        assert!(evicted.contains(&1) && evicted.contains(&3), "{evicted:?}");
+        assert!(p.needs_gather());
+    }
+
+    #[test]
+    fn lazy_eviction_protects_recurrent_tokens() {
+        let mut p = LazyEviction::new();
+        p.lag = 5;
+        // position 0: attended early, dormant for > lag, then re-attended at
+        // step 9 — a recurrence event that must delay its eviction.
+        let mut rows: Vec<Vec<(usize, f32)>> =
+            vec![vec![(0, 0.4), (1, 0.2), (2, 0.2), (3, 0.2)]];
+        rows.extend((1..9).map(|_| vec![(0, 0.001), (1, 0.3), (2, 0.3), (3, 0.3)]));
+        rows.push(vec![(0, 0.5), (1, 0.1), (2, 0.2), (3, 0.2)]);
+        steps(&mut p, &rows);
+        let evicted = p.select_evictions(&[0, 1, 2, 3], 3);
+        assert!(!evicted.contains(&0), "recurrent token evicted: {evicted:?}");
+    }
+
+    #[test]
+    fn raas_drops_stalest_timestamp() {
+        let mut p = RaaS::new();
+        let rows: Vec<Vec<(usize, f32)>> = (0..10)
+            .map(|i| {
+                vec![
+                    (0, if i < 2 { 0.5 } else { 0.001 }), // stale after step 1
+                    (1, 0.5),
+                    (2, 0.5),
+                ]
+            })
+            .collect();
+        steps(&mut p, &rows);
+        let evicted = p.select_evictions(&[0, 1, 2], 2);
+        assert_eq!(evicted, vec![0]);
+    }
+
+    #[test]
+    fn snapkv_protects_prefill_selection() {
+        let obs = vec![0.1f32, 0.9, 0.05, 0.8, 0.02];
+        let mut p = SnapKv::from_prefill_obs(&obs, 2);
+        assert_eq!(p.prefill_keep, vec![1, 3]);
+        let evicted = p.select_evictions(&[0, 1, 2, 3, 4], 3);
+        assert_eq!(evicted, vec![0, 2]);
+    }
+
+    #[test]
+    fn streaming_llm_keeps_sinks() {
+        let mut p = StreamingLlm::new(2);
+        let evicted = p.select_evictions(&[0, 1, 2, 3, 4, 5], 4);
+        assert_eq!(evicted, vec![2, 3]);
+        assert!(!p.needs_gather());
+    }
+
+    #[test]
+    fn policies_return_distinct_members() {
+        let live: Vec<usize> = (0..50).collect();
+        let mut rows = Vec::new();
+        for s in 0..30 {
+            rows.push(
+                (0..50)
+                    .map(|p| (p, if (p + s) % 7 == 0 { 0.2 } else { 0.01 }))
+                    .collect::<Vec<_>>(),
+            );
+        }
+        let mut policies: Vec<Box<dyn EvictionPolicy>> = vec![
+            Box::new(H2O::new()),
+            Box::new(Rkv::new()),
+            Box::new(LazyEviction::new()),
+            Box::new(RaaS::new()),
+            Box::new(StreamingLlm::new(4)),
+        ];
+        for p in policies.iter_mut() {
+            steps(p.as_mut(), &rows);
+            let ev = p.select_evictions(&live, 20);
+            assert_eq!(ev.len(), 30, "{} wrong count", p.name());
+            let set: std::collections::BTreeSet<_> = ev.iter().collect();
+            assert_eq!(set.len(), 30, "{} duplicates", p.name());
+            assert!(ev.iter().all(|e| live.contains(e)), "{} invalid", p.name());
+        }
+    }
+}

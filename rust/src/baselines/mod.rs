@@ -1,0 +1,20 @@
+//! Baseline KV-compression policies the paper compares against (§6.1):
+//! eviction — H2O, RaaS, R-KV, LazyEviction, SnapKV, StreamingLLM;
+//! quantization — KIVI, PM-KVQ (built on the TBQ machinery with uniform /
+//! progressive tags).
+//!
+//! All eviction baselines implement [`EvictionPolicy`]: they observe each
+//! decode step's attention row over CoT *positions* (model-agnostic — the
+//! same policies run against the real PJRT model and the LRM trace
+//! simulator) and, when the cache exceeds budget, nominate positions to
+//! evict. Unlike ThinKV's CT cache, evictions here leave holes that
+//! require gather compaction (R-KV) or are constrained to be contiguous
+//! (H2O's circular buffer).
+
+pub mod eviction;
+pub mod quant_baselines;
+
+pub use eviction::{
+    EvictionPolicy, FullKv, LazyEviction, PosAttn, RaaS, Rkv, SnapKv, StreamingLlm, H2O,
+};
+pub use quant_baselines::{Kivi, PmKvq};

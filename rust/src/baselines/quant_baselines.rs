@@ -1,0 +1,186 @@
+//! Quantization baselines (paper §6.1, Table 1): KIVI (uniform low-bit)
+//! and PM-KVQ (progressive mixed precision that requantizes older tokens
+//! downward as decoding proceeds).
+//!
+//! Both reuse the TBQ cache machinery with non-thought-aware tag policies.
+
+use crate::kvcache::CtCache;
+use crate::quant::{dequant_groups, quant_groups, Precision};
+
+/// KIVI: uniform quantization of all tokens (2-bit or 4-bit variants).
+#[derive(Debug, Clone, Copy)]
+pub struct Kivi {
+    pub precision: Precision,
+}
+
+impl Kivi {
+    pub fn k2() -> Kivi {
+        Kivi { precision: Precision::Ternary }
+    }
+
+    pub fn k4() -> Kivi {
+        Kivi { precision: Precision::Nvfp4 }
+    }
+
+    pub fn psi(&self) -> impl Fn(crate::kvcache::Thought) -> Precision + '_ {
+        move |_| self.precision
+    }
+}
+
+/// PM-KVQ: tokens start at high precision and are **requantized** to lower
+/// precision as they age (progressive schedule by age in decode steps).
+/// Requantization goes through dequantize -> quantize, accumulating error —
+/// exactly the effect the paper measures against.
+#[derive(Debug, Clone)]
+pub struct PmKvq {
+    /// (age_threshold_steps, precision) descending by precision.
+    pub schedule: Vec<(usize, Precision)>,
+}
+
+impl PmKvq {
+    pub fn default_schedule() -> PmKvq {
+        PmKvq {
+            schedule: vec![
+                (0, Precision::Fp8),      // fresh tokens
+                (512, Precision::Nvfp4),  // >512 steps old
+                (2048, Precision::Ternary), // ancient
+            ],
+        }
+    }
+
+    pub fn precision_for_age(&self, age: usize) -> Precision {
+        let mut p = self.schedule[0].1;
+        for &(thr, prec) in &self.schedule {
+            if age >= thr {
+                p = prec;
+            }
+        }
+        p
+    }
+
+    /// Average nominal bits at a given CoT length (for Table-1 style
+    /// bit-width reporting).
+    pub fn avg_bits_at(&self, len: usize) -> f64 {
+        if len == 0 {
+            return self.schedule[0].1.bits();
+        }
+        let total: f64 = (0..len)
+            .map(|pos| self.precision_for_age(len - 1 - pos).bits())
+            .sum();
+        total / len as f64
+    }
+
+    /// Requantize every live slot whose age-mandated precision dropped.
+    /// Returns the number of slots requantized.
+    pub fn apply(&self, cache: &mut CtCache, current_pos: usize) -> usize {
+        let c = cache.cfg.capacity;
+        let kvd = cache.cfg.kv_dim();
+        let g_per = cache.cfg.hkv * cache.cfg.groups();
+        let mut changed = 0;
+        for l in 0..cache.cfg.layers {
+            for slot in cache.tables[l].live_slot_ids() {
+                let pos = cache.tables[l].slot_pos[slot];
+                if pos < 0 {
+                    continue;
+                }
+                let age = current_pos.saturating_sub(pos as usize);
+                let want = self.precision_for_age(age);
+                let have = Precision::from_tag(cache.tags[l * c + slot]);
+                if want.bits() < have.bits() {
+                    let code_base = (l * c + slot) * kvd;
+                    let scale_base = (l * c + slot) * g_per;
+                    let mut kf = vec![0f32; kvd];
+                    let mut vf = vec![0f32; kvd];
+                    dequant_groups(
+                        &cache.k_codes[code_base..code_base + kvd],
+                        &cache.k_scales[scale_base..scale_base + g_per],
+                        have,
+                        &mut kf,
+                    );
+                    dequant_groups(
+                        &cache.v_codes[code_base..code_base + kvd],
+                        &cache.v_scales[scale_base..scale_base + g_per],
+                        have,
+                        &mut vf,
+                    );
+                    quant_groups(
+                        &kf,
+                        want,
+                        &mut cache.k_codes[code_base..code_base + kvd],
+                        &mut cache.k_scales[scale_base..scale_base + g_per],
+                    );
+                    quant_groups(
+                        &vf,
+                        want,
+                        &mut cache.v_codes[code_base..code_base + kvd],
+                        &mut cache.v_scales[scale_base..scale_base + g_per],
+                    );
+                    cache.tags[l * c + slot] = want.tag();
+                    changed += 1;
+                }
+            }
+        }
+        changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{CacheConfig, Thought};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kivi_uniform() {
+        let k = Kivi::k2();
+        for t in Thought::ALL {
+            assert_eq!((k.psi())(t), Precision::Ternary);
+        }
+        assert_eq!(Kivi::k4().precision, Precision::Nvfp4);
+    }
+
+    #[test]
+    fn pmkvq_schedule_monotone_in_age() {
+        let p = PmKvq::default_schedule();
+        assert_eq!(p.precision_for_age(0), Precision::Fp8);
+        assert_eq!(p.precision_for_age(600), Precision::Nvfp4);
+        assert_eq!(p.precision_for_age(5000), Precision::Ternary);
+        assert!(p.avg_bits_at(100) > p.avg_bits_at(4000));
+    }
+
+    #[test]
+    fn pmkvq_requantizes_old_slots() {
+        let cfg = CacheConfig {
+            layers: 1,
+            capacity: 64,
+            block_size: 8,
+            hkv: 1,
+            dh: 16,
+            buf_slots: 16,
+        };
+        let mut cache = CtCache::new(cfg.clone());
+        let mut rng = Rng::new(1);
+        let seg = cache.open_segment(Thought::Reasoning, 0);
+        for i in 0..16 {
+            let mut k = vec![0f32; cfg.kv_dim()];
+            let mut v = vec![0f32; cfg.kv_dim()];
+            rng.fill_normal_f32(&mut k, 0.0, 1.0);
+            rng.fill_normal_f32(&mut v, 0.0, 1.0);
+            cache.push_token(&k, &v, i, seg, Thought::Reasoning);
+        }
+        cache.flush_buffer(&|_| Precision::Fp8).unwrap();
+        let pm = PmKvq {
+            schedule: vec![(0, Precision::Fp8), (10, Precision::Ternary)],
+        };
+        let changed = pm.apply(&mut cache, 16);
+        // tokens 0..6 are >=10 steps old at pos 16
+        assert_eq!(changed, 7);
+        let ternary = cache.tags[..64]
+            .iter()
+            .filter(|&&t| t == Precision::Ternary.tag())
+            .count();
+        assert_eq!(ternary, 64 - 16 + 7); // empty slots default 0 = ternary tag
+        // idempotent
+        assert_eq!(pm.apply(&mut cache, 16), 0);
+    }
+}

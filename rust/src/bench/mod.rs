@@ -1,0 +1,143 @@
+//! Shared bench harness: table printing + results JSON (criterion is not
+//! in the offline vendor set; benches are `harness = false` binaries).
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Pretty fixed-width table printer for paper-style rows.
+pub struct Table {
+    pub title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let hdr: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!("{:w$}", h, w = widths[i]))
+            .collect();
+        println!("{}", hdr.join("  "));
+        println!("{}", "-".repeat(hdr.join("  ").len()));
+        for r in &self.rows {
+            let line: Vec<String> = r
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+    }
+
+    /// Rows as JSON (array of objects keyed by header).
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                for (h, c) in self.headers.iter().zip(r) {
+                    match c.parse::<f64>() {
+                        Ok(n) => o.set(h, Json::Num(n)),
+                        Err(_) => o.set(h, Json::Str(c.clone())),
+                    };
+                }
+                o
+            })
+            .collect();
+        let mut out = Json::obj();
+        out.set("title", Json::Str(self.title.clone()));
+        out.set("rows", Json::Arr(rows));
+        out
+    }
+}
+
+/// Write a results JSON under results/.
+pub fn write_results(name: &str, body: Json) {
+    let dir = format!("{}/results", env!("CARGO_MANIFEST_DIR"));
+    let _ = std::fs::create_dir_all(&dir);
+    let path = format!("{dir}/{name}.json");
+    if std::fs::write(&path, body.to_string_pretty()).is_ok() {
+        println!("[results -> {path}]");
+    }
+}
+
+/// Time a closure `iters` times, returning (mean_ms, min_ms).
+pub fn time_ms<F: FnMut()>(iters: usize, mut f: F) -> (f64, f64) {
+    let mut best = f64::INFINITY;
+    let mut total = 0.0;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64() * 1e3;
+        best = best.min(dt);
+        total += dt;
+    }
+    (total / iters as f64, best)
+}
+
+/// Standard env-driven bench scale: THINKV_BENCH_SCALE in (0, 1]; applied
+/// to trace lengths so CI runs stay fast while full runs match the paper.
+pub fn bench_len_scale() -> f64 {
+    std::env::var("THINKV_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.35)
+}
+
+pub fn bench_seeds() -> Vec<u64> {
+    let n: usize = std::env::var("THINKV_BENCH_SEEDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    (0..n as u64).map(|i| 1000 + i * 77).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_json_roundtrip() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1.5".into(), "x".into()]);
+        let j = t.to_json();
+        assert_eq!(j.path(&["rows"]).unwrap().idx(0).unwrap().get("a").unwrap().as_f64(), Some(1.5));
+        assert_eq!(
+            j.path(&["rows"]).unwrap().idx(0).unwrap().get("b").unwrap().as_str(),
+            Some("x")
+        );
+    }
+
+    #[test]
+    fn time_ms_positive() {
+        let (mean, best) = time_ms(3, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert!(mean >= best && best >= 0.0);
+    }
+}

@@ -1,0 +1,202 @@
+//! K-means selection for the eviction policy π (paper §4.3 + §D.4,
+//! GPU-accelerated per Kruliš & Kratochvíl in the original; Lloyd with
+//! k-means++ seeding here).
+//!
+//! Clusters a segment's post-RoPE key embeddings into K groups and keeps
+//! the slot nearest each centroid — the representative key-value pairs that
+//! stay in the cache. (The paper keeps centroid keys; the nearest-member
+//! representative preserves exact K/V pairing and is the standard
+//! medoid-style realization — documented deviation, DESIGN §1.)
+
+use crate::util::rng::Rng;
+
+fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Pick `k` representative indices out of `points` (row-major, `dim` wide).
+/// Deterministic for a given seed. Returns ascending indices.
+pub fn kmeans_select(points: &[Vec<f32>], k: usize, seed: u64, iters: usize) -> Vec<usize> {
+    let n = points.len();
+    if k == 0 || n == 0 {
+        return Vec::new();
+    }
+    if k >= n {
+        return (0..n).collect();
+    }
+    let mut rng = Rng::new(seed);
+
+    // k-means++ seeding
+    let mut centroids: Vec<Vec<f32>> = Vec::with_capacity(k);
+    centroids.push(points[rng.below(n)].clone());
+    let mut d2: Vec<f64> = points.iter().map(|p| dist2(p, &centroids[0]) as f64).collect();
+    while centroids.len() < k {
+        let idx = rng.weighted(&d2);
+        centroids.push(points[idx].clone());
+        for (i, p) in points.iter().enumerate() {
+            let d = dist2(p, centroids.last().unwrap()) as f64;
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+
+    // Lloyd iterations
+    let dim = points[0].len();
+    let mut assign = vec![0usize; n];
+    for _ in 0..iters {
+        let mut changed = false;
+        for (i, p) in points.iter().enumerate() {
+            let mut best = 0;
+            let mut bd = f32::INFINITY;
+            for (c, cent) in centroids.iter().enumerate() {
+                let d = dist2(p, cent);
+                if d < bd {
+                    bd = d;
+                    best = c;
+                }
+            }
+            if assign[i] != best {
+                assign[i] = best;
+                changed = true;
+            }
+        }
+        let mut sums = vec![vec![0f64; dim]; k];
+        let mut counts = vec![0usize; k];
+        for (i, p) in points.iter().enumerate() {
+            counts[assign[i]] += 1;
+            for (s, &x) in sums[assign[i]].iter_mut().zip(p) {
+                *s += x as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for (j, s) in sums[c].iter().enumerate() {
+                    centroids[c][j] = (*s / counts[c] as f64) as f32;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // representative = nearest member of each non-empty cluster
+    let mut reps: Vec<usize> = Vec::with_capacity(k);
+    for c in 0..k {
+        let mut best: Option<(usize, f32)> = None;
+        for (i, p) in points.iter().enumerate() {
+            if assign[i] != c {
+                continue;
+            }
+            let d = dist2(p, &centroids[c]);
+            if best.map(|(_, bd)| d < bd).unwrap_or(true) {
+                best = Some((i, d));
+            }
+        }
+        if let Some((i, _)) = best {
+            reps.push(i);
+        }
+    }
+    // empty clusters can leave reps short: top up with farthest-from-kept
+    while reps.len() < k {
+        let mut far: Option<(usize, f32)> = None;
+        for (i, p) in points.iter().enumerate() {
+            if reps.contains(&i) {
+                continue;
+            }
+            let dmin = reps
+                .iter()
+                .map(|&r| dist2(p, &points[r]))
+                .fold(f32::INFINITY, f32::min);
+            if far.map(|(_, fd)| dmin > fd).unwrap_or(true) {
+                far = Some((i, dmin));
+            }
+        }
+        match far {
+            Some((i, _)) => reps.push(i),
+            None => break,
+        }
+    }
+    reps.sort_unstable();
+    reps.dedup();
+    reps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn blobs(n_per: usize, centers: &[[f32; 2]], seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        for c in centers {
+            for _ in 0..n_per {
+                out.push(vec![
+                    c[0] + rng.normal_with(0.0, 0.05) as f32,
+                    c[1] + rng.normal_with(0.0, 0.05) as f32,
+                ]);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn selects_one_per_blob() {
+        let centers = [[0.0, 0.0], [5.0, 5.0], [-5.0, 5.0]];
+        let pts = blobs(20, &centers, 1);
+        let reps = kmeans_select(&pts, 3, 42, 12);
+        assert_eq!(reps.len(), 3);
+        // each rep comes from a distinct blob
+        let blobs_hit: std::collections::BTreeSet<usize> =
+            reps.iter().map(|&i| i / 20).collect();
+        assert_eq!(blobs_hit.len(), 3);
+    }
+
+    #[test]
+    fn k_ge_n_keeps_all() {
+        let pts = blobs(3, &[[0.0, 0.0]], 2);
+        assert_eq!(kmeans_select(&pts, 10, 0, 5), vec![0, 1, 2]);
+        assert_eq!(kmeans_select(&pts, 3, 0, 5), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn k_zero_or_empty() {
+        let pts = blobs(3, &[[0.0, 0.0]], 3);
+        assert!(kmeans_select(&pts, 0, 0, 5).is_empty());
+        assert!(kmeans_select(&[], 3, 0, 5).is_empty());
+    }
+
+    #[test]
+    fn deterministic() {
+        let pts = blobs(15, &[[0.0, 0.0], [3.0, 1.0]], 4);
+        assert_eq!(kmeans_select(&pts, 4, 9, 10), kmeans_select(&pts, 4, 9, 10));
+    }
+
+    #[test]
+    fn property_returns_k_unique_valid_indices() {
+        prop::check(60, |g| {
+            let n = g.usize(1, 60);
+            let k = g.usize(1, 20);
+            let dim = g.usize(1, 8);
+            let pts: Vec<Vec<f32>> =
+                (0..n).map(|_| g.vec_normal_f32(dim, 0.0, 2.0)).collect();
+            let reps = kmeans_select(&pts, k, 7, 8);
+            let want = k.min(n);
+            if reps.len() != want {
+                return Err(format!("got {} reps, want {want}", reps.len()));
+            }
+            let mut s = reps.clone();
+            s.dedup();
+            if s.len() != reps.len() {
+                return Err("duplicate reps".into());
+            }
+            if reps.iter().any(|&i| i >= n) {
+                return Err("rep out of range".into());
+            }
+            Ok(())
+        });
+    }
+}

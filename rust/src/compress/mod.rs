@@ -1,0 +1,11 @@
+//! ThinKV's hybrid compression: **TBQ** (Think Before you Quantize, §4.2)
+//! and **TBE** (Think Before You Evict, §4.3), plus the k-means eviction
+//! policy π (§D.4).
+
+pub mod kmeans;
+pub mod tbe;
+pub mod tbq;
+
+pub use kmeans::kmeans_select;
+pub use tbe::{Tbe, TbeConfig, TbeStats};
+pub use tbq::{PrecisionAssignment, Tbq};

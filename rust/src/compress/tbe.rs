@@ -1,0 +1,357 @@
+//! TBE — Think Before You Evict (paper §4.3, Problem Formulation 2).
+//!
+//! Proactive, segment-granular eviction with the annealing retention
+//! schedule R = {64, 32, 16, 8, 4}:
+//!
+//! * **Case 1** (`on_transition_end`): when a transition segment closes,
+//!   every preceding segment (transitions included) anneals to its next
+//!   retention level — Observation 3: each T thought makes all prior
+//!   thoughts less influential.
+//! * **Case 2** (`ensure_budget`): if no transition fires but the live
+//!   cache exceeds the budget k, the oldest least-important segment anneals.
+//!
+//! Which tokens survive an anneal is decided by the k-means policy π over
+//! the segment's post-RoPE keys (per layer — layers may retain different
+//! tokens, matching the per-layer caches of the paper's pseudocode §D.5).
+
+use crate::kvcache::{CtCache, Thought};
+
+use super::kmeans::kmeans_select;
+
+#[derive(Debug, Clone)]
+pub struct TbeConfig {
+    /// Retention schedule R (descending), paper default {64,32,16,8,4}.
+    pub retention: Vec<usize>,
+    /// Cache budget k (live tokens per layer).
+    pub budget: usize,
+    pub kmeans_iters: usize,
+    pub seed: u64,
+}
+
+impl TbeConfig {
+    pub fn new(budget: usize) -> TbeConfig {
+        TbeConfig {
+            retention: vec![64, 32, 16, 8, 4],
+            budget,
+            kmeans_iters: 8,
+            seed: 0x7b,
+        }
+    }
+
+    /// Keep-count after the n-th selection (clamps at the schedule tail —
+    /// min retention 4 preserves the reasoning trajectory, Fig 11a).
+    pub fn keep_at(&self, n: usize) -> usize {
+        *self
+            .retention
+            .get(n.min(self.retention.len() - 1))
+            .expect("non-empty schedule")
+    }
+
+    /// The paper's "next lowest retention level in R" relative to a
+    /// segment's current live size (handles segments shorter than the
+    /// first schedule entry, e.g. a 64-token prompt).
+    pub fn next_level_below(&self, live: usize) -> usize {
+        self.retention
+            .iter()
+            .copied()
+            .find(|&r| r < live)
+            .unwrap_or_else(|| *self.retention.last().expect("non-empty schedule"))
+    }
+
+    pub fn min_keep(&self) -> usize {
+        *self.retention.last().expect("non-empty schedule")
+    }
+}
+
+/// Counters for the Table-5 style overhead breakdown.
+#[derive(Debug, Clone, Default)]
+pub struct TbeStats {
+    pub anneal_calls: u64,
+    pub case1_events: u64,
+    pub case2_events: u64,
+    pub tokens_evicted: u64,
+    pub nanos: u64,
+    /// Decode steps on which TBE did any work (call-rate metric).
+    pub active_steps: u64,
+    pub total_steps: u64,
+}
+
+impl TbeStats {
+    pub fn call_rate(&self) -> f64 {
+        if self.total_steps == 0 {
+            0.0
+        } else {
+            self.active_steps as f64 / self.total_steps as f64
+        }
+    }
+}
+
+pub struct Tbe {
+    pub cfg: TbeConfig,
+    pub stats: TbeStats,
+}
+
+impl Tbe {
+    pub fn new(cfg: TbeConfig) -> Tbe {
+        Tbe { cfg, stats: TbeStats::default() }
+    }
+
+    /// Case 1: a transition segment `closing` just ended; anneal every
+    /// segment that started before it.
+    pub fn on_transition_end(&mut self, cache: &mut CtCache, closing: usize) {
+        let t0 = std::time::Instant::now();
+        let prior: Vec<usize> = cache
+            .segments
+            .iter()
+            .filter(|s| s.id != closing && s.start_pos < cache.segments[closing].start_pos)
+            .map(|s| s.id)
+            .collect();
+        let mut did = false;
+        for seg in prior {
+            did |= self.anneal(cache, seg);
+        }
+        if did {
+            self.stats.case1_events += 1;
+            self.stats.active_steps += 1;
+        }
+        self.stats.nanos += t0.elapsed().as_nanos() as u64;
+    }
+
+    /// Case 2: shrink until the live token count fits the budget (layer 0
+    /// as reference, applied to all layers). Returns tokens evicted.
+    pub fn ensure_budget(&mut self, cache: &mut CtCache) -> u64 {
+        let t0 = std::time::Instant::now();
+        let before = self.stats.tokens_evicted;
+        let mut guard = 0;
+        while cache.live_tokens() + cache.buf_fill() > self.cfg.budget {
+            let Some(victim) = self.pick_case2_victim(cache) else {
+                break;
+            };
+            self.anneal(cache, victim);
+            guard += 1;
+            if guard > 4 * cache.segments.len() + 8 {
+                break;
+            }
+        }
+        let evicted = self.stats.tokens_evicted - before;
+        if evicted > 0 {
+            self.stats.case2_events += 1;
+            self.stats.active_steps += 1;
+        }
+        self.stats.nanos += t0.elapsed().as_nanos() as u64;
+        evicted
+    }
+
+    /// Oldest, least-important segment whose next anneal would evict.
+    fn pick_case2_victim(&self, cache: &CtCache) -> Option<usize> {
+        let last = cache.segments.len().saturating_sub(1);
+        cache
+            .segments
+            .iter()
+            .filter(|s| s.id != last) // never the active segment
+            .filter(|s| cache.tables[0].segment_slots(s.id).len() > self.cfg.min_keep())
+            .min_by_key(|s| (s.thought.importance(), s.start_pos))
+            .map(|s| s.id)
+    }
+
+    /// Anneal one segment to its next retention level across all layers.
+    /// The schedule level always advances (the paper's "reduce to the next
+    /// lowest retention level"); returns true if any token was evicted.
+    pub fn anneal(&mut self, cache: &mut CtCache, seg: usize) -> bool {
+        // "reduce to the next lowest retention level in R": size-relative,
+        // so segments shorter than R[evict_level] still shrink.
+        let live0 = cache.tables[0].segment_slots(seg).len();
+        if live0 <= self.cfg.min_keep() {
+            return false;
+        }
+        let keep = self.cfg.next_level_below(live0);
+        let mut any = false;
+        for l in 0..cache.cfg.layers {
+            let slots = cache.tables[l].segment_slots(seg);
+            if slots.len() <= keep {
+                continue;
+            }
+            let keys: Vec<Vec<f32>> = slots.iter().map(|&s| cache.dequant_key(l, s)).collect();
+            let keep_idx = kmeans_select(
+                &keys,
+                keep,
+                self.cfg.seed ^ (seg as u64) << 8 ^ l as u64,
+                self.cfg.kmeans_iters,
+            );
+            let keep_set: std::collections::BTreeSet<usize> = keep_idx.into_iter().collect();
+            let evict: Vec<usize> = slots
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !keep_set.contains(i))
+                .map(|(_, &s)| s)
+                .collect();
+            self.stats.tokens_evicted += evict.len() as u64;
+            cache.soft_evict_slots(l, &evict);
+            any = true;
+        }
+        cache.segments[seg].evict_level += 1;
+        if any {
+            self.stats.anneal_calls += 1;
+        }
+        any
+    }
+
+    /// Per-step bookkeeping (call-rate denominator).
+    pub fn tick(&mut self) {
+        self.stats.total_steps += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::CacheConfig;
+    use crate::quant::Precision;
+    use crate::util::rng::Rng;
+
+    fn mk_cache(capacity: usize) -> CtCache {
+        CtCache::new(CacheConfig {
+            layers: 2,
+            capacity,
+            block_size: 8,
+            hkv: 1,
+            dh: 16,
+            buf_slots: 16,
+        })
+    }
+
+    /// Fill a segment with n tokens of `thought` starting at `pos0`.
+    fn fill_segment(
+        cache: &mut CtCache,
+        rng: &mut Rng,
+        thought: Thought,
+        pos0: usize,
+        n: usize,
+    ) -> usize {
+        let seg = cache.open_segment(thought, pos0);
+        let kvd = cache.cfg.layers * cache.cfg.kv_dim();
+        for i in 0..n {
+            let mut k = vec![0f32; kvd];
+            let mut v = vec![0f32; kvd];
+            rng.fill_normal_f32(&mut k, 0.0, 1.0);
+            rng.fill_normal_f32(&mut v, 0.0, 1.0);
+            let full = cache.push_token(&k, &v, pos0 + i, seg, thought);
+            if full {
+                cache.flush_buffer(&|_| Precision::Nvfp4).unwrap();
+            }
+        }
+        seg
+    }
+
+    #[test]
+    fn retention_schedule_clamps() {
+        let cfg = TbeConfig::new(1024);
+        assert_eq!(cfg.keep_at(0), 64);
+        assert_eq!(cfg.keep_at(4), 4);
+        assert_eq!(cfg.keep_at(99), 4);
+    }
+
+    #[test]
+    fn transition_anneals_prior_segments() {
+        let mut cache = mk_cache(512);
+        let mut rng = Rng::new(1);
+        let s0 = fill_segment(&mut cache, &mut rng, Thought::Reasoning, 0, 128);
+        let s1 = fill_segment(&mut cache, &mut rng, Thought::Execution, 128, 128);
+        let st = fill_segment(&mut cache, &mut rng, Thought::Transition, 256, 128);
+        let mut tbe = Tbe::new(TbeConfig::new(1024));
+        tbe.on_transition_end(&mut cache, st);
+        // prior segments annealed to R_0 = 64
+        assert_eq!(cache.tables[0].segment_slots(s0).len(), 64);
+        assert_eq!(cache.tables[0].segment_slots(s1).len(), 64);
+        // the transition itself is untouched
+        assert_eq!(cache.tables[0].segment_slots(st).len(), 128);
+        assert_eq!(cache.segments[s0].evict_level, 1);
+        cache.check_invariants().unwrap();
+        // a second transition anneals further: 64 -> 32 (and st -> 64)
+        let st2 = fill_segment(&mut cache, &mut rng, Thought::Transition, 384, 16);
+        tbe.on_transition_end(&mut cache, st2);
+        assert_eq!(cache.tables[0].segment_slots(s0).len(), 32);
+        assert_eq!(cache.tables[0].segment_slots(st).len(), 64);
+        cache.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn min_retention_floor_holds() {
+        let mut cache = mk_cache(512);
+        let mut rng = Rng::new(2);
+        let s0 = fill_segment(&mut cache, &mut rng, Thought::Reasoning, 0, 128);
+        let mut tbe = Tbe::new(TbeConfig::new(1024));
+        for t in 0..8 {
+            let st = fill_segment(&mut cache, &mut rng, Thought::Transition, 128 + t * 16, 16);
+            tbe.on_transition_end(&mut cache, st);
+        }
+        // after many transitions s0 bottoms out at min retention 4
+        assert_eq!(cache.tables[0].segment_slots(s0).len(), 4);
+        cache.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn case2_budget_enforced_on_least_important_oldest() {
+        let mut cache = mk_cache(512);
+        let mut rng = Rng::new(3);
+        let s_r = fill_segment(&mut cache, &mut rng, Thought::Reasoning, 0, 128);
+        let s_e = fill_segment(&mut cache, &mut rng, Thought::Execution, 128, 128);
+        let _active = fill_segment(&mut cache, &mut rng, Thought::Reasoning, 256, 32);
+        let mut tbe = Tbe::new(TbeConfig::new(200));
+        let evicted = tbe.ensure_budget(&mut cache);
+        assert!(evicted > 0);
+        assert!(cache.live_tokens() <= 200);
+        // execution (importance 1) shrank before reasoning (importance 2)
+        assert!(cache.segments[s_e].evict_level >= 1);
+        assert_eq!(
+            cache.tables[0].segment_slots(s_r).len()
+                + cache.tables[0].segment_slots(s_e).len()
+                + 32,
+            cache.live_tokens()
+        );
+        cache.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn case2_never_touches_active_segment() {
+        let mut cache = mk_cache(256);
+        let mut rng = Rng::new(4);
+        let _s0 = fill_segment(&mut cache, &mut rng, Thought::Execution, 0, 128);
+        let active = fill_segment(&mut cache, &mut rng, Thought::Transition, 128, 64);
+        let mut tbe = Tbe::new(TbeConfig::new(100));
+        tbe.ensure_budget(&mut cache);
+        assert_eq!(cache.tables[0].segment_slots(active).len(), 64);
+        cache.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_curve_is_sawtooth() {
+        // Fig 10(b): live size grows within a segment, drops at transitions
+        let mut cache = mk_cache(2048);
+        let mut rng = Rng::new(5);
+        let mut tbe = Tbe::new(TbeConfig::new(4096));
+        let mut live_trace = Vec::new();
+        for seg_i in 0..6 {
+            let th = if seg_i % 3 == 2 { Thought::Transition } else { Thought::Reasoning };
+            let seg = fill_segment(&mut cache, &mut rng, th, seg_i * 128, 128);
+            live_trace.push(cache.live_tokens());
+            if th == Thought::Transition {
+                tbe.on_transition_end(&mut cache, seg);
+                live_trace.push(cache.live_tokens());
+            }
+        }
+        // at least one drop following a transition
+        assert!(live_trace.windows(2).any(|w| w[1] < w[0]), "{live_trace:?}");
+        assert!(tbe.stats.anneal_calls > 0);
+    }
+
+    #[test]
+    fn stats_call_rate() {
+        let mut tbe = Tbe::new(TbeConfig::new(10));
+        for _ in 0..100 {
+            tbe.tick();
+        }
+        tbe.stats.active_steps = 5;
+        assert!((tbe.stats.call_rate() - 0.05).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,148 @@
+//! TBQ — Think Before you Quantize (paper §4.2, Problem Formulation 1).
+//!
+//! The importance function rho (R=2 > E=1 > T=0) induces a monotone mapping
+//! ψ: thought → precision from the available set B = {2, 4, 8} bits.
+//! Default assignment is the paper's production choice **R4E4T2**
+//! (R tokens hold accuracy at 4 bits, §6.2); the evaluation sweeps the full
+//! RxEyTz grid (Figure 11b).
+
+use crate::kvcache::Thought;
+use crate::quant::Precision;
+
+/// A full RxEyTz assignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrecisionAssignment {
+    pub r: Precision,
+    pub e: Precision,
+    pub t: Precision,
+}
+
+impl PrecisionAssignment {
+    /// The paper's default R4E4T2.
+    pub fn r4e4t2() -> PrecisionAssignment {
+        PrecisionAssignment {
+            r: Precision::Nvfp4,
+            e: Precision::Nvfp4,
+            t: Precision::Ternary,
+        }
+    }
+
+    /// Highest-fidelity assignment R8E4T2 (the rho-ordered mapping).
+    pub fn r8e4t2() -> PrecisionAssignment {
+        PrecisionAssignment {
+            r: Precision::Fp8,
+            e: Precision::Nvfp4,
+            t: Precision::Ternary,
+        }
+    }
+
+    /// Parse "R4E4T2"-style names (Figure 11b sweeps).
+    pub fn parse(s: &str) -> Option<PrecisionAssignment> {
+        let b = s.as_bytes();
+        if b.len() != 6 || b[0] != b'R' || b[2] != b'E' || b[4] != b'T' {
+            return None;
+        }
+        let bit = |c: u8| -> Option<Precision> {
+            match c {
+                b'2' => Some(Precision::Ternary),
+                b'4' => Some(Precision::Nvfp4),
+                b'8' => Some(Precision::Fp8),
+                _ => None,
+            }
+        };
+        Some(PrecisionAssignment { r: bit(b[1])?, e: bit(b[3])?, t: bit(b[5])? })
+    }
+
+    pub fn name(&self) -> String {
+        format!(
+            "R{}E{}T{}",
+            self.r.bits() as usize,
+            self.e.bits() as usize,
+            self.t.bits() as usize
+        )
+    }
+
+    /// ψ must be monotone in rho: rho(R) > rho(E) > rho(T) implies
+    /// bits(R) >= bits(E) >= bits(T) (Problem Formulation 1).
+    pub fn is_monotone(&self) -> bool {
+        self.r.bits() >= self.e.bits() && self.e.bits() >= self.t.bits()
+    }
+}
+
+/// The TBQ policy object handed to the cache flush path.
+#[derive(Debug, Clone)]
+pub struct Tbq {
+    pub assignment: PrecisionAssignment,
+    /// Uniform override (KIVI-style baselines reuse the machinery).
+    pub uniform: Option<Precision>,
+}
+
+impl Tbq {
+    pub fn new(assignment: PrecisionAssignment) -> Tbq {
+        Tbq { assignment, uniform: None }
+    }
+
+    pub fn uniform(p: Precision) -> Tbq {
+        Tbq {
+            assignment: PrecisionAssignment::r4e4t2(),
+            uniform: Some(p),
+        }
+    }
+
+    /// ψ(thought).
+    pub fn psi(&self, t: Thought) -> Precision {
+        if let Some(u) = self.uniform {
+            return u;
+        }
+        match t {
+            Thought::Reasoning => self.assignment.r,
+            Thought::Execution => self.assignment.e,
+            Thought::Transition => self.assignment.t,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_r4e4t2_and_monotone() {
+        let a = PrecisionAssignment::r4e4t2();
+        assert_eq!(a.name(), "R4E4T2");
+        assert!(a.is_monotone());
+        assert!(PrecisionAssignment::r8e4t2().is_monotone());
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for name in ["R4E4T2", "R8E4T2", "R2E2T2", "R8E8T8", "R4E2T2"] {
+            let a = PrecisionAssignment::parse(name).unwrap();
+            assert_eq!(a.name(), name);
+        }
+        assert!(PrecisionAssignment::parse("X4E4T2").is_none());
+        assert!(PrecisionAssignment::parse("R5E4T2").is_none());
+    }
+
+    #[test]
+    fn psi_respects_assignment() {
+        let tbq = Tbq::new(PrecisionAssignment::r8e4t2());
+        assert_eq!(tbq.psi(Thought::Reasoning), Precision::Fp8);
+        assert_eq!(tbq.psi(Thought::Execution), Precision::Nvfp4);
+        assert_eq!(tbq.psi(Thought::Transition), Precision::Ternary);
+    }
+
+    #[test]
+    fn uniform_override() {
+        let tbq = Tbq::uniform(Precision::Ternary);
+        for t in crate::kvcache::Thought::ALL {
+            assert_eq!(tbq.psi(t), Precision::Ternary);
+        }
+    }
+
+    #[test]
+    fn monotonicity_detects_violation() {
+        let bad = PrecisionAssignment::parse("R2E4T8").unwrap();
+        assert!(!bad.is_monotone());
+    }
+}

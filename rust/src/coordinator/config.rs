@@ -1,0 +1,142 @@
+//! Serving configuration: which compression mode a session runs, budgets,
+//! sampling, worker counts.
+
+use crate::compress::tbq::PrecisionAssignment;
+use crate::quant::Precision;
+
+/// Which KV compression runs on the request path.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CompressionMode {
+    /// Uncompressed f32 cache (the FullKV baseline).
+    FullKv,
+    /// ThinKV: thought-adaptive TBQ + TBE over the CT cache.
+    ThinKv {
+        assignment: PrecisionAssignment,
+        /// Disable TBQ: f32... not representable on the quant path, so the
+        /// iso-compression ablation runs FP8 uniform instead (documented).
+        no_tbq: bool,
+        /// Disable TBE (quantization-only).
+        no_tbe: bool,
+    },
+    /// Eviction baseline over the f32 cache.
+    Evict(crate::sim::harness::EvictKind),
+    /// Uniform quantization baseline (KIVI) over the CT cache machinery.
+    Kivi(Precision),
+    /// Progressive quantization baseline (PM-KVQ).
+    PmKvq,
+}
+
+impl CompressionMode {
+    pub fn thinkv_default() -> CompressionMode {
+        CompressionMode::ThinKv {
+            assignment: PrecisionAssignment::r4e4t2(),
+            no_tbq: false,
+            no_tbe: false,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            CompressionMode::FullKv => "FullKV".into(),
+            CompressionMode::ThinKv { no_tbq: true, .. } => "ThinKV w/o TBQ".into(),
+            CompressionMode::ThinKv { no_tbe: true, .. } => "ThinKV w/o TBE".into(),
+            CompressionMode::ThinKv { assignment, .. } => format!("ThinKV {}", assignment.name()),
+            CompressionMode::Evict(k) => k.label().into(),
+            CompressionMode::Kivi(p) => format!("KIVI-{}", p.bits() as usize),
+            CompressionMode::PmKvq => "PM-KVQ".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CompressionMode> {
+        use crate::sim::harness::EvictKind as E;
+        Some(match s.to_ascii_lowercase().as_str() {
+            "fullkv" | "full" => CompressionMode::FullKv,
+            "thinkv" => CompressionMode::thinkv_default(),
+            "thinkv-notbq" => CompressionMode::ThinKv {
+                assignment: PrecisionAssignment::r4e4t2(),
+                no_tbq: true,
+                no_tbe: false,
+            },
+            "thinkv-notbe" => CompressionMode::ThinKv {
+                assignment: PrecisionAssignment::r4e4t2(),
+                no_tbq: false,
+                no_tbe: true,
+            },
+            "h2o" => CompressionMode::Evict(E::H2O),
+            "rkv" | "r-kv" => CompressionMode::Evict(E::Rkv),
+            "lazyeviction" | "lazy" => CompressionMode::Evict(E::LazyEviction),
+            "raas" => CompressionMode::Evict(E::RaaS),
+            "snapkv" => CompressionMode::Evict(E::SnapKv),
+            "streaming" | "streamingllm" => CompressionMode::Evict(E::StreamingLlm),
+            "kivi2" | "kivi-2" => CompressionMode::Kivi(Precision::Ternary),
+            "kivi4" | "kivi-4" => CompressionMode::Kivi(Precision::Nvfp4),
+            "pmkvq" | "pm-kvq" => CompressionMode::PmKvq,
+            _ => return None,
+        })
+    }
+}
+
+/// Top-level serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub mode: CompressionMode,
+    /// KV cache token budget k.
+    pub budget: usize,
+    /// Compiled cache capacity to use (>= budget; picked from manifest).
+    pub capacity: Option<usize>,
+    pub max_new_tokens: usize,
+    /// Thought refresh interval τ.
+    pub refresh: usize,
+    /// Retention schedule R.
+    pub retention: Vec<usize>,
+    /// Decode workers (PJRT engines).
+    pub workers: usize,
+    /// Steps each worker advances a session before re-queueing
+    /// (continuous-batching chunk).
+    pub chunk: usize,
+    /// Sampling temperature (0 = greedy).
+    pub temperature: f64,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            mode: CompressionMode::thinkv_default(),
+            budget: 1024,
+            capacity: None,
+            max_new_tokens: 192,
+            refresh: 128,
+            retention: vec![64, 32, 16, 8, 4],
+            workers: 2,
+            chunk: 16,
+            temperature: 0.8,
+            seed: 42,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for s in ["fullkv", "thinkv", "h2o", "rkv", "kivi2", "kivi4", "pmkvq", "raas"] {
+            assert!(CompressionMode::parse(s).is_some(), "{s}");
+        }
+        assert!(CompressionMode::parse("nope").is_none());
+    }
+
+    #[test]
+    fn labels_distinct() {
+        let labels: Vec<String> = [
+            "fullkv", "thinkv", "thinkv-notbq", "thinkv-notbe", "h2o", "kivi2",
+        ]
+        .iter()
+        .map(|s| CompressionMode::parse(s).unwrap().label())
+        .collect();
+        let set: std::collections::BTreeSet<_> = labels.iter().collect();
+        assert_eq!(set.len(), labels.len());
+    }
+}

@@ -1,0 +1,238 @@
+//! The continuous-batching engine loop: a shared run queue of sessions, N
+//! worker threads each owning a PJRT engine, chunked round-robin decode.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+
+use anyhow::Result;
+
+use crate::metrics::Breakdown;
+use crate::runtime::Engine;
+
+use super::config::ServeConfig;
+use super::session::Session;
+
+/// Final outcome of a request.
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub ttft_ms: f64,
+    pub total_ms: f64,
+    pub tpot_ms: f64,
+    pub breakdown: Breakdown,
+    pub avg_bits: f64,
+    pub live_tokens: usize,
+    pub ct_reuses: u64,
+    pub tbe_call_rate: f64,
+    pub gather_calls: u64,
+    pub gather_bytes: u64,
+}
+
+/// Handle for awaiting one submitted request.
+pub struct RequestHandle {
+    pub id: u64,
+    rx: mpsc::Receiver<RequestResult>,
+}
+
+impl RequestHandle {
+    pub fn wait(self) -> Result<RequestResult> {
+        Ok(self.rx.recv()?)
+    }
+}
+
+struct Queued {
+    session: Session,
+    done_tx: mpsc::Sender<RequestResult>,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Queued>>,
+    cv: Condvar,
+    stop: AtomicBool,
+    inflight: AtomicU64,
+}
+
+/// The serving coordinator (leader): owns the run queue and the workers.
+pub struct Coordinator {
+    cfg: ServeConfig,
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+    manifest: crate::model::Manifest,
+}
+
+impl Coordinator {
+    pub fn start(cfg: ServeConfig) -> Result<Coordinator> {
+        Coordinator::start_with_dir(cfg, &crate::model::default_artifacts_dir())
+    }
+
+    pub fn start_with_dir(cfg: ServeConfig, artifacts_dir: &str) -> Result<Coordinator> {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            inflight: AtomicU64::new(0),
+        });
+        let mut workers = Vec::new();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        for w in 0..cfg.workers.max(1) {
+            let shared = Arc::clone(&shared);
+            let chunk = cfg.chunk.max(1);
+            let dir = artifacts_dir.to_string();
+            let ready = ready_tx.clone();
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("thinkv-decode-{w}"))
+                    .spawn(move || {
+                        let engine = match Engine::with_dir(&dir) {
+                            Ok(e) => {
+                                let _ = ready.send(Ok(()));
+                                e
+                            }
+                            Err(e) => {
+                                let _ = ready.send(Err(e));
+                                return;
+                            }
+                        };
+                        worker_loop(&shared, &engine, chunk);
+                    })
+                    .expect("spawn decode worker"),
+            );
+        }
+        drop(ready_tx);
+        for _ in 0..cfg.workers.max(1) {
+            ready_rx.recv()??;
+        }
+        Ok(Coordinator {
+            cfg,
+            shared,
+            workers,
+            next_id: AtomicU64::new(1),
+            manifest: crate::model::Manifest::load(artifacts_dir)?,
+        })
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Submit a prompt; returns a handle to await the result.
+    pub fn submit(&self, prompt: Vec<i32>) -> Result<RequestHandle> {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = mpsc::channel();
+        let queued = Queued {
+            session: Session::new(id, prompt, &self.cfg, &self.manifest)?,
+            done_tx: tx,
+        };
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(queued);
+            self.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        }
+        self.shared.cv.notify_one();
+        Ok(RequestHandle { id, rx })
+    }
+
+    /// Submit many prompts and wait for all (batch experiments).
+    pub fn run_batch(&self, prompts: Vec<Vec<i32>>) -> Result<Vec<RequestResult>> {
+        let handles: Vec<RequestHandle> = prompts
+            .into_iter()
+            .map(|p| self.submit(p))
+            .collect::<Result<Vec<_>>>()?;
+        handles.into_iter().map(|h| h.wait()).collect()
+    }
+
+    pub fn inflight(&self) -> u64 {
+        self.shared.inflight.load(Ordering::SeqCst)
+    }
+
+    pub fn shutdown(mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, engine: &Engine, chunk: usize) {
+    loop {
+        let mut item = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(item) = q.pop_front() {
+                    break item;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        // advance by up to `chunk` steps (continuous-batching quantum)
+        let mut running = true;
+        for _ in 0..chunk {
+            match item.session.step(engine) {
+                Ok(true) => {}
+                Ok(false) => {
+                    running = false;
+                    break;
+                }
+                Err(e) => {
+                    eprintln!("session {} failed: {e:#}", item.session.id);
+                    item.session.finished_at = Some(std::time::Instant::now());
+                    running = false;
+                    break;
+                }
+            }
+        }
+        if running {
+            let mut q = shared.queue.lock().unwrap();
+            q.push_back(item);
+            shared.cv.notify_one();
+        } else {
+            let s = &item.session;
+            let total_ms = s
+                .finished_at
+                .unwrap_or_else(std::time::Instant::now)
+                .duration_since(s.created)
+                .as_secs_f64()
+                * 1e3;
+            let ttft_ms = s
+                .first_token_at
+                .map(|t| t.duration_since(s.created).as_secs_f64() * 1e3)
+                .unwrap_or(total_ms);
+            let n = s.tokens.len().max(1) as f64;
+            let (gather_calls, gather_bytes, _) = s.gather_stats();
+            let result = RequestResult {
+                id: s.id,
+                tokens: s.tokens.clone(),
+                ttft_ms,
+                total_ms,
+                tpot_ms: (total_ms - ttft_ms).max(0.0) / n,
+                breakdown: s.breakdown.clone(),
+                avg_bits: s.avg_bits(),
+                live_tokens: s.live_tokens(),
+                ct_reuses: s.ct_reuse_count(),
+                tbe_call_rate: s.tbe_stats().map(|t| t.call_rate()).unwrap_or(0.0),
+                gather_calls,
+                gather_bytes,
+            };
+            let _ = item.done_tx.send(result);
+            shared.inflight.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! The L3 serving coordinator: request router, continuous batcher, and the
+//! per-request decode sessions that drive the PJRT engine.
+//!
+//! Architecture (vLLM-router-like): a shared FIFO of [`session::Session`]s;
+//! N worker threads each own a PJRT [`crate::runtime::Engine`] (the handles
+//! are not Sync) and repeatedly pull a session, advance it by a chunk of
+//! decode steps, and push it back — continuous batching at chunk
+//! granularity. Completed sessions are delivered to the submitter through
+//! a channel. Python is never involved: the engines execute the AOT HLO
+//! artifacts only.
+
+pub mod config;
+pub mod engine_loop;
+pub mod sampler;
+pub mod session;
+
+pub use config::{CompressionMode, ServeConfig};
+pub use engine_loop::{Coordinator, RequestHandle, RequestResult};
+pub use sampler::Sampler;
+pub use session::Session;

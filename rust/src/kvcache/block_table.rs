@@ -1,0 +1,433 @@
+//! The Continuous-Thinking block table (paper §5.2, Figure 6).
+//!
+//! Per layer and per request: a list of allocated physical blocks with the
+//! paper's extended fields. A *slot* is one token's KV position inside the
+//! request's slab (`slot = phys_block * block_size + offset`).
+//!
+//! New-vs-PagedAttention fields (green in Figure 6):
+//! * `thought`: the thought type of every token in the block — CT enforces
+//!   **thought-aware paging** (a block only ever holds one thought type).
+//! * `start_indices`: CoT start position of each segment stored in the block.
+//! * `segment_mask`: per-slot index into `start_indices` (the paper's bit
+//!   vectors, stored densely; `segment_bitmask()` renders the paper's view).
+//! * `eviction_mask`: bit per slot, set by TBE soft-eviction, cleared when
+//!   the slot is reused in place by a new token.
+
+use super::Thought;
+
+pub type SlotId = usize;
+
+/// One physical block's CT metadata.
+#[derive(Debug, Clone)]
+pub struct BlockEntry {
+    /// Physical block index inside the request slab.
+    pub phys: usize,
+    /// Number of slots ever filled (never decreases; reuse overwrites).
+    pub filled: usize,
+    /// Thought type of all tokens in this block (thought-aware paging).
+    pub thought: Thought,
+    /// Start position (CoT token index) of each segment present.
+    pub start_indices: Vec<usize>,
+    /// Per-slot: index into `start_indices` (-1 = never filled).
+    pub segment_mask: Vec<i32>,
+    /// Bit i set => slot i soft-evicted (reclaimable).
+    pub eviction_mask: u64,
+}
+
+impl BlockEntry {
+    fn new(phys: usize, block_size: usize, thought: Thought) -> BlockEntry {
+        BlockEntry {
+            phys,
+            filled: 0,
+            thought,
+            start_indices: Vec::new(),
+            segment_mask: vec![-1; block_size],
+            eviction_mask: 0,
+        }
+    }
+
+    pub fn is_evicted(&self, offset: usize) -> bool {
+        self.eviction_mask & (1 << offset) != 0
+    }
+
+    /// The paper's per-start-index bit vector view of `segment_mask`.
+    pub fn segment_bitmask(&self, start_index_pos: usize) -> u64 {
+        let mut bits = 0u64;
+        for (i, &seg) in self.segment_mask.iter().enumerate() {
+            if seg == start_index_pos as i32 {
+                bits |= 1 << i;
+            }
+        }
+        bits
+    }
+
+    /// Live (filled, not evicted) slot count.
+    pub fn live(&self) -> usize {
+        (0..self.filled).filter(|&i| !self.is_evicted(i)).count()
+    }
+}
+
+/// Where a token landed and whether it reclaimed an evicted slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    pub slot: SlotId,
+    pub reused: bool,
+}
+
+/// Per-layer CT block table over a slab of `capacity` slots.
+#[derive(Debug, Clone)]
+pub struct LayerTable {
+    pub block_size: usize,
+    pub capacity: usize,
+    pub blocks: Vec<BlockEntry>,
+    free_blocks: Vec<usize>,
+    /// Per-slot segment id (request-level segment numbering), -1 if dead.
+    pub slot_segment: Vec<i32>,
+    /// Per-slot CoT position, -1 if dead.
+    pub slot_pos: Vec<i32>,
+    /// Count of live slots.
+    live: usize,
+    /// Telemetry: in-place reuses vs fresh allocations (CT's win).
+    pub reuse_count: u64,
+    pub alloc_count: u64,
+}
+
+impl LayerTable {
+    pub fn new(capacity: usize, block_size: usize) -> LayerTable {
+        assert!(capacity % block_size == 0);
+        assert!(block_size <= 64, "eviction mask is a u64 bit vector");
+        LayerTable {
+            block_size,
+            capacity,
+            blocks: Vec::new(),
+            free_blocks: (0..capacity / block_size).rev().collect(),
+            slot_segment: vec![-1; capacity],
+            slot_pos: vec![-1; capacity],
+            live: 0,
+            reuse_count: 0,
+            alloc_count: 0,
+        }
+    }
+
+    pub fn live_slots(&self) -> usize {
+        self.live
+    }
+
+    pub fn allocated_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn free_blocks_left(&self) -> usize {
+        self.free_blocks.len()
+    }
+
+    /// Place one token of `thought` / `segment` / CoT `pos`.
+    ///
+    /// CT policy (Figure 6 walkthrough):
+    /// 1. reuse an eviction-marked slot in a block of the same thought type;
+    /// 2. else append into a partially-filled block of the same thought type
+    ///    (never into another thought's block — thought-aware paging);
+    /// 3. else allocate a fresh physical block.
+    /// Returns None when the slab is exhausted (caller must evict first).
+    pub fn place(
+        &mut self,
+        thought: Thought,
+        segment: usize,
+        pos: usize,
+    ) -> Option<Placement> {
+        // (1) reclaim a soft-evicted slot of the same thought type
+        for b in self.blocks.iter_mut() {
+            if b.thought != thought || b.eviction_mask == 0 {
+                continue;
+            }
+            let offset = (0..b.filled).find(|&i| b.is_evicted(i)).expect("mask non-empty");
+            b.eviction_mask &= !(1 << offset);
+            Self::note_segment(b, offset, segment, pos);
+            let slot = b.phys * self.block_size + offset;
+            self.slot_segment[slot] = segment as i32;
+            self.slot_pos[slot] = pos as i32;
+            self.live += 1;
+            self.reuse_count += 1;
+            return Some(Placement { slot, reused: true });
+        }
+        // (2) append into a same-thought block with room
+        for b in self.blocks.iter_mut() {
+            if b.thought != thought || b.filled >= self.block_size {
+                continue;
+            }
+            let offset = b.filled;
+            b.filled += 1;
+            Self::note_segment(b, offset, segment, pos);
+            let slot = b.phys * self.block_size + offset;
+            self.slot_segment[slot] = segment as i32;
+            self.slot_pos[slot] = pos as i32;
+            self.live += 1;
+            return Some(Placement { slot, reused: false });
+        }
+        // (2.5) recycle a fully-evicted block (possibly of another thought
+        // type): every slot is reclaimable, so the block is reset wholesale.
+        // Without this, thought-aware paging would strand dead blocks.
+        if let Some(bi) = self
+            .blocks
+            .iter()
+            .position(|b| b.filled > 0 && b.live() == 0)
+        {
+            let phys = self.blocks[bi].phys;
+            let mut b = BlockEntry::new(phys, self.block_size, thought);
+            b.filled = 1;
+            Self::note_segment(&mut b, 0, segment, pos);
+            self.blocks[bi] = b;
+            let slot = phys * self.block_size;
+            self.slot_segment[slot] = segment as i32;
+            self.slot_pos[slot] = pos as i32;
+            self.live += 1;
+            self.reuse_count += 1;
+            return Some(Placement { slot, reused: true });
+        }
+        // (3) allocate a fresh block
+        let phys = self.free_blocks.pop()?;
+        let mut b = BlockEntry::new(phys, self.block_size, thought);
+        b.filled = 1;
+        Self::note_segment(&mut b, 0, segment, pos);
+        let slot = phys * self.block_size;
+        self.blocks.push(b);
+        self.slot_segment[slot] = segment as i32;
+        self.slot_pos[slot] = pos as i32;
+        self.live += 1;
+        self.alloc_count += 1;
+        Some(Placement { slot, reused: false })
+    }
+
+    fn note_segment(b: &mut BlockEntry, offset: usize, segment: usize, _pos: usize) {
+        // `start_indices` records each segment that has tokens in this block
+        // (keyed by the request-level segment id, whose start position the
+        // segment store holds); `segment_mask` maps slots to that entry.
+        let idx = match b.start_indices.iter().position(|&s| s == segment) {
+            Some(i) => i,
+            None => {
+                b.start_indices.push(segment);
+                b.start_indices.len() - 1
+            }
+        };
+        b.segment_mask[offset] = idx as i32;
+    }
+
+    /// Soft-evict a slot (TBE): flips the eviction bit; the slot's payload
+    /// stays in memory until a new token reuses it.
+    pub fn soft_evict(&mut self, slot: SlotId) {
+        let (bi, offset) = self.locate(slot).expect("slot is live");
+        let b = &mut self.blocks[bi];
+        assert!(!b.is_evicted(offset), "double eviction of slot {slot}");
+        b.eviction_mask |= 1 << offset;
+        self.slot_segment[slot] = -1;
+        self.slot_pos[slot] = -1;
+        self.live -= 1;
+    }
+
+    fn locate(&self, slot: SlotId) -> Option<(usize, usize)> {
+        let phys = slot / self.block_size;
+        let offset = slot % self.block_size;
+        let bi = self.blocks.iter().position(|b| b.phys == phys)?;
+        (offset < self.blocks[bi].filled).then_some((bi, offset))
+    }
+
+    /// Live slots of a given segment.
+    pub fn segment_slots(&self, segment: usize) -> Vec<SlotId> {
+        self.slot_segment
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s == segment as i32)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// All live slots.
+    pub fn live_slot_ids(&self) -> Vec<SlotId> {
+        self.slot_segment
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s >= 0)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Internal-consistency check used by property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut live = 0;
+        let mut seen_phys = std::collections::BTreeSet::new();
+        for b in &self.blocks {
+            if !seen_phys.insert(b.phys) {
+                return Err(format!("duplicate phys block {}", b.phys));
+            }
+            if self.free_blocks.contains(&b.phys) {
+                return Err(format!("block {} both allocated and free", b.phys));
+            }
+            if b.filled > self.block_size {
+                return Err("overfilled block".into());
+            }
+            for i in 0..self.block_size {
+                let slot = b.phys * self.block_size + i;
+                let seg = self.slot_segment[slot];
+                if i < b.filled && !b.is_evicted(i) {
+                    if seg < 0 {
+                        return Err(format!("live slot {slot} has no segment"));
+                    }
+                    if b.segment_mask[i] < 0 {
+                        return Err(format!("live slot {slot} missing segment mask"));
+                    }
+                    live += 1;
+                } else if seg >= 0 {
+                    return Err(format!("dead slot {slot} has segment {seg}"));
+                }
+            }
+            if b.eviction_mask >> b.filled != 0 {
+                return Err("eviction bit beyond filled region".into());
+            }
+        }
+        if live != self.live {
+            return Err(format!("live count drift: counted {live}, cached {}", self.live));
+        }
+        // slots in unallocated blocks must be dead
+        for &phys in &self.free_blocks {
+            for i in 0..self.block_size {
+                if self.slot_segment[phys * self.block_size + i] >= 0 {
+                    return Err(format!("free block {phys} has live slot"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn place_fills_blocks_in_order() {
+        let mut t = LayerTable::new(32, 8);
+        for i in 0..8 {
+            let p = t.place(Thought::Reasoning, 0, i).unwrap();
+            assert!(!p.reused);
+        }
+        assert_eq!(t.allocated_blocks(), 1);
+        t.place(Thought::Reasoning, 0, 8).unwrap();
+        assert_eq!(t.allocated_blocks(), 2);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn thought_aware_paging_never_mixes() {
+        let mut t = LayerTable::new(64, 8);
+        for i in 0..4 {
+            t.place(Thought::Reasoning, 0, i).unwrap();
+        }
+        for i in 4..8 {
+            t.place(Thought::Execution, 1, i).unwrap();
+        }
+        assert_eq!(t.allocated_blocks(), 2); // E must not join R's half-full block
+        for b in &t.blocks {
+            let slots: Vec<_> = (0..b.filled).collect();
+            assert!(!slots.is_empty());
+        }
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn soft_evict_then_reuse_in_place() {
+        let mut t = LayerTable::new(16, 8);
+        let p0 = t.place(Thought::Transition, 0, 0).unwrap();
+        let _p1 = t.place(Thought::Transition, 0, 1).unwrap();
+        t.soft_evict(p0.slot);
+        assert_eq!(t.live_slots(), 1);
+        // same thought type reclaims the hole
+        let p2 = t.place(Thought::Transition, 2, 100).unwrap();
+        assert!(p2.reused);
+        assert_eq!(p2.slot, p0.slot);
+        assert_eq!(t.reuse_count, 1);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn other_thought_does_not_reclaim_partial_block() {
+        let mut t = LayerTable::new(16, 8);
+        let p0 = t.place(Thought::Transition, 0, 0).unwrap();
+        let _p1 = t.place(Thought::Transition, 0, 1).unwrap(); // keeps block alive
+        t.soft_evict(p0.slot);
+        let p2 = t.place(Thought::Reasoning, 1, 2).unwrap();
+        assert!(!p2.reused);
+        assert_ne!(p2.slot / 8, p0.slot / 8); // landed in a different block
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fully_dead_block_is_recycled_across_thoughts() {
+        let mut t = LayerTable::new(8, 8); // a single block
+        let p0 = t.place(Thought::Transition, 0, 0).unwrap();
+        t.soft_evict(p0.slot);
+        // T block is fully dead; an R token may recycle it wholesale
+        let p1 = t.place(Thought::Reasoning, 1, 1).unwrap();
+        assert!(p1.reused);
+        assert_eq!(t.blocks.len(), 1);
+        assert_eq!(t.blocks[0].thought, Thought::Reasoning);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut t = LayerTable::new(16, 8);
+        for i in 0..16 {
+            assert!(t.place(Thought::Execution, 0, i).is_some());
+        }
+        assert!(t.place(Thought::Execution, 0, 99).is_none());
+        // but eviction frees capacity
+        t.soft_evict(3);
+        assert!(t.place(Thought::Execution, 1, 99).is_some());
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn segment_bitmask_matches_mask() {
+        let mut t = LayerTable::new(16, 8);
+        for i in 0..4 {
+            t.place(Thought::Reasoning, 0, i).unwrap();
+        }
+        for i in 4..6 {
+            t.place(Thought::Reasoning, 7, 128 + i).unwrap();
+        }
+        let b = &t.blocks[0];
+        assert_eq!(b.start_indices.len(), 2);
+        assert_eq!(b.segment_bitmask(0), 0b001111);
+        assert_eq!(b.segment_bitmask(1), 0b110000);
+    }
+
+    #[test]
+    fn property_random_ops_keep_invariants() {
+        prop::check(60, |g| {
+            let bs = *g.pick(&[4usize, 8, 16]);
+            let cap = bs * g.usize(2, 8);
+            let mut t = LayerTable::new(cap, bs);
+            let mut live: Vec<SlotId> = Vec::new();
+            let mut pos = 0usize;
+            for step in 0..g.usize(20, 120) {
+                if g.chance(0.7) {
+                    let th = *g.pick(&Thought::ALL);
+                    if let Some(p) = t.place(th, step / 10, pos) {
+                        live.push(p.slot);
+                        pos += 1;
+                    }
+                } else if !live.is_empty() {
+                    let i = g.usize(0, live.len() - 1);
+                    let slot = live.swap_remove(i);
+                    t.soft_evict(slot);
+                }
+                t.check_invariants().map_err(|e| format!("step {step}: {e}"))?;
+            }
+            if t.live_slots() != live.len() {
+                return Err("live count mismatch with model".into());
+            }
+            Ok(())
+        });
+    }
+}

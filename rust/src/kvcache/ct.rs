@@ -1,0 +1,569 @@
+//! [`CtCache`]: the per-request quantized paged cache a decode session owns.
+//!
+//! Combines (per layer) a [`LayerTable`] with the engine-facing slabs
+//! (`k_codes/k_scales/v_codes/v_scales/tags/mask`) plus the shared
+//! full-precision ring buffer B_buf (§4.2).  The coordinator calls:
+//!
+//! * [`CtCache::write_prefill`] — quantize prompt K/V (treated as **R**
+//!   thoughts per §6.1) straight into slots.
+//! * [`CtCache::push_token`] — stash one decode token's K/V in B_buf; when
+//!   the buffer reaches the group size it is flushed: each token is group
+//!   quantized at its thought's precision (TBQ) and placed by CT.
+//! * [`CtCache::soft_evict_slots`] — TBE soft eviction (mask goes 0, slot
+//!   becomes reclaimable, payload left in place).
+//!
+//! The `mask` slab the kernel sees is exactly `filled ∧ ¬evicted`.
+
+use crate::quant::{dequant_groups, quant_groups, Precision, GROUP_SIZE};
+use crate::runtime::QuantCache;
+
+use super::block_table::{LayerTable, SlotId};
+use super::Thought;
+
+/// Geometry of a request's cache (from the manifest + serving config).
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    pub layers: usize,
+    pub capacity: usize,
+    pub block_size: usize,
+    pub hkv: usize,
+    pub dh: usize,
+    pub buf_slots: usize,
+}
+
+impl CacheConfig {
+    pub fn groups(&self) -> usize {
+        self.dh / GROUP_SIZE
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.hkv * self.dh
+    }
+}
+
+/// A thought segment (contiguous CoT span of one thought type, §3.1 fn.3).
+#[derive(Debug, Clone)]
+pub struct SegmentInfo {
+    pub id: usize,
+    pub thought: Thought,
+    pub start_pos: usize,
+    pub end_pos: usize, // exclusive; grows while the segment is active
+    /// Times this segment has been selected for eviction (annealing level n).
+    pub evict_level: usize,
+}
+
+/// One buffered (not yet quantized) token.
+#[derive(Debug, Clone)]
+struct BufToken {
+    pos: usize,
+    segment: usize,
+    thought: Thought,
+}
+
+/// The per-request Continuous-Thinking cache.
+pub struct CtCache {
+    pub cfg: CacheConfig,
+    // engine-facing slabs, flattened [L, C, ...]
+    pub k_codes: Vec<u8>,
+    pub k_scales: Vec<f32>,
+    pub v_codes: Vec<u8>,
+    pub v_scales: Vec<f32>,
+    pub tags: Vec<u8>,
+    pub mask: Vec<f32>,
+    pub buf_k: Vec<f32>,
+    pub buf_v: Vec<f32>,
+    pub buf_mask: Vec<f32>,
+    // CT block tables, one per layer
+    pub tables: Vec<LayerTable>,
+    pub segments: Vec<SegmentInfo>,
+    buffered: Vec<BufToken>,
+    /// Cumulative packed bits written (memory-footprint accounting).
+    pub packed_bits_written: f64,
+    pub tokens_written: u64,
+}
+
+impl CtCache {
+    pub fn new(cfg: CacheConfig) -> CtCache {
+        let (l, c, hkv, dh, b) = (cfg.layers, cfg.capacity, cfg.hkv, cfg.dh, cfg.buf_slots);
+        let g = cfg.groups();
+        CtCache {
+            tables: (0..l).map(|_| LayerTable::new(c, cfg.block_size)).collect(),
+            k_codes: vec![0; l * c * hkv * dh],
+            k_scales: vec![0.0; l * c * hkv * g],
+            v_codes: vec![0; l * c * hkv * dh],
+            v_scales: vec![0.0; l * c * hkv * g],
+            tags: vec![0; l * c],
+            mask: vec![0.0; l * c],
+            buf_k: vec![0.0; l * b * hkv * dh],
+            buf_v: vec![0.0; l * b * hkv * dh],
+            buf_mask: vec![0.0; l * b],
+            segments: Vec::new(),
+            buffered: Vec::new(),
+            packed_bits_written: 0.0,
+            tokens_written: 0,
+            cfg,
+        }
+    }
+
+    /// Engine view of the slabs.
+    pub fn view(&self) -> QuantCache<'_> {
+        QuantCache {
+            capacity: self.cfg.capacity,
+            k_codes: &self.k_codes,
+            k_scales: &self.k_scales,
+            v_codes: &self.v_codes,
+            v_scales: &self.v_scales,
+            tags: &self.tags,
+            mask: &self.mask,
+            buf_k: &self.buf_k,
+            buf_v: &self.buf_v,
+            buf_mask: &self.buf_mask,
+        }
+    }
+
+    /// Index of the next free ring-buffer slot (what the decode step gets
+    /// as `buf_idx`).
+    pub fn buf_fill(&self) -> usize {
+        self.buffered.len()
+    }
+
+    /// Total live quantized slots in layer 0 (layers may diverge slightly
+    /// through per-layer k-means; layer 0 is the reporting reference).
+    pub fn live_tokens(&self) -> usize {
+        self.tables[0].live_slots()
+    }
+
+    pub fn live_tokens_layer(&self, l: usize) -> usize {
+        self.tables[l].live_slots()
+    }
+
+    /// Open a new thought segment at CoT position `pos`.
+    pub fn open_segment(&mut self, thought: Thought, pos: usize) -> usize {
+        let id = self.segments.len();
+        self.segments.push(SegmentInfo {
+            id,
+            thought,
+            start_pos: pos,
+            end_pos: pos,
+            evict_level: 0,
+        });
+        id
+    }
+
+    /// Quantize the prompt K/V (layer-major `[L, P, Hkv, Dh]`, post-RoPE)
+    /// into the cache as **Reasoning** thoughts at `prec` (paper treats
+    /// prefill tokens as R type, §6.1).
+    pub fn write_prefill(&mut self, k: &[f32], v: &[f32], p_len: usize, prec: Precision) {
+        let seg = self.open_segment(Thought::Reasoning, 0);
+        let kvd = self.cfg.kv_dim();
+        for pos in 0..p_len {
+            for l in 0..self.cfg.layers {
+                let base = (l * p_len + pos) * kvd;
+                self.write_slot(l, seg, Thought::Reasoning, pos, prec,
+                                &k[base..base + kvd], &v[base..base + kvd])
+                    .expect("prefill exceeds cache capacity");
+            }
+        }
+        self.segments[seg].end_pos = p_len;
+        self.tokens_written += p_len as u64;
+    }
+
+    /// Stash one decode token in the fp ring buffer. Returns true if the
+    /// buffer is full **after** the push — caller should `flush_buffer`
+    /// before the next decode step.
+    ///
+    /// `new_k`/`new_v` are `[L, Hkv, Dh]` from the decode step.
+    pub fn push_token(
+        &mut self,
+        new_k: &[f32],
+        new_v: &[f32],
+        pos: usize,
+        segment: usize,
+        thought: Thought,
+    ) -> bool {
+        let idx = self.buffered.len();
+        assert!(idx < self.cfg.buf_slots, "buffer overflow: flush first");
+        let kvd = self.cfg.kv_dim();
+        let b = self.cfg.buf_slots;
+        for l in 0..self.cfg.layers {
+            let dst = (l * b + idx) * kvd;
+            let src = l * kvd;
+            self.buf_k[dst..dst + kvd].copy_from_slice(&new_k[src..src + kvd]);
+            self.buf_v[dst..dst + kvd].copy_from_slice(&new_v[src..src + kvd]);
+            self.buf_mask[l * b + idx] = 1.0;
+        }
+        self.buffered.push(BufToken { pos, segment, thought });
+        self.segments[segment].end_pos = pos + 1;
+        self.tokens_written += 1;
+        self.buffered.len() == self.cfg.buf_slots
+    }
+
+    /// Group-quantize every buffered token at its thought's precision and
+    /// place it via CT. Returns Err(tokens_that_did_not_fit) if the slab is
+    /// exhausted — the coordinator must evict (TBE case 2) and retry.
+    pub fn flush_buffer(&mut self, psi: &dyn Fn(Thought) -> Precision) -> Result<(), usize> {
+        let kvd = self.cfg.kv_dim();
+        let b = self.cfg.buf_slots;
+        let toks = std::mem::take(&mut self.buffered);
+        for (idx, t) in toks.iter().enumerate() {
+            let prec = psi(t.thought);
+            // Per-token atomicity across layers: if any layer cannot place,
+            // un-write the layers already written for this token, re-buffer
+            // the remainder, and report how many tokens did not fit.
+            let mut written: Vec<(usize, SlotId)> = Vec::with_capacity(self.cfg.layers);
+            let mut ok = true;
+            for l in 0..self.cfg.layers {
+                let src = (l * b + idx) * kvd;
+                let k = self.buf_k[src..src + kvd].to_vec();
+                let v = self.buf_v[src..src + kvd].to_vec();
+                match self.write_slot(l, t.segment, t.thought, t.pos, prec, &k, &v) {
+                    Some(slot) => written.push((l, slot)),
+                    None => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok {
+                for (l, slot) in written {
+                    self.tables[l].soft_evict(slot);
+                    self.mask[l * self.cfg.capacity + slot] = 0.0;
+                }
+                let remaining = toks.len() - idx;
+                self.buffered = toks[idx..].to_vec();
+                self.recompact_buffer(&toks[idx..].to_vec(), idx);
+                return Err(remaining);
+            }
+        }
+        for l in 0..self.cfg.layers {
+            for i in 0..b {
+                self.buf_mask[l * b + i] = 0.0;
+            }
+        }
+        Ok(())
+    }
+
+    fn recompact_buffer(&mut self, toks: &[BufToken], from_idx: usize) {
+        let kvd = self.cfg.kv_dim();
+        let b = self.cfg.buf_slots;
+        for l in 0..self.cfg.layers {
+            for (new_i, _t) in toks.iter().enumerate() {
+                let old = (l * b + from_idx + new_i) * kvd;
+                let new = (l * b + new_i) * kvd;
+                let (kf, vf): (Vec<f32>, Vec<f32>) = (
+                    self.buf_k[old..old + kvd].to_vec(),
+                    self.buf_v[old..old + kvd].to_vec(),
+                );
+                self.buf_k[new..new + kvd].copy_from_slice(&kf);
+                self.buf_v[new..new + kvd].copy_from_slice(&vf);
+            }
+            for i in 0..b {
+                self.buf_mask[l * b + i] = if i < toks.len() { 1.0 } else { 0.0 };
+            }
+        }
+    }
+
+    /// Quantize one token's K/V into a CT-chosen slot of layer `l`.
+    /// Returns the slot, or None when no slot is available.
+    fn write_slot(
+        &mut self,
+        l: usize,
+        segment: usize,
+        thought: Thought,
+        pos: usize,
+        prec: Precision,
+        k: &[f32],
+        v: &[f32],
+    ) -> Option<SlotId> {
+        let place = self.tables[l].place(thought, segment, pos)?;
+        let slot = place.slot;
+        let (c, kvd, g) = (self.cfg.capacity, self.cfg.kv_dim(), self.cfg.groups());
+        let code_base = (l * c + slot) * kvd;
+        let scale_base = (l * c + slot) * self.cfg.hkv * g;
+        quant_groups(k, prec, &mut self.k_codes[code_base..code_base + kvd],
+                     &mut self.k_scales[scale_base..scale_base + self.cfg.hkv * g]);
+        quant_groups(v, prec, &mut self.v_codes[code_base..code_base + kvd],
+                     &mut self.v_scales[scale_base..scale_base + self.cfg.hkv * g]);
+        self.tags[l * c + slot] = prec.tag();
+        self.mask[l * c + slot] = 1.0;
+        if l == 0 {
+            self.packed_bits_written +=
+                2.0 * kvd as f64 * crate::quant::packed_bits_per_elem(prec);
+        }
+        Some(slot)
+    }
+
+    /// TBE soft eviction of `slots` in layer `l` (mask drops to 0; payload
+    /// stays until a same-thought token reclaims the slot).
+    pub fn soft_evict_slots(&mut self, l: usize, slots: &[SlotId]) {
+        let c = self.cfg.capacity;
+        for &s in slots {
+            self.tables[l].soft_evict(s);
+            self.mask[l * c + s] = 0.0;
+        }
+    }
+
+    /// Dequantized post-RoPE key of a live slot (k-means input for pi).
+    pub fn dequant_key(&self, l: usize, slot: SlotId) -> Vec<f32> {
+        let (c, kvd, g) = (self.cfg.capacity, self.cfg.kv_dim(), self.cfg.groups());
+        let code_base = (l * c + slot) * kvd;
+        let scale_base = (l * c + slot) * self.cfg.hkv * g;
+        let prec = Precision::from_tag(self.tags[l * c + slot]);
+        let mut out = vec![0f32; kvd];
+        dequant_groups(
+            &self.k_codes[code_base..code_base + kvd],
+            &self.k_scales[scale_base..scale_base + self.cfg.hkv * g],
+            prec,
+            &mut out,
+        );
+        out
+    }
+
+    /// Average packed precision (bits/element) over everything written —
+    /// the paper's "average precision of 3.x bits" metric.
+    pub fn avg_bits_written(&self) -> f64 {
+        if self.tokens_written == 0 {
+            return 0.0;
+        }
+        self.packed_bits_written / (self.tokens_written as f64 * 2.0 * self.cfg.kv_dim() as f64)
+    }
+
+    /// Memory footprint (bytes) of the *live* cache under packed accounting,
+    /// including the fp32 ring buffer.
+    pub fn packed_bytes_live(&self) -> f64 {
+        let kvd = self.cfg.kv_dim() as f64;
+        let mut bits = 0.0;
+        let c = self.cfg.capacity;
+        for l in 0..self.cfg.layers {
+            for slot in self.tables[l].live_slot_ids() {
+                let prec = Precision::from_tag(self.tags[l * c + slot]);
+                bits += 2.0 * kvd * crate::quant::packed_bits_per_elem(prec);
+            }
+        }
+        let buf_bytes =
+            (self.cfg.layers * self.buffered.len() * 2 * self.cfg.kv_dim() * 4) as f64;
+        bits / 8.0 + buf_bytes
+    }
+
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let c = self.cfg.capacity;
+        for (l, t) in self.tables.iter().enumerate() {
+            t.check_invariants()?;
+            for slot in 0..c {
+                let live = t.slot_segment[slot] >= 0;
+                let m = self.mask[l * c + slot];
+                if live && m != 1.0 {
+                    return Err(format!("layer {l} slot {slot}: live but mask {m}"));
+                }
+                if !live && m != 0.0 {
+                    return Err(format!("layer {l} slot {slot}: dead but mask {m}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> CacheConfig {
+        CacheConfig {
+            layers: 2,
+            capacity: 64,
+            block_size: 8,
+            hkv: 2,
+            dh: 32,
+            buf_slots: 16,
+        }
+    }
+
+    fn rand_kv(rng: &mut Rng, cfg: &CacheConfig) -> (Vec<f32>, Vec<f32>) {
+        let n = cfg.layers * cfg.kv_dim();
+        let mut k = vec![0f32; n];
+        let mut v = vec![0f32; n];
+        rng.fill_normal_f32(&mut k, 0.0, 1.0);
+        rng.fill_normal_f32(&mut v, 0.0, 1.0);
+        (k, v)
+    }
+
+    #[test]
+    fn push_flush_roundtrip() {
+        let cfg = cfg();
+        let mut cache = CtCache::new(cfg.clone());
+        let mut rng = Rng::new(1);
+        let seg = cache.open_segment(Thought::Reasoning, 0);
+        let psi = |_t: Thought| Precision::Fp8;
+        for i in 0..16 {
+            let (k, v) = rand_kv(&mut rng, &cfg);
+            let full = cache.push_token(&k, &v, i, seg, Thought::Reasoning);
+            assert_eq!(full, i == 15);
+        }
+        cache.flush_buffer(&psi).unwrap();
+        assert_eq!(cache.live_tokens(), 16);
+        assert_eq!(cache.buf_fill(), 0);
+        cache.check_invariants().unwrap();
+        // mask slab agrees
+        let live_mask = cache.mask[..cfg.capacity].iter().filter(|&&m| m == 1.0).count();
+        assert_eq!(live_mask, 16);
+    }
+
+    #[test]
+    fn dequant_key_tracks_quantizer() {
+        let cfg = cfg();
+        let mut cache = CtCache::new(cfg.clone());
+        let mut rng = Rng::new(2);
+        let seg = cache.open_segment(Thought::Execution, 0);
+        let (k, v) = rand_kv(&mut rng, &cfg);
+        cache.push_token(&k, &v, 0, seg, Thought::Execution);
+        // force a flush of the single token
+        for i in 1..16 {
+            let (k2, v2) = rand_kv(&mut rng, &cfg);
+            cache.push_token(&k2, &v2, i, seg, Thought::Execution);
+        }
+        cache.flush_buffer(&|_| Precision::Fp8).unwrap();
+        // slot 0 of layer 0 holds token 0
+        let deq = cache.dequant_key(0, 0);
+        let err: f32 = deq
+            .iter()
+            .zip(&k[..cfg.kv_dim()])
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / deq.len() as f32;
+        assert!(err < 0.05, "fp8 roundtrip err {err}");
+    }
+
+    #[test]
+    fn eviction_drops_mask_and_reuse_restores() {
+        let cfg = cfg();
+        let mut cache = CtCache::new(cfg.clone());
+        let mut rng = Rng::new(3);
+        let seg = cache.open_segment(Thought::Transition, 0);
+        for i in 0..16 {
+            let (k, v) = rand_kv(&mut rng, &cfg);
+            cache.push_token(&k, &v, i, seg, Thought::Transition);
+        }
+        cache.flush_buffer(&|_| Precision::Ternary).unwrap();
+        let before = cache.live_tokens();
+        cache.soft_evict_slots(0, &[0, 1, 2]);
+        cache.soft_evict_slots(1, &[0, 1, 2]);
+        assert_eq!(cache.live_tokens(), before - 3);
+        cache.check_invariants().unwrap();
+        // new same-thought tokens reuse the slots in place
+        let seg2 = cache.open_segment(Thought::Transition, 128);
+        for i in 0..16 {
+            let (k, v) = rand_kv(&mut rng, &cfg);
+            cache.push_token(&k, &v, 128 + i, seg2, Thought::Transition);
+        }
+        cache.flush_buffer(&|_| Precision::Ternary).unwrap();
+        assert!(cache.tables[0].reuse_count >= 3);
+        cache.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn flush_fails_when_full_then_recovers() {
+        let cfg = CacheConfig { capacity: 16, ..cfg() };
+        let mut cache = CtCache::new(cfg.clone());
+        let mut rng = Rng::new(4);
+        let seg = cache.open_segment(Thought::Reasoning, 0);
+        for i in 0..16 {
+            let (k, v) = rand_kv(&mut rng, &cfg);
+            cache.push_token(&k, &v, i, seg, Thought::Reasoning);
+        }
+        cache.flush_buffer(&|_| Precision::Nvfp4).unwrap();
+        assert_eq!(cache.live_tokens(), 16);
+        // cache totally full: next flush must fail...
+        let seg2 = cache.open_segment(Thought::Reasoning, 16);
+        for i in 0..4 {
+            let (k, v) = rand_kv(&mut rng, &cfg);
+            cache.push_token(&k, &v, 16 + i, seg2, Thought::Reasoning);
+        }
+        let e = cache.flush_buffer(&|_| Precision::Nvfp4);
+        assert!(e.is_err());
+        // ...until TBE frees room
+        let slots: Vec<_> = cache.tables[0].segment_slots(seg)[..8].to_vec();
+        cache.soft_evict_slots(0, &slots);
+        let slots1: Vec<_> = cache.tables[1].segment_slots(seg)[..8].to_vec();
+        cache.soft_evict_slots(1, &slots1);
+        cache.flush_buffer(&|_| Precision::Nvfp4).unwrap();
+        cache.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn avg_bits_reflects_mixture() {
+        let cfg = cfg();
+        let mut cache = CtCache::new(cfg.clone());
+        let mut rng = Rng::new(5);
+        let psi = |t: Thought| match t {
+            Thought::Transition => Precision::Ternary,
+            _ => Precision::Nvfp4,
+        };
+        let seg = cache.open_segment(Thought::Reasoning, 0);
+        for i in 0..8 {
+            let (k, v) = rand_kv(&mut rng, &cfg);
+            cache.push_token(&k, &v, i, seg, Thought::Reasoning);
+        }
+        let seg2 = cache.open_segment(Thought::Transition, 8);
+        for i in 8..16 {
+            let (k, v) = rand_kv(&mut rng, &cfg);
+            cache.push_token(&k, &v, i, seg2, Thought::Transition);
+        }
+        cache.flush_buffer(&psi).unwrap();
+        let bits = cache.avg_bits_written();
+        assert!(bits > 2.5 && bits < 4.6, "avg bits {bits}");
+    }
+
+    #[test]
+    fn property_mask_always_consistent() {
+        prop::check(25, |g| {
+            let cfg = CacheConfig {
+                layers: 2,
+                capacity: 32,
+                block_size: 8,
+                hkv: 1,
+                dh: 16,
+                buf_slots: 16,
+            };
+            let mut cache = CtCache::new(cfg.clone());
+            let mut pos = 0usize;
+            let mut seg = cache.open_segment(Thought::Reasoning, 0);
+            let psi = |t: Thought| match t {
+                Thought::Transition => Precision::Ternary,
+                Thought::Execution => Precision::Nvfp4,
+                Thought::Reasoning => Precision::Fp8,
+            };
+            for _ in 0..g.usize(10, 60) {
+                if g.chance(0.08) {
+                    let th = *g.pick(&Thought::ALL);
+                    seg = cache.open_segment(th, pos);
+                }
+                let th = cache.segments[seg].thought;
+                let n = cfg.layers * cfg.kv_dim();
+                let k = g.vec_normal_f32(n, 0.0, 1.0);
+                let v = g.vec_normal_f32(n, 0.0, 1.0);
+                let full = cache.push_token(&k, &v, pos, seg, th);
+                pos += 1;
+                if full {
+                    // evict (like TBE case 2) until the flush fits
+                    let mut guard = 0;
+                    while cache.flush_buffer(&psi).is_err() {
+                        for l in 0..cfg.layers {
+                            let live = cache.tables[l].live_slot_ids();
+                            let take = (live.len() / 2).max(1).min(live.len());
+                            cache.soft_evict_slots(l, &live[..take]);
+                        }
+                        guard += 1;
+                        if guard > 8 {
+                            return Err("flush never succeeded".into());
+                        }
+                    }
+                }
+                cache.check_invariants()?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,342 @@
+//! F32 paged cache for FullKV and the eviction-only baselines (H2O, R-KV,
+//! RaaS, LazyEviction, SnapKV).
+//!
+//! Unlike [`super::ct::CtCache`], eviction here leaves *holes* that the
+//! baselines must handle the way the original systems do: H2O keeps a
+//! circular buffer (contiguous eviction only), R-KV runs **gather-based
+//! compaction** (§5.1) whose cost this module measures for Figure 7 /
+//! Table 5.
+
+use crate::runtime::DecodeOut;
+
+use super::block_table::SlotId;
+
+#[derive(Debug, Clone)]
+pub struct Fp32Cache {
+    pub layers: usize,
+    pub capacity: usize,
+    pub kv_dim: usize, // hkv * dh
+    pub buf_slots: usize,
+    pub k: Vec<f32>,    // [L, C, kv_dim]
+    pub v: Vec<f32>,    // [L, C, kv_dim]
+    pub mask: Vec<f32>, // [L, C]
+    /// CoT position of each slot, -1 = empty (shared across layers: the f32
+    /// baselines evict the same positions in every layer, as the originals
+    /// do with per-layer identical policies over pooled attention stats).
+    pub slot_pos: Vec<i32>, // [C]
+    pub buf_k: Vec<f32>,
+    pub buf_v: Vec<f32>,
+    pub buf_mask: Vec<f32>,
+    buffered: usize,
+    buffered_pos: Vec<usize>,
+    /// Gather statistics (bytes moved by compaction) for the cost model.
+    pub gather_bytes: u64,
+    pub gather_calls: u64,
+    pub gather_nanos: u64,
+}
+
+impl Fp32Cache {
+    pub fn new(layers: usize, capacity: usize, kv_dim: usize, buf_slots: usize) -> Fp32Cache {
+        Fp32Cache {
+            layers,
+            capacity,
+            kv_dim,
+            buf_slots,
+            k: vec![0.0; layers * capacity * kv_dim],
+            v: vec![0.0; layers * capacity * kv_dim],
+            mask: vec![0.0; layers * capacity],
+            slot_pos: vec![-1; capacity],
+            buf_k: vec![0.0; layers * buf_slots * kv_dim],
+            buf_v: vec![0.0; layers * buf_slots * kv_dim],
+            buf_mask: vec![0.0; layers * buf_slots],
+            buffered: 0,
+            buffered_pos: Vec::new(),
+            gather_bytes: 0,
+            gather_calls: 0,
+            gather_nanos: 0,
+        }
+    }
+
+    pub fn buf_fill(&self) -> usize {
+        self.buffered
+    }
+
+    pub fn live_tokens(&self) -> usize {
+        self.slot_pos.iter().filter(|&&p| p >= 0).count()
+    }
+
+    /// First free slot, if any.
+    pub fn free_slot(&self) -> Option<SlotId> {
+        self.slot_pos.iter().position(|&p| p < 0)
+    }
+
+    /// Write prompt K/V (`[L, P, kv_dim]`) into slots 0..P.
+    pub fn write_prefill(&mut self, k: &[f32], v: &[f32], p_len: usize) {
+        assert!(p_len <= self.capacity);
+        for l in 0..self.layers {
+            for pos in 0..p_len {
+                let src = (l * p_len + pos) * self.kv_dim;
+                self.write_slot_layer(l, pos, &k[src..src + self.kv_dim], &v[src..src + self.kv_dim]);
+            }
+        }
+        for pos in 0..p_len {
+            self.slot_pos[pos] = pos as i32;
+        }
+    }
+
+    fn write_slot_layer(&mut self, l: usize, slot: SlotId, k: &[f32], v: &[f32]) {
+        let base = (l * self.capacity + slot) * self.kv_dim;
+        self.k[base..base + self.kv_dim].copy_from_slice(k);
+        self.v[base..base + self.kv_dim].copy_from_slice(v);
+        self.mask[l * self.capacity + slot] = 1.0;
+    }
+
+    /// Stash one decode token (`new_k/new_v` are `[L, kv_dim]` from
+    /// [`DecodeOut`]); returns true when the buffer is full.
+    pub fn push_token(&mut self, out: &DecodeOut, pos: usize) -> bool {
+        let idx = self.buffered;
+        assert!(idx < self.buf_slots, "flush first");
+        for l in 0..self.layers {
+            let dst = (l * self.buf_slots + idx) * self.kv_dim;
+            let src = l * self.kv_dim;
+            self.buf_k[dst..dst + self.kv_dim].copy_from_slice(&out.new_k[src..src + self.kv_dim]);
+            self.buf_v[dst..dst + self.kv_dim].copy_from_slice(&out.new_v[src..src + self.kv_dim]);
+            self.buf_mask[l * self.buf_slots + idx] = 1.0;
+        }
+        self.buffered += 1;
+        self.buffered_pos.push(pos);
+        self.buffered == self.buf_slots
+    }
+
+    /// Move buffered tokens into free cache slots. Returns Err(overflow)
+    /// if there isn't room — caller evicts then retries.
+    pub fn flush_buffer(&mut self) -> Result<(), usize> {
+        let free: Vec<SlotId> = (0..self.capacity).filter(|&s| self.slot_pos[s] < 0).collect();
+        if free.len() < self.buffered {
+            return Err(self.buffered - free.len());
+        }
+        let take = self.buffered;
+        for i in 0..take {
+            let slot = free[i];
+            for l in 0..self.layers {
+                let src = (l * self.buf_slots + i) * self.kv_dim;
+                let kk = self.buf_k[src..src + self.kv_dim].to_vec();
+                let vv = self.buf_v[src..src + self.kv_dim].to_vec();
+                self.write_slot_layer(l, slot, &kk, &vv);
+            }
+            self.slot_pos[slot] = self.buffered_pos[i] as i32;
+        }
+        self.buffered = 0;
+        self.buffered_pos.clear();
+        for l in 0..self.layers {
+            for i in 0..self.buf_slots {
+                self.buf_mask[l * self.buf_slots + i] = 0.0;
+            }
+        }
+        Ok(())
+    }
+
+    /// Evict slots (drop mask + free slot) — leaves holes.
+    pub fn evict_slots(&mut self, slots: &[SlotId]) {
+        for &s in slots {
+            self.slot_pos[s] = -1;
+            for l in 0..self.layers {
+                self.mask[l * self.capacity + s] = 0.0;
+            }
+        }
+    }
+
+    /// Evict by CoT positions (what score-based policies compute).
+    pub fn evict_positions(&mut self, positions: &[usize]) {
+        let set: std::collections::BTreeSet<i32> =
+            positions.iter().map(|&p| p as i32).collect();
+        let slots: Vec<SlotId> = (0..self.capacity)
+            .filter(|&s| set.contains(&self.slot_pos[s]))
+            .collect();
+        self.evict_slots(&slots);
+    }
+
+    /// Gather-based compaction (R-KV, §5.1): physically move live rows to
+    /// the front of the slab. This is the real data movement whose cost the
+    /// paper measures — we time it and count bytes for the GPU cost model.
+    pub fn compact_gather(&mut self) {
+        let t0 = std::time::Instant::now();
+        let mut dst = 0usize;
+        let mut moved_bytes = 0u64;
+        for s in 0..self.capacity {
+            if self.slot_pos[s] < 0 {
+                continue;
+            }
+            if s != dst {
+                for l in 0..self.layers {
+                    let from = (l * self.capacity + s) * self.kv_dim;
+                    let to = (l * self.capacity + dst) * self.kv_dim;
+                    // copy_within on both K and V slabs
+                    self.k.copy_within(from..from + self.kv_dim, to);
+                    self.v.copy_within(from..from + self.kv_dim, to);
+                    self.mask[l * self.capacity + dst] = 1.0;
+                    self.mask[l * self.capacity + s] = 0.0;
+                    moved_bytes += (2 * self.kv_dim * 4) as u64;
+                }
+                self.slot_pos[dst] = self.slot_pos[s];
+                self.slot_pos[s] = -1;
+            }
+            dst += 1;
+        }
+        self.gather_bytes += moved_bytes;
+        self.gather_calls += 1;
+        self.gather_nanos += t0.elapsed().as_nanos() as u64;
+    }
+
+    /// Positions currently cached (sorted).
+    pub fn live_positions(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .slot_pos
+            .iter()
+            .filter(|&&p| p >= 0)
+            .map(|&p| p as usize)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Slot currently holding CoT position `pos`.
+    pub fn slot_of_pos(&self, pos: usize) -> Option<SlotId> {
+        self.slot_pos.iter().position(|&p| p == pos as i32)
+    }
+
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for s in 0..self.capacity {
+            let live = self.slot_pos[s] >= 0;
+            for l in 0..self.layers {
+                let m = self.mask[l * self.capacity + s];
+                if live && m != 1.0 {
+                    return Err(format!("slot {s} layer {l}: live but mask {m}"));
+                }
+                if !live && m != 0.0 {
+                    return Err(format!("slot {s} layer {l}: dead but mask {m}"));
+                }
+            }
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for &p in self.slot_pos.iter().filter(|&&p| p >= 0) {
+            if !seen.insert(p) {
+                return Err(format!("position {p} cached twice"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn mk() -> Fp32Cache {
+        Fp32Cache::new(2, 32, 8, 16)
+    }
+
+    fn fake_out(layers: usize, kv_dim: usize, seed: f32) -> DecodeOut {
+        DecodeOut {
+            logits: vec![],
+            new_k: (0..layers * kv_dim).map(|i| seed + i as f32).collect(),
+            new_v: (0..layers * kv_dim).map(|i| -seed - i as f32).collect(),
+            probs: vec![],
+        }
+    }
+
+    #[test]
+    fn prefill_then_flush() {
+        let mut c = mk();
+        let k = vec![1.0; 2 * 4 * 8];
+        let v = vec![2.0; 2 * 4 * 8];
+        c.write_prefill(&k, &v, 4);
+        assert_eq!(c.live_tokens(), 4);
+        for i in 0..16 {
+            c.push_token(&fake_out(2, 8, i as f32), 4 + i);
+        }
+        c.flush_buffer().unwrap();
+        assert_eq!(c.live_tokens(), 20);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_leaves_holes_compaction_fills_them() {
+        let mut c = mk();
+        let k = vec![1.0; 2 * 16 * 8];
+        c.write_prefill(&k.clone(), &k, 16);
+        c.evict_positions(&[1, 3, 5, 7]);
+        assert_eq!(c.live_tokens(), 12);
+        assert!(c.free_slot().is_some());
+        c.compact_gather();
+        assert_eq!(c.live_tokens(), 12);
+        assert!(c.gather_bytes > 0);
+        assert_eq!(c.gather_calls, 1);
+        // live slots are now the prefix
+        for s in 0..12 {
+            assert!(c.slot_pos[s] >= 0);
+        }
+        for s in 12..32 {
+            assert!(c.slot_pos[s] < 0);
+        }
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn compaction_preserves_payload() {
+        let mut c = Fp32Cache::new(1, 8, 2, 16);
+        let k: Vec<f32> = (0..8 * 2).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..8 * 2).map(|i| 100.0 + i as f32).collect();
+        c.write_prefill(&k, &v, 8);
+        c.evict_positions(&[0, 2]);
+        c.compact_gather();
+        // position 1's payload must now live at slot 0 or 1 with same data
+        let slot = c.slot_of_pos(1).unwrap();
+        let base = slot * 2;
+        assert_eq!(&c.k[base..base + 2], &[2.0, 3.0]);
+        assert_eq!(&c.v[base..base + 2], &[102.0, 103.0]);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn flush_overflow_reported() {
+        let mut c = Fp32Cache::new(1, 8, 2, 16);
+        let k = vec![0.0; 8 * 2];
+        c.write_prefill(&k.clone(), &k, 8);
+        for i in 0..4 {
+            c.push_token(&fake_out(1, 2, i as f32), 8 + i);
+        }
+        assert_eq!(c.flush_buffer(), Err(4));
+        c.evict_positions(&[0, 1, 2, 3]);
+        assert!(c.flush_buffer().is_ok());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn property_random_evict_flush_cycle() {
+        prop::check(40, |g| {
+            let mut c = Fp32Cache::new(2, 64, 4, 16);
+            let p = g.usize(4, 32);
+            let k = vec![0.5; 2 * p * 4];
+            c.write_prefill(&k.clone(), &k, p);
+            let mut pos = p;
+            for _ in 0..g.usize(5, 40) {
+                let full = c.push_token(&fake_out(2, 4, pos as f32), pos);
+                pos += 1;
+                if full {
+                    while c.flush_buffer().is_err() {
+                        let live = c.live_positions();
+                        let n = (live.len() / 2).max(1);
+                        c.evict_positions(&live[..n]);
+                        if g.bool() {
+                            c.compact_gather();
+                        }
+                    }
+                }
+                c.check_invariants()?;
+            }
+            Ok(())
+        });
+    }
+}

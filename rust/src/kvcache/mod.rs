@@ -1,0 +1,68 @@
+//! The ThinKV paged KV cache with **Continuous Thinking** (paper §5.2).
+//!
+//! PagedAttention-style block tables extended with four new fields
+//! (thought type, start indices, segment masks, eviction mask) so that
+//! slots freed by TBE are soft-marked and **reused in place** by later
+//! tokens of the same thought type — no gather-based compaction, ever.
+//! Slot order never matters because attention is permutation invariant
+//! (paper Theorem 1 / §C.3).
+//!
+//! Module map:
+//! * [`block_table`] — the CT block table + slot bookkeeping per layer.
+//! * [`ct`] — [`ct::CtCache`], the engine-facing quantized cache a request
+//!   owns (codes/scales/tags/mask slabs + fp ring buffer + segments).
+//! * [`fp32`] — the f32 paged cache used by FullKV and eviction baselines.
+//! * [`pool`] — the global physical-block pool (memory accounting, max
+//!   batch-size experiments).
+
+pub mod block_table;
+pub mod ct;
+pub mod fp32;
+pub mod pool;
+
+pub use block_table::{BlockEntry, LayerTable, SlotId};
+pub use ct::{CacheConfig, CtCache, SegmentInfo};
+pub use fp32::Fp32Cache;
+pub use pool::BlockPool;
+
+/// The three thought types (paper Observation 1b: T sparsest, then R, then E).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Thought {
+    /// Transition: uncertainty / backtracking ("Wait", "Hmm", ...).
+    Transition = 0,
+    /// Execution: calculations, code emission.
+    Execution = 1,
+    /// Reasoning: systematic thinking.
+    Reasoning = 2,
+}
+
+impl Thought {
+    pub const ALL: [Thought; 3] = [Thought::Transition, Thought::Execution, Thought::Reasoning];
+
+    pub fn from_u8(v: u8) -> Thought {
+        match v {
+            0 => Thought::Transition,
+            1 => Thought::Execution,
+            2 => Thought::Reasoning,
+            _ => panic!("bad thought {v}"),
+        }
+    }
+
+    /// Importance score rho (paper §4.2: rho(R)=2, rho(E)=1, rho(T)=0).
+    pub fn importance(self) -> u8 {
+        match self {
+            Thought::Reasoning => 2,
+            Thought::Execution => 1,
+            Thought::Transition => 0,
+        }
+    }
+
+    pub fn letter(self) -> char {
+        match self {
+            Thought::Reasoning => 'R',
+            Thought::Execution => 'E',
+            Thought::Transition => 'T',
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Global physical-block pool: device-memory accounting used to size the
+//! maximum batch (paper Tables 2/3 report max batch per GPU) and to refuse
+//! admission when KV memory is exhausted.
+//!
+//! The pool tracks *bytes*, not slots, because ThinKV requests with mixed
+//! precision consume different amounts per token (packed accounting,
+//! DESIGN §4).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Debug)]
+pub struct BlockPool {
+    /// Total bytes available for KV cache on the (modeled) device.
+    capacity_bytes: u64,
+    used_bytes: AtomicU64,
+    /// High-water mark for reporting.
+    peak_bytes: AtomicU64,
+}
+
+impl BlockPool {
+    pub fn new(capacity_bytes: u64) -> BlockPool {
+        BlockPool {
+            capacity_bytes,
+            used_bytes: AtomicU64::new(0),
+            peak_bytes: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity_bytes.saturating_sub(self.used())
+    }
+
+    /// Try to reserve `bytes`; false if the pool would overflow.
+    pub fn reserve(&self, bytes: u64) -> bool {
+        let mut cur = self.used_bytes.load(Ordering::Relaxed);
+        loop {
+            let next = cur + bytes;
+            if next > self.capacity_bytes {
+                return false;
+            }
+            match self.used_bytes.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::SeqCst,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.peak_bytes.fetch_max(next, Ordering::Relaxed);
+                    return true;
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    pub fn release(&self, bytes: u64) {
+        let prev = self.used_bytes.fetch_sub(bytes, Ordering::SeqCst);
+        debug_assert!(prev >= bytes, "pool release underflow");
+    }
+
+    /// Max concurrent requests whose per-request KV footprint is `bytes`.
+    pub fn max_batch(&self, bytes_per_request: u64) -> usize {
+        if bytes_per_request == 0 {
+            return usize::MAX;
+        }
+        (self.capacity_bytes / bytes_per_request) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn reserve_release() {
+        let p = BlockPool::new(1000);
+        assert!(p.reserve(600));
+        assert!(!p.reserve(600));
+        assert!(p.reserve(400));
+        p.release(500);
+        assert_eq!(p.used(), 500);
+        assert_eq!(p.peak(), 1000);
+    }
+
+    #[test]
+    fn max_batch_math() {
+        let p = BlockPool::new(80 * 1024);
+        assert_eq!(p.max_batch(1024), 80);
+        assert_eq!(p.max_batch(0), usize::MAX);
+    }
+
+    #[test]
+    fn concurrent_reservations_never_overflow() {
+        let p = Arc::new(BlockPool::new(10_000));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let p = Arc::clone(&p);
+            handles.push(std::thread::spawn(move || {
+                let mut got = 0u64;
+                for _ in 0..1000 {
+                    if p.reserve(7) {
+                        got += 7;
+                    }
+                }
+                got
+            }));
+        }
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(total <= 10_000);
+        assert_eq!(p.used(), total);
+    }
+}

@@ -1,0 +1,36 @@
+//! # ThinKV — Thought-Adaptive KV Cache Compression for Efficient Reasoning Models
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of the ThinKV paper
+//! (Ramachandran et al., 2025):
+//!
+//! * **Layer 1 (Pallas, build time)** — fused dequantization + paged-attention
+//!   kernels and group-quantization kernels, authored in
+//!   `python/compile/kernels/`, lowered under `interpret=True`.
+//! * **Layer 2 (JAX, build time)** — a decoder-only transformer whose decode
+//!   step consumes the quantized paged KV cache; AOT-lowered to HLO text in
+//!   `artifacts/` by `python/compile/aot.py`.
+//! * **Layer 3 (Rust, run time)** — this crate: the serving coordinator
+//!   (continuous batching, request routing), the Continuous-Thinking paged
+//!   KV cache manager, thought decomposition (KDE calibration + sparsity
+//!   classifier), TBQ/TBE compression policies, all eviction/quantization
+//!   baselines, the GPU cost model, and the LRM trace simulator.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the model
+//! once, and the Rust binary is self-contained afterwards.
+
+pub mod util;
+pub mod quant;
+pub mod kvcache;
+pub mod thought;
+pub mod compress;
+pub mod baselines;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod coordinator;
+pub mod server;
+pub mod metrics;
+pub mod bench;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

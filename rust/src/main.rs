@@ -1,0 +1,217 @@
+//! `thinkv` — CLI entry point for the ThinKV serving coordinator.
+//!
+//! Subcommands:
+//!   generate   run N requests through the coordinator, print stats
+//!   serve      start the TCP JSON server
+//!   calibrate  run KDE thought calibration on simulated traces
+//!   sim        run the trace-simulation harness for one method
+//!   info       print artifact manifest info
+
+use thinkv::coordinator::{CompressionMode, Coordinator, ServeConfig};
+use thinkv::server::Server;
+use thinkv::sim::{run_method, DatasetProfile, Method, SimConfig, Trace};
+use thinkv::util::cli::Args;
+use thinkv::util::rng::Rng;
+
+fn main() {
+    let args = Args::parse_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "sim" => cmd_sim(&args),
+        "info" => cmd_info(),
+        _ => {
+            print_help();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "thinkv — thought-adaptive KV cache compression (paper reproduction)
+
+USAGE: thinkv <cmd> [--flags]
+
+  generate  --mode thinkv|fullkv|rkv|h2o|kivi2|... --requests 4
+            --budget 1024 --max-tokens 128 --workers 2
+  serve     --addr 127.0.0.1:7799 --mode thinkv --budget 1024
+  sim       --mode thinkv --dataset aime --budget 1024 --scale 0.5
+  calibrate --prompts 8 --layers 8
+  info"
+    );
+}
+
+fn serve_config(args: &Args) -> ServeConfig {
+    let mode = CompressionMode::parse(&args.str_or("mode", "thinkv"))
+        .unwrap_or_else(CompressionMode::thinkv_default);
+    ServeConfig {
+        mode,
+        budget: args.usize_or("budget", 1024),
+        max_new_tokens: args.usize_or("max-tokens", 128),
+        workers: args.usize_or("workers", 2),
+        refresh: args.usize_or("refresh", 128),
+        temperature: args.f64_or("temperature", 0.8),
+        seed: args.u64_or("seed", 42),
+        ..ServeConfig::default()
+    }
+}
+
+fn cmd_generate(args: &Args) -> i32 {
+    let cfg = serve_config(args);
+    let n = args.usize_or("requests", 4);
+    println!("mode={} budget={} requests={n}", cfg.mode.label(), cfg.budget);
+    let coordinator = match Coordinator::start(cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("failed to start: {e:#}");
+            return 1;
+        }
+    };
+    let mut rng = Rng::new(7);
+    let prompts: Vec<Vec<i32>> = (0..n)
+        .map(|_| (0..64).map(|_| rng.below(512) as i32).collect())
+        .collect();
+    let t0 = std::time::Instant::now();
+    match coordinator.run_batch(prompts) {
+        Ok(results) => {
+            let wall = t0.elapsed().as_secs_f64();
+            let toks: usize = results.iter().map(|r| r.tokens.len()).sum();
+            for r in &results {
+                println!(
+                    "  req {}: {} tokens, ttft {:.1} ms, tpot {:.2} ms, avg_bits {:.2}, live {}, ct_reuses {}",
+                    r.id, r.tokens.len(), r.ttft_ms, r.tpot_ms, r.avg_bits, r.live_tokens, r.ct_reuses
+                );
+            }
+            println!(
+                "TOTAL: {toks} tokens in {wall:.2}s = {:.1} tok/s",
+                toks as f64 / wall
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("batch failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let addr = args.str_or("addr", "127.0.0.1:7799");
+    let cfg = serve_config(args);
+    match Server::start(&addr, cfg) {
+        Ok(server) => {
+            println!("serving on {} (Ctrl-C to stop)", server.addr);
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("server failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_calibrate(args: &Args) -> i32 {
+    let prompts = args.usize_or("prompts", 8);
+    let layers = args.usize_or("layers", 8);
+    // per-prompt per-layer sparsity series from the trace simulator; the
+    // "layers" are bands whose mixing mirrors Fig 3 (some layers trimodal,
+    // some not)
+    let mut series = Vec::new();
+    let mut rng = Rng::new(args.u64_or("seed", 5));
+    for p in 0..prompts {
+        let trace = Trace::generate(&DatasetProfile::aime(), 100 + p as u64, 0.3);
+        let mut per_layer = Vec::new();
+        for l in 0..layers {
+            let clean = l % 2 == 1; // odd layers exhibit the tri-modal structure
+            let samples: Vec<f64> = trace.sparsity[trace.prompt_len..]
+                .iter()
+                .map(|&s| {
+                    if clean {
+                        s
+                    } else {
+                        (0.5 + rng.normal() * 0.05).clamp(0.0, 1.0)
+                    }
+                })
+                .collect();
+            per_layer.push(samples);
+        }
+        series.push(per_layer);
+    }
+    let result = thinkv::thought::calibrate(&series, 3, 4, 0.12);
+    println!("L* = {:?}", result.layers);
+    println!("theta = {:?}", result.thresholds);
+    println!("votes = {:?}", result.votes);
+    0
+}
+
+fn cmd_sim(args: &Args) -> i32 {
+    let dataset = DatasetProfile::by_name(&args.str_or("dataset", "aime"))
+        .unwrap_or_else(DatasetProfile::aime);
+    let mode = args.str_or("mode", "thinkv");
+    let method = match mode.as_str() {
+        "thinkv" => Method::ThinKv(Default::default()),
+        "fullkv" => Method::FullKv,
+        "kivi2" => Method::Kivi { prec: thinkv::quant::Precision::Ternary },
+        "kivi4" => Method::Kivi { prec: thinkv::quant::Precision::Nvfp4 },
+        "pmkvq" => Method::PmKvq,
+        other => {
+            use thinkv::sim::harness::EvictKind as E;
+            let kind = match other {
+                "h2o" => E::H2O,
+                "rkv" => E::Rkv,
+                "lazy" => E::LazyEviction,
+                "raas" => E::RaaS,
+                "snapkv" => E::SnapKv,
+                "streaming" => E::StreamingLlm,
+                _ => {
+                    eprintln!("unknown mode {other}");
+                    return 1;
+                }
+            };
+            Method::Evict(kind)
+        }
+    };
+    let trace = Trace::generate(&dataset, args.u64_or("seed", 1), args.f64_or("scale", 0.5));
+    let cfg = SimConfig {
+        budget: args.usize_or("budget", 1024),
+        seed: args.u64_or("seed", 1),
+        stride: 4,
+        rollouts: args.usize_or("rollouts", 64),
+    };
+    let r = run_method(&trace, &method, &cfg);
+    println!(
+        "{} on {} (gen {} tokens): pass@1 {:.3}, mem {:.2}%, avg_bits {:.2}, recall@10 {:.3}, evict-rate {:.3}, inflation {:.2}x",
+        r.method,
+        dataset.name,
+        trace.gen_len,
+        r.pass1,
+        r.mem_frac * 100.0,
+        r.avg_bits,
+        r.recall10,
+        r.evict_call_rate,
+        r.len_inflation
+    );
+    0
+}
+
+fn cmd_info() -> i32 {
+    match thinkv::model::Manifest::load(&thinkv::model::default_artifacts_dir()) {
+        Ok(m) => {
+            println!("model: {:?}", m.model);
+            println!("quant capacities: {:?}", m.quant_caps);
+            println!("fp32 capacities: {:?}", m.fp32_caps);
+            println!("weights: {} tensors", m.weights.len());
+            0
+        }
+        Err(e) => {
+            eprintln!("no artifacts ({e}); run `make artifacts` first");
+            1
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! Serving metrics: latency histograms, throughput counters, and the
+//! per-operation time breakdown used for the Table-5 reproduction.
+
+use std::time::Instant;
+
+use crate::util::stats::{mean, percentile};
+
+/// Latency recorder (milliseconds).
+#[derive(Debug, Clone, Default)]
+pub struct Latencies {
+    samples: Vec<f64>,
+}
+
+impl Latencies {
+    pub fn record_ms(&mut self, ms: f64) {
+        self.samples.push(ms);
+    }
+
+    pub fn record_since(&mut self, t0: Instant) {
+        self.record_ms(t0.elapsed().as_secs_f64() * 1e3);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        mean(&self.samples)
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        percentile(&self.samples, 50.0)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        percentile(&self.samples, 99.0)
+    }
+
+    pub fn merge(&mut self, other: &Latencies) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+}
+
+/// Named wall-clock accumulators — the per-operation breakdown (Table 5).
+#[derive(Debug, Clone, Default)]
+pub struct Breakdown {
+    pub decode_exec_ns: u64,
+    pub quant_write_ns: u64,
+    pub tbe_ns: u64,
+    pub refresh_ns: u64,
+    pub policy_ns: u64, // baseline scoring/eviction
+    pub gather_ns: u64,
+    pub sample_ns: u64,
+    pub steps: u64,
+    pub tbe_calls: u64,
+    pub refresh_calls: u64,
+    pub policy_calls: u64,
+    pub gather_calls: u64,
+}
+
+impl Breakdown {
+    pub fn total_ns(&self) -> u64 {
+        self.decode_exec_ns
+            + self.quant_write_ns
+            + self.tbe_ns
+            + self.refresh_ns
+            + self.policy_ns
+            + self.gather_ns
+            + self.sample_ns
+    }
+
+    /// (label, % of total time, calls % of steps) rows, Table-5 style.
+    pub fn rows(&self) -> Vec<(&'static str, f64, f64)> {
+        let total = self.total_ns().max(1) as f64;
+        let steps = self.steps.max(1) as f64;
+        vec![
+            ("Decode exec (attention+MLP)", self.decode_exec_ns as f64 / total * 100.0, 100.0),
+            ("Quant write (TBQ)", self.quant_write_ns as f64 / total * 100.0, 100.0),
+            ("TBE eviction", self.tbe_ns as f64 / total * 100.0, self.tbe_calls as f64 / steps * 100.0),
+            ("Thought refresh", self.refresh_ns as f64 / total * 100.0, self.refresh_calls as f64 / steps * 100.0),
+            ("Policy scoring", self.policy_ns as f64 / total * 100.0, self.policy_calls as f64 / steps * 100.0),
+            ("Gather compaction", self.gather_ns as f64 / total * 100.0, self.gather_calls as f64 / steps * 100.0),
+            ("Sampling", self.sample_ns as f64 / total * 100.0, 100.0),
+        ]
+    }
+
+    pub fn merge(&mut self, o: &Breakdown) {
+        self.decode_exec_ns += o.decode_exec_ns;
+        self.quant_write_ns += o.quant_write_ns;
+        self.tbe_ns += o.tbe_ns;
+        self.refresh_ns += o.refresh_ns;
+        self.policy_ns += o.policy_ns;
+        self.gather_ns += o.gather_ns;
+        self.sample_ns += o.sample_ns;
+        self.steps += o.steps;
+        self.tbe_calls += o.tbe_calls;
+        self.refresh_calls += o.refresh_calls;
+        self.policy_calls += o.policy_calls;
+        self.gather_calls += o.gather_calls;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latencies_percentiles() {
+        let mut l = Latencies::default();
+        for i in 1..=100 {
+            l.record_ms(i as f64);
+        }
+        assert_eq!(l.count(), 100);
+        assert!((l.mean_ms() - 50.5).abs() < 1e-9);
+        assert!((l.p50_ms() - 50.5).abs() < 1.0);
+        assert!(l.p99_ms() > 98.0);
+    }
+
+    #[test]
+    fn breakdown_rows_sum_to_100() {
+        let b = Breakdown {
+            decode_exec_ns: 70,
+            quant_write_ns: 10,
+            tbe_ns: 10,
+            refresh_ns: 5,
+            sample_ns: 5,
+            steps: 100,
+            tbe_calls: 5,
+            refresh_calls: 1,
+            ..Default::default()
+        };
+        let total: f64 = b.rows().iter().map(|r| r.1).sum();
+        assert!((total - 100.0).abs() < 1e-6);
+        let tbe_row = b.rows()[2];
+        assert!((tbe_row.2 - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Breakdown { steps: 10, decode_exec_ns: 100, ..Default::default() };
+        let b = Breakdown { steps: 5, decode_exec_ns: 50, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.steps, 15);
+        assert_eq!(a.decode_exec_ns, 150);
+    }
+}

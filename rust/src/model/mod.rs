@@ -1,0 +1,204 @@
+//! Model configuration plumbing: dims and artifact manifest, parsed from
+//! `artifacts/model_config.json` (written once by `python/compile/aot.py`).
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// Transformer dimensions, mirrored from python `compile.model.ModelConfig`.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ffn: usize,
+    pub rope_base: f64,
+    pub buf_slots: usize,
+    pub prefill_len: usize,
+    pub obs_window: usize,
+    pub group_size: usize,
+}
+
+impl ModelConfig {
+    pub fn groups(&self) -> usize {
+        self.d_head / self.group_size
+    }
+
+    /// KV bytes per token per layer at full (f16-equivalent, as the paper's
+    /// FullKV baselines use fp16) precision: 2 (K and V) * Hkv * Dh * 2 B.
+    pub fn fullkv_bytes_per_token_layer(&self) -> f64 {
+        2.0 * self.n_kv_heads as f64 * self.d_head as f64 * 2.0
+    }
+
+    pub fn kv_elems_per_token_layer(&self) -> usize {
+        2 * self.n_kv_heads * self.d_head
+    }
+}
+
+/// The artifact manifest: which HLO files exist and at which capacities.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelConfig,
+    pub quant_caps: Vec<usize>,
+    pub fp32_caps: Vec<usize>,
+    pub micro_c: usize,
+    pub golden_attn_c: usize,
+    pub artifacts_dir: String,
+    pub weights: Vec<(String, Vec<usize>)>,
+    pub seed: u64,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &str) -> Result<Manifest> {
+        let path = format!("{artifacts_dir}/model_config.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+        let j = parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+        let m = j.get("model").context("missing model")?;
+        let u = |k: &str| -> Result<usize> {
+            m.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("missing model.{k}"))
+        };
+        let model = ModelConfig {
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            n_kv_heads: u("n_kv_heads")?,
+            d_head: u("d_head")?,
+            d_ffn: u("d_ffn")?,
+            rope_base: m.get("rope_base").and_then(Json::as_f64).unwrap_or(10000.0),
+            buf_slots: u("buf_slots")?,
+            prefill_len: u("prefill_len")?,
+            obs_window: u("obs_window")?,
+            group_size: u("group_size")?,
+        };
+        let caps = |k: &str| -> Vec<usize> {
+            j.path(&["capacities", k])
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default()
+        };
+        let weights = j
+            .get("weights")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(|w| {
+                        let name = w.get("name")?.as_str()?.to_string();
+                        let shape = w
+                            .get("shape")?
+                            .as_arr()?
+                            .iter()
+                            .filter_map(Json::as_usize)
+                            .collect();
+                        Some((name, shape))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(Manifest {
+            model,
+            quant_caps: caps("quant"),
+            fp32_caps: caps("fp32"),
+            micro_c: j.get("micro_c").and_then(Json::as_usize).unwrap_or(1024),
+            golden_attn_c: j
+                .get("golden_attn_c")
+                .and_then(Json::as_usize)
+                .unwrap_or(128),
+            artifacts_dir: artifacts_dir.to_string(),
+            weights,
+            seed: j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        })
+    }
+
+    pub fn hlo_path(&self, name: &str) -> String {
+        format!("{}/{}.hlo.txt", self.artifacts_dir, name)
+    }
+
+    pub fn decode_quant_name(&self, capacity: usize) -> String {
+        format!("decode_quant_c{capacity}")
+    }
+
+    pub fn decode_fp32_name(&self, capacity: usize) -> String {
+        format!("decode_fp32_c{capacity}")
+    }
+
+    pub fn prefill_name(&self) -> String {
+        format!("prefill_p{}", self.model.prefill_len)
+    }
+
+    /// Smallest exported quant capacity that can hold `budget` + headroom.
+    pub fn pick_quant_cap(&self, budget: usize) -> Option<usize> {
+        self.quant_caps.iter().copied().find(|&c| c >= budget)
+    }
+
+    pub fn pick_fp32_cap(&self, need: usize) -> Option<usize> {
+        self.fp32_caps.iter().copied().find(|&c| c >= need)
+    }
+}
+
+/// Default artifacts directory relative to the crate root.
+pub fn default_artifacts_dir() -> String {
+    let via_env = std::env::var("THINKV_ARTIFACTS").ok();
+    via_env.unwrap_or_else(|| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_loads_if_built() {
+        let dir = default_artifacts_dir();
+        if !std::path::Path::new(&format!("{dir}/model_config.json")).exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.d_head % m.model.group_size, 0);
+        assert_eq!(m.model.buf_slots, m.model.group_size);
+        assert!(!m.quant_caps.is_empty());
+        assert!(!m.weights.is_empty());
+        assert_eq!(m.weights[0].0, "embed");
+        // every advertised artifact exists on disk
+        for c in &m.quant_caps {
+            assert!(std::path::Path::new(&m.hlo_path(&m.decode_quant_name(*c))).exists());
+        }
+    }
+
+    #[test]
+    fn pick_caps() {
+        let m = ModelConfig {
+            vocab: 512,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_head: 32,
+            d_ffn: 256,
+            rope_base: 10000.0,
+            buf_slots: 16,
+            prefill_len: 64,
+            obs_window: 8,
+            group_size: 16,
+        };
+        let man = Manifest {
+            model: m,
+            quant_caps: vec![512, 1024, 2048],
+            fp32_caps: vec![1024, 4096],
+            micro_c: 1024,
+            golden_attn_c: 128,
+            artifacts_dir: ".".into(),
+            weights: vec![],
+            seed: 0,
+        };
+        assert_eq!(man.pick_quant_cap(600), Some(1024));
+        assert_eq!(man.pick_quant_cap(64), Some(512));
+        assert_eq!(man.pick_quant_cap(4096), None);
+        assert_eq!(man.pick_fp32_cap(2000), Some(4096));
+    }
+}

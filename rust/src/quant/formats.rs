@@ -1,0 +1,414 @@
+//! FP8-E4M3 / NVFP4 / Ternary group quantization (paper §4.2, §D.3).
+//!
+//! Semantics are defined by `python/compile/formats.py` +
+//! `python/compile/kernels/ref.py`; this module reproduces them exactly
+//! (same tables, same nearest-with-tie-to-smaller rounding, same E4M3
+//! scale snapping). `quant::golden` asserts bit-equality at test time.
+
+use std::sync::OnceLock;
+
+pub const GROUP_SIZE: usize = 16;
+pub const FP8_MAX: f32 = 448.0;
+pub const NVFP4_MAX: f32 = 6.0;
+/// NVFP4 (E2M1) magnitudes; code = sign*8 + index.
+pub const NVFP4_MAG: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+/// Cache-entry precision (the TBQ tag stored per slot).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Precision {
+    /// 2-bit ternary {-1, 0, +1}, g=16 group scale (transition thoughts).
+    Ternary = 0,
+    /// 4-bit NVFP4 E2M1, g=16 group scale (reasoning/execution thoughts).
+    Nvfp4 = 1,
+    /// 8-bit FP8 E4M3, per-entry scale (highest precision).
+    Fp8 = 2,
+}
+
+impl Precision {
+    pub fn tag(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_tag(t: u8) -> Precision {
+        match t {
+            0 => Precision::Ternary,
+            1 => Precision::Nvfp4,
+            2 => Precision::Fp8,
+            _ => panic!("bad precision tag {t}"),
+        }
+    }
+
+    /// Nominal element bits of the format (storage accounting, DESIGN §4).
+    pub fn bits(self) -> f64 {
+        match self {
+            Precision::Ternary => 2.0,
+            Precision::Nvfp4 => 4.0,
+            Precision::Fp8 => 8.0,
+        }
+    }
+
+    /// Bits for a quantization level `b` in the paper's B = {2,4,8}.
+    pub fn from_bits(b: usize) -> Precision {
+        match b {
+            2 => Precision::Ternary,
+            4 => Precision::Nvfp4,
+            8 => Precision::Fp8,
+            _ => panic!("unsupported bit width {b}"),
+        }
+    }
+}
+
+/// Packed element bits including group-scale overhead (8-bit E4M3 scale per
+/// g=16 group for ternary/NVFP4, per-entry f32 scale amortized for FP8).
+/// Ternary is packed two-per-nibble into 4-bit lanes per §6.1 — but its
+/// *storage* accounting stays 2 bits + scale as the paper reports averages.
+pub fn packed_bits_per_elem(p: Precision) -> f64 {
+    match p {
+        Precision::Ternary => 2.0 + 8.0 / GROUP_SIZE as f64,
+        Precision::Nvfp4 => 4.0 + 8.0 / GROUP_SIZE as f64,
+        Precision::Fp8 => 8.0 + 32.0 / 64.0, // f32 scale over a d_head=64-ish entry
+    }
+}
+
+struct Tables {
+    decode: [f32; 256],
+    pos_vals: Vec<f32>,
+    pos_codes: Vec<u8>,
+}
+
+fn tables() -> &'static Tables {
+    static T: OnceLock<Tables> = OnceLock::new();
+    T.get_or_init(|| {
+        let mut decode = [0f32; 256];
+        for code in 0..256usize {
+            let s = if code & 0x80 != 0 { -1.0f32 } else { 1.0 };
+            let e = (code >> 3) & 0xF;
+            let m = code & 0x7;
+            let val = if e == 0xF && m == 0x7 {
+                0.0 // NaN slot (never emitted by the encoder)
+            } else if e == 0 {
+                (m as f32 / 8.0) * (2.0f32).powi(-6)
+            } else {
+                (1.0 + m as f32 / 8.0) * (2.0f32).powi(e as i32 - 7)
+            };
+            decode[code] = s * val;
+        }
+        let mut pos: Vec<(f32, u8)> = (0..0x80u16)
+            .filter(|&c| !((c >> 3) == 0xF && (c & 7) == 7))
+            .map(|c| (decode[c as usize], c as u8))
+            .collect();
+        pos.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        Tables {
+            decode,
+            pos_vals: pos.iter().map(|p| p.0).collect(),
+            pos_codes: pos.iter().map(|p| p.1).collect(),
+        }
+    })
+}
+
+/// The 256-entry E4M3 decode table (same values the Pallas kernel uses).
+pub fn e4m3_table() -> &'static [f32; 256] {
+    &tables().decode
+}
+
+/// Nearest-value E4M3 encode; ties toward the smaller magnitude.
+/// Matches `formats.e4m3_encode` (which uses `np.signbit`, so -0.0 keeps
+/// its sign bit).
+pub fn e4m3_encode(x: f32) -> u8 {
+    let t = tables();
+    let mag = x.abs().min(FP8_MAX);
+    // binary search for insertion point (== np.searchsorted side='left')
+    let idx = t.pos_vals.partition_point(|&v| v < mag);
+    let idx = idx.clamp(1, t.pos_vals.len() - 1);
+    let (lo, hi) = (t.pos_vals[idx - 1], t.pos_vals[idx]);
+    let pick = if (mag - lo) > (hi - mag) { idx } else { idx - 1 };
+    let code = t.pos_codes[pick];
+    if x.is_sign_negative() {
+        code | 0x80
+    } else {
+        code
+    }
+}
+
+pub fn e4m3_decode(code: u8) -> f32 {
+    tables().decode[code as usize]
+}
+
+/// Snap onto the E4M3 grid: decode(encode(x)).
+pub fn e4m3_snap(x: f32) -> f32 {
+    e4m3_decode(e4m3_encode(x))
+}
+
+fn nvfp4_encode_one(t: f32) -> u8 {
+    let mag = t.abs();
+    let mut best = 0usize;
+    let mut bd = f32::INFINITY;
+    for (i, &v) in NVFP4_MAG.iter().enumerate() {
+        let d = (mag - v).abs();
+        if d < bd {
+            bd = d;
+            best = i;
+        }
+    }
+    let sign = if t < 0.0 { 8u8 } else { 0 };
+    sign + best as u8
+}
+
+fn nvfp4_decode_one(code: u8) -> f32 {
+    let mag = NVFP4_MAG[(code & 7) as usize];
+    if code & 8 != 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+fn ternary_encode_one(t: f32) -> u8 {
+    if t > 0.5 {
+        1
+    } else if t < -0.5 {
+        2
+    } else {
+        0
+    }
+}
+
+fn ternary_decode_one(code: u8) -> f32 {
+    match code {
+        1 => 1.0,
+        2 => -1.0,
+        _ => 0.0,
+    }
+}
+
+/// Group-quantize `x` (length D, D % 16 == 0) at precision `p`.
+/// Writes codes (len D) and scales (len D/16). Mirrors
+/// `ref.quant_groups_ref` exactly.
+pub fn quant_groups(x: &[f32], p: Precision, codes: &mut [u8], scales: &mut [f32]) {
+    let d = x.len();
+    let g = GROUP_SIZE;
+    assert_eq!(d % g, 0);
+    assert_eq!(codes.len(), d);
+    assert_eq!(scales.len(), d / g);
+    match p {
+        Precision::Fp8 => {
+            let amax = x.iter().fold(0f32, |a, &v| a.max(v.abs()));
+            let mut scale = e4m3_snap(amax / FP8_MAX);
+            if scale <= 0.0 {
+                scale = 1.0;
+            }
+            for (c, &v) in codes.iter_mut().zip(x) {
+                *c = e4m3_encode(v / scale);
+            }
+            scales.fill(scale);
+        }
+        Precision::Nvfp4 => {
+            for gi in 0..d / g {
+                let xs = &x[gi * g..(gi + 1) * g];
+                let amax = xs.iter().fold(0f32, |a, &v| a.max(v.abs()));
+                let mut scale = e4m3_snap(amax / NVFP4_MAX);
+                if scale <= 0.0 {
+                    scale = 1.0;
+                }
+                for (j, &v) in xs.iter().enumerate() {
+                    codes[gi * g + j] = nvfp4_encode_one(v / scale);
+                }
+                scales[gi] = scale;
+            }
+        }
+        Precision::Ternary => {
+            for gi in 0..d / g {
+                let xs = &x[gi * g..(gi + 1) * g];
+                let amean = xs.iter().map(|v| v.abs()).sum::<f32>() / g as f32;
+                let mut scale = e4m3_snap(amean);
+                if scale <= 0.0 {
+                    scale = 1.0;
+                }
+                for (j, &v) in xs.iter().enumerate() {
+                    codes[gi * g + j] = ternary_encode_one(v / scale);
+                }
+                scales[gi] = scale;
+            }
+        }
+    }
+}
+
+/// Inverse of `quant_groups` (same tables the kernel applies in-HLO).
+pub fn dequant_groups(codes: &[u8], scales: &[f32], p: Precision, out: &mut [f32]) {
+    let d = codes.len();
+    let g = GROUP_SIZE;
+    assert_eq!(scales.len(), d / g);
+    assert_eq!(out.len(), d);
+    for gi in 0..d / g {
+        let s = scales[gi];
+        for j in 0..g {
+            let c = codes[gi * g + j];
+            out[gi * g + j] = s * match p {
+                Precision::Fp8 => e4m3_decode(c),
+                Precision::Nvfp4 => nvfp4_decode_one(c),
+                Precision::Ternary => ternary_decode_one(c),
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn table_extremes() {
+        assert_eq!(e4m3_decode(0x7E), 448.0);
+        assert!((e4m3_decode(0x01) - 2f32.powi(-9)).abs() < 1e-12);
+        assert_eq!(e4m3_decode(0x00), 0.0);
+        assert_eq!(e4m3_decode(0xFE), -448.0);
+    }
+
+    #[test]
+    fn table_sign_symmetry() {
+        for c in 0..0x80u8 {
+            if (c >> 3) == 0xF && (c & 7) == 7 {
+                continue;
+            }
+            assert_eq!(e4m3_decode(c), -e4m3_decode(c | 0x80));
+        }
+    }
+
+    #[test]
+    fn encode_roundtrips_grid_values() {
+        for c in 0..=0x7Eu8 {
+            if (c >> 3) == 0xF && (c & 7) == 7 {
+                continue;
+            }
+            let v = e4m3_decode(c);
+            if v == 0.0 {
+                continue;
+            }
+            assert_eq!(e4m3_decode(e4m3_encode(v)), v, "code {c:#x}");
+        }
+    }
+
+    #[test]
+    fn encode_clips() {
+        assert_eq!(e4m3_decode(e4m3_encode(1e9)).abs(), 448.0);
+        assert_eq!(e4m3_decode(e4m3_encode(-1e9)).abs(), 448.0);
+    }
+
+    #[test]
+    fn encode_is_nearest_property() {
+        prop::check(300, |g| {
+            let x = g.f32(-500.0, 500.0);
+            let got = e4m3_decode(e4m3_encode(x)).abs();
+            let mag = x.abs().min(FP8_MAX);
+            // nearest positive grid value
+            let t = e4m3_table();
+            let best = (0..0x7Fu8)
+                .filter(|&c| !((c >> 3) == 0xF && (c & 7) == 7))
+                .map(|c| t[c as usize])
+                .fold((f32::INFINITY, 0.0f32), |(bd, bv), v| {
+                    let d = (v - mag).abs();
+                    if d < bd {
+                        (d, v)
+                    } else {
+                        (bd, bv)
+                    }
+                })
+                .1;
+            if (got - best).abs() <= 1e-7 {
+                Ok(())
+            } else {
+                Err(format!("x={x} got={got} best={best}"))
+            }
+        });
+    }
+
+    #[test]
+    fn quant_error_hierarchy() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let x: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+        let mut errs = Vec::new();
+        for p in [Precision::Fp8, Precision::Nvfp4, Precision::Ternary] {
+            let mut codes = vec![0u8; x.len()];
+            let mut scales = vec![0f32; x.len() / GROUP_SIZE];
+            let mut deq = vec![0f32; x.len()];
+            quant_groups(&x, p, &mut codes, &mut scales);
+            dequant_groups(&codes, &scales, p, &mut deq);
+            let err: f32 = x.iter().zip(&deq).map(|(a, b)| (a - b).abs()).sum::<f32>()
+                / x.len() as f32;
+            errs.push(err);
+        }
+        assert!(errs[0] < errs[1] && errs[1] < errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn zero_vector_roundtrip() {
+        for p in [Precision::Fp8, Precision::Nvfp4, Precision::Ternary] {
+            let x = [0f32; 32];
+            let mut codes = [0u8; 32];
+            let mut scales = [0f32; 2];
+            let mut deq = [1f32; 32];
+            quant_groups(&x, p, &mut codes, &mut scales);
+            dequant_groups(&codes, &scales, p, &mut deq);
+            assert_eq!(deq, [0f32; 32]);
+        }
+    }
+
+    #[test]
+    fn ternary_codes_limited() {
+        prop::check(50, |g| {
+            let x = g.vec_normal_f32(64, 0.0, 2.0);
+            let mut codes = vec![0u8; 64];
+            let mut scales = vec![0f32; 4];
+            quant_groups(&x, Precision::Ternary, &mut codes, &mut scales);
+            if codes.iter().all(|&c| c <= 2) {
+                Ok(())
+            } else {
+                Err("code out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    fn nvfp4_roundtrip_error_scales_with_groupmax() {
+        prop::check(50, |g| {
+            let scale = g.f32(0.01, 50.0);
+            let x: Vec<f32> = g.vec_normal_f32(64, 0.0, scale);
+            let mut codes = vec![0u8; 64];
+            let mut scales = vec![0f32; 4];
+            let mut deq = vec![0f32; 64];
+            quant_groups(&x, Precision::Nvfp4, &mut codes, &mut scales);
+            dequant_groups(&codes, &scales, Precision::Nvfp4, &mut deq);
+            let max_err = x
+                .iter()
+                .zip(&deq)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            let amax = x.iter().fold(0f32, |a, &v| a.max(v.abs()));
+            // worst-case NVFP4 step is 2.0 at the top of the range (4->6),
+            // scaled by groupmax/6 with E4M3 snap slack.
+            if max_err <= amax * (2.0 / 6.0) * 1.1 + 1e-5 {
+                Ok(())
+            } else {
+                Err(format!("max_err={max_err} amax={amax}"))
+            }
+        });
+    }
+
+    #[test]
+    fn precision_tags_roundtrip() {
+        for p in [Precision::Ternary, Precision::Nvfp4, Precision::Fp8] {
+            assert_eq!(Precision::from_tag(p.tag()), p);
+        }
+        assert_eq!(Precision::from_bits(2), Precision::Ternary);
+        assert_eq!(Precision::from_bits(4), Precision::Nvfp4);
+        assert_eq!(Precision::from_bits(8), Precision::Fp8);
+    }
+
+    #[test]
+    fn packed_accounting_ordering() {
+        assert!(packed_bits_per_elem(Precision::Ternary) < packed_bits_per_elem(Precision::Nvfp4));
+        assert!(packed_bits_per_elem(Precision::Nvfp4) < packed_bits_per_elem(Precision::Fp8));
+    }
+}

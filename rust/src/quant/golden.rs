@@ -1,0 +1,127 @@
+//! Golden-vector cross-check: the Rust quantizer must be bit-identical to
+//! the Python reference that the Pallas kernel was validated against.
+//!
+//! `artifacts/quant_golden.bin` (TKVG) layout — see aot.py:
+//!   magic "TKVG", u32 version, ntags, n, d, g
+//!   per tag in (0,1,2): x f32[n*d], codes u8[n*d], scales f32[n*d/g],
+//!                       deq f32[n*d]
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::formats::{dequant_groups, quant_groups, Precision};
+
+pub struct GoldenCase {
+    pub tag: Precision,
+    pub x: Vec<f32>,
+    pub codes: Vec<u8>,
+    pub scales: Vec<f32>,
+    pub deq: Vec<f32>,
+    pub n: usize,
+    pub d: usize,
+}
+
+pub fn load_golden(path: &str) -> Result<Vec<GoldenCase>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    let mut off = 0usize;
+    let magic = &bytes[..4];
+    if magic != b"TKVG" {
+        bail!("bad magic in {path}");
+    }
+    off += 4;
+    let mut u32_at = |o: &mut usize| -> u32 {
+        let v = u32::from_le_bytes(bytes[*o..*o + 4].try_into().unwrap());
+        *o += 4;
+        v
+    };
+    let version = u32_at(&mut off);
+    if version != 1 {
+        bail!("unsupported golden version {version}");
+    }
+    let ntags = u32_at(&mut off) as usize;
+    let n = u32_at(&mut off) as usize;
+    let d = u32_at(&mut off) as usize;
+    let g = u32_at(&mut off) as usize;
+    if g != super::GROUP_SIZE {
+        bail!("golden group size {g} != {}", super::GROUP_SIZE);
+    }
+    let mut cases = Vec::new();
+    for tag in 0..ntags as u8 {
+        let read_f32 = |off: &mut usize, count: usize| -> Vec<f32> {
+            let out = bytes[*off..*off + 4 * count]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            *off += 4 * count;
+            out
+        };
+        let x = read_f32(&mut off, n * d);
+        let codes = bytes[off..off + n * d].to_vec();
+        off += n * d;
+        let scales = read_f32(&mut off, n * d / g);
+        let deq = read_f32(&mut off, n * d);
+        cases.push(GoldenCase {
+            tag: Precision::from_tag(tag),
+            x,
+            codes,
+            scales,
+            deq,
+            n,
+            d,
+        });
+    }
+    Ok(cases)
+}
+
+/// Verify the Rust encoder/decoder against every golden case.
+/// Returns the number of rows checked; errors on any mismatch.
+pub fn verify_golden(path: &str) -> Result<usize> {
+    let cases = load_golden(path)?;
+    let mut rows = 0;
+    for case in &cases {
+        let (n, d) = (case.n, case.d);
+        let gcount = d / super::GROUP_SIZE;
+        for r in 0..n {
+            let x = &case.x[r * d..(r + 1) * d];
+            let mut codes = vec![0u8; d];
+            let mut scales = vec![0f32; gcount];
+            quant_groups(x, case.tag, &mut codes, &mut scales);
+            if codes != case.codes[r * d..(r + 1) * d] {
+                bail!("codes mismatch tag={:?} row={r}", case.tag);
+            }
+            let want_scales = &case.scales[r * gcount..(r + 1) * gcount];
+            if scales != want_scales {
+                bail!("scales mismatch tag={:?} row={r}", case.tag);
+            }
+            let mut deq = vec![0f32; d];
+            dequant_groups(&codes, &scales, case.tag, &mut deq);
+            let want_deq = &case.deq[r * d..(r + 1) * d];
+            for (a, b) in deq.iter().zip(want_deq) {
+                if (a - b).abs() > 1e-6 {
+                    bail!("dequant mismatch tag={:?} row={r}: {a} vs {b}", case.tag);
+                }
+            }
+            rows += 1;
+        }
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn golden_path() -> Option<String> {
+        let p = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/quant_golden.bin");
+        std::path::Path::new(p).exists().then(|| p.to_string())
+    }
+
+    #[test]
+    fn rust_quantizer_is_bit_exact_vs_python() {
+        let Some(path) = golden_path() else {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        };
+        let rows = verify_golden(&path).expect("golden verification");
+        assert_eq!(rows, 24); // 3 tags x 8 rows
+    }
+}

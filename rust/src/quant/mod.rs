@@ -1,0 +1,16 @@
+//! Rust mirror of the L1 quantization formats (python/compile/formats.py).
+//!
+//! The cache-write path runs in Rust: after each decode step the coordinator
+//! group-quantizes the new K/V vectors according to the active thought type
+//! (TBQ, §4.2) and writes the codes into CT-chosen slots. The dequantization
+//! happens inside the fused Pallas kernel, so encoder (here) and decoder
+//! (kernel tables) must agree **bit-for-bit** — cross-checked against
+//! `artifacts/quant_golden.bin` emitted from the Python reference.
+
+pub mod formats;
+pub mod golden;
+
+pub use formats::{
+    dequant_groups, e4m3_encode, e4m3_snap, e4m3_table, packed_bits_per_elem, quant_groups,
+    Precision, FP8_MAX, GROUP_SIZE, NVFP4_MAG, NVFP4_MAX,
+};

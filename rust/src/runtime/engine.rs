@@ -1,0 +1,314 @@
+//! The PJRT execution engine: compiles HLO-text artifacts once and runs
+//! prefill / decode steps against caller-owned cache state.
+//!
+//! One `Engine` per worker thread. Weights are uploaded to device buffers at
+//! construction and shared by every call (`execute_b`), so a decode step
+//! only transfers the per-request cache tensors and scalars.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{default_artifacts_dir, Manifest};
+use crate::runtime::weights::load_weights;
+
+/// Borrowed view of a request's quantized paged cache (layouts: DESIGN §1).
+pub struct QuantCache<'a> {
+    pub capacity: usize,
+    pub k_codes: &'a [u8],   // [L, C, Hkv, Dh]
+    pub k_scales: &'a [f32], // [L, C, Hkv, G]
+    pub v_codes: &'a [u8],
+    pub v_scales: &'a [f32],
+    pub tags: &'a [u8],  // [L, C]
+    pub mask: &'a [f32], // [L, C]
+    pub buf_k: &'a [f32],    // [L, BUF, Hkv, Dh]
+    pub buf_v: &'a [f32],
+    pub buf_mask: &'a [f32], // [L, BUF]
+}
+
+/// Outputs of one decode step.
+#[derive(Debug, Clone)]
+pub struct DecodeOut {
+    pub logits: Vec<f32>, // [V]
+    pub new_k: Vec<f32>,  // [L, Hkv, Dh] (post-RoPE)
+    pub new_v: Vec<f32>,  // [L, Hkv, Dh]
+    pub probs: Vec<f32>,  // [L, H, C+BUF]
+}
+
+/// Outputs of prompt prefill.
+#[derive(Debug, Clone)]
+pub struct PrefillOut {
+    pub logits: Vec<f32>, // [V] (last position)
+    pub k: Vec<f32>,      // [L, P, Hkv, Dh] post-RoPE
+    pub v: Vec<f32>,      // [L, P, Hkv, Dh]
+    pub obs: Vec<f32>,    // [L, P] SnapKV observation stats
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    exes: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative PJRT execute wall-time, for the Table-5 style breakdown.
+    pub exec_nanos: std::cell::Cell<u64>,
+    pub exec_calls: std::cell::Cell<u64>,
+}
+
+impl Engine {
+    pub fn new() -> Result<Engine> {
+        Engine::with_dir(&default_artifacts_dir())
+    }
+
+    pub fn with_dir(artifacts_dir: &str) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        let weights = load_weights(&format!("{artifacts_dir}/weights.bin"))?;
+        // sanity: weight order must match the manifest (HLO parameter order)
+        if weights.len() != manifest.weights.len() {
+            bail!(
+                "weights.bin has {} tensors, manifest lists {}",
+                weights.len(),
+                manifest.weights.len()
+            );
+        }
+        for (t, (name, shape)) in weights.iter().zip(&manifest.weights) {
+            if &t.name != name || &t.shape != shape {
+                bail!("weight mismatch: {} vs manifest {}", t.name, name);
+            }
+        }
+        let weight_bufs = weights
+            .iter()
+            .map(|t| {
+                client
+                    .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                    .map_err(to_anyhow)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Engine {
+            client,
+            manifest,
+            weight_bufs,
+            exes: RefCell::new(HashMap::new()),
+            exec_nanos: std::cell::Cell::new(0),
+            exec_calls: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn model(&self) -> &crate::model::ModelConfig {
+        &self.manifest.model
+    }
+
+    /// Raw client access (perf instrumentation / microbenches).
+    pub fn client_ref(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    fn exe(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.hlo_path(name);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(to_anyhow)
+            .with_context(|| format!("loading {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(self.client.compile(&comp).map_err(to_anyhow)?);
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Precompile an artifact (so later timing excludes compilation).
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        self.exe(name).map(|_| ())
+    }
+
+    fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .map_err(to_anyhow)
+    }
+
+    fn buf_u8(&self, data: &[u8], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<u8>(data, dims, None)
+            .map_err(to_anyhow)
+    }
+
+    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(data, dims, None)
+            .map_err(to_anyhow)
+    }
+
+    fn run_tuple(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let t0 = std::time::Instant::now();
+        let res = exe.execute_b(args).map_err(to_anyhow)?;
+        let lit = res[0][0].to_literal_sync().map_err(to_anyhow)?;
+        self.exec_nanos
+            .set(self.exec_nanos.get() + t0.elapsed().as_nanos() as u64);
+        self.exec_calls.set(self.exec_calls.get() + 1);
+        lit.to_tuple().map_err(to_anyhow)
+    }
+
+    /// Run one decode step over the quantized paged cache.
+    pub fn decode_quant(
+        &self,
+        token: i32,
+        pos: i32,
+        buf_idx: i32,
+        cache: &QuantCache,
+    ) -> Result<DecodeOut> {
+        let m = self.model().clone();
+        let (l, c, hkv, dh, g, b) = (
+            m.n_layers,
+            cache.capacity,
+            m.n_kv_heads,
+            m.d_head,
+            m.groups(),
+            m.buf_slots,
+        );
+        let name = self.manifest.decode_quant_name(c);
+        let exe = self.exe(&name)?;
+        let dyn_bufs = [
+            self.buf_i32(&[token], &[1])?,
+            self.buf_i32(&[pos], &[1])?,
+            self.buf_i32(&[buf_idx], &[1])?,
+            self.buf_u8(cache.k_codes, &[l, c, hkv, dh])?,
+            self.buf_f32(cache.k_scales, &[l, c, hkv, g])?,
+            self.buf_u8(cache.v_codes, &[l, c, hkv, dh])?,
+            self.buf_f32(cache.v_scales, &[l, c, hkv, g])?,
+            self.buf_u8(cache.tags, &[l, c])?,
+            self.buf_f32(cache.mask, &[l, c])?,
+            self.buf_f32(cache.buf_k, &[l, b, hkv, dh])?,
+            self.buf_f32(cache.buf_v, &[l, b, hkv, dh])?,
+            self.buf_f32(cache.buf_mask, &[l, b])?,
+        ];
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.extend(dyn_bufs.iter());
+        let outs = self.run_tuple(&exe, &args)?;
+        decode_out(outs)
+    }
+
+    /// Run one decode step over an f32 paged cache (FullKV / eviction-only).
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_fp32(
+        &self,
+        capacity: usize,
+        token: i32,
+        pos: i32,
+        buf_idx: i32,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        mask: &[f32],
+        buf_k: &[f32],
+        buf_v: &[f32],
+        buf_mask: &[f32],
+    ) -> Result<DecodeOut> {
+        let m = self.model().clone();
+        let (l, c, hkv, dh, b) = (m.n_layers, capacity, m.n_kv_heads, m.d_head, m.buf_slots);
+        let name = self.manifest.decode_fp32_name(c);
+        let exe = self.exe(&name)?;
+        let dyn_bufs = [
+            self.buf_i32(&[token], &[1])?,
+            self.buf_i32(&[pos], &[1])?,
+            self.buf_i32(&[buf_idx], &[1])?,
+            self.buf_f32(k_cache, &[l, c, hkv, dh])?,
+            self.buf_f32(v_cache, &[l, c, hkv, dh])?,
+            self.buf_f32(mask, &[l, c])?,
+            self.buf_f32(buf_k, &[l, b, hkv, dh])?,
+            self.buf_f32(buf_v, &[l, b, hkv, dh])?,
+            self.buf_f32(buf_mask, &[l, b])?,
+        ];
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.extend(dyn_bufs.iter());
+        let outs = self.run_tuple(&exe, &args)?;
+        decode_out(outs)
+    }
+
+    /// Run prompt prefill (tokens padded/truncated to the exported length).
+    pub fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
+        let m = self.model().clone();
+        let p = m.prefill_len;
+        let mut toks = vec![0i32; p];
+        for (i, t) in tokens.iter().take(p).enumerate() {
+            toks[i] = *t;
+        }
+        let exe = self.exe(&self.manifest.prefill_name())?;
+        let tok_buf = self.buf_i32(&toks, &[p])?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&tok_buf);
+        let outs = self.run_tuple(&exe, &args)?;
+        if outs.len() != 4 {
+            bail!("prefill returned {} outputs", outs.len());
+        }
+        Ok(PrefillOut {
+            logits: outs[0].to_vec::<f32>().map_err(to_anyhow)?,
+            k: outs[1].to_vec::<f32>().map_err(to_anyhow)?,
+            v: outs[2].to_vec::<f32>().map_err(to_anyhow)?,
+            obs: outs[3].to_vec::<f32>().map_err(to_anyhow)?,
+        })
+    }
+
+    /// Standalone fused attention (microbench / golden validation).
+    #[allow(clippy::too_many_arguments)]
+    pub fn attn_micro(
+        &self,
+        q: &[f32],
+        k_codes: &[u8],
+        k_scales: &[f32],
+        v_codes: &[u8],
+        v_scales: &[f32],
+        tags: &[u8],
+        mask: &[f32],
+        buf_k: &[f32],
+        buf_v: &[f32],
+        buf_mask: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let m = self.model().clone();
+        let c = self.manifest.micro_c;
+        let (h, hkv, dh, g, b) = (m.n_heads, m.n_kv_heads, m.d_head, m.groups(), m.buf_slots);
+        let exe = self.exe(&format!("attn_micro_c{c}"))?;
+        let bufs = [
+            self.buf_f32(q, &[h, dh])?,
+            self.buf_u8(k_codes, &[c, hkv, dh])?,
+            self.buf_f32(k_scales, &[c, hkv, g])?,
+            self.buf_u8(v_codes, &[c, hkv, dh])?,
+            self.buf_f32(v_scales, &[c, hkv, g])?,
+            self.buf_u8(tags, &[c])?,
+            self.buf_f32(mask, &[c])?,
+            self.buf_f32(buf_k, &[b, hkv, dh])?,
+            self.buf_f32(buf_v, &[b, hkv, dh])?,
+            self.buf_f32(buf_mask, &[b])?,
+        ];
+        let args: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let outs = self.run_tuple(&exe, &args)?;
+        if outs.len() != 2 {
+            bail!("attn_micro returned {} outputs", outs.len());
+        }
+        Ok((
+            outs[0].to_vec::<f32>().map_err(to_anyhow)?,
+            outs[1].to_vec::<f32>().map_err(to_anyhow)?,
+        ))
+    }
+}
+
+fn decode_out(outs: Vec<xla::Literal>) -> Result<DecodeOut> {
+    if outs.len() != 4 {
+        bail!("decode step returned {} outputs, want 4", outs.len());
+    }
+    Ok(DecodeOut {
+        logits: outs[0].to_vec::<f32>().map_err(to_anyhow)?,
+        new_k: outs[1].to_vec::<f32>().map_err(to_anyhow)?,
+        new_v: outs[2].to_vec::<f32>().map_err(to_anyhow)?,
+        probs: outs[3].to_vec::<f32>().map_err(to_anyhow)?,
+    })
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("{e}")
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from Rust.
+//!
+//! This is the only module that touches the `xla` crate. Pattern follows
+//! /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! One [`engine::Engine`] per worker thread (the PJRT handles are not Sync);
+//! weights are uploaded to device buffers once per engine and reused by
+//! every step (`execute_b`), so the per-step traffic is only the cache
+//! tensors + scalars.
+
+pub mod engine;
+pub mod weights;
+
+pub use engine::{DecodeOut, Engine, PrefillOut, QuantCache};
+pub use weights::{load_weights, Tensor};

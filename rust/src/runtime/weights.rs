@@ -1,0 +1,95 @@
+//! Reader for `artifacts/weights.bin` (TKVW format, written by aot.py):
+//! magic "TKVW", u32 version, u32 count, then per tensor:
+//! u32 name_len, name bytes, u32 ndim, u32 dims[], f32 data (LE).
+
+use anyhow::{bail, Context, Result};
+
+/// A named host tensor (f32).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+pub fn load_weights(path: &str) -> Result<Vec<Tensor>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    if bytes.len() < 12 || &bytes[..4] != b"TKVW" {
+        bail!("bad TKVW magic in {path}");
+    }
+    let mut off = 4usize;
+    let mut u32_at = |off: &mut usize| -> Result<u32> {
+        if *off + 4 > bytes.len() {
+            bail!("truncated TKVW file");
+        }
+        let v = u32::from_le_bytes(bytes[*off..*off + 4].try_into().unwrap());
+        *off += 4;
+        Ok(v)
+    };
+    let version = u32_at(&mut off)?;
+    if version != 1 {
+        bail!("unsupported TKVW version {version}");
+    }
+    let count = u32_at(&mut off)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = u32_at(&mut off)? as usize;
+        if off + name_len > bytes.len() {
+            bail!("truncated tensor name");
+        }
+        let name = String::from_utf8(bytes[off..off + name_len].to_vec())?;
+        off += name_len;
+        let ndim = u32_at(&mut off)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u32_at(&mut off)? as usize);
+        }
+        let n: usize = shape.iter().product();
+        if off + 4 * n > bytes.len() {
+            bail!("truncated tensor data for {name}");
+        }
+        let data: Vec<f32> = bytes[off..off + 4 * n]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        off += 4 * n;
+        out.push(Tensor { name, shape, data });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::default_artifacts_dir;
+
+    #[test]
+    fn loads_weights_if_built() {
+        let path = format!("{}/weights.bin", default_artifacts_dir());
+        if !std::path::Path::new(&path).exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let ws = load_weights(&path).unwrap();
+        assert!(ws.len() > 10);
+        assert_eq!(ws[0].name, "embed");
+        assert_eq!(ws[0].data.len(), ws[0].elem_count());
+        // weights are finite
+        for w in &ws {
+            assert!(w.data.iter().all(|x| x.is_finite()), "{}", w.name);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("thinkv_bad_weights.bin");
+        std::fs::write(&dir, b"NOPE....").unwrap();
+        assert!(load_weights(dir.to_str().unwrap()).is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! Line-delimited-JSON TCP serving front end + client.
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"prompt": [1, 2, 3], "id": 7}
+//!   <- {"id": 7, "tokens": [...], "ttft_ms": 1.2, "tpot_ms": 2.3,
+//!       "total_ms": 450.0, "avg_bits": 4.4}
+//! plus {"cmd": "stats"} / {"cmd": "shutdown"} control lines.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Coordinator, ServeConfig};
+use crate::util::json::{parse, Json};
+
+pub struct Server {
+    pub addr: String,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start serving on `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
+    /// Returns once the listener is bound; serving runs on a background
+    /// thread with its own coordinator.
+    pub fn start(addr: &str, cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let bound = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("thinkv-server".into())
+            .spawn(move || {
+                let coordinator = match Coordinator::start(cfg) {
+                    Ok(c) => Arc::new(c),
+                    Err(e) => {
+                        eprintln!("server: coordinator failed: {e:#}");
+                        return;
+                    }
+                };
+                let served = Arc::new(AtomicU64::new(0));
+                let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let c = Arc::clone(&coordinator);
+                            let stop3 = Arc::clone(&stop2);
+                            let served = Arc::clone(&served);
+                            conns.push(std::thread::spawn(move || {
+                                if let Err(e) = handle_conn(stream, &c, &stop3, &served) {
+                                    eprintln!("conn error: {e:#}");
+                                }
+                            }));
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(e) => {
+                            eprintln!("accept error: {e}");
+                            break;
+                        }
+                    }
+                }
+                for c in conns {
+                    let _ = c.join();
+                }
+            })?;
+        Ok(Server { addr: bound, stop, handle: Some(handle) })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    coordinator: &Coordinator,
+    stop: &AtomicBool,
+    served: &AtomicU64,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    // read timeout so connection threads notice shutdown even while idle
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(300))).ok();
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // peer closed
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let line = line.trim_end().to_string();
+        let req = match parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                let mut err = Json::obj();
+                err.set("error", Json::Str(format!("bad json: {e}")));
+                writeln!(writer, "{}", err.to_string())?;
+                continue;
+            }
+        };
+        if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
+            match cmd {
+                "stats" => {
+                    let mut out = Json::obj();
+                    out.set("inflight", Json::Num(coordinator.inflight() as f64));
+                    out.set("served", Json::Num(served.load(Ordering::SeqCst) as f64));
+                    out.set("mode", Json::Str(coordinator.config().mode.label()));
+                    writeln!(writer, "{}", out.to_string())?;
+                }
+                "shutdown" => {
+                    stop.store(true, Ordering::SeqCst);
+                    writeln!(writer, "{{\"ok\":true}}")?;
+                    break;
+                }
+                other => {
+                    writeln!(writer, "{{\"error\":\"unknown cmd {other}\"}}")?;
+                }
+            }
+            continue;
+        }
+        let prompt: Vec<i32> = req
+            .get("prompt")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(|x| x.as_f64().map(|v| v as i32)).collect())
+            .unwrap_or_default();
+        let req_id = req.get("id").and_then(Json::as_f64).unwrap_or(0.0);
+        let result = coordinator.submit(prompt)?.wait()?;
+        served.fetch_add(1, Ordering::SeqCst);
+        let mut out = Json::obj();
+        out.set("id", Json::Num(req_id));
+        out.set(
+            "tokens",
+            Json::Arr(result.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+        );
+        out.set("ttft_ms", Json::Num(result.ttft_ms));
+        out.set("tpot_ms", Json::Num(result.tpot_ms));
+        out.set("total_ms", Json::Num(result.total_ms));
+        out.set("avg_bits", Json::Num(result.avg_bits));
+        out.set("live_tokens", Json::Num(result.live_tokens as f64));
+        writeln!(writer, "{}", out.to_string())?;
+    }
+    Ok(())
+}
+
+/// Minimal blocking client for examples/benches.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    pub fn request(&mut self, prompt: &[i32], id: u64) -> Result<Json> {
+        let mut req = Json::obj();
+        req.set(
+            "prompt",
+            Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()),
+        );
+        req.set("id", Json::Num(id as f64));
+        writeln!(self.writer, "{}", req.to_string())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        writeln!(self.writer, "{{\"cmd\":\"stats\"}}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+    }
+}

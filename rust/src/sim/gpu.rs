@@ -1,0 +1,281 @@
+//! Analytic GPU cost model (hardware substitution, DESIGN §1).
+//!
+//! The decode stage of LRM serving is memory-bandwidth bound (paper §1,
+//! Recasens et al. 2025): per decode step each layer must stream its
+//! weights once per batch plus every request's live KV; eviction gathers
+//! add their own traffic which either serializes (R-KV seq) or contends
+//! with attention reads on HBM (R-KV ovl, Observation 4b). This module
+//! prices those byte flows on A100-80GB / GH200 profiles to regenerate the
+//! shape of Tables 2/3/4 and Figures 1c/7/9/10e.
+
+/// GPU hardware profile.
+#[derive(Debug, Clone)]
+pub struct GpuProfile {
+    pub name: &'static str,
+    pub hbm_gbps: f64,
+    pub mem_gb: f64,
+    /// Kernel launch + runtime overhead per layer per step (µs).
+    pub launch_us: f64,
+    /// Fraction of peak HBM bandwidth attainable by attention kernels.
+    pub bw_efficiency: f64,
+    /// Fraction of peak HBM bandwidth attainable by gather kernels —
+    /// irregular index-based accesses run far below streaming rate (§5.1).
+    pub gather_efficiency: f64,
+}
+
+impl GpuProfile {
+    pub fn a100_80gb() -> GpuProfile {
+        GpuProfile {
+            name: "A100-80GB",
+            hbm_gbps: 2039.0,
+            mem_gb: 80.0,
+            launch_us: 4.0,
+            bw_efficiency: 0.6,
+            gather_efficiency: 0.05,
+        }
+    }
+
+    pub fn gh200() -> GpuProfile {
+        GpuProfile {
+            name: "GH200",
+            hbm_gbps: 4023.0,
+            mem_gb: 96.0,
+            launch_us: 3.0,
+            bw_efficiency: 0.6,
+            gather_efficiency: 0.05,
+        }
+    }
+}
+
+/// Modeled LRM (the paper's evaluation models, not the toy PJRT model).
+#[derive(Debug, Clone)]
+pub struct LrmProfile {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub weight_gb: f64,
+    /// Activation/workspace overhead per request (GB).
+    pub act_gb_per_req: f64,
+}
+
+impl LrmProfile {
+    pub fn r1_llama_8b() -> LrmProfile {
+        LrmProfile {
+            name: "R1-Llama-8B",
+            n_layers: 32,
+            n_kv_heads: 8,
+            d_head: 128,
+            weight_gb: 16.0,
+            act_gb_per_req: 0.08,
+        }
+    }
+
+    pub fn gpt_oss_20b() -> LrmProfile {
+        LrmProfile {
+            name: "GPT-OSS-20B",
+            n_layers: 24,
+            n_kv_heads: 8,
+            d_head: 64,
+            weight_gb: 40.0,
+            act_gb_per_req: 0.09,
+        }
+    }
+
+    /// KV bytes per token (all layers) at `bits` per element, including
+    /// group-scale overhead already folded into `bits`.
+    pub fn kv_bytes_per_token(&self, bits: f64) -> f64 {
+        2.0 * self.n_layers as f64 * self.n_kv_heads as f64 * self.d_head as f64 * bits / 8.0
+    }
+
+    /// FullKV fp16 bytes per token.
+    pub fn fullkv_bytes_per_token(&self) -> f64 {
+        self.kv_bytes_per_token(16.0)
+    }
+}
+
+/// End-to-end serving cost calculator.
+#[derive(Debug, Clone)]
+pub struct ServingCost {
+    pub gpu: GpuProfile,
+    pub model: LrmProfile,
+}
+
+/// Per-step cost breakdown (µs) — the Table-5 style decomposition.
+#[derive(Debug, Clone, Default)]
+pub struct StepCost {
+    pub attention_us: f64,
+    pub mlp_weights_us: f64,
+    pub gather_us: f64,
+    pub overhead_us: f64, // policy bookkeeping (TBE / refresh / R-KV scoring)
+    pub launch_us: f64,
+}
+
+impl StepCost {
+    pub fn total_us(&self) -> f64 {
+        self.attention_us + self.mlp_weights_us + self.gather_us + self.overhead_us + self.launch_us
+    }
+}
+
+impl ServingCost {
+    pub fn new(gpu: GpuProfile, model: LrmProfile) -> ServingCost {
+        ServingCost { gpu, model }
+    }
+
+    fn eff_bw_bytes_per_us(&self) -> f64 {
+        self.gpu.hbm_gbps * self.gpu.bw_efficiency * 1e9 / 1e6
+    }
+
+    /// Max concurrent requests given per-request KV bytes (Table 2 "Batch").
+    pub fn max_batch(&self, kv_bytes_per_request: f64) -> usize {
+        let free = (self.gpu.mem_gb - self.model.weight_gb) * 1e9;
+        if free <= 0.0 {
+            return 0;
+        }
+        let per_req = kv_bytes_per_request + self.model.act_gb_per_req * 1e9;
+        (free / per_req).floor().max(0.0) as usize
+    }
+
+    /// One decode step for a batch.
+    ///
+    /// * `batch` — concurrent requests.
+    /// * `live_kv_bytes_per_req` — average live KV bytes per request (all
+    ///   layers, packed precision).
+    /// * `gather_bytes_per_req` — bytes moved by compaction this step.
+    /// * `overlapped_gather` — R-KV (ovl): gather runs on a side stream and
+    ///   contends with attention for HBM instead of serializing.
+    /// * `policy_overhead_us` — host/kernel bookkeeping (TBE k-means,
+    ///   thought refresh, R-KV scoring), already amortized per step.
+    pub fn decode_step(
+        &self,
+        batch: usize,
+        live_kv_bytes_per_req: f64,
+        gather_bytes_per_req: f64,
+        overlapped_gather: bool,
+        policy_overhead_us: f64,
+    ) -> StepCost {
+        let bw = self.eff_bw_bytes_per_us();
+        let weights_bytes = self.model.weight_gb * 1e9;
+        let kv_bytes = live_kv_bytes_per_req * batch as f64;
+        let gather_bytes = gather_bytes_per_req * batch as f64;
+
+        let attention_raw = kv_bytes / bw;
+        let mlp = weights_bytes / bw;
+        let launch = self.gpu.launch_us * self.model.n_layers as f64;
+
+        // gather runs at a fraction of streaming bandwidth (irregular,
+        // index-based accesses: the reason Figure 7 shows up-to-37x TPOT
+        // blowups for per-step compaction)
+        let gather_bw = bw * (self.gpu.gather_efficiency / self.gpu.bw_efficiency);
+        let (attention, gather) = if gather_bytes == 0.0 {
+            (attention_raw, 0.0)
+        } else if overlapped_gather {
+            // Observation 4b: overlapped gather hides behind attention at
+            // small batch, but contends for HBM as traffic grows — model as
+            // shared-bandwidth slowdown on attention (up to ~35%), plus the
+            // spill once gather outlasts the inflated attention.
+            let share = gather_bytes / (gather_bytes + kv_bytes.max(1.0));
+            let contention = 1.0 + (0.35_f64).min(share * 1.2);
+            let att = attention_raw * contention;
+            let spill = (gather_bytes / gather_bw - att).max(0.0) * 0.5;
+            (att, spill)
+        } else {
+            // Observation 4a: sequential gather serializes fully.
+            (attention_raw, gather_bytes / gather_bw)
+        };
+
+        StepCost {
+            attention_us: attention,
+            mlp_weights_us: mlp,
+            gather_us: gather,
+            overhead_us: policy_overhead_us,
+            launch_us: launch,
+        }
+    }
+
+    /// Aggregate throughput (tokens/s) for steady-state decode.
+    pub fn throughput_tok_s(&self, batch: usize, step: &StepCost) -> f64 {
+        if step.total_us() <= 0.0 {
+            return 0.0;
+        }
+        batch as f64 / (step.total_us() / 1e6)
+    }
+
+    /// Time-per-output-token (ms) for one user.
+    pub fn tpot_ms(&self, step: &StepCost) -> f64 {
+        step.total_us() / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost() -> ServingCost {
+        ServingCost::new(GpuProfile::a100_80gb(), LrmProfile::r1_llama_8b())
+    }
+
+    #[test]
+    fn fullkv_max_batch_is_small() {
+        let c = cost();
+        // FullKV at 32K tokens: 2*32*8*128*2B = 128KB/token -> 4.3GB/request
+        let kv = c.model.fullkv_bytes_per_token() * 32_768.0;
+        let b = c.max_batch(kv);
+        assert!((8..=20).contains(&b), "fullkv batch {b}"); // paper: 13
+    }
+
+    #[test]
+    fn compressed_cache_multiplies_batch() {
+        let c = cost();
+        let full = c.max_batch(c.model.fullkv_bytes_per_token() * 32_768.0);
+        // ThinKV: 1024-token budget at ~3.4 bits + fp buffer
+        let thinkv = c.max_batch(c.model.kv_bytes_per_token(3.4) * 1024.0);
+        assert!(thinkv > 20 * full, "full={full} thinkv={thinkv}");
+    }
+
+    #[test]
+    fn sequential_gather_serializes() {
+        let c = cost();
+        let kv = c.model.kv_bytes_per_token(16.0) * 1024.0;
+        let none = c.decode_step(64, kv, 0.0, false, 0.0);
+        let seq = c.decode_step(64, kv, kv * 0.5, false, 0.0);
+        let ovl = c.decode_step(64, kv, kv * 0.5, true, 0.0);
+        assert!(seq.total_us() > none.total_us());
+        assert!(ovl.total_us() < seq.total_us(), "overlap should help");
+        assert!(ovl.attention_us > none.attention_us, "contention inflates attention");
+    }
+
+    #[test]
+    fn contention_caps_at_35_percent() {
+        let c = cost();
+        let kv = c.model.kv_bytes_per_token(16.0) * 1024.0;
+        let ovl = c.decode_step(256, kv, kv * 10.0, true, 0.0);
+        let none = c.decode_step(256, kv, 0.0, false, 0.0);
+        assert!(ovl.attention_us <= none.attention_us * 1.351);
+    }
+
+    #[test]
+    fn throughput_scales_with_batch_until_kv_bound() {
+        let c = cost();
+        let kv = c.model.kv_bytes_per_token(3.4) * 1024.0;
+        let t1 = {
+            let s = c.decode_step(1, kv, 0.0, false, 0.0);
+            c.throughput_tok_s(1, &s)
+        };
+        let t256 = {
+            let s = c.decode_step(256, kv, 0.0, false, 0.0);
+            c.throughput_tok_s(256, &s)
+        };
+        assert!(t256 > 50.0 * t1, "batching must amortize weights: {t1} vs {t256}");
+    }
+
+    #[test]
+    fn gh200_faster_than_a100() {
+        let a = cost();
+        let g = ServingCost::new(GpuProfile::gh200(), LrmProfile::r1_llama_8b());
+        let kv = a.model.kv_bytes_per_token(3.4) * 1024.0;
+        let sa = a.decode_step(128, kv, 0.0, false, 0.0);
+        let sg = g.decode_step(128, kv, 0.0, false, 0.0);
+        assert!(sg.total_us() < sa.total_us());
+    }
+}

@@ -1,0 +1,28 @@
+//! Simulation substrates (DESIGN §1 substitution table):
+//!
+//! * [`gpu`] — analytic A100-80GB / GH200 cost model. Decode is memory
+//!   bound (paper §1), so step time ≈ bytes-moved / HBM bandwidth with
+//!   launch overheads and the §5.1 gather-contention term. Reproduces the
+//!   *shape* of Tables 2/3, Figures 7/9/10e.
+//! * [`trace`] — LRM reasoning-trace generator: thought-segmented token
+//!   streams with tri-modal attention sparsity (Obs. 1), importance
+//!   hierarchy R>E>T with outlier transition anchors (Obs. 2), and
+//!   association decay across transitions (Obs. 3), parameterized per
+//!   dataset (AIME / LiveCodeBench / MATH-500 / GSM8K, Fig 10f mixes).
+//! * [`oracle`] — counterfactual accuracy oracle: pass@1 as a function of
+//!   which tokens a policy retained, at what precision; quantization-noise
+//!   driven generation-length inflation (Fig 2/10d); endless-loop failure
+//!   when transition anchors are lost (§E.17, Fig 11a min-R).
+//! * [`harness`] — the simulation twin of the serving coordinator: runs any
+//!   compression method over a trace and reports accuracy / compression /
+//!   recall / call-rate metrics.
+
+pub mod gpu;
+pub mod harness;
+pub mod oracle;
+pub mod trace;
+
+pub use gpu::{GpuProfile, LrmProfile, ServingCost};
+pub use harness::{run_method, Method, SimConfig, SimResult};
+pub use oracle::Oracle;
+pub use trace::{DatasetProfile, Trace, TraceSegment};

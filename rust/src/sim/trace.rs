@@ -1,0 +1,447 @@
+//! LRM reasoning-trace simulator (data substitution, DESIGN §1).
+//!
+//! We cannot run R1-Llama-70B on AIME, but the paper tells us exactly which
+//! statistics of those runs its method depends on:
+//!
+//! * CoT = thought segments of ~100–300 tokens (§4.1) with dataset-specific
+//!   R/E/T mixes (Fig 10f) and mean generation lengths (§6.2).
+//! * Attention sparsity per thought is tri-modal: T ≈ 0.85 > R ≈ 0.55 >
+//!   E ≈ 0.25 (Fig 3 / Obs 1b).
+//! * Counterfactual importance: R > E > T, with ~10% outlier T anchors
+//!   (backtracking) of very high importance (Fig 4 / Obs 2, §E.17).
+//! * Association decays with every transition between segments (Fig 5 /
+//!   Obs 3); E thoughts depend strongly on the context bounded by
+//!   transitions.
+//!
+//! The generator reproduces those statistics; everything downstream
+//! (classifier, TBE, baselines, oracle) consumes only such statistics, so
+//! curve *shapes* transfer.
+
+use crate::kvcache::Thought;
+use crate::util::rng::Rng;
+
+/// Dataset workload profile.
+#[derive(Debug, Clone)]
+pub struct DatasetProfile {
+    pub name: &'static str,
+    pub mean_gen_len: usize,
+    /// (R, E, T) segment-type probabilities after the current segment.
+    pub mix: [f64; 3],
+    /// Mean segment length in tokens.
+    pub seg_len_mean: f64,
+    /// Base pass@1 accuracy of the uncompressed model (per-model scaling is
+    /// applied by the harness).
+    pub base_acc: f64,
+    /// Probability a transition segment is a high-importance anchor.
+    pub t_anchor_prob: f64,
+    pub prompt_len: usize,
+}
+
+impl DatasetProfile {
+    pub fn aime() -> DatasetProfile {
+        DatasetProfile {
+            name: "AIME",
+            mean_gen_len: 9020,
+            mix: [0.40, 0.33, 0.27], // R, E, T — complex: many transitions
+            seg_len_mean: 160.0,
+            base_acc: 0.50,
+            t_anchor_prob: 0.30,
+            prompt_len: 64,
+        }
+    }
+
+    pub fn livecodebench() -> DatasetProfile {
+        DatasetProfile {
+            name: "LiveCodeBench",
+            mean_gen_len: 14166,
+            mix: [0.34, 0.46, 0.20],
+            seg_len_mean: 190.0,
+            base_acc: 0.48,
+            t_anchor_prob: 0.25,
+            prompt_len: 64,
+        }
+    }
+
+    pub fn math500() -> DatasetProfile {
+        DatasetProfile {
+            name: "MATH-500",
+            mean_gen_len: 2468,
+            mix: [0.42, 0.45, 0.13], // simpler: few transitions (Fig 10f)
+            seg_len_mean: 150.0,
+            base_acc: 0.90,
+            t_anchor_prob: 0.20,
+            prompt_len: 64,
+        }
+    }
+
+    pub fn gsm8k() -> DatasetProfile {
+        DatasetProfile {
+            name: "GSM8K",
+            mean_gen_len: 1500,
+            mix: [0.40, 0.48, 0.12],
+            seg_len_mean: 120.0,
+            base_acc: 0.675,
+            t_anchor_prob: 0.18,
+            prompt_len: 48,
+        }
+    }
+
+    pub fn longwriter() -> DatasetProfile {
+        // LLM long-response generalization (§E.10): |T| = 1 — uniform
+        // "reasoning" statistics, no transitions.
+        DatasetProfile {
+            name: "LongWriter",
+            mean_gen_len: 6000,
+            mix: [1.0, 0.0, 0.0],
+            seg_len_mean: 200.0,
+            base_acc: 0.665,
+            t_anchor_prob: 0.0,
+            prompt_len: 64,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<DatasetProfile> {
+        match name.to_ascii_lowercase().as_str() {
+            "aime" => Some(Self::aime()),
+            "livecodebench" | "lcb" => Some(Self::livecodebench()),
+            "math500" | "math-500" => Some(Self::math500()),
+            "gsm8k" => Some(Self::gsm8k()),
+            "longwriter" => Some(Self::longwriter()),
+            _ => None,
+        }
+    }
+}
+
+/// Sparsity emission parameters per thought (Obs 1b regimes).
+pub fn sparsity_mean(t: Thought) -> f64 {
+    match t {
+        Thought::Execution => 0.25,
+        Thought::Reasoning => 0.55,
+        Thought::Transition => 0.85,
+    }
+}
+
+/// One simulated thought segment.
+#[derive(Debug, Clone)]
+pub struct TraceSegment {
+    pub id: usize,
+    pub thought: Thought,
+    pub start: usize,
+    pub len: usize,
+    /// Counterfactual importance weight (Obs 2 hierarchy).
+    pub importance: f64,
+    /// High-importance transition anchor (backtracking, §E.17).
+    pub anchor: bool,
+    /// Per-token info weights (sum 1): a few tokens carry most information.
+    pub token_info: Vec<f64>,
+}
+
+impl TraceSegment {
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+}
+
+/// A full simulated CoT generation.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub dataset: DatasetProfile,
+    pub segments: Vec<TraceSegment>,
+    pub gen_len: usize,
+    pub prompt_len: usize,
+    /// Per-token thought labels (prompt tokens = Reasoning per §6.1).
+    pub token_thought: Vec<Thought>,
+    /// Per-token, per-layer-band sparsity emissions for the classifier.
+    pub sparsity: Vec<f64>,
+    pub seed: u64,
+}
+
+impl Trace {
+    /// Generate a trace. `len_scale` shrinks generation lengths for cheap
+    /// benching (documented: budgets stay absolute, shapes preserved).
+    pub fn generate(dataset: &DatasetProfile, seed: u64, len_scale: f64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let target: usize =
+            ((dataset.mean_gen_len as f64 * len_scale * rng.uniform(0.75, 1.3)) as usize).max(256);
+        let mut segments = Vec::new();
+        let mut token_thought = vec![Thought::Reasoning; dataset.prompt_len];
+        let mut sparsity = Vec::with_capacity(dataset.prompt_len + target);
+        for _ in 0..dataset.prompt_len {
+            sparsity.push(rng.normal_with(sparsity_mean(Thought::Reasoning), 0.05).clamp(0.0, 1.0));
+        }
+
+        // prompt pseudo-segment
+        segments.push(TraceSegment {
+            id: 0,
+            thought: Thought::Reasoning,
+            start: 0,
+            len: dataset.prompt_len,
+            importance: 0.9,
+            anchor: false,
+            token_info: dirichlet_like(&mut rng, dataset.prompt_len),
+        });
+
+        let mut pos = dataset.prompt_len;
+        let mut prev = Thought::Reasoning;
+        while pos < dataset.prompt_len + target {
+            let thought = sample_thought(&mut rng, dataset, prev);
+            let len = rng.seg_len(dataset.seg_len_mean, 48, 320)
+                .min(dataset.prompt_len + target - pos)
+                .max(16);
+            let anchor = thought == Thought::Transition && rng.chance(dataset.t_anchor_prob);
+            let importance = match thought {
+                // Obs 2: R > E > T, anchors override
+                Thought::Reasoning => rng.uniform(0.55, 0.95),
+                Thought::Execution => rng.uniform(0.3, 0.65),
+                Thought::Transition => {
+                    if anchor {
+                        rng.uniform(0.75, 1.0)
+                    } else {
+                        rng.uniform(0.02, 0.2)
+                    }
+                }
+            };
+            segments.push(TraceSegment {
+                id: segments.len(),
+                thought,
+                start: pos,
+                len,
+                importance,
+                anchor,
+                token_info: dirichlet_like(&mut rng, len),
+            });
+            for _ in 0..len {
+                token_thought.push(thought);
+                sparsity.push(
+                    rng.normal_with(sparsity_mean(thought), 0.045).clamp(0.0, 1.0),
+                );
+            }
+            pos += len;
+            prev = thought;
+        }
+        let gen_len = pos - dataset.prompt_len;
+        Trace {
+            dataset: dataset.clone(),
+            segments,
+            gen_len,
+            prompt_len: dataset.prompt_len,
+            token_thought,
+            sparsity,
+            seed,
+        }
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.prompt_len + self.gen_len
+    }
+
+    /// Segment containing token `pos`.
+    pub fn segment_of(&self, pos: usize) -> &TraceSegment {
+        let i = self
+            .segments
+            .partition_point(|s| s.end() <= pos)
+            .min(self.segments.len() - 1);
+        &self.segments[i]
+    }
+
+    /// Transitions between segment `i` and the segment active at `pos`.
+    pub fn transitions_between(&self, seg: usize, pos: usize) -> usize {
+        self.segments
+            .iter()
+            .filter(|s| {
+                s.thought == Thought::Transition && s.start >= self.segments[seg].end() && s.end() <= pos
+            })
+            .count()
+    }
+
+    /// Ground-truth attention weight of token `j` for the query at `pos`
+    /// (un-normalized): token info × segment importance × association decay
+    /// across transitions (Obs 3), with locality bonus inside the current
+    /// segment.
+    pub fn attn_weight(&self, pos: usize, j: usize) -> f64 {
+        debug_assert!(j < pos);
+        let sj = self.segment_of(j);
+        let cur = self.segment_of(pos);
+        let info = sj.token_info[j - sj.start] * sj.len as f64; // ~O(1) scale
+        if sj.id == cur.id {
+            // strong local attention within the active segment
+            return info * 1.2 + 0.4;
+        }
+        let hops = self.transitions_between(sj.id, pos) as f64;
+        let decay = 0.55_f64.powf(hops);
+        let anchor_boost = if sj.anchor { 2.5 } else { 1.0 };
+        (info * sj.importance * anchor_boost) * decay + 0.01
+    }
+
+    /// Ground-truth top-k important positions for the query at `pos`
+    /// (recall-rate experiments, Fig 10a).
+    pub fn top_k_positions(&self, pos: usize, k: usize) -> Vec<usize> {
+        let mut w: Vec<(f64, usize)> =
+            (0..pos).map(|j| (self.attn_weight(pos, j), j)).collect();
+        w.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        w.truncate(k);
+        w.into_iter().map(|(_, j)| j).collect()
+    }
+
+    /// Percentage thought breakdown over generated tokens (Fig 10f).
+    pub fn thought_breakdown(&self) -> [f64; 3] {
+        let mut counts = [0usize; 3];
+        for &t in &self.token_thought[self.prompt_len..] {
+            counts[t as usize] += 1;
+        }
+        let n = self.gen_len.max(1) as f64;
+        // order: R, E, T for reporting
+        [
+            counts[Thought::Reasoning as usize] as f64 / n * 100.0,
+            counts[Thought::Execution as usize] as f64 / n * 100.0,
+            counts[Thought::Transition as usize] as f64 / n * 100.0,
+        ]
+    }
+}
+
+/// Thought transition kernel: segments tend to alternate R->E, transitions
+/// arrive per the dataset mix, and a transition is followed by reasoning
+/// (backtracking re-plans) more often than execution.
+fn sample_thought(rng: &mut Rng, d: &DatasetProfile, prev: Thought) -> Thought {
+    if d.mix[2] == 0.0 && d.mix[1] == 0.0 {
+        return Thought::Reasoning; // LLM mode (|T| = 1)
+    }
+    let w = match prev {
+        Thought::Reasoning => [d.mix[0] * 0.5, d.mix[1] * 1.8, d.mix[2]],
+        Thought::Execution => [d.mix[0] * 1.5, d.mix[1] * 0.6, d.mix[2] * 1.3],
+        Thought::Transition => [d.mix[0] * 2.2, d.mix[1] * 0.7, d.mix[2] * 0.2],
+    };
+    match rng.weighted(&w) {
+        0 => Thought::Reasoning,
+        1 => Thought::Execution,
+        _ => Thought::Transition,
+    }
+}
+
+/// Heavy-tailed per-token info weights summing to 1 (a few tokens carry
+/// most of a segment's information).
+fn dirichlet_like(rng: &mut Rng, n: usize) -> Vec<f64> {
+    let mut w: Vec<f64> = (0..n)
+        .map(|_| {
+            let u = rng.f64().max(1e-9);
+            // ~Pareto tail
+            if rng.chance(0.1) {
+                3.0 + 8.0 * u
+            } else {
+                u
+            }
+        })
+        .collect();
+    let total: f64 = w.iter().sum();
+    for x in &mut w {
+        *x /= total;
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_covers_target_length() {
+        let t = Trace::generate(&DatasetProfile::aime(), 1, 0.25);
+        assert!(t.gen_len >= 256);
+        assert_eq!(t.token_thought.len(), t.total_len());
+        assert_eq!(t.sparsity.len(), t.total_len());
+        assert_eq!(
+            t.segments.iter().map(|s| s.len).sum::<usize>(),
+            t.total_len()
+        );
+    }
+
+    #[test]
+    fn segments_are_contiguous() {
+        let t = Trace::generate(&DatasetProfile::livecodebench(), 2, 0.1);
+        for w in t.segments.windows(2) {
+            assert_eq!(w[0].end(), w[1].start);
+        }
+        // segment_of agrees
+        for pos in [0, t.prompt_len, t.total_len() / 2, t.total_len() - 1] {
+            let s = t.segment_of(pos);
+            assert!(s.start <= pos && pos < s.end());
+        }
+    }
+
+    #[test]
+    fn sparsity_is_trimodal_by_thought() {
+        let t = Trace::generate(&DatasetProfile::aime(), 3, 0.3);
+        let mut by = std::collections::BTreeMap::new();
+        for (i, &th) in t.token_thought.iter().enumerate() {
+            by.entry(th as usize).or_insert_with(Vec::new).push(t.sparsity[i]);
+        }
+        let mean = |v: &Vec<f64>| v.iter().sum::<f64>() / v.len() as f64;
+        let e = mean(&by[&(Thought::Execution as usize)]);
+        let r = mean(&by[&(Thought::Reasoning as usize)]);
+        let tt = mean(&by[&(Thought::Transition as usize)]);
+        assert!(e < r && r < tt, "E={e} R={r} T={tt}");
+    }
+
+    #[test]
+    fn importance_hierarchy_holds_in_expectation() {
+        let t = Trace::generate(&DatasetProfile::aime(), 4, 0.5);
+        let avg = |th: Thought| {
+            let v: Vec<f64> = t
+                .segments
+                .iter()
+                .filter(|s| s.thought == th && !s.anchor)
+                .map(|s| s.importance)
+                .collect();
+            v.iter().sum::<f64>() / v.len().max(1) as f64
+        };
+        assert!(avg(Thought::Reasoning) > avg(Thought::Execution));
+        assert!(avg(Thought::Execution) > avg(Thought::Transition));
+    }
+
+    #[test]
+    fn association_decays_across_transitions() {
+        let t = Trace::generate(&DatasetProfile::aime(), 5, 0.4);
+        // find a segment with >= 2 transitions after it
+        let pos = t.total_len() - 1;
+        let early = &t.segments[1];
+        let late = t.segment_of(pos.saturating_sub(40));
+        if t.transitions_between(early.id, pos) >= 2 && late.id != t.segment_of(pos).id {
+            let w_early: f64 = (early.start..early.end()).map(|j| t.attn_weight(pos, j)).sum();
+            let w_late: f64 = (late.start..late.end().min(pos))
+                .map(|j| t.attn_weight(pos, j))
+                .sum();
+            assert!(
+                w_late > w_early * 0.8,
+                "older-with-transitions should not dominate: early={w_early} late={w_late}"
+            );
+        }
+    }
+
+    #[test]
+    fn aime_has_more_transitions_than_math() {
+        let a: f64 = (0..5)
+            .map(|s| Trace::generate(&DatasetProfile::aime(), s, 0.3).thought_breakdown()[2])
+            .sum::<f64>()
+            / 5.0;
+        let m: f64 = (0..5)
+            .map(|s| Trace::generate(&DatasetProfile::math500(), s, 0.3).thought_breakdown()[2])
+            .sum::<f64>()
+            / 5.0;
+        assert!(a > m, "AIME T% {a} vs MATH T% {m}");
+    }
+
+    #[test]
+    fn token_info_sums_to_one() {
+        let t = Trace::generate(&DatasetProfile::math500(), 6, 0.2);
+        for s in &t.segments {
+            let total: f64 = s.token_info.iter().sum();
+            assert!((total - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn llm_mode_is_single_thought() {
+        let t = Trace::generate(&DatasetProfile::longwriter(), 7, 0.2);
+        assert!(t.token_thought.iter().all(|&x| x == Thought::Reasoning));
+    }
+}

@@ -1,0 +1,168 @@
+//! Offline calibration (paper §4.1, Algorithm 1 in §D.1).
+//!
+//! Input: per-prompt, per-layer sparsity series collected while generating
+//! on a calibration set (the paper samples 100 prompts from s1K; we use the
+//! LRM trace simulator and/or the real tiny model).
+//!
+//! Output: the optimal layer subset L* (layers whose sparsity KDE exhibits
+//! |T| modes, intersected across prompts with a tolerance vote) and the
+//! averaged thresholds Θ = {θ_1, ..., θ_{|T|-1}}.
+
+use super::kde::Kde;
+
+#[derive(Debug, Clone)]
+pub struct CalibrationResult {
+    /// Selected layer subset L* (indices).
+    pub layers: Vec<usize>,
+    /// Thresholds θ (ascending), |T|-1 of them.
+    pub thresholds: Vec<f64>,
+    /// Per-layer vote counts (how many prompts showed |T| modes).
+    pub votes: Vec<usize>,
+}
+
+/// `series[prompt][layer]` = sparsity samples (one per decode step).
+/// `n_thoughts` = |T| (3 for LRMs, 1 for plain LLMs — then no thresholds).
+/// `max_layers` = |L*| cap (paper: 4).
+pub fn calibrate(
+    series: &[Vec<Vec<f64>>],
+    n_thoughts: usize,
+    max_layers: usize,
+    min_rel_height: f64,
+) -> CalibrationResult {
+    assert!(!series.is_empty());
+    let n_layers = series[0].len();
+    if n_thoughts <= 1 {
+        return CalibrationResult {
+            layers: (0..n_layers.min(max_layers)).collect(),
+            thresholds: Vec::new(),
+            votes: vec![series.len(); n_layers],
+        };
+    }
+    // Vote: per layer, count prompts whose KDE has exactly |T| modes,
+    // remembering each (layer, prompt) threshold set.
+    let mut votes = vec![0usize; n_layers];
+    let mut per_layer_thresholds: Vec<Vec<Vec<f64>>> = vec![Vec::new(); n_layers];
+    for prompt in series {
+        for (l, samples) in prompt.iter().enumerate() {
+            if samples.len() < 8 {
+                continue;
+            }
+            let kde = Kde::fit(samples, 256, 1e-3);
+            let modes = kde.modes(min_rel_height);
+            if modes.len() == n_thoughts {
+                votes[l] += 1;
+                per_layer_thresholds[l].push(kde.thresholds(min_rel_height));
+            }
+        }
+    }
+    // The paper intersects across all prompts (Algorithm 1 line 24); with
+    // small calibration sets we rank by votes and keep the top max_layers
+    // with at least a majority (documented relaxation, same selection
+    // criterion in the limit).
+    let majority = series.len().div_ceil(2);
+    let mut ranked: Vec<usize> = (0..n_layers).filter(|&l| votes[l] >= majority).collect();
+    ranked.sort_by(|&a, &b| votes[b].cmp(&votes[a]).then(a.cmp(&b)));
+    ranked.truncate(max_layers);
+    if ranked.is_empty() {
+        // degenerate fallback: best-voted layer
+        let best = (0..n_layers).max_by_key(|&l| votes[l]).unwrap_or(0);
+        ranked.push(best);
+    }
+
+    // Average thresholds over selected layers and their prompt fits.
+    let mut thresholds = vec![0.0; n_thoughts - 1];
+    let mut count = 0usize;
+    for &l in &ranked {
+        for t in &per_layer_thresholds[l] {
+            if t.len() == n_thoughts - 1 {
+                for (i, &x) in t.iter().enumerate() {
+                    thresholds[i] += x;
+                }
+                count += 1;
+            }
+        }
+    }
+    if count > 0 {
+        for t in &mut thresholds {
+            *t /= count as f64;
+        }
+    } else {
+        // fallback to reasonable priors from the paper's Figure 3 regimes
+        thresholds = default_thresholds(n_thoughts);
+    }
+    CalibrationResult { layers: ranked, thresholds, votes }
+}
+
+/// Fallback thresholds matching the sparsity regimes in Figure 3.
+pub fn default_thresholds(n_thoughts: usize) -> Vec<f64> {
+    match n_thoughts {
+        3 => vec![0.42, 0.7],
+        2 => vec![0.55],
+        _ => Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Build synthetic per-prompt series where `good` layers are tri-modal
+    /// and others unimodal.
+    fn synth(prompts: usize, layers: usize, good: &[usize], seed: u64) -> Vec<Vec<Vec<f64>>> {
+        let mut rng = Rng::new(seed);
+        (0..prompts)
+            .map(|_| {
+                (0..layers)
+                    .map(|l| {
+                        (0..300)
+                            .map(|i| {
+                                if good.contains(&l) {
+                                    let mean = [0.25, 0.55, 0.85][i % 3];
+                                    rng.normal_with(mean, 0.04).clamp(0.0, 1.0)
+                                } else {
+                                    rng.normal_with(0.5, 0.05).clamp(0.0, 1.0)
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn selects_trimodal_layers() {
+        let series = synth(6, 8, &[1, 3, 5, 6], 7);
+        let r = calibrate(&series, 3, 4, 0.12);
+        let mut got = r.layers.clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 3, 5, 6]);
+        assert_eq!(r.thresholds.len(), 2);
+        assert!(r.thresholds[0] > 0.3 && r.thresholds[0] < 0.5, "{:?}", r.thresholds);
+        assert!(r.thresholds[1] > 0.62 && r.thresholds[1] < 0.8, "{:?}", r.thresholds);
+    }
+
+    #[test]
+    fn caps_at_max_layers() {
+        let series = synth(4, 8, &[0, 1, 2, 3, 4, 5], 8);
+        let r = calibrate(&series, 3, 4, 0.12);
+        assert_eq!(r.layers.len(), 4);
+    }
+
+    #[test]
+    fn single_thought_type_short_circuits() {
+        let series = synth(2, 4, &[], 9);
+        let r = calibrate(&series, 1, 4, 0.12);
+        assert!(r.thresholds.is_empty());
+        assert!(!r.layers.is_empty());
+    }
+
+    #[test]
+    fn no_trimodal_layers_falls_back() {
+        let series = synth(4, 4, &[], 10);
+        let r = calibrate(&series, 3, 4, 0.12);
+        assert!(!r.layers.is_empty());
+        assert_eq!(r.thresholds.len(), 2); // default priors
+    }
+}

@@ -1,0 +1,164 @@
+//! Decode-time thought classifier φ (paper §4.1 "Decode-Time Behavior"):
+//! average the per-step sparsity over the calibrated layer subset L*,
+//! accumulate over the refresh window τ, and compare against Θ at each
+//! refresh boundary to label the *next* segment's thought type.
+
+use crate::kvcache::Thought;
+
+#[derive(Debug, Clone)]
+pub struct ClassifierConfig {
+    /// Calibrated layer subset L*.
+    pub layers: Vec<usize>,
+    /// Ascending thresholds Θ (|T|-1 entries; empty => always Reasoning).
+    pub thresholds: Vec<f64>,
+    /// Refresh interval τ (tokens per thought segment), paper default 128.
+    pub refresh: usize,
+}
+
+impl Default for ClassifierConfig {
+    fn default() -> Self {
+        ClassifierConfig {
+            layers: vec![0, 1, 2, 3],
+            thresholds: super::calibration::default_thresholds(3),
+            refresh: 128,
+        }
+    }
+}
+
+/// Streaming classifier: feed per-layer sparsity each step; ask at refresh
+/// boundaries for the window's thought type.
+#[derive(Debug, Clone)]
+pub struct Classifier {
+    pub cfg: ClassifierConfig,
+    acc: f64,
+    n: usize,
+    /// Sparsity trace (window means), for diagnostics/Figure 3 dumps.
+    pub window_means: Vec<f64>,
+}
+
+impl Classifier {
+    pub fn new(cfg: ClassifierConfig) -> Classifier {
+        Classifier { cfg, acc: 0.0, n: 0, window_means: Vec::new() }
+    }
+
+    /// Map an averaged sparsity value to a thought type via Θ.
+    /// Sparsity regimes (Obs. 1b): E lowest, R middle, T highest.
+    pub fn classify_value(&self, sparsity: f64) -> Thought {
+        let th = &self.cfg.thresholds;
+        match th.len() {
+            0 => Thought::Reasoning,
+            1 => {
+                if sparsity <= th[0] {
+                    Thought::Execution
+                } else {
+                    Thought::Reasoning
+                }
+            }
+            _ => {
+                if sparsity <= th[0] {
+                    Thought::Execution
+                } else if sparsity <= th[1] {
+                    Thought::Reasoning
+                } else {
+                    Thought::Transition
+                }
+            }
+        }
+    }
+
+    /// Feed one decode step's per-layer sparsity (full layer vector; the
+    /// classifier selects L* itself).
+    pub fn push_step(&mut self, per_layer: &[f64]) {
+        let mut s = 0.0;
+        let mut n = 0usize;
+        for &l in &self.cfg.layers {
+            if l < per_layer.len() {
+                s += per_layer[l];
+                n += 1;
+            }
+        }
+        if n > 0 {
+            self.acc += s / n as f64;
+            self.n += 1;
+        }
+    }
+
+    /// Steps accumulated since the last refresh.
+    pub fn window_len(&self) -> usize {
+        self.n
+    }
+
+    /// True when the window reached τ.
+    pub fn due(&self) -> bool {
+        self.n >= self.cfg.refresh
+    }
+
+    /// Close the window: return the thought label for the elapsed window
+    /// and reset. Returns Reasoning for an empty window.
+    pub fn refresh(&mut self) -> Thought {
+        let mean = if self.n > 0 { self.acc / self.n as f64 } else { 0.5 };
+        self.window_means.push(mean);
+        self.acc = 0.0;
+        self.n = 0;
+        self.classify_value(mean)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ClassifierConfig {
+        ClassifierConfig {
+            layers: vec![0, 1],
+            thresholds: vec![0.42, 0.7],
+            refresh: 4,
+        }
+    }
+
+    #[test]
+    fn classify_regimes() {
+        let c = Classifier::new(cfg());
+        assert_eq!(c.classify_value(0.2), Thought::Execution);
+        assert_eq!(c.classify_value(0.55), Thought::Reasoning);
+        assert_eq!(c.classify_value(0.9), Thought::Transition);
+    }
+
+    #[test]
+    fn window_accumulates_selected_layers_only() {
+        let mut c = Classifier::new(cfg());
+        for _ in 0..4 {
+            // layers 0,1 sparse (T regime); layers 2,3 dense — ignored
+            c.push_step(&[0.9, 0.85, 0.1, 0.1]);
+        }
+        assert!(c.due());
+        assert_eq!(c.refresh(), Thought::Transition);
+        assert_eq!(c.window_len(), 0);
+    }
+
+    #[test]
+    fn refresh_resets_window() {
+        let mut c = Classifier::new(cfg());
+        for _ in 0..4 {
+            c.push_step(&[0.2, 0.2]);
+        }
+        assert_eq!(c.refresh(), Thought::Execution);
+        for _ in 0..4 {
+            c.push_step(&[0.6, 0.6]);
+        }
+        assert_eq!(c.refresh(), Thought::Reasoning);
+        assert_eq!(c.window_means.len(), 2);
+    }
+
+    #[test]
+    fn single_threshold_llm_mode() {
+        let mut c = Classifier::new(ClassifierConfig {
+            layers: vec![0],
+            thresholds: vec![],
+            refresh: 2,
+        });
+        c.push_step(&[0.99]);
+        c.push_step(&[0.99]);
+        assert_eq!(c.refresh(), Thought::Reasoning); // |T|=1: all one class
+    }
+}

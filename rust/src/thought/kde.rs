@@ -1,0 +1,183 @@
+//! Gaussian kernel density estimation (Parzen 1962) with Silverman's
+//! bandwidth — the statistical core of Algorithm 1 (§D.1): per-layer
+//! sparsity distributions are KDE'd, their **modes** counted to select L*,
+//! and the **local minima between modes** become the thresholds Θ.
+
+/// A 1-D Gaussian KDE evaluated on a fixed grid.
+#[derive(Debug, Clone)]
+pub struct Kde {
+    pub grid: Vec<f64>,
+    pub density: Vec<f64>,
+    pub bandwidth: f64,
+}
+
+impl Kde {
+    /// Fit on samples with Silverman's rule-of-thumb bandwidth
+    /// h = 0.9 * min(sigma, IQR/1.34) * n^(-1/5), clamped to `min_bw`.
+    pub fn fit(samples: &[f64], grid_points: usize, min_bw: f64) -> Kde {
+        assert!(!samples.is_empty());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        let sigma = var.sqrt();
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f64 {
+            let pos = p * (sorted.len() - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = pos.ceil() as usize;
+            if lo == hi {
+                sorted[lo]
+            } else {
+                sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+            }
+        };
+        let iqr = q(0.75) - q(0.25);
+        let spread = if iqr > 0.0 { sigma.min(iqr / 1.34) } else { sigma };
+        let bw = (0.9 * spread * n.powf(-0.2)).max(min_bw);
+
+        let lo = sorted[0] - 3.0 * bw;
+        let hi = sorted[sorted.len() - 1] + 3.0 * bw;
+        let grid: Vec<f64> = (0..grid_points)
+            .map(|i| lo + (hi - lo) * i as f64 / (grid_points - 1) as f64)
+            .collect();
+        let inv = 1.0 / (bw * (2.0 * std::f64::consts::PI).sqrt() * n);
+        let density: Vec<f64> = grid
+            .iter()
+            .map(|&x| {
+                samples
+                    .iter()
+                    .map(|&s| (-(x - s) * (x - s) / (2.0 * bw * bw)).exp())
+                    .sum::<f64>()
+                    * inv
+            })
+            .collect();
+        Kde { grid, density, bandwidth: bw }
+    }
+
+    /// Indices of local maxima (modes), filtered to peaks at least
+    /// `min_rel_height` of the global max, with peaks closer than two
+    /// bandwidths merged (keeps the taller) to suppress sampling ripples.
+    pub fn modes(&self, min_rel_height: f64) -> Vec<usize> {
+        let d = &self.density;
+        let peak = d.iter().cloned().fold(0f64, f64::max);
+        let mut raw = Vec::new();
+        for i in 1..d.len() - 1 {
+            if d[i] > d[i - 1] && d[i] >= d[i + 1] && d[i] >= peak * min_rel_height {
+                raw.push(i);
+            }
+        }
+        // merge near-duplicates (< 2 bandwidths apart, and no deep valley
+        // between them)
+        let mut out: Vec<usize> = Vec::new();
+        for i in raw {
+            match out.last().copied() {
+                Some(prev)
+                    if (self.grid[i] - self.grid[prev]).abs() < 2.0 * self.bandwidth
+                        || self.density_at_min_between(prev, i)
+                            > 0.8 * d[prev].min(d[i]) =>
+                {
+                    if d[i] > d[prev] {
+                        *out.last_mut().unwrap() = i;
+                    }
+                }
+                _ => out.push(i),
+            }
+        }
+        out
+    }
+
+    fn density_at_min_between(&self, a: usize, b: usize) -> f64 {
+        let (lo, hi) = (a.min(b), a.max(b));
+        self.density[lo..=hi]
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Grid x-positions of the modes.
+    pub fn mode_positions(&self, min_rel_height: f64) -> Vec<f64> {
+        self.modes(min_rel_height).into_iter().map(|i| self.grid[i]).collect()
+    }
+
+    /// The minimum-density grid position between two grid indices
+    /// (the paper's inter-mode threshold).
+    pub fn min_between(&self, a: usize, b: usize) -> f64 {
+        let (lo, hi) = (a.min(b), a.max(b));
+        let mut best = lo;
+        for i in lo..=hi {
+            if self.density[i] < self.density[best] {
+                best = i;
+            }
+        }
+        self.grid[best]
+    }
+
+    /// Thresholds between consecutive modes (len = modes-1).
+    pub fn thresholds(&self, min_rel_height: f64) -> Vec<f64> {
+        let m = self.modes(min_rel_height);
+        m.windows(2).map(|w| self.min_between(w[0], w[1])).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn trimodal_samples(n: usize, seed: u64) -> Vec<f64> {
+        // the paper's tri-modal sparsity: E ~0.25, R ~0.55, T ~0.85
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let c = i % 3;
+                let mean = [0.25, 0.55, 0.85][c];
+                (rng.normal_with(mean, 0.04)).clamp(0.0, 1.0)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn finds_three_modes_on_trimodal_data() {
+        let kde = Kde::fit(&trimodal_samples(600, 3), 256, 1e-3);
+        let modes = kde.mode_positions(0.12);
+        assert_eq!(modes.len(), 3, "modes at {modes:?}");
+        assert!((modes[0] - 0.25).abs() < 0.08);
+        assert!((modes[1] - 0.55).abs() < 0.08);
+        assert!((modes[2] - 0.85).abs() < 0.08);
+    }
+
+    #[test]
+    fn thresholds_fall_between_modes() {
+        let kde = Kde::fit(&trimodal_samples(600, 4), 256, 1e-3);
+        let th = kde.thresholds(0.12);
+        assert_eq!(th.len(), 2);
+        assert!(th[0] > 0.3 && th[0] < 0.5, "{th:?}");
+        assert!(th[1] > 0.62 && th[1] < 0.8, "{th:?}");
+    }
+
+    #[test]
+    fn unimodal_data_has_one_mode() {
+        let mut rng = Rng::new(5);
+        let samples: Vec<f64> = (0..400).map(|_| rng.normal_with(0.5, 0.05)).collect();
+        let kde = Kde::fit(&samples, 256, 1e-3);
+        assert_eq!(kde.modes(0.12).len(), 1);
+        assert!(kde.thresholds(0.12).is_empty());
+    }
+
+    #[test]
+    fn density_integrates_to_one() {
+        let samples = trimodal_samples(300, 6);
+        let kde = Kde::fit(&samples, 512, 1e-3);
+        let dx = kde.grid[1] - kde.grid[0];
+        let total: f64 = kde.density.iter().sum::<f64>() * dx;
+        assert!((total - 1.0).abs() < 0.02, "{total}");
+    }
+
+    #[test]
+    fn bandwidth_clamped() {
+        let samples = vec![0.5; 64]; // zero spread
+        let kde = Kde::fit(&samples, 64, 1e-3);
+        assert!(kde.bandwidth >= 1e-3);
+    }
+}

@@ -1,0 +1,14 @@
+//! Thought decomposition (paper §3.1, §4.1): attention-sparsity tracking,
+//! KDE-based offline calibration of the sparsity thresholds Θ and the
+//! optimal layer subset L*, and the decode-time classifier φ with refresh
+//! interval τ.
+
+pub mod calibration;
+pub mod classifier;
+pub mod kde;
+pub mod sparsity;
+
+pub use calibration::{calibrate, CalibrationResult};
+pub use classifier::{Classifier, ClassifierConfig};
+pub use kde::Kde;
+pub use sparsity::{row_sparsity, sparsity_per_layer};

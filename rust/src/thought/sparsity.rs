@@ -1,0 +1,103 @@
+//! Attention-sparsity measurement (paper §3.1 footnote 2): sparsity of a
+//! normalized attention row = fraction of entries below 1% of the row max,
+//! measured over *valid* cache slots, averaged across heads.
+
+/// Sparsity of one head's softmax row restricted to valid slots.
+/// `probs` and `valid` have the same length; `valid[i] > 0` marks live slots.
+pub fn row_sparsity(probs: &[f32], valid: &[f32], rel_threshold: f32) -> f64 {
+    debug_assert_eq!(probs.len(), valid.len());
+    let mut max = 0f32;
+    let mut n = 0usize;
+    for (p, v) in probs.iter().zip(valid) {
+        if *v > 0.0 {
+            max = max.max(*p);
+            n += 1;
+        }
+    }
+    if n == 0 || max <= 0.0 {
+        return 0.0;
+    }
+    let thr = rel_threshold * max;
+    let sparse = probs
+        .iter()
+        .zip(valid)
+        .filter(|(p, v)| **v > 0.0 && **p < thr)
+        .count();
+    sparse as f64 / n as f64
+}
+
+/// Per-layer sparsity, averaged over heads, from a decode step's probs
+/// tensor `[L, H, S]` and validity `[L, S]` (S = cache slots + buffer).
+pub fn sparsity_per_layer(
+    probs: &[f32],
+    valid: &[f32],
+    layers: usize,
+    heads: usize,
+    span: usize,
+    rel_threshold: f32,
+) -> Vec<f64> {
+    let mut out = Vec::with_capacity(layers);
+    for l in 0..layers {
+        let v = &valid[l * span..(l + 1) * span];
+        let mut acc = 0.0;
+        for h in 0..heads {
+            let base = (l * heads + h) * span;
+            acc += row_sparsity(&probs[base..base + span], v, rel_threshold);
+        }
+        out.push(acc / heads as f64);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_row_has_zero_sparsity() {
+        let probs = vec![0.25f32; 4];
+        let valid = vec![1f32; 4];
+        assert_eq!(row_sparsity(&probs, &valid, 0.01), 0.0);
+    }
+
+    #[test]
+    fn peaked_row_is_sparse() {
+        let mut probs = vec![1e-6f32; 100];
+        probs[7] = 0.9;
+        let valid = vec![1f32; 100];
+        let s = row_sparsity(&probs, &valid, 0.01);
+        assert!(s > 0.95, "{s}");
+    }
+
+    #[test]
+    fn invalid_slots_ignored() {
+        // huge prob on an invalid slot must not distort the max
+        let probs = vec![0.5f32, 0.5, 0.0, 0.9];
+        let valid = vec![1f32, 1.0, 0.0, 0.0];
+        assert_eq!(row_sparsity(&probs, &valid, 0.01), 0.0);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(row_sparsity(&[], &[], 0.01), 0.0);
+        assert_eq!(row_sparsity(&[0.1], &[0.0], 0.01), 0.0);
+    }
+
+    #[test]
+    fn per_layer_shapes() {
+        let layers = 2;
+        let heads = 2;
+        let span = 4;
+        let mut probs = vec![0.25f32; layers * heads * span];
+        // layer 1: peaked rows
+        for h in 0..heads {
+            let base = (1 * heads + h) * span;
+            probs[base..base + span].copy_from_slice(&[0.999, 1e-6, 1e-6, 1e-6]);
+        }
+        let valid = vec![1f32; layers * span];
+        let s = sparsity_per_layer(&probs, &valid, layers, heads, span, 0.01);
+        assert_eq!(s.len(), 2);
+        assert!(s[0] < 0.01);
+        assert!(s[1] > 0.7);
+    }
+}

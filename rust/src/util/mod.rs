@@ -1,0 +1,13 @@
+//! Infrastructure substrates built in-repo.
+//!
+//! The offline vendor set has no serde/tokio/clap/criterion/proptest/rand,
+//! so the pieces of those we need are implemented here (DESIGN §1):
+//! a JSON parser/encoder, a PCG64 RNG, a CLI argument parser, a scoped
+//! thread pool, streaming statistics, and a mini property-testing harness.
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

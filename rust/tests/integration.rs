@@ -1,0 +1,278 @@
+//! Integration tests over the full stack: AOT artifacts -> PJRT engine ->
+//! coordinator. Skipped (with a notice) when `make artifacts` has not run.
+
+use thinkv::coordinator::{CompressionMode, Coordinator, ServeConfig};
+use thinkv::model::default_artifacts_dir;
+use thinkv::runtime::{Engine, QuantCache};
+
+fn artifacts_ready() -> bool {
+    let dir = default_artifacts_dir();
+    std::path::Path::new(&format!("{dir}/model_config.json")).exists()
+}
+
+struct Golden {
+    h: usize,
+    hkv: usize,
+    d: usize,
+    g: usize,
+    c: usize,
+    bu: usize,
+    q: Vec<f32>,
+    kc: Vec<u8>,
+    ks: Vec<f32>,
+    vc: Vec<u8>,
+    vs: Vec<f32>,
+    tags: Vec<u8>,
+    mask: Vec<f32>,
+    bk: Vec<f32>,
+    bv: Vec<f32>,
+    bm: Vec<f32>,
+    want_out: Vec<f32>,
+    want_probs: Vec<f32>,
+}
+
+fn load_attn_golden() -> Golden {
+    let dir = default_artifacts_dir();
+    let bytes = std::fs::read(format!("{dir}/attn_golden.bin")).expect("attn_golden.bin");
+    let mut off = 4usize;
+    let mut rd = |o: &mut usize| {
+        let v = u32::from_le_bytes(bytes[*o..*o + 4].try_into().unwrap());
+        *o += 4;
+        v as usize
+    };
+    let _ver = rd(&mut off);
+    let (h, hkv, d, g, c, bu) = (rd(&mut off), rd(&mut off), rd(&mut off), rd(&mut off), rd(&mut off), rd(&mut off));
+    let f32s = |o: &mut usize, n: usize| -> Vec<f32> {
+        let v = bytes[*o..*o + 4 * n]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        *o += 4 * n;
+        v
+    };
+    let u8s = |o: &mut usize, n: usize| -> Vec<u8> {
+        let v = bytes[*o..*o + n].to_vec();
+        *o += n;
+        v
+    };
+    let q = f32s(&mut off, h * d);
+    let kc = u8s(&mut off, c * hkv * d);
+    let ks = f32s(&mut off, c * hkv * g);
+    let vc = u8s(&mut off, c * hkv * d);
+    let vs = f32s(&mut off, c * hkv * g);
+    let tags = u8s(&mut off, c);
+    let mask = f32s(&mut off, c);
+    let bk = f32s(&mut off, bu * hkv * d);
+    let bv = f32s(&mut off, bu * hkv * d);
+    let bm = f32s(&mut off, bu);
+    let want_out = f32s(&mut off, h * d);
+    let want_probs = f32s(&mut off, h * (c + bu));
+    Golden { h, hkv, d, g, c, bu, q, kc, ks, vc, vs, tags, mask, bk, bv, bm, want_out, want_probs }
+}
+
+#[test]
+fn fused_attention_hlo_matches_python_reference() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let eng = Engine::new().unwrap();
+    let gl = load_attn_golden();
+    let mc = eng.manifest.micro_c;
+    // pad the golden case into the micro capacity with masked slots
+    let mut kc = vec![0u8; mc * gl.hkv * gl.d];
+    kc[..gl.kc.len()].copy_from_slice(&gl.kc);
+    let mut ks = vec![0f32; mc * gl.hkv * gl.g];
+    ks[..gl.ks.len()].copy_from_slice(&gl.ks);
+    let mut vc = vec![0u8; mc * gl.hkv * gl.d];
+    vc[..gl.vc.len()].copy_from_slice(&gl.vc);
+    let mut vs = vec![0f32; mc * gl.hkv * gl.g];
+    vs[..gl.vs.len()].copy_from_slice(&gl.vs);
+    let mut tags = vec![0u8; mc];
+    tags[..gl.c].copy_from_slice(&gl.tags);
+    let mut mask = vec![0f32; mc];
+    mask[..gl.c].copy_from_slice(&gl.mask);
+    let (out, probs) = eng
+        .attn_micro(&gl.q, &kc, &ks, &vc, &vs, &tags, &mask, &gl.bk, &gl.bv, &gl.bm)
+        .unwrap();
+    let out_err = out
+        .iter()
+        .zip(&gl.want_out)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(out_err < 1e-4, "attention out err {out_err}");
+    let mut perr = 0f32;
+    for h in 0..gl.h {
+        for j in 0..gl.c {
+            perr = perr.max((probs[h * (mc + gl.bu) + j] - gl.want_probs[h * (gl.c + gl.bu) + j]).abs());
+        }
+        for j in 0..gl.bu {
+            perr = perr
+                .max((probs[h * (mc + gl.bu) + mc + j] - gl.want_probs[h * (gl.c + gl.bu) + gl.c + j]).abs());
+        }
+    }
+    assert!(perr < 1e-4, "probs err {perr}");
+}
+
+#[test]
+fn decode_step_deterministic_and_probs_normalized() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let eng = Engine::new().unwrap();
+    let m = eng.model().clone();
+    let cap = eng.manifest.quant_caps[0];
+    let (l, hkv, dh, g, b) = (m.n_layers, m.n_kv_heads, m.d_head, m.groups(), m.buf_slots);
+    let k_codes = vec![0u8; l * cap * hkv * dh];
+    let k_scales = vec![0f32; l * cap * hkv * g];
+    let v_codes = vec![0u8; l * cap * hkv * dh];
+    let v_scales = vec![0f32; l * cap * hkv * g];
+    let tags = vec![0u8; l * cap];
+    let mask = vec![0f32; l * cap];
+    let buf_k = vec![0f32; l * b * hkv * dh];
+    let buf_v = vec![0f32; l * b * hkv * dh];
+    let buf_mask = vec![0f32; l * b];
+    let cache = QuantCache {
+        capacity: cap,
+        k_codes: &k_codes,
+        k_scales: &k_scales,
+        v_codes: &v_codes,
+        v_scales: &v_scales,
+        tags: &tags,
+        mask: &mask,
+        buf_k: &buf_k,
+        buf_v: &buf_v,
+        buf_mask: &buf_mask,
+    };
+    let a = eng.decode_quant(5, 0, 0, &cache).unwrap();
+    let bb = eng.decode_quant(5, 0, 0, &cache).unwrap();
+    assert_eq!(a.logits, bb.logits, "decode must be deterministic");
+    assert_eq!(a.logits.len(), m.vocab);
+    assert_eq!(a.new_k.len(), l * hkv * dh);
+    // with an empty cache, attention sees only the current token: each
+    // row's probability mass must be exactly 1 on the buffer slot
+    let span = cap + b;
+    for lh in 0..l * m.n_heads {
+        let row = &a.probs[lh * span..(lh + 1) * span];
+        let sum: f32 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "row mass {sum}");
+        assert!((row[cap] - 1.0).abs() < 1e-4, "self slot {}", row[cap]);
+    }
+}
+
+#[test]
+fn prefill_then_decode_consistency_quant_vs_fp32() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // The same prefill cache fed through (a) the fp32 decode path and
+    // (b) the FP8-quantized path must agree on the next-token argmax.
+    let eng = Engine::new().unwrap();
+    let m = eng.model().clone();
+    let p = m.prefill_len;
+    let prompt: Vec<i32> = (0..p as i32).map(|i| (i * 11) % m.vocab as i32).collect();
+    let pf = eng.prefill(&prompt).unwrap();
+
+    let (l, hkv, dh, g, b) = (m.n_layers, m.n_kv_heads, m.d_head, m.groups(), m.buf_slots);
+    let kvd = hkv * dh;
+    // fp32 path
+    let capf = eng.manifest.fp32_caps[0];
+    let mut kf = vec![0f32; l * capf * kvd];
+    let mut vf = vec![0f32; l * capf * kvd];
+    let mut maskf = vec![0f32; l * capf];
+    for li in 0..l {
+        for pos in 0..p {
+            let src = (li * p + pos) * kvd;
+            let dst = (li * capf + pos) * kvd;
+            kf[dst..dst + kvd].copy_from_slice(&pf.k[src..src + kvd]);
+            vf[dst..dst + kvd].copy_from_slice(&pf.v[src..src + kvd]);
+            maskf[li * capf + pos] = 1.0;
+        }
+    }
+    let zbk = vec![0f32; l * b * kvd];
+    let zbm = vec![0f32; l * b];
+    let fp = eng
+        .decode_fp32(capf, 17, p as i32, 0, &kf, &vf, &maskf, &zbk, &zbk, &zbm)
+        .unwrap();
+
+    // FP8 quantized path
+    let capq = eng.manifest.quant_caps[0];
+    let mut cache = thinkv::kvcache::CtCache::new(thinkv::kvcache::CacheConfig {
+        layers: l,
+        capacity: capq,
+        block_size: 8,
+        hkv,
+        dh,
+        buf_slots: b,
+    });
+    cache.write_prefill(&pf.k, &pf.v, p, thinkv::quant::Precision::Fp8);
+    let q = eng.decode_quant(17, p as i32, 0, &cache.view()).unwrap();
+
+    let am_f = thinkv::util::stats::argmax(&fp.logits);
+    let am_q = thinkv::util::stats::argmax(&q.logits);
+    assert_eq!(am_f, am_q, "fp8-quantized decode must track fp32 argmax");
+    let max_diff = fp
+        .logits
+        .iter()
+        .zip(&q.logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 0.2, "logit drift {max_diff}");
+}
+
+#[test]
+fn coordinator_end_to_end_thinkv_vs_fullkv() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    for (mode, budget) in [
+        (CompressionMode::thinkv_default(), 192usize),
+        (CompressionMode::FullKv, usize::MAX),
+    ] {
+        let label = mode.label();
+        let cfg = ServeConfig {
+            mode,
+            budget: budget.min(192),
+            max_new_tokens: 40,
+            workers: 1,
+            temperature: 0.0,
+            ..ServeConfig::default()
+        };
+        let coordinator = Coordinator::start(cfg).unwrap();
+        let prompt: Vec<i32> = (0..64).map(|i| (i * 3 % 512) as i32).collect();
+        let results = coordinator
+            .run_batch(vec![prompt.clone(), prompt])
+            .unwrap();
+        assert_eq!(results.len(), 2, "{label}");
+        for r in &results {
+            assert_eq!(r.tokens.len(), 40, "{label}");
+            assert!(r.breakdown.steps > 0, "{label}");
+        }
+        // greedy + same prompt => identical outputs across requests
+        assert_eq!(results[0].tokens, results[1].tokens, "{label} determinism");
+    }
+}
+
+#[test]
+fn coordinator_respects_budget() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let cfg = ServeConfig {
+        mode: CompressionMode::thinkv_default(),
+        budget: 96,
+        max_new_tokens: 80,
+        workers: 1,
+        ..ServeConfig::default()
+    };
+    let coordinator = Coordinator::start(cfg).unwrap();
+    let prompt: Vec<i32> = (0..64).map(|i| (i % 512) as i32).collect();
+    let r = coordinator.submit(prompt).unwrap().wait().unwrap();
+    assert_eq!(r.tokens.len(), 80);
+    assert!(r.live_tokens <= 96 + 16, "budget violated: {}", r.live_tokens);
+    assert!(r.avg_bits < 8.0, "TBQ not applied: {}", r.avg_bits);
+}

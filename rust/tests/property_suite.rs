@@ -1,0 +1,324 @@
+//! Cross-module property tests: invariants that must hold across the
+//! composition of subsystems (cache + TBE, classifier + calibration,
+//! simulator determinism, JSON fuzz, quantizer round-trip monotonicity).
+//! These run without artifacts (pure Rust state machines).
+
+use thinkv::compress::tbe::{Tbe, TbeConfig};
+use thinkv::compress::tbq::{PrecisionAssignment, Tbq};
+use thinkv::kvcache::{CacheConfig, CtCache, Thought};
+use thinkv::quant::{dequant_groups, quant_groups, Precision, GROUP_SIZE};
+use thinkv::sim::harness::{EvictKind, Method, SimConfig, ThinKvSim};
+use thinkv::sim::{run_method, DatasetProfile, Trace};
+use thinkv::thought::{calibrate, Classifier, ClassifierConfig};
+use thinkv::util::json;
+use thinkv::util::prop;
+use thinkv::util::rng::Rng;
+
+fn small_cfg(capacity: usize) -> CacheConfig {
+    CacheConfig { layers: 2, capacity, block_size: 8, hkv: 1, dh: 16, buf_slots: 16 }
+}
+
+/// Drive a CtCache + TBE through a random thought stream; at every step the
+/// cache invariants, the budget (after enforcement), and the min-retention
+/// floor must hold.
+#[test]
+fn ct_cache_with_tbe_full_lifecycle_invariants() {
+    prop::check(20, |g| {
+        let budget = *g.pick(&[48usize, 96, 160]);
+        let cfg = small_cfg(512);
+        let mut cache = CtCache::new(cfg.clone());
+        let mut tbe = Tbe::new(TbeConfig::new(budget));
+        let tbq = Tbq::new(PrecisionAssignment::r4e4t2());
+        let mut seg = cache.open_segment(Thought::Reasoning, 0);
+        let mut seg_thought = Thought::Reasoning;
+        let steps = g.usize(80, 400);
+        let mut rng = Rng::new(g.usize(0, 1 << 30) as u64);
+        for pos in 0..steps {
+            // segment refresh every 32 tokens with a random label
+            if pos % 32 == 0 && pos > 0 {
+                let closing = seg_thought;
+                seg_thought = *g.pick(&Thought::ALL);
+                if closing == Thought::Transition {
+                    tbe.on_transition_end(&mut cache, seg);
+                }
+                seg = cache.open_segment(seg_thought, pos);
+            }
+            let n = cfg.layers * cfg.kv_dim();
+            let mut k = vec![0f32; n];
+            let mut v = vec![0f32; n];
+            rng.fill_normal_f32(&mut k, 0.0, 1.0);
+            rng.fill_normal_f32(&mut v, 0.0, 1.0);
+            let full = cache.push_token(&k, &v, pos, seg, seg_thought);
+            if full {
+                let psi = |t: Thought| tbq.psi(t);
+                if cache.flush_buffer(&psi).is_err() {
+                    tbe.ensure_budget(&mut cache);
+                    cache
+                        .flush_buffer(&psi)
+                        .map_err(|e| format!("flush after TBE still failed: {e}"))?;
+                }
+            }
+            tbe.tick();
+            if cache.live_tokens() + cache.buf_fill() > budget {
+                tbe.ensure_budget(&mut cache);
+            }
+            cache.check_invariants()?;
+            // segments older than the active one keep >= min retention
+            // *if* they ever had that many tokens
+            for s in &cache.segments[..cache.segments.len().saturating_sub(1)] {
+                let live = cache.tables[0].segment_slots(s.id).len();
+                let span = s.end_pos.saturating_sub(s.start_pos);
+                if span >= 4 && s.evict_level > 0 && live < 4 && live != 0 {
+                    return Err(format!(
+                        "segment {} annealed below min retention: {live}",
+                        s.id
+                    ));
+                }
+            }
+        }
+        // budget must be enforceable at the end
+        tbe.ensure_budget(&mut cache);
+        let floor = cache.segments.len() * 4 + cache.cfg.buf_slots;
+        if cache.live_tokens() > budget.max(floor) {
+            return Err(format!(
+                "budget {budget} not enforced: live {}",
+                cache.live_tokens()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Quantize→dequantize error must be monotone in precision for every input.
+#[test]
+fn quant_roundtrip_error_monotone_in_precision() {
+    prop::check(100, |g| {
+        let d = *g.pick(&[16usize, 32, 64, 128]);
+        let scale = g.f32(0.01, 30.0);
+        let x = g.vec_normal_f32(d, 0.0, scale);
+        let mut err = Vec::new();
+        for p in [Precision::Fp8, Precision::Nvfp4, Precision::Ternary] {
+            let mut codes = vec![0u8; d];
+            let mut scales = vec![0f32; d / GROUP_SIZE];
+            let mut deq = vec![0f32; d];
+            quant_groups(&x, p, &mut codes, &mut scales);
+            dequant_groups(&codes, &scales, p, &mut deq);
+            err.push(
+                x.iter().zip(&deq).map(|(a, b)| (a - b).abs()).sum::<f32>() / d as f32,
+            );
+        }
+        if err[0] <= err[1] + 1e-6 && err[1] <= err[2] + 1e-6 {
+            Ok(())
+        } else {
+            Err(format!("non-monotone errors {err:?}"))
+        }
+    });
+}
+
+/// The classifier must label pure-regime windows correctly for any
+/// thresholds produced by calibration on tri-modal data.
+#[test]
+fn calibration_then_classification_roundtrip() {
+    prop::check(10, |g| {
+        let mut rng = Rng::new(g.usize(0, 1 << 30) as u64);
+        // build tri-modal calibration series
+        let series: Vec<Vec<Vec<f64>>> = (0..4)
+            .map(|_| {
+                (0..4)
+                    .map(|_| {
+                        (0..240)
+                            .map(|i| {
+                                let mean = [0.25, 0.55, 0.85][i % 3];
+                                rng.normal_with(mean, 0.04).clamp(0.0, 1.0)
+                            })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let cal = calibrate(&series, 3, 4, 0.12);
+        if cal.thresholds.len() != 2 {
+            return Err(format!("thresholds {:?}", cal.thresholds));
+        }
+        let mut c = Classifier::new(ClassifierConfig {
+            layers: cal.layers.clone(),
+            thresholds: cal.thresholds.clone(),
+            refresh: 8,
+        });
+        for (mean, want) in [
+            (0.25, Thought::Execution),
+            (0.55, Thought::Reasoning),
+            (0.85, Thought::Transition),
+        ] {
+            for _ in 0..8 {
+                let row: Vec<f64> = (0..8)
+                    .map(|_| rng.normal_with(mean, 0.02).clamp(0.0, 1.0))
+                    .collect();
+                c.push_step(&row);
+            }
+            let got = c.refresh();
+            if got != want {
+                return Err(format!("mean {mean} classified {got:?}, want {want:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The whole simulation harness must be deterministic for a fixed seed.
+#[test]
+fn sim_harness_deterministic() {
+    let ds = DatasetProfile::aime();
+    for m in [
+        Method::ThinKv(ThinKvSim::default()),
+        Method::Evict(EvictKind::Rkv),
+        Method::FullKv,
+    ] {
+        let run = || {
+            let trace = Trace::generate(&ds, 99, 0.15);
+            let r = run_method(
+                &trace,
+                &m,
+                &SimConfig { budget: 256, seed: 9, stride: 4, rollouts: 16 },
+            );
+            (r.pass1, r.mem_frac, r.recall10, r.evict_events)
+        };
+        assert_eq!(run(), run(), "{m:?} not deterministic");
+    }
+}
+
+/// Accuracy must be (weakly) monotone in budget for ThinKV on a fixed trace.
+#[test]
+fn thinkv_accuracy_monotone_in_budget() {
+    let ds = DatasetProfile::aime();
+    let trace = Trace::generate(&ds, 5, 0.5);
+    let mut last = -1.0;
+    for budget in [32usize, 128, 1024, 8192] {
+        let r = run_method(
+            &trace,
+            &Method::ThinKv(ThinKvSim::default()),
+            &SimConfig { budget, seed: 1, stride: 4, rollouts: 200 },
+        );
+        assert!(
+            r.p_correct >= last - 0.05,
+            "accuracy dropped with bigger budget: {last} -> {} at {budget}",
+            r.p_correct
+        );
+        last = r.p_correct;
+    }
+}
+
+/// JSON fuzz: any value tree we can build must round-trip exactly.
+#[test]
+fn json_fuzz_roundtrip() {
+    fn build(g: &mut prop::Gen, depth: usize) -> json::Json {
+        if depth == 0 || g.chance(0.4) {
+            match g.usize(0, 3) {
+                0 => json::Json::Null,
+                1 => json::Json::Bool(g.bool()),
+                2 => json::Json::Num((g.f64(-1e6, 1e6) * 100.0).round() / 100.0),
+                _ => json::Json::Str(
+                    (0..g.usize(0, 12))
+                        .map(|_| *g.pick(&['a', 'é', '"', '\\', '\n', 'z', '0']))
+                        .collect(),
+                ),
+            }
+        } else if g.bool() {
+            json::Json::Arr((0..g.usize(0, 5)).map(|_| build(g, depth - 1)).collect())
+        } else {
+            let mut o = json::Json::obj();
+            for i in 0..g.usize(0, 5) {
+                o.set(&format!("k{i}"), build(g, depth - 1));
+            }
+            o
+        }
+    }
+    prop::check(200, |g| {
+        let v = build(g, 3);
+        let s = v.to_string();
+        let back = json::parse(&s).map_err(|e| format!("parse failed on {s}: {e}"))?;
+        if back == v {
+            // pretty form must round-trip too
+            let back2 = json::parse(&v.to_string_pretty())
+                .map_err(|e| format!("pretty parse failed: {e}"))?;
+            if back2 == v {
+                return Ok(());
+            }
+        }
+        Err(format!("roundtrip mismatch for {s}"))
+    });
+}
+
+/// Trace generation: statistics must respect the dataset profile for any
+/// seed (lengths, mixes, segment contiguity).
+#[test]
+fn trace_profile_statistics_hold() {
+    prop::check(20, |g| {
+        let ds = match g.usize(0, 3) {
+            0 => DatasetProfile::aime(),
+            1 => DatasetProfile::livecodebench(),
+            2 => DatasetProfile::math500(),
+            _ => DatasetProfile::gsm8k(),
+        };
+        let t = Trace::generate(&ds, g.usize(0, 1 << 20) as u64, 0.25);
+        if t.token_thought.len() != t.total_len() {
+            return Err("thought labels length".into());
+        }
+        for w in t.segments.windows(2) {
+            if w[0].end() != w[1].start {
+                return Err("segments not contiguous".into());
+            }
+        }
+        let bd = t.thought_breakdown();
+        if (bd[0] + bd[1] + bd[2] - 100.0).abs() > 1e-6 {
+            return Err(format!("breakdown sums to {}", bd[0] + bd[1] + bd[2]));
+        }
+        // every anchor is a transition
+        if t.segments.iter().any(|s| s.anchor && s.thought != Thought::Transition) {
+            return Err("anchor on non-transition".into());
+        }
+        Ok(())
+    });
+}
+
+/// Eviction policies must never evict below the requested target or return
+/// out-of-set positions, whatever attention history they saw.
+#[test]
+fn eviction_policies_respect_contract() {
+    use thinkv::baselines::eviction::*;
+    prop::check(30, |g| {
+        let n = g.usize(10, 120);
+        let live: Vec<usize> = (0..n).collect();
+        let target = g.usize(1, n);
+        let mut policies: Vec<Box<dyn EvictionPolicy>> = vec![
+            Box::new(H2O::new()),
+            Box::new(Rkv::new()),
+            Box::new(LazyEviction::new()),
+            Box::new(RaaS::new()),
+            Box::new(StreamingLlm::new(g.usize(0, 4))),
+        ];
+        for step in 0..g.usize(3, 25) {
+            let attn: Vec<(usize, f32)> = live
+                .iter()
+                .map(|&p| (p, g.f32(0.0, 1.0)))
+                .collect();
+            for p in policies.iter_mut() {
+                p.observe(&PosAttn { step, attn: attn.clone() });
+            }
+        }
+        for p in policies.iter_mut() {
+            let ev = p.select_evictions(&live, target);
+            if ev.len() > n - target.min(n) {
+                return Err(format!("{} evicted too many: {}", p.name(), ev.len()));
+            }
+            let set: std::collections::BTreeSet<_> = ev.iter().collect();
+            if set.len() != ev.len() {
+                return Err(format!("{} duplicates", p.name()));
+            }
+            if ev.iter().any(|e| !live.contains(e)) {
+                return Err(format!("{} invalid position", p.name()));
+            }
+        }
+        Ok(())
+    });
+}
