@@ -22,11 +22,15 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or_else(CompressionMode::thinkv_default);
 
     println!("ThinKV serving demo: {} users x {} requests, mode={}", users, reqs_per_user, mode.label());
+    // --pool-mb caps the KV block pool so oversubscribed runs exercise
+    // admission queueing + preemption (0 = unbounded)
+    let pool_mb = args.u64_or("pool-mb", 0);
     let cfg = ServeConfig {
         mode,
         budget: args.usize_or("budget", 512),
         max_new_tokens: max_tokens,
         workers: args.usize_or("workers", 2),
+        pool_bytes: (pool_mb > 0).then_some(pool_mb << 20),
         ..ServeConfig::default()
     };
     let server = Server::start("127.0.0.1:0", cfg)?;
@@ -66,10 +70,14 @@ fn main() -> anyhow::Result<()> {
     println!("user latency: mean {:.0} ms, p50 {:.0} ms, p99 {:.0} ms",
              mean(&all), percentile(&all, 50.0), percentile(&all, 99.0));
 
-    // server stats round-trip
+    // server stats round-trip (includes pool/scheduler counters)
     let mut c = Client::connect(&addr)?;
     let stats = c.stats()?;
     println!("server stats: {}", stats.to_string());
+    if let Some(p) = stats.get("preemptions").and_then(|v| v.as_f64()) {
+        println!("scheduler: {} preemptions, pool peak {} B",
+                 p, stats.get("pool_peak").and_then(|v| v.as_f64()).unwrap_or(0.0));
+    }
     server.shutdown();
     println!("serve demo OK");
     Ok(())

@@ -97,6 +97,10 @@ pub struct ServeConfig {
     /// Sampling temperature (0 = greedy).
     pub temperature: f64,
     pub seed: u64,
+    /// Global KV block-pool capacity in bytes (packed accounting) the
+    /// memory-aware scheduler admits against. `None` = effectively
+    /// unbounded (accounting on, admission never refused).
+    pub pool_bytes: Option<u64>,
 }
 
 impl Default for ServeConfig {
@@ -112,6 +116,7 @@ impl Default for ServeConfig {
             chunk: 16,
             temperature: 0.8,
             seed: 42,
+            pool_bytes: None,
         }
     }
 }

@@ -1,18 +1,26 @@
-//! The continuous-batching engine loop: a shared run queue of sessions, N
-//! worker threads each owning a PJRT engine, chunked round-robin decode.
+//! The continuous-batching engine loop: N worker threads each owning a
+//! PJRT engine pull admitted sessions from the memory-aware
+//! [`Scheduler`], advance them by a chunk of decode steps, and hand them
+//! back (yield / preempt-retry / complete).
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread;
 
 use anyhow::Result;
 
-use crate::metrics::Breakdown;
+use crate::kvcache::BlockPool;
+use crate::metrics::{Breakdown, SchedSnapshot};
 use crate::runtime::Engine;
 
 use super::config::ServeConfig;
-use super::session::Session;
+use super::scheduler::Scheduler;
+use super::session::{Session, StepOutcome};
+
+/// Default pool capacity when `ServeConfig::pool_bytes` is unset —
+/// effectively unbounded, so memory accounting stays on without ever
+/// refusing admission.
+const UNBOUNDED_POOL_BYTES: u64 = u64::MAX / 2;
 
 /// Final outcome of a request.
 #[derive(Debug, Clone)]
@@ -29,6 +37,45 @@ pub struct RequestResult {
     pub tbe_call_rate: f64,
     pub gather_calls: u64,
     pub gather_bytes: u64,
+    /// Times the scheduler preempted (reset + requeued) this request.
+    pub preemptions: u64,
+    /// Set when the request terminated abnormally (e.g. its KV demand
+    /// exceeded the block pool).
+    pub error: Option<String>,
+}
+
+impl RequestResult {
+    /// Snapshot a (finished) session into its result record.
+    pub(crate) fn from_session(s: &Session) -> RequestResult {
+        let total_ms = s
+            .finished_at
+            .unwrap_or_else(std::time::Instant::now)
+            .duration_since(s.created)
+            .as_secs_f64()
+            * 1e3;
+        let ttft_ms = s
+            .first_token_at
+            .map(|t| t.duration_since(s.created).as_secs_f64() * 1e3)
+            .unwrap_or(total_ms);
+        let n = s.tokens.len().max(1) as f64;
+        let (gather_calls, gather_bytes, _) = s.gather_stats();
+        RequestResult {
+            id: s.id,
+            tokens: s.tokens.clone(),
+            ttft_ms,
+            total_ms,
+            tpot_ms: (total_ms - ttft_ms).max(0.0) / n,
+            breakdown: s.breakdown.clone(),
+            avg_bits: s.avg_bits(),
+            live_tokens: s.live_tokens(),
+            ct_reuses: s.ct_reuse_count(),
+            tbe_call_rate: s.tbe_stats().map(|t| t.call_rate()).unwrap_or(0.0),
+            gather_calls,
+            gather_bytes,
+            preemptions: s.preemptions,
+            error: None,
+        }
+    }
 }
 
 /// Handle for awaiting one submitted request.
@@ -43,22 +90,10 @@ impl RequestHandle {
     }
 }
 
-struct Queued {
-    session: Session,
-    done_tx: mpsc::Sender<RequestResult>,
-}
-
-struct Shared {
-    queue: Mutex<VecDeque<Queued>>,
-    cv: Condvar,
-    stop: AtomicBool,
-    inflight: AtomicU64,
-}
-
-/// The serving coordinator (leader): owns the run queue and the workers.
+/// The serving coordinator (leader): owns the scheduler and the workers.
 pub struct Coordinator {
     cfg: ServeConfig,
-    shared: Arc<Shared>,
+    scheduler: Arc<Scheduler>,
     workers: Vec<thread::JoinHandle<()>>,
     next_id: AtomicU64,
     manifest: crate::model::Manifest,
@@ -70,16 +105,15 @@ impl Coordinator {
     }
 
     pub fn start_with_dir(cfg: ServeConfig, artifacts_dir: &str) -> Result<Coordinator> {
-        let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
-            cv: Condvar::new(),
-            stop: AtomicBool::new(false),
-            inflight: AtomicU64::new(0),
-        });
+        let manifest = crate::model::Manifest::load(artifacts_dir)?;
+        let pool = Arc::new(BlockPool::new(
+            cfg.pool_bytes.unwrap_or(UNBOUNDED_POOL_BYTES),
+        ));
+        let scheduler = Arc::new(Scheduler::new(pool));
         let mut workers = Vec::new();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         for w in 0..cfg.workers.max(1) {
-            let shared = Arc::clone(&shared);
+            let scheduler = Arc::clone(&scheduler);
             let chunk = cfg.chunk.max(1);
             let dir = artifacts_dir.to_string();
             let ready = ready_tx.clone();
@@ -97,7 +131,7 @@ impl Coordinator {
                                 return;
                             }
                         };
-                        worker_loop(&shared, &engine, chunk);
+                        worker_loop(&scheduler, &engine, chunk);
                     })
                     .expect("spawn decode worker"),
             );
@@ -108,10 +142,10 @@ impl Coordinator {
         }
         Ok(Coordinator {
             cfg,
-            shared,
+            scheduler,
             workers,
             next_id: AtomicU64::new(1),
-            manifest: crate::model::Manifest::load(artifacts_dir)?,
+            manifest,
         })
     }
 
@@ -119,20 +153,26 @@ impl Coordinator {
         &self.cfg
     }
 
-    /// Submit a prompt; returns a handle to await the result.
+    /// Submit a prompt; returns a handle to await the result. Fails fast
+    /// when the request's KV demand can never fit the pool.
     pub fn submit(&self, prompt: Vec<i32>) -> Result<RequestHandle> {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        let (tx, rx) = mpsc::channel();
-        let queued = Queued {
-            session: Session::new(id, prompt, &self.cfg, &self.manifest)?,
-            done_tx: tx,
-        };
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            q.push_back(queued);
-            self.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        let session = Session::with_pool(
+            id,
+            prompt,
+            &self.cfg,
+            &self.manifest,
+            Some(Arc::clone(self.scheduler.pool())),
+        )?;
+        if session.admission_bytes() > self.scheduler.pool().capacity() {
+            anyhow::bail!(
+                "request {id}: admission demand {} B exceeds pool capacity {} B",
+                session.admission_bytes(),
+                self.scheduler.pool().capacity()
+            );
         }
-        self.shared.cv.notify_one();
+        let (tx, rx) = mpsc::channel();
+        self.scheduler.submit(session, tx);
         Ok(RequestHandle { id, rx })
     }
 
@@ -146,12 +186,22 @@ impl Coordinator {
     }
 
     pub fn inflight(&self) -> u64 {
-        self.shared.inflight.load(Ordering::SeqCst)
+        self.scheduler.inflight()
+    }
+
+    /// The global KV block pool (memory accounting).
+    pub fn pool(&self) -> &BlockPool {
+        self.scheduler.pool()
+    }
+
+    /// Scheduler + pool counters (admissions, preemptions, queue depth,
+    /// pool used/peak/free).
+    pub fn sched_stats(&self) -> SchedSnapshot {
+        self.scheduler.snapshot()
     }
 
     pub fn shutdown(mut self) {
-        self.shared.stop.store(true, Ordering::SeqCst);
-        self.shared.cv.notify_all();
+        self.scheduler.shutdown();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -160,79 +210,59 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.shared.stop.store(true, Ordering::SeqCst);
-        self.shared.cv.notify_all();
+        self.scheduler.shutdown();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-fn worker_loop(shared: &Shared, engine: &Engine, chunk: usize) {
-    loop {
-        let mut item = {
-            let mut q = shared.queue.lock().unwrap();
-            loop {
-                if shared.stop.load(Ordering::SeqCst) {
-                    return;
-                }
-                if let Some(item) = q.pop_front() {
-                    break item;
-                }
-                q = shared.cv.wait(q).unwrap();
-            }
-        };
+enum ChunkEnd {
+    Yield,
+    NeedMemory,
+    Finished,
+    Failed(String),
+}
+
+fn worker_loop(scheduler: &Scheduler, engine: &Engine, chunk: usize) {
+    while let Some(mut item) = scheduler.next() {
         // advance by up to `chunk` steps (continuous-batching quantum)
-        let mut running = true;
+        let mut end = ChunkEnd::Yield;
         for _ in 0..chunk {
             match item.session.step(engine) {
-                Ok(true) => {}
-                Ok(false) => {
-                    running = false;
+                Ok(StepOutcome::Running) => {}
+                Ok(StepOutcome::Finished) => {
+                    end = ChunkEnd::Finished;
+                    break;
+                }
+                Ok(StepOutcome::NeedMemory) => {
+                    end = ChunkEnd::NeedMemory;
                     break;
                 }
                 Err(e) => {
                     eprintln!("session {} failed: {e:#}", item.session.id);
                     item.session.finished_at = Some(std::time::Instant::now());
-                    running = false;
+                    end = ChunkEnd::Failed(format!("{e:#}"));
                     break;
                 }
             }
         }
-        if running {
-            let mut q = shared.queue.lock().unwrap();
-            q.push_back(item);
-            shared.cv.notify_one();
-        } else {
-            let s = &item.session;
-            let total_ms = s
-                .finished_at
-                .unwrap_or_else(std::time::Instant::now)
-                .duration_since(s.created)
-                .as_secs_f64()
-                * 1e3;
-            let ttft_ms = s
-                .first_token_at
-                .map(|t| t.duration_since(s.created).as_secs_f64() * 1e3)
-                .unwrap_or(total_ms);
-            let n = s.tokens.len().max(1) as f64;
-            let (gather_calls, gather_bytes, _) = s.gather_stats();
-            let result = RequestResult {
-                id: s.id,
-                tokens: s.tokens.clone(),
-                ttft_ms,
-                total_ms,
-                tpot_ms: (total_ms - ttft_ms).max(0.0) / n,
-                breakdown: s.breakdown.clone(),
-                avg_bits: s.avg_bits(),
-                live_tokens: s.live_tokens(),
-                ct_reuses: s.ct_reuse_count(),
-                tbe_call_rate: s.tbe_stats().map(|t| t.call_rate()).unwrap_or(0.0),
-                gather_calls,
-                gather_bytes,
-            };
-            let _ = item.done_tx.send(result);
-            shared.inflight.fetch_sub(1, Ordering::SeqCst);
+        match end {
+            ChunkEnd::Yield => scheduler.yield_back(item),
+            ChunkEnd::NeedMemory => scheduler.cannot_grow(item),
+            ChunkEnd::Finished => {
+                let result = RequestResult::from_session(&item.session);
+                let _ = item.done_tx.send(result);
+                scheduler.complete(&mut item.session);
+            }
+            ChunkEnd::Failed(why) => {
+                // the submitter must be able to tell a failed decode from
+                // a short answer, and stats must not count it as success
+                let mut result = RequestResult::from_session(&item.session);
+                result.error = Some(why);
+                let _ = item.done_tx.send(result);
+                scheduler.complete_failed(&mut item.session);
+            }
         }
     }
 }

@@ -1,20 +1,26 @@
-//! The L3 serving coordinator: request router, continuous batcher, and the
-//! per-request decode sessions that drive the PJRT engine.
+//! The L3 serving coordinator: request router, memory-aware scheduler,
+//! and the per-request decode sessions that drive the PJRT engine.
 //!
-//! Architecture (vLLM-router-like): a shared FIFO of [`session::Session`]s;
-//! N worker threads each own a PJRT [`crate::runtime::Engine`] (the handles
-//! are not Sync) and repeatedly pull a session, advance it by a chunk of
-//! decode steps, and push it back — continuous batching at chunk
-//! granularity. Completed sessions are delivered to the submitter through
-//! a channel. Python is never involved: the engines execute the AOT HLO
-//! artifacts only.
+//! Architecture (vLLM-router-like): submitted requests flow through the
+//! [`scheduler::Scheduler`] — a waiting queue plus an admitted running
+//! set with **byte-accurate admission** against the global
+//! [`crate::kvcache::BlockPool`] and preempt-youngest reclamation when a
+//! running request cannot grow. N worker threads each own a PJRT
+//! [`crate::runtime::Engine`] (the handles are not Sync) and repeatedly
+//! pull an admitted [`session::Session`], advance it by a chunk of
+//! decode steps over the unified [`crate::kvcache::KvBackend`] path, and
+//! hand it back — continuous batching at chunk granularity. Completed
+//! sessions are delivered to the submitter through a channel. Python is
+//! never involved: the engines execute the AOT HLO artifacts only.
 
 pub mod config;
 pub mod engine_loop;
 pub mod sampler;
+pub mod scheduler;
 pub mod session;
 
 pub use config::{CompressionMode, ServeConfig};
 pub use engine_loop::{Coordinator, RequestHandle, RequestResult};
 pub use sampler::Sampler;
-pub use session::Session;
+pub use scheduler::Scheduler;
+pub use session::{Session, StepOutcome};

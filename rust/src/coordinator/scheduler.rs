@@ -1,0 +1,482 @@
+//! Memory-aware, preemptive request scheduler (the paper's Tables 2/3
+//! serving discipline: admit until KV bytes run out, reclaim from the
+//! youngest work when a running request must grow).
+//!
+//! Requests live in one of three places:
+//!
+//! * **waiting** — submitted but not admitted; their KV demand does not
+//!   fit the [`BlockPool`] yet. FIFO, with preempted sessions re-queued
+//!   at the front.
+//! * **runnable** — admitted (their admission reserve is charged to the
+//!   pool) and waiting for a decode worker.
+//! * **held** — admitted and currently being advanced by a worker.
+//!
+//! (Plus **stalled**: admitted sessions starving for growth bytes whose
+//! preemption victim is still held — parked until bytes free up.)
+//!
+//! Admission is byte-accurate: a session is admitted only when
+//! [`Session::admission_bytes`] (an upper bound on its post-prefill
+//! footprint) can be reserved; each decode step then pre-reserves its
+//! worst-case growth and trues the reservation up afterwards, so
+//! `pool.peak() <= pool.capacity()` always holds. When a running session
+//! cannot grow ([`StepOutcome::NeedMemory`](super::session::StepOutcome)),
+//! the **youngest admitted** session is preempted — reset, its bytes
+//! released, re-queued to waiting — so the oldest request always makes
+//! progress and oversubscribed workloads drain instead of overflowing.
+//! A session that cannot grow while it is the *only* admitted request
+//! exceeds the pool by itself and is failed.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+use crate::kvcache::BlockPool;
+use crate::metrics::SchedSnapshot;
+
+use super::engine_loop::RequestResult;
+use super::session::Session;
+
+/// One scheduled request: the session plus its completion channel.
+pub struct Entry {
+    pub session: Session,
+    pub done_tx: mpsc::Sender<RequestResult>,
+}
+
+struct Inner {
+    waiting: VecDeque<Entry>,
+    runnable: VecDeque<Entry>,
+    /// Starving sessions parked while their preempt-marked victim is
+    /// still held by a worker — re-queued to runnable as soon as any
+    /// bytes come back (prevents a busy retry loop through `next`).
+    stalled: VecDeque<Entry>,
+    /// Admitted session id -> admission sequence number (age order).
+    admitted: BTreeMap<u64, u64>,
+    /// Admitted ids currently held by a decode worker.
+    held: BTreeSet<u64>,
+    /// Held ids asked to vacate at their next yield (preemption marks).
+    preempt_marks: BTreeSet<u64>,
+    /// Admitted ids whose last step could not reserve KV growth. While
+    /// any session is starving, admission is paused so freed bytes reach
+    /// the starving session instead of bouncing its victim straight back
+    /// in (which would ping-pong preemptions forever).
+    starving: BTreeSet<u64>,
+    next_admit_seq: u64,
+}
+
+impl Inner {
+    /// Drop every piece of tracking state for a session that is leaving
+    /// the admitted set (completion, failure, or preemption).
+    fn forget(&mut self, id: u64) {
+        self.held.remove(&id);
+        self.admitted.remove(&id);
+        self.preempt_marks.remove(&id);
+        self.starving.remove(&id);
+    }
+
+    /// Pool bytes were just released: stalled sessions get to retry
+    /// (ahead of anything already runnable).
+    fn unstall(&mut self) {
+        while let Some(entry) = self.stalled.pop_back() {
+            self.runnable.push_front(entry);
+        }
+    }
+}
+
+pub struct Scheduler {
+    pool: Arc<BlockPool>,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    stop: AtomicBool,
+    inflight: AtomicU64,
+    admissions: AtomicU64,
+    preemptions: AtomicU64,
+    completions: AtomicU64,
+    failures: AtomicU64,
+}
+
+impl Scheduler {
+    pub fn new(pool: Arc<BlockPool>) -> Scheduler {
+        Scheduler {
+            pool,
+            inner: Mutex::new(Inner {
+                waiting: VecDeque::new(),
+                runnable: VecDeque::new(),
+                stalled: VecDeque::new(),
+                admitted: BTreeMap::new(),
+                held: BTreeSet::new(),
+                preempt_marks: BTreeSet::new(),
+                starving: BTreeSet::new(),
+                next_admit_seq: 0,
+            }),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            inflight: AtomicU64::new(0),
+            admissions: AtomicU64::new(0),
+            preemptions: AtomicU64::new(0),
+            completions: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+        }
+    }
+
+    pub fn pool(&self) -> &Arc<BlockPool> {
+        &self.pool
+    }
+
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Enqueue a request; it is admitted as soon as its KV demand fits.
+    pub fn submit(&self, session: Session, done_tx: mpsc::Sender<RequestResult>) {
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        let mut inner = self.inner.lock().unwrap();
+        inner.waiting.push_back(Entry { session, done_tx });
+        self.try_admit(&mut inner);
+        self.cv.notify_all();
+    }
+
+    /// Admit waiting sessions (FIFO) while their admission reserve fits.
+    /// Paused while any admitted session is starving for growth bytes.
+    fn try_admit(&self, inner: &mut Inner) {
+        if !inner.starving.is_empty() {
+            return;
+        }
+        while let Some(front) = inner.waiting.front() {
+            let need = front.session.admission_bytes();
+            if !self.pool.reserve(need) {
+                break;
+            }
+            let mut entry = inner.waiting.pop_front().expect("front exists");
+            entry.session.grant(need);
+            let seq = inner.next_admit_seq;
+            inner.next_admit_seq += 1;
+            inner.admitted.insert(entry.session.id, seq);
+            inner.runnable.push_back(entry);
+            self.admissions.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Blocking pull of the next runnable session; `None` on shutdown.
+    pub fn next(&self) -> Option<Entry> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                return None;
+            }
+            self.try_admit(&mut inner);
+            if let Some(entry) = inner.runnable.pop_front() {
+                inner.held.insert(entry.session.id);
+                return Some(entry);
+            }
+            inner = self.cv.wait(inner).unwrap();
+        }
+    }
+
+    /// Return a still-running session after a chunk of steps. Honors any
+    /// pending preemption mark set while the worker held it.
+    pub fn yield_back(&self, entry: Entry) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.held.remove(&entry.session.id);
+        // the session ran a full chunk, so it is no longer starving (a
+        // still-starved step re-enters through cannot_grow instead)
+        inner.starving.remove(&entry.session.id);
+        if inner.preempt_marks.remove(&entry.session.id) {
+            self.do_preempt(&mut inner, entry);
+        } else {
+            inner.runnable.push_back(entry);
+        }
+        self.try_admit(&mut inner);
+        self.cv.notify_all();
+    }
+
+    /// A session's decode step could not reserve its KV growth. Preempt
+    /// the youngest admitted session (possibly the caller itself); fail
+    /// the request outright if it is alone and still cannot grow.
+    pub fn cannot_grow(&self, entry: Entry) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.held.remove(&entry.session.id);
+        let my_seq = *inner.admitted.get(&entry.session.id).expect("caller is admitted");
+        let youngest = inner
+            .admitted
+            .iter()
+            .filter(|(id, _)| **id != entry.session.id)
+            .max_by_key(|(_, seq)| **seq)
+            .map(|(id, seq)| (*id, *seq));
+        match youngest {
+            None => {
+                // Alone in the pool and still out of memory: this single
+                // request's KV demand exceeds the pool.
+                self.fail(&mut inner, entry, "KV demand exceeds the block pool capacity");
+            }
+            Some((vid, vseq)) if vseq > my_seq => {
+                // Victim is younger than the caller: preempt it now if it
+                // sits in the runnable queue, otherwise mark it so its
+                // worker vacates it at the next chunk boundary.
+                inner.starving.insert(entry.session.id);
+                if let Some(idx) = inner.runnable.iter().position(|e| e.session.id == vid) {
+                    let victim = inner.runnable.remove(idx).expect("index valid");
+                    self.do_preempt(&mut inner, victim);
+                    // bytes are back already: retry immediately
+                    inner.runnable.push_back(entry);
+                } else {
+                    // victim is held by a worker; park until its bytes
+                    // come back instead of spinning through next()
+                    inner.preempt_marks.insert(vid);
+                    inner.stalled.push_back(entry);
+                }
+            }
+            _ => {
+                // The caller is the youngest: vacate itself.
+                self.do_preempt(&mut inner, entry);
+            }
+        }
+        self.try_admit(&mut inner);
+        self.cv.notify_all();
+    }
+
+    /// Reset + release + requeue (front of the waiting line). Freed
+    /// bytes wake any stalled (starving) sessions first.
+    fn do_preempt(&self, inner: &mut Inner, mut entry: Entry) {
+        inner.forget(entry.session.id);
+        entry.session.reset_for_preemption();
+        self.preemptions.fetch_add(1, Ordering::SeqCst);
+        inner.waiting.push_front(entry);
+        inner.unstall();
+    }
+
+    /// Terminate a request with an error result.
+    fn fail(&self, inner: &mut Inner, mut entry: Entry, why: &str) {
+        inner.forget(entry.session.id);
+        entry.session.release_pool();
+        entry.session.finished_at = Some(std::time::Instant::now());
+        let mut result = RequestResult::from_session(&entry.session);
+        result.error = Some(why.to_string());
+        let _ = entry.done_tx.send(result);
+        self.failures.fetch_add(1, Ordering::SeqCst);
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+        inner.unstall();
+    }
+
+    fn finish(&self, session: &mut Session, counter: &AtomicU64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.forget(session.id);
+        session.release_pool();
+        counter.fetch_add(1, Ordering::SeqCst);
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+        inner.unstall();
+        self.try_admit(&mut inner);
+        self.cv.notify_all();
+    }
+
+    /// Bookkeeping for a successfully finished session (the worker sends
+    /// the result).
+    pub fn complete(&self, session: &mut Session) {
+        self.finish(session, &self.completions);
+    }
+
+    /// Bookkeeping for a session that terminated with a decode error
+    /// (the worker sends the error result) — counted as a failure, not a
+    /// completion, so `stats` distinguishes the two.
+    pub fn complete_failed(&self, session: &mut Session) {
+        self.finish(session, &self.failures);
+    }
+
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+
+    /// Point-in-time counters for metrics / the server `stats` command.
+    pub fn snapshot(&self) -> SchedSnapshot {
+        let inner = self.inner.lock().unwrap();
+        SchedSnapshot {
+            pool_capacity: self.pool.capacity(),
+            pool_used: self.pool.used(),
+            pool_peak: self.pool.peak(),
+            pool_free: self.pool.free(),
+            admissions: self.admissions.load(Ordering::SeqCst),
+            preemptions: self.preemptions.load(Ordering::SeqCst),
+            completions: self.completions.load(Ordering::SeqCst),
+            rejections: self.failures.load(Ordering::SeqCst),
+            queue_depth: inner.waiting.len(),
+            running: inner.admitted.len(),
+            inflight: self.inflight.load(Ordering::SeqCst),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::{CompressionMode, ServeConfig};
+    use crate::model::{Manifest, ModelConfig};
+
+    /// Hand-built manifest: tiny dims, no artifact files needed (the
+    /// scheduler never touches the engine).
+    fn tiny_manifest() -> Manifest {
+        Manifest {
+            model: ModelConfig {
+                vocab: 64,
+                d_model: 32,
+                n_layers: 2,
+                n_heads: 2,
+                n_kv_heads: 1,
+                d_head: 16,
+                d_ffn: 64,
+                rope_base: 10000.0,
+                buf_slots: 16,
+                prefill_len: 32,
+                obs_window: 8,
+                group_size: 16,
+            },
+            quant_caps: vec![128],
+            fp32_caps: vec![256],
+            micro_c: 128,
+            golden_attn_c: 128,
+            artifacts_dir: ".".into(),
+            weights: vec![],
+            seed: 0,
+        }
+    }
+
+    fn tiny_cfg() -> ServeConfig {
+        ServeConfig {
+            mode: CompressionMode::thinkv_default(),
+            budget: 64,
+            max_new_tokens: 8,
+            workers: 1,
+            temperature: 0.0,
+            ..ServeConfig::default()
+        }
+    }
+
+    fn mk_session(id: u64, cfg: &ServeConfig, man: &Manifest, pool: &Arc<BlockPool>) -> Session {
+        Session::with_pool(id, vec![1, 2, 3], cfg, man, Some(Arc::clone(pool))).unwrap()
+    }
+
+    /// Oversubscribed submission: only as many sessions are admitted as
+    /// the pool can hold; completions free bytes and admit the rest, and
+    /// the pool never exceeds capacity.
+    #[test]
+    fn admission_queues_until_bytes_free() {
+        let cfg = tiny_cfg();
+        let man = tiny_manifest();
+        let probe = mk_session(0, &cfg, &man, &Arc::new(BlockPool::new(u64::MAX / 2)));
+        let per = probe.admission_bytes();
+        assert!(per > 0);
+        // room for exactly two admission reserves
+        let pool = Arc::new(BlockPool::new(2 * per + per / 2));
+        let sched = Scheduler::new(Arc::clone(&pool));
+        let (tx, rx) = mpsc::channel();
+        for id in 1..=5u64 {
+            sched.submit(mk_session(id, &cfg, &man, &pool), tx.clone());
+        }
+        let snap = sched.snapshot();
+        assert_eq!(snap.running, 2, "admission must stop at pool capacity");
+        assert_eq!(snap.queue_depth, 3);
+        assert!(snap.pool_peak <= snap.pool_capacity);
+
+        // drain: fake-finish each admitted session; the freed bytes admit
+        // the next waiter
+        let mut done = 0;
+        while done < 5 {
+            let mut entry = sched.next().expect("runnable session");
+            entry.session.finished_at = Some(std::time::Instant::now());
+            let _ = entry.done_tx.send(RequestResult::from_session(&entry.session));
+            sched.complete(&mut entry.session);
+            done += 1;
+        }
+        drop(tx);
+        assert_eq!(rx.iter().count(), 5, "every request must complete");
+        let snap = sched.snapshot();
+        assert_eq!(snap.completions, 5);
+        assert_eq!(snap.admissions, 5);
+        assert_eq!(snap.pool_used, 0, "all bytes returned at quiescence");
+        assert!(snap.pool_peak <= snap.pool_capacity);
+    }
+
+    /// cannot_grow preempts the youngest admitted session, pauses
+    /// admission while the caller is starving, and resumes it once the
+    /// caller gets its chunk in.
+    #[test]
+    fn preemption_evicts_youngest_first() {
+        let cfg = tiny_cfg();
+        let man = tiny_manifest();
+        let probe = mk_session(0, &cfg, &man, &Arc::new(BlockPool::new(u64::MAX / 2)));
+        let per = probe.admission_bytes();
+        let pool = Arc::new(BlockPool::new(2 * per));
+        let sched = Scheduler::new(Arc::clone(&pool));
+        let (tx, _rx) = mpsc::channel();
+        for id in 1..=3u64 {
+            sched.submit(mk_session(id, &cfg, &man, &pool), tx.clone());
+        }
+        assert_eq!(sched.snapshot().running, 2, "pool fits two admissions");
+        // oldest session (id 1) cannot grow -> youngest admitted (id 2)
+        // is evicted, and its freed bytes are NOT handed to waiters while
+        // the starved caller has not run again
+        let entry = sched.next().expect("oldest session");
+        assert_eq!(entry.session.id, 1);
+        sched.cannot_grow(entry);
+        let snap = sched.snapshot();
+        assert_eq!(snap.preemptions, 1);
+        assert_eq!(snap.running, 1, "victim no longer admitted");
+        assert_eq!(snap.queue_depth, 2, "admission paused while starving");
+        assert_eq!(snap.pool_used, per, "victim bytes returned");
+        // the starved session retries first; once it yields, admission
+        // resumes with the preempted session at the head of the line
+        let retry = sched.next().expect("starved session requeued");
+        assert_eq!(retry.session.id, 1);
+        assert_eq!(retry.session.preemptions, 0, "caller was not reset");
+        sched.yield_back(retry);
+        let snap = sched.snapshot();
+        assert_eq!(snap.admissions, 3, "victim re-admitted after the yield");
+        assert_eq!(snap.running, 2);
+        assert_eq!(snap.queue_depth, 1);
+        assert!(snap.pool_peak <= snap.pool_capacity);
+
+        // a session that cannot grow while alone is failed, not looped
+        // (fresh pool: the first scheduler's sessions still hold bytes)
+        let pool2 = Arc::new(BlockPool::new(2 * per));
+        let sched2 = Scheduler::new(Arc::clone(&pool2));
+        let (tx2, rx2) = mpsc::channel();
+        sched2.submit(mk_session(9, &cfg, &man, &pool2), tx2);
+        let alone = sched2.next().unwrap();
+        sched2.cannot_grow(alone);
+        let r = rx2.recv().expect("failure result delivered");
+        assert!(r.error.is_some());
+        assert_eq!(sched2.snapshot().rejections, 1);
+    }
+
+    /// Preemption marks set while a worker holds the victim are honored
+    /// at yield time.
+    #[test]
+    fn held_victim_vacates_at_yield() {
+        let cfg = tiny_cfg();
+        let man = tiny_manifest();
+        let probe = mk_session(0, &cfg, &man, &Arc::new(BlockPool::new(u64::MAX / 2)));
+        let per = probe.admission_bytes();
+        let pool = Arc::new(BlockPool::new(2 * per));
+        let sched = Scheduler::new(Arc::clone(&pool));
+        let (tx, _rx) = mpsc::channel();
+        sched.submit(mk_session(1, &cfg, &man, &pool), tx.clone());
+        sched.submit(mk_session(2, &cfg, &man, &pool), tx.clone());
+        let older = sched.next().unwrap();
+        let younger = sched.next().unwrap(); // both now held by "workers"
+        assert_eq!(younger.session.id, 2);
+        sched.cannot_grow(older); // marks id 2 for preemption
+        assert_eq!(sched.snapshot().preemptions, 0, "victim still held");
+        sched.yield_back(younger); // honors the mark
+        let snap = sched.snapshot();
+        assert_eq!(snap.preemptions, 1);
+        assert_eq!(snap.queue_depth, 1);
+        assert_eq!(snap.running, 1);
+        // starved caller runs, yields, and the victim is re-admitted
+        let retry = sched.next().unwrap();
+        assert_eq!(retry.session.id, 1);
+        sched.yield_back(retry);
+        let snap = sched.snapshot();
+        assert_eq!(snap.running, 2);
+        assert_eq!(snap.queue_depth, 0);
+        assert!(snap.pool_peak <= snap.pool_capacity);
+    }
+}

@@ -1,47 +1,154 @@
 //! A decode session: one request's full state machine, advanced one decode
 //! step at a time against a worker's PJRT engine.
 //!
-//! ThinKV sessions own a [`CtCache`] plus the classifier/TBE/TBQ trio;
-//! baseline sessions own an [`Fp32Cache`] plus their [`EvictionPolicy`].
-//! All cache policy work happens here in Rust — the engine only executes
-//! the AOT decode-step HLO.
+//! Every compression mode flows through the same generic decode path via
+//! the [`KvBackend`] trait (`make_room` → `Engine::decode` → `absorb`);
+//! the mode only decides which backend [`build_backend`] constructs.
+//! Sessions also carry their [`BlockPool`] reservation: the scheduler
+//! grants an admission reserve, each step pre-reserves its worst-case
+//! growth and trues the reservation up after ([`Session::step`] returns
+//! [`StepOutcome::NeedMemory`] when the pool cannot cover the growth, and
+//! the scheduler preempts). All cache policy work happens here in Rust —
+//! the engine only executes the AOT decode-step HLO.
 
-use anyhow::{bail, Result};
+use std::sync::Arc;
 
-use crate::baselines::eviction::{EvictionPolicy, PosAttn};
+use anyhow::Result;
+
+use crate::baselines::eviction::EvictionPolicy;
 use crate::baselines::quant_baselines::PmKvq;
 use crate::compress::tbe::{Tbe, TbeConfig};
 use crate::compress::tbq::Tbq;
-use crate::kvcache::{CacheConfig, CtCache, Fp32Cache, Thought};
+use crate::kvcache::{
+    BlockPool, CacheConfig, CtCache, Fp32Backend, Fp32Cache, KvBackend, QuantBackend,
+};
 use crate::metrics::Breakdown;
 use crate::quant::Precision;
-use crate::runtime::{DecodeOut, Engine};
+use crate::runtime::Engine;
 use crate::sim::harness::EvictKind;
 use crate::thought::classifier::{Classifier, ClassifierConfig};
-use crate::thought::sparsity_per_layer;
 
 use super::config::{CompressionMode, ServeConfig};
 use super::sampler::Sampler;
 
-const SPARSITY_REL_THRESHOLD: f32 = 0.01; // 1% of row max (paper fn. 2)
+/// Result of advancing a session by one decode step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// The session produced a token and can keep going.
+    Running,
+    /// The session finished (token budget reached, or already done).
+    Finished,
+    /// The block pool could not cover this step's KV growth; the
+    /// scheduler must reclaim memory (preempt) before retrying.
+    NeedMemory,
+}
 
-enum CacheState {
-    Quant {
-        cache: CtCache,
-        tbq: Tbq,
-        tbe: Option<Tbe>,
-        classifier: Classifier,
-        cur_thought: Thought,
-        cur_segment: usize,
-        pmkvq: Option<PmKvq>,
-    },
-    Fp32 {
-        cache: Fp32Cache,
-        policy: Box<dyn EvictionPolicy>,
-        budget: usize,
-        gather: bool,
-        capacity: usize,
-    },
+/// Build the cache backend a serving mode runs on.
+pub fn build_backend(
+    cfg: &ServeConfig,
+    manifest: &crate::model::Manifest,
+) -> Result<Box<dyn KvBackend>> {
+    let m = manifest.model.clone();
+    let kv_dim = m.n_kv_heads * m.d_head;
+    match &cfg.mode {
+        CompressionMode::FullKv | CompressionMode::Evict(_) => {
+            let need = m.prefill_len + cfg.max_new_tokens + m.buf_slots;
+            let capacity = manifest
+                .pick_fp32_cap(need.min(*manifest.fp32_caps.last().unwrap_or(&need)))
+                .or(manifest.fp32_caps.last().copied())
+                .ok_or_else(|| anyhow::anyhow!("no fp32 artifact"))?;
+            let (policy, gather, budget): (Box<dyn EvictionPolicy>, bool, usize) = match &cfg.mode
+            {
+                CompressionMode::FullKv => {
+                    (Box::new(crate::baselines::eviction::FullKv), false, usize::MAX)
+                }
+                CompressionMode::Evict(kind) => {
+                    let p: Box<dyn EvictionPolicy> = match kind {
+                        EvictKind::H2O => Box::new(crate::baselines::eviction::H2O::new()),
+                        EvictKind::Rkv | EvictKind::RkvOverlapped => {
+                            Box::new(crate::baselines::eviction::Rkv::new())
+                        }
+                        EvictKind::LazyEviction => {
+                            Box::new(crate::baselines::eviction::LazyEviction::new())
+                        }
+                        EvictKind::RaaS => Box::new(crate::baselines::eviction::RaaS::new()),
+                        EvictKind::SnapKv => {
+                            Box::new(crate::baselines::eviction::StreamingLlm::new(4))
+                        } // prefill-obs wired post-prefill
+                        EvictKind::StreamingLlm => {
+                            Box::new(crate::baselines::eviction::StreamingLlm::new(4))
+                        }
+                    };
+                    (p, kind == &EvictKind::Rkv || kind == &EvictKind::RkvOverlapped, cfg.budget)
+                }
+                _ => unreachable!(),
+            };
+            Ok(Box::new(Fp32Backend::new(
+                Fp32Cache::new(m.n_layers, capacity, kv_dim, m.buf_slots),
+                policy,
+                budget,
+                gather,
+                capacity,
+            )))
+        }
+        CompressionMode::ThinKv { .. } | CompressionMode::Kivi(_) | CompressionMode::PmKvq => {
+            let headroom = cfg.budget + m.buf_slots + 64;
+            let want = match &cfg.mode {
+                // quantization-only modes never evict: need room for all
+                CompressionMode::Kivi(_) | CompressionMode::PmKvq => {
+                    m.prefill_len + cfg.max_new_tokens + m.buf_slots
+                }
+                CompressionMode::ThinKv { no_tbe: true, .. } => {
+                    m.prefill_len + cfg.max_new_tokens + m.buf_slots
+                }
+                _ => headroom,
+            };
+            let capacity = cfg
+                .capacity
+                .or_else(|| manifest.pick_quant_cap(want))
+                .or(manifest.quant_caps.last().copied())
+                .ok_or_else(|| anyhow::anyhow!("no quant artifact"))?;
+            let cache = CtCache::new(CacheConfig {
+                layers: m.n_layers,
+                capacity,
+                block_size: 8,
+                hkv: m.n_kv_heads,
+                dh: m.d_head,
+                buf_slots: m.buf_slots,
+            });
+            let (tbq, tbe, pmkvq) = match &cfg.mode {
+                CompressionMode::ThinKv { assignment, no_tbq, no_tbe } => {
+                    let tbq = if *no_tbq {
+                        // iso-compression ablation: uniform FP8 (highest
+                        // fidelity available on the quant path)
+                        Tbq::uniform(Precision::Fp8)
+                    } else {
+                        Tbq::new(*assignment)
+                    };
+                    let tbe = (!no_tbe).then(|| {
+                        Tbe::new(TbeConfig {
+                            retention: cfg.retention.clone(),
+                            budget: cfg.budget,
+                            kmeans_iters: 8,
+                            seed: cfg.seed,
+                        })
+                    });
+                    (tbq, tbe, None)
+                }
+                CompressionMode::Kivi(p) => (Tbq::uniform(*p), None, None),
+                CompressionMode::PmKvq => {
+                    (Tbq::uniform(Precision::Fp8), None, Some(PmKvq::default_schedule()))
+                }
+                _ => unreachable!(),
+            };
+            let classifier = Classifier::new(ClassifierConfig {
+                layers: vec![0, 1, 2, 3],
+                thresholds: crate::thought::calibration::default_thresholds(3),
+                refresh: cfg.refresh,
+            });
+            Ok(Box::new(QuantBackend::new(cache, tbq, tbe, classifier, pmkvq)))
+        }
+    }
 }
 
 pub struct Session {
@@ -51,13 +158,27 @@ pub struct Session {
     pub pos: usize,
     pub max_new_tokens: usize,
     pub mode_label: String,
-    state: CacheState,
+    /// Built lazily on the first decode step and dropped on preemption,
+    /// so sessions waiting for admission (and preempted ones) hold no
+    /// cache slabs — process memory tracks the pool, not the submit
+    /// count.
+    backend: Option<Box<dyn KvBackend>>,
     sampler: Sampler,
     pub breakdown: Breakdown,
     pub created: std::time::Instant,
     pub first_token_at: Option<std::time::Instant>,
     pub finished_at: Option<std::time::Instant>,
     prefilled: bool,
+    /// Times this session was preempted (reset + requeued) by the
+    /// memory-aware scheduler.
+    pub preemptions: u64,
+    /// Admission reserve, computed once at construction.
+    admission_est: u64,
+    cfg: ServeConfig,
+    manifest: crate::model::Manifest,
+    pool: Option<Arc<BlockPool>>,
+    /// Bytes currently held in the pool on this session's behalf.
+    reserved_bytes: u64,
 }
 
 impl Session {
@@ -67,118 +188,22 @@ impl Session {
         cfg: &ServeConfig,
         manifest: &crate::model::Manifest,
     ) -> Result<Session> {
-        let m = manifest.model.clone();
-        let kv_dim = m.n_kv_heads * m.d_head;
-        let state = match &cfg.mode {
-            CompressionMode::FullKv | CompressionMode::Evict(_) => {
-                let need = m.prefill_len + cfg.max_new_tokens + m.buf_slots;
-                let capacity = manifest
-                    .pick_fp32_cap(need.min(*manifest.fp32_caps.last().unwrap_or(&need)))
-                    .or(manifest.fp32_caps.last().copied())
-                    .ok_or_else(|| anyhow::anyhow!("no fp32 artifact"))?;
-                let (policy, gather, budget): (Box<dyn EvictionPolicy>, bool, usize) =
-                    match &cfg.mode {
-                        CompressionMode::FullKv => {
-                            (Box::new(crate::baselines::eviction::FullKv), false, usize::MAX)
-                        }
-                        CompressionMode::Evict(kind) => {
-                            let p: Box<dyn EvictionPolicy> = match kind {
-                                EvictKind::H2O => Box::new(crate::baselines::eviction::H2O::new()),
-                                EvictKind::Rkv | EvictKind::RkvOverlapped => {
-                                    Box::new(crate::baselines::eviction::Rkv::new())
-                                }
-                                EvictKind::LazyEviction => {
-                                    Box::new(crate::baselines::eviction::LazyEviction::new())
-                                }
-                                EvictKind::RaaS => {
-                                    Box::new(crate::baselines::eviction::RaaS::new())
-                                }
-                                EvictKind::SnapKv => Box::new(
-                                    crate::baselines::eviction::StreamingLlm::new(4),
-                                ), // prefill-obs wired post-prefill
-                                EvictKind::StreamingLlm => {
-                                    Box::new(crate::baselines::eviction::StreamingLlm::new(4))
-                                }
-                            };
-                            (p, kind == &EvictKind::Rkv || kind == &EvictKind::RkvOverlapped, cfg.budget)
-                        }
-                        _ => unreachable!(),
-                    };
-                CacheState::Fp32 {
-                    cache: Fp32Cache::new(m.n_layers, capacity, kv_dim, m.buf_slots),
-                    policy,
-                    budget,
-                    gather,
-                    capacity,
-                }
-            }
-            CompressionMode::ThinKv { .. }
-            | CompressionMode::Kivi(_)
-            | CompressionMode::PmKvq => {
-                let headroom = cfg.budget + m.buf_slots + 64;
-                let want = match &cfg.mode {
-                    // quantization-only modes never evict: need room for all
-                    CompressionMode::Kivi(_) | CompressionMode::PmKvq => {
-                        m.prefill_len + cfg.max_new_tokens + m.buf_slots
-                    }
-                    CompressionMode::ThinKv { no_tbe: true, .. } => {
-                        m.prefill_len + cfg.max_new_tokens + m.buf_slots
-                    }
-                    _ => headroom,
-                };
-                let capacity = cfg
-                    .capacity
-                    .or_else(|| manifest.pick_quant_cap(want))
-                    .or(manifest.quant_caps.last().copied())
-                    .ok_or_else(|| anyhow::anyhow!("no quant artifact"))?;
-                let cache = CtCache::new(CacheConfig {
-                    layers: m.n_layers,
-                    capacity,
-                    block_size: 8,
-                    hkv: m.n_kv_heads,
-                    dh: m.d_head,
-                    buf_slots: m.buf_slots,
-                });
-                let (tbq, tbe, pmkvq) = match &cfg.mode {
-                    CompressionMode::ThinKv { assignment, no_tbq, no_tbe } => {
-                        let tbq = if *no_tbq {
-                            // iso-compression ablation: uniform FP8 (highest
-                            // fidelity available on the quant path)
-                            Tbq::uniform(Precision::Fp8)
-                        } else {
-                            Tbq::new(*assignment)
-                        };
-                        let tbe = (!no_tbe).then(|| {
-                            Tbe::new(TbeConfig {
-                                retention: cfg.retention.clone(),
-                                budget: cfg.budget,
-                                kmeans_iters: 8,
-                                seed: cfg.seed,
-                            })
-                        });
-                        (tbq, tbe, None)
-                    }
-                    CompressionMode::Kivi(p) => (Tbq::uniform(*p), None, None),
-                    CompressionMode::PmKvq => {
-                        (Tbq::uniform(Precision::Fp8), None, Some(PmKvq::default_schedule()))
-                    }
-                    _ => unreachable!(),
-                };
-                CacheState::Quant {
-                    cache,
-                    tbq,
-                    tbe,
-                    classifier: Classifier::new(ClassifierConfig {
-                        layers: vec![0, 1, 2, 3],
-                        thresholds: crate::thought::calibration::default_thresholds(3),
-                        refresh: cfg.refresh,
-                    }),
-                    cur_thought: Thought::Reasoning,
-                    cur_segment: 0,
-                    pmkvq,
-                }
-            }
-        };
+        Session::with_pool(id, prompt, cfg, manifest, None)
+    }
+
+    /// Construct a session whose KV bytes are accounted against `pool`.
+    pub fn with_pool(
+        id: u64,
+        prompt: Vec<i32>,
+        cfg: &ServeConfig,
+        manifest: &crate::model::Manifest,
+        pool: Option<Arc<BlockPool>>,
+    ) -> Result<Session> {
+        // transient probe: validates the mode/artifact combination and
+        // prices the admission reserve, then frees its slabs
+        let probe = build_backend(cfg, manifest)?;
+        let admission_est = probe.admission_bytes(manifest.model.prefill_len);
+        drop(probe);
         Ok(Session {
             id,
             prompt,
@@ -186,14 +211,27 @@ impl Session {
             pos: 0,
             max_new_tokens: cfg.max_new_tokens,
             mode_label: cfg.mode.label(),
-            state,
+            backend: None,
             sampler: Sampler::new(cfg.temperature, 32, cfg.seed ^ id),
             breakdown: Breakdown::default(),
             created: std::time::Instant::now(),
             first_token_at: None,
             finished_at: None,
             prefilled: false,
+            preemptions: 0,
+            admission_est,
+            cfg: cfg.clone(),
+            manifest: manifest.clone(),
+            pool,
+            reserved_bytes: 0,
         })
+    }
+
+    fn ensure_backend(&mut self) -> Result<()> {
+        if self.backend.is_none() {
+            self.backend = Some(build_backend(&self.cfg, &self.manifest)?);
+        }
+        Ok(())
     }
 
     pub fn done(&self) -> bool {
@@ -202,42 +240,102 @@ impl Session {
 
     /// Live cached tokens (for memory reporting).
     pub fn live_tokens(&self) -> usize {
-        match &self.state {
-            CacheState::Quant { cache, .. } => cache.live_tokens() + cache.buf_fill(),
-            CacheState::Fp32 { cache, .. } => cache.live_tokens() + cache.buf_fill(),
-        }
+        self.backend.as_ref().map_or(0, |b| b.live_tokens())
     }
 
     pub fn avg_bits(&self) -> f64 {
-        match &self.state {
-            CacheState::Quant { cache, .. } => cache.avg_bits_written(),
-            CacheState::Fp32 { .. } => 16.0,
-        }
+        self.backend.as_ref().map_or(0.0, |b| b.avg_bits())
     }
 
     pub fn ct_reuse_count(&self) -> u64 {
-        match &self.state {
-            CacheState::Quant { cache, .. } => {
-                cache.tables.iter().map(|t| t.reuse_count).sum()
-            }
-            _ => 0,
-        }
+        self.backend.as_ref().map_or(0, |b| b.ct_reuses())
     }
 
     pub fn tbe_stats(&self) -> Option<crate::compress::tbe::TbeStats> {
-        match &self.state {
-            CacheState::Quant { tbe: Some(t), .. } => Some(t.stats.clone()),
-            _ => None,
-        }
+        self.backend.as_ref().and_then(|b| b.tbe_stats())
     }
 
     pub fn gather_stats(&self) -> (u64, u64, u64) {
-        match &self.state {
-            CacheState::Fp32 { cache, .. } => {
-                (cache.gather_calls, cache.gather_bytes, cache.gather_nanos)
+        self.backend.as_ref().map_or((0, 0, 0), |b| b.gather_stats())
+    }
+
+    /// Current live KV bytes under packed accounting.
+    pub fn bytes_used(&self) -> u64 {
+        self.backend.as_ref().map_or(0, |b| b.bytes_used())
+    }
+
+    /// Upper bound on the post-prefill footprint — what the scheduler
+    /// reserves in the pool before admitting this session.
+    pub fn admission_bytes(&self) -> u64 {
+        self.admission_est
+    }
+
+    /// Record an admission reserve the scheduler already charged to the
+    /// pool on this session's behalf.
+    pub(crate) fn grant(&mut self, bytes: u64) {
+        debug_assert_eq!(self.reserved_bytes, 0, "double admission grant");
+        self.reserved_bytes = bytes;
+    }
+
+    /// Return every byte this session holds to the pool.
+    pub(crate) fn release_pool(&mut self) {
+        if let Some(pool) = &self.pool {
+            if self.reserved_bytes > 0 {
+                pool.release(self.reserved_bytes);
             }
-            _ => (0, 0, 0),
         }
+        self.reserved_bytes = 0;
+    }
+
+    /// Grow the reservation to `want` bytes; false if the pool is out of
+    /// memory (caller must preempt someone and retry).
+    fn ensure_reserved(&mut self, want: u64) -> bool {
+        let Some(pool) = &self.pool else { return true };
+        if want > self.reserved_bytes {
+            if !pool.reserve(want - self.reserved_bytes) {
+                return false;
+            }
+            self.reserved_bytes = want;
+        }
+        true
+    }
+
+    /// True the reservation up to the backend's actual live bytes —
+    /// called after every append/evict/requant so the pool stays
+    /// byte-accurate (surplus from the pre-step worst-case reserve goes
+    /// back immediately).
+    fn sync_pool(&mut self) {
+        let cur = self.bytes_used();
+        let Some(pool) = &self.pool else { return };
+        if cur < self.reserved_bytes {
+            pool.release(self.reserved_bytes - cur);
+            self.reserved_bytes = cur;
+        } else if cur > self.reserved_bytes {
+            // Growth is pre-reserved, so this only fires if an admission
+            // estimate undershot; true up best-effort to keep pool books
+            // honest.
+            debug_assert!(false, "KV growth exceeded its pre-step reserve");
+            if pool.reserve(cur - self.reserved_bytes) {
+                self.reserved_bytes = cur;
+            }
+        }
+    }
+
+    /// Reset this session for preemption: free the cache slabs, return
+    /// the pool bytes, and rewind generation so a later re-admission
+    /// recomputes from the prompt (vLLM-style recompute preemption; the
+    /// backend is rebuilt lazily on the next step). The time-accounting
+    /// fields keep running — ttft/total latencies include the time spent
+    /// preempted.
+    pub fn reset_for_preemption(&mut self) {
+        self.release_pool();
+        self.backend = None;
+        self.sampler = Sampler::new(self.cfg.temperature, 32, self.cfg.seed ^ self.id);
+        self.tokens.clear();
+        self.pos = 0;
+        self.prefilled = false;
+        self.first_token_at = None;
+        self.preemptions += 1;
     }
 
     /// Run prompt prefill (once).
@@ -245,261 +343,76 @@ impl Session {
         if self.prefilled {
             return Ok(());
         }
+        self.ensure_backend()?;
         let m = engine.model().clone();
         let out = engine.prefill(&self.prompt)?;
-        let p = m.prefill_len;
-        match &mut self.state {
-            CacheState::Quant { cache, tbq, .. } => {
-                // prefill tokens are R thoughts (paper §6.1)
-                let prec = tbq.psi(Thought::Reasoning);
-                cache.write_prefill(&out.k, &out.v, p, prec);
-            }
-            CacheState::Fp32 { cache, .. } => {
-                cache.write_prefill(&out.k, &out.v, p);
-            }
-        }
+        self.backend
+            .as_mut()
+            .expect("backend built above")
+            .write_prefill(&out, m.prefill_len);
         // bootstrap the first generated token from prefill logits
         let t0 = std::time::Instant::now();
         let next = self.sampler.sample(&out.logits);
         self.breakdown.sample_ns += t0.elapsed().as_nanos() as u64;
         self.tokens.push(next);
-        self.pos = p;
+        self.pos = m.prefill_len;
         self.first_token_at = Some(std::time::Instant::now());
         self.prefilled = true;
         Ok(())
     }
 
-    /// Advance one decode step. Returns true while the session is running.
-    pub fn step(&mut self, engine: &Engine) -> Result<bool> {
+    /// Advance one decode step — the single generic path every
+    /// compression mode runs.
+    pub fn step(&mut self, engine: &Engine) -> Result<StepOutcome> {
         if self.done() {
-            return Ok(false);
+            return Ok(StepOutcome::Finished);
         }
         if !self.prefilled {
+            // the admission reserve covers the prefill footprint
             self.prefill(engine)?;
+            self.sync_pool();
         }
         if self.tokens.len() >= self.max_new_tokens {
             self.finished_at = Some(std::time::Instant::now());
-            return Ok(false);
+            return Ok(StepOutcome::Finished);
+        }
+        // reserve this step's worst-case KV growth before doing any work
+        let headroom = self
+            .backend
+            .as_ref()
+            .expect("prefill built the backend")
+            .step_headroom_bytes();
+        let want = self.bytes_used() + headroom;
+        if !self.ensure_reserved(want) {
+            return Ok(StepOutcome::NeedMemory);
         }
         let token = *self.tokens.last().expect("prefill bootstraps a token");
-        let m = engine.model().clone();
-        let out = match &mut self.state {
-            CacheState::Quant { .. } => self.step_quant(engine, token)?,
-            CacheState::Fp32 { .. } => self.step_fp32(engine, token)?,
-        };
+        let pos = self.pos;
+        let backend = self.backend.as_mut().expect("prefill built the backend");
+        backend.make_room(pos, &mut self.breakdown)?;
+        let te = std::time::Instant::now();
+        let out = engine.decode(token, pos as i32, backend.buf_fill() as i32, &backend.view())?;
+        self.breakdown.decode_exec_ns += te.elapsed().as_nanos() as u64;
+        backend.absorb(&out, pos, engine.model(), &mut self.breakdown)?;
         let t0 = std::time::Instant::now();
         let next = self.sampler.sample(&out.logits);
         self.breakdown.sample_ns += t0.elapsed().as_nanos() as u64;
         self.tokens.push(next);
         self.pos += 1;
         self.breakdown.steps += 1;
-        let _ = m;
+        self.sync_pool();
         if self.tokens.len() >= self.max_new_tokens {
             self.finished_at = Some(std::time::Instant::now());
-            return Ok(false);
+            return Ok(StepOutcome::Finished);
         }
-        Ok(true)
+        Ok(StepOutcome::Running)
     }
+}
 
-    fn step_quant(&mut self, engine: &Engine, token: i32) -> Result<DecodeOut> {
-        let m = engine.model().clone();
-        let CacheState::Quant {
-            cache,
-            tbq,
-            tbe,
-            classifier,
-            cur_thought,
-            cur_segment,
-            pmkvq,
-        } = &mut self.state
-        else {
-            unreachable!()
-        };
-        if cache.segments.is_empty() {
-            bail!("prefill did not initialize segments");
-        }
-        if *cur_segment == 0 && cache.segments.len() == 1 {
-            // first decode token: open the initial decode segment
-            *cur_segment = cache.open_segment(*cur_thought, self.pos);
-        }
-
-        // 1. flush the fp ring buffer if full (group quantization, TBQ)
-        if cache.buf_fill() == cache.cfg.buf_slots {
-            let tq = std::time::Instant::now();
-            let psi = |t: Thought| tbq.psi(t);
-            if cache.flush_buffer(&psi).is_err() {
-                // TBE case 2 under allocation pressure
-                if let Some(tbe) = tbe.as_mut() {
-                    let te = std::time::Instant::now();
-                    tbe.ensure_budget(cache);
-                    self.breakdown.tbe_ns += te.elapsed().as_nanos() as u64;
-                    self.breakdown.tbe_calls += 1;
-                }
-                if cache.flush_buffer(&psi).is_err() {
-                    bail!("cache exhausted even after TBE (budget too small for capacity)");
-                }
-            }
-            self.breakdown.quant_write_ns += tq.elapsed().as_nanos() as u64;
-        }
-
-        // 2. decode step over the quantized cache
-        let te = std::time::Instant::now();
-        let out = engine.decode_quant(token, self.pos as i32, cache.buf_fill() as i32, &cache.view())?;
-        self.breakdown.decode_exec_ns += te.elapsed().as_nanos() as u64;
-
-        // 3. sparsity -> classifier
-        let tr = std::time::Instant::now();
-        let c = cache.cfg.capacity;
-        let b = cache.cfg.buf_slots;
-        let span = c + b;
-        let mut valid = vec![0f32; m.n_layers * span];
-        for l in 0..m.n_layers {
-            valid[l * span..l * span + c].copy_from_slice(&cache.mask[l * c..(l + 1) * c]);
-            valid[l * span + c..(l + 1) * span]
-                .copy_from_slice(&cache.buf_mask[l * b..(l + 1) * b]);
-        }
-        let per_layer = sparsity_per_layer(
-            &out.probs,
-            &valid,
-            m.n_layers,
-            m.n_heads,
-            span,
-            SPARSITY_REL_THRESHOLD,
-        );
-        classifier.push_step(&per_layer);
-        if classifier.due() {
-            let closing = *cur_thought;
-            let label = classifier.refresh();
-            self.breakdown.refresh_calls += 1;
-            // TBE case 1 at the end of a transition window
-            if closing == Thought::Transition {
-                if let Some(tbe) = tbe.as_mut() {
-                    let tt = std::time::Instant::now();
-                    tbe.on_transition_end(cache, *cur_segment);
-                    self.breakdown.tbe_ns += tt.elapsed().as_nanos() as u64;
-                    self.breakdown.tbe_calls += 1;
-                }
-            }
-            *cur_thought = label;
-            *cur_segment = cache.open_segment(label, self.pos + 1);
-        }
-        self.breakdown.refresh_ns += tr.elapsed().as_nanos() as u64;
-
-        // 4. push the new token into B_buf
-        let tq = std::time::Instant::now();
-        cache.push_token(&out.new_k, &out.new_v, self.pos, *cur_segment, *cur_thought);
-        self.breakdown.quant_write_ns += tq.elapsed().as_nanos() as u64;
-
-        // 5. TBE case 2: budget
-        if let Some(tbe) = tbe.as_mut() {
-            tbe.tick();
-            if cache.live_tokens() + cache.buf_fill() > tbe.cfg.budget {
-                let tt = std::time::Instant::now();
-                let evicted = tbe.ensure_budget(cache);
-                self.breakdown.tbe_ns += tt.elapsed().as_nanos() as u64;
-                if evicted > 0 {
-                    self.breakdown.tbe_calls += 1;
-                }
-            }
-        }
-
-        // 6. PM-KVQ progressive requantization
-        if let Some(pm) = pmkvq {
-            if self.pos % 128 == 0 {
-                let tp = std::time::Instant::now();
-                pm.apply(cache, self.pos);
-                self.breakdown.policy_ns += tp.elapsed().as_nanos() as u64;
-                self.breakdown.policy_calls += 1;
-            }
-        }
-        Ok(out)
-    }
-
-    fn step_fp32(&mut self, engine: &Engine, token: i32) -> Result<DecodeOut> {
-        let m = engine.model().clone();
-        let CacheState::Fp32 { cache, policy, budget, gather, capacity } = &mut self.state
-        else {
-            unreachable!()
-        };
-        // flush buffer if full
-        if cache.buf_fill() == cache.buf_slots {
-            while cache.flush_buffer().is_err() {
-                let tp = std::time::Instant::now();
-                let live = cache.live_positions();
-                let target = live.len().saturating_sub(cache.buf_slots);
-                let evict = policy.select_evictions(&live, target);
-                if evict.is_empty() {
-                    bail!("fp32 cache full and policy refuses to evict");
-                }
-                cache.evict_positions(&evict);
-                self.breakdown.policy_ns += tp.elapsed().as_nanos() as u64;
-                self.breakdown.policy_calls += 1;
-                if *gather {
-                    let tg = std::time::Instant::now();
-                    cache.compact_gather();
-                    self.breakdown.gather_ns += tg.elapsed().as_nanos() as u64;
-                    self.breakdown.gather_calls += 1;
-                }
-            }
-        }
-
-        let te = std::time::Instant::now();
-        let out = engine.decode_fp32(
-            *capacity,
-            token,
-            self.pos as i32,
-            cache.buf_fill() as i32,
-            &cache.k,
-            &cache.v,
-            &cache.mask,
-            &cache.buf_k,
-            &cache.buf_v,
-            &cache.buf_mask,
-        )?;
-        self.breakdown.decode_exec_ns += te.elapsed().as_nanos() as u64;
-
-        // feed attention stats to the policy (mean over layers+heads)
-        let tp = std::time::Instant::now();
-        let span = *capacity + cache.buf_slots;
-        let mut pos_attn = Vec::new();
-        for slot in 0..*capacity {
-            let p = cache.slot_pos[slot];
-            if p < 0 {
-                continue;
-            }
-            let mut acc = 0f32;
-            for l in 0..m.n_layers {
-                for h in 0..m.n_heads {
-                    acc += out.probs[(l * m.n_heads + h) * span + slot];
-                }
-            }
-            pos_attn.push((p as usize, acc / (m.n_layers * m.n_heads) as f32));
-        }
-        policy.observe(&PosAttn { step: self.pos, attn: pos_attn });
-        self.breakdown.policy_ns += tp.elapsed().as_nanos() as u64;
-
-        cache.push_token(&out, self.pos);
-
-        // budget enforcement
-        if *budget != usize::MAX {
-            let live = cache.live_positions();
-            if live.len() + cache.buf_fill() > *budget {
-                let tp = std::time::Instant::now();
-                let target = budget.saturating_sub(cache.buf_fill());
-                let evict = policy.select_evictions(&live, target);
-                if !evict.is_empty() {
-                    cache.evict_positions(&evict);
-                    self.breakdown.policy_calls += 1;
-                    if *gather {
-                        let tg = std::time::Instant::now();
-                        cache.compact_gather();
-                        self.breakdown.gather_ns += tg.elapsed().as_nanos() as u64;
-                        self.breakdown.gather_calls += 1;
-                    }
-                }
-                self.breakdown.policy_ns += tp.elapsed().as_nanos() as u64;
-            }
-        }
-        Ok(out)
+impl Drop for Session {
+    /// A session dropped mid-flight (scheduler shutdown, submitter gone)
+    /// must not strand its pool reservation.
+    fn drop(&mut self) {
+        self.release_pool();
     }
 }

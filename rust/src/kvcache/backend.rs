@@ -1,0 +1,470 @@
+//! [`KvBackend`]: the unified cache abstraction behind every compression
+//! mode (alloc / append / evict / decode-view / bytes-used / live-tokens).
+//!
+//! Before this trait existed, [`crate::coordinator::Session`] carried a
+//! closed `CacheState` enum and duplicated the decode-step plumbing once
+//! per cache family. Now the session drives one generic path —
+//!
+//! ```text
+//!   make_room -> Engine::decode(view()) -> absorb
+//! ```
+//!
+//! — and the policy machinery lives with the cache it manages:
+//!
+//! * [`QuantBackend`] — [`CtCache`] + TBQ precision assignment + optional
+//!   TBE eviction + thought classifier (+ optional PM-KVQ requant
+//!   schedule). Serves ThinKV, the ThinKV ablations, KIVI and PM-KVQ.
+//! * [`Fp32Backend`] — [`Fp32Cache`] + a boxed
+//!   [`EvictionPolicy`](crate::baselines::eviction::EvictionPolicy).
+//!   Serves FullKV and every eviction baseline (H2O, R-KV, RaaS, ...).
+//!
+//! The byte-accounting methods ([`KvBackend::bytes_used`],
+//! [`KvBackend::admission_bytes`], [`KvBackend::step_headroom_bytes`])
+//! are what the memory-aware scheduler charges against the global
+//! [`BlockPool`](super::BlockPool): packed live bytes for the quantized
+//! cache, f32 live bytes for the baseline cache, both including the
+//! full-precision ring buffer.
+
+use anyhow::{bail, Result};
+
+use crate::baselines::eviction::{EvictionPolicy, PosAttn};
+use crate::baselines::quant_baselines::PmKvq;
+use crate::compress::tbe::{Tbe, TbeStats};
+use crate::compress::tbq::Tbq;
+use crate::metrics::Breakdown;
+use crate::model::ModelConfig;
+use crate::quant::packed_bits_per_elem;
+use crate::runtime::{CacheView, DecodeOut, PrefillOut};
+use crate::thought::classifier::Classifier;
+use crate::thought::sparsity_per_layer;
+
+use super::{CtCache, Fp32Cache, Thought};
+
+/// Relative threshold for "non-negligible" attention (1% of row max,
+/// paper fn. 2) used by the sparsity -> classifier feed.
+const SPARSITY_REL_THRESHOLD: f32 = 0.01;
+
+/// Bytes one token occupies in the full-precision ring buffer, across all
+/// layers (K and V, f32). This bounds the footprint growth of any single
+/// decode step, so it doubles as the scheduler's per-step reserve.
+fn fp32_token_bytes(layers: usize, kv_dim: usize) -> u64 {
+    (layers * 2 * kv_dim * 4) as u64
+}
+
+/// The unified per-request cache backend the session decode loop drives.
+///
+/// One object = one request's cache plus the policy that manages it.
+/// Implementations must be `Send`: sessions migrate between decode
+/// workers at chunk granularity.
+pub trait KvBackend: Send {
+    /// Short label for diagnostics ("quant" / "fp32").
+    fn kind(&self) -> &'static str;
+
+    /// Ingest the prompt K/V produced by engine prefill (alloc + append).
+    fn write_prefill(&mut self, pf: &PrefillOut, p_len: usize);
+
+    /// Make room for the upcoming decode step: flush the ring buffer if
+    /// full, evicting (TBE case 2 / baseline policy) as needed. `pos` is
+    /// the current CoT position. Errors only when the cache is exhausted
+    /// beyond what the policy can reclaim.
+    fn make_room(&mut self, pos: usize, bd: &mut Breakdown) -> Result<()>;
+
+    /// Engine-facing borrowed view of the cache slabs (decode-view).
+    fn view(&self) -> CacheView<'_>;
+
+    /// Tokens currently staged in the full-precision ring buffer.
+    fn buf_fill(&self) -> usize;
+
+    /// Absorb one decode step's outputs: classification / policy stats,
+    /// the new token's K/V (append), budget enforcement (evict), and any
+    /// progressive requantization.
+    fn absorb(
+        &mut self,
+        out: &DecodeOut,
+        pos: usize,
+        model: &ModelConfig,
+        bd: &mut Breakdown,
+    ) -> Result<()>;
+
+    /// Live cached tokens including the ring buffer (memory reporting).
+    fn live_tokens(&self) -> usize;
+
+    /// Byte-accurate live footprint under packed accounting — the unit
+    /// the scheduler charges against the global `BlockPool`.
+    fn bytes_used(&self) -> u64;
+
+    /// Upper bound on `bytes_used` growth across one decode step (one
+    /// token lands in the f32 ring buffer; flushes and evictions only
+    /// shrink the footprint).
+    fn step_headroom_bytes(&self) -> u64;
+
+    /// Upper bound on `bytes_used` right after prefill plus one full ring
+    /// buffer — the admission reserve for this request.
+    fn admission_bytes(&self, prefill_len: usize) -> u64;
+
+    /// Average packed precision written so far (bits/element).
+    fn avg_bits(&self) -> f64;
+
+    /// CT in-place slot reuses (quant backend only).
+    fn ct_reuses(&self) -> u64 {
+        0
+    }
+
+    /// TBE counters (quant backend with TBE only).
+    fn tbe_stats(&self) -> Option<TbeStats> {
+        None
+    }
+
+    /// (gather_calls, gather_bytes, gather_nanos) — fp32 backend only.
+    fn gather_stats(&self) -> (u64, u64, u64) {
+        (0, 0, 0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantized backend: CtCache + TBQ (+ TBE, classifier, optional PM-KVQ)
+// ---------------------------------------------------------------------------
+
+/// ThinKV / KIVI / PM-KVQ backend over the Continuous-Thinking cache.
+pub struct QuantBackend {
+    cache: CtCache,
+    tbq: Tbq,
+    tbe: Option<Tbe>,
+    classifier: Classifier,
+    cur_thought: Thought,
+    cur_segment: usize,
+    pmkvq: Option<PmKvq>,
+}
+
+impl QuantBackend {
+    pub fn new(
+        cache: CtCache,
+        tbq: Tbq,
+        tbe: Option<Tbe>,
+        classifier: Classifier,
+        pmkvq: Option<PmKvq>,
+    ) -> QuantBackend {
+        QuantBackend {
+            cache,
+            tbq,
+            tbe,
+            classifier,
+            cur_thought: Thought::Reasoning,
+            cur_segment: 0,
+            pmkvq,
+        }
+    }
+}
+
+impl KvBackend for QuantBackend {
+    fn kind(&self) -> &'static str {
+        "quant"
+    }
+
+    fn write_prefill(&mut self, pf: &PrefillOut, p_len: usize) {
+        // prefill tokens are R thoughts (paper §6.1)
+        let prec = self.tbq.psi(Thought::Reasoning);
+        self.cache.write_prefill(&pf.k, &pf.v, p_len, prec);
+    }
+
+    fn make_room(&mut self, pos: usize, bd: &mut Breakdown) -> Result<()> {
+        if self.cache.segments.is_empty() {
+            bail!("prefill did not initialize segments");
+        }
+        if self.cur_segment == 0 && self.cache.segments.len() == 1 {
+            // first decode token: open the initial decode segment
+            self.cur_segment = self.cache.open_segment(self.cur_thought, pos);
+        }
+        // flush the fp ring buffer if full (group quantization, TBQ)
+        if self.cache.buf_fill() == self.cache.cfg.buf_slots {
+            let tq = std::time::Instant::now();
+            let tbq = &self.tbq;
+            let psi = |t: Thought| tbq.psi(t);
+            if self.cache.flush_buffer(&psi).is_err() {
+                // TBE case 2 under allocation pressure
+                if let Some(tbe) = self.tbe.as_mut() {
+                    let te = std::time::Instant::now();
+                    tbe.ensure_budget(&mut self.cache);
+                    bd.tbe_ns += te.elapsed().as_nanos() as u64;
+                    bd.tbe_calls += 1;
+                }
+                if self.cache.flush_buffer(&psi).is_err() {
+                    bail!("cache exhausted even after TBE (budget too small for capacity)");
+                }
+            }
+            bd.quant_write_ns += tq.elapsed().as_nanos() as u64;
+        }
+        Ok(())
+    }
+
+    fn view(&self) -> CacheView<'_> {
+        CacheView::Quant(self.cache.view())
+    }
+
+    fn buf_fill(&self) -> usize {
+        self.cache.buf_fill()
+    }
+
+    fn absorb(
+        &mut self,
+        out: &DecodeOut,
+        pos: usize,
+        model: &ModelConfig,
+        bd: &mut Breakdown,
+    ) -> Result<()> {
+        // sparsity -> classifier
+        let tr = std::time::Instant::now();
+        let c = self.cache.cfg.capacity;
+        let b = self.cache.cfg.buf_slots;
+        let span = c + b;
+        let mut valid = vec![0f32; model.n_layers * span];
+        for l in 0..model.n_layers {
+            valid[l * span..l * span + c].copy_from_slice(&self.cache.mask[l * c..(l + 1) * c]);
+            valid[l * span + c..(l + 1) * span]
+                .copy_from_slice(&self.cache.buf_mask[l * b..(l + 1) * b]);
+        }
+        let per_layer = sparsity_per_layer(
+            &out.probs,
+            &valid,
+            model.n_layers,
+            model.n_heads,
+            span,
+            SPARSITY_REL_THRESHOLD,
+        );
+        self.classifier.push_step(&per_layer);
+        if self.classifier.due() {
+            let closing = self.cur_thought;
+            let label = self.classifier.refresh();
+            bd.refresh_calls += 1;
+            // TBE case 1 at the end of a transition window
+            if closing == Thought::Transition {
+                if let Some(tbe) = self.tbe.as_mut() {
+                    let tt = std::time::Instant::now();
+                    tbe.on_transition_end(&mut self.cache, self.cur_segment);
+                    bd.tbe_ns += tt.elapsed().as_nanos() as u64;
+                    bd.tbe_calls += 1;
+                }
+            }
+            self.cur_thought = label;
+            self.cur_segment = self.cache.open_segment(label, pos + 1);
+        }
+        bd.refresh_ns += tr.elapsed().as_nanos() as u64;
+
+        // push the new token into B_buf
+        let tq = std::time::Instant::now();
+        self.cache
+            .push_token(&out.new_k, &out.new_v, pos, self.cur_segment, self.cur_thought);
+        bd.quant_write_ns += tq.elapsed().as_nanos() as u64;
+
+        // TBE case 2: budget
+        if let Some(tbe) = self.tbe.as_mut() {
+            tbe.tick();
+            if self.cache.live_tokens() + self.cache.buf_fill() > tbe.cfg.budget {
+                let tt = std::time::Instant::now();
+                let evicted = tbe.ensure_budget(&mut self.cache);
+                bd.tbe_ns += tt.elapsed().as_nanos() as u64;
+                if evicted > 0 {
+                    bd.tbe_calls += 1;
+                }
+            }
+        }
+
+        // PM-KVQ progressive requantization
+        if let Some(pm) = &self.pmkvq {
+            if pos % 128 == 0 {
+                let tp = std::time::Instant::now();
+                pm.apply(&mut self.cache, pos);
+                bd.policy_ns += tp.elapsed().as_nanos() as u64;
+                bd.policy_calls += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn live_tokens(&self) -> usize {
+        self.cache.live_tokens() + self.cache.buf_fill()
+    }
+
+    fn bytes_used(&self) -> u64 {
+        self.cache.packed_bytes_live().ceil() as u64
+    }
+
+    fn step_headroom_bytes(&self) -> u64 {
+        fp32_token_bytes(self.cache.cfg.layers, self.cache.cfg.kv_dim())
+    }
+
+    fn admission_bytes(&self, prefill_len: usize) -> u64 {
+        let cfg = &self.cache.cfg;
+        let prec = self.tbq.psi(Thought::Reasoning);
+        let prefill_bits = (prefill_len * cfg.layers * 2 * cfg.kv_dim()) as f64
+            * packed_bits_per_elem(prec);
+        let buf = cfg.buf_slots as u64 * fp32_token_bytes(cfg.layers, cfg.kv_dim());
+        (prefill_bits / 8.0).ceil() as u64 + buf
+    }
+
+    fn avg_bits(&self) -> f64 {
+        self.cache.avg_bits_written()
+    }
+
+    fn ct_reuses(&self) -> u64 {
+        self.cache.tables.iter().map(|t| t.reuse_count).sum()
+    }
+
+    fn tbe_stats(&self) -> Option<TbeStats> {
+        self.tbe.as_ref().map(|t| t.stats.clone())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fp32 backend: Fp32Cache + EvictionPolicy (FullKV and eviction baselines)
+// ---------------------------------------------------------------------------
+
+/// FullKV / eviction-baseline backend over the f32 paged cache.
+pub struct Fp32Backend {
+    cache: Fp32Cache,
+    policy: Box<dyn EvictionPolicy>,
+    /// Token budget k (`usize::MAX` = unbounded, FullKV).
+    budget: usize,
+    /// Whether evictions trigger gather-based compaction (R-KV style).
+    gather: bool,
+    capacity: usize,
+}
+
+impl Fp32Backend {
+    pub fn new(
+        cache: Fp32Cache,
+        policy: Box<dyn EvictionPolicy>,
+        budget: usize,
+        gather: bool,
+        capacity: usize,
+    ) -> Fp32Backend {
+        Fp32Backend { cache, policy, budget, gather, capacity }
+    }
+}
+
+impl KvBackend for Fp32Backend {
+    fn kind(&self) -> &'static str {
+        "fp32"
+    }
+
+    fn write_prefill(&mut self, pf: &PrefillOut, p_len: usize) {
+        self.cache.write_prefill(&pf.k, &pf.v, p_len);
+    }
+
+    fn make_room(&mut self, _pos: usize, bd: &mut Breakdown) -> Result<()> {
+        if self.cache.buf_fill() == self.cache.buf_slots {
+            while self.cache.flush_buffer().is_err() {
+                let tp = std::time::Instant::now();
+                let live = self.cache.live_positions();
+                let target = live.len().saturating_sub(self.cache.buf_slots);
+                let evict = self.policy.select_evictions(&live, target);
+                if evict.is_empty() {
+                    bail!("fp32 cache full and policy refuses to evict");
+                }
+                self.cache.evict_positions(&evict);
+                bd.policy_ns += tp.elapsed().as_nanos() as u64;
+                bd.policy_calls += 1;
+                if self.gather {
+                    let tg = std::time::Instant::now();
+                    self.cache.compact_gather();
+                    bd.gather_ns += tg.elapsed().as_nanos() as u64;
+                    bd.gather_calls += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn view(&self) -> CacheView<'_> {
+        CacheView::Fp32 {
+            capacity: self.capacity,
+            k: &self.cache.k,
+            v: &self.cache.v,
+            mask: &self.cache.mask,
+            buf_k: &self.cache.buf_k,
+            buf_v: &self.cache.buf_v,
+            buf_mask: &self.cache.buf_mask,
+        }
+    }
+
+    fn buf_fill(&self) -> usize {
+        self.cache.buf_fill()
+    }
+
+    fn absorb(
+        &mut self,
+        out: &DecodeOut,
+        pos: usize,
+        model: &ModelConfig,
+        bd: &mut Breakdown,
+    ) -> Result<()> {
+        // feed attention stats to the policy (mean over layers+heads)
+        let tp = std::time::Instant::now();
+        let span = self.capacity + self.cache.buf_slots;
+        let mut pos_attn = Vec::new();
+        for slot in 0..self.capacity {
+            let p = self.cache.slot_pos[slot];
+            if p < 0 {
+                continue;
+            }
+            let mut acc = 0f32;
+            for l in 0..model.n_layers {
+                for h in 0..model.n_heads {
+                    acc += out.probs[(l * model.n_heads + h) * span + slot];
+                }
+            }
+            pos_attn.push((p as usize, acc / (model.n_layers * model.n_heads) as f32));
+        }
+        self.policy.observe(&PosAttn { step: pos, attn: pos_attn });
+        bd.policy_ns += tp.elapsed().as_nanos() as u64;
+
+        self.cache.push_token(out, pos);
+
+        // budget enforcement
+        if self.budget != usize::MAX {
+            let live = self.cache.live_positions();
+            if live.len() + self.cache.buf_fill() > self.budget {
+                let tp = std::time::Instant::now();
+                let target = self.budget.saturating_sub(self.cache.buf_fill());
+                let evict = self.policy.select_evictions(&live, target);
+                if !evict.is_empty() {
+                    self.cache.evict_positions(&evict);
+                    bd.policy_calls += 1;
+                    if self.gather {
+                        let tg = std::time::Instant::now();
+                        self.cache.compact_gather();
+                        bd.gather_ns += tg.elapsed().as_nanos() as u64;
+                        bd.gather_calls += 1;
+                    }
+                }
+                bd.policy_ns += tp.elapsed().as_nanos() as u64;
+            }
+        }
+        Ok(())
+    }
+
+    fn live_tokens(&self) -> usize {
+        self.cache.live_tokens() + self.cache.buf_fill()
+    }
+
+    fn bytes_used(&self) -> u64 {
+        self.cache.bytes_live()
+    }
+
+    fn step_headroom_bytes(&self) -> u64 {
+        fp32_token_bytes(self.cache.layers, self.cache.kv_dim)
+    }
+
+    fn admission_bytes(&self, prefill_len: usize) -> u64 {
+        (prefill_len + self.cache.buf_slots) as u64
+            * fp32_token_bytes(self.cache.layers, self.cache.kv_dim)
+    }
+
+    fn avg_bits(&self) -> f64 {
+        16.0
+    }
+
+    fn gather_stats(&self) -> (u64, u64, u64) {
+        (self.cache.gather_calls, self.cache.gather_bytes, self.cache.gather_nanos)
+    }
+}

@@ -65,6 +65,12 @@ impl Fp32Cache {
         self.slot_pos.iter().filter(|&&p| p >= 0).count()
     }
 
+    /// Live KV bytes (f32 accounting, all layers, including the ring
+    /// buffer) — what the scheduler charges against the block pool.
+    pub fn bytes_live(&self) -> u64 {
+        ((self.live_tokens() + self.buffered) * self.layers * 2 * self.kv_dim * 4) as u64
+    }
+
     /// First free slot, if any.
     pub fn free_slot(&self) -> Option<SlotId> {
         self.slot_pos.iter().position(|&p| p < 0)

@@ -12,14 +12,20 @@
 //! * [`ct`] — [`ct::CtCache`], the engine-facing quantized cache a request
 //!   owns (codes/scales/tags/mask slabs + fp ring buffer + segments).
 //! * [`fp32`] — the f32 paged cache used by FullKV and eviction baselines.
-//! * [`pool`] — the global physical-block pool (memory accounting, max
-//!   batch-size experiments).
+//! * [`backend`] — [`backend::KvBackend`], the unified trait both cache
+//!   families implement (alloc/append/evict/decode-view/bytes-used/
+//!   live-tokens); the serving session drives it generically.
+//! * [`pool`] — [`pool::BlockPool`], the global physical-byte pool the
+//!   memory-aware scheduler reserves against for admission control and
+//!   preemption (max batch-size experiments, Tables 2/3).
 
+pub mod backend;
 pub mod block_table;
 pub mod ct;
 pub mod fp32;
 pub mod pool;
 
+pub use backend::{Fp32Backend, KvBackend, QuantBackend};
 pub use block_table::{BlockEntry, LayerTable, SlotId};
 pub use ct::{CacheConfig, CtCache, SegmentInfo};
 pub use fp32::Fp32Cache;
@@ -40,13 +46,21 @@ pub enum Thought {
 impl Thought {
     pub const ALL: [Thought; 3] = [Thought::Transition, Thought::Execution, Thought::Reasoning];
 
-    pub fn from_u8(v: u8) -> Thought {
+    /// Fallible tag decode — use this on any tag that crossed a
+    /// serialization boundary (wire requests, trace files).
+    pub fn try_from_u8(v: u8) -> Option<Thought> {
         match v {
-            0 => Thought::Transition,
-            1 => Thought::Execution,
-            2 => Thought::Reasoning,
-            _ => panic!("bad thought {v}"),
+            0 => Some(Thought::Transition),
+            1 => Some(Thought::Execution),
+            2 => Some(Thought::Reasoning),
+            _ => None,
         }
+    }
+
+    /// Panicking wrapper for hot paths where the tag is internally
+    /// produced and `0..=2` by construction.
+    pub fn from_u8(v: u8) -> Thought {
+        Thought::try_from_u8(v).unwrap_or_else(|| panic!("bad thought tag {v}"))
     }
 
     /// Importance score rho (paper §4.2: rho(R)=2, rho(E)=1, rho(T)=0).
@@ -64,5 +78,37 @@ impl Thought {
             Thought::Execution => 'E',
             Thought::Transition => 'T',
         }
+    }
+}
+
+impl TryFrom<u8> for Thought {
+    type Error = u8;
+
+    fn try_from(v: u8) -> Result<Thought, u8> {
+        Thought::try_from_u8(v).ok_or(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thought_tag_roundtrip() {
+        for t in Thought::ALL {
+            assert_eq!(Thought::try_from_u8(t as u8), Some(t));
+            assert_eq!(Thought::from_u8(t as u8), t);
+            assert_eq!(Thought::try_from(t as u8), Ok(t));
+        }
+        for bad in [3u8, 7, 255] {
+            assert_eq!(Thought::try_from_u8(bad), None);
+            assert_eq!(Thought::try_from(bad), Err(bad));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bad thought tag")]
+    fn from_u8_panics_on_bad_tag() {
+        let _ = Thought::from_u8(9);
     }
 }

@@ -10,10 +10,28 @@
 //!   step consumes the quantized paged KV cache; AOT-lowered to HLO text in
 //!   `artifacts/` by `python/compile/aot.py`.
 //! * **Layer 3 (Rust, run time)** — this crate: the serving coordinator
-//!   (continuous batching, request routing), the Continuous-Thinking paged
-//!   KV cache manager, thought decomposition (KDE calibration + sparsity
-//!   classifier), TBQ/TBE compression policies, all eviction/quantization
-//!   baselines, the GPU cost model, and the LRM trace simulator.
+//!   (memory-aware scheduler with byte-accurate `BlockPool` admission and
+//!   preempt-youngest reclamation, continuous batching, request routing),
+//!   the unified `KvBackend` cache abstraction over the
+//!   Continuous-Thinking quantized cache and the f32 baseline cache,
+//!   thought decomposition (KDE calibration + sparsity classifier),
+//!   TBQ/TBE compression policies, all eviction/quantization baselines,
+//!   the GPU cost model, and the LRM trace simulator.
+//!
+//! Crate map (run-time layer):
+//! * [`kvcache`] — CT block tables, [`kvcache::CtCache`] /
+//!   [`kvcache::Fp32Cache`], the [`kvcache::KvBackend`] trait unifying
+//!   them, and the global [`kvcache::BlockPool`] byte pool.
+//! * [`coordinator`] — [`coordinator::Scheduler`] (admission/preemption),
+//!   [`coordinator::Session`] (one request's generic decode loop), the
+//!   engine worker loop, and serving config.
+//! * [`server`] — line-delimited-JSON TCP front end + client.
+//! * [`metrics`] — latencies, the Table-5 breakdown, and the scheduler /
+//!   pool snapshot ([`metrics::SchedSnapshot`]).
+//! * [`runtime`] — PJRT engine over the AOT HLO artifacts.
+//! * [`compress`] / [`thought`] / [`baselines`] — ThinKV policies and the
+//!   paper's comparison systems.
+//! * [`sim`] / [`bench`] — trace simulator, GPU cost model, bench tables.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the model
 //! once, and the Rust binary is self-contained afterwards.

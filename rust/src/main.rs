@@ -37,8 +37,8 @@ fn print_help() {
 USAGE: thinkv <cmd> [--flags]
 
   generate  --mode thinkv|fullkv|rkv|h2o|kivi2|... --requests 4
-            --budget 1024 --max-tokens 128 --workers 2
-  serve     --addr 127.0.0.1:7799 --mode thinkv --budget 1024
+            --budget 1024 --max-tokens 128 --workers 2 --pool-mb 0
+  serve     --addr 127.0.0.1:7799 --mode thinkv --budget 1024 --pool-mb 0
   sim       --mode thinkv --dataset aime --budget 1024 --scale 0.5
   calibrate --prompts 8 --layers 8
   info"
@@ -48,6 +48,9 @@ USAGE: thinkv <cmd> [--flags]
 fn serve_config(args: &Args) -> ServeConfig {
     let mode = CompressionMode::parse(&args.str_or("mode", "thinkv"))
         .unwrap_or_else(CompressionMode::thinkv_default);
+    // --pool-mb bounds the KV block pool (0 = unbounded): oversubscribed
+    // workloads then queue/preempt instead of overflowing
+    let pool_mb = args.u64_or("pool-mb", 0);
     ServeConfig {
         mode,
         budget: args.usize_or("budget", 1024),
@@ -56,6 +59,7 @@ fn serve_config(args: &Args) -> ServeConfig {
         refresh: args.usize_or("refresh", 128),
         temperature: args.f64_or("temperature", 0.8),
         seed: args.u64_or("seed", 42),
+        pool_bytes: (pool_mb > 0).then_some(pool_mb << 20),
         ..ServeConfig::default()
     }
 }
@@ -90,6 +94,7 @@ fn cmd_generate(args: &Args) -> i32 {
                 "TOTAL: {toks} tokens in {wall:.2}s = {:.1} tok/s",
                 toks as f64 / wall
             );
+            println!("scheduler: {}", coordinator.sched_stats().summary());
             0
         }
         Err(e) => {

@@ -1,8 +1,10 @@
-//! Serving metrics: latency histograms, throughput counters, and the
-//! per-operation time breakdown used for the Table-5 reproduction.
+//! Serving metrics: latency histograms, throughput counters, the
+//! per-operation time breakdown used for the Table-5 reproduction, and
+//! the scheduler/pool snapshot surfaced by the server `stats` command.
 
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats::{mean, percentile};
 
 /// Latency recorder (milliseconds).
@@ -100,6 +102,66 @@ impl Breakdown {
     }
 }
 
+/// Point-in-time view of the memory-aware scheduler and its block pool
+/// (Tables 2/3 serving discipline: admissions, preemptions, KV bytes).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SchedSnapshot {
+    /// Pool capacity in bytes (packed KV accounting).
+    pub pool_capacity: u64,
+    pub pool_used: u64,
+    pub pool_peak: u64,
+    pub pool_free: u64,
+    /// Total admissions (re-admissions after preemption included).
+    pub admissions: u64,
+    /// Sessions preempted (reset + requeued) to reclaim KV bytes.
+    pub preemptions: u64,
+    pub completions: u64,
+    /// Requests terminated abnormally: KV demand exceeded the pool, or
+    /// the decode loop errored.
+    pub rejections: u64,
+    /// Submitted but not yet admitted (waiting for KV bytes).
+    pub queue_depth: usize,
+    /// Currently admitted (runnable or held by a worker).
+    pub running: usize,
+    /// Submitted and not yet finished.
+    pub inflight: u64,
+}
+
+impl SchedSnapshot {
+    /// JSON object for the server `stats` command / bench result files.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("pool_capacity", Json::Num(self.pool_capacity as f64));
+        j.set("pool_used", Json::Num(self.pool_used as f64));
+        j.set("pool_peak", Json::Num(self.pool_peak as f64));
+        j.set("pool_free", Json::Num(self.pool_free as f64));
+        j.set("admissions", Json::Num(self.admissions as f64));
+        j.set("preemptions", Json::Num(self.preemptions as f64));
+        j.set("completions", Json::Num(self.completions as f64));
+        j.set("rejections", Json::Num(self.rejections as f64));
+        j.set("queue_depth", Json::Num(self.queue_depth as f64));
+        j.set("running", Json::Num(self.running as f64));
+        j.set("inflight", Json::Num(self.inflight as f64));
+        j
+    }
+
+    /// One-line human summary for CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "pool {}/{} B used (peak {}), adm {}, preempt {}, done {}, rej {}, queued {}, running {}",
+            self.pool_used,
+            self.pool_capacity,
+            self.pool_peak,
+            self.admissions,
+            self.preemptions,
+            self.completions,
+            self.rejections,
+            self.queue_depth,
+            self.running
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,6 +195,27 @@ mod tests {
         assert!((total - 100.0).abs() < 1e-6);
         let tbe_row = b.rows()[2];
         assert!((tbe_row.2 - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sched_snapshot_json_and_summary() {
+        let s = SchedSnapshot {
+            pool_capacity: 100,
+            pool_used: 40,
+            pool_peak: 60,
+            pool_free: 60,
+            admissions: 3,
+            preemptions: 1,
+            completions: 2,
+            rejections: 0,
+            queue_depth: 1,
+            running: 2,
+            inflight: 3,
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("pool_peak").and_then(Json::as_usize), Some(60));
+        assert_eq!(j.get("queue_depth").and_then(Json::as_usize), Some(1));
+        assert!(s.summary().contains("preempt 1"));
     }
 
     #[test]

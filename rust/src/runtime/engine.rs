@@ -27,6 +27,24 @@ pub struct QuantCache<'a> {
     pub buf_mask: &'a [f32], // [L, BUF]
 }
 
+/// Borrowed view of a request's cache in whichever family it lives —
+/// what [`crate::kvcache::KvBackend::view`] hands the engine so the
+/// session decode loop stays generic over compression modes.
+pub enum CacheView<'a> {
+    /// Quantized paged cache (ThinKV / KIVI / PM-KVQ).
+    Quant(QuantCache<'a>),
+    /// F32 paged cache (FullKV / eviction baselines).
+    Fp32 {
+        capacity: usize,
+        k: &'a [f32],
+        v: &'a [f32],
+        mask: &'a [f32],
+        buf_k: &'a [f32],
+        buf_v: &'a [f32],
+        buf_mask: &'a [f32],
+    },
+}
+
 /// Outputs of one decode step.
 #[derive(Debug, Clone)]
 pub struct DecodeOut {
@@ -153,6 +171,22 @@ impl Engine {
             .set(self.exec_nanos.get() + t0.elapsed().as_nanos() as u64);
         self.exec_calls.set(self.exec_calls.get() + 1);
         lit.to_tuple().map_err(to_anyhow)
+    }
+
+    /// Run one decode step over either cache family — the single decode
+    /// entry point the generic session path uses.
+    pub fn decode(
+        &self,
+        token: i32,
+        pos: i32,
+        buf_idx: i32,
+        view: &CacheView,
+    ) -> Result<DecodeOut> {
+        match view {
+            CacheView::Quant(q) => self.decode_quant(token, pos, buf_idx, q),
+            CacheView::Fp32 { capacity, k, v, mask, buf_k, buf_v, buf_mask } => self
+                .decode_fp32(*capacity, token, pos, buf_idx, k, v, mask, buf_k, buf_v, buf_mask),
+        }
     }
 
     /// Run one decode step over the quantized paged cache.

@@ -11,5 +11,5 @@
 pub mod engine;
 pub mod weights;
 
-pub use engine::{DecodeOut, Engine, PrefillOut, QuantCache};
+pub use engine::{CacheView, DecodeOut, Engine, PrefillOut, QuantCache};
 pub use weights::{load_weights, Tensor};

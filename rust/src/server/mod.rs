@@ -5,6 +5,12 @@
 //!   <- {"id": 7, "tokens": [...], "ttft_ms": 1.2, "tpot_ms": 2.3,
 //!       "total_ms": 450.0, "avg_bits": 4.4}
 //! plus {"cmd": "stats"} / {"cmd": "shutdown"} control lines.
+//!
+//! Malformed request lines never kill the connection: the server replies
+//! `{"id": ..., "error": "..."}` (id `null` when the line did not parse)
+//! and keeps reading. `stats` reports the scheduler/pool counters
+//! (admissions, preemptions, queue depth, pool used/peak/free) alongside
+//! the serving totals.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -123,16 +129,20 @@ fn handle_conn(
         let req = match parse(&line) {
             Ok(j) => j,
             Err(e) => {
+                // malformed line: reply with an error object (id unknown)
+                // and keep the connection alive
                 let mut err = Json::obj();
+                err.set("id", Json::Null);
                 err.set("error", Json::Str(format!("bad json: {e}")));
                 writeln!(writer, "{}", err.to_string())?;
                 continue;
             }
         };
+        let req_id = req.get("id").cloned().unwrap_or(Json::Num(0.0));
         if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
             match cmd {
                 "stats" => {
-                    let mut out = Json::obj();
+                    let mut out = coordinator.sched_stats().to_json();
                     out.set("inflight", Json::Num(coordinator.inflight() as f64));
                     out.set("served", Json::Num(served.load(Ordering::SeqCst) as f64));
                     out.set("mode", Json::Str(coordinator.config().mode.label()));
@@ -144,21 +154,43 @@ fn handle_conn(
                     break;
                 }
                 other => {
-                    writeln!(writer, "{{\"error\":\"unknown cmd {other}\"}}")?;
+                    let mut err = Json::obj();
+                    err.set("id", req_id.clone());
+                    err.set("error", Json::Str(format!("unknown cmd {other}")));
+                    writeln!(writer, "{}", err.to_string())?;
                 }
             }
             continue;
         }
-        let prompt: Vec<i32> = req
+        let prompt: Option<Vec<i32>> = req
             .get("prompt")
             .and_then(Json::as_arr)
-            .map(|a| a.iter().filter_map(|x| x.as_f64().map(|v| v as i32)).collect())
-            .unwrap_or_default();
-        let req_id = req.get("id").and_then(Json::as_f64).unwrap_or(0.0);
-        let result = coordinator.submit(prompt)?.wait()?;
+            .map(|a| a.iter().filter_map(|x| x.as_f64().map(|v| v as i32)).collect());
+        let prompt = match prompt {
+            Some(p) if !p.is_empty() => p,
+            _ => {
+                let mut err = Json::obj();
+                err.set("id", req_id.clone());
+                err.set("error", Json::Str("missing or empty 'prompt' array".into()));
+                writeln!(writer, "{}", err.to_string())?;
+                continue;
+            }
+        };
+        // a failed submit (e.g. demand exceeds the pool) or a dropped
+        // session is a per-request error, not a connection error
+        let result = match coordinator.submit(prompt).and_then(|h| h.wait()) {
+            Ok(r) => r,
+            Err(e) => {
+                let mut err = Json::obj();
+                err.set("id", req_id.clone());
+                err.set("error", Json::Str(format!("{e:#}")));
+                writeln!(writer, "{}", err.to_string())?;
+                continue;
+            }
+        };
         served.fetch_add(1, Ordering::SeqCst);
         let mut out = Json::obj();
-        out.set("id", Json::Num(req_id));
+        out.set("id", req_id);
         out.set(
             "tokens",
             Json::Arr(result.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
@@ -168,6 +200,10 @@ fn handle_conn(
         out.set("total_ms", Json::Num(result.total_ms));
         out.set("avg_bits", Json::Num(result.avg_bits));
         out.set("live_tokens", Json::Num(result.live_tokens as f64));
+        out.set("preemptions", Json::Num(result.preemptions as f64));
+        if let Some(e) = &result.error {
+            out.set("error", Json::Str(e.clone()));
+        }
         writeln!(writer, "{}", out.to_string())?;
     }
     Ok(())

@@ -5,7 +5,7 @@
 
 use thinkv::compress::tbe::{Tbe, TbeConfig};
 use thinkv::compress::tbq::{PrecisionAssignment, Tbq};
-use thinkv::kvcache::{CacheConfig, CtCache, Thought};
+use thinkv::kvcache::{BlockPool, CacheConfig, CtCache, Thought};
 use thinkv::quant::{dequant_groups, quant_groups, Precision, GROUP_SIZE};
 use thinkv::sim::harness::{EvictKind, Method, SimConfig, ThinKvSim};
 use thinkv::sim::{run_method, DatasetProfile, Trace};
@@ -279,6 +279,78 @@ fn trace_profile_statistics_hold() {
         }
         Ok(())
     });
+}
+
+/// BlockPool under concurrent reserve/release interleavings: usage never
+/// exceeds capacity, the peak watermark is monotone and bounded, and
+/// free + used == capacity once every thread has returned its bytes.
+#[test]
+fn block_pool_concurrent_interleavings_respect_capacity() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let capacity = 64 * 1024u64;
+    let pool = Arc::new(BlockPool::new(capacity));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // watcher: the peak watermark may only grow, and never past capacity
+    let watcher = {
+        let pool = Arc::clone(&pool);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || -> Result<(), String> {
+            let mut last = 0u64;
+            while !stop.load(Ordering::SeqCst) {
+                let p = pool.peak();
+                if p < last {
+                    return Err(format!("peak regressed {last} -> {p}"));
+                }
+                if p > capacity {
+                    return Err(format!("peak {p} exceeds capacity {capacity}"));
+                }
+                last = p;
+                std::thread::yield_now();
+            }
+            Ok(())
+        })
+    };
+
+    let mut workers = Vec::new();
+    for t in 0..8u64 {
+        let pool = Arc::clone(&pool);
+        workers.push(std::thread::spawn(move || -> Result<(), String> {
+            let mut rng = Rng::new(0xB10C + t);
+            let mut held: Vec<u64> = Vec::new();
+            for _ in 0..4000 {
+                if rng.chance(0.55) || held.is_empty() {
+                    let amt = rng.below(512) as u64 + 1;
+                    if pool.reserve(amt) {
+                        held.push(amt);
+                    }
+                } else {
+                    let amt = held.pop().expect("non-empty");
+                    pool.release(amt);
+                }
+                let used = pool.used();
+                if used > capacity {
+                    return Err(format!("used {used} exceeds capacity {capacity}"));
+                }
+            }
+            // quiescence: give everything back
+            for amt in held {
+                pool.release(amt);
+            }
+            Ok(())
+        }));
+    }
+    for w in workers {
+        w.join().expect("worker").expect("capacity invariant");
+    }
+    stop.store(true, Ordering::SeqCst);
+    watcher.join().expect("watcher").expect("peak invariant");
+
+    assert_eq!(pool.used(), 0, "all reservations returned");
+    assert_eq!(pool.free() + pool.used(), capacity);
+    assert!(pool.peak() > 0 && pool.peak() <= capacity);
 }
 
 /// Eviction policies must never evict below the requested target or return
