@@ -2,14 +2,15 @@
 #
 #   make artifacts  — AOT-lower the JAX/Pallas model to HLO text (once)
 #   make tier1      — the repo's tier-1 verification command
-#   make check      — fmt + clippy + tier1 (what CI runs)
+#   make doc        — rustdoc with warnings denied (the docs gate)
+#   make check      — fmt + clippy + doc + tier1 (what CI runs)
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: check fmt clippy tier1 test artifacts clean
+.PHONY: check fmt clippy doc tier1 test artifacts clean
 
-check: fmt clippy tier1
+check: fmt clippy doc tier1
 
 fmt:
 	$(CARGO) fmt --check
@@ -18,6 +19,11 @@ fmt:
 # surface (cache slabs are passed as flat tensors by design).
 clippy:
 	$(CARGO) clippy --all-targets -- -D warnings -A clippy::too_many_arguments
+
+# Docs gate: the rustdoc surface (crate/module docs, intra-doc links,
+# doc examples) must build warning-free so it cannot rot.
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
 tier1:
 	$(CARGO) build --release && $(CARGO) test -q

@@ -1,7 +1,9 @@
 //! Scheduler saturation bench: max admitted batch per GPU (the Tables
-//! 2/3 "Batch" column discipline) and throughput under oversubscribed
-//! offered load, using the analytic cost model — plus a real
-//! coordinator oversubscription mini-run when artifacts exist.
+//! 2/3 "Batch" column discipline), throughput under oversubscribed
+//! offered load, and the swap-vs-recompute preemption sweep
+//! (suspend-to-host cost vs CoT replay cost), using the analytic cost
+//! model — plus a real coordinator oversubscription mini-run comparing
+//! both preemption policies when artifacts exist.
 
 use thinkv::bench::{write_results, Table};
 use thinkv::kvcache::BlockPool;
@@ -60,10 +62,46 @@ fn main() {
     }
     t2.print();
 
-    // Part 3: real coordinator oversubscription mini-run (CPU PJRT)
+    // Part 3: swap-vs-recompute preemption sweep (ISSUE 2). A preempted
+    // request either (a) suspends its live cache over the host link and
+    // copies it back later, or (b) replays every decode step generated
+    // so far. ThinKV's snapshot is tiny (compressed live set), so swap
+    // wins by orders of magnitude; FullKV's snapshot is GBs.
+    let mut t3 = Table::new(
+        "Preemption reclaim: suspend-to-host swap vs recompute (A100, per preemption)",
+        &["method", "cot_tokens", "snapshot_MB", "swap_ms", "recompute_ms", "speedup"],
+    );
+    for (name, bits, budget) in [
+        ("ThinKV", 3.4f64, Some(1024.0f64)),
+        ("R-KV", 16.0, Some(1024.0)),
+        ("FullKV", 16.0, None),
+    ] {
+        for cot in [2048usize, 8192, 32_768] {
+            // live tokens: budget-capped for compressed methods, the
+            // whole CoT for FullKV
+            let live = budget.map_or(cot as f64, |b| b.min(cot as f64));
+            let snap_bytes = model.kv_bytes_per_token(bits) * live;
+            let batch = cost.max_batch(snap_bytes).clamp(1, 64);
+            let swap_ms = cost.swap_roundtrip_ms(snap_bytes);
+            let rec_ms = cost.recompute_ms(batch, snap_bytes, cot);
+            t3.row(&[
+                name.to_string(),
+                format!("{cot}"),
+                format!("{:.1}", snap_bytes / 1e6),
+                format!("{swap_ms:.2}"),
+                format!("{rec_ms:.1}"),
+                format!("{:.0}x", rec_ms / swap_ms.max(1e-9)),
+            ]);
+        }
+    }
+    t3.print();
+
+    // Part 4: real coordinator oversubscription mini-run (CPU PJRT),
+    // recompute preemption vs suspend-to-host swap
     let artifacts = format!("{}/model_config.json", thinkv::model::default_artifacts_dir());
     let mut j = t.to_json();
     j.set("saturation", t2.to_json());
+    j.set("swap_vs_recompute", t3.to_json());
     if std::path::Path::new(&artifacts).exists()
         && std::env::var("THINKV_BENCH_REAL").map(|v| v == "1").unwrap_or(true)
     {
@@ -80,31 +118,52 @@ fn main() {
         };
         let probe = Session::new(0, vec![1, 2, 3], &base, &manifest).unwrap();
         let per = probe.admission_bytes();
-        let mut t3 = Table::new(
-            "Real coordinator oversubscription (CPU PJRT, pool = 2.5 admissions)",
-            &["requests", "completed", "admissions", "preemptions", "peak_B", "cap_B"],
+        let mut t4 = Table::new(
+            "Real coordinator oversubscription (CPU PJRT, pool = 2.5 admissions): swap vs recompute",
+            &[
+                "requests", "policy", "completed", "wall_s", "preempts", "swap_ins",
+                "replayed_steps", "peak_B",
+            ],
         );
         for requests in [2usize, 8] {
-            let cfg = ServeConfig { pool_bytes: Some(per * 5 / 2), ..base.clone() };
-            let c = Coordinator::start(cfg).unwrap();
-            let prompts: Vec<Vec<i32>> = (0..requests)
-                .map(|u| (0..64).map(|i| ((i * 3 + u) % 512) as i32).collect())
-                .collect();
-            let rs = c.run_batch(prompts).unwrap();
-            let s = c.sched_stats();
-            assert!(s.pool_peak <= s.pool_capacity, "pool overflow");
-            t3.row(&[
-                format!("{requests}"),
-                format!("{}", rs.iter().filter(|r| r.error.is_none()).count()),
-                format!("{}", s.admissions),
-                format!("{}", s.preemptions),
-                format!("{}", s.pool_peak),
-                format!("{}", s.pool_capacity),
-            ]);
+            for swap in [None, Some(256u64 << 20)] {
+                let cfg = ServeConfig {
+                    pool_bytes: Some(per * 5 / 2),
+                    swap_bytes: swap,
+                    ..base.clone()
+                };
+                let c = Coordinator::start(cfg).unwrap();
+                let prompts: Vec<Vec<i32>> = (0..requests)
+                    .map(|u| (0..64).map(|i| ((i * 3 + u) % 512) as i32).collect())
+                    .collect();
+                let t0 = std::time::Instant::now();
+                let rs = c.run_batch(prompts).unwrap();
+                let wall = t0.elapsed().as_secs_f64();
+                let s = c.sched_stats();
+                assert!(s.pool_peak <= s.pool_capacity, "pool overflow");
+                // decode steps beyond the tokens delivered = replay waste
+                let replayed: u64 = rs
+                    .iter()
+                    .map(|r| r.breakdown.steps.saturating_sub(r.tokens.len() as u64))
+                    .sum();
+                if swap.is_some() {
+                    assert_eq!(replayed, 0, "swapped sessions must not replay");
+                }
+                t4.row(&[
+                    format!("{requests}"),
+                    if swap.is_some() { "swap" } else { "recompute" }.to_string(),
+                    format!("{}", rs.iter().filter(|r| r.error.is_none()).count()),
+                    format!("{wall:.2}"),
+                    format!("{}", s.preemptions),
+                    format!("{}", s.swap_ins),
+                    format!("{replayed}"),
+                    format!("{}", s.pool_peak),
+                ]);
+            }
         }
-        t3.print();
-        j.set("real_oversubscription", t3.to_json());
+        t4.print();
+        j.set("real_oversubscription", t4.to_json());
     }
     write_results("scheduler_saturation", j);
-    println!("\nExpected shape: FullKV admits ~13 requests on A100 while ThinKV admits\nhundreds; past saturation the scheduler queues instead of overflowing, and\nthe real run completes every request with pool.peak() <= capacity.");
+    println!("\nExpected shape: FullKV admits ~13 requests on A100 while ThinKV admits\nhundreds; past saturation the scheduler queues instead of overflowing, and\nthe real run completes every request with pool.peak() <= capacity. In the\nswap-vs-recompute sweep ThinKV's suspend-to-host round trip is orders of\nmagnitude cheaper than replaying the CoT (and the real swap run finishes\nwith zero replayed steps), while FullKV must move GBs per preemption.");
 }

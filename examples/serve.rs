@@ -23,14 +23,17 @@ fn main() -> anyhow::Result<()> {
 
     println!("ThinKV serving demo: {} users x {} requests, mode={}", users, reqs_per_user, mode.label());
     // --pool-mb caps the KV block pool so oversubscribed runs exercise
-    // admission queueing + preemption (0 = unbounded)
+    // admission queueing + preemption (0 = unbounded); --swap-mb lets
+    // preempted sessions suspend to host instead of recomputing
     let pool_mb = args.u64_or("pool-mb", 0);
+    let swap_mb = args.u64_or("swap-mb", 0);
     let cfg = ServeConfig {
         mode,
         budget: args.usize_or("budget", 512),
         max_new_tokens: max_tokens,
         workers: args.usize_or("workers", 2),
         pool_bytes: (pool_mb > 0).then_some(pool_mb << 20),
+        swap_bytes: (swap_mb > 0).then_some(swap_mb << 20),
         ..ServeConfig::default()
     };
     let server = Server::start("127.0.0.1:0", cfg)?;

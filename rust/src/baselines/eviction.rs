@@ -40,6 +40,18 @@ pub trait EvictionPolicy: Send {
     fn needs_gather(&self) -> bool {
         true
     }
+
+    /// Clone into a new boxed policy carrying the same accumulated
+    /// statistics — suspend-to-host snapshots
+    /// ([`crate::kvcache::swap::Fp32Snapshot`]) duplicate the policy so
+    /// eviction decisions are identical after a resume.
+    fn box_clone(&self) -> Box<dyn EvictionPolicy>;
+}
+
+impl Clone for Box<dyn EvictionPolicy> {
+    fn clone(&self) -> Box<dyn EvictionPolicy> {
+        self.box_clone()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -47,7 +59,7 @@ pub trait EvictionPolicy: Send {
 // ---------------------------------------------------------------------------
 
 /// No compression: the FullKV reference.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct FullKv;
 
 impl EvictionPolicy for FullKv {
@@ -64,6 +76,10 @@ impl EvictionPolicy for FullKv {
     fn needs_gather(&self) -> bool {
         false
     }
+
+    fn box_clone(&self) -> Box<dyn EvictionPolicy> {
+        Box::new(self.clone())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -73,7 +89,7 @@ impl EvictionPolicy for FullKv {
 /// Heavy-Hitter Oracle: keep the top-scoring "heavy hitters" (cumulative
 /// attention) plus a recency window; ring-buffer semantics in the original
 /// mean evictions are taken from the *oldest non-heavy* region.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct H2O {
     cum: BTreeMap<usize, f64>,
     last_step: usize,
@@ -128,6 +144,10 @@ impl EvictionPolicy for H2O {
         // the original uses a ring buffer; no gather kernels on the hot path
         false
     }
+
+    fn box_clone(&self) -> Box<dyn EvictionPolicy> {
+        Box::new(self.clone())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -139,7 +159,7 @@ impl EvictionPolicy for H2O {
 /// *attention-pattern* space). Evicts the lowest combined score; leaves
 /// non-contiguous holes, so the original needs gather compaction — the
 /// §5.1 cost this repo reproduces.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Rkv {
     cum: BTreeMap<usize, f64>,
     recent: BTreeMap<usize, f64>, // exponentially decayed
@@ -211,6 +231,10 @@ impl EvictionPolicy for Rkv {
     fn needs_gather(&self) -> bool {
         true
     }
+
+    fn box_clone(&self) -> Box<dyn EvictionPolicy> {
+        Box::new(self.clone())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -220,7 +244,7 @@ impl EvictionPolicy for Rkv {
 /// Lagged eviction with attention-pattern observation: tokens whose
 /// attention *recurred* recently are protected for a lag window even if
 /// their cumulative score is low.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct LazyEviction {
     cum: BTreeMap<usize, f64>,
     last_attended: BTreeMap<usize, usize>,
@@ -305,6 +329,10 @@ impl EvictionPolicy for LazyEviction {
         }
         out
     }
+
+    fn box_clone(&self) -> Box<dyn EvictionPolicy> {
+        Box::new(self.clone())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -314,7 +342,7 @@ impl EvictionPolicy for LazyEviction {
 /// Reasoning-aware attention sparsity: "milestone" tokens get timestamps
 /// refreshed whenever they re-emerge; eviction removes the stalest
 /// timestamps first.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct RaaS {
     timestamp: BTreeMap<usize, usize>,
     step: usize,
@@ -366,6 +394,10 @@ impl EvictionPolicy for RaaS {
             .map(|(_, p)| p)
             .collect()
     }
+
+    fn box_clone(&self) -> Box<dyn EvictionPolicy> {
+        Box::new(self.clone())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -376,7 +408,7 @@ impl EvictionPolicy for RaaS {
 /// at prefill; during decode it keeps a sliding recent window (it was
 /// designed for long inputs, which is why it underperforms on long outputs
 /// — Figure 8).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct SnapKv {
     /// Positions chosen at prefill (protected).
     pub prefill_keep: Vec<usize>,
@@ -424,13 +456,17 @@ impl EvictionPolicy for SnapKv {
         }
         out
     }
+
+    fn box_clone(&self) -> Box<dyn EvictionPolicy> {
+        Box::new(self.clone())
+    }
 }
 
 // ---------------------------------------------------------------------------
 // StreamingLLM (Xiao et al., 2023) — attention sinks + sliding window
 // ---------------------------------------------------------------------------
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct StreamingLlm {
     pub sinks: usize,
 }
@@ -462,6 +498,10 @@ impl EvictionPolicy for StreamingLlm {
 
     fn needs_gather(&self) -> bool {
         false // contiguous window: ring-buffer friendly
+    }
+
+    fn box_clone(&self) -> Box<dyn EvictionPolicy> {
+        Box::new(self.clone())
     }
 }
 
@@ -556,6 +596,21 @@ mod tests {
         let evicted = p.select_evictions(&[0, 1, 2, 3, 4, 5], 4);
         assert_eq!(evicted, vec![2, 3]);
         assert!(!p.needs_gather());
+    }
+
+    #[test]
+    fn box_clone_preserves_accumulated_state() {
+        let mut p = Rkv::new();
+        let rows: Vec<Vec<(usize, f32)>> = (0..20)
+            .map(|_| vec![(0, 0.4), (1, 0.005), (2, 0.4), (3, 0.005), (4, 0.19)])
+            .collect();
+        steps(&mut p, &rows);
+        let mut clone = p.box_clone();
+        assert_eq!(clone.name(), "R-KV");
+        // identical state => identical eviction decisions
+        let a = p.select_evictions(&[0, 1, 2, 3, 4], 3);
+        let b = clone.select_evictions(&[0, 1, 2, 3, 4], 3);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -64,7 +64,7 @@ impl TbeConfig {
 }
 
 /// Counters for the Table-5 style overhead breakdown.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct TbeStats {
     pub anneal_calls: u64,
     pub case1_events: u64,

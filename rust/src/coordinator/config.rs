@@ -101,6 +101,12 @@ pub struct ServeConfig {
     /// memory-aware scheduler admits against. `None` = effectively
     /// unbounded (accounting on, admission never refused).
     pub pool_bytes: Option<u64>,
+    /// Host-side swap pool capacity in bytes for suspend-to-host
+    /// preemption: preempted sessions whose cache snapshot fits this
+    /// pool are swapped out and resume with zero recompute steps;
+    /// oversized snapshots (and `None`) fall back to the PR 1
+    /// recompute-from-prompt path.
+    pub swap_bytes: Option<u64>,
 }
 
 impl Default for ServeConfig {
@@ -117,6 +123,7 @@ impl Default for ServeConfig {
             temperature: 0.8,
             seed: 42,
             pool_bytes: None,
+            swap_bytes: None,
         }
     }
 }

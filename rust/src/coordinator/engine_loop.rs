@@ -9,7 +9,7 @@ use std::thread;
 
 use anyhow::Result;
 
-use crate::kvcache::BlockPool;
+use crate::kvcache::{BlockPool, SwapPool};
 use crate::metrics::{Breakdown, SchedSnapshot};
 use crate::runtime::Engine;
 
@@ -37,8 +37,16 @@ pub struct RequestResult {
     pub tbe_call_rate: f64,
     pub gather_calls: u64,
     pub gather_bytes: u64,
-    /// Times the scheduler preempted (reset + requeued) this request.
+    /// Times the scheduler preempted this request with *recompute*
+    /// (reset + replay). Zero for requests whose preemptions all
+    /// suspended to host.
     pub preemptions: u64,
+    /// Times this request was suspended to the host swap pool.
+    pub swap_outs: u64,
+    /// Times this request was restored from the host swap pool.
+    pub swap_ins: u64,
+    /// Wall time spent restoring this request's snapshots (swap-in).
+    pub restore_ns: u64,
     /// Set when the request terminated abnormally (e.g. its KV demand
     /// exceeded the block pool).
     pub error: Option<String>,
@@ -73,6 +81,9 @@ impl RequestResult {
             gather_calls,
             gather_bytes,
             preemptions: s.preemptions,
+            swap_outs: s.swap_outs,
+            swap_ins: s.swap_ins,
+            restore_ns: s.restore_ns,
             error: None,
         }
     }
@@ -109,7 +120,10 @@ impl Coordinator {
         let pool = Arc::new(BlockPool::new(
             cfg.pool_bytes.unwrap_or(UNBOUNDED_POOL_BYTES),
         ));
-        let scheduler = Arc::new(Scheduler::new(pool));
+        // suspend-to-host preemption: swapped sessions resume instead of
+        // recomputing whenever their snapshot fits this host pool
+        let swap = cfg.swap_bytes.map(|b| Arc::new(SwapPool::new(b)));
+        let scheduler = Arc::new(Scheduler::with_swap(pool, swap));
         let mut workers = Vec::new();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         for w in 0..cfg.workers.max(1) {

@@ -12,6 +12,71 @@
 //! hand it back — continuous batching at chunk granularity. Completed
 //! sessions are delivered to the submitter through a channel. Python is
 //! never involved: the engines execute the AOT HLO artifacts only.
+//!
+//! Preemption is two-tier: with a host-side
+//! [`crate::kvcache::SwapPool`] configured
+//! ([`config::ServeConfig::swap_bytes`]), a preempted session suspends
+//! its compressed cache snapshot to host memory and later resumes with
+//! zero recompute steps; without one (or when the snapshot does not
+//! fit) it falls back to recompute-from-prompt.
+//!
+//! # Example: scheduler lifecycle (no artifacts needed)
+//!
+//! Submit under memory pressure, watch admission queueing, drain:
+//!
+//! ```
+//! use std::sync::{mpsc, Arc};
+//! use thinkv::coordinator::{CompressionMode, Scheduler, ServeConfig, Session};
+//! use thinkv::kvcache::BlockPool;
+//! use thinkv::model::{Manifest, ModelConfig};
+//!
+//! // hand-built manifest: the scheduler never touches the engine
+//! let manifest = Manifest {
+//!     model: ModelConfig {
+//!         vocab: 64, d_model: 32, n_layers: 2, n_heads: 2, n_kv_heads: 1,
+//!         d_head: 16, d_ffn: 64, rope_base: 10000.0, buf_slots: 16,
+//!         prefill_len: 32, obs_window: 8, group_size: 16,
+//!     },
+//!     quant_caps: vec![128],
+//!     fp32_caps: vec![256],
+//!     micro_c: 128,
+//!     golden_attn_c: 128,
+//!     artifacts_dir: ".".into(),
+//!     weights: vec![],
+//!     seed: 0,
+//! };
+//! let cfg = ServeConfig {
+//!     mode: CompressionMode::thinkv_default(),
+//!     budget: 64,
+//!     max_new_tokens: 8,
+//!     workers: 1,
+//!     temperature: 0.0,
+//!     ..ServeConfig::default()
+//! };
+//! // pool sized for one admission reserve: the second request queues
+//! let probe = Session::new(0, vec![1, 2, 3], &cfg, &manifest).unwrap();
+//! let pool = Arc::new(BlockPool::new(probe.admission_bytes() * 3 / 2));
+//! let sched = Scheduler::new(Arc::clone(&pool));
+//! let (tx, _rx) = mpsc::channel();
+//! for id in 1..=2 {
+//!     let s = Session::with_pool(
+//!         id, vec![1, 2, 3], &cfg, &manifest, Some(Arc::clone(&pool)),
+//!     ).unwrap();
+//!     sched.submit(s, tx.clone());
+//! }
+//! let snap = sched.snapshot();
+//! assert_eq!((snap.running, snap.queue_depth), (1, 1));
+//! // a decode worker would loop `next()` -> `Session::step` chunks ->
+//! // `yield_back`/`cannot_grow`/`complete`; here we fake-finish both
+//! for _ in 0..2 {
+//!     let mut entry = sched.next().expect("runnable session");
+//!     entry.session.finished_at = Some(std::time::Instant::now());
+//!     sched.complete(&mut entry.session); // frees bytes, admits next
+//! }
+//! let snap = sched.snapshot();
+//! assert_eq!(snap.completions, 2);
+//! assert_eq!(snap.pool_used, 0, "all bytes returned");
+//! ```
 
 pub mod config;
 pub mod engine_loop;

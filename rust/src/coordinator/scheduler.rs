@@ -20,17 +20,26 @@
 //! worst-case growth and trues the reservation up afterwards, so
 //! `pool.peak() <= pool.capacity()` always holds. When a running session
 //! cannot grow ([`StepOutcome::NeedMemory`](super::session::StepOutcome)),
-//! the **youngest admitted** session is preempted — reset, its bytes
-//! released, re-queued to waiting — so the oldest request always makes
-//! progress and oversubscribed workloads drain instead of overflowing.
+//! the **youngest admitted** session is preempted — its bytes released,
+//! re-queued to waiting — so the oldest request always makes progress
+//! and oversubscribed workloads drain instead of overflowing.
 //! A session that cannot grow while it is the *only* admitted request
 //! exceeds the pool by itself and is failed.
+//!
+//! **Preemption policy (swap vs recompute):** when the scheduler owns a
+//! host-side [`SwapPool`], a preempted session first tries
+//! [`Session::suspend_to`] — snapshot the compressed cache to host
+//! memory and resume later with zero recompute steps. Only when the
+//! snapshot does not fit the swap pool (or swapping is disabled) does
+//! the session fall back to the recompute reset. Swapped sessions are
+//! re-admitted with the *exact* device bytes recorded at suspend time,
+//! so the pool stays byte-accurate across the round trip.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 
-use crate::kvcache::BlockPool;
+use crate::kvcache::{BlockPool, SwapPool};
 use crate::metrics::SchedSnapshot;
 
 use super::engine_loop::RequestResult;
@@ -84,6 +93,9 @@ impl Inner {
 
 pub struct Scheduler {
     pool: Arc<BlockPool>,
+    /// Host-side pool for suspend-to-host preemption; `None` = every
+    /// preemption recomputes (PR 1 behavior).
+    swap: Option<Arc<SwapPool>>,
     inner: Mutex<Inner>,
     cv: Condvar,
     stop: AtomicBool,
@@ -96,8 +108,15 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn new(pool: Arc<BlockPool>) -> Scheduler {
+        Scheduler::with_swap(pool, None)
+    }
+
+    /// A scheduler whose preemptions suspend to `swap` when the victim's
+    /// cache snapshot fits, recomputing otherwise.
+    pub fn with_swap(pool: Arc<BlockPool>, swap: Option<Arc<SwapPool>>) -> Scheduler {
         Scheduler {
             pool,
+            swap,
             inner: Mutex::new(Inner {
                 waiting: VecDeque::new(),
                 runnable: VecDeque::new(),
@@ -120,6 +139,11 @@ impl Scheduler {
 
     pub fn pool(&self) -> &Arc<BlockPool> {
         &self.pool
+    }
+
+    /// The host-side swap pool, when suspend-to-host is enabled.
+    pub fn swap_pool(&self) -> Option<&Arc<SwapPool>> {
+        self.swap.as_ref()
     }
 
     pub fn inflight(&self) -> u64 {
@@ -234,11 +258,19 @@ impl Scheduler {
         self.cv.notify_all();
     }
 
-    /// Reset + release + requeue (front of the waiting line). Freed
-    /// bytes wake any stalled (starving) sessions first.
+    /// Vacate an admitted session and requeue it (front of the waiting
+    /// line): suspend-to-host when the swap pool is present and the
+    /// snapshot fits, recompute reset otherwise. Freed bytes wake any
+    /// stalled (starving) sessions first.
     fn do_preempt(&self, inner: &mut Inner, mut entry: Entry) {
         inner.forget(entry.session.id);
-        entry.session.reset_for_preemption();
+        let swapped = match &self.swap {
+            Some(sp) => entry.session.suspend_to(sp),
+            None => false,
+        };
+        if !swapped {
+            entry.session.reset_for_preemption();
+        }
         self.preemptions.fetch_add(1, Ordering::SeqCst);
         inner.waiting.push_front(entry);
         inner.unstall();
@@ -288,6 +320,7 @@ impl Scheduler {
 
     /// Point-in-time counters for metrics / the server `stats` command.
     pub fn snapshot(&self) -> SchedSnapshot {
+        let swap = self.swap.as_ref().map(|s| s.stats()).unwrap_or_default();
         let inner = self.inner.lock().unwrap();
         SchedSnapshot {
             pool_capacity: self.pool.capacity(),
@@ -301,6 +334,15 @@ impl Scheduler {
             queue_depth: inner.waiting.len(),
             running: inner.admitted.len(),
             inflight: self.inflight.load(Ordering::SeqCst),
+            swap_capacity: swap.capacity,
+            swap_used: swap.used,
+            swap_peak: swap.peak,
+            swap_outs: swap.swap_outs,
+            swap_ins: swap.swap_ins,
+            swap_bytes_out: swap.bytes_out,
+            swap_bytes_in: swap.bytes_in,
+            swap_restore_ns: swap.restore_ns,
+            swap_fallbacks: swap.fallbacks,
         }
     }
 }
@@ -445,6 +487,98 @@ mod tests {
         let r = rx2.recv().expect("failure result delivered");
         assert!(r.error.is_some());
         assert_eq!(sched2.snapshot().rejections, 1);
+    }
+
+    /// Suspend-to-host preemption: the victim's cache is snapshotted
+    /// into the swap pool (device bytes released, host bytes charged),
+    /// it is re-admitted with its exact suspend-time footprint, and the
+    /// resume restores it with zero recompute resets — generated tokens
+    /// and position survive the round trip.
+    #[test]
+    fn preemption_swaps_to_host_and_resumes_byte_accurately() {
+        let cfg = tiny_cfg();
+        let man = tiny_manifest();
+        let probe = mk_session(0, &cfg, &man, &Arc::new(BlockPool::new(u64::MAX / 2)));
+        let per = probe.admission_bytes();
+        let pool = Arc::new(BlockPool::new(2 * per));
+        let swap = Arc::new(SwapPool::new(64 << 20));
+        let sched = Scheduler::with_swap(Arc::clone(&pool), Some(Arc::clone(&swap)));
+        let (tx, _rx) = mpsc::channel();
+        sched.submit(mk_session(1, &cfg, &man, &pool), tx.clone());
+        sched.submit(mk_session(2, &cfg, &man, &pool), tx.clone());
+        // both sessions fake a prefill so they own cache slabs
+        let mut a = sched.next().unwrap();
+        let mut b = sched.next().unwrap();
+        assert_eq!((a.session.id, b.session.id), (1, 2));
+        a.session.test_fake_prefill();
+        b.session.test_fake_prefill();
+        let b_bytes = b.session.bytes_used();
+        assert!(b_bytes > 0);
+        sched.yield_back(b); // victim sits in the runnable queue
+        sched.cannot_grow(a); // preempts youngest (id 2) via swap
+        let snap = sched.snapshot();
+        assert_eq!(snap.preemptions, 1);
+        assert_eq!(snap.swap_outs, 1);
+        assert_eq!(snap.swap_fallbacks, 0);
+        assert!(snap.swap_used > 0, "snapshot charged to the swap pool");
+        assert_eq!(snap.queue_depth, 1);
+        assert_eq!(snap.running, 1);
+        // the starved caller retries, yields, and the victim re-admits
+        // with need == its suspend-time device footprint
+        let a = sched.next().unwrap();
+        assert_eq!(a.session.id, 1);
+        sched.yield_back(a);
+        let snap = sched.snapshot();
+        assert_eq!(snap.running, 2, "swapped session re-admitted");
+        assert!(snap.pool_peak <= snap.pool_capacity);
+        let mut b = loop {
+            let e = sched.next().expect("runnable");
+            if e.session.id == 2 {
+                break e;
+            }
+            sched.yield_back(e);
+        };
+        assert!(b.session.is_suspended());
+        assert_eq!(b.session.admission_bytes(), b_bytes, "byte-accurate re-admission");
+        // resume = restore the snapshot; no engine, no recompute
+        b.session.resume_from_swap().unwrap();
+        assert!(!b.session.is_suspended());
+        assert_eq!(b.session.preemptions, 0, "never reset for recompute");
+        assert_eq!(b.session.swap_outs, 1);
+        assert_eq!(b.session.swap_ins, 1);
+        assert_eq!(b.session.bytes_used(), b_bytes, "bit-accurate restore");
+        assert_eq!(b.session.pos, man.model.prefill_len);
+        assert_eq!(b.session.tokens.len(), 1, "generated tokens survive");
+        let snap = sched.snapshot();
+        assert_eq!(snap.swap_ins, 1);
+        assert_eq!(snap.swap_used, 0, "swap bytes returned on resume");
+        assert_eq!(snap.swap_bytes_in, snap.swap_bytes_out);
+    }
+
+    /// When the snapshot does not fit the swap pool, preemption falls
+    /// back to the recompute reset and counts a fallback.
+    #[test]
+    fn swap_falls_back_to_recompute_when_pool_too_small() {
+        let cfg = tiny_cfg();
+        let man = tiny_manifest();
+        let probe = mk_session(0, &cfg, &man, &Arc::new(BlockPool::new(u64::MAX / 2)));
+        let per = probe.admission_bytes();
+        let pool = Arc::new(BlockPool::new(2 * per));
+        let swap = Arc::new(SwapPool::new(1)); // nothing fits
+        let sched = Scheduler::with_swap(Arc::clone(&pool), Some(swap));
+        let (tx, _rx) = mpsc::channel();
+        sched.submit(mk_session(1, &cfg, &man, &pool), tx.clone());
+        sched.submit(mk_session(2, &cfg, &man, &pool), tx.clone());
+        let a = sched.next().unwrap();
+        let mut b = sched.next().unwrap();
+        b.session.test_fake_prefill();
+        sched.yield_back(b);
+        sched.cannot_grow(a);
+        let snap = sched.snapshot();
+        assert_eq!(snap.preemptions, 1);
+        assert_eq!(snap.swap_outs, 0);
+        assert_eq!(snap.swap_fallbacks, 1);
+        assert_eq!(snap.swap_used, 0);
     }
 
     /// Preemption marks set while a worker holds the victim are honored

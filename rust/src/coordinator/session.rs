@@ -10,6 +10,17 @@
 //! [`StepOutcome::NeedMemory`] when the pool cannot cover the growth, and
 //! the scheduler preempts). All cache policy work happens here in Rust —
 //! the engine only executes the AOT decode-step HLO.
+//!
+//! Preemption has two flavors:
+//!
+//! * **suspend-to-host** ([`Session::suspend_to`]) — the backend is
+//!   snapshotted into a byte-accounted [`SwapPool`] and dropped; on
+//!   re-admission the next [`Session::step`] restores it and decoding
+//!   continues with the *identical* token stream and zero replayed
+//!   steps (tokens, position, and sampler state never reset).
+//! * **recompute** ([`Session::reset_for_preemption`]) — the PR 1 path:
+//!   generation rewinds to the prompt and replays. Used when swapping
+//!   is disabled or the snapshot does not fit the swap pool.
 
 use std::sync::Arc;
 
@@ -20,7 +31,8 @@ use crate::baselines::quant_baselines::PmKvq;
 use crate::compress::tbe::{Tbe, TbeConfig};
 use crate::compress::tbq::Tbq;
 use crate::kvcache::{
-    BlockPool, CacheConfig, CtCache, Fp32Backend, Fp32Cache, KvBackend, QuantBackend,
+    BlockPool, CacheConfig, CtCache, Fp32Backend, Fp32Cache, KvBackend, KvSnapshot,
+    QuantBackend, SwapPool,
 };
 use crate::metrics::Breakdown;
 use crate::quant::Precision;
@@ -151,6 +163,13 @@ pub fn build_backend(
     }
 }
 
+/// A suspended session's cache image plus the swap pool holding its
+/// byte reservation (released on resume, drop, or reset).
+struct SuspendedKv {
+    snap: KvSnapshot,
+    pool: Arc<SwapPool>,
+}
+
 pub struct Session {
     pub id: u64,
     pub prompt: Vec<i32>,
@@ -169,9 +188,20 @@ pub struct Session {
     pub first_token_at: Option<std::time::Instant>,
     pub finished_at: Option<std::time::Instant>,
     prefilled: bool,
-    /// Times this session was preempted (reset + requeued) by the
-    /// memory-aware scheduler.
+    /// Times this session was preempted with *recompute* (reset +
+    /// requeued, generation replayed). Swap preemptions are counted
+    /// separately in [`Session::swap_outs`] — a fully swapped run keeps
+    /// this at zero.
     pub preemptions: u64,
+    /// Times this session was suspended to the host swap pool.
+    pub swap_outs: u64,
+    /// Times this session was restored from the host swap pool.
+    pub swap_ins: u64,
+    /// Cumulative wall time spent restoring this session's snapshots.
+    pub restore_ns: u64,
+    /// Host-side cache image while preempted-with-swap (None while
+    /// running or when preempted with recompute).
+    suspended: Option<SuspendedKv>,
     /// Admission reserve, computed once at construction.
     admission_est: u64,
     cfg: ServeConfig,
@@ -219,6 +249,10 @@ impl Session {
             finished_at: None,
             prefilled: false,
             preemptions: 0,
+            swap_outs: 0,
+            swap_ins: 0,
+            restore_ns: 0,
+            suspended: None,
             admission_est,
             cfg: cfg.clone(),
             manifest: manifest.clone(),
@@ -264,10 +298,21 @@ impl Session {
         self.backend.as_ref().map_or(0, |b| b.bytes_used())
     }
 
-    /// Upper bound on the post-prefill footprint — what the scheduler
-    /// reserves in the pool before admitting this session.
+    /// Bytes the scheduler must reserve in the pool before (re)admitting
+    /// this session: the upper bound on the post-prefill footprint for a
+    /// fresh or recompute-preempted session, or the exact live footprint
+    /// recorded at suspend time for a swapped session (byte-accurate
+    /// swap-in).
     pub fn admission_bytes(&self) -> u64 {
-        self.admission_est
+        match &self.suspended {
+            Some(s) => s.snap.device_bytes,
+            None => self.admission_est,
+        }
+    }
+
+    /// True while this session's cache lives in the host swap pool.
+    pub fn is_suspended(&self) -> bool {
+        self.suspended.is_some()
     }
 
     /// Record an admission reserve the scheduler already charged to the
@@ -321,21 +366,113 @@ impl Session {
         }
     }
 
+    /// Suspend this session's cache to the host-side swap pool
+    /// (suspend-to-host preemption): snapshot the backend, charge the
+    /// snapshot to `swap`, drop the device slabs, and return the block
+    /// pool bytes. Generation state (tokens, position, sampler) is kept,
+    /// so the resumed session produces the identical token stream with
+    /// zero recompute steps.
+    ///
+    /// Returns false — and leaves the session untouched — when there is
+    /// nothing to snapshot yet (no backend / not prefilled) or the
+    /// snapshot does not fit `swap`; the caller then falls back to
+    /// [`Session::reset_for_preemption`].
+    pub fn suspend_to(&mut self, swap: &Arc<SwapPool>) -> bool {
+        if self.suspended.is_some() {
+            // re-admitted but preempted again before its first step: the
+            // snapshot still sits in the swap pool untouched — just hand
+            // the device reservation back
+            self.release_pool();
+            return true;
+        }
+        if !self.prefilled {
+            return false;
+        }
+        let Some(backend) = self.backend.as_ref() else {
+            return false;
+        };
+        // price first, copy after: a snapshot that will not fit the swap
+        // pool must cost O(1), not a discarded full cache copy
+        let need = backend.snapshot_bytes();
+        if !swap.reserve(need) {
+            swap.note_fallback();
+            return false;
+        }
+        let snap = match backend.snapshot() {
+            Ok(s) => s,
+            Err(_) => {
+                swap.release(need);
+                swap.note_fallback();
+                return false;
+            }
+        };
+        debug_assert_eq!(snap.bytes, need, "snapshot_bytes must price exactly");
+        swap.note_swap_out(snap.bytes);
+        self.swap_outs += 1;
+        self.backend = None; // device slabs freed
+        self.release_pool(); // device bytes back to the block pool
+        self.suspended = Some(SuspendedKv { snap, pool: Arc::clone(swap) });
+        true
+    }
+
+    /// Rebuild the backend from the suspended snapshot (swap-in): called
+    /// on the first decode step after re-admission. O(bytes copied), no
+    /// engine work, no replayed decode steps. No-op when the session is
+    /// not suspended.
+    pub(crate) fn resume_from_swap(&mut self) -> Result<()> {
+        let Some(SuspendedKv { snap, pool }) = self.suspended.take() else {
+            return Ok(());
+        };
+        let bytes = snap.bytes;
+        let t0 = std::time::Instant::now();
+        let result = self.rebuild_from(snap);
+        pool.release(bytes);
+        if result.is_ok() {
+            let ns = t0.elapsed().as_nanos() as u64;
+            pool.note_swap_in(bytes, ns);
+            self.swap_ins += 1;
+            self.restore_ns += ns;
+        }
+        result
+    }
+
+    /// Build a fresh backend and load `snap` into it (the swap-in copy).
+    fn rebuild_from(&mut self, snap: KvSnapshot) -> Result<()> {
+        let mut backend = build_backend(&self.cfg, &self.manifest)?;
+        backend.restore(snap)?;
+        self.backend = Some(backend);
+        Ok(())
+    }
+
+    /// Drop a suspended snapshot (if any) and return its swap bytes —
+    /// the session is leaving the system without resuming.
+    fn drop_swap(&mut self) {
+        if let Some(SuspendedKv { snap, pool }) = self.suspended.take() {
+            pool.release(snap.bytes);
+        }
+    }
+
     /// Reset this session for preemption: free the cache slabs, return
     /// the pool bytes, and rewind generation so a later re-admission
     /// recomputes from the prompt (vLLM-style recompute preemption; the
     /// backend is rebuilt lazily on the next step). The time-accounting
     /// fields keep running — ttft/total latencies include the time spent
-    /// preempted.
+    /// preempted. This is the fallback when suspend-to-host
+    /// ([`Session::suspend_to`]) is disabled or does not fit.
     pub fn reset_for_preemption(&mut self) {
+        self.drop_swap();
         self.release_pool();
         self.backend = None;
         self.sampler = Sampler::new(self.cfg.temperature, 32, self.cfg.seed ^ self.id);
         self.tokens.clear();
         self.pos = 0;
+        // a victim that never prefilled loses no generated work, so only
+        // count resets that actually force a recompute
+        if self.prefilled {
+            self.preemptions += 1;
+        }
         self.prefilled = false;
         self.first_token_at = None;
-        self.preemptions += 1;
     }
 
     /// Run prompt prefill (once).
@@ -366,6 +503,13 @@ impl Session {
     pub fn step(&mut self, engine: &Engine) -> Result<StepOutcome> {
         if self.done() {
             return Ok(StepOutcome::Finished);
+        }
+        if self.suspended.is_some() {
+            // swapped-out session re-admitted: restore the cache image
+            // instead of recomputing (the admission reserve already
+            // covers the restored footprint byte-accurately)
+            self.resume_from_swap()?;
+            self.sync_pool();
         }
         if !self.prefilled {
             // the admission reserve covers the prefill footprint
@@ -407,12 +551,38 @@ impl Session {
         }
         Ok(StepOutcome::Running)
     }
+
+    /// Test-only: fabricate a completed prefill (synthetic K/V, no
+    /// engine) so suspend/resume paths can be exercised in artifact-free
+    /// unit tests.
+    #[cfg(test)]
+    pub(crate) fn test_fake_prefill(&mut self) {
+        self.ensure_backend().expect("backend builds");
+        let m = self.manifest.model.clone();
+        let kvd = m.n_kv_heads * m.d_head;
+        let pf = crate::runtime::PrefillOut {
+            logits: vec![0.0; m.vocab],
+            k: vec![0.01; m.n_layers * m.prefill_len * kvd],
+            v: vec![0.02; m.n_layers * m.prefill_len * kvd],
+            obs: vec![0.0; m.n_layers * m.prefill_len],
+        };
+        self.backend
+            .as_mut()
+            .expect("backend built above")
+            .write_prefill(&pf, m.prefill_len);
+        self.tokens.push(1);
+        self.pos = m.prefill_len;
+        self.first_token_at = Some(std::time::Instant::now());
+        self.prefilled = true;
+        self.sync_pool();
+    }
 }
 
 impl Drop for Session {
     /// A session dropped mid-flight (scheduler shutdown, submitter gone)
-    /// must not strand its pool reservation.
+    /// must not strand its pool reservation or a suspended swap image.
     fn drop(&mut self) {
         self.release_pool();
+        self.drop_swap();
     }
 }

@@ -38,6 +38,7 @@ use crate::runtime::{CacheView, DecodeOut, PrefillOut};
 use crate::thought::classifier::Classifier;
 use crate::thought::sparsity_per_layer;
 
+use super::swap::{Fp32Snapshot, KvSnapshot, QuantSnapshot, SnapshotPayload};
 use super::{CtCache, Fp32Cache, Thought};
 
 /// Relative threshold for "non-negligible" attention (1% of row max,
@@ -56,6 +57,36 @@ fn fp32_token_bytes(layers: usize, kv_dim: usize) -> u64 {
 /// One object = one request's cache plus the policy that manages it.
 /// Implementations must be `Send`: sessions migrate between decode
 /// workers at chunk granularity.
+///
+/// # Example
+///
+/// Build a quantized backend, snapshot it, and restore the snapshot
+/// into a fresh backend of the same shape (the suspend-to-host
+/// preemption round trip — no engine or artifacts needed):
+///
+/// ```
+/// use thinkv::compress::tbq::{PrecisionAssignment, Tbq};
+/// use thinkv::kvcache::{CacheConfig, CtCache, KvBackend, QuantBackend};
+/// use thinkv::thought::classifier::{Classifier, ClassifierConfig};
+///
+/// let cfg = CacheConfig {
+///     layers: 2, capacity: 64, block_size: 8, hkv: 1, dh: 16, buf_slots: 16,
+/// };
+/// let mk = || QuantBackend::new(
+///     CtCache::new(cfg.clone()),
+///     Tbq::new(PrecisionAssignment::r4e4t2()),
+///     None, // no TBE
+///     Classifier::new(ClassifierConfig::default()),
+///     None, // no PM-KVQ
+/// );
+/// let backend = mk();
+/// assert_eq!(backend.kind(), "quant");
+/// let snap = backend.snapshot().unwrap();
+/// assert!(snap.bytes > 0, "even an empty cache has CT metadata");
+/// let mut resumed = mk();
+/// resumed.restore(snap).unwrap();
+/// assert_eq!(resumed.live_tokens(), 0);
+/// ```
 pub trait KvBackend: Send {
     /// Short label for diagnostics ("quant" / "fp32").
     fn kind(&self) -> &'static str;
@@ -119,6 +150,29 @@ pub trait KvBackend: Send {
     fn gather_stats(&self) -> (u64, u64, u64) {
         (0, 0, 0)
     }
+
+    /// Exact host bytes a [`KvBackend::snapshot`] taken right now would
+    /// occupy, computed without building it — so the caller can reserve
+    /// the [`SwapPool`](super::SwapPool) *first* and a snapshot that
+    /// will not fit costs O(1) instead of a discarded full copy.
+    fn snapshot_bytes(&self) -> u64;
+
+    /// Copy the complete cache + policy state into a host-side image
+    /// (suspend-to-host preemption). The backend is left untouched; the
+    /// caller decides whether to drop it (swap-out) or keep running.
+    /// `KvSnapshot::bytes` is the host footprint the
+    /// [`SwapPool`](super::SwapPool) charges (always equal to
+    /// [`KvBackend::snapshot_bytes`] at capture time); `device_bytes`
+    /// records [`KvBackend::bytes_used`] so swap-in can re-reserve the
+    /// block pool byte-accurately.
+    fn snapshot(&self) -> Result<KvSnapshot>;
+
+    /// Load a snapshot taken by [`KvBackend::snapshot`] into this
+    /// (freshly built, same-geometry) backend so decoding resumes
+    /// exactly where the snapshot was captured — identical token
+    /// stream, zero recompute steps. Errors on a kind or geometry
+    /// mismatch.
+    fn restore(&mut self, snap: KvSnapshot) -> Result<()>;
 }
 
 // ---------------------------------------------------------------------------
@@ -313,6 +367,43 @@ impl KvBackend for QuantBackend {
     fn tbe_stats(&self) -> Option<TbeStats> {
         self.tbe.as_ref().map(|t| t.stats.clone())
     }
+
+    fn snapshot_bytes(&self) -> u64 {
+        self.cache.snapshot_host_bytes()
+    }
+
+    fn snapshot(&self) -> Result<KvSnapshot> {
+        let ct = self.cache.snapshot_state();
+        debug_assert_eq!(ct.host_bytes(), self.cache.snapshot_host_bytes());
+        Ok(KvSnapshot {
+            bytes: ct.host_bytes(),
+            device_bytes: self.bytes_used(),
+            payload: SnapshotPayload::Quant(Box::new(QuantSnapshot {
+                ct,
+                classifier: self.classifier.snapshot_state(),
+                cur_thought: self.cur_thought,
+                cur_segment: self.cur_segment,
+                tbe_stats: self.tbe.as_ref().map(|t| t.stats.clone()),
+            })),
+        })
+    }
+
+    fn restore(&mut self, snap: KvSnapshot) -> Result<()> {
+        let SnapshotPayload::Quant(q) = snap.payload else {
+            bail!("cannot restore an fp32 snapshot into a quant backend");
+        };
+        let q = *q;
+        self.cache
+            .restore_state(q.ct)
+            .map_err(|e| anyhow::anyhow!("quant restore: {e}"))?;
+        self.classifier.restore_state(q.classifier);
+        self.cur_thought = q.cur_thought;
+        self.cur_segment = q.cur_segment;
+        if let (Some(tbe), Some(stats)) = (self.tbe.as_mut(), q.tbe_stats) {
+            tbe.stats = stats;
+        }
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -466,5 +557,34 @@ impl KvBackend for Fp32Backend {
 
     fn gather_stats(&self) -> (u64, u64, u64) {
         (self.cache.gather_calls, self.cache.gather_bytes, self.cache.gather_nanos)
+    }
+
+    fn snapshot_bytes(&self) -> u64 {
+        self.cache.snapshot_host_bytes()
+    }
+
+    fn snapshot(&self) -> Result<KvSnapshot> {
+        let cache = self.cache.snapshot_state();
+        debug_assert_eq!(cache.host_bytes(), self.cache.snapshot_host_bytes());
+        Ok(KvSnapshot {
+            bytes: cache.host_bytes(),
+            device_bytes: self.bytes_used(),
+            payload: SnapshotPayload::Fp32(Box::new(Fp32Snapshot {
+                cache,
+                policy: self.policy.box_clone(),
+            })),
+        })
+    }
+
+    fn restore(&mut self, snap: KvSnapshot) -> Result<()> {
+        let SnapshotPayload::Fp32(f) = snap.payload else {
+            bail!("cannot restore a quant snapshot into an fp32 backend");
+        };
+        let f = *f;
+        self.cache
+            .restore_state(f.cache)
+            .map_err(|e| anyhow::anyhow!("fp32 restore: {e}"))?;
+        self.policy = f.policy;
+        Ok(())
     }
 }

@@ -18,7 +18,7 @@ use super::Thought;
 pub type SlotId = usize;
 
 /// One physical block's CT metadata.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BlockEntry {
     /// Physical block index inside the request slab.
     pub phys: usize,
@@ -75,7 +75,11 @@ pub struct Placement {
 }
 
 /// Per-layer CT block table over a slab of `capacity` slots.
-#[derive(Debug, Clone)]
+///
+/// Derives `PartialEq` so suspend-to-host snapshots
+/// ([`crate::kvcache::ct::CtSnapshot`]) can be compared bit-exactly in
+/// round-trip tests.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerTable {
     pub block_size: usize,
     pub capacity: usize,

@@ -21,7 +21,7 @@ use super::block_table::{LayerTable, SlotId};
 use super::Thought;
 
 /// Geometry of a request's cache (from the manifest + serving config).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CacheConfig {
     pub layers: usize,
     pub capacity: usize,
@@ -42,7 +42,7 @@ impl CacheConfig {
 }
 
 /// A thought segment (contiguous CoT span of one thought type, §3.1 fn.3).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SegmentInfo {
     pub id: usize,
     pub thought: Thought,
@@ -58,6 +58,70 @@ struct BufToken {
     pos: usize,
     segment: usize,
     thought: Thought,
+}
+
+/// One layer's compacted live payload inside a [`CtSnapshot`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CtLayerSnapshot {
+    /// Live slot ids, ascending.
+    pub slots: Vec<u32>,
+    /// Per-live-slot precision tag.
+    pub tags: Vec<u8>,
+    /// `[n, Hkv*Dh]` packed K codes of the live slots.
+    pub k_codes: Vec<u8>,
+    /// `[n, Hkv*G]` K group scales of the live slots.
+    pub k_scales: Vec<f32>,
+    pub v_codes: Vec<u8>,
+    pub v_scales: Vec<f32>,
+}
+
+/// Compact suspend-to-host image of a [`CtCache`]: only the *live*
+/// payload is captured (soft-evicted slots keep stale bytes that the
+/// mask-gated kernel never reads), plus the full CT metadata — block
+/// tables with thought tags, segment masks and eviction masks — the
+/// segment store, the B_buf full-precision residue, and the packed-bits
+/// accounting. Restoring this image into a fresh cache of the same
+/// geometry reproduces the decode stream bit-exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CtSnapshot {
+    pub cfg: CacheConfig,
+    /// Per-layer CT block tables (thought / segment / eviction masks).
+    pub tables: Vec<LayerTable>,
+    pub segments: Vec<SegmentInfo>,
+    /// Per-layer compacted live payload.
+    pub layers: Vec<CtLayerSnapshot>,
+    /// `(pos, segment, thought)` of each B_buf resident, in push order.
+    pub buffered: Vec<(usize, usize, Thought)>,
+    /// `[L, fill, Hkv*Dh]` compacted ring-buffer K payload.
+    pub buf_k: Vec<f32>,
+    pub buf_v: Vec<f32>,
+    pub packed_bits_written: f64,
+    pub tokens_written: u64,
+}
+
+impl CtSnapshot {
+    /// Host bytes this snapshot occupies — payload vectors plus a
+    /// conservative charge for the CT metadata. This is what the
+    /// [`SwapPool`](super::SwapPool) accounts on swap-out.
+    pub fn host_bytes(&self) -> u64 {
+        let mut n = 0u64;
+        for ls in &self.layers {
+            n += ls.slots.len() as u64 * 4
+                + ls.tags.len() as u64
+                + (ls.k_codes.len() + ls.v_codes.len()) as u64
+                + 4 * (ls.k_scales.len() + ls.v_scales.len()) as u64;
+        }
+        n += 4 * (self.buf_k.len() + self.buf_v.len()) as u64;
+        n += self.buffered.len() as u64 * 24;
+        for t in &self.tables {
+            // block entries (start indices + segment mask + fixed fields)
+            // and the two per-slot maps
+            n += t.blocks.len() as u64 * (self.cfg.block_size as u64 * 8 + 64);
+            n += t.capacity as u64 * 8;
+        }
+        n += self.segments.len() as u64 * 40;
+        n
+    }
 }
 
 /// The per-request Continuous-Thinking cache.
@@ -345,6 +409,156 @@ impl CtCache {
         bits / 8.0 + buf_bytes
     }
 
+    /// Exact host bytes [`CtCache::snapshot_state`] will occupy
+    /// (same formula as [`CtSnapshot::host_bytes`]), computed without
+    /// building the snapshot — so the swap pool can be reserved *before*
+    /// paying for the copy, and a snapshot that will not fit costs O(1).
+    pub fn snapshot_host_bytes(&self) -> u64 {
+        let kvd = self.cfg.kv_dim() as u64;
+        let sc = (self.cfg.hkv * self.cfg.groups()) as u64;
+        let mut n = 0u64;
+        for t in &self.tables {
+            // per live slot: slot id (4) + tag (1) + K/V codes + K/V scales
+            n += t.live_slots() as u64 * (4 + 1 + 2 * kvd + 8 * sc);
+            n += t.blocks.len() as u64 * (self.cfg.block_size as u64 * 8 + 64);
+            n += t.capacity as u64 * 8;
+        }
+        n += (self.cfg.layers * self.buffered.len()) as u64 * kvd * 8; // B_buf K+V f32
+        n += self.buffered.len() as u64 * 24;
+        n += self.segments.len() as u64 * 40;
+        n
+    }
+
+    /// Copy the complete live state into a compact host-side image
+    /// (suspend-to-host preemption). The cache itself is untouched.
+    pub fn snapshot_state(&self) -> CtSnapshot {
+        let (c, kvd) = (self.cfg.capacity, self.cfg.kv_dim());
+        let sc = self.cfg.hkv * self.cfg.groups(); // scales per slot
+        let mut layers = Vec::with_capacity(self.cfg.layers);
+        for l in 0..self.cfg.layers {
+            let slots = self.tables[l].live_slot_ids();
+            let mut ls = CtLayerSnapshot {
+                slots: slots.iter().map(|&s| s as u32).collect(),
+                tags: Vec::with_capacity(slots.len()),
+                k_codes: Vec::with_capacity(slots.len() * kvd),
+                k_scales: Vec::with_capacity(slots.len() * sc),
+                v_codes: Vec::with_capacity(slots.len() * kvd),
+                v_scales: Vec::with_capacity(slots.len() * sc),
+            };
+            for &s in &slots {
+                ls.tags.push(self.tags[l * c + s]);
+                let cb = (l * c + s) * kvd;
+                let sb = (l * c + s) * sc;
+                ls.k_codes.extend_from_slice(&self.k_codes[cb..cb + kvd]);
+                ls.k_scales.extend_from_slice(&self.k_scales[sb..sb + sc]);
+                ls.v_codes.extend_from_slice(&self.v_codes[cb..cb + kvd]);
+                ls.v_scales.extend_from_slice(&self.v_scales[sb..sb + sc]);
+            }
+            layers.push(ls);
+        }
+        let (fill, b) = (self.buffered.len(), self.cfg.buf_slots);
+        let mut buf_k = Vec::with_capacity(self.cfg.layers * fill * kvd);
+        let mut buf_v = Vec::with_capacity(self.cfg.layers * fill * kvd);
+        for l in 0..self.cfg.layers {
+            for i in 0..fill {
+                let src = (l * b + i) * kvd;
+                buf_k.extend_from_slice(&self.buf_k[src..src + kvd]);
+                buf_v.extend_from_slice(&self.buf_v[src..src + kvd]);
+            }
+        }
+        CtSnapshot {
+            cfg: self.cfg.clone(),
+            tables: self.tables.clone(),
+            segments: self.segments.clone(),
+            layers,
+            buffered: self
+                .buffered
+                .iter()
+                .map(|t| (t.pos, t.segment, t.thought))
+                .collect(),
+            buf_k,
+            buf_v,
+            packed_bits_written: self.packed_bits_written,
+            tokens_written: self.tokens_written,
+        }
+    }
+
+    /// Load a [`CtSnapshot`] into this (same-geometry) cache, replacing
+    /// its entire state. Dead slots are zeroed rather than restored —
+    /// the mask-gated kernel never reads them, so the decode stream is
+    /// unchanged. Errors if the geometry differs or the image is
+    /// internally inconsistent.
+    pub fn restore_state(&mut self, snap: CtSnapshot) -> Result<(), String> {
+        if snap.cfg != self.cfg {
+            return Err(format!(
+                "snapshot geometry {:?} does not match cache geometry {:?}",
+                snap.cfg, self.cfg
+            ));
+        }
+        let (c, kvd) = (self.cfg.capacity, self.cfg.kv_dim());
+        let sc = self.cfg.hkv * self.cfg.groups();
+        self.k_codes.fill(0);
+        self.k_scales.fill(0.0);
+        self.v_codes.fill(0);
+        self.v_scales.fill(0.0);
+        self.tags.fill(0);
+        self.mask.fill(0.0);
+        self.buf_k.fill(0.0);
+        self.buf_v.fill(0.0);
+        self.buf_mask.fill(0.0);
+        self.tables = snap.tables;
+        self.segments = snap.segments;
+        for (l, ls) in snap.layers.iter().enumerate() {
+            let n = ls.slots.len();
+            if ls.tags.len() != n
+                || ls.k_codes.len() != n * kvd
+                || ls.k_scales.len() != n * sc
+                || ls.v_codes.len() != n * kvd
+                || ls.v_scales.len() != n * sc
+            {
+                return Err(format!("layer {l}: inconsistent snapshot payload"));
+            }
+            for (i, &s32) in ls.slots.iter().enumerate() {
+                let s = s32 as usize;
+                if s >= c {
+                    return Err(format!("layer {l}: slot {s} out of range"));
+                }
+                let cb = (l * c + s) * kvd;
+                let sb = (l * c + s) * sc;
+                self.k_codes[cb..cb + kvd].copy_from_slice(&ls.k_codes[i * kvd..(i + 1) * kvd]);
+                self.k_scales[sb..sb + sc].copy_from_slice(&ls.k_scales[i * sc..(i + 1) * sc]);
+                self.v_codes[cb..cb + kvd].copy_from_slice(&ls.v_codes[i * kvd..(i + 1) * kvd]);
+                self.v_scales[sb..sb + sc].copy_from_slice(&ls.v_scales[i * sc..(i + 1) * sc]);
+                self.tags[l * c + s] = ls.tags[i];
+                self.mask[l * c + s] = 1.0;
+            }
+        }
+        let (fill, b) = (snap.buffered.len(), self.cfg.buf_slots);
+        if snap.buf_k.len() != self.cfg.layers * fill * kvd
+            || snap.buf_v.len() != self.cfg.layers * fill * kvd
+            || fill > b
+        {
+            return Err("inconsistent buffer residue in snapshot".into());
+        }
+        for l in 0..self.cfg.layers {
+            for i in 0..fill {
+                let dst = (l * b + i) * kvd;
+                let src = (l * fill + i) * kvd;
+                self.buf_k[dst..dst + kvd].copy_from_slice(&snap.buf_k[src..src + kvd]);
+                self.buf_v[dst..dst + kvd].copy_from_slice(&snap.buf_v[src..src + kvd]);
+                self.buf_mask[l * b + i] = 1.0;
+            }
+        }
+        self.buffered = snap
+            .buffered
+            .iter()
+            .map(|&(pos, segment, thought)| BufToken { pos, segment, thought })
+            .collect();
+        self.packed_bits_written = snap.packed_bits_written;
+        self.tokens_written = snap.tokens_written;
+        self.check_invariants()
+    }
+
     pub fn check_invariants(&self) -> Result<(), String> {
         let c = self.cfg.capacity;
         for (l, t) in self.tables.iter().enumerate() {
@@ -514,6 +728,63 @@ mod tests {
         cache.flush_buffer(&psi).unwrap();
         let bits = cache.avg_bits_written();
         assert!(bits > 2.5 && bits < 4.6, "avg bits {bits}");
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrips_bit_exactly() {
+        let cfg = cfg();
+        let mut cache = CtCache::new(cfg.clone());
+        let mut rng = Rng::new(11);
+        let psi = |t: Thought| match t {
+            Thought::Transition => Precision::Ternary,
+            Thought::Execution => Precision::Nvfp4,
+            Thought::Reasoning => Precision::Fp8,
+        };
+        // mixed history: two segments, a flush, evictions, and a partial
+        // buffer left in place (the B_buf residue the snapshot must carry)
+        let seg = cache.open_segment(Thought::Reasoning, 0);
+        for i in 0..16 {
+            let (k, v) = rand_kv(&mut rng, &cfg);
+            cache.push_token(&k, &v, i, seg, Thought::Reasoning);
+        }
+        cache.flush_buffer(&psi).unwrap();
+        cache.soft_evict_slots(0, &[1, 3]);
+        cache.soft_evict_slots(1, &[1, 3]);
+        let seg2 = cache.open_segment(Thought::Execution, 16);
+        for i in 0..5 {
+            let (k, v) = rand_kv(&mut rng, &cfg);
+            cache.push_token(&k, &v, 16 + i, seg2, Thought::Execution);
+        }
+        let snap = cache.snapshot_state();
+        assert!(snap.host_bytes() > 0);
+        assert_eq!(snap.buffered.len(), 5);
+
+        let mut fresh = CtCache::new(cfg.clone());
+        fresh.restore_state(snap.clone()).unwrap();
+        assert_eq!(fresh.live_tokens(), cache.live_tokens());
+        assert_eq!(fresh.buf_fill(), cache.buf_fill());
+        assert_eq!(fresh.mask, cache.mask);
+        assert_eq!(fresh.buf_mask, cache.buf_mask);
+        assert_eq!(fresh.segments, cache.segments);
+        assert_eq!(fresh.tables, cache.tables);
+        // re-snapshotting the restored cache must give the identical image
+        assert_eq!(fresh.snapshot_state(), snap);
+        // and the restored cache must keep working: flush the residue
+        fresh.check_invariants().unwrap();
+        for i in 5..16 {
+            let (k, v) = rand_kv(&mut rng, &cfg);
+            fresh.push_token(&k, &v, 16 + i, seg2, Thought::Execution);
+        }
+        fresh.flush_buffer(&psi).unwrap();
+        fresh.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn restore_rejects_geometry_mismatch() {
+        let cache = CtCache::new(cfg());
+        let snap = cache.snapshot_state();
+        let mut other = CtCache::new(CacheConfig { capacity: 128, ..cfg() });
+        assert!(other.restore_state(snap).is_err());
     }
 
     #[test]

@@ -11,6 +11,41 @@ use crate::runtime::DecodeOut;
 
 use super::block_table::SlotId;
 
+/// Compact suspend-to-host image of an [`Fp32Cache`]: the live f32
+/// rows, the ring-buffer residue, and the gather counters. Unlike the
+/// quantized [`CtSnapshot`](super::ct::CtSnapshot) this image is full
+/// precision, so it is 10-20x larger per live token — the reason
+/// eviction baselines swap poorly (ISSUE 2 motivation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fp32CacheSnapshot {
+    pub layers: usize,
+    pub capacity: usize,
+    pub kv_dim: usize,
+    pub buf_slots: usize,
+    /// `(slot, CoT position)` of each live slot, ascending by slot.
+    pub slots: Vec<(u32, u32)>,
+    /// `[L, n, kv_dim]` live K rows.
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// CoT positions of the buffered (unflushed) tokens, in push order.
+    pub buffered_pos: Vec<usize>,
+    /// `[L, fill, kv_dim]` buffered K payload.
+    pub buf_k: Vec<f32>,
+    pub buf_v: Vec<f32>,
+    pub gather_bytes: u64,
+    pub gather_calls: u64,
+    pub gather_nanos: u64,
+}
+
+impl Fp32CacheSnapshot {
+    /// Host bytes this snapshot occupies (payload + per-slot metadata).
+    pub fn host_bytes(&self) -> u64 {
+        self.slots.len() as u64 * 8
+            + 4 * (self.k.len() + self.v.len() + self.buf_k.len() + self.buf_v.len()) as u64
+            + self.buffered_pos.len() as u64 * 8
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Fp32Cache {
     pub layers: usize,
@@ -211,6 +246,119 @@ impl Fp32Cache {
         self.slot_pos.iter().position(|&p| p == pos as i32)
     }
 
+    /// Exact host bytes [`Fp32Cache::snapshot_state`] will occupy (same
+    /// formula as [`Fp32CacheSnapshot::host_bytes`]), computed without
+    /// building the snapshot.
+    pub fn snapshot_host_bytes(&self) -> u64 {
+        let live = self.live_tokens() as u64;
+        let (l, kvd) = (self.layers as u64, self.kv_dim as u64);
+        let fill = self.buffered as u64;
+        live * 8 + l * live * kvd * 8 + fill * 8 + l * fill * kvd * 8
+    }
+
+    /// Copy the complete live state into a compact host-side image
+    /// (suspend-to-host preemption). The cache itself is untouched.
+    pub fn snapshot_state(&self) -> Fp32CacheSnapshot {
+        let kvd = self.kv_dim;
+        let live: Vec<SlotId> = (0..self.capacity).filter(|&s| self.slot_pos[s] >= 0).collect();
+        let mut k = Vec::with_capacity(self.layers * live.len() * kvd);
+        let mut v = Vec::with_capacity(self.layers * live.len() * kvd);
+        for l in 0..self.layers {
+            for &s in &live {
+                let base = (l * self.capacity + s) * kvd;
+                k.extend_from_slice(&self.k[base..base + kvd]);
+                v.extend_from_slice(&self.v[base..base + kvd]);
+            }
+        }
+        let fill = self.buffered;
+        let mut buf_k = Vec::with_capacity(self.layers * fill * kvd);
+        let mut buf_v = Vec::with_capacity(self.layers * fill * kvd);
+        for l in 0..self.layers {
+            for i in 0..fill {
+                let src = (l * self.buf_slots + i) * kvd;
+                buf_k.extend_from_slice(&self.buf_k[src..src + kvd]);
+                buf_v.extend_from_slice(&self.buf_v[src..src + kvd]);
+            }
+        }
+        Fp32CacheSnapshot {
+            layers: self.layers,
+            capacity: self.capacity,
+            kv_dim: kvd,
+            buf_slots: self.buf_slots,
+            slots: live
+                .iter()
+                .map(|&s| (s as u32, self.slot_pos[s] as u32))
+                .collect(),
+            k,
+            v,
+            buffered_pos: self.buffered_pos.clone(),
+            buf_k,
+            buf_v,
+            gather_bytes: self.gather_bytes,
+            gather_calls: self.gather_calls,
+            gather_nanos: self.gather_nanos,
+        }
+    }
+
+    /// Load an [`Fp32CacheSnapshot`] into this (same-geometry) cache,
+    /// replacing its entire state.
+    pub fn restore_state(&mut self, snap: Fp32CacheSnapshot) -> Result<(), String> {
+        if snap.layers != self.layers
+            || snap.capacity != self.capacity
+            || snap.kv_dim != self.kv_dim
+            || snap.buf_slots != self.buf_slots
+        {
+            return Err("fp32 snapshot geometry mismatch".into());
+        }
+        let kvd = self.kv_dim;
+        let n = snap.slots.len();
+        let fill = snap.buffered_pos.len();
+        if snap.k.len() != self.layers * n * kvd
+            || snap.v.len() != self.layers * n * kvd
+            || snap.buf_k.len() != self.layers * fill * kvd
+            || snap.buf_v.len() != self.layers * fill * kvd
+            || fill > self.buf_slots
+        {
+            return Err("inconsistent fp32 snapshot payload".into());
+        }
+        self.k.fill(0.0);
+        self.v.fill(0.0);
+        self.mask.fill(0.0);
+        self.slot_pos.fill(-1);
+        self.buf_k.fill(0.0);
+        self.buf_v.fill(0.0);
+        self.buf_mask.fill(0.0);
+        for (i, &(s32, pos)) in snap.slots.iter().enumerate() {
+            let s = s32 as usize;
+            if s >= self.capacity {
+                return Err(format!("fp32 snapshot slot {s} out of range"));
+            }
+            self.slot_pos[s] = pos as i32;
+            for l in 0..self.layers {
+                let dst = (l * self.capacity + s) * kvd;
+                let src = (l * n + i) * kvd;
+                self.k[dst..dst + kvd].copy_from_slice(&snap.k[src..src + kvd]);
+                self.v[dst..dst + kvd].copy_from_slice(&snap.v[src..src + kvd]);
+                self.mask[l * self.capacity + s] = 1.0;
+            }
+        }
+        for l in 0..self.layers {
+            for i in 0..fill {
+                let dst = (l * self.buf_slots + i) * kvd;
+                let src = (l * fill + i) * kvd;
+                self.buf_k[dst..dst + kvd].copy_from_slice(&snap.buf_k[src..src + kvd]);
+                self.buf_v[dst..dst + kvd].copy_from_slice(&snap.buf_v[src..src + kvd]);
+                self.buf_mask[l * self.buf_slots + i] = 1.0;
+            }
+        }
+        self.buffered = fill;
+        self.buffered_pos = snap.buffered_pos;
+        self.gather_bytes = snap.gather_bytes;
+        self.gather_calls = snap.gather_calls;
+        self.gather_nanos = snap.gather_nanos;
+        self.check_invariants()
+    }
+
     pub fn check_invariants(&self) -> Result<(), String> {
         for s in 0..self.capacity {
             let live = self.slot_pos[s] >= 0;
@@ -317,6 +465,45 @@ mod tests {
         c.evict_positions(&[0, 1, 2, 3]);
         assert!(c.flush_buffer().is_ok());
         c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrips_bit_exactly() {
+        let mut c = mk();
+        let k = vec![1.5; 2 * 8 * 8];
+        let v = vec![-2.5; 2 * 8 * 8];
+        c.write_prefill(&k, &v, 8);
+        c.evict_positions(&[1, 5]);
+        for i in 0..3 {
+            c.push_token(&fake_out(2, 8, i as f32), 8 + i);
+        }
+        c.compact_gather();
+        let snap = c.snapshot_state();
+        assert!(snap.host_bytes() > 0);
+        assert_eq!(snap.buffered_pos, vec![8, 9, 10]);
+
+        let mut fresh = Fp32Cache::new(2, 32, 8, 16);
+        fresh.restore_state(snap.clone()).unwrap();
+        assert_eq!(fresh.live_tokens(), c.live_tokens());
+        assert_eq!(fresh.buf_fill(), c.buf_fill());
+        assert_eq!(fresh.mask, c.mask);
+        assert_eq!(fresh.slot_pos, c.slot_pos);
+        assert_eq!(fresh.gather_calls, c.gather_calls);
+        assert_eq!(fresh.snapshot_state(), snap);
+        // restored cache keeps working
+        for i in 3..16 {
+            fresh.push_token(&fake_out(2, 8, i as f32), 8 + i);
+        }
+        fresh.flush_buffer().unwrap();
+        fresh.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn restore_rejects_geometry_mismatch() {
+        let c = mk();
+        let snap = c.snapshot_state();
+        let mut other = Fp32Cache::new(2, 64, 8, 16);
+        assert!(other.restore_state(snap).is_err());
     }
 
     #[test]

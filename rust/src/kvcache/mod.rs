@@ -18,18 +18,24 @@
 //! * [`pool`] — [`pool::BlockPool`], the global physical-byte pool the
 //!   memory-aware scheduler reserves against for admission control and
 //!   preemption (max batch-size experiments, Tables 2/3).
+//! * [`swap`] — suspend-to-host preemption: [`swap::KvSnapshot`] images
+//!   produced by [`backend::KvBackend::snapshot`] and the byte-accounted
+//!   host-side [`swap::SwapPool`] they live in while a preempted session
+//!   waits for re-admission.
 
 pub mod backend;
 pub mod block_table;
 pub mod ct;
 pub mod fp32;
 pub mod pool;
+pub mod swap;
 
 pub use backend::{Fp32Backend, KvBackend, QuantBackend};
 pub use block_table::{BlockEntry, LayerTable, SlotId};
-pub use ct::{CacheConfig, CtCache, SegmentInfo};
-pub use fp32::Fp32Cache;
+pub use ct::{CacheConfig, CtCache, CtSnapshot, SegmentInfo};
+pub use fp32::{Fp32Cache, Fp32CacheSnapshot};
 pub use pool::BlockPool;
+pub use swap::{KvSnapshot, SnapshotPayload, SwapPool, SwapStats};
 
 /// The three thought types (paper Observation 1b: T sparsest, then R, then E).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]

@@ -1,0 +1,258 @@
+//! Suspend-to-host KV swapping (the preemption fast path).
+//!
+//! PR 1's scheduler reclaims pool bytes by preempting the youngest
+//! session and *recomputing* it on re-admission. For reasoning workloads
+//! the "prompt" to recompute is the whole generated CoT, so every
+//! preemption replays thousands of decode steps. ThinKV's compressed
+//! cache (§6: <5% of the FullKV footprint) is small enough to serialize
+//! to host memory almost for free, turning preemption from
+//! O(trajectory replay) into O(bytes copied). This module provides:
+//!
+//! * [`KvSnapshot`] — a self-contained host-side image of one request's
+//!   cache + policy state, produced by [`KvBackend::snapshot`] and
+//!   consumed by [`KvBackend::restore`]. For the quantized backend this
+//!   is the compacted live slabs plus the CT metadata (thought tags,
+//!   segment masks, eviction masks), classifier/segment state, and the
+//!   B_buf full-precision residue; for the f32 backend it is the live
+//!   rows plus the eviction-policy statistics. The fp32 image is 10-20x
+//!   larger — exactly why R-KV-style baselines cannot swap cheaply.
+//! * [`SwapPool`] — the byte-accounted host memory pool snapshots are
+//!   charged against, with swap-in/out counters and restore latency the
+//!   scheduler surfaces through
+//!   [`SchedSnapshot`](crate::metrics::SchedSnapshot).
+//!
+//! The scheduler's policy is *swap when it fits, recompute otherwise*:
+//! [`Session::suspend_to`](crate::coordinator::Session::suspend_to)
+//! falls back to the PR 1 recompute path whenever the snapshot does not
+//! fit the pool (counted in [`SwapStats::fallbacks`]).
+//!
+//! [`KvBackend::snapshot`]: super::KvBackend::snapshot
+//! [`KvBackend::restore`]: super::KvBackend::restore
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::baselines::eviction::EvictionPolicy;
+use crate::compress::tbe::TbeStats;
+use crate::thought::classifier::ClassifierState;
+
+use super::ct::CtSnapshot;
+use super::fp32::Fp32CacheSnapshot;
+use super::Thought;
+
+/// Host-side image of a [`QuantBackend`](super::QuantBackend): the
+/// compacted CT cache plus every piece of decode-loop policy state that
+/// must survive a suspend/resume cycle bit-exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantSnapshot {
+    /// Compacted cache image (live codes/scales/tags, CT block tables
+    /// with segment + eviction masks, B_buf residue, counters).
+    pub ct: CtSnapshot,
+    /// Streaming thought-classifier window (accumulator, window length,
+    /// window means).
+    pub classifier: ClassifierState,
+    /// Thought label of the currently open segment.
+    pub cur_thought: Thought,
+    /// Id of the currently open segment.
+    pub cur_segment: usize,
+    /// TBE counters (call-rate telemetry), when TBE is enabled.
+    pub tbe_stats: Option<TbeStats>,
+}
+
+/// Host-side image of an [`Fp32Backend`](super::Fp32Backend): live f32
+/// rows plus the eviction policy's accumulated statistics.
+pub struct Fp32Snapshot {
+    /// Compacted f32 cache image (live rows, buffer residue, counters).
+    pub cache: Fp32CacheSnapshot,
+    /// The eviction policy, cloned with all accumulated state (H2O
+    /// cumulative scores, R-KV decay tables, ...).
+    pub policy: Box<dyn EvictionPolicy>,
+}
+
+/// The backend-specific payload of a [`KvSnapshot`].
+pub enum SnapshotPayload {
+    /// Quantized CT cache (ThinKV / KIVI / PM-KVQ sessions).
+    Quant(Box<QuantSnapshot>),
+    /// F32 cache (FullKV / eviction-baseline sessions).
+    Fp32(Box<Fp32Snapshot>),
+}
+
+/// A suspended request's complete cache state, living in host memory
+/// while the request waits for re-admission.
+pub struct KvSnapshot {
+    /// Host bytes this snapshot occupies — what [`SwapPool::reserve`]
+    /// charges on swap-out and [`SwapPool::release`] returns on swap-in.
+    pub bytes: u64,
+    /// Device-side live footprint at suspend time (packed accounting) —
+    /// what the scheduler must re-reserve in the
+    /// [`BlockPool`](super::BlockPool) before the session resumes.
+    pub device_bytes: u64,
+    /// Backend-specific cache + policy image.
+    pub payload: SnapshotPayload,
+}
+
+impl KvSnapshot {
+    /// Which backend family produced this snapshot.
+    pub fn kind(&self) -> &'static str {
+        match self.payload {
+            SnapshotPayload::Quant(_) => "quant",
+            SnapshotPayload::Fp32(_) => "fp32",
+        }
+    }
+}
+
+/// Point-in-time counters of a [`SwapPool`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SwapStats {
+    pub capacity: u64,
+    pub used: u64,
+    pub peak: u64,
+    /// Sessions suspended to host (snapshot stored).
+    pub swap_outs: u64,
+    /// Sessions resumed from host (snapshot restored and freed).
+    pub swap_ins: u64,
+    /// Total bytes copied host-ward by swap-outs.
+    pub bytes_out: u64,
+    /// Total bytes copied device-ward by swap-ins.
+    pub bytes_in: u64,
+    /// Cumulative wall time spent restoring snapshots (swap-in cost).
+    pub restore_ns: u64,
+    /// Preemptions that fell back to recompute because the snapshot did
+    /// not fit the pool (or could not be taken).
+    pub fallbacks: u64,
+}
+
+/// Byte-accounted host-memory pool for suspended KV snapshots.
+///
+/// The byte accounting *is* a [`BlockPool`](super::BlockPool) (bytes,
+/// not slots — snapshots of mixed-precision caches differ in size);
+/// `SwapPool` composes one and adds the swap-traffic counters the
+/// serving stats report: swap-in/out counts, bytes moved each way,
+/// restore latency, and recompute fallbacks.
+#[derive(Debug)]
+pub struct SwapPool {
+    bytes: super::BlockPool,
+    swap_outs: AtomicU64,
+    swap_ins: AtomicU64,
+    bytes_out: AtomicU64,
+    bytes_in: AtomicU64,
+    restore_ns: AtomicU64,
+    fallbacks: AtomicU64,
+}
+
+impl SwapPool {
+    pub fn new(capacity_bytes: u64) -> SwapPool {
+        SwapPool {
+            bytes: super::BlockPool::new(capacity_bytes),
+            swap_outs: AtomicU64::new(0),
+            swap_ins: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
+            bytes_in: AtomicU64::new(0),
+            restore_ns: AtomicU64::new(0),
+            fallbacks: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.bytes.capacity()
+    }
+
+    pub fn used(&self) -> u64 {
+        self.bytes.used()
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.bytes.peak()
+    }
+
+    pub fn free(&self) -> u64 {
+        self.bytes.free()
+    }
+
+    /// Try to reserve `bytes` of host memory; false if the pool would
+    /// overflow (the caller must fall back to recompute preemption).
+    pub fn reserve(&self, bytes: u64) -> bool {
+        self.bytes.reserve(bytes)
+    }
+
+    pub fn release(&self, bytes: u64) {
+        self.bytes.release(bytes)
+    }
+
+    /// Record a completed swap-out of `bytes` (already reserved).
+    pub fn note_swap_out(&self, bytes: u64) {
+        self.swap_outs.fetch_add(1, Ordering::SeqCst);
+        self.bytes_out.fetch_add(bytes, Ordering::SeqCst);
+    }
+
+    /// Record a completed swap-in of `bytes` that took `ns` to restore.
+    pub fn note_swap_in(&self, bytes: u64, ns: u64) {
+        self.swap_ins.fetch_add(1, Ordering::SeqCst);
+        self.bytes_in.fetch_add(bytes, Ordering::SeqCst);
+        self.restore_ns.fetch_add(ns, Ordering::SeqCst);
+    }
+
+    /// Record a preemption that had to fall back to recompute.
+    pub fn note_fallback(&self) {
+        self.fallbacks.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn stats(&self) -> SwapStats {
+        SwapStats {
+            capacity: self.capacity(),
+            used: self.used(),
+            peak: self.peak(),
+            swap_outs: self.swap_outs.load(Ordering::SeqCst),
+            swap_ins: self.swap_ins.load(Ordering::SeqCst),
+            bytes_out: self.bytes_out.load(Ordering::SeqCst),
+            bytes_in: self.bytes_in.load(Ordering::SeqCst),
+            restore_ns: self.restore_ns.load(Ordering::SeqCst),
+            fallbacks: self.fallbacks.load(Ordering::SeqCst),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserve_release_and_counters() {
+        let p = SwapPool::new(1000);
+        assert!(p.reserve(600));
+        p.note_swap_out(600);
+        assert!(!p.reserve(600), "over-capacity reserve must fail");
+        p.note_fallback();
+        p.release(600);
+        p.note_swap_in(600, 1234);
+        assert_eq!(p.used(), 0);
+        let s = p.stats();
+        assert_eq!(s.peak, 600);
+        assert_eq!(s.swap_outs, 1);
+        assert_eq!(s.swap_ins, 1);
+        assert_eq!(s.bytes_out, 600);
+        assert_eq!(s.bytes_in, 600);
+        assert_eq!(s.restore_ns, 1234);
+        assert_eq!(s.fallbacks, 1);
+    }
+
+    #[test]
+    fn concurrent_reservations_never_overflow() {
+        let p = std::sync::Arc::new(SwapPool::new(5_000));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let p = std::sync::Arc::clone(&p);
+            handles.push(std::thread::spawn(move || {
+                let mut got = 0u64;
+                for _ in 0..1000 {
+                    if p.reserve(3) {
+                        got += 3;
+                    }
+                }
+                got
+            }));
+        }
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(total <= 5_000);
+        assert_eq!(p.used(), total);
+    }
+}

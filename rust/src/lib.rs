@@ -10,18 +10,21 @@
 //!   step consumes the quantized paged KV cache; AOT-lowered to HLO text in
 //!   `artifacts/` by `python/compile/aot.py`.
 //! * **Layer 3 (Rust, run time)** — this crate: the serving coordinator
-//!   (memory-aware scheduler with byte-accurate `BlockPool` admission and
-//!   preempt-youngest reclamation, continuous batching, request routing),
-//!   the unified `KvBackend` cache abstraction over the
-//!   Continuous-Thinking quantized cache and the f32 baseline cache,
-//!   thought decomposition (KDE calibration + sparsity classifier),
-//!   TBQ/TBE compression policies, all eviction/quantization baselines,
-//!   the GPU cost model, and the LRM trace simulator.
+//!   (memory-aware scheduler with byte-accurate `BlockPool` admission,
+//!   preempt-youngest reclamation, and suspend-to-host swap preemption,
+//!   continuous batching, request routing), the unified `KvBackend`
+//!   cache abstraction over the Continuous-Thinking quantized cache and
+//!   the f32 baseline cache, thought decomposition (KDE calibration +
+//!   sparsity classifier), TBQ/TBE compression policies, all
+//!   eviction/quantization baselines, the GPU cost model, and the LRM
+//!   trace simulator.
 //!
 //! Crate map (run-time layer):
 //! * [`kvcache`] — CT block tables, [`kvcache::CtCache`] /
 //!   [`kvcache::Fp32Cache`], the [`kvcache::KvBackend`] trait unifying
-//!   them, and the global [`kvcache::BlockPool`] byte pool.
+//!   them, the global [`kvcache::BlockPool`] byte pool, and the
+//!   suspend-to-host swap subsystem ([`kvcache::swap`]:
+//!   [`kvcache::KvSnapshot`] + [`kvcache::SwapPool`]).
 //! * [`coordinator`] — [`coordinator::Scheduler`] (admission/preemption),
 //!   [`coordinator::Session`] (one request's generic decode loop), the
 //!   engine worker loop, and serving config.

@@ -37,11 +37,19 @@ fn print_help() {
 USAGE: thinkv <cmd> [--flags]
 
   generate  --mode thinkv|fullkv|rkv|h2o|kivi2|... --requests 4
-            --budget 1024 --max-tokens 128 --workers 2 --pool-mb 0
-  serve     --addr 127.0.0.1:7799 --mode thinkv --budget 1024 --pool-mb 0
+            --budget 1024 --max-tokens 128 --workers 2
+            --pool-mb 0 --swap-mb 0
+  serve     --addr 127.0.0.1:7799 --mode thinkv --budget 1024
+            --pool-mb 0 --swap-mb 0
   sim       --mode thinkv --dataset aime --budget 1024 --scale 0.5
   calibrate --prompts 8 --layers 8
-  info"
+  info
+
+  --pool-mb bounds the device KV block pool (0 = unbounded); with a
+  bound, oversubscribed workloads queue and preempt instead of
+  overflowing. --swap-mb adds a host-side swap pool: preempted
+  sessions suspend their compressed cache to host memory and resume
+  with zero recompute steps (0 = recompute preemption only)."
     );
 }
 
@@ -49,8 +57,11 @@ fn serve_config(args: &Args) -> ServeConfig {
     let mode = CompressionMode::parse(&args.str_or("mode", "thinkv"))
         .unwrap_or_else(CompressionMode::thinkv_default);
     // --pool-mb bounds the KV block pool (0 = unbounded): oversubscribed
-    // workloads then queue/preempt instead of overflowing
+    // workloads then queue/preempt instead of overflowing. --swap-mb
+    // gives preempted sessions a host-side swap pool so they suspend
+    // and resume instead of recomputing.
     let pool_mb = args.u64_or("pool-mb", 0);
+    let swap_mb = args.u64_or("swap-mb", 0);
     ServeConfig {
         mode,
         budget: args.usize_or("budget", 1024),
@@ -60,6 +71,7 @@ fn serve_config(args: &Args) -> ServeConfig {
         temperature: args.f64_or("temperature", 0.8),
         seed: args.u64_or("seed", 42),
         pool_bytes: (pool_mb > 0).then_some(pool_mb << 20),
+        swap_bytes: (swap_mb > 0).then_some(swap_mb << 20),
         ..ServeConfig::default()
     }
 }
@@ -86,8 +98,8 @@ fn cmd_generate(args: &Args) -> i32 {
             let toks: usize = results.iter().map(|r| r.tokens.len()).sum();
             for r in &results {
                 println!(
-                    "  req {}: {} tokens, ttft {:.1} ms, tpot {:.2} ms, avg_bits {:.2}, live {}, ct_reuses {}",
-                    r.id, r.tokens.len(), r.ttft_ms, r.tpot_ms, r.avg_bits, r.live_tokens, r.ct_reuses
+                    "  req {}: {} tokens, ttft {:.1} ms, tpot {:.2} ms, avg_bits {:.2}, live {}, ct_reuses {}, recompute_preempts {}, swap_ins {}",
+                    r.id, r.tokens.len(), r.ttft_ms, r.tpot_ms, r.avg_bits, r.live_tokens, r.ct_reuses, r.preemptions, r.swap_ins
                 );
             }
             println!(

@@ -1,6 +1,9 @@
 //! Serving metrics: latency histograms, throughput counters, the
 //! per-operation time breakdown used for the Table-5 reproduction, and
-//! the scheduler/pool snapshot surfaced by the server `stats` command.
+//! the scheduler/pool snapshot surfaced by the server `stats` command —
+//! including the suspend-to-host swap counters ([`SchedSnapshot`]:
+//! swap-in/out counts, bytes moved, restore latency, recompute
+//! fallbacks) added for the preemption fast path.
 
 use std::time::Instant;
 
@@ -125,6 +128,23 @@ pub struct SchedSnapshot {
     pub running: usize,
     /// Submitted and not yet finished.
     pub inflight: u64,
+    /// Host-side swap pool capacity (0 = suspend-to-host disabled).
+    pub swap_capacity: u64,
+    /// Swap pool bytes currently holding suspended sessions.
+    pub swap_used: u64,
+    pub swap_peak: u64,
+    /// Preemptions that suspended the victim's cache to host.
+    pub swap_outs: u64,
+    /// Suspended sessions restored (resumed with zero recompute steps).
+    pub swap_ins: u64,
+    /// Bytes copied host-ward by swap-outs.
+    pub swap_bytes_out: u64,
+    /// Bytes copied device-ward by swap-ins.
+    pub swap_bytes_in: u64,
+    /// Cumulative snapshot-restore wall time (swap-in latency).
+    pub swap_restore_ns: u64,
+    /// Preemptions that fell back to recompute (snapshot did not fit).
+    pub swap_fallbacks: u64,
 }
 
 impl SchedSnapshot {
@@ -142,12 +162,22 @@ impl SchedSnapshot {
         j.set("queue_depth", Json::Num(self.queue_depth as f64));
         j.set("running", Json::Num(self.running as f64));
         j.set("inflight", Json::Num(self.inflight as f64));
+        j.set("swap_capacity", Json::Num(self.swap_capacity as f64));
+        j.set("swap_used", Json::Num(self.swap_used as f64));
+        j.set("swap_peak", Json::Num(self.swap_peak as f64));
+        j.set("swap_outs", Json::Num(self.swap_outs as f64));
+        j.set("swap_ins", Json::Num(self.swap_ins as f64));
+        j.set("swap_bytes_out", Json::Num(self.swap_bytes_out as f64));
+        j.set("swap_bytes_in", Json::Num(self.swap_bytes_in as f64));
+        j.set("swap_restore_ms", Json::Num(self.swap_restore_ns as f64 / 1e6));
+        j.set("swap_fallbacks", Json::Num(self.swap_fallbacks as f64));
         j
     }
 
-    /// One-line human summary for CLI output.
+    /// One-line human summary for CLI output (plus a swap line when
+    /// suspend-to-host is enabled).
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "pool {}/{} B used (peak {}), adm {}, preempt {}, done {}, rej {}, queued {}, running {}",
             self.pool_used,
             self.pool_capacity,
@@ -158,7 +188,22 @@ impl SchedSnapshot {
             self.rejections,
             self.queue_depth,
             self.running
-        )
+        );
+        if self.swap_capacity > 0 {
+            s.push_str(&format!(
+                "\nswap: {} out / {} in ({} B out, {} B in), restore {:.2} ms, fallbacks {}, host {}/{} B (peak {})",
+                self.swap_outs,
+                self.swap_ins,
+                self.swap_bytes_out,
+                self.swap_bytes_in,
+                self.swap_restore_ns as f64 / 1e6,
+                self.swap_fallbacks,
+                self.swap_used,
+                self.swap_capacity,
+                self.swap_peak
+            ));
+        }
+        s
     }
 }
 
@@ -211,11 +256,39 @@ mod tests {
             queue_depth: 1,
             running: 2,
             inflight: 3,
+            ..SchedSnapshot::default()
         };
         let j = s.to_json();
         assert_eq!(j.get("pool_peak").and_then(Json::as_usize), Some(60));
         assert_eq!(j.get("queue_depth").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("swap_outs").and_then(Json::as_usize), Some(0));
         assert!(s.summary().contains("preempt 1"));
+        // swap disabled (capacity 0): the summary stays a single line
+        assert!(!s.summary().contains("swap:"));
+    }
+
+    #[test]
+    fn sched_snapshot_swap_fields_surface() {
+        let s = SchedSnapshot {
+            swap_capacity: 1 << 30,
+            swap_used: 512,
+            swap_peak: 1024,
+            swap_outs: 4,
+            swap_ins: 3,
+            swap_bytes_out: 2048,
+            swap_bytes_in: 1536,
+            swap_restore_ns: 2_000_000,
+            swap_fallbacks: 1,
+            ..SchedSnapshot::default()
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("swap_outs").and_then(Json::as_usize), Some(4));
+        assert_eq!(j.get("swap_ins").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("swap_bytes_out").and_then(Json::as_usize), Some(2048));
+        assert_eq!(j.get("swap_fallbacks").and_then(Json::as_usize), Some(1));
+        let summary = s.summary();
+        assert!(summary.contains("swap: 4 out / 3 in"));
+        assert!(summary.contains("fallbacks 1"));
     }
 
     #[test]

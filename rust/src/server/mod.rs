@@ -9,8 +9,12 @@
 //! Malformed request lines never kill the connection: the server replies
 //! `{"id": ..., "error": "..."}` (id `null` when the line did not parse)
 //! and keeps reading. `stats` reports the scheduler/pool counters
-//! (admissions, preemptions, queue depth, pool used/peak/free) alongside
-//! the serving totals.
+//! (admissions, preemptions, queue depth, pool used/peak/free) and the
+//! suspend-to-host swap counters (`swap_outs`/`swap_ins`, bytes moved
+//! each way, `swap_restore_ms`, `swap_fallbacks`) alongside the serving
+//! totals. Per-request replies carry `preemptions` (recompute resets)
+//! and `swap_ins` (zero-replay resumes) so clients can tell the two
+//! preemption flavors apart.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -201,6 +205,7 @@ fn handle_conn(
         out.set("avg_bits", Json::Num(result.avg_bits));
         out.set("live_tokens", Json::Num(result.live_tokens as f64));
         out.set("preemptions", Json::Num(result.preemptions as f64));
+        out.set("swap_ins", Json::Num(result.swap_ins as f64));
         if let Some(e) = &result.error {
             out.set("error", Json::Str(e.clone()));
         }

@@ -21,6 +21,10 @@ pub struct GpuProfile {
     /// Fraction of peak HBM bandwidth attainable by gather kernels —
     /// irregular index-based accesses run far below streaming rate (§5.1).
     pub gather_efficiency: f64,
+    /// Device<->host link bandwidth (GB/s, one direction) — the rate at
+    /// which suspend-to-host swaps move KV snapshots (PCIe on A100,
+    /// NVLink-C2C on GH200).
+    pub host_link_gbps: f64,
 }
 
 impl GpuProfile {
@@ -32,6 +36,7 @@ impl GpuProfile {
             launch_us: 4.0,
             bw_efficiency: 0.6,
             gather_efficiency: 0.05,
+            host_link_gbps: 32.0, // PCIe 4.0 x16
         }
     }
 
@@ -43,6 +48,7 @@ impl GpuProfile {
             launch_us: 3.0,
             bw_efficiency: 0.6,
             gather_efficiency: 0.05,
+            host_link_gbps: 450.0, // NVLink-C2C (one direction)
         }
     }
 }
@@ -205,6 +211,28 @@ impl ServingCost {
     pub fn tpot_ms(&self, step: &StepCost) -> f64 {
         step.total_us() / 1e3
     }
+
+    /// Full suspend/resume cost (ms) of a preempted request whose live
+    /// cache snapshot is `snapshot_bytes`: one copy host-ward at
+    /// swap-out plus one copy device-ward at swap-in over the
+    /// device<->host link.
+    pub fn swap_roundtrip_ms(&self, snapshot_bytes: f64) -> f64 {
+        2.0 * snapshot_bytes / (self.gpu.host_link_gbps * 1e9) * 1e3
+    }
+
+    /// Recompute cost (ms) of a preempted request: replay
+    /// `replay_steps` decode steps (the generated CoT so far) at the
+    /// running batch's step time. This is what suspend-to-host
+    /// preemption avoids.
+    pub fn recompute_ms(
+        &self,
+        batch: usize,
+        live_kv_bytes_per_req: f64,
+        replay_steps: usize,
+    ) -> f64 {
+        let step = self.decode_step(batch.max(1), live_kv_bytes_per_req, 0.0, false, 0.0);
+        replay_steps as f64 * step.total_us() / 1e3
+    }
 }
 
 #[cfg(test)]
@@ -267,6 +295,23 @@ mod tests {
             c.throughput_tok_s(256, &s)
         };
         assert!(t256 > 50.0 * t1, "batching must amortize weights: {t1} vs {t256}");
+    }
+
+    #[test]
+    fn swap_beats_recompute_for_compressed_caches() {
+        let c = cost();
+        // ThinKV snapshot: 1024-token budget at ~3.4 bits -> a few MB
+        let thinkv_snap = c.model.kv_bytes_per_token(3.4) * 1024.0;
+        let swap = c.swap_roundtrip_ms(thinkv_snap);
+        // recompute replays the whole CoT generated so far
+        let recompute = c.recompute_ms(32, thinkv_snap, 8_192);
+        assert!(
+            swap * 100.0 < recompute,
+            "swap {swap:.2} ms must be >>100x cheaper than recompute {recompute:.2} ms"
+        );
+        // FullKV at 16K tokens swaps 100x+ more bytes than ThinKV
+        let full_snap = c.model.fullkv_bytes_per_token() * 16_384.0;
+        assert!(c.swap_roundtrip_ms(full_snap) > 50.0 * swap);
     }
 
     #[test]

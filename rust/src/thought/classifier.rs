@@ -36,6 +36,20 @@ pub struct Classifier {
     pub window_means: Vec<f64>,
 }
 
+/// The classifier's mutable decode-time state, captured for
+/// suspend-to-host preemption
+/// ([`crate::kvcache::swap::QuantSnapshot`]). The config is rebuilt from
+/// the serving config on resume; only the open window must survive.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassifierState {
+    /// Sparsity accumulated over the open refresh window.
+    pub acc: f64,
+    /// Steps accumulated in the open window.
+    pub n: usize,
+    /// Closed-window means (diagnostics trace).
+    pub window_means: Vec<f64>,
+}
+
 impl Classifier {
     pub fn new(cfg: ClassifierConfig) -> Classifier {
         Classifier { cfg, acc: 0.0, n: 0, window_means: Vec::new() }
@@ -91,6 +105,23 @@ impl Classifier {
     /// True when the window reached τ.
     pub fn due(&self) -> bool {
         self.n >= self.cfg.refresh
+    }
+
+    /// Capture the open-window state (suspend-to-host preemption).
+    pub fn snapshot_state(&self) -> ClassifierState {
+        ClassifierState {
+            acc: self.acc,
+            n: self.n,
+            window_means: self.window_means.clone(),
+        }
+    }
+
+    /// Restore an open-window state captured by
+    /// [`Classifier::snapshot_state`].
+    pub fn restore_state(&mut self, s: ClassifierState) {
+        self.acc = s.acc;
+        self.n = s.n;
+        self.window_means = s.window_means;
     }
 
     /// Close the window: return the thought label for the elapsed window

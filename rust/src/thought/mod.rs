@@ -9,6 +9,6 @@ pub mod kde;
 pub mod sparsity;
 
 pub use calibration::{calibrate, CalibrationResult};
-pub use classifier::{Classifier, ClassifierConfig};
+pub use classifier::{Classifier, ClassifierConfig, ClassifierState};
 pub use kde::Kde;
 pub use sparsity::{row_sparsity, sparsity_per_layer};

@@ -314,6 +314,84 @@ fn scheduler_completes_oversubscribed_batch_within_pool() {
     assert_eq!(stats.pool_used, 0, "all bytes returned at quiescence");
 }
 
+/// The ISSUE 2 acceptance scenario: with suspend-to-host swap enabled,
+/// every preempted session resumes from its snapshot instead of
+/// recomputing — the token streams are identical to an unpreempted run,
+/// no session ever replays a decode step, and the swap pool drains back
+/// to zero at quiescence.
+#[test]
+fn swapped_preemption_preserves_streams_with_zero_recompute() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let manifest = thinkv::model::Manifest::load(&default_artifacts_dir()).unwrap();
+    let base = ServeConfig {
+        mode: CompressionMode::thinkv_default(),
+        budget: 96,
+        max_new_tokens: 32,
+        workers: 2,
+        temperature: 0.0,
+        ..ServeConfig::default()
+    };
+    let prompts: Vec<Vec<i32>> = (0..6)
+        .map(|u| (0..64).map(|i| ((i * 7 + u) % 512) as i32).collect())
+        .collect();
+
+    // reference run: unbounded pool, no preemption possible
+    let reference = Coordinator::start(base.clone()).unwrap();
+    let ref_results = reference.run_batch(prompts.clone()).unwrap();
+    assert_eq!(reference.sched_stats().preemptions, 0, "reference must not preempt");
+    reference.shutdown();
+
+    // oversubscribed run with swap: tight pool forces preemptions, the
+    // generous host pool absorbs every snapshot
+    let probe = thinkv::coordinator::Session::new(0, vec![1, 2, 3], &base, &manifest).unwrap();
+    let per = probe.admission_bytes();
+    let cfg = ServeConfig {
+        pool_bytes: Some(per * 2 + per / 4),
+        swap_bytes: Some(256 << 20),
+        ..base.clone()
+    };
+    let coordinator = Coordinator::start(cfg).unwrap();
+    let results = coordinator.run_batch(prompts).unwrap();
+    assert_eq!(results.len(), 6);
+    for (r, rr) in results.iter().zip(&ref_results) {
+        assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+        assert_eq!(
+            r.tokens, rr.tokens,
+            "request {}: swapped run must produce the identical stream",
+            r.id
+        );
+        assert_eq!(r.preemptions, 0, "request {}: no recompute resets", r.id);
+        // zero replay: one decode step per generated token (prefill
+        // bootstraps the first), never more
+        assert!(
+            r.breakdown.steps < r.tokens.len() as u64 + 1,
+            "request {}: {} steps for {} tokens (replayed work)",
+            r.id,
+            r.breakdown.steps,
+            r.tokens.len()
+        );
+    }
+    // settle, then check the swap books balance
+    let mut stats = coordinator.sched_stats();
+    for _ in 0..200 {
+        if stats.completions == 6 && stats.pool_used == 0 && stats.swap_used == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        stats = coordinator.sched_stats();
+    }
+    assert!(stats.pool_peak <= stats.pool_capacity);
+    assert_eq!(stats.completions, 6);
+    assert_eq!(stats.swap_fallbacks, 0, "every snapshot must fit the host pool");
+    assert_eq!(stats.swap_ins, stats.swap_outs, "every swap-out resumed");
+    assert_eq!(stats.swap_bytes_in, stats.swap_bytes_out);
+    assert_eq!(stats.swap_used, 0, "swap pool drained at quiescence");
+    assert_eq!(stats.pool_used, 0);
+}
+
 #[test]
 fn coordinator_respects_budget() {
     if !artifacts_ready() {

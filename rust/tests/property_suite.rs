@@ -3,10 +3,17 @@
 //! simulator determinism, JSON fuzz, quantizer round-trip monotonicity).
 //! These run without artifacts (pure Rust state machines).
 
+use thinkv::baselines::eviction::Rkv;
 use thinkv::compress::tbe::{Tbe, TbeConfig};
 use thinkv::compress::tbq::{PrecisionAssignment, Tbq};
-use thinkv::kvcache::{BlockPool, CacheConfig, CtCache, Thought};
+use thinkv::kvcache::{
+    BlockPool, CacheConfig, CtCache, Fp32Backend, Fp32Cache, KvBackend, QuantBackend,
+    SnapshotPayload, Thought,
+};
+use thinkv::metrics::Breakdown;
+use thinkv::model::ModelConfig;
 use thinkv::quant::{dequant_groups, quant_groups, Precision, GROUP_SIZE};
+use thinkv::runtime::{DecodeOut, PrefillOut};
 use thinkv::sim::harness::{EvictKind, Method, SimConfig, ThinKvSim};
 use thinkv::sim::{run_method, DatasetProfile, Trace};
 use thinkv::thought::{calibrate, Classifier, ClassifierConfig};
@@ -390,6 +397,238 @@ fn eviction_policies_respect_contract() {
             if ev.iter().any(|e| !live.contains(e)) {
                 return Err(format!("{} invalid position", p.name()));
             }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Suspend-to-host snapshot fidelity (ISSUE 2)
+// ---------------------------------------------------------------------------
+
+fn tiny_model() -> ModelConfig {
+    ModelConfig {
+        vocab: 32,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 1,
+        d_head: 16,
+        d_ffn: 64,
+        rope_base: 10000.0,
+        buf_slots: 8,
+        prefill_len: 16,
+        obs_window: 4,
+        group_size: GROUP_SIZE,
+    }
+}
+
+/// Synthetic decode-step output (no engine): random K/V plus a positive
+/// attention row of the right span.
+fn fake_decode(rng: &mut Rng, m: &ModelConfig, span: usize) -> DecodeOut {
+    let kvd = m.n_kv_heads * m.d_head;
+    let mut new_k = vec![0f32; m.n_layers * kvd];
+    let mut new_v = vec![0f32; m.n_layers * kvd];
+    rng.fill_normal_f32(&mut new_k, 0.0, 1.0);
+    rng.fill_normal_f32(&mut new_v, 0.0, 1.0);
+    let mut probs = vec![0f32; m.n_layers * m.n_heads * span];
+    rng.fill_normal_f32(&mut probs, 0.5, 0.2);
+    for p in probs.iter_mut() {
+        *p = p.abs();
+    }
+    DecodeOut { logits: vec![0.0; m.vocab], new_k, new_v, probs }
+}
+
+fn fake_prefill(rng: &mut Rng, m: &ModelConfig) -> PrefillOut {
+    let n = m.n_layers * m.prefill_len * m.n_kv_heads * m.d_head;
+    let mut k = vec![0f32; n];
+    let mut v = vec![0f32; n];
+    rng.fill_normal_f32(&mut k, 0.0, 1.0);
+    rng.fill_normal_f32(&mut v, 0.0, 1.0);
+    PrefillOut { logits: vec![0.0; m.vocab], k, v, obs: vec![0.0; m.n_layers * m.prefill_len] }
+}
+
+/// snapshot -> restore must round-trip a QuantBackend bit-exactly under
+/// randomized decode/evict histories (codes, scales, tags, eviction
+/// masks, B_buf residue, segment + classifier + TBE state), and the
+/// restored backend must evolve identically to the original when both
+/// absorb the same continuation steps.
+#[test]
+fn quant_backend_snapshot_roundtrip_bit_exact() {
+    prop::check(10, |g| {
+        let m = tiny_model();
+        let cfg = CacheConfig {
+            layers: m.n_layers,
+            capacity: 128,
+            block_size: 8,
+            hkv: m.n_kv_heads,
+            dh: m.d_head,
+            buf_slots: m.buf_slots,
+        };
+        let span = cfg.capacity + cfg.buf_slots;
+        let budget = *g.pick(&[40usize, 48, 64]);
+        let mk = || {
+            QuantBackend::new(
+                CtCache::new(cfg.clone()),
+                Tbq::new(PrecisionAssignment::r4e4t2()),
+                Some(Tbe::new(TbeConfig::new(budget))),
+                Classifier::new(ClassifierConfig {
+                    layers: vec![0, 1],
+                    thresholds: vec![0.42, 0.7],
+                    refresh: 8,
+                }),
+                None,
+            )
+        };
+        let mut rng = Rng::new(g.usize(0, 1 << 30) as u64);
+        let mut bd = Breakdown::default();
+        let mut backend = mk();
+        backend.write_prefill(&fake_prefill(&mut rng, &m), m.prefill_len);
+        let mut pos = m.prefill_len;
+        for _ in 0..g.usize(5, 60) {
+            let out = fake_decode(&mut rng, &m, span);
+            backend.make_room(pos, &mut bd).map_err(|e| format!("make_room: {e}"))?;
+            backend.absorb(&out, pos, &m, &mut bd).map_err(|e| format!("absorb: {e}"))?;
+            pos += 1;
+        }
+
+        // bit-exact: restoring the image into a fresh backend and
+        // re-snapshotting must reproduce the identical image
+        let snap_a = backend.snapshot().map_err(|e| e.to_string())?;
+        if snap_a.device_bytes != backend.bytes_used() {
+            return Err("device_bytes must record bytes_used at capture".into());
+        }
+        if snap_a.bytes != backend.snapshot_bytes() {
+            return Err("snapshot_bytes must price the snapshot exactly".into());
+        }
+        let mut resumed = mk();
+        resumed
+            .restore(backend.snapshot().map_err(|e| e.to_string())?)
+            .map_err(|e| format!("restore: {e}"))?;
+        if resumed.bytes_used() != backend.bytes_used() {
+            return Err("restored footprint drifted".into());
+        }
+        if resumed.live_tokens() != backend.live_tokens() {
+            return Err("restored live tokens drifted".into());
+        }
+        let snap_b = resumed.snapshot().map_err(|e| e.to_string())?;
+        let (SnapshotPayload::Quant(qa), SnapshotPayload::Quant(qb)) =
+            (&snap_a.payload, &snap_b.payload)
+        else {
+            return Err("wrong payload kind".into());
+        };
+        if qa != qb {
+            return Err("snapshot image not bit-exact after restore".into());
+        }
+
+        // behavioral: identical continuation inputs -> identical states
+        // (TBE timing counters excluded: they are wall-clock)
+        for _ in 0..10 {
+            let out = fake_decode(&mut rng, &m, span);
+            for b in [&mut backend, &mut resumed] {
+                b.make_room(pos, &mut bd).map_err(|e| format!("cont make_room: {e}"))?;
+                b.absorb(&out, pos, &m, &mut bd).map_err(|e| format!("cont absorb: {e}"))?;
+            }
+            pos += 1;
+        }
+        let fin_a = backend.snapshot().map_err(|e| e.to_string())?;
+        let fin_b = resumed.snapshot().map_err(|e| e.to_string())?;
+        let (SnapshotPayload::Quant(fa), SnapshotPayload::Quant(fb)) =
+            (&fin_a.payload, &fin_b.payload)
+        else {
+            return Err("wrong payload kind".into());
+        };
+        let mut fa = (**fa).clone();
+        let mut fb = (**fb).clone();
+        if let Some(s) = fa.tbe_stats.as_mut() {
+            s.nanos = 0;
+        }
+        if let Some(s) = fb.tbe_stats.as_mut() {
+            s.nanos = 0;
+        }
+        if fa != fb {
+            return Err("original and resumed backends diverged".into());
+        }
+        Ok(())
+    });
+}
+
+/// Same fidelity property for the f32 backend: the live rows, buffer
+/// residue, and the eviction policy's accumulated statistics must all
+/// survive the round trip (identical eviction decisions afterwards).
+#[test]
+fn fp32_backend_snapshot_roundtrip_bit_exact() {
+    prop::check(10, |g| {
+        let m = tiny_model();
+        let kvd = m.n_kv_heads * m.d_head;
+        let capacity = 64;
+        let span = capacity + m.buf_slots;
+        let budget = *g.pick(&[24usize, 32, 48]);
+        let mk = || {
+            Fp32Backend::new(
+                Fp32Cache::new(m.n_layers, capacity, kvd, m.buf_slots),
+                Box::new(Rkv::new()),
+                budget,
+                true, // gather compaction, R-KV style
+                capacity,
+            )
+        };
+        let mut rng = Rng::new(g.usize(0, 1 << 30) as u64);
+        let mut bd = Breakdown::default();
+        let mut backend = mk();
+        backend.write_prefill(&fake_prefill(&mut rng, &m), m.prefill_len);
+        let mut pos = m.prefill_len;
+        for _ in 0..g.usize(5, 60) {
+            let out = fake_decode(&mut rng, &m, span);
+            backend.make_room(pos, &mut bd).map_err(|e| format!("make_room: {e}"))?;
+            backend.absorb(&out, pos, &m, &mut bd).map_err(|e| format!("absorb: {e}"))?;
+            pos += 1;
+        }
+
+        let snap_a = backend.snapshot().map_err(|e| e.to_string())?;
+        if snap_a.bytes != backend.snapshot_bytes() {
+            return Err("snapshot_bytes must price the snapshot exactly".into());
+        }
+        let mut resumed = mk();
+        resumed
+            .restore(backend.snapshot().map_err(|e| e.to_string())?)
+            .map_err(|e| format!("restore: {e}"))?;
+        if resumed.bytes_used() != backend.bytes_used() {
+            return Err("restored footprint drifted".into());
+        }
+        let snap_b = resumed.snapshot().map_err(|e| e.to_string())?;
+        let (SnapshotPayload::Fp32(fa), SnapshotPayload::Fp32(fb)) =
+            (&snap_a.payload, &snap_b.payload)
+        else {
+            return Err("wrong payload kind".into());
+        };
+        if fa.cache != fb.cache {
+            return Err("fp32 cache image not bit-exact after restore".into());
+        }
+
+        // behavioral: the cloned policy must make identical eviction
+        // decisions (gather timing counters excluded: wall-clock)
+        for _ in 0..16 {
+            let out = fake_decode(&mut rng, &m, span);
+            for b in [&mut backend, &mut resumed] {
+                b.make_room(pos, &mut bd).map_err(|e| format!("cont make_room: {e}"))?;
+                b.absorb(&out, pos, &m, &mut bd).map_err(|e| format!("cont absorb: {e}"))?;
+            }
+            pos += 1;
+        }
+        let fin_a = backend.snapshot().map_err(|e| e.to_string())?;
+        let fin_b = resumed.snapshot().map_err(|e| e.to_string())?;
+        let (SnapshotPayload::Fp32(fa), SnapshotPayload::Fp32(fb)) =
+            (&fin_a.payload, &fin_b.payload)
+        else {
+            return Err("wrong payload kind".into());
+        };
+        let mut ca = fa.cache.clone();
+        let mut cb = fb.cache.clone();
+        ca.gather_nanos = 0;
+        cb.gather_nanos = 0;
+        if ca != cb {
+            return Err("original and resumed fp32 backends diverged".into());
         }
         Ok(())
     });
