@@ -1,16 +1,18 @@
 # ThinKV build/verify entry points.
 #
-#   make artifacts  — AOT-lower the JAX/Pallas model to HLO text (once)
-#   make tier1      — the repo's tier-1 verification command
-#   make doc        — rustdoc with warnings denied (the docs gate)
-#   make check      — fmt + clippy + doc + tier1 (what CI runs)
+#   make artifacts   — AOT-lower the JAX/Pallas model to HLO text (once)
+#   make tier1       — the repo's tier-1 verification command
+#   make doc         — rustdoc with warnings denied (the docs gate)
+#   make doc-links   — README/ARCHITECTURE cross-references must resolve
+#   make bench-smoke — one-iteration bench_scheduler run (bench rot gate)
+#   make check       — fmt + clippy + doc + doc-links + tier1 (what CI runs)
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: check fmt clippy doc tier1 test artifacts clean
+.PHONY: check fmt clippy doc doc-links tier1 test bench-smoke artifacts clean
 
-check: fmt clippy doc tier1
+check: fmt clippy doc doc-links tier1
 
 fmt:
 	$(CARGO) fmt --check
@@ -25,10 +27,22 @@ clippy:
 doc:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
+# Doc-link check: relative markdown links in the top-level docs must
+# resolve (README <-> docs/ARCHITECTURE.md cross-references).
+doc-links:
+	sh scripts/check_doc_links.sh
+
 tier1:
 	$(CARGO) build --release && $(CARGO) test -q
 
 test: tier1
+
+# Bench rot gate: one pass of the scheduler bench (cost-model parts;
+# the real-coordinator part stays off so no artifacts are needed).
+# Asserts inside the bench double as acceptance checks (throughput must
+# rise with decode batch size, fused step must beat N single steps).
+bench-smoke:
+	THINKV_BENCH_REAL=0 $(CARGO) bench --bench bench_scheduler
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out ../artifacts

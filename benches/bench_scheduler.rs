@@ -1,9 +1,11 @@
 //! Scheduler saturation bench: max admitted batch per GPU (the Tables
 //! 2/3 "Batch" column discipline), throughput under oversubscribed
-//! offered load, and the swap-vs-recompute preemption sweep
-//! (suspend-to-host cost vs CoT replay cost), using the analytic cost
-//! model — plus a real coordinator oversubscription mini-run comparing
-//! both preemption policies when artifacts exist.
+//! offered load, the swap-vs-recompute preemption sweep
+//! (suspend-to-host cost vs CoT replay cost), and the cross-session
+//! batched-decode launch-amortization sweep (one fused engine call per
+//! step vs per-session launches), using the analytic cost model — plus
+//! a real coordinator oversubscription mini-run comparing both
+//! preemption policies when artifacts exist.
 
 use thinkv::bench::{write_results, Table};
 use thinkv::kvcache::BlockPool;
@@ -96,12 +98,52 @@ fn main() {
     }
     t3.print();
 
-    // Part 4: real coordinator oversubscription mini-run (CPU PJRT),
+    // Part 4: cross-session batched decode — launch amortization. The
+    // fused step pays the kernel-launch overhead once per batch; the
+    // per-session regime (pre-batching workers) pays it once per
+    // session per step. Byte traffic is identical, so the gap is pure
+    // launch amortization and throughput must rise with batch size.
+    let mut t4 = Table::new(
+        "Batched decode: fused step vs per-session launches (A100, ThinKV b=1024)",
+        &["batch", "fused_us", "per_session_us", "launch_save_us", "fused_tok_s", "per_tok_s"],
+    );
+    let kv_thinkv = model.kv_bytes_per_token(3.4) * 1024.0;
+    let single_us = cost.decode_step(1, kv_thinkv, 0.0, false, 0.0).total_us();
+    let mut last_tput = 0.0;
+    for batch in [1usize, 2, 4, 8, 16, 32, 64] {
+        let fused = cost.decode_step(batch, kv_thinkv, 0.0, false, 0.0);
+        let per = cost.decode_step_per_session(batch, kv_thinkv, 0.0, false, 0.0);
+        let fused_tput = cost.throughput_tok_s(batch, &fused);
+        let per_tput = cost.throughput_tok_s(batch, &per);
+        // acceptance: throughput grows with decode batch size, and one
+        // fused step beats N sequential single-session steps from
+        // batch 4 on
+        assert!(fused_tput > last_tput, "throughput must rise with batch {batch}");
+        if batch >= 4 {
+            assert!(
+                fused.total_us() < batch as f64 * single_us,
+                "fused step must beat {batch} single steps"
+            );
+        }
+        last_tput = fused_tput;
+        t4.row(&[
+            format!("{batch}"),
+            format!("{:.1}", fused.total_us()),
+            format!("{:.1}", per.total_us()),
+            format!("{:.1}", per.launch_us - fused.launch_us),
+            format!("{fused_tput:.1}"),
+            format!("{per_tput:.1}"),
+        ]);
+    }
+    t4.print();
+
+    // Part 5: real coordinator oversubscription mini-run (CPU PJRT),
     // recompute preemption vs suspend-to-host swap
     let artifacts = format!("{}/model_config.json", thinkv::model::default_artifacts_dir());
     let mut j = t.to_json();
     j.set("saturation", t2.to_json());
     j.set("swap_vs_recompute", t3.to_json());
+    j.set("launch_amortization", t4.to_json());
     if std::path::Path::new(&artifacts).exists()
         && std::env::var("THINKV_BENCH_REAL").map(|v| v == "1").unwrap_or(true)
     {
@@ -118,11 +160,11 @@ fn main() {
         };
         let probe = Session::new(0, vec![1, 2, 3], &base, &manifest).unwrap();
         let per = probe.admission_bytes();
-        let mut t4 = Table::new(
+        let mut t5 = Table::new(
             "Real coordinator oversubscription (CPU PJRT, pool = 2.5 admissions): swap vs recompute",
             &[
                 "requests", "policy", "completed", "wall_s", "preempts", "swap_ins",
-                "replayed_steps", "peak_B",
+                "replayed_steps", "peak_B", "fused_steps", "avg_batch",
             ],
         );
         for requests in [2usize, 8] {
@@ -149,7 +191,10 @@ fn main() {
                 if swap.is_some() {
                     assert_eq!(replayed, 0, "swapped sessions must not replay");
                 }
-                t4.row(&[
+                // every decode step goes through the fused entry point,
+                // even when the batch happens to hold one session
+                assert!(s.fused_steps > 0, "no fused decode steps recorded");
+                t5.row(&[
                     format!("{requests}"),
                     if swap.is_some() { "swap" } else { "recompute" }.to_string(),
                     format!("{}", rs.iter().filter(|r| r.error.is_none()).count()),
@@ -158,12 +203,14 @@ fn main() {
                     format!("{}", s.swap_ins),
                     format!("{replayed}"),
                     format!("{}", s.pool_peak),
+                    format!("{}", s.fused_steps),
+                    format!("{:.2}", s.fused_sessions as f64 / s.fused_steps.max(1) as f64),
                 ]);
             }
         }
-        t4.print();
-        j.set("real_oversubscription", t4.to_json());
+        t5.print();
+        j.set("real_oversubscription", t5.to_json());
     }
     write_results("scheduler_saturation", j);
-    println!("\nExpected shape: FullKV admits ~13 requests on A100 while ThinKV admits\nhundreds; past saturation the scheduler queues instead of overflowing, and\nthe real run completes every request with pool.peak() <= capacity. In the\nswap-vs-recompute sweep ThinKV's suspend-to-host round trip is orders of\nmagnitude cheaper than replaying the CoT (and the real swap run finishes\nwith zero replayed steps), while FullKV must move GBs per preemption.");
+    println!("\nExpected shape: FullKV admits ~13 requests on A100 while ThinKV admits\nhundreds; past saturation the scheduler queues instead of overflowing, and\nthe real run completes every request with pool.peak() <= capacity. In the\nswap-vs-recompute sweep ThinKV's suspend-to-host round trip is orders of\nmagnitude cheaper than replaying the CoT (and the real swap run finishes\nwith zero replayed steps), while FullKV must move GBs per preemption. The\nlaunch-amortization sweep shows fused-step throughput rising with decode\nbatch size: one fused call per step beats N per-session launches (the\nTables 2/3 large-batch regime).");
 }

@@ -94,6 +94,11 @@ pub struct ServeConfig {
     /// Steps each worker advances a session before re-queueing
     /// (continuous-batching chunk).
     pub chunk: usize,
+    /// Max sessions per cross-session decode batch: a worker pulls up
+    /// to this many compatible runnable sessions (same cache family +
+    /// compiled capacity) and advances them with one fused engine call
+    /// per step. 1 = per-session decode (pre-batching behavior).
+    pub max_decode_batch: usize,
     /// Sampling temperature (0 = greedy).
     pub temperature: f64,
     pub seed: u64,
@@ -120,6 +125,7 @@ impl Default for ServeConfig {
             retention: vec![64, 32, 16, 8, 4],
             workers: 2,
             chunk: 16,
+            max_decode_batch: 8,
             temperature: 0.8,
             seed: 42,
             pool_bytes: None,

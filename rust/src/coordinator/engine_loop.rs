@@ -1,7 +1,13 @@
 //! The continuous-batching engine loop: N worker threads each owning a
-//! PJRT engine pull admitted sessions from the memory-aware
-//! [`Scheduler`], advance them by a chunk of decode steps, and hand them
-//! back (yield / preempt-retry / complete).
+//! PJRT engine pull **decode batches** of compatible sessions from the
+//! memory-aware [`Scheduler`] ([`Scheduler::next_batch`]), advance the
+//! whole batch by a chunk of steps — one fused
+//! [`DecodeEngine::decode_batch`] call per step instead of one engine
+//! call per session — and hand every member back (yield / preempt-retry
+//! / complete). Batching is stream-invariant: a batched run produces
+//! token streams identical to sequential execution (each member keeps
+//! its own cache, sampler, and position; the fused call only amortizes
+//! launches).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -11,11 +17,11 @@ use anyhow::Result;
 
 use crate::kvcache::{BlockPool, SwapPool};
 use crate::metrics::{Breakdown, SchedSnapshot};
-use crate::runtime::Engine;
+use crate::runtime::{BatchDecodeReq, DecodeEngine, Engine};
 
 use super::config::ServeConfig;
-use super::scheduler::Scheduler;
-use super::session::{Session, StepOutcome};
+use super::scheduler::{Entry, Scheduler};
+use super::session::{Session, StepOutcome, StepPrep};
 
 /// Default pool capacity when `ServeConfig::pool_bytes` is unset —
 /// effectively unbounded, so memory accounting stays on without ever
@@ -129,6 +135,7 @@ impl Coordinator {
         for w in 0..cfg.workers.max(1) {
             let scheduler = Arc::clone(&scheduler);
             let chunk = cfg.chunk.max(1);
+            let max_batch = cfg.max_decode_batch.max(1);
             let dir = artifacts_dir.to_string();
             let ready = ready_tx.clone();
             workers.push(
@@ -145,7 +152,7 @@ impl Coordinator {
                                 return;
                             }
                         };
-                        worker_loop(&scheduler, &engine, chunk);
+                        worker_loop(&scheduler, &engine, chunk, max_batch);
                     })
                     .expect("spawn decode worker"),
             );
@@ -238,45 +245,182 @@ enum ChunkEnd {
     Failed(String),
 }
 
-fn worker_loop(scheduler: &Scheduler, engine: &Engine, chunk: usize) {
-    while let Some(mut item) = scheduler.next() {
-        // advance by up to `chunk` steps (continuous-batching quantum)
-        let mut end = ChunkEnd::Yield;
-        for _ in 0..chunk {
-            match item.session.step(engine) {
-                Ok(StepOutcome::Running) => {}
-                Ok(StepOutcome::Finished) => {
-                    end = ChunkEnd::Finished;
-                    break;
+/// Hand one session back to the scheduler / submitter according to how
+/// its chunk ended.
+fn dispatch(scheduler: &Scheduler, mut item: Entry, end: ChunkEnd) {
+    match end {
+        ChunkEnd::Yield => scheduler.yield_back(item),
+        ChunkEnd::NeedMemory => scheduler.cannot_grow(item),
+        ChunkEnd::Finished => {
+            let result = RequestResult::from_session(&item.session);
+            let _ = item.done_tx.send(result);
+            scheduler.complete(&mut item.session);
+        }
+        ChunkEnd::Failed(why) => {
+            // the submitter must be able to tell a failed decode from
+            // a short answer, and stats must not count it as success
+            let mut result = RequestResult::from_session(&item.session);
+            result.error = Some(why);
+            let _ = item.done_tx.send(result);
+            scheduler.complete_failed(&mut item.session);
+        }
+    }
+}
+
+/// Advance a decode batch by up to `chunk` steps, one fused
+/// [`DecodeEngine::decode_batch`] call per step, then hand every member
+/// back to the scheduler (yield / preempt-retry / complete / fail).
+///
+/// Each step runs in three phases:
+///
+/// 1. **prepare** — every member runs [`Session::begin_step`]
+///    (swap-in restore, prefill, growth reservation, ring-buffer
+///    flush); members that finish, fail, or cannot grow leave the batch
+///    immediately so their bytes / results are released mid-chunk.
+/// 2. **fused decode** — one engine call covers every prepared member
+///    (`note_fused_step` records the batch size for the stats
+///    histogram).
+/// 3. **absorb** — every member runs [`Session::finish_step`] on its
+///    own output (classification, append, eviction, sampling).
+///
+/// This is the whole worker body behind [`Coordinator`]; it is public
+/// so artifact-free harnesses (e.g. the batched-vs-sequential stream
+/// invariance property test) can drive the exact production code path
+/// with a deterministic [`DecodeEngine`].
+pub fn advance_batch(
+    scheduler: &Scheduler,
+    engine: &dyn DecodeEngine,
+    chunk: usize,
+    batch: Vec<Entry>,
+) {
+    let mut members = batch;
+    for _ in 0..chunk.max(1) {
+        if members.is_empty() {
+            return;
+        }
+        // phase 1: prepare every member for the fused call
+        let mut preps: Vec<Option<(i32, i32, i32)>> = Vec::with_capacity(members.len());
+        let mut exits: Vec<(usize, ChunkEnd)> = Vec::new();
+        for (i, m) in members.iter_mut().enumerate() {
+            match m.session.begin_step(engine) {
+                Ok(StepPrep::Ready { token, pos, buf_idx }) => {
+                    preps.push(Some((token, pos, buf_idx)));
                 }
-                Ok(StepOutcome::NeedMemory) => {
-                    end = ChunkEnd::NeedMemory;
-                    break;
+                Ok(StepPrep::Finished) => {
+                    preps.push(None);
+                    exits.push((i, ChunkEnd::Finished));
+                }
+                Ok(StepPrep::NeedMemory) => {
+                    preps.push(None);
+                    exits.push((i, ChunkEnd::NeedMemory));
                 }
                 Err(e) => {
-                    eprintln!("session {} failed: {e:#}", item.session.id);
-                    item.session.finished_at = Some(std::time::Instant::now());
-                    end = ChunkEnd::Failed(format!("{e:#}"));
-                    break;
+                    eprintln!("session {} failed: {e:#}", m.session.id);
+                    m.session.finished_at = Some(std::time::Instant::now());
+                    preps.push(None);
+                    exits.push((i, ChunkEnd::Failed(format!("{e:#}"))));
                 }
             }
         }
-        match end {
-            ChunkEnd::Yield => scheduler.yield_back(item),
-            ChunkEnd::NeedMemory => scheduler.cannot_grow(item),
-            ChunkEnd::Finished => {
-                let result = RequestResult::from_session(&item.session);
-                let _ = item.done_tx.send(result);
-                scheduler.complete(&mut item.session);
+        // phase 2: one fused engine call over every prepared member
+        let fused = {
+            let reqs: Vec<BatchDecodeReq> = members
+                .iter()
+                .zip(&preps)
+                .filter_map(|(m, p)| {
+                    p.map(|(token, pos, buf_idx)| BatchDecodeReq {
+                        token,
+                        pos,
+                        buf_idx,
+                        view: m.session.cache_view(),
+                    })
+                })
+                .collect();
+            if reqs.is_empty() {
+                None
+            } else {
+                let n = reqs.len();
+                let t0 = std::time::Instant::now();
+                let outs = engine.decode_batch(&reqs);
+                let ns = t0.elapsed().as_nanos() as u64;
+                Some((outs, ns / n as u64, n))
             }
-            ChunkEnd::Failed(why) => {
-                // the submitter must be able to tell a failed decode from
-                // a short answer, and stats must not count it as success
-                let mut result = RequestResult::from_session(&item.session);
-                result.error = Some(why);
-                let _ = item.done_tx.send(result);
-                scheduler.complete_failed(&mut item.session);
+        };
+        // phase 3: absorb per member
+        match fused {
+            None => {}
+            Some((result, per_ns, n)) => {
+                // an engine that returns the wrong number of outputs is
+                // as unattributable as one that errors — same path
+                let result = result.and_then(|outs| {
+                    if outs.len() == n {
+                        Ok(outs)
+                    } else {
+                        Err(anyhow::anyhow!(
+                            "fused decode returned {} outputs for {} requests",
+                            outs.len(),
+                            n
+                        ))
+                    }
+                });
+                match result {
+                    Ok(outs) => {
+                        scheduler.note_fused_step(n);
+                        let mut oi = 0;
+                        for (i, (m, p)) in members.iter_mut().zip(&preps).enumerate() {
+                            if p.is_none() {
+                                continue;
+                            }
+                            let out = &outs[oi];
+                            oi += 1;
+                            m.session.breakdown.decode_exec_ns += per_ns;
+                            match m.session.finish_step(out, engine) {
+                                Ok(StepOutcome::Running) => {}
+                                Ok(StepOutcome::Finished) => exits.push((i, ChunkEnd::Finished)),
+                                Ok(StepOutcome::NeedMemory) => {
+                                    exits.push((i, ChunkEnd::NeedMemory));
+                                }
+                                Err(e) => {
+                                    eprintln!("session {} failed: {e:#}", m.session.id);
+                                    m.session.finished_at = Some(std::time::Instant::now());
+                                    exits.push((i, ChunkEnd::Failed(format!("{e:#}"))));
+                                }
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        // a failed fused call fails every member that was
+                        // in it: per-member attribution is impossible once
+                        // the engine errors, and silent retry would hide
+                        // real breakage
+                        eprintln!("fused decode step failed: {e:#}");
+                        let why = format!("{e:#}");
+                        for (i, (m, p)) in members.iter_mut().zip(&preps).enumerate() {
+                            if p.is_some() {
+                                m.session.finished_at = Some(std::time::Instant::now());
+                                exits.push((i, ChunkEnd::Failed(why.clone())));
+                            }
+                        }
+                    }
+                }
             }
         }
+        // retire exited members (highest index first so removals are
+        // position-stable), releasing bytes/results mid-chunk
+        exits.sort_by(|a, b| b.0.cmp(&a.0));
+        for (i, end) in exits {
+            let item = members.remove(i);
+            dispatch(scheduler, item, end);
+        }
+    }
+    // chunk exhausted: everyone still running yields
+    for item in members {
+        dispatch(scheduler, item, ChunkEnd::Yield);
+    }
+}
+
+fn worker_loop(scheduler: &Scheduler, engine: &Engine, chunk: usize, max_batch: usize) {
+    while let Some(batch) = scheduler.next_batch(max_batch) {
+        advance_batch(scheduler, engine, chunk, batch);
     }
 }

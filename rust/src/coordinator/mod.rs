@@ -7,9 +7,13 @@
 //! [`crate::kvcache::BlockPool`] and preempt-youngest reclamation when a
 //! running request cannot grow. N worker threads each own a PJRT
 //! [`crate::runtime::Engine`] (the handles are not Sync) and repeatedly
-//! pull an admitted [`session::Session`], advance it by a chunk of
-//! decode steps over the unified [`crate::kvcache::KvBackend`] path, and
-//! hand it back — continuous batching at chunk granularity. Completed
+//! pull a **decode batch** of compatible admitted sessions
+//! ([`scheduler::Scheduler::next_batch`], grouped by
+//! [`crate::kvcache::BatchKey`]), advance the whole batch by a chunk of
+//! decode steps — one fused
+//! [`crate::runtime::DecodeEngine::decode_batch`] call per step — over
+//! the unified [`crate::kvcache::KvBackend`] path, and hand every
+//! member back — continuous batching at chunk granularity. Completed
 //! sessions are delivered to the submitter through a channel. Python is
 //! never involved: the engines execute the AOT HLO artifacts only.
 //!
@@ -85,7 +89,7 @@ pub mod scheduler;
 pub mod session;
 
 pub use config::{CompressionMode, ServeConfig};
-pub use engine_loop::{Coordinator, RequestHandle, RequestResult};
+pub use engine_loop::{advance_batch, Coordinator, RequestHandle, RequestResult};
 pub use sampler::Sampler;
-pub use scheduler::Scheduler;
-pub use session::{Session, StepOutcome};
+pub use scheduler::{Entry, Scheduler};
+pub use session::{Session, StepOutcome, StepPrep};

@@ -33,7 +33,21 @@
 //! snapshot does not fit the swap pool (or swapping is disabled) does
 //! the session fall back to the recompute reset. Swapped sessions are
 //! re-admitted with the *exact* device bytes recorded at suspend time,
-//! so the pool stays byte-accurate across the round trip.
+//! so the pool stays byte-accurate across the round trip. The snapshot
+//! copy itself runs **outside** the scheduler mutex
+//! ([`Scheduler::cannot_grow`] / [`Scheduler::yield_back`] detach the
+//! victim under the lock, then copy): a large fp32 swap-out must not
+//! stall every worker for the duration of the memcpy.
+//!
+//! **Batch formation (cross-session batched decode):** workers pull a
+//! *decode batch* via [`Scheduler::next_batch`] — the front runnable
+//! session plus up to `max - 1` more whose
+//! [`BatchKey`](crate::kvcache::BatchKey) matches (same compiled decode
+//! executable), each extra member joining only after its worst-case
+//! per-step growth is pre-reserved in the pool (the *growth bond*), so
+//! one fused step can never over-commit the pool mid-batch. The bond is
+//! credited to the member's reservation and trues up after its next
+//! step.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -69,6 +83,13 @@ struct Inner {
     /// the starving session instead of bouncing its victim straight back
     /// in (which would ping-pong preemptions forever).
     starving: BTreeSet<u64>,
+    /// Preemptions in flight: victims already detached from `admitted`
+    /// whose snapshot copy is still running outside the lock, so their
+    /// pool bytes have not come back yet. While non-zero, a session
+    /// that finds itself "alone" in the pool parks instead of failing —
+    /// the in-flight victim's bytes (and its unstall) are guaranteed to
+    /// arrive.
+    pending_preempts: usize,
     next_admit_seq: u64,
 }
 
@@ -91,6 +112,9 @@ impl Inner {
     }
 }
 
+/// Decode-batch sizes above this all land in the last histogram bucket.
+pub(crate) const BATCH_HIST_BUCKETS: usize = 16;
+
 pub struct Scheduler {
     pool: Arc<BlockPool>,
     /// Host-side pool for suspend-to-host preemption; `None` = every
@@ -104,6 +128,13 @@ pub struct Scheduler {
     preemptions: AtomicU64,
     completions: AtomicU64,
     failures: AtomicU64,
+    /// Fused decode steps executed (one engine call per batch per step).
+    fused_steps: AtomicU64,
+    /// Session-steps advanced by fused calls (sum of batch sizes).
+    fused_sessions: AtomicU64,
+    /// Histogram of decode-batch sizes: bucket `i` counts fused steps
+    /// whose batch held `i + 1` sessions (last bucket absorbs larger).
+    batch_hist: [AtomicU64; BATCH_HIST_BUCKETS],
 }
 
 impl Scheduler {
@@ -125,6 +156,7 @@ impl Scheduler {
                 held: BTreeSet::new(),
                 preempt_marks: BTreeSet::new(),
                 starving: BTreeSet::new(),
+                pending_preempts: 0,
                 next_admit_seq: 0,
             }),
             cv: Condvar::new(),
@@ -134,6 +166,9 @@ impl Scheduler {
             preemptions: AtomicU64::new(0),
             completions: AtomicU64::new(0),
             failures: AtomicU64::new(0),
+            fused_steps: AtomicU64::new(0),
+            fused_sessions: AtomicU64::new(0),
+            batch_hist: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
 
@@ -181,23 +216,84 @@ impl Scheduler {
     }
 
     /// Blocking pull of the next runnable session; `None` on shutdown.
+    /// Equivalent to a singleton [`Scheduler::next_batch`] pull (no
+    /// growth bond is taken for the front session).
     pub fn next(&self) -> Option<Entry> {
+        self.next_batch(1).map(|mut batch| batch.pop().expect("batch is non-empty"))
+    }
+
+    /// Blocking pull of a **decode batch**: the front runnable session
+    /// plus up to `max - 1` more compatible ones
+    /// ([`Session::compat_key`] — same compiled decode executable), so
+    /// a worker can advance them all with one fused
+    /// [`crate::runtime::DecodeEngine::decode_batch`] call per step.
+    /// `None` on shutdown.
+    ///
+    /// Every *extra* member joins only after its worst-case per-step
+    /// growth ([`Session::step_headroom_bytes`]) has been reserved in
+    /// the pool — the batch **growth bond**. The bond is credited to
+    /// the member's reservation (and trues up after its next step), so
+    /// batch formation never over-commits the pool: a fused step's
+    /// growth is fully paid for before the engine call. When a bond
+    /// cannot be reserved the batch simply stops growing; the leftover
+    /// sessions stay runnable for other workers.
+    ///
+    /// Preempt-marked sessions are never pulled *into* a batch as extra
+    /// members — they are about to vacate their bytes.
+    pub fn next_batch(&self, max: usize) -> Option<Vec<Entry>> {
+        let max = max.max(1);
         let mut inner = self.inner.lock().unwrap();
         loop {
             if self.stop.load(Ordering::SeqCst) {
                 return None;
             }
             self.try_admit(&mut inner);
-            if let Some(entry) = inner.runnable.pop_front() {
-                inner.held.insert(entry.session.id);
-                return Some(entry);
+            if let Some(first) = inner.runnable.pop_front() {
+                inner.held.insert(first.session.id);
+                let key = first.session.compat_key();
+                let mut batch = vec![first];
+                // single forward scan (the lock is held): skip
+                // incompatible / preempt-marked sessions, pull each
+                // compatible one as soon as its bond is reserved. While
+                // any session is starving, freed bytes must reach it —
+                // don't capture them as growth bonds (same gate as
+                // try_admit), so the batch stays a singleton.
+                let mut i = 0;
+                while batch.len() < max && i < inner.runnable.len() && inner.starving.is_empty() {
+                    let s = &inner.runnable[i].session;
+                    if s.compat_key() != key || inner.preempt_marks.contains(&s.id) {
+                        i += 1;
+                        continue;
+                    }
+                    let bond = s.step_headroom_bytes();
+                    if !self.pool.reserve(bond) {
+                        break;
+                    }
+                    let mut entry = inner.runnable.remove(i).expect("index valid");
+                    entry.session.add_growth_bond(bond);
+                    inner.held.insert(entry.session.id);
+                    batch.push(entry);
+                }
+                return Some(batch);
             }
             inner = self.cv.wait(inner).unwrap();
         }
     }
 
+    /// Record one fused decode step that advanced `batch` sessions.
+    pub fn note_fused_step(&self, batch: usize) {
+        if batch == 0 {
+            return;
+        }
+        self.fused_steps.fetch_add(1, Ordering::SeqCst);
+        self.fused_sessions.fetch_add(batch as u64, Ordering::SeqCst);
+        let bucket = batch.min(BATCH_HIST_BUCKETS) - 1;
+        self.batch_hist[bucket].fetch_add(1, Ordering::SeqCst);
+    }
+
     /// Return a still-running session after a chunk of steps. Honors any
-    /// pending preemption mark set while the worker held it.
+    /// pending preemption mark set while the worker held it (the
+    /// snapshot copy runs after the scheduler lock is released).
     pub fn yield_back(&self, entry: Entry) {
         let mut inner = self.inner.lock().unwrap();
         inner.held.remove(&entry.session.id);
@@ -205,10 +301,13 @@ impl Scheduler {
         // still-starved step re-enters through cannot_grow instead)
         inner.starving.remove(&entry.session.id);
         if inner.preempt_marks.remove(&entry.session.id) {
-            self.do_preempt(&mut inner, entry);
-        } else {
-            inner.runnable.push_back(entry);
+            inner.forget(entry.session.id);
+            inner.pending_preempts += 1;
+            drop(inner);
+            self.preempt_unlocked(entry);
+            return;
         }
+        inner.runnable.push_back(entry);
         self.try_admit(&mut inner);
         self.cv.notify_all();
     }
@@ -227,43 +326,63 @@ impl Scheduler {
             .max_by_key(|(_, seq)| **seq)
             .map(|(id, seq)| (*id, *seq));
         match youngest {
-            None => {
+            None if inner.pending_preempts == 0 => {
                 // Alone in the pool and still out of memory: this single
                 // request's KV demand exceeds the pool.
                 self.fail(&mut inner, entry, "KV demand exceeds the block pool capacity");
+                self.try_admit(&mut inner);
+                self.cv.notify_all();
+            }
+            None => {
+                // Looks alone, but a detached victim's snapshot copy is
+                // still running outside the lock and its pool bytes are
+                // about to come back: park instead of failing (the
+                // copy's requeue unstalls us).
+                inner.starving.insert(entry.session.id);
+                inner.stalled.push_back(entry);
             }
             Some((vid, vseq)) if vseq > my_seq => {
                 // Victim is younger than the caller: preempt it now if it
                 // sits in the runnable queue, otherwise mark it so its
-                // worker vacates it at the next chunk boundary.
+                // worker vacates it at the next chunk boundary. Either
+                // way the caller parks in `stalled` until the victim's
+                // bytes come back (the unstall wakes it first).
                 inner.starving.insert(entry.session.id);
+                inner.stalled.push_back(entry);
                 if let Some(idx) = inner.runnable.iter().position(|e| e.session.id == vid) {
                     let victim = inner.runnable.remove(idx).expect("index valid");
-                    self.do_preempt(&mut inner, victim);
-                    // bytes are back already: retry immediately
-                    inner.runnable.push_back(entry);
+                    inner.forget(vid);
+                    inner.pending_preempts += 1;
+                    drop(inner);
+                    self.preempt_unlocked(victim);
                 } else {
-                    // victim is held by a worker; park until its bytes
-                    // come back instead of spinning through next()
                     inner.preempt_marks.insert(vid);
-                    inner.stalled.push_back(entry);
+                    self.cv.notify_all();
                 }
             }
             _ => {
                 // The caller is the youngest: vacate itself.
-                self.do_preempt(&mut inner, entry);
+                inner.forget(entry.session.id);
+                inner.pending_preempts += 1;
+                drop(inner);
+                self.preempt_unlocked(entry);
             }
         }
-        self.try_admit(&mut inner);
-        self.cv.notify_all();
     }
 
-    /// Vacate an admitted session and requeue it (front of the waiting
-    /// line): suspend-to-host when the swap pool is present and the
-    /// snapshot fits, recompute reset otherwise. Freed bytes wake any
-    /// stalled (starving) sessions first.
-    fn do_preempt(&self, inner: &mut Inner, mut entry: Entry) {
-        inner.forget(entry.session.id);
+    /// Vacate a session already detached from the admitted set and
+    /// requeue it (front of the waiting line): suspend-to-host when the
+    /// swap pool is present and the snapshot fits, recompute reset
+    /// otherwise. Freed bytes wake any stalled (starving) sessions
+    /// first.
+    ///
+    /// Runs **without** the scheduler mutex: the snapshot is a
+    /// potentially large copy (an fp32 victim moves its whole live
+    /// cache), and holding the lock across it would stall every worker
+    /// for the duration. The caller owns `entry` exclusively — it is in
+    /// no queue and not in `admitted` — so the only shared state the
+    /// copy touches is the byte-atomic pools.
+    fn preempt_unlocked(&self, mut entry: Entry) {
         let swapped = match &self.swap {
             Some(sp) => entry.session.suspend_to(sp),
             None => false,
@@ -272,8 +391,12 @@ impl Scheduler {
             entry.session.reset_for_preemption();
         }
         self.preemptions.fetch_add(1, Ordering::SeqCst);
+        let mut inner = self.inner.lock().unwrap();
+        inner.pending_preempts -= 1;
         inner.waiting.push_front(entry);
         inner.unstall();
+        self.try_admit(&mut inner);
+        self.cv.notify_all();
     }
 
     /// Terminate a request with an error result.
@@ -334,6 +457,9 @@ impl Scheduler {
             queue_depth: inner.waiting.len(),
             running: inner.admitted.len(),
             inflight: self.inflight.load(Ordering::SeqCst),
+            fused_steps: self.fused_steps.load(Ordering::SeqCst),
+            fused_sessions: self.fused_sessions.load(Ordering::SeqCst),
+            batch_hist: self.batch_hist.iter().map(|b| b.load(Ordering::SeqCst)).collect(),
             swap_capacity: swap.capacity,
             swap_used: swap.used,
             swap_peak: swap.peak,
@@ -579,6 +705,104 @@ mod tests {
         assert_eq!(snap.swap_outs, 0);
         assert_eq!(snap.swap_fallbacks, 1);
         assert_eq!(snap.swap_used, 0);
+    }
+
+    /// next_batch groups runnable sessions by batching compatibility
+    /// key (cache family + compiled capacity): quant and fp32 sessions
+    /// never share a fused call.
+    #[test]
+    fn batch_formation_groups_by_compat_key() {
+        let man = tiny_manifest();
+        let quant_cfg = tiny_cfg();
+        let fp32_cfg = ServeConfig { mode: CompressionMode::FullKv, ..tiny_cfg() };
+        let pool = Arc::new(BlockPool::new(u64::MAX / 2));
+        let sched = Scheduler::new(Arc::clone(&pool));
+        let (tx, _rx) = mpsc::channel();
+        for (id, cfg) in [(1u64, &quant_cfg), (2, &fp32_cfg), (3, &quant_cfg), (4, &fp32_cfg)] {
+            sched.submit(mk_session(id, cfg, &man, &pool), tx.clone());
+        }
+        let batch = sched.next_batch(4).expect("quant batch");
+        let ids: Vec<u64> = batch.iter().map(|e| e.session.id).collect();
+        assert_eq!(ids, vec![1, 3], "front session plus its compatible peer");
+        let key = batch[0].session.compat_key();
+        assert!(batch.iter().all(|e| e.session.compat_key() == key));
+        let batch2 = sched.next_batch(4).expect("fp32 batch");
+        let ids2: Vec<u64> = batch2.iter().map(|e| e.session.id).collect();
+        assert_eq!(ids2, vec![2, 4]);
+        assert_ne!(batch2[0].session.compat_key(), key);
+        assert_eq!(sched.snapshot().running, 4, "all four held by workers");
+    }
+
+    /// Batch formation pre-reserves each extra member's worst-case step
+    /// growth (the growth bond): with room for exactly one bond the
+    /// batch stops at two members, with no bond room it stays at one,
+    /// and the pool never exceeds capacity.
+    #[test]
+    fn batch_formation_never_overcommits_pool() {
+        let cfg = tiny_cfg();
+        let man = tiny_manifest();
+        let probe = mk_session(0, &cfg, &man, &Arc::new(BlockPool::new(u64::MAX / 2)));
+        let per = probe.admission_bytes();
+        let hr = probe.step_headroom_bytes();
+        assert!(hr > 0 && per > hr);
+
+        // room for two admission reserves plus exactly one growth bond
+        let pool = Arc::new(BlockPool::new(2 * per + hr));
+        let sched = Scheduler::new(Arc::clone(&pool));
+        let (tx, _rx) = mpsc::channel();
+        for id in 1..=3u64 {
+            sched.submit(mk_session(id, &cfg, &man, &pool), tx.clone());
+        }
+        assert_eq!(sched.snapshot().running, 2, "third admission must wait");
+        let batch = sched.next_batch(4).expect("batch");
+        assert_eq!(batch.len(), 2, "bond room for exactly one extra member");
+        assert_eq!(pool.used(), pool.capacity(), "admissions + one bond");
+        assert!(sched.snapshot().pool_peak <= pool.capacity());
+
+        // fake-finish the batch: every byte (reserves + bond) returns,
+        // which admits the third session
+        for mut e in batch {
+            e.session.finished_at = Some(std::time::Instant::now());
+            let _ = e.done_tx.send(RequestResult::from_session(&e.session));
+            sched.complete(&mut e.session);
+        }
+        let snap = sched.snapshot();
+        assert_eq!(snap.running, 1, "freed bytes admit the waiter");
+        assert_eq!(snap.pool_used, per);
+        assert!(snap.pool_peak <= snap.pool_capacity);
+
+        // no bond room at all: batches stay singleton and the leftover
+        // session remains runnable for another worker
+        let pool2 = Arc::new(BlockPool::new(2 * per));
+        let sched2 = Scheduler::new(Arc::clone(&pool2));
+        let (tx2, _rx2) = mpsc::channel();
+        sched2.submit(mk_session(8, &cfg, &man, &pool2), tx2.clone());
+        sched2.submit(mk_session(9, &cfg, &man, &pool2), tx2.clone());
+        let b1 = sched2.next_batch(4).expect("first singleton");
+        assert_eq!(b1.len(), 1);
+        let b2 = sched2.next_batch(4).expect("second singleton");
+        assert_eq!(b2.len(), 1);
+        assert_eq!(b2[0].session.id, 9);
+        assert!(pool2.used() <= pool2.capacity());
+    }
+
+    /// Fused-step counters: totals and the batch-size histogram.
+    #[test]
+    fn fused_step_counters_and_histogram() {
+        let sched = Scheduler::new(Arc::new(BlockPool::new(1024)));
+        sched.note_fused_step(1);
+        sched.note_fused_step(4);
+        sched.note_fused_step(4);
+        sched.note_fused_step(100); // clamps into the last bucket
+        sched.note_fused_step(0); // ignored
+        let snap = sched.snapshot();
+        assert_eq!(snap.fused_steps, 4);
+        assert_eq!(snap.fused_sessions, 1 + 4 + 4 + 100);
+        assert_eq!(snap.batch_hist.len(), BATCH_HIST_BUCKETS);
+        assert_eq!(snap.batch_hist[0], 1);
+        assert_eq!(snap.batch_hist[3], 2);
+        assert_eq!(snap.batch_hist[BATCH_HIST_BUCKETS - 1], 1);
+        assert_eq!(snap.batch_hist.iter().sum::<u64>(), snap.fused_steps);
     }
 
     /// Preemption marks set while a worker holds the victim are honored

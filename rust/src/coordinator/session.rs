@@ -1,8 +1,12 @@
 //! A decode session: one request's full state machine, advanced one decode
-//! step at a time against a worker's PJRT engine.
+//! step at a time against a worker's engine — alone through
+//! [`Session::step`], or as a member of a cross-session decode batch
+//! through the same halves ([`Session::begin_step`] /
+//! [`Session::finish_step`]) wrapped around one fused
+//! [`DecodeEngine::decode_batch`] call.
 //!
 //! Every compression mode flows through the same generic decode path via
-//! the [`KvBackend`] trait (`make_room` → `Engine::decode` → `absorb`);
+//! the [`KvBackend`] trait (`make_room` → [`DecodeEngine::decode`] → `absorb`);
 //! the mode only decides which backend [`build_backend`] constructs.
 //! Sessions also carry their [`BlockPool`] reservation: the scheduler
 //! grants an admission reserve, each step pre-reserves its worst-case
@@ -31,12 +35,12 @@ use crate::baselines::quant_baselines::PmKvq;
 use crate::compress::tbe::{Tbe, TbeConfig};
 use crate::compress::tbq::Tbq;
 use crate::kvcache::{
-    BlockPool, CacheConfig, CtCache, Fp32Backend, Fp32Cache, KvBackend, KvSnapshot,
+    BatchKey, BlockPool, CacheConfig, CtCache, Fp32Backend, Fp32Cache, KvBackend, KvSnapshot,
     QuantBackend, SwapPool,
 };
 use crate::metrics::Breakdown;
 use crate::quant::Precision;
-use crate::runtime::Engine;
+use crate::runtime::{CacheView, DecodeEngine, DecodeOut};
 use crate::sim::harness::EvictKind;
 use crate::thought::classifier::{Classifier, ClassifierConfig};
 
@@ -52,6 +56,19 @@ pub enum StepOutcome {
     Finished,
     /// The block pool could not cover this step's KV growth; the
     /// scheduler must reclaim memory (preempt) before retrying.
+    NeedMemory,
+}
+
+/// Outcome of the pre-decode half of a (possibly batched) step:
+/// everything [`Session::begin_step`] does before the engine call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepPrep {
+    /// The session is ready for the fused engine call with these
+    /// decode-step scalars (token, position, ring-buffer fill).
+    Ready { token: i32, pos: i32, buf_idx: i32 },
+    /// The session finished before needing another decode step.
+    Finished,
+    /// The pool could not cover this step's worst-case KV growth.
     NeedMemory,
 }
 
@@ -204,6 +221,12 @@ pub struct Session {
     suspended: Option<SuspendedKv>,
     /// Admission reserve, computed once at construction.
     admission_est: u64,
+    /// Batched-decode compatibility key (cache family + compiled
+    /// capacity), computed once at construction.
+    compat_key: BatchKey,
+    /// Worst-case `bytes_used` growth of one decode step, computed once
+    /// at construction — what batch formation pre-reserves per member.
+    step_headroom: u64,
     cfg: ServeConfig,
     manifest: crate::model::Manifest,
     pool: Option<Arc<BlockPool>>,
@@ -230,9 +253,12 @@ impl Session {
         pool: Option<Arc<BlockPool>>,
     ) -> Result<Session> {
         // transient probe: validates the mode/artifact combination and
-        // prices the admission reserve, then frees its slabs
+        // prices the admission reserve, the per-step growth bound, and
+        // the batching compatibility key, then frees its slabs
         let probe = build_backend(cfg, manifest)?;
         let admission_est = probe.admission_bytes(manifest.model.prefill_len);
+        let compat_key = probe.compat_key();
+        let step_headroom = probe.step_headroom_bytes();
         drop(probe);
         Ok(Session {
             id,
@@ -254,6 +280,8 @@ impl Session {
             restore_ns: 0,
             suspended: None,
             admission_est,
+            compat_key,
+            step_headroom,
             cfg: cfg.clone(),
             manifest: manifest.clone(),
             pool,
@@ -313,6 +341,29 @@ impl Session {
     /// True while this session's cache lives in the host swap pool.
     pub fn is_suspended(&self) -> bool {
         self.suspended.is_some()
+    }
+
+    /// Batched-decode compatibility key: sessions with equal keys run
+    /// the same compiled decode executable, so the scheduler may put
+    /// them in one fused decode batch.
+    pub fn compat_key(&self) -> BatchKey {
+        self.compat_key
+    }
+
+    /// Worst-case `bytes_used` growth of a single decode step (one
+    /// token landing in the f32 ring buffer). Batch formation reserves
+    /// this per extra batch member *before* the fused call so a batch
+    /// can never over-commit the pool mid-step.
+    pub fn step_headroom_bytes(&self) -> u64 {
+        self.step_headroom
+    }
+
+    /// Credit pool bytes the scheduler already reserved on this
+    /// session's behalf (the batch-formation growth bond). The surplus
+    /// flows back through the post-step reservation true-up.
+    pub(crate) fn add_growth_bond(&mut self, bytes: u64) {
+        debug_assert!(self.pool.is_some(), "growth bond without a pool");
+        self.reserved_bytes += bytes;
     }
 
     /// Record an admission reserve the scheduler already charged to the
@@ -476,7 +527,7 @@ impl Session {
     }
 
     /// Run prompt prefill (once).
-    pub fn prefill(&mut self, engine: &Engine) -> Result<()> {
+    pub fn prefill(&mut self, engine: &dyn DecodeEngine) -> Result<()> {
         if self.prefilled {
             return Ok(());
         }
@@ -498,11 +549,16 @@ impl Session {
         Ok(())
     }
 
-    /// Advance one decode step — the single generic path every
-    /// compression mode runs.
-    pub fn step(&mut self, engine: &Engine) -> Result<StepOutcome> {
+    /// Everything a decode step does *before* the engine call: restore
+    /// a suspended snapshot, run prefill, reserve this step's worst-case
+    /// KV growth, and flush the ring buffer (`make_room`). Returns the
+    /// decode-step scalars the (fused) engine call needs. Split from
+    /// [`Session::step`] so a batch of sessions can prepare
+    /// individually, then advance with **one**
+    /// [`DecodeEngine::decode_batch`] call per step.
+    pub fn begin_step(&mut self, engine: &dyn DecodeEngine) -> Result<StepPrep> {
         if self.done() {
-            return Ok(StepOutcome::Finished);
+            return Ok(StepPrep::Finished);
         }
         if self.suspended.is_some() {
             // swapped-out session re-admitted: restore the cache image
@@ -518,7 +574,7 @@ impl Session {
         }
         if self.tokens.len() >= self.max_new_tokens {
             self.finished_at = Some(std::time::Instant::now());
-            return Ok(StepOutcome::Finished);
+            return Ok(StepPrep::Finished);
         }
         // reserve this step's worst-case KV growth before doing any work
         let headroom = self
@@ -528,16 +584,39 @@ impl Session {
             .step_headroom_bytes();
         let want = self.bytes_used() + headroom;
         if !self.ensure_reserved(want) {
-            return Ok(StepOutcome::NeedMemory);
+            return Ok(StepPrep::NeedMemory);
         }
         let token = *self.tokens.last().expect("prefill bootstraps a token");
         let pos = self.pos;
         let backend = self.backend.as_mut().expect("prefill built the backend");
         backend.make_room(pos, &mut self.breakdown)?;
-        let te = std::time::Instant::now();
-        let out = engine.decode(token, pos as i32, backend.buf_fill() as i32, &backend.view())?;
-        self.breakdown.decode_exec_ns += te.elapsed().as_nanos() as u64;
-        backend.absorb(&out, pos, engine.model(), &mut self.breakdown)?;
+        Ok(StepPrep::Ready {
+            token,
+            pos: pos as i32,
+            buf_idx: backend.buf_fill() as i32,
+        })
+    }
+
+    /// Engine-facing borrowed view of this session's cache — valid
+    /// between [`Session::begin_step`] returning `Ready` and the engine
+    /// call that consumes it.
+    pub fn cache_view(&self) -> CacheView<'_> {
+        self.backend.as_ref().expect("begin_step built the backend").view()
+    }
+
+    /// Everything a decode step does *after* the engine call: absorb
+    /// the step outputs into the cache, sample the next token, and true
+    /// the pool reservation up. Never returns
+    /// [`StepOutcome::NeedMemory`] — growth was reserved in
+    /// [`Session::begin_step`].
+    pub fn finish_step(
+        &mut self,
+        out: &DecodeOut,
+        engine: &dyn DecodeEngine,
+    ) -> Result<StepOutcome> {
+        let pos = self.pos;
+        let backend = self.backend.as_mut().expect("begin_step built the backend");
+        backend.absorb(out, pos, engine.model(), &mut self.breakdown)?;
         let t0 = std::time::Instant::now();
         let next = self.sampler.sample(&out.logits);
         self.breakdown.sample_ns += t0.elapsed().as_nanos() as u64;
@@ -550,6 +629,23 @@ impl Session {
             return Ok(StepOutcome::Finished);
         }
         Ok(StepOutcome::Running)
+    }
+
+    /// Advance one decode step — the single generic path every
+    /// compression mode runs ([`Session::begin_step`] → one engine call
+    /// → [`Session::finish_step`]; the batched worker path runs the same
+    /// halves around one fused call for the whole batch).
+    pub fn step(&mut self, engine: &dyn DecodeEngine) -> Result<StepOutcome> {
+        match self.begin_step(engine)? {
+            StepPrep::Finished => Ok(StepOutcome::Finished),
+            StepPrep::NeedMemory => Ok(StepOutcome::NeedMemory),
+            StepPrep::Ready { token, pos, buf_idx } => {
+                let te = std::time::Instant::now();
+                let out = engine.decode(token, pos, buf_idx, &self.cache_view())?;
+                self.breakdown.decode_exec_ns += te.elapsed().as_nanos() as u64;
+                self.finish_step(&out, engine)
+            }
+        }
     }
 
     /// Test-only: fabricate a completed prefill (synthetic K/V, no

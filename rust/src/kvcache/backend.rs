@@ -52,6 +52,21 @@ fn fp32_token_bytes(layers: usize, kv_dim: usize) -> u64 {
     (layers * 2 * kv_dim * 4) as u64
 }
 
+/// Compatibility key for **cross-session batched decode**: two sessions
+/// may share one fused [`crate::runtime::DecodeEngine::decode_batch`]
+/// call only when their decode steps run the same compiled executable —
+/// i.e. the same cache family and the same compiled capacity. The
+/// scheduler groups runnable sessions by this key when forming a decode
+/// batch ([`crate::coordinator::Scheduler::next_batch`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BatchKey {
+    /// Cache family (`"quant"` / `"fp32"`) — selects the decode-HLO
+    /// family, mirroring [`KvBackend::kind`].
+    pub kind: &'static str,
+    /// Compiled cache capacity — selects the artifact within the family.
+    pub capacity: usize,
+}
+
 /// The unified per-request cache backend the session decode loop drives.
 ///
 /// One object = one request's cache plus the policy that manages it.
@@ -90,6 +105,12 @@ fn fp32_token_bytes(layers: usize, kv_dim: usize) -> u64 {
 pub trait KvBackend: Send {
     /// Short label for diagnostics ("quant" / "fp32").
     fn kind(&self) -> &'static str;
+
+    /// Batched-decode compatibility key: sessions whose backends return
+    /// equal keys run the same compiled decode executable and may be
+    /// advanced together by one fused
+    /// [`crate::runtime::DecodeEngine::decode_batch`] call.
+    fn compat_key(&self) -> BatchKey;
 
     /// Ingest the prompt K/V produced by engine prefill (alloc + append).
     fn write_prefill(&mut self, pf: &PrefillOut, p_len: usize);
@@ -213,6 +234,10 @@ impl QuantBackend {
 impl KvBackend for QuantBackend {
     fn kind(&self) -> &'static str {
         "quant"
+    }
+
+    fn compat_key(&self) -> BatchKey {
+        BatchKey { kind: self.kind(), capacity: self.cache.cfg.capacity }
     }
 
     fn write_prefill(&mut self, pf: &PrefillOut, p_len: usize) {
@@ -436,6 +461,10 @@ impl Fp32Backend {
 impl KvBackend for Fp32Backend {
     fn kind(&self) -> &'static str {
         "fp32"
+    }
+
+    fn compat_key(&self) -> BatchKey {
+        BatchKey { kind: self.kind(), capacity: self.capacity }
     }
 
     fn write_prefill(&mut self, pf: &PrefillOut, p_len: usize) {

@@ -14,7 +14,10 @@
 //! * [`fp32`] — the f32 paged cache used by FullKV and eviction baselines.
 //! * [`backend`] — [`backend::KvBackend`], the unified trait both cache
 //!   families implement (alloc/append/evict/decode-view/bytes-used/
-//!   live-tokens); the serving session drives it generically.
+//!   live-tokens); the serving session drives it generically. Its
+//!   [`backend::BatchKey`] is the cross-session batched-decode
+//!   compatibility key (same cache family + compiled capacity = same
+//!   fused engine call).
 //! * [`pool`] — [`pool::BlockPool`], the global physical-byte pool the
 //!   memory-aware scheduler reserves against for admission control and
 //!   preemption (max batch-size experiments, Tables 2/3).
@@ -30,7 +33,7 @@ pub mod fp32;
 pub mod pool;
 pub mod swap;
 
-pub use backend::{Fp32Backend, KvBackend, QuantBackend};
+pub use backend::{BatchKey, Fp32Backend, KvBackend, QuantBackend};
 pub use block_table::{BlockEntry, LayerTable, SlotId};
 pub use ct::{CacheConfig, CtCache, CtSnapshot, SegmentInfo};
 pub use fp32::{Fp32Cache, Fp32CacheSnapshot};

@@ -11,8 +11,9 @@
 //!   `artifacts/` by `python/compile/aot.py`.
 //! * **Layer 3 (Rust, run time)** — this crate: the serving coordinator
 //!   (memory-aware scheduler with byte-accurate `BlockPool` admission,
-//!   preempt-youngest reclamation, and suspend-to-host swap preemption,
-//!   continuous batching, request routing), the unified `KvBackend`
+//!   preempt-youngest reclamation, suspend-to-host swap preemption, and
+//!   cross-session batched decode — one fused engine call advances a
+//!   whole batch of compatible sessions per step), the unified `KvBackend`
 //!   cache abstraction over the Continuous-Thinking quantized cache and
 //!   the f32 baseline cache, thought decomposition (KDE calibration +
 //!   sparsity classifier), TBQ/TBE compression policies, all

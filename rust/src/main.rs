@@ -38,9 +38,9 @@ USAGE: thinkv <cmd> [--flags]
 
   generate  --mode thinkv|fullkv|rkv|h2o|kivi2|... --requests 4
             --budget 1024 --max-tokens 128 --workers 2
-            --pool-mb 0 --swap-mb 0
+            --pool-mb 0 --swap-mb 0 --max-decode-batch 8
   serve     --addr 127.0.0.1:7799 --mode thinkv --budget 1024
-            --pool-mb 0 --swap-mb 0
+            --pool-mb 0 --swap-mb 0 --max-decode-batch 8
   sim       --mode thinkv --dataset aime --budget 1024 --scale 0.5
   calibrate --prompts 8 --layers 8
   info
@@ -49,7 +49,10 @@ USAGE: thinkv <cmd> [--flags]
   bound, oversubscribed workloads queue and preempt instead of
   overflowing. --swap-mb adds a host-side swap pool: preempted
   sessions suspend their compressed cache to host memory and resume
-  with zero recompute steps (0 = recompute preemption only)."
+  with zero recompute steps (0 = recompute preemption only).
+  --max-decode-batch caps the cross-session decode batch: each worker
+  advances up to that many compatible sessions with one fused engine
+  call per step (1 = per-session decode)."
     );
 }
 
@@ -67,6 +70,7 @@ fn serve_config(args: &Args) -> ServeConfig {
         budget: args.usize_or("budget", 1024),
         max_new_tokens: args.usize_or("max-tokens", 128),
         workers: args.usize_or("workers", 2),
+        max_decode_batch: args.usize_or("max-decode-batch", 8),
         refresh: args.usize_or("refresh", 128),
         temperature: args.f64_or("temperature", 0.8),
         seed: args.u64_or("seed", 42),

@@ -3,7 +3,9 @@
 //! the scheduler/pool snapshot surfaced by the server `stats` command —
 //! including the suspend-to-host swap counters ([`SchedSnapshot`]:
 //! swap-in/out counts, bytes moved, restore latency, recompute
-//! fallbacks) added for the preemption fast path.
+//! fallbacks) added for the preemption fast path, and the
+//! cross-session batched-decode counters (fused steps, session-steps
+//! advanced, decode-batch size histogram).
 
 use std::time::Instant;
 
@@ -128,6 +130,16 @@ pub struct SchedSnapshot {
     pub running: usize,
     /// Submitted and not yet finished.
     pub inflight: u64,
+    /// Fused decode steps executed (one engine call per decode batch
+    /// per step — the cross-session batching fast path).
+    pub fused_steps: u64,
+    /// Session-steps advanced by fused calls (sum of batch sizes);
+    /// `fused_sessions / fused_steps` is the mean decode-batch size.
+    pub fused_sessions: u64,
+    /// Decode-batch size histogram: bucket `i` counts fused steps whose
+    /// batch held `i + 1` sessions (the last bucket absorbs larger
+    /// batches). Empty until the scheduler records a fused step.
+    pub batch_hist: Vec<u64>,
     /// Host-side swap pool capacity (0 = suspend-to-host disabled).
     pub swap_capacity: u64,
     /// Swap pool bytes currently holding suspended sessions.
@@ -162,6 +174,12 @@ impl SchedSnapshot {
         j.set("queue_depth", Json::Num(self.queue_depth as f64));
         j.set("running", Json::Num(self.running as f64));
         j.set("inflight", Json::Num(self.inflight as f64));
+        j.set("fused_steps", Json::Num(self.fused_steps as f64));
+        j.set("fused_sessions", Json::Num(self.fused_sessions as f64));
+        j.set(
+            "batch_hist",
+            Json::Arr(self.batch_hist.iter().map(|&n| Json::Num(n as f64)).collect()),
+        );
         j.set("swap_capacity", Json::Num(self.swap_capacity as f64));
         j.set("swap_used", Json::Num(self.swap_used as f64));
         j.set("swap_peak", Json::Num(self.swap_peak as f64));
@@ -189,6 +207,14 @@ impl SchedSnapshot {
             self.queue_depth,
             self.running
         );
+        if self.fused_steps > 0 {
+            s.push_str(&format!(
+                "\ndecode: {} fused steps / {} session-steps (avg batch {:.2})",
+                self.fused_steps,
+                self.fused_sessions,
+                self.fused_sessions as f64 / self.fused_steps as f64
+            ));
+        }
         if self.swap_capacity > 0 {
             s.push_str(&format!(
                 "\nswap: {} out / {} in ({} B out, {} B in), restore {:.2} ms, fallbacks {}, host {}/{} B (peak {})",
@@ -265,6 +291,30 @@ mod tests {
         assert!(s.summary().contains("preempt 1"));
         // swap disabled (capacity 0): the summary stays a single line
         assert!(!s.summary().contains("swap:"));
+    }
+
+    #[test]
+    fn sched_snapshot_fused_decode_fields_surface() {
+        let mut hist = vec![0u64; 16];
+        hist[0] = 2; // two singleton steps
+        hist[3] = 5; // five 4-wide fused steps
+        let s = SchedSnapshot {
+            fused_steps: 7,
+            fused_sessions: 22,
+            batch_hist: hist,
+            ..SchedSnapshot::default()
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("fused_steps").and_then(Json::as_usize), Some(7));
+        assert_eq!(j.get("fused_sessions").and_then(Json::as_usize), Some(22));
+        let hist_json = j.get("batch_hist").and_then(Json::as_arr).expect("hist array");
+        assert_eq!(hist_json.len(), 16);
+        assert_eq!(hist_json[3].as_f64(), Some(5.0));
+        let summary = s.summary();
+        assert!(summary.contains("7 fused steps / 22 session-steps"));
+        assert!(summary.contains("avg batch 3.14"));
+        // no fused steps recorded: the decode line is omitted entirely
+        assert!(!SchedSnapshot::default().summary().contains("fused"));
     }
 
     #[test]

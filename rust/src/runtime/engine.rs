@@ -45,6 +45,108 @@ pub enum CacheView<'a> {
     },
 }
 
+/// One member of a fused cross-session decode step: the scalars plus the
+/// borrowed cache view [`DecodeEngine::decode_batch`] advances together.
+pub struct BatchDecodeReq<'a> {
+    /// Last sampled token (the decode-step input).
+    pub token: i32,
+    /// Current CoT position.
+    pub pos: i32,
+    /// Ring-buffer fill (next free buffer slot).
+    pub buf_idx: i32,
+    /// Borrowed view of this member's cache slabs.
+    pub view: CacheView<'a>,
+}
+
+/// The engine surface the serving session/worker loop drives — one
+/// prefill plus single and fused (cross-session batched) decode steps.
+///
+/// [`Engine`] implements this over the AOT PJRT artifacts; tests
+/// implement it with deterministic synthetic engines so scheduler and
+/// session behavior (including batched-vs-sequential stream invariance)
+/// can be verified without artifacts.
+///
+/// # Example
+///
+/// A deterministic fake engine: `decode_batch` (the fused entry point
+/// workers call once per batch per step) advances every member and
+/// returns their outputs in order:
+///
+/// ```
+/// use anyhow::Result;
+/// use thinkv::kvcache::{CacheConfig, CtCache};
+/// use thinkv::model::ModelConfig;
+/// use thinkv::runtime::{BatchDecodeReq, CacheView, DecodeEngine, DecodeOut, PrefillOut};
+///
+/// struct FixedEngine {
+///     m: ModelConfig,
+/// }
+///
+/// impl DecodeEngine for FixedEngine {
+///     fn model(&self) -> &ModelConfig {
+///         &self.m
+///     }
+///     fn prefill(&self, _tokens: &[i32]) -> Result<PrefillOut> {
+///         unimplemented!("not exercised here")
+///     }
+///     fn decode(&self, token: i32, pos: i32, _buf_idx: i32, view: &CacheView) -> Result<DecodeOut> {
+///         let span = match view {
+///             CacheView::Quant(q) => q.capacity,
+///             CacheView::Fp32 { capacity, .. } => *capacity,
+///         } + self.m.buf_slots;
+///         let kvd = self.m.n_kv_heads * self.m.d_head;
+///         Ok(DecodeOut {
+///             logits: vec![(token + pos) as f32; self.m.vocab],
+///             new_k: vec![0.0; self.m.n_layers * kvd],
+///             new_v: vec![0.0; self.m.n_layers * kvd],
+///             probs: vec![0.0; self.m.n_layers * self.m.n_heads * span],
+///         })
+///     }
+/// }
+///
+/// let m = ModelConfig {
+///     vocab: 8, d_model: 8, n_layers: 1, n_heads: 1, n_kv_heads: 1, d_head: 16,
+///     d_ffn: 8, rope_base: 10000.0, buf_slots: 4, prefill_len: 4, obs_window: 2,
+///     group_size: 16,
+/// };
+/// let eng = FixedEngine { m };
+/// let cache = CtCache::new(CacheConfig {
+///     layers: 1, capacity: 16, block_size: 8, hkv: 1, dh: 16, buf_slots: 4,
+/// });
+/// let reqs = [
+///     BatchDecodeReq { token: 1, pos: 4, buf_idx: 0, view: CacheView::Quant(cache.view()) },
+///     BatchDecodeReq { token: 2, pos: 4, buf_idx: 0, view: CacheView::Quant(cache.view()) },
+/// ];
+/// let outs = eng.decode_batch(&reqs).unwrap(); // one fused step, two streams
+/// assert_eq!(outs.len(), 2);
+/// assert_eq!(outs[0].logits[0], 5.0);
+/// assert_eq!(outs[1].logits[0], 6.0);
+/// ```
+pub trait DecodeEngine {
+    /// The model dimensions every step is shaped by.
+    fn model(&self) -> &crate::model::ModelConfig;
+
+    /// Run prompt prefill (tokens padded/truncated to the exported length).
+    fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut>;
+
+    /// Run one decode step for a single session over either cache family.
+    fn decode(&self, token: i32, pos: i32, buf_idx: i32, view: &CacheView) -> Result<DecodeOut>;
+
+    /// One **fused** decode step over a batch of compatible sessions
+    /// (same [`crate::kvcache::BatchKey`]: cache family + compiled
+    /// capacity): the scheduler forms the batch, the worker makes one
+    /// `decode_batch` call per step, and every member advances by one
+    /// token. Outputs are returned in request order. Must be
+    /// semantically identical to calling [`DecodeEngine::decode`] per
+    /// member — batching is a launch-amortization strategy, never a
+    /// numerics change (stream invariance).
+    fn decode_batch(&self, reqs: &[BatchDecodeReq<'_>]) -> Result<Vec<DecodeOut>> {
+        reqs.iter()
+            .map(|r| self.decode(r.token, r.pos, r.buf_idx, &r.view))
+            .collect()
+    }
+}
+
 /// Outputs of one decode step.
 #[derive(Debug, Clone)]
 pub struct DecodeOut {
@@ -328,6 +430,30 @@ impl Engine {
             outs[0].to_vec::<f32>().map_err(to_anyhow)?,
             outs[1].to_vec::<f32>().map_err(to_anyhow)?,
         ))
+    }
+}
+
+/// The fused decode surface over the PJRT artifacts. `decode_batch`
+/// uses the trait default (map over [`Engine::decode`]): a compatible
+/// batch shares one compiled module, which the executable cache
+/// resolves/compiles on the first member and serves warm to the rest.
+/// The current artifacts are single-request HLO, so the per-member
+/// execute remains — a multi-request decode artifact slots in behind
+/// `decode_batch` without touching any caller; the launch-amortization
+/// effect on real hardware is priced by
+/// [`crate::sim::ServingCost::decode_step_per_session`] vs
+/// [`crate::sim::ServingCost::decode_step`].
+impl DecodeEngine for Engine {
+    fn model(&self) -> &crate::model::ModelConfig {
+        Engine::model(self)
+    }
+
+    fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
+        Engine::prefill(self, tokens)
+    }
+
+    fn decode(&self, token: i32, pos: i32, buf_idx: i32, view: &CacheView) -> Result<DecodeOut> {
+        Engine::decode(self, token, pos, buf_idx, view)
     }
 }
 

@@ -11,5 +11,7 @@
 pub mod engine;
 pub mod weights;
 
-pub use engine::{CacheView, DecodeOut, Engine, PrefillOut, QuantCache};
+pub use engine::{
+    BatchDecodeReq, CacheView, DecodeEngine, DecodeOut, Engine, PrefillOut, QuantCache,
+};
 pub use weights::{load_weights, Tensor};

@@ -9,12 +9,13 @@
 //! Malformed request lines never kill the connection: the server replies
 //! `{"id": ..., "error": "..."}` (id `null` when the line did not parse)
 //! and keeps reading. `stats` reports the scheduler/pool counters
-//! (admissions, preemptions, queue depth, pool used/peak/free) and the
+//! (admissions, preemptions, queue depth, pool used/peak/free), the
 //! suspend-to-host swap counters (`swap_outs`/`swap_ins`, bytes moved
-//! each way, `swap_restore_ms`, `swap_fallbacks`) alongside the serving
-//! totals. Per-request replies carry `preemptions` (recompute resets)
-//! and `swap_ins` (zero-replay resumes) so clients can tell the two
-//! preemption flavors apart.
+//! each way, `swap_restore_ms`, `swap_fallbacks`), and the batched
+//! decode counters (`fused_steps`, `fused_sessions`, `batch_hist`)
+//! alongside the serving totals. Per-request replies carry
+//! `preemptions` (recompute resets) and `swap_ins` (zero-replay
+//! resumes) so clients can tell the two preemption flavors apart.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};

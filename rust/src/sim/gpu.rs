@@ -199,6 +199,32 @@ impl ServingCost {
         }
     }
 
+    /// One decode step where each session is advanced by its **own**
+    /// engine call (per-session kernel launches) instead of one fused
+    /// call for the whole batch — the pre-batching worker behavior.
+    /// Byte traffic is identical to [`ServingCost::decode_step`]; only
+    /// the launch overhead multiplies by the batch size. The gap
+    /// between the two is the launch-amortization win of cross-session
+    /// batched decode (`bench_scheduler`'s amortization sweep).
+    pub fn decode_step_per_session(
+        &self,
+        batch: usize,
+        live_kv_bytes_per_req: f64,
+        gather_bytes_per_req: f64,
+        overlapped_gather: bool,
+        policy_overhead_us: f64,
+    ) -> StepCost {
+        let mut step = self.decode_step(
+            batch,
+            live_kv_bytes_per_req,
+            gather_bytes_per_req,
+            overlapped_gather,
+            policy_overhead_us,
+        );
+        step.launch_us *= batch.max(1) as f64;
+        step
+    }
+
     /// Aggregate throughput (tokens/s) for steady-state decode.
     pub fn throughput_tok_s(&self, batch: usize, step: &StepCost) -> f64 {
         if step.total_us() <= 0.0 {
@@ -295,6 +321,35 @@ mod tests {
             c.throughput_tok_s(256, &s)
         };
         assert!(t256 > 50.0 * t1, "batching must amortize weights: {t1} vs {t256}");
+    }
+
+    #[test]
+    fn fused_step_amortizes_launch_overhead() {
+        let c = cost();
+        let kv = c.model.kv_bytes_per_token(3.4) * 1024.0;
+        let single = c.decode_step(1, kv, 0.0, false, 0.0);
+        let mut last_tput = 0.0;
+        for batch in [1usize, 2, 4, 8, 16, 32] {
+            let fused = c.decode_step(batch, kv, 0.0, false, 0.0);
+            let per = c.decode_step_per_session(batch, kv, 0.0, false, 0.0);
+            // per-session launches pay the launch overhead batch times
+            assert!(
+                (per.launch_us - batch as f64 * fused.launch_us).abs() < 1e-9,
+                "launch not multiplied at batch {batch}"
+            );
+            assert!(fused.total_us() <= per.total_us());
+            if batch >= 4 {
+                // acceptance bar: one fused step is cheaper than N
+                // sequential single-session steps
+                assert!(
+                    fused.total_us() < batch as f64 * single.total_us(),
+                    "fused step not amortizing at batch {batch}"
+                );
+            }
+            let tput = c.throughput_tok_s(batch, &fused);
+            assert!(tput > last_tput, "throughput must grow with batch: {batch}");
+            last_tput = tput;
+        }
     }
 
     #[test]

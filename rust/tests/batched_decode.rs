@@ -1,0 +1,281 @@
+//! Cross-session batched decode: correctness properties that must hold
+//! for the fused worker path without any PJRT artifacts.
+//!
+//! The core bar (ISSUE 3): batching is **stream-invariant** — advancing
+//! sessions through `Scheduler::next_batch` + `advance_batch` (the real
+//! production worker body, one fused `decode_batch` call per step) must
+//! produce token streams bit-identical to advancing each session alone
+//! through `Session::step`, for randomized batch compositions, chunk
+//! sizes, compression-mode mixes, and sampling temperatures. A
+//! deterministic [`DecodeEngine`] fake stands in for the PJRT engine so
+//! the property runs everywhere (CI has no artifacts).
+
+use std::sync::{mpsc, Arc};
+
+use anyhow::Result;
+use thinkv::coordinator::{
+    advance_batch, CompressionMode, RequestResult, Scheduler, ServeConfig, Session, StepOutcome,
+};
+use thinkv::kvcache::BlockPool;
+use thinkv::model::{Manifest, ModelConfig};
+use thinkv::runtime::{CacheView, DecodeEngine, DecodeOut, PrefillOut};
+use thinkv::util::prop;
+use thinkv::util::rng::Rng;
+
+/// Hand-built manifest: tiny dims, no artifact files needed (the fake
+/// engine never loads HLO).
+fn tiny_manifest() -> Manifest {
+    Manifest {
+        model: ModelConfig {
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            d_head: 16,
+            d_ffn: 64,
+            rope_base: 10000.0,
+            buf_slots: 16,
+            prefill_len: 32,
+            obs_window: 8,
+            group_size: 16,
+        },
+        quant_caps: vec![128],
+        fp32_caps: vec![256],
+        micro_c: 128,
+        golden_attn_c: 128,
+        artifacts_dir: ".".into(),
+        weights: vec![],
+        seed: 0,
+    }
+}
+
+/// Deterministic engine stand-in: outputs are a pure function of the
+/// decode-step inputs (token, position) and of the prompt for prefill,
+/// so any two runs that feed it the same per-session inputs — batched
+/// or not — see identical outputs.
+struct FakeEngine {
+    m: ModelConfig,
+}
+
+impl FakeEngine {
+    fn new(m: ModelConfig) -> FakeEngine {
+        FakeEngine { m }
+    }
+}
+
+impl DecodeEngine for FakeEngine {
+    fn model(&self) -> &ModelConfig {
+        &self.m
+    }
+
+    fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
+        let seed = tokens
+            .iter()
+            .fold(0xABCDu64, |h, &t| h.wrapping_mul(31).wrapping_add(t as u64));
+        let mut rng = Rng::new(seed);
+        let m = &self.m;
+        let kvd = m.n_kv_heads * m.d_head;
+        let mut logits = vec![0f32; m.vocab];
+        let mut k = vec![0f32; m.n_layers * m.prefill_len * kvd];
+        let mut v = vec![0f32; m.n_layers * m.prefill_len * kvd];
+        rng.fill_normal_f32(&mut logits, 0.0, 1.0);
+        rng.fill_normal_f32(&mut k, 0.0, 1.0);
+        rng.fill_normal_f32(&mut v, 0.0, 1.0);
+        Ok(PrefillOut { logits, k, v, obs: vec![0.0; m.n_layers * m.prefill_len] })
+    }
+
+    fn decode(&self, token: i32, pos: i32, _buf_idx: i32, view: &CacheView) -> Result<DecodeOut> {
+        let capacity = match view {
+            CacheView::Quant(q) => q.capacity,
+            CacheView::Fp32 { capacity, .. } => *capacity,
+        };
+        let m = &self.m;
+        let span = capacity + m.buf_slots;
+        let kvd = m.n_kv_heads * m.d_head;
+        let seed = ((token as u32 as u64) << 32) | pos as u32 as u64;
+        let mut rng = Rng::new(seed ^ 0x5EED_CAFE);
+        let mut logits = vec![0f32; m.vocab];
+        let mut new_k = vec![0f32; m.n_layers * kvd];
+        let mut new_v = vec![0f32; m.n_layers * kvd];
+        let mut probs = vec![0f32; m.n_layers * m.n_heads * span];
+        rng.fill_normal_f32(&mut logits, 0.0, 1.0);
+        rng.fill_normal_f32(&mut new_k, 0.0, 1.0);
+        rng.fill_normal_f32(&mut new_v, 0.0, 1.0);
+        rng.fill_normal_f32(&mut probs, 0.5, 0.2);
+        for p in probs.iter_mut() {
+            *p = p.abs();
+        }
+        Ok(DecodeOut { logits, new_k, new_v, probs })
+    }
+}
+
+fn mode_for(tag: usize) -> CompressionMode {
+    match tag {
+        0 => CompressionMode::thinkv_default(),
+        1 => CompressionMode::parse("kivi2").expect("kivi2 parses"),
+        _ => CompressionMode::FullKv,
+    }
+}
+
+fn cfg_for(tag: usize, max_new: usize, temperature: f64) -> ServeConfig {
+    ServeConfig {
+        mode: mode_for(tag),
+        budget: 64,
+        max_new_tokens: max_new,
+        workers: 1,
+        temperature,
+        ..ServeConfig::default()
+    }
+}
+
+/// Reference: each session advanced alone, one `Session::step` at a
+/// time (no scheduler, no batching).
+fn run_sequential(
+    engine: &FakeEngine,
+    man: &Manifest,
+    cfgs: &[ServeConfig],
+    prompts: &[Vec<i32>],
+) -> Vec<Vec<i32>> {
+    let mut streams = Vec::new();
+    for (i, (cfg, prompt)) in cfgs.iter().zip(prompts).enumerate() {
+        let mut s = Session::new(i as u64 + 1, prompt.clone(), cfg, man).expect("session");
+        loop {
+            match s.step(engine).expect("sequential step") {
+                StepOutcome::Running => {}
+                StepOutcome::Finished => break,
+                StepOutcome::NeedMemory => panic!("unbounded pool cannot starve"),
+            }
+        }
+        streams.push(s.tokens.clone());
+    }
+    streams
+}
+
+/// Batched: the production path — scheduler batch formation plus the
+/// worker chunk body (`advance_batch`, one fused call per step) —
+/// driven with randomized batch caps and chunk lengths.
+fn run_batched(
+    engine: &FakeEngine,
+    man: &Manifest,
+    cfgs: &[ServeConfig],
+    prompts: &[Vec<i32>],
+    g: &mut prop::Gen,
+) -> (Vec<Vec<i32>>, thinkv::metrics::SchedSnapshot) {
+    let pool = Arc::new(BlockPool::new(u64::MAX / 2));
+    let sched = Scheduler::new(Arc::clone(&pool));
+    let (tx, rx) = mpsc::channel();
+    for (i, (cfg, prompt)) in cfgs.iter().zip(prompts).enumerate() {
+        let s = Session::with_pool(
+            i as u64 + 1,
+            prompt.clone(),
+            cfg,
+            man,
+            Some(Arc::clone(&pool)),
+        )
+        .expect("session");
+        sched.submit(s, tx.clone());
+    }
+    drop(tx);
+    while sched.inflight() > 0 {
+        let max = g.usize(1, 6);
+        let chunk = g.usize(1, 7);
+        let batch = sched.next_batch(max).expect("runnable batch while inflight");
+        advance_batch(&sched, engine, chunk, batch);
+    }
+    let mut results: Vec<RequestResult> = rx.iter().collect();
+    results.sort_by_key(|r| r.id);
+    let snap = sched.snapshot();
+    for r in &results {
+        assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+    }
+    (results.into_iter().map(|r| r.tokens).collect(), snap)
+}
+
+/// Batched decode must be stream-invariant: identical token streams to
+/// sequential execution across randomized batch compositions, and the
+/// fused-step books must balance.
+#[test]
+fn batched_decode_streams_match_sequential() {
+    prop::check(8, |g| {
+        let man = tiny_manifest();
+        let engine = FakeEngine::new(man.model.clone());
+        let n = g.usize(2, 7);
+        let max_new = g.usize(4, 20);
+        let temperature = if g.bool() { 0.8 } else { 0.0 };
+        let mut rng = Rng::new(g.usize(0, 1 << 30) as u64);
+        let cfgs: Vec<ServeConfig> = (0..n)
+            .map(|_| cfg_for(rng.below(3), max_new, temperature))
+            .collect();
+        let prompts: Vec<Vec<i32>> = (0..n)
+            .map(|_| {
+                (0..rng.below(24) + 3)
+                    .map(|_| rng.below(man.model.vocab) as i32)
+                    .collect()
+            })
+            .collect();
+
+        let sequential = run_sequential(&engine, &man, &cfgs, &prompts);
+        let (batched, snap) = run_batched(&engine, &man, &cfgs, &prompts, g);
+
+        for (i, (seq, bat)) in sequential.iter().zip(&batched).enumerate() {
+            if seq != bat {
+                return Err(format!(
+                    "session {} diverged: sequential {:?} vs batched {:?}",
+                    i + 1,
+                    seq,
+                    bat
+                ));
+            }
+            if seq.len() != max_new {
+                return Err(format!("session {} truncated: {} tokens", i + 1, seq.len()));
+            }
+        }
+        // every decode step went through the fused entry point, the
+        // histogram accounts for every fused step, and the pool drained
+        if snap.fused_steps == 0 {
+            return Err("no fused steps recorded".into());
+        }
+        if snap.fused_sessions < snap.fused_steps {
+            return Err("fused_sessions must count at least one session per step".into());
+        }
+        if snap.batch_hist.iter().sum::<u64>() != snap.fused_steps {
+            return Err("batch histogram does not account for every fused step".into());
+        }
+        if snap.completions != n as u64 || snap.pool_used != 0 {
+            return Err(format!(
+                "books unbalanced at quiescence: completions {}, pool_used {}",
+                snap.completions, snap.pool_used
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Sessions of different cache families never share a fused call, yet
+/// a mixed workload still completes with identical streams — the
+/// compatibility key only affects grouping, never results.
+#[test]
+fn mixed_family_batches_complete_and_match() {
+    prop::check_seeded(7, 1, |g| {
+        let man = tiny_manifest();
+        let engine = FakeEngine::new(man.model.clone());
+        // two sessions of each family, interleaved
+        let cfgs: Vec<ServeConfig> = (0..6).map(|i| cfg_for(i % 3, 8, 0.0)).collect();
+        let prompts: Vec<Vec<i32>> = (0..6)
+            .map(|u| (0..16).map(|i| ((i * 5 + u) % 64) as i32).collect())
+            .collect();
+        let sequential = run_sequential(&engine, &man, &cfgs, &prompts);
+        let (batched, snap) = run_batched(&engine, &man, &cfgs, &prompts, g);
+        if sequential != batched {
+            return Err("mixed-family streams must match".into());
+        }
+        if snap.fused_steps == 0 || snap.completions != 6 {
+            return Err(format!(
+                "fused bookkeeping off: steps {}, completions {}",
+                snap.fused_steps, snap.completions
+            ));
+        }
+        Ok(())
+    });
+}

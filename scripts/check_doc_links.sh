@@ -1,0 +1,26 @@
+#!/bin/sh
+# Doc-link check: every relative markdown link in the top-level docs
+# must resolve to a real file, so README <-> ARCHITECTURE (and friends)
+# cannot silently rot. External (http/https) links and pure #anchors
+# are skipped. Run from the repo root: scripts/check_doc_links.sh
+set -eu
+
+status=0
+for doc in README.md docs/ARCHITECTURE.md ROADMAP.md CHANGES.md; do
+    [ -f "$doc" ] || { echo "missing doc: $doc"; status=1; continue; }
+    dir=$(dirname "$doc")
+    # extract (target) of every markdown [text](target) link
+    links=$(grep -oE '\]\([^)]+\)' "$doc" | sed 's/^](//; s/)$//') || true
+    for link in $links; do
+        case "$link" in
+            http://*|https://*|\#*) continue ;;
+        esac
+        target="$dir/${link%%#*}"
+        if [ ! -e "$target" ]; then
+            echo "broken link in $doc: $link"
+            status=1
+        fi
+    done
+done
+[ "$status" -eq 0 ] && echo "doc links OK"
+exit "$status"
