@@ -1,15 +1,28 @@
 //! Scheduler saturation bench: max admitted batch per GPU (the Tables
 //! 2/3 "Batch" column discipline), throughput under oversubscribed
 //! offered load, the swap-vs-recompute preemption sweep
-//! (suspend-to-host cost vs CoT replay cost), and the cross-session
+//! (suspend-to-host cost vs CoT replay cost), the cross-session
 //! batched-decode launch-amortization sweep (one fused engine call per
-//! step vs per-session launches), using the analytic cost model — plus
-//! a real coordinator oversubscription mini-run comparing both
-//! preemption policies when artifacts exist.
+//! step vs per-session launches), and the **shared-prefix
+//! common-system-prompt sweep** (max concurrent sessions with vs
+//! without cross-session prefix sharing, driven artifact-free on a
+//! causal engine fake) — plus a real coordinator oversubscription
+//! mini-run comparing both preemption policies when artifacts exist.
+
+use std::sync::{mpsc, Arc};
 
 use thinkv::bench::{write_results, Table};
-use thinkv::kvcache::BlockPool;
+use thinkv::coordinator::{advance_batch, CompressionMode, Scheduler, ServeConfig, Session};
+use thinkv::kvcache::{BlockPool, PrefixIndex};
 use thinkv::sim::{GpuProfile, LrmProfile, ServingCost};
+use thinkv::testkit::{share_manifest, CausalEngine};
+
+fn drain(sched: &Scheduler, engine: &CausalEngine) {
+    while sched.inflight() > 0 {
+        let batch = sched.next_batch(4).expect("runnable batch while inflight");
+        advance_batch(sched, engine, 4, batch);
+    }
+}
 
 fn main() {
     let model = LrmProfile::r1_llama_8b();
@@ -137,13 +150,145 @@ fn main() {
     }
     t4.print();
 
-    // Part 5: real coordinator oversubscription mini-run (CPU PJRT),
+    // Part 5: cross-session prefix sharing — the common-system-prompt
+    // sweep. Runs artifact-free (causal engine fake): the measured
+    // quantity is pool admission, not kernel time. One publisher leaves
+    // the system prompt resident; a pool sized for ~1 full prefix + N
+    // deltas must then admit all N sharers concurrently, where the
+    // unshared path (full-prefix admission) fits only a fraction.
+    let mut t6 = Table::new(
+        "Prefix sharing: max concurrent sessions, shared vs unshared (pool = 1 prefix + N deltas)",
+        &["sharers", "pool_KB", "shared_running", "unshared_running", "hits", "cow"],
+    );
+    let man = share_manifest();
+    let engine = CausalEngine::new(man.model.clone());
+    let cfg = ServeConfig {
+        mode: CompressionMode::parse("thinkv-notbe").expect("mode"),
+        budget: 256,
+        max_new_tokens: 6,
+        workers: 1,
+        temperature: 0.0,
+        ..ServeConfig::default()
+    };
+    let system: Vec<i32> = (0..88).map(|i| ((i * 3) % 60) as i32).collect();
+    let prompt_for = |s: usize| -> Vec<i32> {
+        let mut p = system.clone();
+        p.extend((0..8).map(|i| (s * 8 + i) as i32));
+        p
+    };
+    // measure the byte economics once on an unbounded pool
+    let (est, resident, delta) = {
+        let pool = Arc::new(BlockPool::new(u64::MAX / 2));
+        let idx = PrefixIndex::new(Arc::clone(&pool), 8);
+        let sched = Scheduler::with_prefix(Arc::clone(&pool), None, Some(Arc::clone(&idx)));
+        let (tx, rx) = mpsc::channel();
+        let publisher = Session::with_parts(
+            1,
+            prompt_for(0),
+            &cfg,
+            &man,
+            Some(Arc::clone(&pool)),
+            Some(Arc::clone(&idx)),
+        )
+        .expect("session");
+        let est = publisher.admission_bytes();
+        sched.submit(publisher, tx);
+        drain(&sched, &engine);
+        let _ = rx.iter().count();
+        let probe = Session::with_parts(
+            2,
+            prompt_for(1),
+            &cfg,
+            &man,
+            Some(Arc::clone(&pool)),
+            Some(Arc::clone(&idx)),
+        )
+        .expect("session");
+        (est, idx.stats().resident_bytes, probe.admission_bytes())
+    };
+    assert!(resident > 0 && delta < est, "sharing must shrink admission");
+    let mut total_hits = 0u64;
+    for sharers in [2usize, 6, 12] {
+        let pool_bytes = (est + resident).max(resident + sharers as u64 * delta) + 4096;
+        // shared: publisher first, then N sharers admitted concurrently
+        let pool = Arc::new(BlockPool::new(pool_bytes));
+        let idx = PrefixIndex::new(Arc::clone(&pool), 8);
+        let sched = Scheduler::with_prefix(Arc::clone(&pool), None, Some(Arc::clone(&idx)));
+        let (tx, rx) = mpsc::channel();
+        let publisher = Session::with_parts(
+            1,
+            prompt_for(0),
+            &cfg,
+            &man,
+            Some(Arc::clone(&pool)),
+            Some(Arc::clone(&idx)),
+        )
+        .expect("session");
+        sched.submit(publisher, tx.clone());
+        drain(&sched, &engine);
+        for s in 1..=sharers {
+            let sess = Session::with_parts(
+                s as u64 + 1,
+                prompt_for(s),
+                &cfg,
+                &man,
+                Some(Arc::clone(&pool)),
+                Some(Arc::clone(&idx)),
+            )
+            .expect("session");
+            sched.submit(sess, tx.clone());
+        }
+        let shared_running = sched.snapshot().running;
+        assert_eq!(
+            shared_running, sharers,
+            "1 prefix + {sharers} deltas must admit every sharer"
+        );
+        drain(&sched, &engine);
+        drop(tx);
+        assert_eq!(rx.iter().filter(|r| r.error.is_none()).count(), sharers + 1);
+        let snap = sched.snapshot();
+        assert!(snap.pool_peak <= snap.pool_capacity, "pool overflow");
+        assert!(snap.prefix_hits as usize >= sharers, "sharers must hit the trie");
+        total_hits += snap.prefix_hits;
+        // unshared: the same pool admits far fewer up front
+        let pool2 = Arc::new(BlockPool::new(pool_bytes));
+        let sched2 = Scheduler::new(Arc::clone(&pool2));
+        let (tx2, _rx2) = mpsc::channel();
+        for s in 1..=sharers {
+            let sess =
+                Session::with_pool(s as u64, prompt_for(s), &cfg, &man, Some(Arc::clone(&pool2)))
+                    .expect("session");
+            sched2.submit(sess, tx2.clone());
+        }
+        let unshared_running = sched2.snapshot().running;
+        assert!(
+            unshared_running < sharers || sharers <= (pool_bytes / est) as usize,
+            "sharing must multiply admission ({unshared_running} vs {sharers})"
+        );
+        sched2.shutdown();
+        t6.row(&[
+            format!("{sharers}"),
+            format!("{:.1}", pool_bytes as f64 / 1024.0),
+            format!("{shared_running}"),
+            format!("{unshared_running}"),
+            format!("{}", snap.prefix_hits),
+            format!("{}", snap.prefix_cow_faults),
+        ]);
+        sched.shutdown();
+    }
+    t6.print();
+    // machine-greppable gate: CI asserts the sharing path actually hit
+    println!("prefix_hits={total_hits}");
+    assert!(total_hits > 0, "shared-prefix sweep must record hits");
+
+    // Part 6: real coordinator oversubscription mini-run (CPU PJRT),
     // recompute preemption vs suspend-to-host swap
     let artifacts = format!("{}/model_config.json", thinkv::model::default_artifacts_dir());
     let mut j = t.to_json();
     j.set("saturation", t2.to_json());
     j.set("swap_vs_recompute", t3.to_json());
     j.set("launch_amortization", t4.to_json());
+    j.set("prefix_sharing", t6.to_json());
     if std::path::Path::new(&artifacts).exists()
         && std::env::var("THINKV_BENCH_REAL").map(|v| v == "1").unwrap_or(true)
     {
@@ -212,5 +357,5 @@ fn main() {
         j.set("real_oversubscription", t5.to_json());
     }
     write_results("scheduler_saturation", j);
-    println!("\nExpected shape: FullKV admits ~13 requests on A100 while ThinKV admits\nhundreds; past saturation the scheduler queues instead of overflowing, and\nthe real run completes every request with pool.peak() <= capacity. In the\nswap-vs-recompute sweep ThinKV's suspend-to-host round trip is orders of\nmagnitude cheaper than replaying the CoT (and the real swap run finishes\nwith zero replayed steps), while FullKV must move GBs per preemption. The\nlaunch-amortization sweep shows fused-step throughput rising with decode\nbatch size: one fused call per step beats N per-session launches (the\nTables 2/3 large-batch regime).");
+    println!("\nExpected shape: FullKV admits ~13 requests on A100 while ThinKV admits\nhundreds; past saturation the scheduler queues instead of overflowing, and\nthe real run completes every request with pool.peak() <= capacity. In the\nswap-vs-recompute sweep ThinKV's suspend-to-host round trip is orders of\nmagnitude cheaper than replaying the CoT (and the real swap run finishes\nwith zero replayed steps), while FullKV must move GBs per preemption. The\nlaunch-amortization sweep shows fused-step throughput rising with decode\nbatch size: one fused call per step beats N per-session launches (the\nTables 2/3 large-batch regime). The prefix-sharing sweep shows a pool\nsized for one resident system prompt plus N deltas admitting all N\nsharers concurrently while full-prefix admission fits only a fraction.");
 }

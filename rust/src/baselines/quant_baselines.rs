@@ -70,15 +70,34 @@ impl PmKvq {
         total / len as f64
     }
 
+    /// Smallest token age at which the schedule demotes below the
+    /// freshest precision — before this age [`PmKvq::apply`] is a no-op,
+    /// and a shared-prefix backend can defer its copy-on-write.
+    pub fn first_demotion_age(&self) -> usize {
+        let base = self.schedule[0].1;
+        self.schedule
+            .iter()
+            .filter(|(_, p)| p.bits() < base.bits())
+            .map(|&(thr, _)| thr)
+            .min()
+            .unwrap_or(usize::MAX)
+    }
+
     /// Requantize every live slot whose age-mandated precision dropped.
-    /// Returns the number of slots requantized.
+    /// Returns the number of slots requantized. Slots in a read-only
+    /// shared-prefix region are skipped — the owning backend privatizes
+    /// (copy-on-write) before requantization may touch them.
     pub fn apply(&self, cache: &mut CtCache, current_pos: usize) -> usize {
         let c = cache.cfg.capacity;
         let kvd = cache.cfg.kv_dim();
         let g_per = cache.cfg.hkv * cache.cfg.groups();
+        let shared = cache.shared_len();
         let mut changed = 0;
         for l in 0..cache.cfg.layers {
             for slot in cache.tables[l].live_slot_ids() {
+                if slot < shared {
+                    continue;
+                }
                 let pos = cache.tables[l].slot_pos[slot];
                 if pos < 0 {
                     continue;

@@ -143,13 +143,21 @@ impl Tbe {
     }
 
     /// Oldest, least-important segment whose next anneal would evict.
+    /// Slots inside a read-only shared-prefix region don't count — a
+    /// segment that is only "big" because of protected slots cannot
+    /// shrink, so picking it would spin without progress.
     fn pick_case2_victim(&self, cache: &CtCache) -> Option<usize> {
         let last = cache.segments.len().saturating_sub(1);
+        let shared = cache.shared_len();
         cache
             .segments
             .iter()
             .filter(|s| s.id != last) // never the active segment
-            .filter(|s| cache.tables[0].segment_slots(s.id).len() > self.cfg.min_keep())
+            .filter(|s| {
+                let slots = cache.tables[0].segment_slots(s.id);
+                let protected = slots.iter().filter(|&&sl| sl < shared).count();
+                slots.len() > self.cfg.min_keep().max(protected)
+            })
             .min_by_key(|s| (s.thought.importance(), s.start_pos))
             .map(|s| s.id)
     }
@@ -165,16 +173,27 @@ impl Tbe {
             return false;
         }
         let keep = self.cfg.next_level_below(live0);
+        let shared = cache.shared_len();
         let mut any = false;
         for l in 0..cache.cfg.layers {
-            let slots = cache.tables[l].segment_slots(seg);
-            if slots.len() <= keep {
+            let all = cache.tables[l].segment_slots(seg);
+            if all.len() <= keep {
+                continue;
+            }
+            // slots in a read-only shared-prefix region are auto-kept (a
+            // denied copy-on-write pins them); k-means selects survivors
+            // among the evictable remainder only. With no shared region
+            // this is exactly the previous behavior.
+            let protected = all.iter().filter(|&&s| s < shared).count();
+            let slots: Vec<usize> = all.into_iter().filter(|&s| s >= shared).collect();
+            let keep_free = keep.saturating_sub(protected);
+            if slots.len() <= keep_free {
                 continue;
             }
             let keys: Vec<Vec<f32>> = slots.iter().map(|&s| cache.dequant_key(l, s)).collect();
             let keep_idx = kmeans_select(
                 &keys,
-                keep,
+                keep_free,
                 self.cfg.seed ^ (seg as u64) << 8 ^ l as u64,
                 self.cfg.kmeans_iters,
             );

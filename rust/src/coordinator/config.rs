@@ -112,6 +112,15 @@ pub struct ServeConfig {
     /// oversized snapshots (and `None`) fall back to the PR 1
     /// recompute-from-prompt path.
     pub swap_bytes: Option<u64>,
+    /// Cross-session prefix sharing: identical block-aligned prompt
+    /// prefixes (system prompts, few-shot templates) are stored and
+    /// charged to the block pool **once**; later sessions attach the
+    /// resident read-only blocks, pay only their delta, and privatize
+    /// via copy-on-write on the first divergent write. Off by default —
+    /// correctness relies on causal prefill (K/V of a prefix token
+    /// depends only on the tokens before it), which holds for the real
+    /// engine.
+    pub prefix_share: bool,
 }
 
 impl Default for ServeConfig {
@@ -130,6 +139,7 @@ impl Default for ServeConfig {
             seed: 42,
             pool_bytes: None,
             swap_bytes: None,
+            prefix_share: false,
         }
     }
 }

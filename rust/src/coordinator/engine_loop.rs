@@ -15,7 +15,7 @@ use std::thread;
 
 use anyhow::Result;
 
-use crate::kvcache::{BlockPool, SwapPool};
+use crate::kvcache::{BlockPool, PrefixIndex, SwapPool};
 use crate::metrics::{Breakdown, SchedSnapshot};
 use crate::runtime::{BatchDecodeReq, DecodeEngine, Engine};
 
@@ -27,6 +27,11 @@ use super::session::{Session, StepOutcome, StepPrep};
 /// effectively unbounded, so memory accounting stays on without ever
 /// refusing admission.
 const UNBOUNDED_POOL_BYTES: u64 = u64::MAX / 2;
+
+/// Prefix-trie granularity: prompts share in whole blocks of this many
+/// tokens, matching the CT block-table block size `build_backend`
+/// compiles caches with.
+const PREFIX_BLOCK_TOKENS: usize = 8;
 
 /// Final outcome of a request.
 #[derive(Debug, Clone)]
@@ -71,14 +76,16 @@ impl RequestResult {
             .first_token_at
             .map(|t| t.duration_since(s.created).as_secs_f64() * 1e3)
             .unwrap_or(total_ms);
-        let n = s.tokens.len().max(1) as f64;
+        // the first token comes from prefill logits (its latency is
+        // ttft), so `total - ttft` spans only the n-1 decode gaps
+        let gaps = s.tokens.len().saturating_sub(1).max(1) as f64;
         let (gather_calls, gather_bytes, _) = s.gather_stats();
         RequestResult {
             id: s.id,
             tokens: s.tokens.clone(),
             ttft_ms,
             total_ms,
-            tpot_ms: (total_ms - ttft_ms).max(0.0) / n,
+            tpot_ms: (total_ms - ttft_ms).max(0.0) / gaps,
             breakdown: s.breakdown.clone(),
             avg_bits: s.avg_bits(),
             live_tokens: s.live_tokens(),
@@ -129,7 +136,13 @@ impl Coordinator {
         // suspend-to-host preemption: swapped sessions resume instead of
         // recomputing whenever their snapshot fits this host pool
         let swap = cfg.swap_bytes.map(|b| Arc::new(SwapPool::new(b)));
-        let scheduler = Arc::new(Scheduler::with_swap(pool, swap));
+        // cross-session prefix sharing: the index accounts its resident
+        // payloads against the same block pool the scheduler admits
+        // from, at the CT block granularity
+        let prefix = cfg
+            .prefix_share
+            .then(|| PrefixIndex::new(Arc::clone(&pool), PREFIX_BLOCK_TOKENS));
+        let scheduler = Arc::new(Scheduler::with_prefix(pool, swap, prefix));
         let mut workers = Vec::new();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         for w in 0..cfg.workers.max(1) {
@@ -178,12 +191,13 @@ impl Coordinator {
     /// when the request's KV demand can never fit the pool.
     pub fn submit(&self, prompt: Vec<i32>) -> Result<RequestHandle> {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        let session = Session::with_pool(
+        let session = Session::with_parts(
             id,
             prompt,
             &self.cfg,
             &self.manifest,
             Some(Arc::clone(self.scheduler.pool())),
+            self.scheduler.prefix_index().cloned(),
         )?;
         if session.admission_bytes() > self.scheduler.pool().capacity() {
             anyhow::bail!(
@@ -422,5 +436,59 @@ pub fn advance_batch(
 fn worker_loop(scheduler: &Scheduler, engine: &Engine, chunk: usize, max_batch: usize) {
     while let Some(batch) = scheduler.next_batch(max_batch) {
         advance_batch(scheduler, engine, chunk, batch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::session::StepOutcome;
+    use crate::coordinator::test_support::{tiny_cfg, tiny_manifest, FakeEngine};
+    use std::time::{Duration, Instant};
+
+    /// The first token comes from prefill logits (its latency is the
+    /// ttft), so `tpot` must divide the post-ttft window by the n-1
+    /// decode gaps — not by n (the pre-fix off-by-one, which understated
+    /// tpot by (n-1)/n).
+    #[test]
+    fn tpot_divides_by_decode_gaps_not_token_count() {
+        let man = tiny_manifest();
+        let cfg = ServeConfig { max_new_tokens: 5, ..tiny_cfg() };
+        let engine = FakeEngine::new(man.model.clone());
+        let mut s = Session::new(1, vec![1, 2, 3], &cfg, &man).unwrap();
+        loop {
+            match s.step(&engine).unwrap() {
+                StepOutcome::Finished => break,
+                StepOutcome::Running => {}
+                StepOutcome::NeedMemory => panic!("no pool bound"),
+            }
+        }
+        assert_eq!(s.tokens.len(), 5);
+        // pin the timeline: 100 ms total, 10 ms ttft -> 90 ms over 4 gaps
+        let now = Instant::now();
+        s.created = now - Duration::from_millis(100);
+        s.first_token_at = Some(now - Duration::from_millis(90));
+        s.finished_at = Some(now);
+        let r = RequestResult::from_session(&s);
+        let window = r.total_ms - r.ttft_ms;
+        assert!(window > 80.0, "timeline pinned: {window}");
+        assert!(
+            (r.tpot_ms - window / 4.0).abs() < 1e-9,
+            "5 tokens = 4 decode gaps: tpot {} vs window {}",
+            r.tpot_ms,
+            window
+        );
+        assert!(
+            r.tpot_ms > window / 5.0 + 1.0,
+            "must not divide by the token count"
+        );
+
+        // a single-token result degrades to the whole window, no panic
+        let cfg1 = ServeConfig { max_new_tokens: 1, ..tiny_cfg() };
+        let mut one = Session::new(2, vec![1], &cfg1, &man).unwrap();
+        while !matches!(one.step(&engine).unwrap(), StepOutcome::Finished) {}
+        assert_eq!(one.tokens.len(), 1);
+        let r1 = RequestResult::from_session(&one);
+        assert!(r1.tpot_ms >= 0.0);
     }
 }

@@ -87,6 +87,8 @@ pub mod engine_loop;
 pub mod sampler;
 pub mod scheduler;
 pub mod session;
+#[cfg(test)]
+pub(crate) mod test_support;
 
 pub use config::{CompressionMode, ServeConfig};
 pub use engine_loop::{advance_batch, Coordinator, RequestHandle, RequestResult};

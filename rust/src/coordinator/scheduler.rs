@@ -53,7 +53,7 @@ use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 
-use crate::kvcache::{BlockPool, SwapPool};
+use crate::kvcache::{BlockPool, PrefixIndex, SwapPool};
 use crate::metrics::SchedSnapshot;
 
 use super::engine_loop::RequestResult;
@@ -120,6 +120,12 @@ pub struct Scheduler {
     /// Host-side pool for suspend-to-host preemption; `None` = every
     /// preemption recomputes (PR 1 behavior).
     swap: Option<Arc<SwapPool>>,
+    /// Cross-session prefix index; `None` = no sharing. Owned here so
+    /// admission pressure can reclaim *unreferenced* resident prefixes
+    /// before refusing admission or preempting a live session —
+    /// eviction/preemption never reclaims a prefix any session (running
+    /// or suspended) still references.
+    prefix: Option<Arc<PrefixIndex>>,
     inner: Mutex<Inner>,
     cv: Condvar,
     stop: AtomicBool,
@@ -145,9 +151,20 @@ impl Scheduler {
     /// A scheduler whose preemptions suspend to `swap` when the victim's
     /// cache snapshot fits, recomputing otherwise.
     pub fn with_swap(pool: Arc<BlockPool>, swap: Option<Arc<SwapPool>>) -> Scheduler {
+        Scheduler::with_prefix(pool, swap, None)
+    }
+
+    /// [`Scheduler::with_swap`] plus a cross-session prefix index (must
+    /// account against the same `pool`).
+    pub fn with_prefix(
+        pool: Arc<BlockPool>,
+        swap: Option<Arc<SwapPool>>,
+        prefix: Option<Arc<PrefixIndex>>,
+    ) -> Scheduler {
         Scheduler {
             pool,
             swap,
+            prefix,
             inner: Mutex::new(Inner {
                 waiting: VecDeque::new(),
                 runnable: VecDeque::new(),
@@ -181,6 +198,11 @@ impl Scheduler {
         self.swap.as_ref()
     }
 
+    /// The cross-session prefix index, when sharing is enabled.
+    pub fn prefix_index(&self) -> Option<&Arc<PrefixIndex>> {
+        self.prefix.as_ref()
+    }
+
     pub fn inflight(&self) -> u64 {
         self.inflight.load(Ordering::SeqCst)
     }
@@ -203,7 +225,15 @@ impl Scheduler {
         while let Some(front) = inner.waiting.front() {
             let need = front.session.admission_bytes();
             if !self.pool.reserve(need) {
-                break;
+                // before refusing: reclaim resident prefixes no session
+                // references any more, then retry once
+                let reclaimable = self
+                    .prefix
+                    .as_ref()
+                    .map_or(0, |p| p.reclaim_unreferenced(need.saturating_sub(self.pool.free())));
+                if reclaimable == 0 || !self.pool.reserve(need) {
+                    break;
+                }
             }
             let mut entry = inner.waiting.pop_front().expect("front exists");
             entry.session.grant(need);
@@ -312,10 +342,23 @@ impl Scheduler {
         self.cv.notify_all();
     }
 
-    /// A session's decode step could not reserve its KV growth. Preempt
-    /// the youngest admitted session (possibly the caller itself); fail
-    /// the request outright if it is alone and still cannot grow.
+    /// A session's decode step could not reserve its KV growth. First
+    /// reclaim unreferenced shared prefixes; if that frees anything the
+    /// caller simply retries. Otherwise preempt the youngest admitted
+    /// session (possibly the caller itself); fail the request outright
+    /// if it is alone and still cannot grow.
     pub fn cannot_grow(&self, entry: Entry) {
+        if let Some(p) = &self.prefix {
+            // prefix cache yields before any live session is preempted
+            // (only entries with zero refs are ever reclaimed)
+            if p.reclaim_unreferenced(entry.session.step_headroom_bytes()) > 0 {
+                let mut inner = self.inner.lock().unwrap();
+                inner.held.remove(&entry.session.id);
+                inner.runnable.push_front(entry);
+                self.cv.notify_all();
+                return;
+            }
+        }
         let mut inner = self.inner.lock().unwrap();
         inner.held.remove(&entry.session.id);
         let my_seq = *inner.admitted.get(&entry.session.id).expect("caller is admitted");
@@ -343,14 +386,26 @@ impl Scheduler {
             }
             Some((vid, vseq)) if vseq > my_seq => {
                 // Victim is younger than the caller: preempt it now if it
-                // sits in the runnable queue, otherwise mark it so its
-                // worker vacates it at the next chunk boundary. Either
-                // way the caller parks in `stalled` until the victim's
-                // bytes come back (the unstall wakes it first).
+                // sits in the runnable or stalled queues, otherwise mark
+                // it so its worker vacates it at the next chunk boundary.
+                // Either way the caller parks in `stalled` until the
+                // victim's bytes come back (the unstall wakes it first).
                 inner.starving.insert(entry.session.id);
                 inner.stalled.push_back(entry);
                 if let Some(idx) = inner.runnable.iter().position(|e| e.session.id == vid) {
                     let victim = inner.runnable.remove(idx).expect("index valid");
+                    inner.forget(vid);
+                    inner.pending_preempts += 1;
+                    drop(inner);
+                    self.preempt_unlocked(victim);
+                } else if let Some(idx) = inner.stalled.iter().position(|e| e.session.id == vid) {
+                    // A stalled victim holds bytes and no worker, so a
+                    // preemption mark would never be honored (marks are
+                    // only checked at yield_back chunk boundaries, which
+                    // a parked session never reaches) — two mutually
+                    // starving sessions would livelock. Preempt it
+                    // directly instead.
+                    let victim = inner.stalled.remove(idx).expect("index valid");
                     inner.forget(vid);
                     inner.pending_preempts += 1;
                     drop(inner);
@@ -444,6 +499,7 @@ impl Scheduler {
     /// Point-in-time counters for metrics / the server `stats` command.
     pub fn snapshot(&self) -> SchedSnapshot {
         let swap = self.swap.as_ref().map(|s| s.stats()).unwrap_or_default();
+        let prefix = self.prefix.as_ref().map(|p| p.stats()).unwrap_or_default();
         let inner = self.inner.lock().unwrap();
         SchedSnapshot {
             pool_capacity: self.pool.capacity(),
@@ -469,6 +525,16 @@ impl Scheduler {
             swap_bytes_in: swap.bytes_in,
             swap_restore_ns: swap.restore_ns,
             swap_fallbacks: swap.fallbacks,
+            prefix_enabled: self.prefix.is_some(),
+            prefix_hits: prefix.hits,
+            prefix_misses: prefix.misses,
+            prefix_inserts: prefix.inserts,
+            prefix_publish_fails: prefix.publish_fails,
+            prefix_cow_faults: prefix.cow_faults,
+            prefix_cow_denied: prefix.cow_denied,
+            prefix_reclaims: prefix.reclaims,
+            prefix_resident_bytes: prefix.resident_bytes,
+            prefix_resident_entries: prefix.resident_entries,
         }
     }
 }
@@ -803,6 +869,139 @@ mod tests {
         assert_eq!(snap.batch_hist[3], 2);
         assert_eq!(snap.batch_hist[BATCH_HIST_BUCKETS - 1], 1);
         assert_eq!(snap.batch_hist.iter().sum::<u64>(), snap.fused_steps);
+    }
+
+    /// Regression (mutual-stall livelock): a preemption victim that is
+    /// itself parked in `stalled` holds pool bytes but no worker, so a
+    /// preemption mark would never be honored (marks are checked only at
+    /// `yield_back` chunk boundaries). `cannot_grow` must preempt it
+    /// directly instead of marking it.
+    #[test]
+    fn stalled_victim_is_preempted_directly_not_marked() {
+        let cfg = tiny_cfg();
+        let man = tiny_manifest();
+        let probe = mk_session(0, &cfg, &man, &Arc::new(BlockPool::new(u64::MAX / 2)));
+        let per = probe.admission_bytes();
+        let pool = Arc::new(BlockPool::new(2 * per));
+        let sched = Scheduler::new(Arc::clone(&pool));
+        let (tx, _rx) = mpsc::channel();
+        sched.submit(mk_session(1, &cfg, &man, &pool), tx.clone());
+        sched.submit(mk_session(2, &cfg, &man, &pool), tx.clone());
+        let older = sched.next().unwrap();
+        let younger = sched.next().unwrap();
+        assert_eq!((older.session.id, younger.session.id), (1, 2));
+        // Park the younger session in `stalled` by hand — the state it
+        // reaches when its own growth failed while a preemption was in
+        // flight (cannot_grow's pending-preempts branch).
+        {
+            let mut inner = sched.inner.lock().unwrap();
+            inner.held.remove(&younger.session.id);
+            inner.starving.insert(younger.session.id);
+            inner.stalled.push_back(younger);
+        }
+        sched.cannot_grow(older);
+        let snap = sched.snapshot();
+        assert_eq!(snap.preemptions, 1, "stalled victim preempted directly");
+        assert_eq!(snap.running, 1, "victim left the admitted set");
+        {
+            let inner = sched.inner.lock().unwrap();
+            assert!(inner.preempt_marks.is_empty(), "no unhonorable mark left behind");
+            assert!(inner.stalled.is_empty(), "freed bytes unstalled the caller");
+            assert_eq!(inner.waiting.front().map(|e| e.session.id), Some(2));
+        }
+        // the starved caller retries first and makes progress
+        let retry = sched.next().expect("caller unstalled");
+        assert_eq!(retry.session.id, 1);
+        sched.yield_back(retry);
+        assert_eq!(sched.snapshot().running, 2, "victim re-admitted after the yield");
+    }
+
+    /// Admission reclaims resident-but-unreferenced shared prefixes
+    /// before refusing (and cannot_grow reclaims them before preempting
+    /// a live session); entries with attached refs are never touched.
+    #[test]
+    fn admission_reclaims_unreferenced_prefixes() {
+        use crate::kvcache::{PrefixGeom, PrefixIndex, PrefixPayload};
+        let cfg = tiny_cfg();
+        let man = tiny_manifest();
+        let probe = mk_session(0, &cfg, &man, &Arc::new(BlockPool::new(u64::MAX / 2)));
+        let per = probe.admission_bytes();
+        let pool = Arc::new(BlockPool::new(2 * per));
+        let idx = PrefixIndex::new(Arc::clone(&pool), 8);
+        let sched = Scheduler::with_prefix(Arc::clone(&pool), None, Some(Arc::clone(&idx)));
+        let (tx, _rx) = mpsc::channel();
+        sched.submit(mk_session(1, &cfg, &man, &pool), tx.clone());
+        assert_eq!(sched.snapshot().running, 1);
+        // a resident prefix with zero refs occupies part of the pool
+        let geom = PrefixGeom { kind: "fp32", layers: 2, hkv: 1, dh: 16, prec_tag: 0 };
+        let n = 8;
+        let payload = PrefixPayload::Fp32 {
+            full_len: n,
+            k: vec![0.5; 2 * n * 16],
+            v: vec![-0.5; 2 * n * 16],
+        };
+        let tokens: Vec<i32> = (0..n as i32).collect();
+        let att = idx.publish(&tokens, geom, payload).expect("residency fits");
+        drop(att); // refs -> 0, entry stays resident
+        let resident = idx.stats().resident_bytes;
+        assert!(resident > 0 && pool.used() == per + resident);
+        // the second admission only fits if the reclaimer runs
+        sched.submit(mk_session(2, &cfg, &man, &pool), tx.clone());
+        let snap = sched.snapshot();
+        assert_eq!(snap.running, 2, "reclaim freed the resident prefix");
+        assert_eq!(snap.prefix_reclaims, 1);
+        assert_eq!(snap.prefix_resident_entries, 0);
+        assert!(snap.pool_peak <= snap.pool_capacity);
+    }
+
+    /// Prefix sharing must not affect decode-batch formation: a session
+    /// attached to a shared prefix has the same `BatchKey` as an
+    /// unshared same-family session and they fuse into one batch.
+    #[test]
+    fn prefix_sharing_leaves_batch_key_unchanged() {
+        use crate::coordinator::session::build_backend;
+        use crate::kvcache::{PrefixIndex, PrefixPayload};
+        let cfg = tiny_cfg();
+        let man = tiny_manifest();
+        let pool = Arc::new(BlockPool::new(u64::MAX / 2));
+        let idx = PrefixIndex::new(Arc::clone(&pool), 8);
+        let sched = Scheduler::with_prefix(Arc::clone(&pool), None, Some(Arc::clone(&idx)));
+        // publish a prefix with the quant geometry so session 1 attaches
+        // at construction (payload content is irrelevant to batching)
+        let probe = build_backend(&cfg, &man).unwrap();
+        let geom = probe.prefix_geom();
+        drop(probe);
+        let n = 8;
+        let sc = 2 * n; // layers * n slots, one scale group each
+        let payload = PrefixPayload::Quant {
+            full_len: n,
+            k_codes: vec![0; 2 * n * 16],
+            k_scales: vec![0.0; sc],
+            v_codes: vec![0; 2 * n * 16],
+            v_scales: vec![0.0; sc],
+            tags: vec![geom.prec_tag; 2 * n],
+        };
+        let prompt: Vec<i32> = (0..16).collect();
+        let _keep = idx.publish(&prompt[..n], geom, payload).expect("publish");
+        let shared = Session::with_parts(
+            1,
+            prompt.clone(),
+            &cfg,
+            &man,
+            Some(Arc::clone(&pool)),
+            Some(Arc::clone(&idx)),
+        )
+        .unwrap();
+        assert!(shared.has_prefix_attachment(), "construction-time hit");
+        let unshared = mk_session(2, &cfg, &man, &pool);
+        assert_eq!(shared.compat_key(), unshared.compat_key(), "sharing is key-invariant");
+        let (tx, _rx) = mpsc::channel();
+        sched.submit(shared, tx.clone());
+        sched.submit(unshared, tx.clone());
+        let batch = sched.next_batch(4).expect("batch");
+        let ids: Vec<u64> = batch.iter().map(|e| e.session.id).collect();
+        assert_eq!(ids, vec![1, 2], "shared + unshared fuse into one batch");
+        assert_eq!(sched.snapshot().prefix_hits, 1);
     }
 
     /// Preemption marks set while a worker holds the victim are honored

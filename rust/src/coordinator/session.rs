@@ -35,8 +35,8 @@ use crate::baselines::quant_baselines::PmKvq;
 use crate::compress::tbe::{Tbe, TbeConfig};
 use crate::compress::tbq::Tbq;
 use crate::kvcache::{
-    BatchKey, BlockPool, CacheConfig, CtCache, Fp32Backend, Fp32Cache, KvBackend, KvSnapshot,
-    QuantBackend, SwapPool,
+    AttachedPrefix, BatchKey, BlockPool, CacheConfig, CtCache, Fp32Backend, Fp32Cache, KvBackend,
+    KvSnapshot, PrefixGeom, PrefixIndex, QuantBackend, SwapPool,
 };
 use crate::metrics::Breakdown;
 use crate::quant::Precision;
@@ -227,6 +227,14 @@ pub struct Session {
     /// Worst-case `bytes_used` growth of one decode step, computed once
     /// at construction — what batch formation pre-reserves per member.
     step_headroom: u64,
+    /// Prefix-sharing geometry key, computed once at construction.
+    prefix_geom: PrefixGeom,
+    /// The scheduler-owned prefix index, when sharing is enabled.
+    prefix_index: Option<Arc<PrefixIndex>>,
+    /// This session's shared-prefix attachment: admission and byte
+    /// accounting charge only the delta while it is active, and the
+    /// backend reads the resident payload instead of re-quantizing.
+    prefix_att: Option<Arc<AttachedPrefix>>,
     cfg: ServeConfig,
     manifest: crate::model::Manifest,
     pool: Option<Arc<BlockPool>>,
@@ -252,6 +260,20 @@ impl Session {
         manifest: &crate::model::Manifest,
         pool: Option<Arc<BlockPool>>,
     ) -> Result<Session> {
+        Session::with_parts(id, prompt, cfg, manifest, pool, None)
+    }
+
+    /// [`Session::with_pool`] plus cross-session prefix sharing: the
+    /// prompt is matched against `prefix` at construction so admission
+    /// already charges only the delta when a resident prefix covers it.
+    pub fn with_parts(
+        id: u64,
+        prompt: Vec<i32>,
+        cfg: &ServeConfig,
+        manifest: &crate::model::Manifest,
+        pool: Option<Arc<BlockPool>>,
+        prefix: Option<Arc<PrefixIndex>>,
+    ) -> Result<Session> {
         // transient probe: validates the mode/artifact combination and
         // prices the admission reserve, the per-step growth bound, and
         // the batching compatibility key, then frees its slabs
@@ -259,7 +281,13 @@ impl Session {
         let admission_est = probe.admission_bytes(manifest.model.prefill_len);
         let compat_key = probe.compat_key();
         let step_headroom = probe.step_headroom_bytes();
+        let prefix_geom = probe.prefix_geom();
         drop(probe);
+        // the attachment holds a reference, so a matched prefix stays
+        // resident from admission pricing through prefill
+        let prefix_att = prefix
+            .as_ref()
+            .and_then(|idx| idx.attach(&prompt, prefix_geom, manifest.model.prefill_len));
         Ok(Session {
             id,
             prompt,
@@ -282,6 +310,9 @@ impl Session {
             admission_est,
             compat_key,
             step_headroom,
+            prefix_geom,
+            prefix_index: prefix,
+            prefix_att,
             cfg: cfg.clone(),
             manifest: manifest.clone(),
             pool,
@@ -330,12 +361,35 @@ impl Session {
     /// this session: the upper bound on the post-prefill footprint for a
     /// fresh or recompute-preempted session, or the exact live footprint
     /// recorded at suspend time for a swapped session (byte-accurate
-    /// swap-in).
+    /// swap-in). A session attached to a resident shared prefix charges
+    /// only its **delta** — the prefix bytes are charged once, globally,
+    /// by the [`PrefixIndex`].
     pub fn admission_bytes(&self) -> u64 {
         match &self.suspended {
+            // suspend-time device bytes already excluded any active
+            // shared prefix (bytes_used is delta-accounted)
             Some(s) => s.snap.device_bytes,
-            None => self.admission_est,
+            None => {
+                let shared = self
+                    .prefix_att
+                    .as_ref()
+                    .filter(|a| a.is_active())
+                    .map_or(0, |a| a.bytes());
+                self.admission_est.saturating_sub(shared)
+            }
         }
+    }
+
+    /// Tokens currently read from a shared (cross-session) prefix — 0
+    /// for unshared sessions and after copy-on-write privatization.
+    pub fn shared_prefix_tokens(&self) -> usize {
+        self.backend.as_ref().map_or(0, |b| b.shared_prefix_tokens())
+    }
+
+    /// True while this session holds a prefix attachment (active or
+    /// privatized).
+    pub fn has_prefix_attachment(&self) -> bool {
+        self.prefix_att.is_some()
     }
 
     /// True while this session's cache lives in the host swap pool.
@@ -373,8 +427,21 @@ impl Session {
         self.reserved_bytes = bytes;
     }
 
+    /// Fold pool bytes a copy-on-write privatization reserved directly
+    /// (outside this session's reservation) into `reserved_bytes`, so
+    /// every byte flows through the one release path.
+    fn drain_cow(&mut self) {
+        if let Some(att) = &self.prefix_att {
+            let b = att.take_cow_reserved();
+            if b > 0 {
+                self.reserved_bytes += b;
+            }
+        }
+    }
+
     /// Return every byte this session holds to the pool.
     pub(crate) fn release_pool(&mut self) {
+        self.drain_cow();
         if let Some(pool) = &self.pool {
             if self.reserved_bytes > 0 {
                 pool.release(self.reserved_bytes);
@@ -399,8 +466,11 @@ impl Session {
     /// True the reservation up to the backend's actual live bytes —
     /// called after every append/evict/requant so the pool stays
     /// byte-accurate (surplus from the pre-step worst-case reserve goes
-    /// back immediately).
+    /// back immediately). A copy-on-write that fired during the step
+    /// already reserved its bytes in the pool; drain them into
+    /// `reserved_bytes` first so the true-up never double-charges.
     fn sync_pool(&mut self) {
+        self.drain_cow();
         let cur = self.bytes_used();
         let Some(pool) = &self.pool else { return };
         if cur < self.reserved_bytes {
@@ -477,12 +547,21 @@ impl Session {
         let bytes = snap.bytes;
         let t0 = std::time::Instant::now();
         let result = self.rebuild_from(snap);
+        // the swap reservation is released on both paths — a failed
+        // restore must not strand host bytes (the caller then resets
+        // for recompute, returning the block-pool reservation too)
         pool.release(bytes);
-        if result.is_ok() {
-            let ns = t0.elapsed().as_nanos() as u64;
-            pool.note_swap_in(bytes, ns);
-            self.swap_ins += 1;
-            self.restore_ns += ns;
+        match &result {
+            Ok(()) => {
+                let ns = t0.elapsed().as_nanos() as u64;
+                pool.note_swap_in(bytes, ns);
+                self.swap_ins += 1;
+                self.restore_ns += ns;
+            }
+            Err(_) => {
+                self.backend = None; // a half-restored cache is unusable
+                pool.note_fallback();
+            }
         }
         result
     }
@@ -491,6 +570,11 @@ impl Session {
     fn rebuild_from(&mut self, snap: KvSnapshot) -> Result<()> {
         let mut backend = build_backend(&self.cfg, &self.manifest)?;
         backend.restore(snap)?;
+        // re-link a shared-prefix attachment so the restored cache keeps
+        // its read-only marker and delta accounting
+        if let Some(att) = &self.prefix_att {
+            backend.reattach_prefix(Arc::clone(att));
+        }
         self.backend = Some(backend);
         Ok(())
     }
@@ -514,6 +598,12 @@ impl Session {
         self.drop_swap();
         self.release_pool();
         self.backend = None;
+        // a privatized attachment bought nothing that survives the
+        // reset — drop it so the re-prefill can share (or publish)
+        // afresh; an active one is kept and re-attached at prefill
+        if self.prefix_att.as_ref().is_some_and(|a| !a.is_active()) {
+            self.prefix_att = None;
+        }
         self.sampler = Sampler::new(self.cfg.temperature, 32, self.cfg.seed ^ self.id);
         self.tokens.clear();
         self.pos = 0;
@@ -526,7 +616,11 @@ impl Session {
         self.first_token_at = None;
     }
 
-    /// Run prompt prefill (once).
+    /// Run prompt prefill (once). With prefix sharing enabled this is
+    /// where the lifecycle forks: a matched prompt **attaches** the
+    /// resident payload (shared-attach + private-tail, no
+    /// re-quantization of the prefix), an unmatched one prefills fully
+    /// and **publishes** its block-aligned prefix for later sessions.
     pub fn prefill(&mut self, engine: &dyn DecodeEngine) -> Result<()> {
         if self.prefilled {
             return Ok(());
@@ -534,10 +628,36 @@ impl Session {
         self.ensure_backend()?;
         let m = engine.model().clone();
         let out = engine.prefill(&self.prompt)?;
-        self.backend
-            .as_mut()
-            .expect("backend built above")
-            .write_prefill(&out, m.prefill_len);
+        if self.prefix_att.is_none() {
+            // second-chance lookup: a sharer submitted before us may
+            // have published between our admission and this prefill
+            if let Some(idx) = &self.prefix_index {
+                self.prefix_att = idx.attach_quiet(&self.prompt, self.prefix_geom, m.prefill_len);
+            }
+        }
+        let backend = self.backend.as_mut().expect("backend built above");
+        match &self.prefix_att {
+            Some(att) => backend.write_prefill_shared(&out, m.prefill_len, Arc::clone(att))?,
+            None => {
+                backend.write_prefill(&out, m.prefill_len);
+                if let Some(idx) = &self.prefix_index {
+                    let n = idx.shareable_len(self.prompt.len(), m.prefill_len);
+                    if n > 0 {
+                        if let Some(payload) = backend.export_prefix(n) {
+                            if let Some(att) =
+                                idx.publish(&self.prompt[..n], self.prefix_geom, payload)
+                            {
+                                // the publisher shares its own prefix
+                                // too: the residency charge moves to the
+                                // index and this session pays its delta
+                                backend.reattach_prefix(Arc::clone(&att));
+                                self.prefix_att = Some(att);
+                            }
+                        }
+                    }
+                }
+            }
+        }
         // bootstrap the first generated token from prefill logits
         let t0 = std::time::Instant::now();
         let next = self.sampler.sample(&out.logits);
@@ -564,7 +684,17 @@ impl Session {
             // swapped-out session re-admitted: restore the cache image
             // instead of recomputing (the admission reserve already
             // covers the restored footprint byte-accurately)
-            self.resume_from_swap()?;
+            if let Err(e) = self.resume_from_swap() {
+                // a snapshot that fails to restore must not fail the
+                // request: release the swap + pool reservations (done
+                // inside resume_from_swap / reset) and fall back to the
+                // recompute path, exactly as if swapping were disabled
+                eprintln!(
+                    "session {}: swap-in restore failed ({e:#}); recomputing from prompt",
+                    self.id
+                );
+                self.reset_for_preemption();
+            }
             self.sync_pool();
         }
         if !self.prefilled {
@@ -680,5 +810,148 @@ impl Drop for Session {
     fn drop(&mut self) {
         self.release_pool();
         self.drop_swap();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::test_support::{tiny_cfg, tiny_manifest, FakeEngine};
+    use crate::kvcache::SnapshotPayload;
+
+    /// Failure injection for the swap-in error path: a snapshot that
+    /// fails to restore must release both the swap-pool reservation and
+    /// (through the recompute fallback) leave the block-pool books
+    /// balanced — the request recomputes instead of failing.
+    #[test]
+    fn failed_swap_restore_falls_back_to_recompute() {
+        let cfg = tiny_cfg();
+        let man = tiny_manifest();
+        let pool = Arc::new(BlockPool::new(u64::MAX / 2));
+        let mut s =
+            Session::with_pool(1, vec![1, 2, 3], &cfg, &man, Some(Arc::clone(&pool))).unwrap();
+        // admit by hand, as the scheduler would
+        let need = s.admission_bytes();
+        assert!(pool.reserve(need));
+        s.grant(need);
+        s.test_fake_prefill();
+        let swap = Arc::new(SwapPool::new(64 << 20));
+        assert!(s.suspend_to(&swap));
+        assert!(s.is_suspended());
+        assert!(swap.used() > 0);
+        assert_eq!(pool.used(), 0, "device bytes released at suspend");
+        // corrupt the host image so restore_state must fail
+        {
+            let susp = s.suspended.as_mut().expect("suspended");
+            let SnapshotPayload::Quant(q) = &mut susp.snap.payload else {
+                panic!("quant snapshot expected");
+            };
+            q.ct.layers[0].k_codes.truncate(1);
+        }
+        // re-admission reserve, as the scheduler would
+        let readmit = s.admission_bytes();
+        assert!(pool.reserve(readmit));
+        s.grant(readmit);
+        let engine = FakeEngine::new(man.model.clone());
+        let prep = s.begin_step(&engine).expect("fallback, not failure");
+        assert!(matches!(prep, StepPrep::Ready { .. }));
+        assert_eq!(s.preemptions, 1, "restore failure counted as a recompute");
+        assert_eq!(s.swap_ins, 0, "no successful swap-in");
+        assert!(!s.is_suspended());
+        assert_eq!(swap.used(), 0, "swap bytes released on the error path");
+        assert_eq!(swap.stats().fallbacks, 1);
+        assert!(swap.stats().bytes_in == 0);
+        // books return to baseline when the session leaves
+        drop(s);
+        assert_eq!(pool.used(), 0, "block-pool reservation fully released");
+    }
+
+    /// Session-level sharing round trip with the causal fake engine:
+    /// the publisher exports its prefix, a second session attaches it,
+    /// is priced delta-only, and both produce the exact streams of the
+    /// unshared path.
+    #[test]
+    fn sessions_share_prefix_and_streams_match_unshared() {
+        let cfg = ServeConfig { max_new_tokens: 6, ..tiny_cfg() };
+        let man = tiny_manifest();
+        let engine = FakeEngine::new(man.model.clone());
+        let system: Vec<i32> = (0..16).collect();
+        let mut prompts = Vec::new();
+        for tail in 0..3 {
+            let mut p = system.clone();
+            p.extend([40 + tail, 41 + tail, 42 + tail]);
+            prompts.push(p);
+        }
+
+        // unshared reference streams
+        let mut reference = Vec::new();
+        for (i, p) in prompts.iter().enumerate() {
+            let mut s = Session::new(i as u64 + 1, p.clone(), &cfg, &man).unwrap();
+            loop {
+                match s.step(&engine).unwrap() {
+                    StepOutcome::Finished => break,
+                    StepOutcome::Running => {}
+                    StepOutcome::NeedMemory => panic!("no pool bound"),
+                }
+            }
+            reference.push(s.tokens.clone());
+        }
+
+        // shared path: one pool + index, same ids (sampler seeds match)
+        let pool = Arc::new(BlockPool::new(u64::MAX / 2));
+        let idx = PrefixIndex::new(Arc::clone(&pool), 8);
+        let mut sessions: Vec<Session> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                Session::with_parts(
+                    i as u64 + 1,
+                    p.clone(),
+                    &cfg,
+                    &man,
+                    Some(Arc::clone(&pool)),
+                    Some(Arc::clone(&idx)),
+                )
+                .unwrap()
+            })
+            .collect();
+        for s in sessions.iter_mut() {
+            let need = s.admission_bytes();
+            assert!(pool.reserve(need));
+            s.grant(need);
+        }
+        // serialize: session 1 publishes, 2 and 3 attach at prefill
+        for s in sessions.iter_mut() {
+            loop {
+                match s.step(&engine).unwrap() {
+                    StepOutcome::Finished => break,
+                    StepOutcome::Running => {}
+                    StepOutcome::NeedMemory => panic!("pool unbounded"),
+                }
+            }
+        }
+        for (s, r) in sessions.iter().zip(&reference) {
+            assert_eq!(&s.tokens, r, "shared stream must be bit-identical");
+            assert!(s.has_prefix_attachment());
+            assert_eq!(s.shared_prefix_tokens(), 16, "system prompt attached");
+        }
+        let stats = idx.stats();
+        assert_eq!(stats.inserts, 1, "first session published the prefix");
+        assert_eq!(stats.hits, 2, "later sessions attached");
+        assert_eq!(stats.resident_entries, 1);
+        // delta accounting: everyone's bill excludes the shared prefix
+        let geom = sessions[0].prefix_geom;
+        let shared_bytes = geom.bytes_for(16);
+        assert!(shared_bytes > 0);
+        for s in &sessions {
+            assert!(s.admission_bytes() < s.admission_est);
+        }
+        // books: sessions + residency, nothing else
+        let session_bytes: u64 = sessions.iter().map(|s| s.reserved_bytes).sum();
+        assert_eq!(pool.used(), session_bytes + shared_bytes);
+        drop(sessions);
+        assert_eq!(pool.used(), shared_bytes, "only the resident prefix remains");
+        assert_eq!(idx.reclaim_unreferenced(u64::MAX), shared_bytes);
+        assert_eq!(pool.used(), 0);
     }
 }

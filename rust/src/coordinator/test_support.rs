@@ -1,0 +1,20 @@
+//! Shared fixtures for coordinator unit tests, re-using the crate-wide
+//! [`crate::testkit`] causal engine fake and tiny manifest (so the
+//! causality invariant prefix sharing relies on lives in exactly one
+//! place), plus a coordinator-specific default serving config.
+
+pub(crate) use crate::testkit::tiny_manifest;
+pub(crate) use crate::testkit::CausalEngine as FakeEngine;
+
+use super::config::{CompressionMode, ServeConfig};
+
+pub(crate) fn tiny_cfg() -> ServeConfig {
+    ServeConfig {
+        mode: CompressionMode::thinkv_default(),
+        budget: 64,
+        max_new_tokens: 8,
+        workers: 1,
+        temperature: 0.0,
+        ..ServeConfig::default()
+    }
+}

@@ -25,6 +25,8 @@
 //! cache, f32 live bytes for the baseline cache, both including the
 //! full-precision ring buffer.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::baselines::eviction::{EvictionPolicy, PosAttn};
@@ -38,6 +40,7 @@ use crate::runtime::{CacheView, DecodeOut, PrefillOut};
 use crate::thought::classifier::Classifier;
 use crate::thought::sparsity_per_layer;
 
+use super::prefix::{AttachedPrefix, PrefixGeom, PrefixPayload};
 use super::swap::{Fp32Snapshot, KvSnapshot, QuantSnapshot, SnapshotPayload};
 use super::{CtCache, Fp32Cache, Thought};
 
@@ -114,6 +117,37 @@ pub trait KvBackend: Send {
 
     /// Ingest the prompt K/V produced by engine prefill (alloc + append).
     fn write_prefill(&mut self, pf: &PrefillOut, p_len: usize);
+
+    /// Cross-session prefix-sharing geometry key: two sessions may share
+    /// prefill payload only when their backends would have produced
+    /// byte-identical blocks for the same tokens.
+    fn prefix_geom(&self) -> PrefixGeom;
+
+    /// [`KvBackend::write_prefill`] split for prefix sharing:
+    /// **shared-attach** the first `att.attach_len()` tokens from the
+    /// resident payload (no re-quantization, region marked read-only),
+    /// then write only the **private tail** from `pf`. The slabs end up
+    /// bit-identical to an unshared prefill of the same tokens.
+    fn write_prefill_shared(
+        &mut self,
+        pf: &PrefillOut,
+        p_len: usize,
+        att: Arc<AttachedPrefix>,
+    ) -> Result<()>;
+
+    /// Export the first `n` prefill tokens as a shareable payload (the
+    /// publish half). None once the region is no longer the pristine
+    /// prefill.
+    fn export_prefix(&self, n: usize) -> Option<PrefixPayload>;
+
+    /// Re-link a prefix attachment after [`KvBackend::restore`] (the
+    /// suspend/resume path of a sharing session) or after a publish, so
+    /// byte accounting and the read-only marker stay consistent.
+    fn reattach_prefix(&mut self, att: Arc<AttachedPrefix>);
+
+    /// Tokens currently in the read-only shared-prefix region (0 = no
+    /// sharing, or already privatized by copy-on-write).
+    fn shared_prefix_tokens(&self) -> usize;
 
     /// Make room for the upcoming decode step: flush the ring buffer if
     /// full, evicting (TBE case 2 / baseline policy) as needed. `pos` is
@@ -209,6 +243,9 @@ pub struct QuantBackend {
     cur_thought: Thought,
     cur_segment: usize,
     pmkvq: Option<PmKvq>,
+    /// Cross-session shared-prefix attachment (delta-only accounting +
+    /// copy-on-write state); None = unshared session.
+    att: Option<Arc<AttachedPrefix>>,
 }
 
 impl QuantBackend {
@@ -227,6 +264,28 @@ impl QuantBackend {
             cur_thought: Thought::Reasoning,
             cur_segment: 0,
             pmkvq,
+            att: None,
+        }
+    }
+
+    /// Bytes the active shared attachment keeps off this session's bill.
+    fn shared_discount(&self) -> u64 {
+        match &self.att {
+            Some(a) if a.is_active() => a.bytes(),
+            _ => 0,
+        }
+    }
+
+    /// First write past the shared boundary: privatize via copy-on-write
+    /// (reserve the prefix bytes, drop the shared ref, lift the
+    /// read-only marker). A denied CoW (pool full) leaves the region
+    /// protected — eviction then works around it. Takes the fields
+    /// directly so callers can hold disjoint borrows of `self`.
+    fn cow_privatize(att: &Option<Arc<AttachedPrefix>>, cache: &mut CtCache) {
+        if let Some(a) = att {
+            if a.is_active() && a.try_privatize() {
+                cache.clear_shared();
+            }
         }
     }
 }
@@ -246,6 +305,48 @@ impl KvBackend for QuantBackend {
         self.cache.write_prefill(&pf.k, &pf.v, p_len, prec);
     }
 
+    fn prefix_geom(&self) -> PrefixGeom {
+        PrefixGeom {
+            kind: "quant",
+            layers: self.cache.cfg.layers,
+            hkv: self.cache.cfg.hkv,
+            dh: self.cache.cfg.dh,
+            prec_tag: self.tbq.psi(Thought::Reasoning).tag(),
+        }
+    }
+
+    fn write_prefill_shared(
+        &mut self,
+        pf: &PrefillOut,
+        p_len: usize,
+        att: Arc<AttachedPrefix>,
+    ) -> Result<()> {
+        let n = att.attach_len().min(p_len);
+        let seg = self
+            .cache
+            .attach_prefix(att.payload(), n)
+            .map_err(|e| anyhow::anyhow!("prefix attach: {e}"))?;
+        let prec = self.tbq.psi(Thought::Reasoning);
+        self.cache.write_prefill_range(&pf.k, &pf.v, p_len, n, p_len, prec, seg);
+        self.att = Some(att);
+        Ok(())
+    }
+
+    fn export_prefix(&self, n: usize) -> Option<PrefixPayload> {
+        self.cache.export_prefix(n)
+    }
+
+    fn reattach_prefix(&mut self, att: Arc<AttachedPrefix>) {
+        if att.is_active() {
+            self.cache.set_shared_len(att.attach_len());
+        }
+        self.att = Some(att);
+    }
+
+    fn shared_prefix_tokens(&self) -> usize {
+        self.cache.shared_len()
+    }
+
     fn make_room(&mut self, pos: usize, bd: &mut Breakdown) -> Result<()> {
         if self.cache.segments.is_empty() {
             bail!("prefill did not initialize segments");
@@ -260,6 +361,9 @@ impl KvBackend for QuantBackend {
             let tbq = &self.tbq;
             let psi = |t: Thought| tbq.psi(t);
             if self.cache.flush_buffer(&psi).is_err() {
+                // allocation pressure is about to evict — the first
+                // write past a shared prefix boundary, so CoW first
+                Self::cow_privatize(&self.att, &mut self.cache);
                 // TBE case 2 under allocation pressure
                 if let Some(tbe) = self.tbe.as_mut() {
                     let te = std::time::Instant::now();
@@ -318,6 +422,10 @@ impl KvBackend for QuantBackend {
             // TBE case 1 at the end of a transition window
             if closing == Thought::Transition {
                 if let Some(tbe) = self.tbe.as_mut() {
+                    // case 1 anneals every prior segment — the prefill
+                    // segment included — so a shared prefix privatizes
+                    // (copy-on-write) before the anneal may touch it
+                    Self::cow_privatize(&self.att, &mut self.cache);
                     let tt = std::time::Instant::now();
                     tbe.on_transition_end(&mut self.cache, self.cur_segment);
                     bd.tbe_ns += tt.elapsed().as_nanos() as u64;
@@ -339,6 +447,9 @@ impl KvBackend for QuantBackend {
         if let Some(tbe) = self.tbe.as_mut() {
             tbe.tick();
             if self.cache.live_tokens() + self.cache.buf_fill() > tbe.cfg.budget {
+                // budget pressure may reach the prefill segment: CoW a
+                // shared prefix so eviction matches the unshared path
+                Self::cow_privatize(&self.att, &mut self.cache);
                 let tt = std::time::Instant::now();
                 let evicted = tbe.ensure_budget(&mut self.cache);
                 bd.tbe_ns += tt.elapsed().as_nanos() as u64;
@@ -351,6 +462,11 @@ impl KvBackend for QuantBackend {
         // PM-KVQ progressive requantization
         if let Some(pm) = &self.pmkvq {
             if pos % 128 == 0 {
+                if pos >= pm.first_demotion_age() {
+                    // requantization is about to rewrite the oldest
+                    // (prefix) slots in place: copy-on-write first
+                    Self::cow_privatize(&self.att, &mut self.cache);
+                }
                 let tp = std::time::Instant::now();
                 pm.apply(&mut self.cache, pos);
                 bd.policy_ns += tp.elapsed().as_nanos() as u64;
@@ -365,7 +481,9 @@ impl KvBackend for QuantBackend {
     }
 
     fn bytes_used(&self) -> u64 {
-        self.cache.packed_bytes_live().ceil() as u64
+        // an active shared prefix is charged to the index (once,
+        // globally), so this session's bill covers only its delta
+        (self.cache.packed_bytes_live().ceil() as u64).saturating_sub(self.shared_discount())
     }
 
     fn step_headroom_bytes(&self) -> u64 {
@@ -444,6 +562,8 @@ pub struct Fp32Backend {
     /// Whether evictions trigger gather-based compaction (R-KV style).
     gather: bool,
     capacity: usize,
+    /// Cross-session shared-prefix attachment; None = unshared session.
+    att: Option<Arc<AttachedPrefix>>,
 }
 
 impl Fp32Backend {
@@ -454,7 +574,59 @@ impl Fp32Backend {
         gather: bool,
         capacity: usize,
     ) -> Fp32Backend {
-        Fp32Backend { cache, policy, budget, gather, capacity }
+        Fp32Backend { cache, policy, budget, gather, capacity, att: None }
+    }
+
+    fn shared_discount(&self) -> u64 {
+        match &self.att {
+            Some(a) if a.is_active() => a.bytes(),
+            _ => 0,
+        }
+    }
+
+    /// The policy wants to evict `evict` positions. If any fall inside a
+    /// shared prefix, privatize it (copy-on-write) so the eviction
+    /// matches the unshared path; a denied CoW (pool full) instead
+    /// filters the protected positions out and the policy works with
+    /// what remains. Takes the fields directly so callers can hold
+    /// disjoint borrows of `self` (same shape as the quant backend's
+    /// `cow_privatize`).
+    fn cow_filter(
+        att: &Option<Arc<AttachedPrefix>>,
+        cache: &mut Fp32Cache,
+        evict: Vec<usize>,
+    ) -> Vec<usize> {
+        let shared = cache.shared_len();
+        if shared == 0 || evict.iter().all(|&p| p >= shared) {
+            return evict;
+        }
+        if let Some(a) = att {
+            if a.is_active() && a.try_privatize() {
+                cache.clear_shared();
+                return evict;
+            }
+        }
+        evict.into_iter().filter(|&p| p >= shared).collect()
+    }
+
+    /// Policy eviction honoring a read-only shared prefix: select
+    /// normally (privatizing via CoW when the pool allows it); when the
+    /// CoW is denied and the filter drops *every* selected position,
+    /// re-select among the evictable remainder only — the pinned shared
+    /// rows count toward the survivor target — so a denied CoW can
+    /// never starve eviction while non-shared victims exist.
+    fn select_evictions_shared(&mut self, live: &[usize], target: usize) -> Vec<usize> {
+        let evict = self.policy.select_evictions(live, target);
+        let evict = Self::cow_filter(&self.att, &mut self.cache, evict);
+        if !evict.is_empty() {
+            return evict;
+        }
+        let shared = self.cache.shared_len();
+        if shared == 0 {
+            return evict; // the policy genuinely refused to evict
+        }
+        let free: Vec<usize> = live.iter().copied().filter(|&p| p >= shared).collect();
+        self.policy.select_evictions(&free, target.saturating_sub(shared))
     }
 }
 
@@ -471,13 +643,53 @@ impl KvBackend for Fp32Backend {
         self.cache.write_prefill(&pf.k, &pf.v, p_len);
     }
 
+    fn prefix_geom(&self) -> PrefixGeom {
+        PrefixGeom {
+            kind: "fp32",
+            layers: self.cache.layers,
+            hkv: 1,
+            dh: self.cache.kv_dim,
+            prec_tag: 0,
+        }
+    }
+
+    fn write_prefill_shared(
+        &mut self,
+        pf: &PrefillOut,
+        p_len: usize,
+        att: Arc<AttachedPrefix>,
+    ) -> Result<()> {
+        let n = att.attach_len().min(p_len);
+        self.cache
+            .attach_prefix(att.payload(), n)
+            .map_err(|e| anyhow::anyhow!("prefix attach: {e}"))?;
+        self.cache.write_prefill_range(&pf.k, &pf.v, p_len, n, p_len);
+        self.att = Some(att);
+        Ok(())
+    }
+
+    fn export_prefix(&self, n: usize) -> Option<PrefixPayload> {
+        self.cache.export_prefix(n)
+    }
+
+    fn reattach_prefix(&mut self, att: Arc<AttachedPrefix>) {
+        if att.is_active() {
+            self.cache.set_shared_len(att.attach_len());
+        }
+        self.att = Some(att);
+    }
+
+    fn shared_prefix_tokens(&self) -> usize {
+        self.cache.shared_len()
+    }
+
     fn make_room(&mut self, _pos: usize, bd: &mut Breakdown) -> Result<()> {
         if self.cache.buf_fill() == self.cache.buf_slots {
             while self.cache.flush_buffer().is_err() {
                 let tp = std::time::Instant::now();
                 let live = self.cache.live_positions();
                 let target = live.len().saturating_sub(self.cache.buf_slots);
-                let evict = self.policy.select_evictions(&live, target);
+                let evict = self.select_evictions_shared(&live, target);
                 if evict.is_empty() {
                     bail!("fp32 cache full and policy refuses to evict");
                 }
@@ -546,7 +758,7 @@ impl KvBackend for Fp32Backend {
             if live.len() + self.cache.buf_fill() > self.budget {
                 let tp = std::time::Instant::now();
                 let target = self.budget.saturating_sub(self.cache.buf_fill());
-                let evict = self.policy.select_evictions(&live, target);
+                let evict = self.select_evictions_shared(&live, target);
                 if !evict.is_empty() {
                     self.cache.evict_positions(&evict);
                     bd.policy_calls += 1;
@@ -568,7 +780,8 @@ impl KvBackend for Fp32Backend {
     }
 
     fn bytes_used(&self) -> u64 {
-        self.cache.bytes_live()
+        // an active shared prefix is charged to the index, not here
+        self.cache.bytes_live().saturating_sub(self.shared_discount())
     }
 
     fn step_headroom_bytes(&self) -> u64 {

@@ -144,6 +144,11 @@ pub struct CtCache {
     /// Cumulative packed bits written (memory-footprint accounting).
     pub packed_bits_written: f64,
     pub tokens_written: u64,
+    /// Slots `0..shared_len` (every layer) hold a cross-session shared
+    /// prefix and are **read-only**: eviction skips them until the
+    /// owning backend privatizes the region (copy-on-write) and clears
+    /// this marker. 0 = no shared region.
+    shared_len: usize,
 }
 
 impl CtCache {
@@ -165,8 +170,30 @@ impl CtCache {
             buffered: Vec::new(),
             packed_bits_written: 0.0,
             tokens_written: 0,
+            shared_len: 0,
             cfg,
         }
+    }
+
+    /// Tokens in the read-only shared-prefix region (0 = none).
+    pub fn shared_len(&self) -> usize {
+        self.shared_len
+    }
+
+    /// Mark slots `0..n` as a shared prefix region (used after a
+    /// snapshot restore re-links a still-active attachment). The slots
+    /// must all be live in every layer.
+    pub fn set_shared_len(&mut self, n: usize) {
+        debug_assert!(self
+            .tables
+            .iter()
+            .all(|t| (0..n).all(|s| t.slot_segment[s] >= 0)));
+        self.shared_len = n;
+    }
+
+    /// Copy-on-write completed: the region is privately owned now.
+    pub fn clear_shared(&mut self) {
+        self.shared_len = 0;
     }
 
     /// Engine view of the slabs.
@@ -219,8 +246,24 @@ impl CtCache {
     /// prefill tokens as R type, §6.1).
     pub fn write_prefill(&mut self, k: &[f32], v: &[f32], p_len: usize, prec: Precision) {
         let seg = self.open_segment(Thought::Reasoning, 0);
+        self.write_prefill_range(k, v, p_len, 0, p_len, prec, seg);
+    }
+
+    /// Quantize prefill positions `from..p_len` into the (already open)
+    /// prefill segment — the **private tail** half of a shared-prefix
+    /// prefill, also the body of [`CtCache::write_prefill`].
+    pub fn write_prefill_range(
+        &mut self,
+        k: &[f32],
+        v: &[f32],
+        p_len: usize,
+        from: usize,
+        to: usize,
+        prec: Precision,
+        seg: usize,
+    ) {
         let kvd = self.cfg.kv_dim();
-        for pos in 0..p_len {
+        for pos in from..to {
             for l in 0..self.cfg.layers {
                 let base = (l * p_len + pos) * kvd;
                 self.write_slot(l, seg, Thought::Reasoning, pos, prec,
@@ -228,8 +271,122 @@ impl CtCache {
                     .expect("prefill exceeds cache capacity");
             }
         }
-        self.segments[seg].end_pos = p_len;
-        self.tokens_written += p_len as u64;
+        self.segments[seg].end_pos = to;
+        self.tokens_written += (to - from) as u64;
+    }
+
+    /// **Shared-attach** half of a shared-prefix prefill: place the
+    /// first `n` prefill tokens from an already-quantized payload
+    /// (`[L, full_len, ...]` layout) instead of re-quantizing them,
+    /// marking the region read-only. Must run on a fresh cache; returns
+    /// the prefill segment id so the caller can write the private tail
+    /// into it. The resulting slabs are bit-identical to a full
+    /// [`CtCache::write_prefill`] of the same tokens (deterministic
+    /// quantization), so sharing never changes the decode stream.
+    pub fn attach_prefix(
+        &mut self,
+        payload: &crate::kvcache::PrefixPayload,
+        n: usize,
+    ) -> Result<usize, String> {
+        let crate::kvcache::PrefixPayload::Quant {
+            full_len,
+            k_codes,
+            k_scales,
+            v_codes,
+            v_scales,
+            tags,
+        } = payload
+        else {
+            return Err("fp32 payload attached to a quant cache".into());
+        };
+        let full_len = *full_len;
+        if n > full_len || n > self.cfg.capacity {
+            return Err(format!("attach of {n} tokens exceeds payload/capacity"));
+        }
+        if !self.segments.is_empty() || self.tables[0].allocated_blocks() != 0 {
+            return Err("attach_prefix requires a fresh cache".into());
+        }
+        let (c, kvd) = (self.cfg.capacity, self.cfg.kv_dim());
+        let sc = self.cfg.hkv * self.cfg.groups();
+        if k_codes.len() != full_len * self.cfg.layers * kvd
+            || k_scales.len() != full_len * self.cfg.layers * sc
+        {
+            return Err("inconsistent prefix payload shape".into());
+        }
+        let seg = self.open_segment(Thought::Reasoning, 0);
+        for pos in 0..n {
+            for l in 0..self.cfg.layers {
+                let place = self.tables[l]
+                    .place(Thought::Reasoning, seg, pos)
+                    .ok_or("prefix exceeds cache capacity")?;
+                let slot = place.slot;
+                debug_assert_eq!(slot, pos, "fresh cache places prefill sequentially");
+                let src_c = (l * full_len + pos) * kvd;
+                let dst_c = (l * c + slot) * kvd;
+                let src_s = (l * full_len + pos) * sc;
+                let dst_s = (l * c + slot) * sc;
+                self.k_codes[dst_c..dst_c + kvd].copy_from_slice(&k_codes[src_c..src_c + kvd]);
+                self.v_codes[dst_c..dst_c + kvd].copy_from_slice(&v_codes[src_c..src_c + kvd]);
+                self.k_scales[dst_s..dst_s + sc].copy_from_slice(&k_scales[src_s..src_s + sc]);
+                self.v_scales[dst_s..dst_s + sc].copy_from_slice(&v_scales[src_s..src_s + sc]);
+                let tag = tags[l * full_len + pos];
+                self.tags[l * c + slot] = tag;
+                self.mask[l * c + slot] = 1.0;
+                if l == 0 {
+                    self.packed_bits_written += 2.0
+                        * kvd as f64
+                        * crate::quant::packed_bits_per_elem(Precision::from_tag(tag));
+                }
+            }
+        }
+        self.segments[seg].end_pos = n;
+        self.tokens_written += n as u64;
+        self.shared_len = n;
+        Ok(seg)
+    }
+
+    /// Export the first `n` prefill tokens as a shareable payload — the
+    /// publish half of prefix sharing. Valid right after
+    /// [`CtCache::write_prefill`] (slots `0..n` hold positions `0..n`
+    /// in every layer); returns None once eviction or decode writes
+    /// have touched the region.
+    pub fn export_prefix(&self, n: usize) -> Option<crate::kvcache::PrefixPayload> {
+        let (c, kvd) = (self.cfg.capacity, self.cfg.kv_dim());
+        let sc = self.cfg.hkv * self.cfg.groups();
+        if n == 0 || n > c {
+            return None;
+        }
+        for t in &self.tables {
+            for slot in 0..n {
+                if t.slot_pos[slot] != slot as i32 {
+                    return None; // region no longer the pristine prefill
+                }
+            }
+        }
+        let mut k_codes = Vec::with_capacity(self.cfg.layers * n * kvd);
+        let mut v_codes = Vec::with_capacity(self.cfg.layers * n * kvd);
+        let mut k_scales = Vec::with_capacity(self.cfg.layers * n * sc);
+        let mut v_scales = Vec::with_capacity(self.cfg.layers * n * sc);
+        let mut tags = Vec::with_capacity(self.cfg.layers * n);
+        for l in 0..self.cfg.layers {
+            for slot in 0..n {
+                let cb = (l * c + slot) * kvd;
+                let sb = (l * c + slot) * sc;
+                k_codes.extend_from_slice(&self.k_codes[cb..cb + kvd]);
+                v_codes.extend_from_slice(&self.v_codes[cb..cb + kvd]);
+                k_scales.extend_from_slice(&self.k_scales[sb..sb + sc]);
+                v_scales.extend_from_slice(&self.v_scales[sb..sb + sc]);
+                tags.push(self.tags[l * c + slot]);
+            }
+        }
+        Some(crate::kvcache::PrefixPayload::Quant {
+            full_len: n,
+            k_codes,
+            k_scales,
+            v_codes,
+            v_scales,
+            tags,
+        })
     }
 
     /// Stash one decode token in the fp ring buffer. Returns true if the
@@ -358,10 +515,16 @@ impl CtCache {
     }
 
     /// TBE soft eviction of `slots` in layer `l` (mask drops to 0; payload
-    /// stays until a same-thought token reclaims the slot).
+    /// stays until a same-thought token reclaims the slot). Callers must
+    /// not target the read-only shared-prefix region — privatize
+    /// (copy-on-write) first or filter those slots out.
     pub fn soft_evict_slots(&mut self, l: usize, slots: &[SlotId]) {
         let c = self.cfg.capacity;
         for &s in slots {
+            debug_assert!(
+                s >= self.shared_len,
+                "evicting shared-prefix slot {s} without copy-on-write"
+            );
             self.tables[l].soft_evict(s);
             self.mask[l * c + s] = 0.0;
         }
@@ -556,6 +719,9 @@ impl CtCache {
             .collect();
         self.packed_bits_written = snap.packed_bits_written;
         self.tokens_written = snap.tokens_written;
+        // a still-active shared attachment is re-linked by the session
+        // after the restore (Session::rebuild_from -> reattach_prefix)
+        self.shared_len = 0;
         self.check_invariants()
     }
 
@@ -563,6 +729,12 @@ impl CtCache {
         let c = self.cfg.capacity;
         for (l, t) in self.tables.iter().enumerate() {
             t.check_invariants()?;
+            // the read-only shared prefix region must stay fully live
+            for slot in 0..self.shared_len {
+                if t.slot_segment[slot] < 0 {
+                    return Err(format!("layer {l}: shared-prefix slot {slot} evicted"));
+                }
+            }
             for slot in 0..c {
                 let live = t.slot_segment[slot] >= 0;
                 let m = self.mask[l * c + slot];
@@ -785,6 +957,49 @@ mod tests {
         let snap = cache.snapshot_state();
         let mut other = CtCache::new(CacheConfig { capacity: 128, ..cfg() });
         assert!(other.restore_state(snap).is_err());
+    }
+
+    /// Prefix sharing must be invisible to the decode stream: attaching
+    /// an exported payload + quantizing only the tail reproduces the
+    /// exact slabs (codes, scales, tags, masks, tables, accounting) of
+    /// a full prefill.
+    #[test]
+    fn export_attach_prefix_bit_identical() {
+        let cfg = cfg();
+        let mut rng = Rng::new(21);
+        let p_len = 24;
+        let kvd = cfg.kv_dim();
+        let mut k = vec![0f32; cfg.layers * p_len * kvd];
+        let mut v = vec![0f32; cfg.layers * p_len * kvd];
+        rng.fill_normal_f32(&mut k, 0.0, 1.0);
+        rng.fill_normal_f32(&mut v, 0.0, 1.0);
+        let mut full = CtCache::new(cfg.clone());
+        full.write_prefill(&k, &v, p_len, Precision::Nvfp4);
+        let n = 16; // block-aligned shared prefix
+        let payload = full.export_prefix(n).expect("pristine region exports");
+
+        let mut shared = CtCache::new(cfg.clone());
+        let seg = shared.attach_prefix(&payload, n).unwrap();
+        shared.write_prefill_range(&k, &v, p_len, n, p_len, Precision::Nvfp4, seg);
+        assert_eq!(shared.shared_len(), n);
+        assert_eq!(shared.k_codes, full.k_codes);
+        assert_eq!(shared.v_codes, full.v_codes);
+        assert_eq!(shared.k_scales, full.k_scales);
+        assert_eq!(shared.v_scales, full.v_scales);
+        assert_eq!(shared.tags, full.tags);
+        assert_eq!(shared.mask, full.mask);
+        assert_eq!(shared.tables, full.tables);
+        assert_eq!(shared.segments, full.segments);
+        assert!((shared.packed_bits_written - full.packed_bits_written).abs() < 1e-6);
+        assert_eq!(shared.tokens_written, full.tokens_written);
+        shared.check_invariants().unwrap();
+        // attach demands a fresh cache
+        assert!(shared.attach_prefix(&payload, n).is_err());
+        // copy-on-write clears the marker; eviction then reaches the slots
+        shared.clear_shared();
+        shared.soft_evict_slots(0, &[0, 1]);
+        shared.soft_evict_slots(1, &[0, 1]);
+        shared.check_invariants().unwrap();
     }
 
     #[test]

@@ -68,6 +68,11 @@ pub struct Fp32Cache {
     pub gather_bytes: u64,
     pub gather_calls: u64,
     pub gather_nanos: u64,
+    /// Slots/positions `0..shared_len` hold a cross-session shared
+    /// prefix and are read-only until the backend privatizes them
+    /// (copy-on-write). 0 = none. They are front-contiguous and never
+    /// evicted while shared, so `compact_gather` leaves them in place.
+    shared_len: usize,
 }
 
 impl Fp32Cache {
@@ -89,7 +94,25 @@ impl Fp32Cache {
             gather_bytes: 0,
             gather_calls: 0,
             gather_nanos: 0,
+            shared_len: 0,
         }
+    }
+
+    /// Tokens in the read-only shared-prefix region (0 = none).
+    pub fn shared_len(&self) -> usize {
+        self.shared_len
+    }
+
+    /// Mark slots `0..n` as a shared prefix region (used after a
+    /// snapshot restore re-links a still-active attachment).
+    pub fn set_shared_len(&mut self, n: usize) {
+        debug_assert!((0..n).all(|s| self.slot_pos[s] >= 0));
+        self.shared_len = n;
+    }
+
+    /// Copy-on-write completed: the region is privately owned now.
+    pub fn clear_shared(&mut self) {
+        self.shared_len = 0;
     }
 
     pub fn buf_fill(&self) -> usize {
@@ -113,16 +136,93 @@ impl Fp32Cache {
 
     /// Write prompt K/V (`[L, P, kv_dim]`) into slots 0..P.
     pub fn write_prefill(&mut self, k: &[f32], v: &[f32], p_len: usize) {
-        assert!(p_len <= self.capacity);
+        self.write_prefill_range(k, v, p_len, 0, p_len);
+    }
+
+    /// Write prefill positions `from..to` into their slots — the
+    /// private-tail half of a shared-prefix prefill, also the body of
+    /// [`Fp32Cache::write_prefill`].
+    pub fn write_prefill_range(
+        &mut self,
+        k: &[f32],
+        v: &[f32],
+        p_len: usize,
+        from: usize,
+        to: usize,
+    ) {
+        assert!(to <= self.capacity && to <= p_len);
+        let kvd = self.kv_dim;
         for l in 0..self.layers {
-            for pos in 0..p_len {
-                let src = (l * p_len + pos) * self.kv_dim;
-                self.write_slot_layer(l, pos, &k[src..src + self.kv_dim], &v[src..src + self.kv_dim]);
+            for pos in from..to {
+                let src = (l * p_len + pos) * kvd;
+                self.write_slot_layer(l, pos, &k[src..src + kvd], &v[src..src + kvd]);
             }
         }
-        for pos in 0..p_len {
+        for pos in from..to {
             self.slot_pos[pos] = pos as i32;
         }
+    }
+
+    /// Shared-attach half of a shared-prefix prefill: copy the first
+    /// `n` rows from an already-computed payload and mark them
+    /// read-only. Must run on a fresh cache.
+    pub fn attach_prefix(
+        &mut self,
+        payload: &crate::kvcache::PrefixPayload,
+        n: usize,
+    ) -> Result<(), String> {
+        let crate::kvcache::PrefixPayload::Fp32 { full_len, k, v } = payload else {
+            return Err("quant payload attached to an fp32 cache".into());
+        };
+        let full_len = *full_len;
+        if n > full_len || n > self.capacity {
+            return Err(format!("attach of {n} tokens exceeds payload/capacity"));
+        }
+        if self.live_tokens() != 0 || self.buffered != 0 {
+            return Err("attach_prefix requires a fresh cache".into());
+        }
+        if k.len() != full_len * self.layers * self.kv_dim {
+            return Err("inconsistent prefix payload shape".into());
+        }
+        for l in 0..self.layers {
+            for pos in 0..n {
+                let src = (l * full_len + pos) * self.kv_dim;
+                let (kk, vv) = (
+                    k[src..src + self.kv_dim].to_vec(),
+                    v[src..src + self.kv_dim].to_vec(),
+                );
+                self.write_slot_layer(l, pos, &kk, &vv);
+            }
+        }
+        for pos in 0..n {
+            self.slot_pos[pos] = pos as i32;
+        }
+        self.shared_len = n;
+        Ok(())
+    }
+
+    /// Export the first `n` prefill rows as a shareable payload. Valid
+    /// while slots `0..n` still hold positions `0..n`.
+    pub fn export_prefix(&self, n: usize) -> Option<crate::kvcache::PrefixPayload> {
+        if n == 0 || n > self.capacity {
+            return None;
+        }
+        for slot in 0..n {
+            if self.slot_pos[slot] != slot as i32 {
+                return None;
+            }
+        }
+        let kvd = self.kv_dim;
+        let mut k = Vec::with_capacity(self.layers * n * kvd);
+        let mut v = Vec::with_capacity(self.layers * n * kvd);
+        for l in 0..self.layers {
+            for slot in 0..n {
+                let base = (l * self.capacity + slot) * kvd;
+                k.extend_from_slice(&self.k[base..base + kvd]);
+                v.extend_from_slice(&self.v[base..base + kvd]);
+            }
+        }
+        Some(crate::kvcache::PrefixPayload::Fp32 { full_len: n, k, v })
     }
 
     fn write_slot_layer(&mut self, l: usize, slot: SlotId, k: &[f32], v: &[f32]) {
@@ -177,9 +277,15 @@ impl Fp32Cache {
         Ok(())
     }
 
-    /// Evict slots (drop mask + free slot) — leaves holes.
+    /// Evict slots (drop mask + free slot) — leaves holes. Callers must
+    /// not target the read-only shared-prefix region — privatize
+    /// (copy-on-write) first or filter those slots out.
     pub fn evict_slots(&mut self, slots: &[SlotId]) {
         for &s in slots {
+            debug_assert!(
+                s >= self.shared_len,
+                "evicting shared-prefix slot {s} without copy-on-write"
+            );
             self.slot_pos[s] = -1;
             for l in 0..self.layers {
                 self.mask[l * self.capacity + s] = 0.0;
@@ -356,6 +462,9 @@ impl Fp32Cache {
         self.gather_bytes = snap.gather_bytes;
         self.gather_calls = snap.gather_calls;
         self.gather_nanos = snap.gather_nanos;
+        // a still-active shared attachment is re-linked by the session
+        // after the restore (Session::rebuild_from -> reattach_prefix)
+        self.shared_len = 0;
         self.check_invariants()
     }
 
@@ -504,6 +613,42 @@ mod tests {
         let snap = c.snapshot_state();
         let mut other = Fp32Cache::new(2, 64, 8, 16);
         assert!(other.restore_state(snap).is_err());
+    }
+
+    /// Prefix sharing parity: attach + private tail reproduces the exact
+    /// slabs of a full prefill, and the shared rows survive compaction.
+    #[test]
+    fn export_attach_prefix_bit_identical() {
+        let mut full = mk();
+        let p = 16;
+        let k: Vec<f32> = (0..2 * p * 8).map(|i| i as f32 * 0.25).collect();
+        let v: Vec<f32> = (0..2 * p * 8).map(|i| -(i as f32) * 0.5).collect();
+        full.write_prefill(&k, &v, p);
+        let n = 8;
+        let payload = full.export_prefix(n).expect("pristine region exports");
+
+        let mut shared = mk();
+        shared.attach_prefix(&payload, n).unwrap();
+        shared.write_prefill_range(&k, &v, p, n, p);
+        assert_eq!(shared.shared_len(), n);
+        assert_eq!(shared.k, full.k);
+        assert_eq!(shared.v, full.v);
+        assert_eq!(shared.mask, full.mask);
+        assert_eq!(shared.slot_pos, full.slot_pos);
+        shared.check_invariants().unwrap();
+        assert!(shared.attach_prefix(&payload, n).is_err(), "attach needs a fresh cache");
+        // evicting past the shared boundary + compaction leaves the
+        // shared front rows in place
+        shared.evict_positions(&[n, n + 1]);
+        shared.compact_gather();
+        for s in 0..n {
+            assert_eq!(shared.slot_pos[s], s as i32, "shared row moved");
+        }
+        shared.check_invariants().unwrap();
+        // copy-on-write clears the marker; eviction then reaches the rows
+        shared.clear_shared();
+        shared.evict_positions(&[0, 1]);
+        shared.check_invariants().unwrap();
     }
 
     #[test]

@@ -25,12 +25,19 @@
 //!   produced by [`backend::KvBackend::snapshot`] and the byte-accounted
 //!   host-side [`swap::SwapPool`] they live in while a preempted session
 //!   waits for re-admission.
+//! * [`prefix`] — cross-session prefix sharing: the scheduler-owned
+//!   [`prefix::PrefixIndex`] (hash-trie over prompt token prefixes at
+//!   block granularity) maps a prompt onto resident, refcounted,
+//!   read-only prefill payloads; sessions attach instead of
+//!   re-quantizing, pay only their delta, and privatize via
+//!   copy-on-write on the first divergent write.
 
 pub mod backend;
 pub mod block_table;
 pub mod ct;
 pub mod fp32;
 pub mod pool;
+pub mod prefix;
 pub mod swap;
 
 pub use backend::{BatchKey, Fp32Backend, KvBackend, QuantBackend};
@@ -38,6 +45,7 @@ pub use block_table::{BlockEntry, LayerTable, SlotId};
 pub use ct::{CacheConfig, CtCache, CtSnapshot, SegmentInfo};
 pub use fp32::{Fp32Cache, Fp32CacheSnapshot};
 pub use pool::BlockPool;
+pub use prefix::{AttachedPrefix, PrefixGeom, PrefixIndex, PrefixPayload, PrefixStats, SharedPrefix};
 pub use swap::{KvSnapshot, SnapshotPayload, SwapPool, SwapStats};
 
 /// The three thought types (paper Observation 1b: T sparsest, then R, then E).

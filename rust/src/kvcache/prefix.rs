@@ -1,0 +1,639 @@
+//! Cross-session **prefix sharing** with copy-on-write (the ROADMAP's
+//! "Prefix sharing across sessions" item).
+//!
+//! Identical prompt prefixes (system prompts, few-shot templates) used
+//! to be quantized and charged to the [`BlockPool`](super::BlockPool)
+//! once **per session**, so the prefix bytes — not the per-request
+//! deltas — capped the max concurrent batch for common-system-prompt
+//! workloads. This module makes prefill blocks shareable:
+//!
+//! * [`PrefixIndex`] — a hash-trie over prompt token prefixes at block
+//!   granularity, owned by the scheduler. The first session to prefill
+//!   a prompt *publishes* its block-aligned prefix payload (quantized
+//!   codes/scales/tags for the CT cache, f32 rows for the baseline
+//!   cache); the pool is charged **once** for the resident payload.
+//! * [`SharedPrefix`] — one resident, refcounted, read-only payload.
+//!   Reclaim ([`PrefixIndex::reclaim_unreferenced`]) only ever removes
+//!   entries with zero attached sessions — eviction and preemption can
+//!   never take a block another session still references.
+//! * [`AttachedPrefix`] — one session's handle on a shared prefix. The
+//!   session's cache attaches the payload instead of re-quantizing it,
+//!   its byte accounting covers only the *delta* (divergent prompt tail
+//!   + generation headroom), and the first write past the shared
+//!   boundary triggers **copy-on-write**
+//!   ([`AttachedPrefix::try_privatize`]): the session reserves the
+//!   prefix bytes for itself, drops its shared reference, and from then
+//!   on owns (and pays for) a private copy. A CoW that cannot reserve
+//!   pool bytes is denied — the shared region stays read-only and the
+//!   eviction policy works around it — so sharing can never over-commit
+//!   the pool.
+//!
+//! Lifecycle: trie match → ref bump → attach (delta-only accounting) →
+//! CoW on first divergent write → ref drop on completion/privatize →
+//! reclaim when unreferenced and the pool needs bytes.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::quant::{packed_bits_per_elem, Precision};
+
+use super::BlockPool;
+
+/// Geometry + precision key a payload is only valid for: sessions may
+/// share a prefix only when their caches would have produced the exact
+/// same bytes for it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PrefixGeom {
+    /// Cache family ("quant" / "fp32"), mirroring
+    /// [`KvBackend::kind`](super::KvBackend::kind).
+    pub kind: &'static str,
+    pub layers: usize,
+    pub hkv: usize,
+    pub dh: usize,
+    /// Prefill precision tag (quant family; unused sentinel for fp32).
+    pub prec_tag: u8,
+}
+
+impl PrefixGeom {
+    pub fn kv_dim(&self) -> usize {
+        self.hkv * self.dh
+    }
+
+    /// Pool bytes `n` prefix tokens occupy under this geometry — the
+    /// same packed accounting the backends charge, floored so a sharer
+    /// never under-pays its delta.
+    pub fn bytes_for(&self, n: usize) -> u64 {
+        let elems = (n * self.layers * 2 * self.kv_dim()) as f64;
+        if self.kind == "fp32" {
+            (elems * 4.0) as u64
+        } else {
+            (elems * packed_bits_per_elem(Precision::from_tag(self.prec_tag)) / 8.0).floor() as u64
+        }
+    }
+}
+
+/// The shareable prefill payload, compacted `[L, full_len, ...]` — the
+/// exact bytes a session's own `write_prefill` would have produced for
+/// the same tokens.
+pub enum PrefixPayload {
+    /// Quantized CT prefill blocks (codes, group scales, precision tags).
+    Quant {
+        full_len: usize,
+        k_codes: Vec<u8>,
+        k_scales: Vec<f32>,
+        v_codes: Vec<u8>,
+        v_scales: Vec<f32>,
+        tags: Vec<u8>,
+    },
+    /// Full-precision prefill rows (FullKV / eviction baselines).
+    Fp32 { full_len: usize, k: Vec<f32>, v: Vec<f32> },
+}
+
+impl PrefixPayload {
+    pub fn full_len(&self) -> usize {
+        match self {
+            PrefixPayload::Quant { full_len, .. } => *full_len,
+            PrefixPayload::Fp32 { full_len, .. } => *full_len,
+        }
+    }
+}
+
+/// One resident shared prefix: read-only payload + attached-session
+/// refcount. Lives in the trie until reclaimed (refs == 0 only).
+pub struct SharedPrefix {
+    pub geom: PrefixGeom,
+    pub full_len: usize,
+    /// Pool bytes charged once for residency ([`PrefixGeom::bytes_for`]
+    /// of `full_len`).
+    pub bytes: u64,
+    pub payload: PrefixPayload,
+    /// Sessions currently attached (including suspended ones).
+    refs: AtomicUsize,
+}
+
+impl SharedPrefix {
+    pub fn refs(&self) -> usize {
+        self.refs.load(Ordering::SeqCst)
+    }
+}
+
+/// A session's handle on a [`SharedPrefix`]: holds one reference, knows
+/// how many tokens this session attached, and carries the
+/// copy-on-write state.
+pub struct AttachedPrefix {
+    shared: Arc<SharedPrefix>,
+    index: Arc<PrefixIndex>,
+    /// Tokens of the shared payload this session attached (its common
+    /// prefix with the published tokens, block-aligned, `<= full_len`).
+    attach_len: usize,
+    /// Delta the session's accounting subtracts while the attachment is
+    /// active ([`PrefixGeom::bytes_for`] of `attach_len`).
+    bytes: u64,
+    privatized: AtomicBool,
+    /// Pool bytes reserved by [`AttachedPrefix::try_privatize`], not yet
+    /// folded into the owning session's reservation (drained by
+    /// `Session::sync_pool`).
+    cow_reserved: AtomicU64,
+    /// Guards the single refcount drop (privatize vs handle drop).
+    detached: AtomicBool,
+}
+
+impl AttachedPrefix {
+    pub fn attach_len(&self) -> usize {
+        self.attach_len
+    }
+
+    /// Pool bytes the attachment saves while active.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn payload(&self) -> &PrefixPayload {
+        &self.shared.payload
+    }
+
+    pub fn geom(&self) -> PrefixGeom {
+        self.shared.geom
+    }
+
+    /// True while the session still reads the shared (read-only) blocks.
+    pub fn is_active(&self) -> bool {
+        !self.privatized.load(Ordering::SeqCst)
+    }
+
+    /// Copy-on-write: the session is about to write into the shared
+    /// region, so it must own the prefix bytes privately. Reserves the
+    /// attachment's bytes in the pool, drops the shared reference, and
+    /// marks the attachment privatized. Returns false (leaving the
+    /// region read-only) when the pool cannot cover the now-private
+    /// copy — the caller must leave the shared blocks untouched.
+    pub fn try_privatize(&self) -> bool {
+        if self.privatized.load(Ordering::SeqCst) {
+            return true;
+        }
+        if !self.index.pool.reserve(self.bytes) {
+            self.index.cow_denied.fetch_add(1, Ordering::SeqCst);
+            return false;
+        }
+        self.privatized.store(true, Ordering::SeqCst);
+        self.cow_reserved.fetch_add(self.bytes, Ordering::SeqCst);
+        self.release_ref();
+        self.index.cow_faults.fetch_add(1, Ordering::SeqCst);
+        true
+    }
+
+    /// Drain pool bytes reserved by a privatization so the owning
+    /// session can fold them into its reservation.
+    pub fn take_cow_reserved(&self) -> u64 {
+        self.cow_reserved.swap(0, Ordering::SeqCst)
+    }
+
+    fn release_ref(&self) {
+        if !self.detached.swap(true, Ordering::SeqCst) {
+            self.shared.refs.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+impl Drop for AttachedPrefix {
+    fn drop(&mut self) {
+        self.release_ref();
+    }
+}
+
+/// Point-in-time counters of a [`PrefixIndex`] (surfaced through
+/// [`SchedSnapshot`](crate::metrics::SchedSnapshot) and the server
+/// `stats` reply).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Lookups that matched a resident prefix (a session attached).
+    pub hits: u64,
+    /// Lookups that matched nothing.
+    pub misses: u64,
+    /// Prefixes published (residency charged to the pool).
+    pub inserts: u64,
+    /// Publishes refused because the pool had no room for residency.
+    pub publish_fails: u64,
+    /// Copy-on-write privatizations (first write past a shared boundary).
+    pub cow_faults: u64,
+    /// CoW attempts denied because the pool could not cover the private
+    /// copy (the shared region stayed read-only).
+    pub cow_denied: u64,
+    /// Unreferenced entries reclaimed under memory pressure.
+    pub reclaims: u64,
+    pub reclaimed_bytes: u64,
+    /// Gauge: bytes currently resident in the pool for shared prefixes.
+    pub resident_bytes: u64,
+    /// Gauge: resident shared-prefix entries.
+    pub resident_entries: u64,
+}
+
+#[derive(Default)]
+struct TrieNode {
+    /// One child per distinct next *block* of tokens.
+    children: HashMap<Vec<i32>, TrieNode>,
+    /// Entries whose first `depth` blocks equal the path to this node.
+    entries: Vec<Arc<SharedPrefix>>,
+}
+
+impl TrieNode {
+    fn retain_not(&mut self, victims: &[*const SharedPrefix]) {
+        self.entries.retain(|e| !victims.contains(&Arc::as_ptr(e)));
+        for child in self.children.values_mut() {
+            child.retain_not(victims);
+        }
+        self.children
+            .retain(|_, c| !c.entries.is_empty() || !c.children.is_empty());
+    }
+}
+
+/// The scheduler-owned prefix index: hash-trie over prompt token
+/// prefixes at block granularity, plus the pool-residency accounting
+/// for every published payload.
+pub struct PrefixIndex {
+    pool: Arc<BlockPool>,
+    /// Trie granularity — prefixes match in whole blocks, mirroring the
+    /// CT block table's physical block size.
+    block_size: usize,
+    root: Mutex<TrieNode>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    publish_fails: AtomicU64,
+    cow_faults: AtomicU64,
+    cow_denied: AtomicU64,
+    reclaims: AtomicU64,
+    reclaimed_bytes: AtomicU64,
+    resident_bytes: AtomicU64,
+    resident_entries: AtomicU64,
+}
+
+impl PrefixIndex {
+    pub fn new(pool: Arc<BlockPool>, block_size: usize) -> Arc<PrefixIndex> {
+        assert!(block_size > 0);
+        Arc::new(PrefixIndex {
+            pool,
+            block_size,
+            root: Mutex::new(TrieNode::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            publish_fails: AtomicU64::new(0),
+            cow_faults: AtomicU64::new(0),
+            cow_denied: AtomicU64::new(0),
+            reclaims: AtomicU64::new(0),
+            reclaimed_bytes: AtomicU64::new(0),
+            resident_bytes: AtomicU64::new(0),
+            resident_entries: AtomicU64::new(0),
+        })
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Longest block-aligned prefix of `prompt` (capped at the compiled
+    /// prefill length) that can ever be shared.
+    pub fn shareable_len(&self, prompt_len: usize, prefill_len: usize) -> usize {
+        (prompt_len.min(prefill_len) / self.block_size) * self.block_size
+    }
+
+    /// Match the longest resident block-aligned prefix of `prompt` with
+    /// compatible geometry and attach to it (ref bump). Counts a hit or
+    /// a miss.
+    pub fn attach(
+        self: &Arc<Self>,
+        prompt: &[i32],
+        geom: PrefixGeom,
+        prefill_len: usize,
+    ) -> Option<Arc<AttachedPrefix>> {
+        let att = self.attach_inner(prompt, geom, prefill_len);
+        if att.is_none() {
+            self.misses.fetch_add(1, Ordering::SeqCst);
+        }
+        att
+    }
+
+    /// [`PrefixIndex::attach`] without counting a miss — the
+    /// second-chance lookup at prefill time follows a construction-time
+    /// lookup, and one request must not count two misses. (A successful
+    /// attach still counts its hit.)
+    pub fn attach_quiet(
+        self: &Arc<Self>,
+        prompt: &[i32],
+        geom: PrefixGeom,
+        prefill_len: usize,
+    ) -> Option<Arc<AttachedPrefix>> {
+        self.attach_inner(prompt, geom, prefill_len)
+    }
+
+    fn attach_inner(
+        self: &Arc<Self>,
+        prompt: &[i32],
+        geom: PrefixGeom,
+        prefill_len: usize,
+    ) -> Option<Arc<AttachedPrefix>> {
+        let limit = self.shareable_len(prompt.len(), prefill_len);
+        if limit == 0 {
+            return None;
+        }
+        let root = self.root.lock().unwrap();
+        let mut node = &*root;
+        let mut best: Option<(Arc<SharedPrefix>, usize)> = None;
+        let mut depth = 0;
+        while (depth + 1) * self.block_size <= limit {
+            let block = &prompt[depth * self.block_size..(depth + 1) * self.block_size];
+            let Some(child) = node.children.get(block) else {
+                break;
+            };
+            node = child;
+            depth += 1;
+            if let Some(e) = node.entries.iter().find(|e| e.geom == geom) {
+                best = Some((Arc::clone(e), depth * self.block_size));
+            }
+        }
+        let (shared, attach_len) = best?;
+        // ref bump under the trie lock so reclaim can never race it
+        shared.refs.fetch_add(1, Ordering::SeqCst);
+        drop(root);
+        self.hits.fetch_add(1, Ordering::SeqCst);
+        Some(Arc::new(AttachedPrefix {
+            bytes: geom.bytes_for(attach_len),
+            shared,
+            index: Arc::clone(self),
+            attach_len,
+            privatized: AtomicBool::new(false),
+            cow_reserved: AtomicU64::new(0),
+            detached: AtomicBool::new(false),
+        }))
+    }
+
+    /// Publish `tokens` (block-aligned, already prefilled by the caller)
+    /// as a resident shared prefix: charge the pool for residency,
+    /// register the entry at every block depth, and attach the
+    /// publisher. Returns None when the pool has no room (counted) or
+    /// the tokens are not shareable; if an equal-geometry entry covering
+    /// these tokens already exists the publisher simply attaches to it.
+    pub fn publish(
+        self: &Arc<Self>,
+        tokens: &[i32],
+        geom: PrefixGeom,
+        payload: PrefixPayload,
+    ) -> Option<Arc<AttachedPrefix>> {
+        let n = tokens.len();
+        if n == 0 || n % self.block_size != 0 || payload.full_len() != n {
+            return None;
+        }
+        let mut root = self.root.lock().unwrap();
+        // dedupe: someone published these tokens (or a longer prefix of
+        // the same stream) between our miss and now
+        {
+            let mut node = &*root;
+            let mut covered = None;
+            for d in 0..n / self.block_size {
+                let block = &tokens[d * self.block_size..(d + 1) * self.block_size];
+                match node.children.get(block) {
+                    Some(c) => node = c,
+                    None => break,
+                }
+                if let Some(e) = node.entries.iter().find(|e| e.geom == geom) {
+                    if (d + 1) * self.block_size == n {
+                        covered = Some(Arc::clone(e));
+                    }
+                }
+            }
+            if let Some(shared) = covered {
+                shared.refs.fetch_add(1, Ordering::SeqCst);
+                drop(root);
+                return Some(Arc::new(AttachedPrefix {
+                    bytes: geom.bytes_for(n),
+                    shared,
+                    index: Arc::clone(self),
+                    attach_len: n,
+                    privatized: AtomicBool::new(false),
+                    cow_reserved: AtomicU64::new(0),
+                    detached: AtomicBool::new(false),
+                }));
+            }
+        }
+        let bytes = geom.bytes_for(n);
+        if !self.pool.reserve(bytes) {
+            self.publish_fails.fetch_add(1, Ordering::SeqCst);
+            return None;
+        }
+        let shared = Arc::new(SharedPrefix {
+            geom,
+            full_len: n,
+            bytes,
+            payload,
+            refs: AtomicUsize::new(1), // the publisher attaches
+        });
+        let mut node = &mut *root;
+        for d in 0..n / self.block_size {
+            let block = tokens[d * self.block_size..(d + 1) * self.block_size].to_vec();
+            node = node.children.entry(block).or_default();
+            node.entries.push(Arc::clone(&shared));
+        }
+        drop(root);
+        self.inserts.fetch_add(1, Ordering::SeqCst);
+        self.resident_bytes.fetch_add(bytes, Ordering::SeqCst);
+        self.resident_entries.fetch_add(1, Ordering::SeqCst);
+        Some(Arc::new(AttachedPrefix {
+            bytes,
+            shared,
+            index: Arc::clone(self),
+            attach_len: n,
+            privatized: AtomicBool::new(false),
+            cow_reserved: AtomicU64::new(0),
+            detached: AtomicBool::new(false),
+        }))
+    }
+
+    /// Reclaim resident prefixes with **zero** attached sessions until
+    /// at least `need` bytes came back (or nothing unreferenced is
+    /// left). Entries still referenced by any session — running or
+    /// suspended — are never touched. Returns the bytes released.
+    pub fn reclaim_unreferenced(&self, need: u64) -> u64 {
+        if need == 0 {
+            return 0;
+        }
+        let mut root = self.root.lock().unwrap();
+        let mut victims: Vec<Arc<SharedPrefix>> = Vec::new();
+        let mut freed = 0u64;
+        collect_unreferenced(&root, &mut victims, &mut freed, need);
+        if victims.is_empty() {
+            return 0;
+        }
+        let ptrs: Vec<*const SharedPrefix> = victims.iter().map(Arc::as_ptr).collect();
+        root.retain_not(&ptrs);
+        drop(root);
+        let mut released = 0u64;
+        for v in &victims {
+            self.pool.release(v.bytes);
+            released += v.bytes;
+            self.resident_bytes.fetch_sub(v.bytes, Ordering::SeqCst);
+            self.resident_entries.fetch_sub(1, Ordering::SeqCst);
+            self.reclaims.fetch_add(1, Ordering::SeqCst);
+        }
+        self.reclaimed_bytes.fetch_add(released, Ordering::SeqCst);
+        released
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        PrefixStats {
+            hits: self.hits.load(Ordering::SeqCst),
+            misses: self.misses.load(Ordering::SeqCst),
+            inserts: self.inserts.load(Ordering::SeqCst),
+            publish_fails: self.publish_fails.load(Ordering::SeqCst),
+            cow_faults: self.cow_faults.load(Ordering::SeqCst),
+            cow_denied: self.cow_denied.load(Ordering::SeqCst),
+            reclaims: self.reclaims.load(Ordering::SeqCst),
+            reclaimed_bytes: self.reclaimed_bytes.load(Ordering::SeqCst),
+            resident_bytes: self.resident_bytes.load(Ordering::SeqCst),
+            resident_entries: self.resident_entries.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// Depth-first scan for unreferenced entries, deduped by pointer (each
+/// entry is registered at every block depth).
+fn collect_unreferenced(
+    node: &TrieNode,
+    victims: &mut Vec<Arc<SharedPrefix>>,
+    freed: &mut u64,
+    need: u64,
+) {
+    for e in &node.entries {
+        if *freed >= need {
+            return;
+        }
+        if e.refs() == 0 && !victims.iter().any(|v| Arc::ptr_eq(v, e)) {
+            *freed += e.bytes;
+            victims.push(Arc::clone(e));
+        }
+    }
+    for child in node.children.values() {
+        if *freed >= need {
+            return;
+        }
+        collect_unreferenced(child, victims, freed, need);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> PrefixGeom {
+        PrefixGeom { kind: "fp32", layers: 2, hkv: 1, dh: 16, prec_tag: 0 }
+    }
+
+    fn payload(n: usize, g: &PrefixGeom) -> PrefixPayload {
+        PrefixPayload::Fp32 {
+            full_len: n,
+            k: vec![0.5; g.layers * n * g.kv_dim()],
+            v: vec![-0.5; g.layers * n * g.kv_dim()],
+        }
+    }
+
+    #[test]
+    fn publish_then_attach_longest_match() {
+        let pool = Arc::new(BlockPool::new(1 << 30));
+        let idx = PrefixIndex::new(Arc::clone(&pool), 8);
+        let g = geom();
+        let tokens: Vec<i32> = (0..16).collect();
+        let pub_att = idx.publish(&tokens, g, payload(16, &g)).expect("publish fits");
+        assert_eq!(pub_att.attach_len(), 16);
+        assert_eq!(pool.used(), g.bytes_for(16), "residency charged once");
+
+        // full match
+        let prompt: Vec<i32> = (0..24).collect();
+        let att = idx.attach(&prompt, g, 32).expect("hit");
+        assert_eq!(att.attach_len(), 16);
+        // partial (one-block) match: same first block, divergent second
+        let mut fork = tokens.clone();
+        fork[12] = 999;
+        let att2 = idx.attach(&fork, g, 32).expect("hit at block 1");
+        assert_eq!(att2.attach_len(), 8);
+        // geometry mismatch never matches
+        let other = PrefixGeom { layers: 4, ..g };
+        assert!(idx.attach(&prompt, other, 32).is_none());
+        let s = idx.stats();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.inserts, 1);
+        assert_eq!(s.resident_entries, 1);
+        assert_eq!(s.resident_bytes, g.bytes_for(16));
+    }
+
+    #[test]
+    fn refcounts_gate_reclaim() {
+        let pool = Arc::new(BlockPool::new(1 << 30));
+        let idx = PrefixIndex::new(Arc::clone(&pool), 8);
+        let g = geom();
+        let tokens: Vec<i32> = (0..8).collect();
+        let a = idx.publish(&tokens, g, payload(8, &g)).expect("publish");
+        let b = idx.attach(&tokens, g, 32).expect("hit");
+        // two refs: nothing reclaimable
+        assert_eq!(idx.reclaim_unreferenced(u64::MAX), 0);
+        drop(a);
+        assert_eq!(idx.reclaim_unreferenced(u64::MAX), 0, "one ref left");
+        drop(b);
+        let freed = idx.reclaim_unreferenced(u64::MAX);
+        assert_eq!(freed, g.bytes_for(8));
+        assert_eq!(pool.used(), 0, "residency returned");
+        assert_eq!(idx.stats().resident_entries, 0);
+        // reclaimed entries no longer match
+        assert!(idx.attach(&tokens, g, 32).is_none());
+    }
+
+    #[test]
+    fn privatize_reserves_pool_and_drops_ref() {
+        let g = geom();
+        let pool = Arc::new(BlockPool::new(3 * g.bytes_for(8)));
+        let idx = PrefixIndex::new(Arc::clone(&pool), 8);
+        let tokens: Vec<i32> = (0..8).collect();
+        let a = idx.publish(&tokens, g, payload(8, &g)).expect("publish");
+        let b = idx.attach(&tokens, g, 32).expect("hit");
+        assert!(a.is_active() && b.is_active());
+        assert!(a.try_privatize(), "pool has room");
+        assert!(!a.is_active());
+        assert_eq!(a.take_cow_reserved(), g.bytes_for(8));
+        assert_eq!(a.take_cow_reserved(), 0, "drained once");
+        assert_eq!(pool.used(), 2 * g.bytes_for(8), "residency + private copy");
+        // exhaust the pool: b's CoW is denied and it stays shared
+        assert!(pool.reserve(pool.free()));
+        assert!(!b.try_privatize());
+        assert!(b.is_active());
+        let s = idx.stats();
+        assert_eq!(s.cow_faults, 1);
+        assert_eq!(s.cow_denied, 1);
+        // b still holds the only ref; reclaim must not touch the entry
+        assert_eq!(idx.reclaim_unreferenced(u64::MAX), 0);
+        drop(b);
+        assert_eq!(idx.reclaim_unreferenced(u64::MAX), g.bytes_for(8));
+    }
+
+    #[test]
+    fn publish_dedupes_and_respects_pool() {
+        let g = geom();
+        let pool = Arc::new(BlockPool::new(g.bytes_for(8)));
+        let idx = PrefixIndex::new(Arc::clone(&pool), 8);
+        let tokens: Vec<i32> = (0..8).collect();
+        let a = idx.publish(&tokens, g, payload(8, &g)).expect("first publish");
+        // second publish of the same tokens attaches instead of double-charging
+        let b = idx.publish(&tokens, g, payload(8, &g)).expect("dedup attach");
+        assert_eq!(pool.used(), g.bytes_for(8));
+        assert_eq!(idx.stats().inserts, 1);
+        drop(a);
+        drop(b);
+        // pool full: a different publish is refused and counted
+        let other: Vec<i32> = (100..108).collect();
+        assert!(idx.publish(&other, g, payload(8, &g)).is_none());
+        assert_eq!(idx.stats().publish_fails, 1);
+        // unaligned / empty publishes are refused outright
+        assert!(idx.publish(&tokens[..5], g, payload(5, &g)).is_none());
+        assert!(idx.publish(&[], g, payload(0, &g)).is_none());
+    }
+}

@@ -53,6 +53,8 @@ pub mod coordinator;
 pub mod server;
 pub mod metrics;
 pub mod bench;
+#[doc(hidden)]
+pub mod testkit;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -38,9 +38,9 @@ USAGE: thinkv <cmd> [--flags]
 
   generate  --mode thinkv|fullkv|rkv|h2o|kivi2|... --requests 4
             --budget 1024 --max-tokens 128 --workers 2
-            --pool-mb 0 --swap-mb 0 --max-decode-batch 8
+            --pool-mb 0 --swap-mb 0 --max-decode-batch 8 --prefix-share
   serve     --addr 127.0.0.1:7799 --mode thinkv --budget 1024
-            --pool-mb 0 --swap-mb 0 --max-decode-batch 8
+            --pool-mb 0 --swap-mb 0 --max-decode-batch 8 --prefix-share
   sim       --mode thinkv --dataset aime --budget 1024 --scale 0.5
   calibrate --prompts 8 --layers 8
   info
@@ -52,7 +52,12 @@ USAGE: thinkv <cmd> [--flags]
   with zero recompute steps (0 = recompute preemption only).
   --max-decode-batch caps the cross-session decode batch: each worker
   advances up to that many compatible sessions with one fused engine
-  call per step (1 = per-session decode)."
+  call per step (1 = per-session decode). --prefix-share stores
+  identical block-aligned prompt prefixes (system prompts) once: later
+  sessions attach the resident read-only blocks, are admitted for only
+  their delta bytes, and privatize via copy-on-write on the first
+  divergent write — multiplying max concurrency for
+  common-system-prompt workloads."
     );
 }
 
@@ -76,6 +81,7 @@ fn serve_config(args: &Args) -> ServeConfig {
         seed: args.u64_or("seed", 42),
         pool_bytes: (pool_mb > 0).then_some(pool_mb << 20),
         swap_bytes: (swap_mb > 0).then_some(swap_mb << 20),
+        prefix_share: args.bool("prefix-share"),
         ..ServeConfig::default()
     }
 }
@@ -83,6 +89,7 @@ fn serve_config(args: &Args) -> ServeConfig {
 fn cmd_generate(args: &Args) -> i32 {
     let cfg = serve_config(args);
     let n = args.usize_or("requests", 4);
+    let share = cfg.prefix_share;
     println!("mode={} budget={} requests={n}", cfg.mode.label(), cfg.budget);
     let coordinator = match Coordinator::start(cfg) {
         Ok(c) => c,
@@ -92,8 +99,16 @@ fn cmd_generate(args: &Args) -> i32 {
         }
     };
     let mut rng = Rng::new(7);
+    // with --prefix-share the requests model a common-system-prompt
+    // workload: a fixed 32-token system prefix plus a random tail
+    let system: Vec<i32> = (0..32).map(|i| ((i * 7) % 512) as i32).collect();
     let prompts: Vec<Vec<i32>> = (0..n)
-        .map(|_| (0..64).map(|_| rng.below(512) as i32).collect())
+        .map(|_| {
+            let mut p = if share { system.clone() } else { Vec::new() };
+            let tail = 64 - p.len();
+            p.extend((0..tail).map(|_| rng.below(512) as i32));
+            p
+        })
         .collect();
     let t0 = std::time::Instant::now();
     match coordinator.run_batch(prompts) {

@@ -155,8 +155,30 @@ pub struct SchedSnapshot {
     pub swap_bytes_in: u64,
     /// Cumulative snapshot-restore wall time (swap-in latency).
     pub swap_restore_ns: u64,
-    /// Preemptions that fell back to recompute (snapshot did not fit).
+    /// Preemptions that fell back to recompute (snapshot did not fit,
+    /// or a snapshot restore failed and the session recomputed).
     pub swap_fallbacks: u64,
+    /// Cross-session prefix sharing configured on this scheduler.
+    pub prefix_enabled: bool,
+    /// Prompts whose prefix matched a resident shared entry (the
+    /// session attached and was charged delta-only).
+    pub prefix_hits: u64,
+    /// Prompts that matched no resident prefix.
+    pub prefix_misses: u64,
+    /// Prefixes published (residency charged to the pool once).
+    pub prefix_inserts: u64,
+    /// Publishes refused for lack of pool bytes.
+    pub prefix_publish_fails: u64,
+    /// Copy-on-write privatizations (first write past a shared boundary).
+    pub prefix_cow_faults: u64,
+    /// CoW attempts denied by pool pressure (region stayed read-only).
+    pub prefix_cow_denied: u64,
+    /// Unreferenced resident prefixes reclaimed under memory pressure.
+    pub prefix_reclaims: u64,
+    /// Gauge: pool bytes currently held by resident shared prefixes.
+    pub prefix_resident_bytes: u64,
+    /// Gauge: resident shared-prefix entries.
+    pub prefix_resident_entries: u64,
 }
 
 impl SchedSnapshot {
@@ -189,6 +211,16 @@ impl SchedSnapshot {
         j.set("swap_bytes_in", Json::Num(self.swap_bytes_in as f64));
         j.set("swap_restore_ms", Json::Num(self.swap_restore_ns as f64 / 1e6));
         j.set("swap_fallbacks", Json::Num(self.swap_fallbacks as f64));
+        j.set("prefix_enabled", Json::Num(if self.prefix_enabled { 1.0 } else { 0.0 }));
+        j.set("prefix_hits", Json::Num(self.prefix_hits as f64));
+        j.set("prefix_misses", Json::Num(self.prefix_misses as f64));
+        j.set("prefix_inserts", Json::Num(self.prefix_inserts as f64));
+        j.set("prefix_publish_fails", Json::Num(self.prefix_publish_fails as f64));
+        j.set("prefix_cow_faults", Json::Num(self.prefix_cow_faults as f64));
+        j.set("prefix_cow_denied", Json::Num(self.prefix_cow_denied as f64));
+        j.set("prefix_reclaims", Json::Num(self.prefix_reclaims as f64));
+        j.set("prefix_resident_bytes", Json::Num(self.prefix_resident_bytes as f64));
+        j.set("prefix_resident_entries", Json::Num(self.prefix_resident_entries as f64));
         j
     }
 
@@ -227,6 +259,18 @@ impl SchedSnapshot {
                 self.swap_used,
                 self.swap_capacity,
                 self.swap_peak
+            ));
+        }
+        if self.prefix_enabled {
+            s.push_str(&format!(
+                "\nprefix: {} hits / {} misses, {} resident ({} B), cow {} (+{} denied), reclaims {}",
+                self.prefix_hits,
+                self.prefix_misses,
+                self.prefix_resident_entries,
+                self.prefix_resident_bytes,
+                self.prefix_cow_faults,
+                self.prefix_cow_denied,
+                self.prefix_reclaims
             ));
         }
         s
@@ -339,6 +383,31 @@ mod tests {
         let summary = s.summary();
         assert!(summary.contains("swap: 4 out / 3 in"));
         assert!(summary.contains("fallbacks 1"));
+    }
+
+    #[test]
+    fn sched_snapshot_prefix_fields_surface() {
+        let s = SchedSnapshot {
+            prefix_enabled: true,
+            prefix_hits: 5,
+            prefix_misses: 2,
+            prefix_inserts: 1,
+            prefix_cow_faults: 1,
+            prefix_cow_denied: 1,
+            prefix_reclaims: 3,
+            prefix_resident_bytes: 4096,
+            prefix_resident_entries: 1,
+            ..SchedSnapshot::default()
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("prefix_hits").and_then(Json::as_usize), Some(5));
+        assert_eq!(j.get("prefix_enabled").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("prefix_resident_bytes").and_then(Json::as_usize), Some(4096));
+        let summary = s.summary();
+        assert!(summary.contains("prefix: 5 hits / 2 misses"));
+        assert!(summary.contains("cow 1 (+1 denied)"));
+        // sharing disabled: the prefix line is omitted entirely
+        assert!(!SchedSnapshot::default().summary().contains("prefix:"));
     }
 
     #[test]

@@ -11,11 +11,15 @@
 //! and keeps reading. `stats` reports the scheduler/pool counters
 //! (admissions, preemptions, queue depth, pool used/peak/free), the
 //! suspend-to-host swap counters (`swap_outs`/`swap_ins`, bytes moved
-//! each way, `swap_restore_ms`, `swap_fallbacks`), and the batched
-//! decode counters (`fused_steps`, `fused_sessions`, `batch_hist`)
-//! alongside the serving totals. Per-request replies carry
-//! `preemptions` (recompute resets) and `swap_ins` (zero-replay
-//! resumes) so clients can tell the two preemption flavors apart.
+//! each way, `swap_restore_ms`, `swap_fallbacks`), the batched
+//! decode counters (`fused_steps`, `fused_sessions`, `batch_hist`),
+//! and the cross-session prefix-sharing counters (`prefix_hits`,
+//! `prefix_misses`, `prefix_inserts`, `prefix_cow_faults`,
+//! `prefix_cow_denied`, `prefix_reclaims`, `prefix_resident_bytes`,
+//! `prefix_resident_entries`) alongside the serving totals.
+//! Per-request replies carry `preemptions` (recompute resets) and
+//! `swap_ins` (zero-replay resumes) so clients can tell the two
+//! preemption flavors apart.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};

@@ -1,0 +1,126 @@
+//! Shared, artifact-free test/bench fixtures (`#[doc(hidden)]`): a
+//! hand-built tiny manifest, a prefix-dominated manifest, and a
+//! deterministic **causal** engine fake.
+//!
+//! The causal property is load-bearing for prefix sharing: the fake's
+//! prefill K/V at position `i` is a pure function of tokens `0..=i`
+//! (deterministic pad past the prompt), mirroring a causal transformer,
+//! so identical prompt prefixes produce identical prefill blocks. Unit
+//! tests, the integration suites, and `bench_scheduler`'s sharing sweep
+//! all drive this one implementation so the invariant cannot drift
+//! between copies.
+
+use anyhow::Result;
+
+use crate::model::{Manifest, ModelConfig};
+use crate::runtime::{CacheView, DecodeEngine, DecodeOut, PrefillOut};
+use crate::util::rng::Rng;
+
+/// Tiny dims, no artifact files needed (nothing loads HLO).
+pub fn tiny_manifest() -> Manifest {
+    Manifest {
+        model: ModelConfig {
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            d_head: 16,
+            d_ffn: 64,
+            rope_base: 10000.0,
+            buf_slots: 16,
+            prefill_len: 32,
+            obs_window: 8,
+            group_size: 16,
+        },
+        quant_caps: vec![128],
+        fp32_caps: vec![256],
+        micro_c: 128,
+        golden_attn_c: 128,
+        artifacts_dir: ".".into(),
+        weights: vec![],
+        seed: 0,
+    }
+}
+
+/// Like [`tiny_manifest`] but tuned so the prompt prefix dominates a
+/// request's admission bytes (long prefill, small ring buffer) — the
+/// regime where prefix sharing multiplies the admissible batch.
+pub fn share_manifest() -> Manifest {
+    let mut man = tiny_manifest();
+    man.model.buf_slots = 4;
+    man.model.prefill_len = 96;
+    man
+}
+
+/// Deterministic causal engine stand-in (see module docs). Outputs are
+/// a pure function of the decode-step inputs (token, position) and, for
+/// prefill, of the causal token prefix per position.
+pub struct CausalEngine {
+    m: ModelConfig,
+}
+
+impl CausalEngine {
+    pub fn new(m: ModelConfig) -> CausalEngine {
+        CausalEngine { m }
+    }
+}
+
+impl DecodeEngine for CausalEngine {
+    fn model(&self) -> &ModelConfig {
+        &self.m
+    }
+
+    fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
+        let m = &self.m;
+        let kvd = m.n_kv_heads * m.d_head;
+        let mut k = vec![0f32; m.n_layers * m.prefill_len * kvd];
+        let mut v = vec![0f32; m.n_layers * m.prefill_len * kvd];
+        let mut h = 0xABCDu64;
+        for pos in 0..m.prefill_len {
+            // causal accumulator: position `pos` sees tokens[0..=pos]
+            h = h.wrapping_mul(31).wrapping_add(if pos < tokens.len() {
+                tokens[pos] as u64
+            } else {
+                7
+            });
+            let mut rng = Rng::new(h ^ 0x51AB);
+            for l in 0..m.n_layers {
+                let base = (l * m.prefill_len + pos) * kvd;
+                for d in 0..kvd {
+                    k[base + d] = (rng.f32() - 0.5) * 2.0;
+                    v[base + d] = (rng.f32() - 0.5) * 2.0;
+                }
+            }
+        }
+        // last-position logits: a function of the whole prompt
+        let mut lr = Rng::new(h ^ 0x1061_75);
+        let mut logits = vec![0f32; m.vocab];
+        lr.fill_normal_f32(&mut logits, 0.0, 1.0);
+        Ok(PrefillOut { logits, k, v, obs: vec![0.0; m.n_layers * m.prefill_len] })
+    }
+
+    fn decode(&self, token: i32, pos: i32, _buf_idx: i32, view: &CacheView) -> Result<DecodeOut> {
+        let capacity = match view {
+            CacheView::Quant(q) => q.capacity,
+            CacheView::Fp32 { capacity, .. } => *capacity,
+        };
+        let m = &self.m;
+        let span = capacity + m.buf_slots;
+        let kvd = m.n_kv_heads * m.d_head;
+        let seed = ((token as u32 as u64) << 32) | pos as u32 as u64;
+        let mut rng = Rng::new(seed ^ 0x5EED_CAFE);
+        let mut logits = vec![0f32; m.vocab];
+        let mut new_k = vec![0f32; m.n_layers * kvd];
+        let mut new_v = vec![0f32; m.n_layers * kvd];
+        let mut probs = vec![0f32; m.n_layers * m.n_heads * span];
+        rng.fill_normal_f32(&mut logits, 0.0, 1.0);
+        rng.fill_normal_f32(&mut new_k, 0.0, 1.0);
+        rng.fill_normal_f32(&mut new_v, 0.0, 1.0);
+        rng.fill_normal_f32(&mut probs, 0.5, 0.2);
+        for p in probs.iter_mut() {
+            *p = p.abs();
+        }
+        Ok(DecodeOut { logits, new_k, new_v, probs })
+    }
+}

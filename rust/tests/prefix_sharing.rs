@@ -1,0 +1,300 @@
+//! Cross-session prefix sharing: the ISSUE 4 acceptance properties,
+//! artifact-free (a deterministic **causal** engine fake stands in for
+//! PJRT — prefill K/V at position `i` depends only on tokens `0..=i`,
+//! the invariant real causal prefill provides and sharing relies on).
+//!
+//! Properties pinned here:
+//! * **Stream invariance** — N sessions with a common system prompt
+//!   produce token streams bit-identical to the unshared path.
+//! * **Admission multiplication** — a pool sized for ~1 full prefix +
+//!   N deltas admits all N concurrently, while the unshared path
+//!   admits only ~1.
+//! * **CoW isolation** — the first divergent write privatizes the
+//!   writer without perturbing the other sharers' caches or streams.
+
+use std::sync::{mpsc, Arc};
+
+use thinkv::coordinator::{
+    advance_batch, CompressionMode, RequestResult, Scheduler, ServeConfig, Session, StepOutcome,
+};
+use thinkv::kvcache::{BlockPool, PrefixIndex};
+use thinkv::model::Manifest;
+use thinkv::testkit::{share_manifest, CausalEngine};
+
+/// A common-system-prompt workload: one publisher prompt plus
+/// `sharers` prompts that share the 88-token system prefix and then
+/// diverge.
+fn workload(sharers: usize) -> Vec<Vec<i32>> {
+    let system: Vec<i32> = (0..88).map(|i| ((i * 3) % 60) as i32).collect();
+    let mut prompts = Vec::new();
+    for s in 0..=sharers {
+        let mut p = system.clone();
+        p.extend((0..8).map(|i| (s * 8 + i) as i32)); // divergent tail
+        prompts.push(p);
+    }
+    prompts
+}
+
+/// Unshared reference: each session advanced alone, no pool bound.
+fn run_reference(
+    engine: &CausalEngine,
+    man: &Manifest,
+    cfg: &ServeConfig,
+    prompts: &[Vec<i32>],
+) -> Vec<Vec<i32>> {
+    let mut streams = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let mut s = Session::new(i as u64 + 1, p.clone(), cfg, man).expect("session");
+        loop {
+            match s.step(engine).expect("reference step") {
+                StepOutcome::Running => {}
+                StepOutcome::Finished => break,
+                StepOutcome::NeedMemory => panic!("reference run is unbounded"),
+            }
+        }
+        streams.push(s.tokens.clone());
+    }
+    streams
+}
+
+/// Drive a scheduler until every submitted request completed.
+fn drain(sched: &Scheduler, engine: &CausalEngine) {
+    while sched.inflight() > 0 {
+        let batch = sched.next_batch(4).expect("runnable batch while inflight");
+        advance_batch(sched, engine, 3, batch);
+    }
+}
+
+/// Acceptance: bit-identical streams + admission multiplication.
+#[test]
+fn shared_prefix_multiplies_admission_with_identical_streams() {
+    let man = share_manifest();
+    let engine = CausalEngine::new(man.model.clone());
+    // quantization-only ThinKV: no TBE, so the shared region stays
+    // read-only for the whole run (CoW is exercised separately below)
+    let cfg = ServeConfig {
+        mode: CompressionMode::parse("thinkv-notbe").expect("mode"),
+        budget: 256,
+        max_new_tokens: 6,
+        workers: 1,
+        temperature: 0.0,
+        ..ServeConfig::default()
+    };
+    let sharers = 5;
+    let prompts = workload(sharers);
+    let reference = run_reference(&engine, &man, &cfg, &prompts);
+
+    // ---- phase A: measure the byte economics on an unbounded pool ----
+    let (est, resident, delta) = {
+        let pool = Arc::new(BlockPool::new(u64::MAX / 2));
+        let idx = PrefixIndex::new(Arc::clone(&pool), 8);
+        let sched = Scheduler::with_prefix(Arc::clone(&pool), None, Some(Arc::clone(&idx)));
+        let (tx, rx) = mpsc::channel();
+        let publisher = Session::with_parts(
+            1,
+            prompts[0].clone(),
+            &cfg,
+            &man,
+            Some(Arc::clone(&pool)),
+            Some(Arc::clone(&idx)),
+        )
+        .expect("session");
+        let est = publisher.admission_bytes();
+        sched.submit(publisher, tx.clone());
+        drain(&sched, &engine);
+        drop(tx);
+        let _ = rx.iter().count();
+        let resident = idx.stats().resident_bytes;
+        let probe = Session::with_parts(
+            2,
+            prompts[1].clone(),
+            &cfg,
+            &man,
+            Some(Arc::clone(&pool)),
+            Some(Arc::clone(&idx)),
+        )
+        .expect("session");
+        let delta = probe.admission_bytes();
+        (est, resident, delta)
+    };
+    assert!(resident > 0 && delta < est, "sharing must shrink admission: {delta} vs {est}");
+
+    // ---- phase B: a pool sized for ~1 full prefix + N deltas (plus a
+    // decode-growth margin: tokens past the ring quantize into the
+    // cache beyond the admission estimate) ----
+    let pool_bytes = (est + resident).max(resident + sharers as u64 * delta) + 4096;
+    let pool = Arc::new(BlockPool::new(pool_bytes));
+    let idx = PrefixIndex::new(Arc::clone(&pool), 8);
+    let sched = Scheduler::with_prefix(Arc::clone(&pool), None, Some(Arc::clone(&idx)));
+    let (tx, rx) = mpsc::channel();
+    // the publisher runs first and leaves the prefix resident
+    let publisher = Session::with_parts(
+        1,
+        prompts[0].clone(),
+        &cfg,
+        &man,
+        Some(Arc::clone(&pool)),
+        Some(Arc::clone(&idx)),
+    )
+    .expect("session");
+    sched.submit(publisher, tx.clone());
+    drain(&sched, &engine);
+    assert_eq!(idx.stats().inserts, 1, "publisher left a resident prefix");
+    // every sharer is admitted concurrently — the tentpole claim
+    for (i, p) in prompts.iter().enumerate().skip(1) {
+        let s = Session::with_parts(
+            i as u64 + 1,
+            p.clone(),
+            &cfg,
+            &man,
+            Some(Arc::clone(&pool)),
+            Some(Arc::clone(&idx)),
+        )
+        .expect("session");
+        assert!(s.has_prefix_attachment(), "sharer {i} must hit the trie");
+        sched.submit(s, tx.clone());
+    }
+    let snap = sched.snapshot();
+    assert_eq!(
+        snap.running, sharers,
+        "a pool of 1 prefix + {sharers} deltas must admit every sharer concurrently"
+    );
+    assert_eq!(snap.queue_depth, 0);
+    assert!(snap.pool_peak <= snap.pool_capacity);
+    drain(&sched, &engine);
+    drop(tx);
+    let mut results: Vec<RequestResult> = rx.iter().collect();
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results.len(), prompts.len());
+    for (r, want) in results.iter().zip(&reference) {
+        assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+        assert_eq!(&r.tokens, want, "request {} stream diverged from unshared", r.id);
+    }
+    let snap = sched.snapshot();
+    assert_eq!(snap.prefix_hits as usize, sharers, "every sharer attached");
+    assert_eq!(snap.prefix_cow_faults, 0, "nothing wrote past the boundary");
+    assert_eq!(
+        snap.pool_used, snap.prefix_resident_bytes,
+        "at quiescence only the resident prefix holds bytes"
+    );
+
+    // ---- seed behavior: the same pool without sharing admits ~1 ----
+    let pool2 = Arc::new(BlockPool::new(pool_bytes));
+    let sched2 = Scheduler::new(Arc::clone(&pool2));
+    let (tx2, _rx2) = mpsc::channel();
+    for (i, p) in prompts.iter().enumerate().skip(1) {
+        let s = Session::with_pool(i as u64 + 1, p.clone(), &cfg, &man, Some(Arc::clone(&pool2)))
+            .expect("session");
+        sched2.submit(s, tx2.clone());
+    }
+    let unshared_running = sched2.snapshot().running;
+    assert_eq!(
+        unshared_running,
+        (pool_bytes / est) as usize,
+        "unshared admission is full-prefix bound"
+    );
+    assert!(
+        unshared_running < sharers,
+        "seed path must admit fewer than the shared path ({unshared_running} vs {sharers})"
+    );
+    sched2.shutdown();
+}
+
+/// CoW isolation: with TBE on, budget pressure writes past the shared
+/// boundary; the writer privatizes (pool has room) and every stream
+/// still matches the unshared reference — other sharers unperturbed.
+#[test]
+fn cow_on_divergent_write_never_perturbs_sharers() {
+    let man = share_manifest();
+    let engine = CausalEngine::new(man.model.clone());
+    let cfg = ServeConfig {
+        mode: CompressionMode::thinkv_default(),
+        budget: 64, // < prefill_len: TBE must evict into the prefix
+        max_new_tokens: 6,
+        workers: 1,
+        temperature: 0.0,
+        ..ServeConfig::default()
+    };
+    let prompts = workload(3);
+    let reference = run_reference(&engine, &man, &cfg, &prompts);
+
+    let pool = Arc::new(BlockPool::new(u64::MAX / 2));
+    let idx = PrefixIndex::new(Arc::clone(&pool), 8);
+    let sched = Scheduler::with_prefix(Arc::clone(&pool), None, Some(Arc::clone(&idx)));
+    let (tx, rx) = mpsc::channel();
+    for (i, p) in prompts.iter().enumerate() {
+        let s = Session::with_parts(
+            i as u64 + 1,
+            p.clone(),
+            &cfg,
+            &man,
+            Some(Arc::clone(&pool)),
+            Some(Arc::clone(&idx)),
+        )
+        .expect("session");
+        sched.submit(s, tx.clone());
+    }
+    drain(&sched, &engine);
+    drop(tx);
+    let mut results: Vec<RequestResult> = rx.iter().collect();
+    results.sort_by_key(|r| r.id);
+    for (r, want) in results.iter().zip(&reference) {
+        assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+        assert_eq!(
+            &r.tokens, want,
+            "request {} diverged: CoW must reproduce the unshared eviction history",
+            r.id
+        );
+    }
+    let stats = idx.stats();
+    assert!(stats.cow_faults >= 1, "budget pressure must trigger copy-on-write");
+    assert_eq!(stats.cow_denied, 0, "an unbounded pool never denies CoW");
+    sched.shutdown();
+}
+
+/// The fp32 family shares too: FullKV sessions with a common system
+/// prompt attach the resident rows and stream-match the unshared path.
+#[test]
+fn fp32_fullkv_sessions_share_prefix() {
+    let man = share_manifest();
+    let engine = CausalEngine::new(man.model.clone());
+    let cfg = ServeConfig {
+        mode: CompressionMode::FullKv,
+        budget: 256,
+        max_new_tokens: 5,
+        workers: 1,
+        temperature: 0.0,
+        ..ServeConfig::default()
+    };
+    let prompts = workload(2);
+    let reference = run_reference(&engine, &man, &cfg, &prompts);
+
+    let pool = Arc::new(BlockPool::new(u64::MAX / 2));
+    let idx = PrefixIndex::new(Arc::clone(&pool), 8);
+    let sched = Scheduler::with_prefix(Arc::clone(&pool), None, Some(Arc::clone(&idx)));
+    let (tx, rx) = mpsc::channel();
+    for (i, p) in prompts.iter().enumerate() {
+        let s = Session::with_parts(
+            i as u64 + 1,
+            p.clone(),
+            &cfg,
+            &man,
+            Some(Arc::clone(&pool)),
+            Some(Arc::clone(&idx)),
+        )
+        .expect("session");
+        sched.submit(s, tx.clone());
+    }
+    drain(&sched, &engine);
+    drop(tx);
+    let mut results: Vec<RequestResult> = rx.iter().collect();
+    results.sort_by_key(|r| r.id);
+    for (r, want) in results.iter().zip(&reference) {
+        assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+        assert_eq!(&r.tokens, want, "fp32 request {} stream diverged", r.id);
+    }
+    let stats = idx.stats();
+    assert_eq!(stats.inserts, 1);
+    assert!(stats.hits >= 2, "both later sessions attach");
+    sched.shutdown();
+}

@@ -3,12 +3,14 @@
 //! simulator determinism, JSON fuzz, quantizer round-trip monotonicity).
 //! These run without artifacts (pure Rust state machines).
 
+use std::sync::Arc;
+
 use thinkv::baselines::eviction::Rkv;
 use thinkv::compress::tbe::{Tbe, TbeConfig};
 use thinkv::compress::tbq::{PrecisionAssignment, Tbq};
 use thinkv::kvcache::{
-    BlockPool, CacheConfig, CtCache, Fp32Backend, Fp32Cache, KvBackend, QuantBackend,
-    SnapshotPayload, Thought,
+    BlockPool, CacheConfig, CtCache, Fp32Backend, Fp32Cache, KvBackend, PrefixIndex,
+    QuantBackend, SnapshotPayload, Thought,
 };
 use thinkv::metrics::Breakdown;
 use thinkv::model::ModelConfig;
@@ -548,6 +550,134 @@ fn quant_backend_snapshot_roundtrip_bit_exact() {
         }
         if fa != fb {
             return Err("original and resumed backends diverged".into());
+        }
+        Ok(())
+    });
+}
+
+/// Shared-prefix snapshot fidelity (prefix sharing x suspend-to-host):
+/// a backend whose prefill **attached** a cross-session shared prefix
+/// must (a) hold the exact same cache content as an unshared twin,
+/// billed delta-only; (b) suspend and restore bit-identically with the
+/// attachment re-linked; and (c) never perturb the publisher's cache
+/// through any of it.
+#[test]
+fn shared_prefix_backend_snapshot_roundtrip_bit_exact() {
+    prop::check(8, |g| {
+        let m = tiny_model();
+        let cfg = CacheConfig {
+            layers: m.n_layers,
+            capacity: 128,
+            block_size: 8,
+            hkv: m.n_kv_heads,
+            dh: m.d_head,
+            buf_slots: m.buf_slots,
+        };
+        let span = cfg.capacity + cfg.buf_slots;
+        // no TBE and a huge refresh: the shared region stays read-only
+        // for the whole history (CoW behavior is covered elsewhere)
+        let mk = || {
+            QuantBackend::new(
+                CtCache::new(cfg.clone()),
+                Tbq::new(PrecisionAssignment::r4e4t2()),
+                None,
+                Classifier::new(ClassifierConfig {
+                    layers: vec![0, 1],
+                    thresholds: vec![0.42, 0.7],
+                    refresh: 10_000,
+                }),
+                None,
+            )
+        };
+        let mut rng = Rng::new(g.usize(0, 1 << 30) as u64);
+        let mut bd = Breakdown::default();
+        let pool = Arc::new(BlockPool::new(1 << 30));
+        let idx = PrefixIndex::new(Arc::clone(&pool), cfg.block_size);
+
+        // the publisher prefills fully, then publishes its prefix
+        let pf = fake_prefill(&mut rng, &m);
+        let mut publisher = mk();
+        publisher.write_prefill(&pf, m.prefill_len);
+        let n = 8; // one shared block
+        let payload = publisher.export_prefix(n).ok_or("export failed")?;
+        let geom = publisher.prefix_geom();
+        let tokens: Vec<i32> = (0..n as i32).collect();
+        let pub_att = idx.publish(&tokens, geom, payload).ok_or("publish failed")?;
+        publisher.reattach_prefix(pub_att);
+        let publisher_before = publisher.snapshot().map_err(|e| e.to_string())?;
+
+        // the sharer attaches the resident blocks + its private tail;
+        // an unshared twin prefills the same K/V the plain way
+        let att = idx
+            .attach(&tokens, geom, m.prefill_len)
+            .ok_or("attach failed")?;
+        let att_bytes = att.bytes();
+        let mut sharer = mk();
+        sharer
+            .write_prefill_shared(&pf, m.prefill_len, Arc::clone(&att))
+            .map_err(|e| format!("shared prefill: {e}"))?;
+        let mut twin = mk();
+        twin.write_prefill(&pf, m.prefill_len);
+        if sharer.shared_prefix_tokens() != n {
+            return Err("shared region not marked".into());
+        }
+
+        // identical decode histories for sharer and twin
+        let mut pos = m.prefill_len;
+        for _ in 0..g.usize(5, 40) {
+            let out = fake_decode(&mut rng, &m, span);
+            for b in [&mut sharer, &mut twin] {
+                b.make_room(pos, &mut bd).map_err(|e| format!("make_room: {e}"))?;
+                b.absorb(&out, pos, &m, &mut bd).map_err(|e| format!("absorb: {e}"))?;
+            }
+            pos += 1;
+        }
+        // delta-only billing, exact: twin pays the prefix, sharer doesn't
+        if sharer.bytes_used() + att_bytes != twin.bytes_used() {
+            return Err(format!(
+                "delta accounting drifted: {} + {} != {}",
+                sharer.bytes_used(),
+                att_bytes,
+                twin.bytes_used()
+            ));
+        }
+
+        // suspend/restore round trip with the attachment re-linked
+        let snap = sharer.snapshot().map_err(|e| e.to_string())?;
+        if snap.device_bytes != sharer.bytes_used() {
+            return Err("device_bytes must record delta-accounted bytes_used".into());
+        }
+        let mut resumed = mk();
+        resumed
+            .restore(sharer.snapshot().map_err(|e| e.to_string())?)
+            .map_err(|e| format!("restore: {e}"))?;
+        resumed.reattach_prefix(Arc::clone(&att));
+        if resumed.bytes_used() != sharer.bytes_used() {
+            return Err("restored footprint drifted".into());
+        }
+        if resumed.shared_prefix_tokens() != n {
+            return Err("shared region lost across the round trip".into());
+        }
+        let snap_b = resumed.snapshot().map_err(|e| e.to_string())?;
+        let (SnapshotPayload::Quant(qa), SnapshotPayload::Quant(qb)) =
+            (&snap.payload, &snap_b.payload)
+        else {
+            return Err("wrong payload kind".into());
+        };
+        if qa != qb {
+            return Err("shared-prefix snapshot not bit-exact after restore".into());
+        }
+
+        // the publisher's cache never moved while the sharer attached,
+        // decoded, suspended, and resumed
+        let publisher_after = publisher.snapshot().map_err(|e| e.to_string())?;
+        let (SnapshotPayload::Quant(pa), SnapshotPayload::Quant(pb)) =
+            (&publisher_before.payload, &publisher_after.payload)
+        else {
+            return Err("wrong payload kind".into());
+        };
+        if pa != pb {
+            return Err("sharer activity perturbed the publisher's cache".into());
         }
         Ok(())
     });
