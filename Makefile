@@ -38,19 +38,22 @@ tier1:
 test: tier1
 
 # Bench rot gate: one pass of the scheduler bench (cost-model parts +
-# the artifact-free shared-prefix sweep; the real-coordinator part stays
-# off so no artifacts are needed). Asserts inside the bench double as
-# acceptance checks (throughput must rise with decode batch size, fused
-# step must beat N single steps, sharing must multiply admission), and
-# the grep pins the prefix-hit counter nonzero so the sharing path can
-# never silently regress to always-miss.
+# the artifact-free shared-prefix and arrival-burst sweeps; the
+# real-coordinator part stays off so no artifacts are needed). Asserts
+# inside the bench double as acceptance checks (throughput must rise
+# with decode batch size, fused step must beat N single steps, sharing
+# must multiply admission, chunked prefill must keep running-session
+# TPOT strictly below the whole-prompt baseline), and the greps pin the
+# prefix-hit and interleaved-prefill counters nonzero so neither path
+# can silently regress (always-miss sharing / whole-prompt prefill).
 # (No pipe here: a pipe would discard the bench's own exit status under
 # POSIX sh; capture to a file so both the bench result and the grep gate
 # propagate.)
 bench-smoke:
 	THINKV_BENCH_REAL=0 $(CARGO) bench --bench bench_scheduler > bench_smoke.out 2>&1; \
 	status=$$?; cat bench_smoke.out; \
-	[ $$status -eq 0 ] && grep -Eq "^prefix_hits=[1-9][0-9]*$$" bench_smoke.out; \
+	[ $$status -eq 0 ] && grep -Eq "^prefix_hits=[1-9][0-9]*$$" bench_smoke.out \
+	  && grep -Eq "^prefill_interleaved=[1-9][0-9]*$$" bench_smoke.out; \
 	status=$$?; rm -f bench_smoke.out; exit $$status
 
 artifacts:

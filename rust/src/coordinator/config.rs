@@ -99,6 +99,15 @@ pub struct ServeConfig {
     /// compiled capacity) and advances them with one fused engine call
     /// per step. 1 = per-session decode (pre-batching behavior).
     pub max_decode_batch: usize,
+    /// Stall-free chunked prefill: split prompt prefill into chunks of
+    /// this many tokens, co-scheduled with fused decode steps — each
+    /// decode batch carries at most one prefilling session, which
+    /// advances one chunk per step (Sarathi-style), so a long-prompt
+    /// arrival no longer head-of-line-blocks its batch-mates for a
+    /// whole inline prefill. `None` = whole-prompt prefill inside the
+    /// first decode step (pre-chunking behavior). Token streams are
+    /// bit-identical either way.
+    pub prefill_chunk_tokens: Option<usize>,
     /// Sampling temperature (0 = greedy).
     pub temperature: f64,
     pub seed: u64,
@@ -135,6 +144,7 @@ impl Default for ServeConfig {
             workers: 2,
             chunk: 16,
             max_decode_batch: 8,
+            prefill_chunk_tokens: None,
             temperature: 0.8,
             seed: 42,
             pool_bytes: None,

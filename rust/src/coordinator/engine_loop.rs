@@ -57,6 +57,9 @@ pub struct RequestResult {
     /// Times this request was restored from the host swap pool.
     pub swap_ins: u64,
     /// Wall time spent restoring this request's snapshots (swap-in).
+    /// (`breakdown.prefill_chunks` / `breakdown.prefill_exec_ns` carry
+    /// the TTFT decomposition: chunks the prompt was computed in and
+    /// the engine time they took.)
     pub restore_ns: u64,
     /// Set when the request terminated abnormally (e.g. its KV demand
     /// exceeded the block pool).
@@ -143,6 +146,11 @@ impl Coordinator {
             .prefix_share
             .then(|| PrefixIndex::new(Arc::clone(&pool), PREFIX_BLOCK_TOKENS));
         let scheduler = Arc::new(Scheduler::with_prefix(pool, swap, prefix));
+        // stall-free chunked prefill: long prompts advance in
+        // fixed-token chunks co-scheduled with fused decode steps
+        if let Some(tokens) = cfg.prefill_chunk_tokens {
+            scheduler.set_prefill_chunking(tokens.max(1), 0);
+        }
         let mut workers = Vec::new();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         for w in 0..cfg.workers.max(1) {
@@ -211,13 +219,13 @@ impl Coordinator {
         Ok(RequestHandle { id, rx })
     }
 
-    /// Submit many prompts and wait for all (batch experiments).
+    /// Submit many prompts and wait for all (batch experiments). A
+    /// failed submit does **not** abandon the requests submitted before
+    /// it: their sessions are already running against the pool and
+    /// would send results into dropped receivers, so every prior handle
+    /// is drained (awaited) before the submit error propagates.
     pub fn run_batch(&self, prompts: Vec<Vec<i32>>) -> Result<Vec<RequestResult>> {
-        let handles: Vec<RequestHandle> = prompts
-            .into_iter()
-            .map(|p| self.submit(p))
-            .collect::<Result<Vec<_>>>()?;
-        handles.into_iter().map(|h| h.wait()).collect()
+        submit_then_drain(prompts, |p| self.submit(p), |h| h.wait())
     }
 
     pub fn inflight(&self) -> u64 {
@@ -250,6 +258,65 @@ impl Drop for Coordinator {
             let _ = w.join();
         }
     }
+}
+
+/// The submit-everything-then-await-everything body of
+/// [`Coordinator::run_batch`], factored over closures so the drain
+/// discipline is unit-testable without PJRT artifacts.
+///
+/// Invariants (the pre-fix code violated both):
+/// * a failed submit stops submitting but still **awaits every handle
+///   already submitted** — those sessions run to completion and their
+///   receivers must outlive them — then propagates the submit error;
+/// * a failed wait keeps draining the remaining handles (first wait
+///   error wins) instead of dropping their receivers mid-flight.
+fn submit_then_drain<H, R>(
+    prompts: Vec<Vec<i32>>,
+    mut submit: impl FnMut(Vec<i32>) -> Result<H>,
+    mut wait: impl FnMut(H) -> Result<R>,
+) -> Result<Vec<R>> {
+    let mut handles = Vec::with_capacity(prompts.len());
+    let mut submit_err = None;
+    for p in prompts {
+        match submit(p) {
+            Ok(h) => handles.push(h),
+            Err(e) => {
+                submit_err = Some(e);
+                break;
+            }
+        }
+    }
+    let mut results = Vec::with_capacity(handles.len());
+    let mut wait_err = None;
+    for h in handles {
+        match wait(h) {
+            Ok(r) => results.push(r),
+            Err(e) => {
+                if wait_err.is_none() {
+                    wait_err = Some(e);
+                }
+            }
+        }
+    }
+    if let Some(e) = submit_err {
+        return Err(e);
+    }
+    if let Some(e) = wait_err {
+        return Err(e);
+    }
+    Ok(results)
+}
+
+/// Split a fused step's measured wall time across its `n` members: the
+/// integer share plus one extra nanosecond for the first `total % n`
+/// members, so the per-session attributions **sum exactly** to the
+/// measured fused time (plain `total / n` silently dropped up to
+/// `n - 1` ns per step per batch).
+fn per_member_ns(total: u64, n: usize) -> impl Iterator<Item = u64> {
+    let n64 = n as u64;
+    let base = total / n64;
+    let rem = (total % n64) as usize;
+    (0..n).map(move |i| base + u64::from(i < rem))
 }
 
 enum ChunkEnd {
@@ -287,13 +354,19 @@ fn dispatch(scheduler: &Scheduler, mut item: Entry, end: ChunkEnd) {
 ///
 /// Each step runs in three phases:
 ///
-/// 1. **prepare** — every member runs [`Session::begin_step`]
-///    (swap-in restore, prefill, growth reservation, ring-buffer
-///    flush); members that finish, fail, or cannot grow leave the batch
-///    immediately so their bytes / results are released mid-chunk.
+/// 1. **prepare** — with chunked prefill enabled, a member still owing
+///    prompt tokens advances its prefill by **one chunk**
+///    ([`Session::advance_prefill`], the batch's single prefill lane)
+///    and sits out this step's fused decode; every other member runs
+///    [`Session::begin_step`] (swap-in restore, growth reservation,
+///    ring-buffer flush — plus the inline whole-prompt prefill when
+///    chunking is off). Members that finish, fail, or cannot grow leave
+///    the batch immediately so their bytes / results are released
+///    mid-chunk.
 /// 2. **fused decode** — one engine call covers every prepared member
 ///    (`note_fused_step` records the batch size for the stats
-///    histogram).
+///    histogram; `note_prefill_chunk` records whether a prefill chunk
+///    rode along — the interleave counter).
 /// 3. **absorb** — every member runs [`Session::finish_step`] on its
 ///    own output (classification, append, eviction, sampling).
 ///
@@ -307,6 +380,7 @@ pub fn advance_batch(
     chunk: usize,
     batch: Vec<Entry>,
 ) {
+    let prefill_chunk = scheduler.prefill_chunk_tokens();
     let mut members = batch;
     for _ in 0..chunk.max(1) {
         if members.is_empty() {
@@ -315,7 +389,29 @@ pub fn advance_batch(
         // phase 1: prepare every member for the fused call
         let mut preps: Vec<Option<(i32, i32, i32)>> = Vec::with_capacity(members.len());
         let mut exits: Vec<(usize, ChunkEnd)> = Vec::new();
+        let mut prefill_ran = false;
         for (i, m) in members.iter_mut().enumerate() {
+            // prefill lane: one chunk per step, then sit this fused
+            // call out; batch formation admits at most one such member
+            if let Some(c) = prefill_chunk {
+                if !m.session.prefill_done() {
+                    match m.session.advance_prefill(engine, c) {
+                        Ok(_done) => {
+                            // done or not, this member decodes from the
+                            // next step at the earliest
+                            preps.push(None);
+                            prefill_ran = true;
+                        }
+                        Err(e) => {
+                            eprintln!("session {} failed: {e:#}", m.session.id);
+                            m.session.finished_at = Some(std::time::Instant::now());
+                            preps.push(None);
+                            exits.push((i, ChunkEnd::Failed(format!("{e:#}"))));
+                        }
+                    }
+                    continue;
+                }
+            }
             match m.session.begin_step(engine) {
                 Ok(StepPrep::Ready { token, pos, buf_idx }) => {
                     preps.push(Some((token, pos, buf_idx)));
@@ -335,6 +431,10 @@ pub fn advance_batch(
                     exits.push((i, ChunkEnd::Failed(format!("{e:#}"))));
                 }
             }
+        }
+        if prefill_ran {
+            // interleaved = a fused decode runs in this same step
+            scheduler.note_prefill_chunk(preps.iter().any(|p| p.is_some()));
         }
         // phase 2: one fused engine call over every prepared member
         let fused = {
@@ -357,13 +457,13 @@ pub fn advance_batch(
                 let t0 = std::time::Instant::now();
                 let outs = engine.decode_batch(&reqs);
                 let ns = t0.elapsed().as_nanos() as u64;
-                Some((outs, ns / n as u64, n))
+                Some((outs, ns, n))
             }
         };
         // phase 3: absorb per member
         match fused {
             None => {}
-            Some((result, per_ns, n)) => {
+            Some((result, ns, n)) => {
                 // an engine that returns the wrong number of outputs is
                 // as unattributable as one that errors — same path
                 let result = result.and_then(|outs| {
@@ -380,6 +480,9 @@ pub fn advance_batch(
                 match result {
                     Ok(outs) => {
                         scheduler.note_fused_step(n);
+                        // remainder-distributed attribution: per-session
+                        // shares sum exactly to the measured fused time
+                        let mut shares = per_member_ns(ns, n);
                         let mut oi = 0;
                         for (i, (m, p)) in members.iter_mut().zip(&preps).enumerate() {
                             if p.is_none() {
@@ -387,7 +490,8 @@ pub fn advance_batch(
                             }
                             let out = &outs[oi];
                             oi += 1;
-                            m.session.breakdown.decode_exec_ns += per_ns;
+                            m.session.breakdown.decode_exec_ns +=
+                                shares.next().expect("one share per prepared member");
                             match m.session.finish_step(out, engine) {
                                 Ok(StepOutcome::Running) => {}
                                 Ok(StepOutcome::Finished) => exits.push((i, ChunkEnd::Finished)),
@@ -490,5 +594,76 @@ mod tests {
         assert_eq!(one.tokens.len(), 1);
         let r1 = RequestResult::from_session(&one);
         assert!(r1.tpot_ms >= 0.0);
+    }
+
+    /// Satellite regression: fused-step time attribution used plain
+    /// `ns / n`, silently dropping up to `n - 1` ns per step per batch.
+    /// The remainder-distributed shares must sum exactly to the
+    /// measured time and differ by at most one nanosecond.
+    #[test]
+    fn fused_time_shares_sum_exactly() {
+        for (total, n) in [(0u64, 1usize), (7, 3), (10, 4), (999_999_937, 6), (5, 8), (42, 42)] {
+            let shares: Vec<u64> = per_member_ns(total, n).collect();
+            assert_eq!(shares.len(), n);
+            assert_eq!(shares.iter().sum::<u64>(), total, "total {total} over {n}");
+            let max = *shares.iter().max().unwrap();
+            let min = *shares.iter().min().unwrap();
+            assert!(max - min <= 1, "shares must stay within 1 ns of each other");
+            // truncation regression: the old `total / n` per member
+            // summed to less than the measured time whenever n ∤ total
+            if total % n as u64 != 0 {
+                assert!(total / n as u64 * n as u64 < total);
+            }
+        }
+    }
+
+    /// Satellite regression: a failed submit mid-batch must drain the
+    /// handles already submitted (their sessions keep running against
+    /// the pool and must not send into dropped receivers) before the
+    /// error propagates — and a failed wait must not drop later
+    /// receivers either.
+    #[test]
+    fn run_batch_drains_submitted_handles_on_submit_failure() {
+        use std::cell::RefCell;
+        let waited = RefCell::new(Vec::new());
+        let out = submit_then_drain(
+            vec![vec![1], vec![2], vec![3], vec![4]],
+            |p| {
+                if p == vec![3] {
+                    anyhow::bail!("pool too small")
+                } else {
+                    Ok(p[0])
+                }
+            },
+            |h| {
+                waited.borrow_mut().push(h);
+                Ok(h)
+            },
+        );
+        let err = out.expect_err("submit error must propagate");
+        assert!(err.to_string().contains("pool too small"));
+        assert_eq!(*waited.borrow(), vec![1, 2], "prior handles drained first");
+        // prompt 4 was never submitted, so it is never awaited
+
+        // wait errors drain everything and report the first failure
+        let waited2 = RefCell::new(Vec::new());
+        let out2 = submit_then_drain(
+            vec![vec![1], vec![2], vec![3]],
+            |p| Ok(p[0]),
+            |h| {
+                waited2.borrow_mut().push(h);
+                if h == 2 {
+                    anyhow::bail!("receiver gone")
+                } else {
+                    Ok(h)
+                }
+            },
+        );
+        assert!(out2.is_err());
+        assert_eq!(*waited2.borrow(), vec![1, 2, 3], "every handle drained");
+
+        // happy path unchanged
+        let ok = submit_then_drain(vec![vec![5], vec![6]], |p| Ok(p[0]), |h| Ok(h + 10)).unwrap();
+        assert_eq!(ok, vec![15, 16]);
     }
 }

@@ -48,9 +48,18 @@
 //! one fused step can never over-commit the pool mid-batch. The bond is
 //! credited to the member's reservation and trues up after its next
 //! step.
+//!
+//! **Chunked prefill (stall-free batch formation):** with
+//! [`Scheduler::set_prefill_chunking`] enabled, a decode batch carries
+//! at most one not-yet-prefilled session and a per-step *token budget*
+//! bounds what one fused step processes (decode members cost one token
+//! each, the prefill chunk its length, Sarathi-style) — so a
+//! long-prompt arrival advances chunk-by-chunk between its batch-mates'
+//! decode steps instead of head-of-line-blocking the whole batch on an
+//! inline whole-prompt prefill.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 use crate::kvcache::{BlockPool, PrefixIndex, SwapPool};
@@ -141,6 +150,19 @@ pub struct Scheduler {
     /// Histogram of decode-batch sizes: bucket `i` counts fused steps
     /// whose batch held `i + 1` sessions (last bucket absorbs larger).
     batch_hist: [AtomicU64; BATCH_HIST_BUCKETS],
+    /// Chunked-prefill policy: tokens one prefill chunk advances per
+    /// fused step (0 = disabled, whole-prompt prefill inside the first
+    /// decode step — the pre-chunking behavior).
+    prefill_chunk_tokens: AtomicUsize,
+    /// Per-fused-step token budget for batch formation: decode members
+    /// cost one token each, a prefill chunk its token count (0 = auto:
+    /// chunk tokens + batch cap, which never refuses a decode member).
+    step_token_budget: AtomicUsize,
+    /// Prefill chunks executed by workers (chunked mode only).
+    prefill_chunks: AtomicU64,
+    /// Fused steps that advanced decode members and a prefill chunk in
+    /// the same step (the stall-free interleave).
+    prefill_interleaved: AtomicU64,
 }
 
 impl Scheduler {
@@ -186,6 +208,67 @@ impl Scheduler {
             fused_steps: AtomicU64::new(0),
             fused_sessions: AtomicU64::new(0),
             batch_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            prefill_chunk_tokens: AtomicUsize::new(0),
+            step_token_budget: AtomicUsize::new(0),
+            prefill_chunks: AtomicU64::new(0),
+            prefill_interleaved: AtomicU64::new(0),
+        }
+    }
+
+    /// Enable Sarathi-style chunked prefill: each decode batch carries
+    /// **at most one** not-yet-prefilled session, whose prompt advances
+    /// `tokens` per fused step interleaved with its batch-mates' decode
+    /// (instead of one inline whole-prompt prefill head-of-line-blocking
+    /// the batch). `budget` caps the total tokens one fused step may
+    /// process — decode members cost 1 each, the prefill chunk its
+    /// length; pass 0 for the non-binding default (`tokens` + batch
+    /// cap). `tokens == 0` disables chunking.
+    pub fn set_prefill_chunking(&self, tokens: usize, budget: usize) {
+        self.prefill_chunk_tokens.store(tokens, Ordering::SeqCst);
+        self.step_token_budget.store(budget, Ordering::SeqCst);
+    }
+
+    /// Tokens per prefill chunk; `None` = chunking disabled.
+    pub fn prefill_chunk_tokens(&self) -> Option<usize> {
+        match self.prefill_chunk_tokens.load(Ordering::SeqCst) {
+            0 => None,
+            n => Some(n),
+        }
+    }
+
+    /// The per-fused-step token budget batch formation enforces.
+    fn token_budget(&self, max_batch: usize) -> usize {
+        match self.step_token_budget.load(Ordering::SeqCst) {
+            0 => match self.prefill_chunk_tokens() {
+                // auto: one chunk plus a full decode batch always fits
+                Some(c) => c.saturating_add(max_batch),
+                None => usize::MAX,
+            },
+            b => b,
+        }
+    }
+
+    /// Record one prefill chunk run by a worker; `interleaved` = the
+    /// same fused step also advanced decode members.
+    pub fn note_prefill_chunk(&self, interleaved: bool) {
+        self.prefill_chunks.fetch_add(1, Ordering::SeqCst);
+        if interleaved {
+            self.prefill_interleaved.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// What one scheduling slot of `s` costs the per-step token budget:
+    /// a decode step is one token; a prefill chunk costs the tokens it
+    /// will actually advance.
+    fn step_cost(&self, s: &Session) -> usize {
+        if s.prefill_done() {
+            return 1;
+        }
+        match self.prefill_chunk_tokens() {
+            Some(c) => c.min(s.prefill_remaining()).max(1),
+            // chunking off: the member whole-prompt-prefills inline on
+            // its first step (pre-chunking behavior, budget-exempt)
+            None => 1,
         }
     }
 
@@ -268,10 +351,20 @@ impl Scheduler {
     /// cannot be reserved the batch simply stops growing; the leftover
     /// sessions stay runnable for other workers.
     ///
+    /// With chunked prefill enabled ([`Scheduler::set_prefill_chunking`])
+    /// batch formation is Sarathi-style: each batch carries **at most
+    /// one** not-yet-prefilled session (the prefill lane), and members
+    /// join only while the per-step **token budget** holds — decode
+    /// members cost one token, the prefill chunk its length — so a fused
+    /// step's engine time is bounded by design and TPOT of running
+    /// members stays flat while a long prompt prefills.
+    ///
     /// Preempt-marked sessions are never pulled *into* a batch as extra
     /// members — they are about to vacate their bytes.
     pub fn next_batch(&self, max: usize) -> Option<Vec<Entry>> {
         let max = max.max(1);
+        let chunked = self.prefill_chunk_tokens().is_some();
+        let budget = self.token_budget(max);
         let mut inner = self.inner.lock().unwrap();
         loop {
             if self.stop.load(Ordering::SeqCst) {
@@ -281,17 +374,33 @@ impl Scheduler {
             if let Some(first) = inner.runnable.pop_front() {
                 inner.held.insert(first.session.id);
                 let key = first.session.compat_key();
+                // the front session always runs (its cost can exceed the
+                // budget but never starves it out of a batch)
+                let mut has_prefill = chunked && !first.session.prefill_done();
+                let mut tokens_used = self.step_cost(&first.session);
                 let mut batch = vec![first];
                 // single forward scan (the lock is held): skip
-                // incompatible / preempt-marked sessions, pull each
-                // compatible one as soon as its bond is reserved. While
-                // any session is starving, freed bytes must reach it —
-                // don't capture them as growth bonds (same gate as
-                // try_admit), so the batch stays a singleton.
+                // incompatible / preempt-marked / over-budget sessions,
+                // pull each eligible one as soon as its bond is
+                // reserved. While any session is starving, freed bytes
+                // must reach it — don't capture them as growth bonds
+                // (same gate as try_admit), so the batch stays a
+                // singleton.
                 let mut i = 0;
                 while batch.len() < max && i < inner.runnable.len() && inner.starving.is_empty() {
                     let s = &inner.runnable[i].session;
                     if s.compat_key() != key || inner.preempt_marks.contains(&s.id) {
+                        i += 1;
+                        continue;
+                    }
+                    // one prefill lane per batch (Sarathi): a second
+                    // unprefilled session waits for a later batch
+                    if chunked && !s.prefill_done() && has_prefill {
+                        i += 1;
+                        continue;
+                    }
+                    let cost = self.step_cost(s);
+                    if tokens_used.saturating_add(cost) > budget {
                         i += 1;
                         continue;
                     }
@@ -302,6 +411,8 @@ impl Scheduler {
                     let mut entry = inner.runnable.remove(i).expect("index valid");
                     entry.session.add_growth_bond(bond);
                     inner.held.insert(entry.session.id);
+                    has_prefill |= chunked && !entry.session.prefill_done();
+                    tokens_used += cost;
                     batch.push(entry);
                 }
                 return Some(batch);
@@ -501,6 +612,15 @@ impl Scheduler {
         let swap = self.swap.as_ref().map(|s| s.stats()).unwrap_or_default();
         let prefix = self.prefix.as_ref().map(|p| p.stats()).unwrap_or_default();
         let inner = self.inner.lock().unwrap();
+        // queued prefill work: sessions in any scheduler queue still
+        // owing prompt tokens (held members are not visible here)
+        let prefill_queue_depth = inner
+            .waiting
+            .iter()
+            .chain(inner.runnable.iter())
+            .chain(inner.stalled.iter())
+            .filter(|e| !e.session.prefill_done())
+            .count();
         SchedSnapshot {
             pool_capacity: self.pool.capacity(),
             pool_used: self.pool.used(),
@@ -516,6 +636,10 @@ impl Scheduler {
             fused_steps: self.fused_steps.load(Ordering::SeqCst),
             fused_sessions: self.fused_sessions.load(Ordering::SeqCst),
             batch_hist: self.batch_hist.iter().map(|b| b.load(Ordering::SeqCst)).collect(),
+            prefill_chunk_tokens: self.prefill_chunk_tokens.load(Ordering::SeqCst),
+            prefill_chunks: self.prefill_chunks.load(Ordering::SeqCst),
+            prefill_interleaved_steps: self.prefill_interleaved.load(Ordering::SeqCst),
+            prefill_queue_depth,
             swap_capacity: swap.capacity,
             swap_used: swap.used,
             swap_peak: swap.peak,
@@ -850,6 +974,111 @@ mod tests {
         assert_eq!(b2.len(), 1);
         assert_eq!(b2[0].session.id, 9);
         assert!(pool2.used() <= pool2.capacity());
+    }
+
+    /// Chunked-prefill batch formation is Sarathi-style: at most one
+    /// not-yet-prefilled session per batch (the prefill lane), while
+    /// prefilled sessions still fuse alongside it. With chunking off,
+    /// unprefilled sessions group freely (pre-chunking behavior).
+    #[test]
+    fn batch_carries_at_most_one_prefill_lane() {
+        let cfg = tiny_cfg();
+        let man = tiny_manifest();
+        let pool = Arc::new(BlockPool::new(u64::MAX / 2));
+        let sched = Scheduler::new(Arc::clone(&pool));
+        sched.set_prefill_chunking(8, 0);
+        let (tx, _rx) = mpsc::channel();
+        for id in 1..=3u64 {
+            sched.submit(mk_session(id, &cfg, &man, &pool), tx.clone());
+        }
+        // all three owe prefill: the batch stays a singleton
+        let b = sched.next_batch(4).expect("batch");
+        assert_eq!(b.len(), 1, "one prefill lane per batch");
+        assert_eq!(b[0].session.id, 1);
+        assert_eq!(sched.snapshot().prefill_queue_depth, 2, "queued prefill gauge");
+        // a prefilled session fuses with the (single) prefill lane
+        let mut first = b.into_iter().next().unwrap();
+        first.session.test_fake_prefill();
+        sched.yield_back(first);
+        let b2 = sched.next_batch(4).expect("batch");
+        let ids: Vec<u64> = b2.iter().map(|e| e.session.id).collect();
+        assert_eq!(ids, vec![2, 1], "prefill lane (2) plus a decode member (1)");
+        assert_eq!(
+            b2.iter().filter(|e| !e.session.prefill_done()).count(),
+            1,
+            "exactly one prefill member"
+        );
+        for e in b2 {
+            sched.yield_back(e);
+        }
+
+        // chunking off: three unprefilled sessions form one batch
+        let pool2 = Arc::new(BlockPool::new(u64::MAX / 2));
+        let sched2 = Scheduler::new(Arc::clone(&pool2));
+        let (tx2, _rx2) = mpsc::channel();
+        for id in 1..=3u64 {
+            sched2.submit(mk_session(id, &cfg, &man, &pool2), tx2.clone());
+        }
+        assert_eq!(sched2.next_batch(4).expect("batch").len(), 3);
+    }
+
+    /// The per-step token budget bounds what one fused step processes:
+    /// decode members cost one token each, a prefill chunk its length.
+    /// A tight budget sheds decode members; the auto budget (0) admits
+    /// one chunk plus a full decode batch.
+    #[test]
+    fn token_budget_caps_decode_members_alongside_prefill_chunk() {
+        let cfg = tiny_cfg();
+        let man = tiny_manifest();
+        let pool = Arc::new(BlockPool::new(u64::MAX / 2));
+        let sched = Scheduler::new(Arc::clone(&pool));
+        // chunk 8, budget 9: one chunk + exactly one decode member
+        sched.set_prefill_chunking(8, 9);
+        let (tx, _rx) = mpsc::channel();
+        for id in 1..=4u64 {
+            sched.submit(mk_session(id, &cfg, &man, &pool), tx.clone());
+        }
+        // prefill sessions 2..4 by hand so only id 1 owes prompt work
+        let mut held = Vec::new();
+        for _ in 0..4 {
+            held.push(sched.next().expect("runnable"));
+        }
+        for e in held.iter_mut().skip(1) {
+            e.session.test_fake_prefill();
+        }
+        for e in held {
+            sched.yield_back(e);
+        }
+        let b = sched.next_batch(4).expect("batch");
+        let ids: Vec<u64> = b.iter().map(|e| e.session.id).collect();
+        assert_eq!(ids, vec![1, 2], "chunk (8) + one decode token hits the budget of 9");
+        for e in b {
+            sched.yield_back(e);
+        }
+        // auto budget: chunk (8) + batch cap (4) = 12 fits all four
+        sched.set_prefill_chunking(8, 0);
+        let b2 = sched.next_batch(4).expect("batch");
+        assert_eq!(b2.len(), 4, "auto budget never sheds decode members");
+        assert_eq!(
+            b2.iter().filter(|e| !e.session.prefill_done()).count(),
+            1,
+            "still exactly one prefill member"
+        );
+    }
+
+    /// Prefill-lane counters: chunks run and interleaved steps surface
+    /// in the snapshot.
+    #[test]
+    fn prefill_chunk_counters_surface() {
+        let sched = Scheduler::new(Arc::new(BlockPool::new(1024)));
+        sched.set_prefill_chunking(16, 0);
+        sched.note_prefill_chunk(true);
+        sched.note_prefill_chunk(true);
+        sched.note_prefill_chunk(false);
+        let snap = sched.snapshot();
+        assert_eq!(snap.prefill_chunk_tokens, 16);
+        assert_eq!(snap.prefill_chunks, 3);
+        assert_eq!(snap.prefill_interleaved_steps, 2);
     }
 
     /// Fused-step counters: totals and the batch-size histogram.

@@ -8,6 +8,10 @@
 //! Every compression mode flows through the same generic decode path via
 //! the [`KvBackend`] trait (`make_room` → [`DecodeEngine::decode`] → `absorb`);
 //! the mode only decides which backend [`build_backend`] constructs.
+//! Prompt prefill is a cursor state machine ([`Session::advance_prefill`]):
+//! the batched worker advances a long prompt one fixed-token chunk per
+//! fused step — interleaved with its batch-mates' decode — instead of
+//! head-of-line-blocking the batch on one inline whole-prompt prefill.
 //! Sessions also carry their [`BlockPool`] reservation: the scheduler
 //! grants an admission reserve, each step pre-reserves its worst-case
 //! growth and trues the reservation up after ([`Session::step`] returns
@@ -187,6 +191,20 @@ struct SuspendedKv {
     pool: Arc<SwapPool>,
 }
 
+/// Prompt-prefill cursor: prefill is a little state machine now that a
+/// long prompt can be computed in scheduler-interleaved chunks
+/// ([`Session::advance_prefill`]) instead of one inline call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PrefillCursor {
+    /// No prefill work done yet (fresh session, or reset for recompute).
+    NotStarted,
+    /// Positions `0..next` are in the cache (a shared-attach region
+    /// counts); the engine still owes `next..prefill_len`.
+    InProgress { next: usize },
+    /// Prefill complete: the first token was sampled from its logits.
+    Done,
+}
+
 pub struct Session {
     pub id: u64,
     pub prompt: Vec<i32>,
@@ -204,7 +222,10 @@ pub struct Session {
     pub created: std::time::Instant,
     pub first_token_at: Option<std::time::Instant>,
     pub finished_at: Option<std::time::Instant>,
-    prefilled: bool,
+    /// Where prompt prefill stands — chunked prefill advances this
+    /// cursor one chunk at a time; the whole-prompt path runs it to
+    /// `Done` in one [`Session::prefill`] call.
+    prefill: PrefillCursor,
     /// Times this session was preempted with *recompute* (reset +
     /// requeued, generation replayed). Swap preemptions are counted
     /// separately in [`Session::swap_outs`] — a fully swapped run keeps
@@ -301,7 +322,7 @@ impl Session {
             created: std::time::Instant::now(),
             first_token_at: None,
             finished_at: None,
-            prefilled: false,
+            prefill: PrefillCursor::NotStarted,
             preemptions: 0,
             swap_outs: 0,
             swap_ins: 0,
@@ -506,7 +527,9 @@ impl Session {
             self.release_pool();
             return true;
         }
-        if !self.prefilled {
+        if !self.prefill_done() {
+            // a mid-prefill cache has no cursor state in the snapshot
+            // format; those sessions fall back to recompute
             return false;
         }
         let Some(backend) = self.backend.as_ref() else {
@@ -607,52 +630,129 @@ impl Session {
         self.sampler = Sampler::new(self.cfg.temperature, 32, self.cfg.seed ^ self.id);
         self.tokens.clear();
         self.pos = 0;
-        // a victim that never prefilled loses no generated work, so only
-        // count resets that actually force a recompute
-        if self.prefilled {
+        // a victim that never finished prefill loses no generated work,
+        // so only count resets that actually force a recompute
+        if self.prefill_done() {
             self.preemptions += 1;
         }
-        self.prefilled = false;
+        self.prefill = PrefillCursor::NotStarted;
         self.first_token_at = None;
     }
 
-    /// Run prompt prefill (once). With prefix sharing enabled this is
-    /// where the lifecycle forks: a matched prompt **attaches** the
-    /// resident payload (shared-attach + private-tail, no
+    /// True once prompt prefill has completed (the first token was
+    /// sampled from the prefill logits).
+    pub fn prefill_done(&self) -> bool {
+        matches!(self.prefill, PrefillCursor::Done)
+    }
+
+    /// Prompt tokens the engine still owes this session: what a prefill
+    /// chunk costs the scheduler's per-step token budget. 0 once done;
+    /// before the first chunk, the padded prefill length minus any
+    /// construction-time shared-prefix attachment (the attached region
+    /// needs no engine compute at all).
+    pub fn prefill_remaining(&self) -> usize {
+        let p_len = self.manifest.model.prefill_len;
+        match self.prefill {
+            PrefillCursor::Done => 0,
+            PrefillCursor::InProgress { next } => p_len - next,
+            PrefillCursor::NotStarted => {
+                let shared = self
+                    .prefix_att
+                    .as_ref()
+                    .filter(|a| a.is_active())
+                    .map_or(0, |a| a.attach_len().min(p_len));
+                p_len - shared
+            }
+        }
+    }
+
+    /// Run prompt prefill to completion. With prefix sharing enabled
+    /// this is where the lifecycle forks: a matched prompt **attaches**
+    /// the resident payload (shared-attach + private-tail, no
     /// re-quantization of the prefix), an unmatched one prefills fully
     /// and **publishes** its block-aligned prefix for later sessions.
     pub fn prefill(&mut self, engine: &dyn DecodeEngine) -> Result<()> {
-        if self.prefilled {
-            return Ok(());
+        while !self.advance_prefill(engine, usize::MAX)? {}
+        Ok(())
+    }
+
+    /// Advance prompt prefill by one chunk of at most `chunk` tokens
+    /// (`usize::MAX` = the whole remaining prompt, the single-session
+    /// path). This is the chunked-prefill state machine the batched
+    /// worker drives once per fused step, so a long-prompt arrival
+    /// delays its batch-mates by one chunk instead of a full prefill:
+    ///
+    /// * first chunk — resolve the shared-prefix fork once (attach the
+    ///   resident payload, second-chance lookup included) and start the
+    ///   cursor at the attach boundary;
+    /// * every chunk — one [`DecodeEngine::prefill_chunk`] call, written
+    ///   through [`KvBackend::write_prefill_chunk`] at absolute prompt
+    ///   positions (timed into `breakdown.prefill_exec_ns`);
+    /// * final chunk — publish the block-aligned prefix (unshared
+    ///   sessions), bootstrap the first token from the prefill logits,
+    ///   and true the pool reservation up.
+    ///
+    /// Any chunking produces a cache and token stream bit-identical to
+    /// the whole-prompt path (engine chunking is bit-invariant, cache
+    /// writes are per-position). Returns true once prefill is complete.
+    pub fn advance_prefill(&mut self, engine: &dyn DecodeEngine, chunk: usize) -> Result<bool> {
+        if self.prefill_done() {
+            return Ok(true);
         }
         self.ensure_backend()?;
-        let m = engine.model().clone();
-        let out = engine.prefill(&self.prompt)?;
-        if self.prefix_att.is_none() {
-            // second-chance lookup: a sharer submitted before us may
-            // have published between our admission and this prefill
-            if let Some(idx) = &self.prefix_index {
-                self.prefix_att = idx.attach_quiet(&self.prompt, self.prefix_geom, m.prefill_len);
+        let p_len = engine.model().prefill_len;
+        let start = match self.prefill {
+            PrefillCursor::Done => unreachable!("handled above"),
+            PrefillCursor::InProgress { next } => next,
+            PrefillCursor::NotStarted => {
+                if self.prefix_att.is_none() {
+                    // second-chance lookup: a sharer submitted before us
+                    // may have published between admission and now
+                    if let Some(idx) = &self.prefix_index {
+                        self.prefix_att =
+                            idx.attach_quiet(&self.prompt, self.prefix_geom, p_len);
+                    }
+                }
+                let backend = self.backend.as_mut().expect("backend built above");
+                match &self.prefix_att {
+                    Some(att) => backend.begin_prefill_shared(Arc::clone(att), p_len)?,
+                    None => 0,
+                }
             }
-        }
+        };
+        // a zero-length final chunk is legal (the attach covered every
+        // prompt position): it only fetches the bootstrap logits
+        let len = chunk.max(1).min(p_len - start);
+        let t0 = std::time::Instant::now();
+        let out = {
+            let backend = self.backend.as_ref().expect("backend built above");
+            engine.prefill_chunk(&self.prompt, start, len, &backend.view())?
+        };
+        self.breakdown.prefill_exec_ns += t0.elapsed().as_nanos() as u64;
+        self.breakdown.prefill_chunks += 1;
         let backend = self.backend.as_mut().expect("backend built above");
-        match &self.prefix_att {
-            Some(att) => backend.write_prefill_shared(&out, m.prefill_len, Arc::clone(att))?,
-            None => {
-                backend.write_prefill(&out, m.prefill_len);
-                if let Some(idx) = &self.prefix_index {
-                    let n = idx.shareable_len(self.prompt.len(), m.prefill_len);
-                    if n > 0 {
-                        if let Some(payload) = backend.export_prefix(n) {
-                            if let Some(att) =
-                                idx.publish(&self.prompt[..n], self.prefix_geom, payload)
-                            {
-                                // the publisher shares its own prefix
-                                // too: the residency charge moves to the
-                                // index and this session pays its delta
-                                backend.reattach_prefix(Arc::clone(&att));
-                                self.prefix_att = Some(att);
-                            }
+        if len > 0 {
+            backend.write_prefill_chunk(&out.k, &out.v, start, start + len);
+        }
+        let end = start + len;
+        if end < p_len {
+            self.prefill = PrefillCursor::InProgress { next: end };
+            return Ok(false);
+        }
+        // final chunk: publish, exactly as the whole-prompt path did
+        if self.prefix_att.is_none() {
+            if let Some(idx) = &self.prefix_index {
+                let n = idx.shareable_len(self.prompt.len(), p_len);
+                if n > 0 {
+                    if let Some(payload) = backend.export_prefix(n) {
+                        if let Some(att) =
+                            idx.publish(&self.prompt[..n], self.prefix_geom, payload)
+                        {
+                            // the publisher shares its own prefix too:
+                            // the residency charge moves to the index
+                            // and this session pays its delta
+                            backend.reattach_prefix(Arc::clone(&att));
+                            self.prefix_att = Some(att);
                         }
                     }
                 }
@@ -663,10 +763,13 @@ impl Session {
         let next = self.sampler.sample(&out.logits);
         self.breakdown.sample_ns += t0.elapsed().as_nanos() as u64;
         self.tokens.push(next);
-        self.pos = m.prefill_len;
+        self.pos = p_len;
         self.first_token_at = Some(std::time::Instant::now());
-        self.prefilled = true;
-        Ok(())
+        self.prefill = PrefillCursor::Done;
+        // the admission reserve carried the whole prefill; surplus over
+        // the actual footprint flows back only now that it is complete
+        self.sync_pool();
+        Ok(true)
     }
 
     /// Everything a decode step does *before* the engine call: restore
@@ -697,10 +800,14 @@ impl Session {
             }
             self.sync_pool();
         }
-        if !self.prefilled {
-            // the admission reserve covers the prefill footprint
+        if !self.prefill_done() {
+            // whole-prompt completion (the admission reserve covers the
+            // prefill footprint): the single-session path lands here,
+            // and it is the safety net for a batched member whose
+            // prefill lane did not finish — the batched worker normally
+            // advances chunks itself and only calls begin_step once the
+            // cursor is Done
             self.prefill(engine)?;
-            self.sync_pool();
         }
         if self.tokens.len() >= self.max_new_tokens {
             self.finished_at = Some(std::time::Instant::now());
@@ -799,7 +906,7 @@ impl Session {
         self.tokens.push(1);
         self.pos = m.prefill_len;
         self.first_token_at = Some(std::time::Instant::now());
-        self.prefilled = true;
+        self.prefill = PrefillCursor::Done;
         self.sync_pool();
     }
 }

@@ -118,6 +118,22 @@ pub trait KvBackend: Send {
     /// Ingest the prompt K/V produced by engine prefill (alloc + append).
     fn write_prefill(&mut self, pf: &PrefillOut, p_len: usize);
 
+    /// Chunked-prefill ingest: write prompt positions `[from, to)` from
+    /// a chunk-local slab (`[L, to - from, Hkv*Dh]`, post-RoPE) at their
+    /// absolute positions. Chunks must arrive in order, starting at 0
+    /// (or at the shared-attach boundary established by
+    /// [`KvBackend::begin_prefill_shared`]); covering `0..p_len` in any
+    /// chunking leaves the cache bit-identical to one
+    /// [`KvBackend::write_prefill`] call.
+    fn write_prefill_chunk(&mut self, k: &[f32], v: &[f32], from: usize, to: usize);
+
+    /// Shared-attach half of a **chunked** prefill: place the resident
+    /// payload's tokens from `att` and mark the region read-only,
+    /// exactly as [`KvBackend::write_prefill_shared`] does before its
+    /// private-tail write. Returns the number of tokens attached — the
+    /// prompt position the first engine-computed chunk starts at.
+    fn begin_prefill_shared(&mut self, att: Arc<AttachedPrefix>, p_len: usize) -> Result<usize>;
+
     /// Cross-session prefix-sharing geometry key: two sessions may share
     /// prefill payload only when their backends would have produced
     /// byte-identical blocks for the same tokens.
@@ -128,12 +144,36 @@ pub trait KvBackend: Send {
     /// resident payload (no re-quantization, region marked read-only),
     /// then write only the **private tail** from `pf`. The slabs end up
     /// bit-identical to an unshared prefill of the same tokens.
+    ///
+    /// Provided in terms of the chunked primitives — one
+    /// [`KvBackend::begin_prefill_shared`] plus a single tail chunk
+    /// through [`KvBackend::write_prefill_chunk`] — so the whole-prompt
+    /// and chunked shared prefills are the same code path.
     fn write_prefill_shared(
         &mut self,
         pf: &PrefillOut,
         p_len: usize,
         att: Arc<AttachedPrefix>,
-    ) -> Result<()>;
+    ) -> Result<()> {
+        let n = self.begin_prefill_shared(att, p_len)?;
+        if n >= p_len {
+            return Ok(());
+        }
+        // re-pack the tail into the chunk-local layout the chunk write
+        // expects ([L, p_len - n, kv])
+        let g = self.prefix_geom();
+        let kvd = g.hkv * g.dh;
+        let len = p_len - n;
+        let mut k = Vec::with_capacity(g.layers * len * kvd);
+        let mut v = Vec::with_capacity(g.layers * len * kvd);
+        for l in 0..g.layers {
+            let base = (l * p_len + n) * kvd;
+            k.extend_from_slice(&pf.k[base..base + len * kvd]);
+            v.extend_from_slice(&pf.v[base..base + len * kvd]);
+        }
+        self.write_prefill_chunk(&k, &v, n, p_len);
+        Ok(())
+    }
 
     /// Export the first `n` prefill tokens as a shareable payload (the
     /// publish half). None once the region is no longer the pristine
@@ -305,6 +345,28 @@ impl KvBackend for QuantBackend {
         self.cache.write_prefill(&pf.k, &pf.v, p_len, prec);
     }
 
+    fn write_prefill_chunk(&mut self, k: &[f32], v: &[f32], from: usize, to: usize) {
+        let prec = self.tbq.psi(Thought::Reasoning);
+        // the prefill segment is opened by the first chunk (or by the
+        // shared attach) and is always segment 0 on a fresh cache
+        let seg = if self.cache.segments.is_empty() {
+            debug_assert_eq!(from, 0, "first chunk of an unshared prefill starts at 0");
+            self.cache.open_segment(Thought::Reasoning, 0)
+        } else {
+            0
+        };
+        self.cache.write_prefill_chunk(k, v, from, to, prec, seg);
+    }
+
+    fn begin_prefill_shared(&mut self, att: Arc<AttachedPrefix>, p_len: usize) -> Result<usize> {
+        let n = att.attach_len().min(p_len);
+        self.cache
+            .attach_prefix(att.payload(), n)
+            .map_err(|e| anyhow::anyhow!("prefix attach: {e}"))?;
+        self.att = Some(att);
+        Ok(n)
+    }
+
     fn prefix_geom(&self) -> PrefixGeom {
         PrefixGeom {
             kind: "quant",
@@ -313,23 +375,6 @@ impl KvBackend for QuantBackend {
             dh: self.cache.cfg.dh,
             prec_tag: self.tbq.psi(Thought::Reasoning).tag(),
         }
-    }
-
-    fn write_prefill_shared(
-        &mut self,
-        pf: &PrefillOut,
-        p_len: usize,
-        att: Arc<AttachedPrefix>,
-    ) -> Result<()> {
-        let n = att.attach_len().min(p_len);
-        let seg = self
-            .cache
-            .attach_prefix(att.payload(), n)
-            .map_err(|e| anyhow::anyhow!("prefix attach: {e}"))?;
-        let prec = self.tbq.psi(Thought::Reasoning);
-        self.cache.write_prefill_range(&pf.k, &pf.v, p_len, n, p_len, prec, seg);
-        self.att = Some(att);
-        Ok(())
     }
 
     fn export_prefix(&self, n: usize) -> Option<PrefixPayload> {
@@ -643,6 +688,19 @@ impl KvBackend for Fp32Backend {
         self.cache.write_prefill(&pf.k, &pf.v, p_len);
     }
 
+    fn write_prefill_chunk(&mut self, k: &[f32], v: &[f32], from: usize, to: usize) {
+        self.cache.write_prefill_chunk(k, v, from, to);
+    }
+
+    fn begin_prefill_shared(&mut self, att: Arc<AttachedPrefix>, p_len: usize) -> Result<usize> {
+        let n = att.attach_len().min(p_len);
+        self.cache
+            .attach_prefix(att.payload(), n)
+            .map_err(|e| anyhow::anyhow!("prefix attach: {e}"))?;
+        self.att = Some(att);
+        Ok(n)
+    }
+
     fn prefix_geom(&self) -> PrefixGeom {
         PrefixGeom {
             kind: "fp32",
@@ -651,21 +709,6 @@ impl KvBackend for Fp32Backend {
             dh: self.cache.kv_dim,
             prec_tag: 0,
         }
-    }
-
-    fn write_prefill_shared(
-        &mut self,
-        pf: &PrefillOut,
-        p_len: usize,
-        att: Arc<AttachedPrefix>,
-    ) -> Result<()> {
-        let n = att.attach_len().min(p_len);
-        self.cache
-            .attach_prefix(att.payload(), n)
-            .map_err(|e| anyhow::anyhow!("prefix attach: {e}"))?;
-        self.cache.write_prefill_range(&pf.k, &pf.v, p_len, n, p_len);
-        self.att = Some(att);
-        Ok(())
     }
 
     fn export_prefix(&self, n: usize) -> Option<PrefixPayload> {

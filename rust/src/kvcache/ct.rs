@@ -249,9 +249,10 @@ impl CtCache {
         self.write_prefill_range(k, v, p_len, 0, p_len, prec, seg);
     }
 
-    /// Quantize prefill positions `from..p_len` into the (already open)
+    /// Quantize prefill positions `from..to` into the (already open)
     /// prefill segment — the **private tail** half of a shared-prefix
-    /// prefill, also the body of [`CtCache::write_prefill`].
+    /// prefill, also the body of [`CtCache::write_prefill`]. `k`/`v`
+    /// cover the whole prompt (`[L, p_len, Hkv*Dh]`).
     pub fn write_prefill_range(
         &mut self,
         k: &[f32],
@@ -262,16 +263,54 @@ impl CtCache {
         prec: Precision,
         seg: usize,
     ) {
+        self.write_prefill_slab(k, v, 0, p_len, from, to, prec, seg);
+    }
+
+    /// Chunked-prefill variant of [`CtCache::write_prefill_range`]:
+    /// `k`/`v` hold **only** positions `[from, to)` (chunk-local layout
+    /// `[L, to - from, Hkv*Dh]`), quantized at their absolute prompt
+    /// positions. Writing `0..p_len` in any chunking produces slabs
+    /// bit-identical to one [`CtCache::write_prefill`] call (the write
+    /// sequence per position is unchanged).
+    pub fn write_prefill_chunk(
+        &mut self,
+        k: &[f32],
+        v: &[f32],
+        from: usize,
+        to: usize,
+        prec: Precision,
+        seg: usize,
+    ) {
+        self.write_prefill_slab(k, v, from, to - from, from, to, prec, seg);
+    }
+
+    /// Shared body: `k`/`v` cover positions `[slab_start,
+    /// slab_start + slab_len)`; positions `[from, to)` of that window
+    /// are quantized into `seg`.
+    fn write_prefill_slab(
+        &mut self,
+        k: &[f32],
+        v: &[f32],
+        slab_start: usize,
+        slab_len: usize,
+        from: usize,
+        to: usize,
+        prec: Precision,
+        seg: usize,
+    ) {
+        debug_assert!(slab_start <= from && to <= slab_start + slab_len);
         let kvd = self.cfg.kv_dim();
         for pos in from..to {
             for l in 0..self.cfg.layers {
-                let base = (l * p_len + pos) * kvd;
+                let base = (l * slab_len + (pos - slab_start)) * kvd;
                 self.write_slot(l, seg, Thought::Reasoning, pos, prec,
                                 &k[base..base + kvd], &v[base..base + kvd])
                     .expect("prefill exceeds cache capacity");
             }
         }
-        self.segments[seg].end_pos = to;
+        if to > from {
+            self.segments[seg].end_pos = to;
+        }
         self.tokens_written += (to - from) as u64;
     }
 

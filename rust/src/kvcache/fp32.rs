@@ -141,7 +141,8 @@ impl Fp32Cache {
 
     /// Write prefill positions `from..to` into their slots — the
     /// private-tail half of a shared-prefix prefill, also the body of
-    /// [`Fp32Cache::write_prefill`].
+    /// [`Fp32Cache::write_prefill`]. `k`/`v` cover the whole prompt
+    /// (`[L, p_len, kv_dim]`).
     pub fn write_prefill_range(
         &mut self,
         k: &[f32],
@@ -150,11 +151,35 @@ impl Fp32Cache {
         from: usize,
         to: usize,
     ) {
-        assert!(to <= self.capacity && to <= p_len);
+        self.write_prefill_slab(k, v, 0, p_len, from, to);
+    }
+
+    /// Chunked-prefill variant of [`Fp32Cache::write_prefill_range`]:
+    /// `k`/`v` hold **only** positions `[from, to)` (chunk-local layout
+    /// `[L, to - from, kv_dim]`), written at their absolute prompt
+    /// positions. Writing `0..p_len` in any chunking produces slabs
+    /// bit-identical to one [`Fp32Cache::write_prefill`] call.
+    pub fn write_prefill_chunk(&mut self, k: &[f32], v: &[f32], from: usize, to: usize) {
+        self.write_prefill_slab(k, v, from, to - from, from, to);
+    }
+
+    /// Shared body: `k`/`v` cover positions `[slab_start,
+    /// slab_start + slab_len)`; positions `[from, to)` of that window
+    /// are written to their slots.
+    fn write_prefill_slab(
+        &mut self,
+        k: &[f32],
+        v: &[f32],
+        slab_start: usize,
+        slab_len: usize,
+        from: usize,
+        to: usize,
+    ) {
+        assert!(to <= self.capacity && slab_start <= from && to <= slab_start + slab_len);
         let kvd = self.kv_dim;
         for l in 0..self.layers {
             for pos in from..to {
-                let src = (l * p_len + pos) * kvd;
+                let src = (l * slab_len + (pos - slab_start)) * kvd;
                 self.write_slot_layer(l, pos, &k[src..src + kvd], &v[src..src + kvd]);
             }
         }

@@ -38,9 +38,11 @@ USAGE: thinkv <cmd> [--flags]
 
   generate  --mode thinkv|fullkv|rkv|h2o|kivi2|... --requests 4
             --budget 1024 --max-tokens 128 --workers 2
-            --pool-mb 0 --swap-mb 0 --max-decode-batch 8 --prefix-share
+            --pool-mb 0 --swap-mb 0 --max-decode-batch 8
+            --prefill-chunk 0 --prefix-share
   serve     --addr 127.0.0.1:7799 --mode thinkv --budget 1024
-            --pool-mb 0 --swap-mb 0 --max-decode-batch 8 --prefix-share
+            --pool-mb 0 --swap-mb 0 --max-decode-batch 8
+            --prefill-chunk 0 --prefix-share
   sim       --mode thinkv --dataset aime --budget 1024 --scale 0.5
   calibrate --prompts 8 --layers 8
   info
@@ -52,7 +54,12 @@ USAGE: thinkv <cmd> [--flags]
   with zero recompute steps (0 = recompute preemption only).
   --max-decode-batch caps the cross-session decode batch: each worker
   advances up to that many compatible sessions with one fused engine
-  call per step (1 = per-session decode). --prefix-share stores
+  call per step (1 = per-session decode). --prefill-chunk N splits
+  prompt prefill into N-token chunks co-scheduled with decode steps —
+  each batch carries at most one prefilling session, advancing one
+  chunk per fused step, so a long-prompt arrival delays running
+  sessions by one chunk instead of a whole prefill (0 = whole-prompt
+  prefill; token streams are bit-identical). --prefix-share stores
   identical block-aligned prompt prefixes (system prompts) once: later
   sessions attach the resident read-only blocks, are admitted for only
   their delta bytes, and privatize via copy-on-write on the first
@@ -70,12 +77,16 @@ fn serve_config(args: &Args) -> ServeConfig {
     // and resume instead of recomputing.
     let pool_mb = args.u64_or("pool-mb", 0);
     let swap_mb = args.u64_or("swap-mb", 0);
+    // --prefill-chunk N splits prompt prefill into N-token chunks
+    // co-scheduled with decode steps (0 = whole-prompt prefill)
+    let prefill_chunk = args.usize_or("prefill-chunk", 0);
     ServeConfig {
         mode,
         budget: args.usize_or("budget", 1024),
         max_new_tokens: args.usize_or("max-tokens", 128),
         workers: args.usize_or("workers", 2),
         max_decode_batch: args.usize_or("max-decode-batch", 8),
+        prefill_chunk_tokens: (prefill_chunk > 0).then_some(prefill_chunk),
         refresh: args.usize_or("refresh", 128),
         temperature: args.f64_or("temperature", 0.8),
         seed: args.u64_or("seed", 42),
@@ -116,9 +127,13 @@ fn cmd_generate(args: &Args) -> i32 {
             let wall = t0.elapsed().as_secs_f64();
             let toks: usize = results.iter().map(|r| r.tokens.len()).sum();
             for r in &results {
+                // ttft decomposition: prefill_ms is the engine half,
+                // the rest of ttft is scheduling/queue wait
                 println!(
-                    "  req {}: {} tokens, ttft {:.1} ms, tpot {:.2} ms, avg_bits {:.2}, live {}, ct_reuses {}, recompute_preempts {}, swap_ins {}",
-                    r.id, r.tokens.len(), r.ttft_ms, r.tpot_ms, r.avg_bits, r.live_tokens, r.ct_reuses, r.preemptions, r.swap_ins
+                    "  req {}: {} tokens, ttft {:.1} ms (prefill {:.1} ms / {} chunks), tpot {:.2} ms, avg_bits {:.2}, live {}, ct_reuses {}, recompute_preempts {}, swap_ins {}",
+                    r.id, r.tokens.len(), r.ttft_ms, r.breakdown.prefill_exec_ns as f64 / 1e6,
+                    r.breakdown.prefill_chunks, r.tpot_ms, r.avg_bits, r.live_tokens, r.ct_reuses,
+                    r.preemptions, r.swap_ins
                 );
             }
             println!(

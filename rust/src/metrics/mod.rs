@@ -3,9 +3,10 @@
 //! the scheduler/pool snapshot surfaced by the server `stats` command —
 //! including the suspend-to-host swap counters ([`SchedSnapshot`]:
 //! swap-in/out counts, bytes moved, restore latency, recompute
-//! fallbacks) added for the preemption fast path, and the
-//! cross-session batched-decode counters (fused steps, session-steps
-//! advanced, decode-batch size histogram).
+//! fallbacks) added for the preemption fast path, the cross-session
+//! batched-decode counters (fused steps, session-steps advanced,
+//! decode-batch size histogram), and the chunked-prefill lane counters
+//! (chunk size, chunks run, interleaved steps, prefill-queue depth).
 
 use std::time::Instant;
 
@@ -51,6 +52,10 @@ impl Latencies {
 /// Named wall-clock accumulators — the per-operation breakdown (Table 5).
 #[derive(Debug, Clone, Default)]
 pub struct Breakdown {
+    /// Engine wall time running prompt prefill (whole-prompt call or
+    /// the sum of chunked-prefill calls) — the execution half of TTFT;
+    /// `ttft - prefill_exec` is scheduling/queue wait.
+    pub prefill_exec_ns: u64,
     pub decode_exec_ns: u64,
     pub quant_write_ns: u64,
     pub tbe_ns: u64,
@@ -59,6 +64,8 @@ pub struct Breakdown {
     pub gather_ns: u64,
     pub sample_ns: u64,
     pub steps: u64,
+    /// Prefill chunks executed (1 for a whole-prompt prefill).
+    pub prefill_chunks: u64,
     pub tbe_calls: u64,
     pub refresh_calls: u64,
     pub policy_calls: u64,
@@ -67,7 +74,8 @@ pub struct Breakdown {
 
 impl Breakdown {
     pub fn total_ns(&self) -> u64 {
-        self.decode_exec_ns
+        self.prefill_exec_ns
+            + self.decode_exec_ns
             + self.quant_write_ns
             + self.tbe_ns
             + self.refresh_ns
@@ -77,10 +85,15 @@ impl Breakdown {
     }
 
     /// (label, % of total time, calls % of steps) rows, Table-5 style.
+    /// Prefill is once-per-request work, not per-step: its call-rate
+    /// column is a flat 100% when it ran (like decode/sampling), never
+    /// `chunks / steps`, which would read as >100% for long prompts.
     pub fn rows(&self) -> Vec<(&'static str, f64, f64)> {
         let total = self.total_ns().max(1) as f64;
         let steps = self.steps.max(1) as f64;
+        let prefill_rate = if self.prefill_chunks > 0 { 100.0 } else { 0.0 };
         vec![
+            ("Prefill exec", self.prefill_exec_ns as f64 / total * 100.0, prefill_rate),
             ("Decode exec (attention+MLP)", self.decode_exec_ns as f64 / total * 100.0, 100.0),
             ("Quant write (TBQ)", self.quant_write_ns as f64 / total * 100.0, 100.0),
             ("TBE eviction", self.tbe_ns as f64 / total * 100.0, self.tbe_calls as f64 / steps * 100.0),
@@ -92,6 +105,8 @@ impl Breakdown {
     }
 
     pub fn merge(&mut self, o: &Breakdown) {
+        self.prefill_exec_ns += o.prefill_exec_ns;
+        self.prefill_chunks += o.prefill_chunks;
         self.decode_exec_ns += o.decode_exec_ns;
         self.quant_write_ns += o.quant_write_ns;
         self.tbe_ns += o.tbe_ns;
@@ -140,6 +155,19 @@ pub struct SchedSnapshot {
     /// batch held `i + 1` sessions (the last bucket absorbs larger
     /// batches). Empty until the scheduler records a fused step.
     pub batch_hist: Vec<u64>,
+    /// Chunked-prefill configuration: tokens per prefill chunk
+    /// (0 = whole-prompt prefill inside the first decode step).
+    pub prefill_chunk_tokens: usize,
+    /// Prefill chunks executed by workers (chunked mode only).
+    pub prefill_chunks: u64,
+    /// Fused steps that advanced decode members **and** a prefill chunk
+    /// in the same step — the stall-free interleave this counter exists
+    /// to prove is happening.
+    pub prefill_interleaved_steps: u64,
+    /// Gauge: queued sessions (waiting / runnable / stalled) still owing
+    /// prompt prefill work. Members currently held by a worker are not
+    /// visible to the snapshot and are excluded.
+    pub prefill_queue_depth: usize,
     /// Host-side swap pool capacity (0 = suspend-to-host disabled).
     pub swap_capacity: u64,
     /// Swap pool bytes currently holding suspended sessions.
@@ -202,6 +230,13 @@ impl SchedSnapshot {
             "batch_hist",
             Json::Arr(self.batch_hist.iter().map(|&n| Json::Num(n as f64)).collect()),
         );
+        j.set("prefill_chunk_tokens", Json::Num(self.prefill_chunk_tokens as f64));
+        j.set("prefill_chunks", Json::Num(self.prefill_chunks as f64));
+        j.set(
+            "prefill_interleaved_steps",
+            Json::Num(self.prefill_interleaved_steps as f64),
+        );
+        j.set("prefill_queue_depth", Json::Num(self.prefill_queue_depth as f64));
         j.set("swap_capacity", Json::Num(self.swap_capacity as f64));
         j.set("swap_used", Json::Num(self.swap_used as f64));
         j.set("swap_peak", Json::Num(self.swap_peak as f64));
@@ -245,6 +280,15 @@ impl SchedSnapshot {
                 self.fused_steps,
                 self.fused_sessions,
                 self.fused_sessions as f64 / self.fused_steps as f64
+            ));
+        }
+        if self.prefill_chunk_tokens > 0 {
+            s.push_str(&format!(
+                "\nprefill: chunk {} tok, {} chunks run, {} interleaved steps, {} queued",
+                self.prefill_chunk_tokens,
+                self.prefill_chunks,
+                self.prefill_interleaved_steps,
+                self.prefill_queue_depth
             ));
         }
         if self.swap_capacity > 0 {
@@ -296,20 +340,38 @@ mod tests {
     #[test]
     fn breakdown_rows_sum_to_100() {
         let b = Breakdown {
-            decode_exec_ns: 70,
+            prefill_exec_ns: 20,
+            decode_exec_ns: 50,
             quant_write_ns: 10,
             tbe_ns: 10,
             refresh_ns: 5,
             sample_ns: 5,
             steps: 100,
+            prefill_chunks: 4,
             tbe_calls: 5,
             refresh_calls: 1,
             ..Default::default()
         };
         let total: f64 = b.rows().iter().map(|r| r.1).sum();
         assert!((total - 100.0).abs() < 1e-6);
-        let tbe_row = b.rows()[2];
+        let prefill_row = b.rows()[0];
+        assert!((prefill_row.1 - 20.0).abs() < 1e-9, "prefill_exec_ns in rows");
+        let tbe_row = b.rows()[3];
         assert!((tbe_row.2 - 5.0).abs() < 1e-9);
+    }
+
+    /// Satellite regression: `prefill_exec_ns` must flow into
+    /// `total_ns` (it used to be recorded nowhere, so TTFT could not be
+    /// decomposed and `total_ns` undercounted).
+    #[test]
+    fn prefill_exec_counts_toward_total_and_merges() {
+        let mut a = Breakdown { prefill_exec_ns: 40, decode_exec_ns: 60, ..Default::default() };
+        assert_eq!(a.total_ns(), 100);
+        let b = Breakdown { prefill_exec_ns: 5, prefill_chunks: 2, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.prefill_exec_ns, 45);
+        assert_eq!(a.prefill_chunks, 2);
+        assert_eq!(a.total_ns(), 105);
     }
 
     #[test]
@@ -359,6 +421,27 @@ mod tests {
         assert!(summary.contains("avg batch 3.14"));
         // no fused steps recorded: the decode line is omitted entirely
         assert!(!SchedSnapshot::default().summary().contains("fused"));
+    }
+
+    #[test]
+    fn sched_snapshot_prefill_fields_surface() {
+        let s = SchedSnapshot {
+            prefill_chunk_tokens: 128,
+            prefill_chunks: 9,
+            prefill_interleaved_steps: 7,
+            prefill_queue_depth: 2,
+            ..SchedSnapshot::default()
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("prefill_chunk_tokens").and_then(Json::as_usize), Some(128));
+        assert_eq!(j.get("prefill_chunks").and_then(Json::as_usize), Some(9));
+        assert_eq!(j.get("prefill_interleaved_steps").and_then(Json::as_usize), Some(7));
+        assert_eq!(j.get("prefill_queue_depth").and_then(Json::as_usize), Some(2));
+        let summary = s.summary();
+        assert!(summary.contains("prefill: chunk 128 tok"));
+        assert!(summary.contains("7 interleaved steps"));
+        // chunking disabled: the prefill line is omitted entirely
+        assert!(!SchedSnapshot::default().summary().contains("prefill:"));
     }
 
     #[test]

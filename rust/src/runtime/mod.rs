@@ -12,6 +12,7 @@ pub mod engine;
 pub mod weights;
 
 pub use engine::{
-    BatchDecodeReq, CacheView, DecodeEngine, DecodeOut, Engine, PrefillOut, QuantCache,
+    BatchDecodeReq, CacheView, DecodeEngine, DecodeOut, Engine, PrefillChunkOut, PrefillOut,
+    QuantCache,
 };
 pub use weights::{load_weights, Tensor};

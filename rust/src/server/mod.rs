@@ -13,13 +13,18 @@
 //! suspend-to-host swap counters (`swap_outs`/`swap_ins`, bytes moved
 //! each way, `swap_restore_ms`, `swap_fallbacks`), the batched
 //! decode counters (`fused_steps`, `fused_sessions`, `batch_hist`),
-//! and the cross-session prefix-sharing counters (`prefix_hits`,
+//! the cross-session prefix-sharing counters (`prefix_hits`,
 //! `prefix_misses`, `prefix_inserts`, `prefix_cow_faults`,
 //! `prefix_cow_denied`, `prefix_reclaims`, `prefix_resident_bytes`,
-//! `prefix_resident_entries`) alongside the serving totals.
-//! Per-request replies carry `preemptions` (recompute resets) and
-//! `swap_ins` (zero-replay resumes) so clients can tell the two
-//! preemption flavors apart.
+//! `prefix_resident_entries`), and the chunked-prefill lane counters
+//! (`prefill_chunk_tokens`, `prefill_chunks`,
+//! `prefill_interleaved_steps`, `prefill_queue_depth`) alongside the
+//! serving totals.
+//! Per-request replies carry `preemptions` (recompute resets),
+//! `swap_ins` (zero-replay resumes), and the TTFT decomposition
+//! (`prefill_ms` engine time + `prefill_chunks`; `ttft_ms -
+//! prefill_ms` is scheduling wait) so clients can tell the two
+//! preemption flavors apart and see where first-token latency went.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -205,6 +210,15 @@ fn handle_conn(
             Json::Arr(result.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
         );
         out.set("ttft_ms", Json::Num(result.ttft_ms));
+        // ttft decomposition: engine prefill time vs scheduling wait
+        out.set(
+            "prefill_ms",
+            Json::Num(result.breakdown.prefill_exec_ns as f64 / 1e6),
+        );
+        out.set(
+            "prefill_chunks",
+            Json::Num(result.breakdown.prefill_chunks as f64),
+        );
         out.set("tpot_ms", Json::Num(result.tpot_ms));
         out.set("total_ms", Json::Num(result.total_ms));
         out.set("avg_bits", Json::Num(result.avg_bits));

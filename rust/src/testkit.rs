@@ -1,6 +1,8 @@
 //! Shared, artifact-free test/bench fixtures (`#[doc(hidden)]`): a
-//! hand-built tiny manifest, a prefix-dominated manifest, and a
-//! deterministic **causal** engine fake.
+//! hand-built tiny manifest, a prefix-dominated manifest, a
+//! deterministic **causal** engine fake, and a **metered** wrapper
+//! ([`MeteredEngine`]) that prices engine work on a logical clock for
+//! deterministic scheduling-latency assertions.
 //!
 //! The causal property is load-bearing for prefix sharing: the fake's
 //! prefill K/V at position `i` is a pure function of tokens `0..=i`
@@ -10,10 +12,12 @@
 //! all drive this one implementation so the invariant cannot drift
 //! between copies.
 
+use std::cell::{Cell, RefCell};
+
 use anyhow::Result;
 
 use crate::model::{Manifest, ModelConfig};
-use crate::runtime::{CacheView, DecodeEngine, DecodeOut, PrefillOut};
+use crate::runtime::{BatchDecodeReq, CacheView, DecodeEngine, DecodeOut, PrefillChunkOut, PrefillOut};
 use crate::util::rng::Rng;
 
 /// Tiny dims, no artifact files needed (nothing loads HLO).
@@ -100,6 +104,54 @@ impl DecodeEngine for CausalEngine {
         Ok(PrefillOut { logits, k, v, obs: vec![0.0; m.n_layers * m.prefill_len] })
     }
 
+    /// True chunked compute (unlike the slicing trait default): only the
+    /// requested positions generate K/V, the way a chunked-prefill
+    /// kernel would, while the causal accumulator still walks the whole
+    /// prefix so every chunking is bit-identical to
+    /// [`CausalEngine::prefill`].
+    fn prefill_chunk(
+        &self,
+        tokens: &[i32],
+        start: usize,
+        len: usize,
+        _view: &CacheView,
+    ) -> Result<PrefillChunkOut> {
+        let m = &self.m;
+        let p = m.prefill_len;
+        anyhow::ensure!(start + len <= p, "chunk [{start}, {}) exceeds prefill_len {p}", start + len);
+        let kvd = m.n_kv_heads * m.d_head;
+        let mut k = vec![0f32; m.n_layers * len * kvd];
+        let mut v = vec![0f32; m.n_layers * len * kvd];
+        let final_chunk = start + len == p;
+        // the accumulator must cover every position whose hash feeds
+        // this chunk (or the final logits); later positions are unseen
+        let walk = if final_chunk { p } else { start + len };
+        let mut h = 0xABCDu64;
+        for pos in 0..walk {
+            h = h.wrapping_mul(31).wrapping_add(if pos < tokens.len() {
+                tokens[pos] as u64
+            } else {
+                7
+            });
+            if pos >= start && pos < start + len {
+                let mut rng = Rng::new(h ^ 0x51AB);
+                for l in 0..m.n_layers {
+                    let base = (l * len + (pos - start)) * kvd;
+                    for d in 0..kvd {
+                        k[base + d] = (rng.f32() - 0.5) * 2.0;
+                        v[base + d] = (rng.f32() - 0.5) * 2.0;
+                    }
+                }
+            }
+        }
+        let mut logits = vec![0f32; m.vocab];
+        if final_chunk {
+            let mut lr = Rng::new(h ^ 0x1061_75);
+            lr.fill_normal_f32(&mut logits, 0.0, 1.0);
+        }
+        Ok(PrefillChunkOut { logits, k, v, obs: vec![0.0; m.n_layers * len] })
+    }
+
     fn decode(&self, token: i32, pos: i32, _buf_idx: i32, view: &CacheView) -> Result<DecodeOut> {
         let capacity = match view {
             CacheView::Quant(q) => q.capacity,
@@ -122,5 +174,78 @@ impl DecodeEngine for CausalEngine {
             *p = p.abs();
         }
         Ok(DecodeOut { logits, new_k, new_v, probs })
+    }
+}
+
+/// [`CausalEngine`] wrapper with a deterministic **logical clock**:
+/// every prefill token and every decode step costs one unit of engine
+/// time. The arrival-burst bench and the head-of-line regression test
+/// measure scheduling delay in these units instead of wall clock, so
+/// "a long-prompt arrival delays a running session's next step by at
+/// most one chunk" is a deterministic assertion, not a flaky timing.
+pub struct MeteredEngine {
+    inner: CausalEngine,
+    clock: Cell<u64>,
+    /// Clock value at the start of each fused decode call, in order.
+    step_marks: RefCell<Vec<u64>>,
+}
+
+impl MeteredEngine {
+    pub fn new(m: ModelConfig) -> MeteredEngine {
+        MeteredEngine {
+            inner: CausalEngine::new(m),
+            clock: Cell::new(0),
+            step_marks: RefCell::new(Vec::new()),
+        }
+    }
+
+    /// Total engine-time units consumed so far.
+    pub fn clock(&self) -> u64 {
+        self.clock.get()
+    }
+
+    /// Clock readings taken at the start of every fused decode call —
+    /// consecutive differences are the inter-step gaps a decode-batch
+    /// member observes (its TPOT, in engine-time units).
+    pub fn step_marks(&self) -> Vec<u64> {
+        self.step_marks.borrow().clone()
+    }
+
+    fn tick(&self, units: u64) {
+        self.clock.set(self.clock.get() + units);
+    }
+}
+
+impl DecodeEngine for MeteredEngine {
+    fn model(&self) -> &ModelConfig {
+        self.inner.model()
+    }
+
+    fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
+        self.tick(self.inner.model().prefill_len as u64);
+        self.inner.prefill(tokens)
+    }
+
+    fn prefill_chunk(
+        &self,
+        tokens: &[i32],
+        start: usize,
+        len: usize,
+        view: &CacheView,
+    ) -> Result<PrefillChunkOut> {
+        self.tick(len.max(1) as u64);
+        self.inner.prefill_chunk(tokens, start, len, view)
+    }
+
+    fn decode(&self, token: i32, pos: i32, buf_idx: i32, view: &CacheView) -> Result<DecodeOut> {
+        self.tick(1);
+        self.inner.decode(token, pos, buf_idx, view)
+    }
+
+    fn decode_batch(&self, reqs: &[BatchDecodeReq<'_>]) -> Result<Vec<DecodeOut>> {
+        self.step_marks.borrow_mut().push(self.clock.get());
+        reqs.iter()
+            .map(|r| self.decode(r.token, r.pos, r.buf_idx, &r.view))
+            .collect()
     }
 }

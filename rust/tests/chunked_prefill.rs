@@ -1,0 +1,314 @@
+//! Stall-free chunked prefill: correctness and scheduling properties,
+//! artifact-free (ISSUE 5).
+//!
+//! Two bars:
+//!
+//! * **Bit-invariance** — running prompts through the chunked-prefill
+//!   scheduler path (`Scheduler::set_prefill_chunking` + the
+//!   `advance_batch` prefill lane) must produce token streams
+//!   bit-identical to the whole-prompt path, across randomized chunk
+//!   sizes, both cache families, and prefix sharing on/off.
+//! * **Head-of-line regression** — a long-prompt arrival must delay a
+//!   running session's next decode step by at most one chunk (plus its
+//!   decode batch-mates), not a full prefill. Measured on the metered
+//!   causal fake's deterministic engine-time clock, so the bound is
+//!   exact rather than a wall-clock heuristic.
+
+use std::sync::{mpsc, Arc};
+
+use thinkv::coordinator::{
+    advance_batch, CompressionMode, RequestResult, Scheduler, ServeConfig, Session, StepOutcome,
+};
+use thinkv::kvcache::{BlockPool, PrefixIndex};
+use thinkv::metrics::SchedSnapshot;
+use thinkv::testkit::{share_manifest, tiny_manifest, CausalEngine, MeteredEngine};
+use thinkv::util::prop;
+use thinkv::util::rng::Rng;
+
+/// Prefix-trie granularity used by the serving coordinator.
+const PREFIX_BLOCK_TOKENS: usize = 8;
+
+fn mode_for(tag: usize) -> CompressionMode {
+    match tag {
+        0 => CompressionMode::thinkv_default(),
+        1 => CompressionMode::parse("kivi2").expect("kivi2 parses"),
+        _ => CompressionMode::FullKv,
+    }
+}
+
+fn cfg_for(tag: usize, max_new: usize, temperature: f64) -> ServeConfig {
+    ServeConfig {
+        mode: mode_for(tag),
+        budget: 64,
+        max_new_tokens: max_new,
+        workers: 1,
+        temperature,
+        ..ServeConfig::default()
+    }
+}
+
+/// Reference: each session advanced alone through `Session::step`,
+/// whole-prompt prefill inside the first step, no scheduler.
+fn run_whole(
+    engine: &CausalEngine,
+    man: &thinkv::model::Manifest,
+    cfgs: &[ServeConfig],
+    prompts: &[Vec<i32>],
+) -> Vec<Vec<i32>> {
+    let mut streams = Vec::new();
+    for (i, (cfg, prompt)) in cfgs.iter().zip(prompts).enumerate() {
+        let mut s = Session::new(i as u64 + 1, prompt.clone(), cfg, man).expect("session");
+        loop {
+            match s.step(engine).expect("whole-prompt step") {
+                StepOutcome::Running => {}
+                StepOutcome::Finished => break,
+                StepOutcome::NeedMemory => panic!("unbounded pool cannot starve"),
+            }
+        }
+        streams.push(s.tokens.clone());
+    }
+    streams
+}
+
+/// Chunked: the production path — scheduler batch formation with the
+/// prefill lane + token budget, the `advance_batch` worker body — with
+/// randomized batch caps and worker chunk lengths.
+fn run_chunked(
+    engine: &CausalEngine,
+    man: &thinkv::model::Manifest,
+    cfgs: &[ServeConfig],
+    prompts: &[Vec<i32>],
+    chunk_tokens: usize,
+    share: bool,
+    g: &mut prop::Gen,
+) -> (Vec<Vec<i32>>, SchedSnapshot) {
+    let pool = Arc::new(BlockPool::new(u64::MAX / 2));
+    let prefix = share.then(|| PrefixIndex::new(Arc::clone(&pool), PREFIX_BLOCK_TOKENS));
+    let sched = Scheduler::with_prefix(Arc::clone(&pool), None, prefix);
+    sched.set_prefill_chunking(chunk_tokens, 0);
+    let (tx, rx) = mpsc::channel();
+    for (i, (cfg, prompt)) in cfgs.iter().zip(prompts).enumerate() {
+        let s = Session::with_parts(
+            i as u64 + 1,
+            prompt.clone(),
+            cfg,
+            man,
+            Some(Arc::clone(&pool)),
+            sched.prefix_index().cloned(),
+        )
+        .expect("session");
+        sched.submit(s, tx.clone());
+    }
+    drop(tx);
+    while sched.inflight() > 0 {
+        let max = g.usize(1, 6);
+        let steps = g.usize(1, 7);
+        let batch = sched.next_batch(max).expect("runnable batch while inflight");
+        advance_batch(&sched, engine, steps, batch);
+    }
+    let mut results: Vec<RequestResult> = rx.iter().collect();
+    results.sort_by_key(|r| r.id);
+    for r in &results {
+        assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+    }
+    let snap = sched.snapshot();
+    (results.into_iter().map(|r| r.tokens).collect(), snap)
+}
+
+/// Chunked prefill must be stream-bit-invariant vs whole-prompt
+/// prefill, for randomized chunk sizes (sub-block through
+/// larger-than-prompt), mixed cache families, and sharing on/off — and
+/// the chunk counters must account for the work.
+#[test]
+fn chunked_streams_bit_identical_to_whole_prompt() {
+    prop::check(10, |g| {
+        let man = tiny_manifest();
+        let engine = CausalEngine::new(man.model.clone());
+        let n = g.usize(2, 6);
+        // 1..40 spans single-token chunks through one-chunk-per-prompt
+        // (prefill_len is 32)
+        let chunk_tokens = g.usize(1, 40);
+        let share = g.bool();
+        let max_new = g.usize(4, 12);
+        let temperature = if g.bool() { 0.8 } else { 0.0 };
+        let mut rng = Rng::new(g.usize(0, 1 << 30) as u64);
+        let cfgs: Vec<ServeConfig> = (0..n)
+            .map(|_| cfg_for(rng.below(3), max_new, temperature))
+            .collect();
+        // with sharing on, prompts carry a common block-aligned system
+        // prefix so the attach/publish fork is exercised under chunking
+        let system: Vec<i32> = (0..16).map(|i| (i * 3 % 60) as i32).collect();
+        let prompts: Vec<Vec<i32>> = (0..n)
+            .map(|u| {
+                let mut p = if share { system.clone() } else { Vec::new() };
+                let tail = rng.below(8) + 3;
+                p.extend((0..tail).map(|i| (40 + u * 8 + i) as i32));
+                p
+            })
+            .collect();
+
+        let reference = run_whole(&engine, &man, &cfgs, &prompts);
+        let (chunked, snap) =
+            run_chunked(&engine, &man, &cfgs, &prompts, chunk_tokens, share, g);
+
+        for (i, (whole, ck)) in reference.iter().zip(&chunked).enumerate() {
+            if whole != ck {
+                return Err(format!(
+                    "session {} diverged under chunk={chunk_tokens} share={share}: \
+                     whole {:?} vs chunked {:?}",
+                    i + 1,
+                    whole,
+                    ck
+                ));
+            }
+            if whole.len() != max_new {
+                return Err(format!("session {} truncated: {} tokens", i + 1, whole.len()));
+            }
+        }
+        if snap.prefill_chunks == 0 {
+            return Err("chunked run recorded no prefill chunks".into());
+        }
+        if snap.completions != n as u64 {
+            return Err(format!("completions {} != {n}", snap.completions));
+        }
+        // books at quiescence: only resident shared prefixes may remain
+        if snap.pool_used != snap.prefix_resident_bytes {
+            return Err(format!(
+                "pool bytes stranded: used {} vs resident prefixes {}",
+                snap.pool_used, snap.prefix_resident_bytes
+            ));
+        }
+        if share && snap.prefix_hits + snap.prefix_inserts == 0 {
+            return Err("sharing enabled but the trie never engaged".into());
+        }
+        Ok(())
+    });
+}
+
+/// The prefill cursor is a real state machine: chunks advance it,
+/// `prefill_remaining` counts down, a recompute reset rewinds it, and
+/// the restarted session still produces the reference stream.
+#[test]
+fn prefill_cursor_advances_and_survives_reset() {
+    let man = tiny_manifest();
+    let engine = CausalEngine::new(man.model.clone());
+    let cfg = cfg_for(0, 6, 0.0);
+    let prompt: Vec<i32> = (0..20).collect();
+    let p_len = man.model.prefill_len; // 32, prompt padded up to it
+
+    // reference stream
+    let mut reference = Session::new(7, prompt.clone(), &cfg, &man).unwrap();
+    while !matches!(reference.step(&engine).unwrap(), StepOutcome::Finished) {}
+
+    let mut s = Session::new(7, prompt.clone(), &cfg, &man).unwrap();
+    assert!(!s.prefill_done());
+    assert_eq!(s.prefill_remaining(), p_len);
+    assert!(!s.advance_prefill(&engine, 10).unwrap());
+    assert_eq!(s.prefill_remaining(), p_len - 10);
+    assert!(!s.advance_prefill(&engine, 10).unwrap());
+    // a mid-prefill reset rewinds the cursor without counting a
+    // recompute preemption (no generated work was lost)
+    s.reset_for_preemption();
+    assert_eq!(s.preemptions, 0);
+    assert_eq!(s.prefill_remaining(), p_len);
+    // finish in uneven chunks; the final chunk bootstraps the token
+    assert!(!s.advance_prefill(&engine, 30).unwrap());
+    assert_eq!(s.prefill_remaining(), 2);
+    assert!(s.advance_prefill(&engine, 99).unwrap());
+    assert!(s.prefill_done());
+    assert_eq!(s.tokens.len(), 1, "final chunk samples the first token");
+    assert_eq!(s.breakdown.prefill_chunks, 4, "2 pre-reset + 2 post-reset");
+    assert!(s.breakdown.prefill_exec_ns > 0, "prefill wall time recorded");
+    while !matches!(s.step(&engine).unwrap(), StepOutcome::Finished) {}
+    assert_eq!(s.tokens, reference.tokens, "reset + chunked replay is bit-identical");
+}
+
+/// Drive one running session plus one long-prompt arrival and measure
+/// the runner's inter-step gaps on the deterministic engine-time clock.
+fn runner_gaps(chunk: Option<usize>) -> (u64, SchedSnapshot) {
+    let man = share_manifest(); // prefill_len 96: a genuinely long prompt
+    let engine = MeteredEngine::new(man.model.clone());
+    let pool = Arc::new(BlockPool::new(u64::MAX / 2));
+    let sched = Scheduler::new(Arc::clone(&pool));
+    if let Some(c) = chunk {
+        sched.set_prefill_chunking(c, 0);
+    }
+    let base = ServeConfig {
+        mode: CompressionMode::thinkv_default(),
+        budget: 64,
+        max_new_tokens: 200,
+        workers: 1,
+        temperature: 0.0,
+        ..ServeConfig::default()
+    };
+    let (tx, rx) = mpsc::channel();
+    let prompt: Vec<i32> = (0..96).map(|i| (i % 50) as i32).collect();
+    let runner =
+        Session::with_pool(1, prompt.clone(), &base, &man, Some(Arc::clone(&pool))).unwrap();
+    sched.submit(runner, tx.clone());
+    // warm the runner into steady decode
+    for _ in 0..4 {
+        let batch = sched.next_batch(3).expect("runner runnable");
+        advance_batch(&sched, &engine, 4, batch);
+    }
+    // the long-prompt arrival lands
+    let arr_cfg = ServeConfig { max_new_tokens: 4, ..base.clone() };
+    let mut p2 = prompt.clone();
+    p2[0] = 49;
+    sched.submit(Session::with_pool(2, p2, &arr_cfg, &man, Some(Arc::clone(&pool))).unwrap(), tx);
+    let start = engine.step_marks().len().saturating_sub(1);
+    let mut results: Vec<RequestResult> = Vec::new();
+    while results.is_empty() {
+        let batch = sched.next_batch(3).expect("runnable while inflight");
+        advance_batch(&sched, &engine, 4, batch);
+        results.extend(rx.try_iter());
+    }
+    let marks = engine.step_marks();
+    let max_gap = marks[start..]
+        .windows(2)
+        .map(|w| w[1] - w[0])
+        .max()
+        .expect("runner decoded through the arrival");
+    // drain the runner so the books balance
+    while sched.inflight() > 0 {
+        let batch = sched.next_batch(3).expect("runnable while inflight");
+        advance_batch(&sched, &engine, 8, batch);
+    }
+    results.extend(rx.iter());
+    assert_eq!(results.iter().filter(|r| r.error.is_none()).count(), 2);
+    let snap = sched.snapshot();
+    assert!(snap.pool_peak <= snap.pool_capacity);
+    sched.shutdown();
+    (max_gap, snap)
+}
+
+/// Head-of-line regression: whole-prompt prefill stalls the runner for
+/// a full prefill (>= 96 engine-time units); chunked prefill bounds the
+/// stall at one chunk plus the fused batch width — and the interleave
+/// counters prove the chunk rode along live decode steps.
+#[test]
+fn arrival_delays_runner_by_one_chunk_not_a_full_prefill() {
+    const CHUNK: usize = 16;
+    let (whole_max, whole_snap) = runner_gaps(None);
+    assert!(
+        whole_max >= 96,
+        "whole-prompt arrival must stall the runner for a full prefill (gap {whole_max})"
+    );
+    assert_eq!(whole_snap.prefill_chunks, 0, "no chunk lane when disabled");
+
+    let (chunked_max, chunked_snap) = runner_gaps(Some(CHUNK));
+    assert!(
+        chunked_max <= (CHUNK + 2) as u64,
+        "runner delayed by more than one chunk + batch width: {chunked_max}"
+    );
+    assert!(chunked_max < whole_max);
+    assert!(
+        chunked_snap.prefill_chunks >= (96 / CHUNK) as u64,
+        "arrival must prefill chunk by chunk ({} chunks)",
+        chunked_snap.prefill_chunks
+    );
+    assert!(
+        chunked_snap.prefill_interleaved_steps > 0,
+        "chunks must interleave with live decode steps"
+    );
+}
