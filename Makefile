@@ -44,8 +44,10 @@ test: tier1
 # with decode batch size, fused step must beat N single steps, sharing
 # must multiply admission, chunked prefill must keep running-session
 # TPOT strictly below the whole-prompt baseline), and the greps pin the
-# prefix-hit and interleaved-prefill counters nonzero so neither path
-# can silently regress (always-miss sharing / whole-prompt prefill).
+# prefix-hit, interleaved-prefill, fused-execute, and prefix-alias
+# counters nonzero so none of those paths can silently regress
+# (always-miss sharing / whole-prompt prefill / per-member decode
+# executes / attach-by-memcpy).
 # (No pipe here: a pipe would discard the bench's own exit status under
 # POSIX sh; capture to a file so both the bench result and the grep gate
 # propagate.)
@@ -53,7 +55,10 @@ bench-smoke:
 	THINKV_BENCH_REAL=0 $(CARGO) bench --bench bench_scheduler > bench_smoke.out 2>&1; \
 	status=$$?; cat bench_smoke.out; \
 	[ $$status -eq 0 ] && grep -Eq "^prefix_hits=[1-9][0-9]*$$" bench_smoke.out \
-	  && grep -Eq "^prefill_interleaved=[1-9][0-9]*$$" bench_smoke.out; \
+	  && grep -Eq "^prefill_interleaved=[1-9][0-9]*$$" bench_smoke.out \
+	  && grep -Eq "^fused_executes=[1-9][0-9]*$$" bench_smoke.out \
+	  && grep -Eq "^prefix_alias_hits=[1-9][0-9]*$$" bench_smoke.out \
+	  && grep -q "skipping real-coordinator" bench_smoke.out; \
 	status=$$?; rm -f bench_smoke.out; exit $$status
 
 artifacts:

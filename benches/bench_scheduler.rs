@@ -211,6 +211,7 @@ fn main() {
     };
     assert!(resident > 0 && delta < est, "sharing must shrink admission");
     let mut total_hits = 0u64;
+    let mut total_alias = 0u64;
     for sharers in [2usize, 6, 12] {
         let pool_bytes = (est + resident).max(resident + sharers as u64 * delta) + 4096;
         // shared: publisher first, then N sharers admitted concurrently
@@ -253,6 +254,15 @@ fn main() {
         assert!(snap.pool_peak <= snap.pool_capacity, "pool overflow");
         assert!(snap.prefix_hits as usize >= sharers, "sharers must hit the trie");
         total_hits += snap.prefix_hits;
+        // every attach must be the zero-copy alias (block tables pointed
+        // at the one resident payload), never the PR-4 attach memcpy
+        assert!(
+            snap.prefix_alias_hits >= snap.prefix_hits,
+            "attaches must alias, not copy ({} alias vs {} hits)",
+            snap.prefix_alias_hits,
+            snap.prefix_hits
+        );
+        total_alias += snap.prefix_alias_hits;
         // unshared: the same pool admits far fewer up front
         let pool2 = Arc::new(BlockPool::new(pool_bytes));
         let sched2 = Scheduler::new(Arc::clone(&pool2));
@@ -280,9 +290,12 @@ fn main() {
         sched.shutdown();
     }
     t6.print();
-    // machine-greppable gate: CI asserts the sharing path actually hit
+    // machine-greppable gates: CI asserts the sharing path actually hit
+    // and that every hit attached by aliasing (zero-copy)
     println!("prefix_hits={total_hits}");
     assert!(total_hits > 0, "shared-prefix sweep must record hits");
+    println!("prefix_alias_hits={total_alias}");
+    assert!(total_alias > 0, "shared-prefix sweep must alias, not memcpy");
 
     // Part 6: arrival-burst sweep — stall-free chunked prefill. A
     // running session decodes while a burst of long prompts arrives;
@@ -364,9 +377,29 @@ fn main() {
         (mean, max, snap)
     };
     let mut total_interleaved = 0u64;
+    let mut total_fused_execs = 0u64;
     for burst in [2usize, 6] {
         let (whole_mean, whole_max, whole_snap) = run_burst(None, burst);
         let (ck_mean, ck_max, ck_snap) = run_burst(Some(BURST_CHUNK), burst);
+        // the engine ledger must show one decode execute per fused step
+        // (the metered fake mirrors the batched-artifact engine), never
+        // one per member
+        for snap in [&whole_snap, &ck_snap] {
+            assert!(
+                snap.pjrt_decode_executes >= snap.fused_steps,
+                "ledger lost fused steps ({} execs vs {} steps)",
+                snap.pjrt_decode_executes,
+                snap.fused_steps
+            );
+            assert!(
+                snap.pjrt_decode_executes < snap.fused_sessions.max(snap.fused_steps + 1),
+                "per-member executes leaked into the fused ledger \
+                 ({} execs vs {} session-steps)",
+                snap.pjrt_decode_executes,
+                snap.fused_sessions
+            );
+            total_fused_execs += snap.pjrt_decode_executes;
+        }
         // acceptance: whole-prompt prefill stalls the runner for at
         // least one full prompt; chunked delays it by at most one
         // chunk per step (plus its decode batch-mates), and both TPOT
@@ -411,6 +444,11 @@ fn main() {
     // whole-prompt
     println!("prefill_interleaved={total_interleaved}");
     assert!(total_interleaved > 0, "arrival-burst sweep must interleave");
+    // machine-greppable gate: the fused-execute ledger recorded real
+    // decode executes, one per fused step (artifact-free via the
+    // metered engine's mirrored ledger)
+    println!("fused_executes={total_fused_execs}");
+    assert!(total_fused_execs > 0, "burst sweep must record fused executes");
 
     // Part 7: real coordinator oversubscription mini-run (CPU PJRT),
     // recompute preemption vs suspend-to-host swap
@@ -487,6 +525,159 @@ fn main() {
         }
         t5.print();
         j.set("real_oversubscription", t5.to_json());
+
+        // Part 8: measured launch amortization (CPU PJRT). Time the
+        // real batched-decode artifacts across compiled widths plus the
+        // single-lane artifact, verify the ledger (exactly one PJRT
+        // execute per fused call, zero fallback), extract the
+        // per-execute launch intercept from the measured sweep, and
+        // re-anchor the analytic ServingCost terms against measured
+        // numbers — then re-validate every analytically-priced
+        // assertion under the measured anchors.
+        use thinkv::kvcache::{CacheConfig, CtCache};
+        use thinkv::runtime::{BatchDecodeReq, CacheView, DecodeEngine, Engine};
+        let eng = Engine::new().unwrap();
+        let m = eng.model().clone();
+        let p = m.prefill_len;
+        let prompt: Vec<i32> = (0..p as i32).map(|i| (i * 11) % m.vocab as i32).collect();
+        let pf = eng.prefill(&prompt).unwrap();
+        let cap = *eng.manifest.quant_caps.iter().min().expect("quant cap");
+        let mut widths = eng.manifest.batch_widths.clone();
+        widths.sort_unstable();
+        let max_w = *widths.last().expect("batched artifacts compiled");
+        let caches: Vec<CtCache> = (0..max_w)
+            .map(|_| {
+                let mut c = CtCache::new(CacheConfig {
+                    layers: m.n_layers,
+                    capacity: cap,
+                    block_size: 8,
+                    hkv: m.n_kv_heads,
+                    dh: m.d_head,
+                    buf_slots: m.buf_slots,
+                });
+                c.write_prefill(&pf.k, &pf.v, p, thinkv::quant::Precision::Fp8);
+                c
+            })
+            .collect();
+        let reps = 10u32;
+        let mut t8 = Table::new(
+            "Measured fused executes (CPU PJRT): batched artifact vs N single executes",
+            &["batch", "fused_us", "n_singles_us", "speedup"],
+        );
+        // single-lane baseline (the per-member fallback cost)
+        let single_us = {
+            let view = caches[0].view();
+            for _ in 0..3 {
+                eng.decode_quant(17, p as i32, 0, &view).unwrap();
+            }
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                eng.decode_quant(17, p as i32, 0, &view).unwrap();
+            }
+            t0.elapsed().as_secs_f64() * 1e6 / reps as f64
+        };
+        let mut points: Vec<(usize, f64)> = Vec::new();
+        for &b in &widths {
+            let reqs: Vec<BatchDecodeReq> = caches[..b]
+                .iter()
+                .map(|c| BatchDecodeReq {
+                    token: 17,
+                    pos: p as i32,
+                    buf_idx: 0,
+                    view: CacheView::Quant(c.view()),
+                })
+                .collect();
+            for _ in 0..3 {
+                eng.decode_batch(&reqs).unwrap();
+            }
+            let es0 = eng.exec_stats();
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                eng.decode_batch(&reqs).unwrap();
+            }
+            let fused_us = t0.elapsed().as_secs_f64() * 1e6 / reps as f64;
+            let es1 = eng.exec_stats();
+            // acceptance: exactly 1 PJRT execute per fused step when a
+            // compiled width covers the batch, and no counted fallback
+            assert_eq!(
+                es1.decode_executes - es0.decode_executes,
+                reps as u64,
+                "width {b}: fused step must issue exactly 1 PJRT execute"
+            );
+            assert_eq!(
+                es1.fallback_executes, es0.fallback_executes,
+                "width {b}: compiled width must not fall back"
+            );
+            // acceptance: measured (not analytic) amortization — one
+            // fused execute beats N single executes from batch 4 on
+            if b >= 4 {
+                assert!(
+                    fused_us < b as f64 * single_us,
+                    "measured fused {fused_us:.0} us must beat {b} x single {single_us:.0} us"
+                );
+            }
+            t8.row(&[
+                format!("{b}"),
+                format!("{fused_us:.0}"),
+                format!("{:.0}", b as f64 * single_us),
+                format!("{:.2}x", b as f64 * single_us / fused_us.max(1e-9)),
+            ]);
+            points.push((b, fused_us));
+        }
+        t8.print();
+        // re-anchor the analytic model: launch intercept from the
+        // measured width sweep, host link from a measured host memcpy
+        let intercept = ServingCost::launch_intercept_us(&points).unwrap_or(0.0);
+        let launch_per_layer = intercept / m.n_layers as f64;
+        let copy_bytes = 32usize << 20;
+        let src = vec![1u8; copy_bytes];
+        let t0 = std::time::Instant::now();
+        let dst = src.clone();
+        let link_gbps = copy_bytes as f64 / t0.elapsed().as_secs_f64().max(1e-9) / 1e9;
+        assert_eq!(dst[copy_bytes - 1], 1);
+        let mut mcost = cost.clone();
+        mcost.reanchor(launch_per_layer, link_gbps);
+        println!(
+            "reanchored: single={single_us:.0} us, launch_intercept={intercept:.1} us \
+             ({launch_per_layer:.2} us/layer), host_link={link_gbps:.1} GB/s"
+        );
+        // every analytically-priced assertion re-validated under the
+        // measured anchors (not the datasheet guesses)
+        let kv = model.kv_bytes_per_token(3.4) * 1024.0;
+        let single_step = mcost.decode_step(1, kv, 0.0, false, 0.0);
+        let mut last = 0.0;
+        for batch in [1usize, 2, 4, 8, 16, 32] {
+            let fused = mcost.decode_step(batch, kv, 0.0, false, 0.0);
+            let per = mcost.decode_step_per_session(batch, kv, 0.0, false, 0.0);
+            assert!(fused.total_us() <= per.total_us(), "fused must not exceed per-session");
+            if batch >= 4 {
+                assert!(
+                    fused.total_us() < batch as f64 * single_step.total_us(),
+                    "reanchored fused step must amortize at batch {batch}"
+                );
+            }
+            let tput = mcost.throughput_tok_s(batch, &fused);
+            assert!(tput > last, "reanchored throughput must rise with batch {batch}");
+            last = tput;
+        }
+        let snap_bytes = model.kv_bytes_per_token(3.4) * 1024.0;
+        assert!(
+            mcost.swap_roundtrip_ms(snap_bytes) * 100.0
+                < mcost.recompute_ms(32, snap_bytes, 8_192),
+            "swap must still beat recompute under the measured host link"
+        );
+        let mut jm = thinkv::util::json::Json::obj();
+        jm.set("single_us", thinkv::util::json::Json::Num(single_us));
+        jm.set("launch_intercept_us", thinkv::util::json::Json::Num(intercept));
+        jm.set("host_link_gbps", thinkv::util::json::Json::Num(link_gbps));
+        j.set("measured_amortization", jm);
+    } else {
+        // explicit skip, never silent: CI greps this line on
+        // artifact-free runners so the lane's absence is visible
+        println!(
+            "skipping real-coordinator + measured-execute lanes: artifacts missing \
+             (run `make artifacts`) or THINKV_BENCH_REAL=0"
+        );
     }
     write_results("scheduler_saturation", j);
     println!("\nExpected shape: FullKV admits ~13 requests on A100 while ThinKV admits\nhundreds; past saturation the scheduler queues instead of overflowing, and\nthe real run completes every request with pool.peak() <= capacity. In the\nswap-vs-recompute sweep ThinKV's suspend-to-host round trip is orders of\nmagnitude cheaper than replaying the CoT (and the real swap run finishes\nwith zero replayed steps), while FullKV must move GBs per preemption. The\nlaunch-amortization sweep shows fused-step throughput rising with decode\nbatch size: one fused call per step beats N per-session launches (the\nTables 2/3 large-batch regime). The prefix-sharing sweep shows a pool\nsized for one resident system prompt plus N deltas admitting all N\nsharers concurrently while full-prefix admission fits only a fraction.\nThe arrival-burst sweep shows running-session TPOT staying flat under\nchunked prefill (max gap = one chunk + batch width) where whole-prompt\nprefill stalls it for a full prefill per arrival.");

@@ -3,8 +3,11 @@
 Run once via `make artifacts`.  Emits into `artifacts/`:
 
   prefill_p64.hlo.txt          prompt prefill (P=64)
+  prefill_chunk_p64_n{8,16,32}.hlo.txt    one prompt chunk, full-width view
   decode_quant_c{512,1024,2048}.hlo.txt   ThinKV decode step (fused kernel)
   decode_fp32_c{1024,2048,4096}.hlo.txt   FullKV/eviction-baseline decode step
+  decode_quant_c{C}_b{1,2,4,8}.hlo.txt    fused multi-request decode (block
+  decode_fp32_c{C}_b{1,2,4,8}.hlo.txt       tables over one shared arena)
   attn_micro_c1024.hlo.txt     standalone fused attention (Rust microbench)
   weights.bin                  seeded model weights (TKVW format)
   model_config.json            dims + artifact + weight-order manifest
@@ -36,6 +39,11 @@ from compile.kernels import ref as R
 
 QUANT_CAPS = [512, 1024, 2048]
 FP32_CAPS = [1024, 2048, 4096]
+# Fused multi-request decode: compiled batch widths (ragged batches pad up
+# to the smallest covering width; the member mask zeroes pad lanes).
+BATCH_WIDTHS = [1, 2, 4, 8]
+# Chunked prefill: compiled chunk lengths (all divide prefill_len).
+PREFILL_CHUNK_LENS = [8, 16, 32]
 MICRO_C = 1024
 GOLDEN_ATTN_C = 128
 
@@ -168,6 +176,36 @@ def lower_all(outdir: str, cfg: M.ModelConfig, verbose: bool = True):
              sh["k_cache"], sh["v_cache"], sh["mask"],
              sh["buf_k"], sh["buf_v"], sh["buf_mask"])
 
+    # Fused multi-request decode: one execute per fused step.  Every
+    # (capacity, batch-width) pair of both families, so the engine can
+    # pick the smallest compiled width covering any runnable batch.
+    for c in QUANT_CAPS:
+        for b in BATCH_WIDTHS:
+            sh = M.decode_quant_batch_shapes(cfg, c, b)
+            emit(f"decode_quant_c{c}_b{b}",
+                 functools.partial(M.decode_step_quant_batch, cfg),
+                 ws, sh["token"], sh["pos"], sh["buf_idx"],
+                 sh["member"], sh["block_tables"],
+                 sh["k_codes"], sh["k_scales"], sh["v_codes"], sh["v_scales"],
+                 sh["tags"], sh["mask"], sh["buf_k"], sh["buf_v"], sh["buf_mask"])
+    for c in FP32_CAPS:
+        for b in BATCH_WIDTHS:
+            sh = M.decode_fp32_batch_shapes(cfg, c, b)
+            emit(f"decode_fp32_c{c}_b{b}",
+                 functools.partial(M.decode_step_fp32_batch, cfg),
+                 ws, sh["token"], sh["pos"], sh["buf_idx"],
+                 sh["member"], sh["block_tables"],
+                 sh["k_cache"], sh["v_cache"], sh["mask"],
+                 sh["buf_k"], sh["buf_v"], sh["buf_mask"])
+
+    # Chunked prefill: one execute per prompt chunk, full-width K/V view
+    # so chunked composition is bit-identical to the whole-prompt module.
+    for n in PREFILL_CHUNK_LENS:
+        sh = M.prefill_chunk_shapes(cfg, n)
+        emit(f"prefill_chunk_p{cfg.prefill_len}_n{n}",
+             functools.partial(M.prefill_chunk, cfg),
+             ws, sh["tokens"], sh["start"], sh["past_k"], sh["past_v"])
+
     # Standalone fused attention microbench
     from compile.kernels import paged_attn as PA
     H, Hkv, D, G, B = (cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.groups,
@@ -211,6 +249,8 @@ def main() -> None:
             "obs_window": cfg.obs_window, "group_size": F.GROUP_SIZE,
         },
         "capacities": {"quant": QUANT_CAPS, "fp32": FP32_CAPS},
+        "batch_widths": BATCH_WIDTHS,
+        "prefill_chunk_lens": PREFILL_CHUNK_LENS,
         "micro_c": MICRO_C,
         "golden_attn_c": GOLDEN_ATTN_C,
         "artifacts": artifacts,

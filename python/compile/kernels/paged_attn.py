@@ -214,6 +214,23 @@ def fused_paged_attention(q, k_codes, k_scales, v_codes, v_scales, tags, mask,
     return merge_buffer(parts, q, buf_k, buf_v, buf_mask)
 
 
+def gather_block_rows(arena, table):
+    """Per-layer block-table gather over a shared physical cache arena.
+
+    The multi-request decode artifacts (ThinKV §kernel: PagedAttention
+    extended with per-request block tables) stack B requests over ONE
+    physical arena: `arena` is `(L, A, ...)` with every request's slots —
+    and any shared prompt prefix exactly once — laid out along A, and
+    `table` is `(L, C)` int32 arena-row indices for one request. Rows a
+    request does not own are simply never indexed, which is what lets N
+    requests alias one resident copy of a shared system prompt.
+
+    Returns `(L, C, ...)` — the request-local cache view the single-request
+    attention kernel consumes unchanged (slot order is arbitrary, Theorem 1).
+    """
+    return jax.vmap(lambda rows, idx: jnp.take(rows, idx, axis=0))(arena, table)
+
+
 def paged_attention_fp32(q, k, v, mask, buf_k, buf_v, buf_mask, *, block: int = 128):
     """FullKV / eviction-baseline path: f32 paged region + fp ring buffer."""
     parts = paged_attention_fp32_parts(q, k, v, mask, block=block)

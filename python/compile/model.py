@@ -112,18 +112,17 @@ def _mlp(x, w1, w2):
     return jax.nn.gelu(x @ w1) @ w2
 
 
-def decode_step_quant(cfg: ModelConfig, weights, token, pos, buf_idx,
-                      k_codes, k_scales, v_codes, v_scales, tags, mask,
-                      buf_k, buf_v, buf_mask):
-    """One decode step over the quantized paged cache (the ThinKV hot path).
+def _decode_body_quant(cfg: ModelConfig, parts, tok, p, bidx,
+                       k_codes, k_scales, v_codes, v_scales, tags, mask,
+                       buf_k, buf_v, buf_mask):
+    """One request's decode step over a request-local quantized cache view.
 
-    Returns (logits (V,), new_k (L,Hkv,Dh) post-RoPE, new_v (L,Hkv,Dh),
-    probs (L,H,C+BUF)).  The caller (Rust) quantizes new_k/new_v by the
-    active thought type and writes them into slots chosen by CT.
+    Shared verbatim by the single-request artifact and every lane of the
+    batched artifacts, so a fused batch is numerically the same program
+    per member as B single executes (stream invariance).
     """
-    embed, layers, lnf, lm_head = _unpack_weights(cfg, weights)
-    x = embed[token[0]]
-    p = pos[0]
+    embed, layers, lnf, lm_head = parts
+    x = embed[tok]
     new_ks, new_vs, prob_rows = [], [], []
     for l, (ln1, wq, wk, wv, wo, ln2, w1, w2) in enumerate(layers):
         h = rmsnorm(x, ln1, cfg.eps)
@@ -131,9 +130,9 @@ def decode_step_quant(cfg: ModelConfig, weights, token, pos, buf_idx,
         k = rope((h @ wk).reshape(cfg.n_kv_heads, cfg.d_head), p, cfg.rope_base)
         v = (h @ wv).reshape(cfg.n_kv_heads, cfg.d_head)
         # Current token enters the fp ring buffer at buf_idx.
-        bk = jax.lax.dynamic_update_slice(buf_k[l], k[None], (buf_idx[0], 0, 0))
-        bv = jax.lax.dynamic_update_slice(buf_v[l], v[None], (buf_idx[0], 0, 0))
-        bm = buf_mask[l].at[buf_idx[0]].set(1.0)
+        bk = jax.lax.dynamic_update_slice(buf_k[l], k[None], (bidx, 0, 0))
+        bv = jax.lax.dynamic_update_slice(buf_v[l], v[None], (bidx, 0, 0))
+        bm = buf_mask[l].at[bidx].set(1.0)
         attn, probs = PA.fused_paged_attention(
             q, k_codes[l], k_scales[l], v_codes[l], v_scales[l],
             tags[l], mask[l], bk, bv, bm)
@@ -146,21 +145,20 @@ def decode_step_quant(cfg: ModelConfig, weights, token, pos, buf_idx,
     return logits, jnp.stack(new_ks), jnp.stack(new_vs), jnp.stack(prob_rows)
 
 
-def decode_step_fp32(cfg: ModelConfig, weights, token, pos, buf_idx,
-                     k_cache, v_cache, mask, buf_k, buf_v, buf_mask):
-    """FullKV / eviction-only baselines: f32 paged cache, same structure."""
-    embed, layers, lnf, lm_head = _unpack_weights(cfg, weights)
-    x = embed[token[0]]
-    p = pos[0]
+def _decode_body_fp32(cfg: ModelConfig, parts, tok, p, bidx,
+                      k_cache, v_cache, mask, buf_k, buf_v, buf_mask):
+    """One request's decode step over a request-local f32 cache view."""
+    embed, layers, lnf, lm_head = parts
+    x = embed[tok]
     new_ks, new_vs, prob_rows = [], [], []
     for l, (ln1, wq, wk, wv, wo, ln2, w1, w2) in enumerate(layers):
         h = rmsnorm(x, ln1, cfg.eps)
         q = rope((h @ wq).reshape(cfg.n_heads, cfg.d_head), p, cfg.rope_base)
         k = rope((h @ wk).reshape(cfg.n_kv_heads, cfg.d_head), p, cfg.rope_base)
         v = (h @ wv).reshape(cfg.n_kv_heads, cfg.d_head)
-        bk = jax.lax.dynamic_update_slice(buf_k[l], k[None], (buf_idx[0], 0, 0))
-        bv = jax.lax.dynamic_update_slice(buf_v[l], v[None], (buf_idx[0], 0, 0))
-        bm = buf_mask[l].at[buf_idx[0]].set(1.0)
+        bk = jax.lax.dynamic_update_slice(buf_k[l], k[None], (bidx, 0, 0))
+        bv = jax.lax.dynamic_update_slice(buf_v[l], v[None], (bidx, 0, 0))
+        bm = buf_mask[l].at[bidx].set(1.0)
         attn, probs = PA.paged_attention_fp32(
             q, k_cache[l], v_cache[l], mask[l], bk, bv, bm)
         x = x + attn.reshape(-1) @ wo
@@ -170,6 +168,149 @@ def decode_step_fp32(cfg: ModelConfig, weights, token, pos, buf_idx,
         prob_rows.append(probs)
     logits = rmsnorm(x, lnf, cfg.eps) @ lm_head
     return logits, jnp.stack(new_ks), jnp.stack(new_vs), jnp.stack(prob_rows)
+
+
+def decode_step_quant(cfg: ModelConfig, weights, token, pos, buf_idx,
+                      k_codes, k_scales, v_codes, v_scales, tags, mask,
+                      buf_k, buf_v, buf_mask):
+    """One decode step over the quantized paged cache (the ThinKV hot path).
+
+    Returns (logits (V,), new_k (L,Hkv,Dh) post-RoPE, new_v (L,Hkv,Dh),
+    probs (L,H,C+BUF)).  The caller (Rust) quantizes new_k/new_v by the
+    active thought type and writes them into slots chosen by CT.
+    """
+    parts = _unpack_weights(cfg, weights)
+    return _decode_body_quant(cfg, parts, token[0], pos[0], buf_idx[0],
+                              k_codes, k_scales, v_codes, v_scales, tags, mask,
+                              buf_k, buf_v, buf_mask)
+
+
+def decode_step_fp32(cfg: ModelConfig, weights, token, pos, buf_idx,
+                     k_cache, v_cache, mask, buf_k, buf_v, buf_mask):
+    """FullKV / eviction-only baselines: f32 paged cache, same structure."""
+    parts = _unpack_weights(cfg, weights)
+    return _decode_body_fp32(cfg, parts, token[0], pos[0], buf_idx[0],
+                             k_cache, v_cache, mask, buf_k, buf_v, buf_mask)
+
+
+def decode_step_quant_batch(cfg: ModelConfig, weights, token, pos, buf_idx,
+                            member, block_tables,
+                            k_codes, k_scales, v_codes, v_scales, tags, mask,
+                            buf_k, buf_v, buf_mask):
+    """Fused multi-request decode: B stacked requests, ONE module execute.
+
+    The paper's extended-PagedAttention shape (§kernel): per-request block
+    tables gather each lane's cache view out of one shared physical arena,
+    so heterogeneous sessions — including sessions aliasing one resident
+    copy of a shared system-prompt prefix — advance in a single launch.
+
+      token/pos/buf_idx (B,) i32     per-lane decode scalars
+      member (B,) f32                1 = live lane, 0 = ragged-batch padding
+      block_tables (B, L, C) i32     arena row index per lane/layer/slot
+      k_codes (L, A, Hkv, Dh) u8     shared payload arena, A = B*C +
+      k_scales (L, A, Hkv, G) f32      prefill_len (one extra prefix
+                                       segment); v_* alike
+      tags (B, L, C) u8              per-lane slot metadata: tags and the
+      mask (B, L, C) f32               CT eviction mask diverge per
+                                       session even over aliased payload
+      buf_k/buf_v (B, L, BUF, Hkv, Dh) f32, buf_mask (B, L, BUF) f32
+
+    Returns the stacked single-request outputs — logits (B,V),
+    new_k/new_v (B,L,Hkv,Dh), probs (B,L,H,C+BUF) — with padded lanes
+    zeroed by `member`.  Each live lane runs `_decode_body_quant`
+    verbatim on its gathered view, so a fused step is numerically
+    identical to B single-request executes (stream invariance).
+    """
+    parts = _unpack_weights(cfg, weights)
+    bw = token.shape[0]
+    outs = []
+    for b in range(bw):
+        bt = block_tables[b]  # (L, C)
+        o = _decode_body_quant(
+            cfg, parts, token[b], pos[b], buf_idx[b],
+            PA.gather_block_rows(k_codes, bt), PA.gather_block_rows(k_scales, bt),
+            PA.gather_block_rows(v_codes, bt), PA.gather_block_rows(v_scales, bt),
+            tags[b], mask[b],
+            buf_k[b], buf_v[b], buf_mask[b])
+        outs.append(tuple(member[b] * t for t in o))
+    return tuple(jnp.stack([o[i] for o in outs]) for i in range(4))
+
+
+def decode_step_fp32_batch(cfg: ModelConfig, weights, token, pos, buf_idx,
+                           member, block_tables,
+                           k_cache, v_cache, mask, buf_k, buf_v, buf_mask):
+    """Fused multi-request decode over the f32 arena (FullKV / eviction
+    baselines) — same block-table gather contract as
+    `decode_step_quant_batch`."""
+    parts = _unpack_weights(cfg, weights)
+    bw = token.shape[0]
+    outs = []
+    for b in range(bw):
+        bt = block_tables[b]
+        o = _decode_body_fp32(
+            cfg, parts, token[b], pos[b], buf_idx[b],
+            PA.gather_block_rows(k_cache, bt), PA.gather_block_rows(v_cache, bt),
+            mask[b],
+            buf_k[b], buf_v[b], buf_mask[b])
+        outs.append(tuple(member[b] * t for t in o))
+    return tuple(jnp.stack([o[i] for o in outs]) for i in range(4))
+
+
+def prefill_chunk(cfg: ModelConfig, weights, tokens, start, past_k, past_v):
+    """One prompt chunk (N tokens) attended against the full prefill view.
+
+    Chunked prefill as ONE artifact execute per chunk: `tokens` is the
+    prompt slice for positions `start .. start+N`, and `past_k`/`past_v`
+    are the exact post-RoPE K/V rows produced by earlier chunks (rows at
+    or past `start` are ignored — this chunk's own K/V overwrite them at
+    their true positions).  Scores keep the full `(H, N, P)` width of the
+    whole-prompt prefill with the same causal mask per global row, so
+    every per-row reduction has the shape and operand values of the
+    corresponding row in [`prefill`] — chunked composition is
+    structurally bit-identical to one whole-prompt execute.
+
+    Returns (logits (V,) from the chunk's last row — meaningful only on
+    the final chunk, k (L,N,Hkv,Dh) post-RoPE, v (L,N,Hkv,Dh),
+    obs (L,N) zeros — the SnapKV statistic needs the last `obs_window`
+    global queries, so obs-consuming modes take the whole-prompt path).
+    """
+    embed, layers, lnf, lm_head = _unpack_weights(cfg, weights)
+    P = cfg.prefill_len
+    N = tokens.shape[0]
+    s0 = start[0]
+    x = embed[tokens]                                    # (N, Dm)
+    positions = s0 + jnp.arange(N)
+    cols = jnp.arange(P)
+    causal = (cols[None, :] <= positions[:, None]).astype(jnp.float32)  # (N, P)
+    rep = cfg.n_heads // cfg.n_kv_heads
+    ks, vs = [], []
+    for l, (ln1, wq, wk, wv, wo, ln2, w1, w2) in enumerate(layers):
+        h = rmsnorm(x, ln1, cfg.eps)
+        q = rope((h @ wq).reshape(N, cfg.n_heads, cfg.d_head).transpose(1, 0, 2),
+                 positions[None, :], cfg.rope_base)      # (H, N, Dh)
+        k = rope((h @ wk).reshape(N, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2),
+                 positions[None, :], cfg.rope_base)      # (Hkv, N, Dh)
+        v = (h @ wv).reshape(N, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+        # Full-width K/V: exact past rows, this chunk spliced at its true
+        # positions, future rows masked off by `causal` anyway.
+        kf = jax.lax.dynamic_update_slice(
+            past_k[l].transpose(1, 0, 2), k, (0, s0, 0))  # (Hkv, P, Dh)
+        vf = jax.lax.dynamic_update_slice(
+            past_v[l].transpose(1, 0, 2), v, (0, s0, 0))
+        kx = jnp.repeat(kf, rep, axis=0)                 # (H, P, Dh)
+        vx = jnp.repeat(vf, rep, axis=0)
+        s = jnp.einsum("hqd,hkd->hqk", q, kx) / jnp.sqrt(jnp.float32(cfg.d_head))
+        s = jnp.where(causal[None] > 0, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)                   # (H, N, P)
+        attn = jnp.einsum("hqk,hkd->hqd", p, vx)
+        attn = attn.transpose(1, 0, 2).reshape(N, -1)
+        x = x + attn @ wo
+        x = x + _mlp(rmsnorm(x, ln2, cfg.eps), w1, w2)
+        ks.append(k.transpose(1, 0, 2))                  # (N, Hkv, Dh)
+        vs.append(v.transpose(1, 0, 2))
+    logits = rmsnorm(x[-1], lnf, cfg.eps) @ lm_head
+    obs = jnp.zeros((cfg.n_layers, N), jnp.float32)
+    return logits, jnp.stack(ks), jnp.stack(vs), obs
 
 
 def prefill(cfg: ModelConfig, weights, tokens):
@@ -225,6 +366,55 @@ def decode_quant_shapes(cfg: ModelConfig, capacity: int):
         tags=S((L, C), u8), mask=S((L, C), f32),
         buf_k=S((L, B, Hkv, Dh), f32), buf_v=S((L, B, Hkv, Dh), f32),
         buf_mask=S((L, B), f32),
+    )
+
+
+def decode_quant_batch_shapes(cfg: ModelConfig, capacity: int, bw: int):
+    """Batched-artifact input shapes: B stacked requests over one arena.
+
+    The arena carries `bw` request-private segments of `capacity` slots
+    plus one `prefill_len` segment for a shared prompt prefix aliased by
+    any subset of the lanes (rows are only reachable through block
+    tables, so unshared batches simply never index the extra segment).
+    """
+    L, C, Hkv, Dh, G, B = (cfg.n_layers, capacity, cfg.n_kv_heads,
+                           cfg.d_head, cfg.groups, cfg.buf_slots)
+    A = bw * capacity + cfg.prefill_len
+    f32, u8, i32 = jnp.float32, jnp.uint8, jnp.int32
+    S = jax.ShapeDtypeStruct
+    return dict(
+        token=S((bw,), i32), pos=S((bw,), i32), buf_idx=S((bw,), i32),
+        member=S((bw,), f32), block_tables=S((bw, L, C), i32),
+        k_codes=S((L, A, Hkv, Dh), u8), k_scales=S((L, A, Hkv, G), f32),
+        v_codes=S((L, A, Hkv, Dh), u8), v_scales=S((L, A, Hkv, G), f32),
+        tags=S((bw, L, C), u8), mask=S((bw, L, C), f32),
+        buf_k=S((bw, L, B, Hkv, Dh), f32), buf_v=S((bw, L, B, Hkv, Dh), f32),
+        buf_mask=S((bw, L, B), f32),
+    )
+
+
+def decode_fp32_batch_shapes(cfg: ModelConfig, capacity: int, bw: int):
+    L, C, Hkv, Dh, B = cfg.n_layers, capacity, cfg.n_kv_heads, cfg.d_head, cfg.buf_slots
+    A = bw * capacity + cfg.prefill_len
+    f32, i32 = jnp.float32, jnp.int32
+    S = jax.ShapeDtypeStruct
+    return dict(
+        token=S((bw,), i32), pos=S((bw,), i32), buf_idx=S((bw,), i32),
+        member=S((bw,), f32), block_tables=S((bw, L, C), i32),
+        k_cache=S((L, A, Hkv, Dh), f32), v_cache=S((L, A, Hkv, Dh), f32),
+        mask=S((bw, L, C), f32),
+        buf_k=S((bw, L, B, Hkv, Dh), f32), buf_v=S((bw, L, B, Hkv, Dh), f32),
+        buf_mask=S((bw, L, B), f32),
+    )
+
+
+def prefill_chunk_shapes(cfg: ModelConfig, n: int):
+    L, P, Hkv, Dh = cfg.n_layers, cfg.prefill_len, cfg.n_kv_heads, cfg.d_head
+    f32, i32 = jnp.float32, jnp.int32
+    S = jax.ShapeDtypeStruct
+    return dict(
+        tokens=S((n,), i32), start=S((1,), i32),
+        past_k=S((L, P, Hkv, Dh), f32), past_v=S((L, P, Hkv, Dh), f32),
     )
 
 

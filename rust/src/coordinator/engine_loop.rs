@@ -382,9 +382,14 @@ pub fn advance_batch(
 ) {
     let prefill_chunk = scheduler.prefill_chunk_tokens();
     let mut members = batch;
+    // bracket the whole chunk with the engine's PJRT ledger: every
+    // execute this worker causes (fused decode, fallback members,
+    // prefill chunks inside begin_step/advance_prefill) lands in the
+    // scheduler's global counters exactly once
+    let es0 = engine.exec_stats();
     for _ in 0..chunk.max(1) {
         if members.is_empty() {
-            return;
+            break;
         }
         // phase 1: prepare every member for the fused call
         let mut preps: Vec<Option<(i32, i32, i32)>> = Vec::with_capacity(members.len());
@@ -531,6 +536,7 @@ pub fn advance_batch(
             dispatch(scheduler, item, end);
         }
     }
+    scheduler.note_exec_stats(es0, engine.exec_stats());
     // chunk exhausted: everyone still running yields
     for item in members {
         dispatch(scheduler, item, ChunkEnd::Yield);

@@ -43,6 +43,8 @@
 //!     },
 //!     quant_caps: vec![128],
 //!     fp32_caps: vec![256],
+//!     batch_widths: vec![],
+//!     prefill_chunk_lens: vec![],
 //!     micro_c: 128,
 //!     golden_attn_c: 128,
 //!     artifacts_dir: ".".into(),

@@ -64,6 +64,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 use crate::kvcache::{BlockPool, PrefixIndex, SwapPool};
 use crate::metrics::SchedSnapshot;
+use crate::runtime::ExecStats;
 
 use super::engine_loop::RequestResult;
 use super::session::Session;
@@ -163,6 +164,17 @@ pub struct Scheduler {
     /// Fused steps that advanced decode members and a prefill chunk in
     /// the same step (the stall-free interleave).
     prefill_interleaved: AtomicU64,
+    /// Actual PJRT decode executes, diffed from the engines' ledgers by
+    /// the workers (fused batch = 1; per-member fallback = 1 each).
+    pjrt_decode_execs: AtomicU64,
+    /// PJRT prefill executes (whole-prompt + per-chunk).
+    pjrt_prefill_execs: AtomicU64,
+    /// Decode executes that took the counted per-member fallback.
+    pjrt_fallback_execs: AtomicU64,
+    /// Engine prefill-memo hits (chunk served with no execute).
+    prefill_memo_hits: AtomicU64,
+    /// Engine prefill-memo / chunk-state LRU evictions.
+    prefill_memo_evicts: AtomicU64,
 }
 
 impl Scheduler {
@@ -212,6 +224,11 @@ impl Scheduler {
             step_token_budget: AtomicUsize::new(0),
             prefill_chunks: AtomicU64::new(0),
             prefill_interleaved: AtomicU64::new(0),
+            pjrt_decode_execs: AtomicU64::new(0),
+            pjrt_prefill_execs: AtomicU64::new(0),
+            pjrt_fallback_execs: AtomicU64::new(0),
+            prefill_memo_hits: AtomicU64::new(0),
+            prefill_memo_evicts: AtomicU64::new(0),
         }
     }
 
@@ -419,6 +436,26 @@ impl Scheduler {
             }
             inner = self.cv.wait(inner).unwrap();
         }
+    }
+
+    /// Fold a worker's engine-ledger delta (before/after one fused step
+    /// or prefill chunk) into the global PJRT-execute counters.
+    /// Saturating per field: worker engines are thread-local, so each
+    /// delta is exact, but a restarted engine must not underflow.
+    pub fn note_exec_stats(&self, before: ExecStats, after: ExecStats) {
+        let d = |a: u64, b: u64| a.saturating_sub(b);
+        self.pjrt_decode_execs
+            .fetch_add(d(after.decode_executes, before.decode_executes), Ordering::SeqCst);
+        self.pjrt_prefill_execs
+            .fetch_add(d(after.prefill_executes, before.prefill_executes), Ordering::SeqCst);
+        self.pjrt_fallback_execs
+            .fetch_add(d(after.fallback_executes, before.fallback_executes), Ordering::SeqCst);
+        self.prefill_memo_hits
+            .fetch_add(d(after.prefill_memo_hits, before.prefill_memo_hits), Ordering::SeqCst);
+        self.prefill_memo_evicts.fetch_add(
+            d(after.prefill_memo_evictions, before.prefill_memo_evictions),
+            Ordering::SeqCst,
+        );
     }
 
     /// Record one fused decode step that advanced `batch` sessions.
@@ -659,6 +696,13 @@ impl Scheduler {
             prefix_reclaims: prefix.reclaims,
             prefix_resident_bytes: prefix.resident_bytes,
             prefix_resident_entries: prefix.resident_entries,
+            prefix_alias_hits: prefix.alias_hits,
+            prefix_alias_bytes: prefix.alias_bytes,
+            pjrt_decode_executes: self.pjrt_decode_execs.load(Ordering::SeqCst),
+            pjrt_prefill_executes: self.pjrt_prefill_execs.load(Ordering::SeqCst),
+            pjrt_fallback_executes: self.pjrt_fallback_execs.load(Ordering::SeqCst),
+            prefill_memo_hits: self.prefill_memo_hits.load(Ordering::SeqCst),
+            prefill_memo_evictions: self.prefill_memo_evicts.load(Ordering::SeqCst),
         }
     }
 }
@@ -689,6 +733,8 @@ mod tests {
             },
             quant_caps: vec![128],
             fp32_caps: vec![256],
+            batch_widths: vec![],
+            prefill_chunk_lens: vec![],
             micro_c: 128,
             golden_attn_c: 128,
             artifacts_dir: ".".into(),

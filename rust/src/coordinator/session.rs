@@ -44,7 +44,7 @@ use crate::kvcache::{
 };
 use crate::metrics::Breakdown;
 use crate::quant::Precision;
-use crate::runtime::{CacheView, DecodeEngine, DecodeOut};
+use crate::runtime::{CacheView, DecodeEngine, DecodeOut, ExecStats};
 use crate::sim::harness::EvictKind;
 use crate::thought::classifier::{Classifier, ClassifierConfig};
 
@@ -724,10 +724,12 @@ impl Session {
         // prompt position): it only fetches the bootstrap logits
         let len = chunk.max(1).min(p_len - start);
         let t0 = std::time::Instant::now();
+        let es0 = engine.exec_stats();
         let out = {
             let backend = self.backend.as_ref().expect("backend built above");
             engine.prefill_chunk(&self.prompt, start, len, &backend.view())?
         };
+        note_exec_delta(&mut self.breakdown, es0, engine.exec_stats());
         self.breakdown.prefill_exec_ns += t0.elapsed().as_nanos() as u64;
         self.breakdown.prefill_chunks += 1;
         let backend = self.backend.as_mut().expect("backend built above");
@@ -878,7 +880,9 @@ impl Session {
             StepPrep::NeedMemory => Ok(StepOutcome::NeedMemory),
             StepPrep::Ready { token, pos, buf_idx } => {
                 let te = std::time::Instant::now();
+                let es0 = engine.exec_stats();
                 let out = engine.decode(token, pos, buf_idx, &self.cache_view())?;
+                note_exec_delta(&mut self.breakdown, es0, engine.exec_stats());
                 self.breakdown.decode_exec_ns += te.elapsed().as_nanos() as u64;
                 self.finish_step(&out, engine)
             }
@@ -909,6 +913,21 @@ impl Session {
         self.prefill = PrefillCursor::Done;
         self.sync_pool();
     }
+}
+
+/// Fold the engine's PJRT-execute ledger delta around one engine call
+/// into this session's breakdown. The engine is worker-thread-local
+/// (`!Sync`), so calls are serialized and the before/after diff is
+/// exact for the bracketed call. Saturating: an engine swapped
+/// mid-session must not underflow the counters.
+fn note_exec_delta(bd: &mut Breakdown, before: ExecStats, after: ExecStats) {
+    bd.pjrt_decode_executes += after.decode_executes.saturating_sub(before.decode_executes);
+    bd.pjrt_prefill_executes += after.prefill_executes.saturating_sub(before.prefill_executes);
+    bd.pjrt_fallback_executes +=
+        after.fallback_executes.saturating_sub(before.fallback_executes);
+    bd.prefill_memo_hits += after.prefill_memo_hits.saturating_sub(before.prefill_memo_hits);
+    bd.prefill_memo_evictions +=
+        after.prefill_memo_evictions.saturating_sub(before.prefill_memo_evictions);
 }
 
 impl Drop for Session {

@@ -317,13 +317,16 @@ impl QuantBackend {
     }
 
     /// First write past the shared boundary: privatize via copy-on-write
-    /// (reserve the prefix bytes, drop the shared ref, lift the
-    /// read-only marker). A denied CoW (pool full) leaves the region
-    /// protected — eviction then works around it. Takes the fields
-    /// directly so callers can hold disjoint borrows of `self`.
+    /// (reserve the prefix bytes, materialize the aliased payload rows
+    /// into this cache's slabs — the only memcpy sharing ever pays, and
+    /// only here — drop the shared ref, lift the read-only marker). A
+    /// denied CoW (pool full) leaves the region protected — eviction
+    /// then works around it. Takes the fields directly so callers can
+    /// hold disjoint borrows of `self`.
     fn cow_privatize(att: &Option<Arc<AttachedPrefix>>, cache: &mut CtCache) {
         if let Some(a) = att {
             if a.is_active() && a.try_privatize() {
+                cache.materialize_shared();
                 cache.clear_shared();
             }
         }
@@ -360,9 +363,14 @@ impl KvBackend for QuantBackend {
 
     fn begin_prefill_shared(&mut self, att: Arc<AttachedPrefix>, p_len: usize) -> Result<usize> {
         let n = att.attach_len().min(p_len);
+        // zero-copy attach: metadata (tags / mask / tables) is written,
+        // but the payload rows stay in the one resident copy — the
+        // engine view carries them and fused decode gathers them via
+        // block tables, so the attach-time memcpy of PR 4 is gone
         self.cache
-            .attach_prefix(att.payload(), n)
+            .attach_prefix_alias(att.shared_arc(), n)
             .map_err(|e| anyhow::anyhow!("prefix attach: {e}"))?;
+        att.note_alias();
         self.att = Some(att);
         Ok(n)
     }
@@ -647,6 +655,7 @@ impl Fp32Backend {
         }
         if let Some(a) = att {
             if a.is_active() && a.try_privatize() {
+                cache.materialize_shared();
                 cache.clear_shared();
                 return evict;
             }
@@ -694,9 +703,12 @@ impl KvBackend for Fp32Backend {
 
     fn begin_prefill_shared(&mut self, att: Arc<AttachedPrefix>, p_len: usize) -> Result<usize> {
         let n = att.attach_len().min(p_len);
+        // zero-copy attach (see the quant twin): rows stay resident,
+        // the view's `shared` field carries them to the engine
         self.cache
-            .attach_prefix(att.payload(), n)
+            .attach_prefix_alias(att.shared_arc(), n)
             .map_err(|e| anyhow::anyhow!("prefix attach: {e}"))?;
+        att.note_alias();
         self.att = Some(att);
         Ok(n)
     }
@@ -759,6 +771,7 @@ impl KvBackend for Fp32Backend {
             buf_k: &self.cache.buf_k,
             buf_v: &self.cache.buf_v,
             buf_mask: &self.cache.buf_mask,
+            shared: self.cache.shared_rows(),
         }
     }
 

@@ -14,10 +14,13 @@
 //!
 //! The `mask` slab the kernel sees is exactly `filled ∧ ¬evicted`.
 
+use std::sync::Arc;
+
 use crate::quant::{dequant_groups, quant_groups, Precision, GROUP_SIZE};
-use crate::runtime::QuantCache;
+use crate::runtime::{QuantCache, SharedQuantRows};
 
 use super::block_table::{LayerTable, SlotId};
+use super::prefix::{PrefixPayload, SharedPrefix};
 use super::Thought;
 
 /// Geometry of a request's cache (from the manifest + serving config).
@@ -149,6 +152,14 @@ pub struct CtCache {
     /// owning backend privatizes the region (copy-on-write) and clears
     /// this marker. 0 = no shared region.
     shared_len: usize,
+    /// When the shared region was attached by **aliasing**
+    /// ([`CtCache::attach_prefix_alias`]): the resident entry whose
+    /// payload physically holds the codes/scales for slots
+    /// `0..shared_len`. The cache's own code/scale slabs are stale
+    /// there until [`CtCache::materialize_shared`] copies them in
+    /// (copy-on-write). Tags/mask/tables are always slab-resident —
+    /// they diverge per session under eviction.
+    shared_src: Option<Arc<SharedPrefix>>,
 }
 
 impl CtCache {
@@ -171,6 +182,7 @@ impl CtCache {
             packed_bits_written: 0.0,
             tokens_written: 0,
             shared_len: 0,
+            shared_src: None,
             cfg,
         }
     }
@@ -192,12 +204,36 @@ impl CtCache {
     }
 
     /// Copy-on-write completed: the region is privately owned now.
+    /// Aliased caches must [`CtCache::materialize_shared`] first — the
+    /// slab rows are stale until then.
     pub fn clear_shared(&mut self) {
+        debug_assert!(
+            self.shared_src.is_none(),
+            "clear_shared before materialize_shared would expose stale slab rows"
+        );
         self.shared_len = 0;
     }
 
-    /// Engine view of the slabs.
+    /// Engine view of the slabs. For an aliased shared region the view
+    /// carries the resident payload rows ([`SharedQuantRows`]) so the
+    /// engine reads — or, batched, gathers from one physical copy —
+    /// the shared codes/scales without them ever being memcpy'd into
+    /// this cache.
     pub fn view(&self) -> QuantCache<'_> {
+        let shared = self.shared_src.as_ref().and_then(|sp| match &sp.payload {
+            PrefixPayload::Quant { full_len, k_codes, k_scales, v_codes, v_scales, .. } => {
+                Some(SharedQuantRows {
+                    id: sp.id(),
+                    len: self.shared_len,
+                    full_len: *full_len,
+                    k_codes,
+                    k_scales,
+                    v_codes,
+                    v_scales,
+                })
+            }
+            PrefixPayload::Fp32 { .. } => None,
+        });
         QuantCache {
             capacity: self.cfg.capacity,
             k_codes: &self.k_codes,
@@ -209,6 +245,7 @@ impl CtCache {
             buf_k: &self.buf_k,
             buf_v: &self.buf_v,
             buf_mask: &self.buf_mask,
+            shared,
         }
     }
 
@@ -327,6 +364,32 @@ impl CtCache {
         payload: &crate::kvcache::PrefixPayload,
         n: usize,
     ) -> Result<usize, String> {
+        self.attach_prefix_impl(payload, n, true)
+    }
+
+    /// Zero-copy variant of [`CtCache::attach_prefix`]: place the CT
+    /// metadata (tables, segment, tags, mask, accounting) for the first
+    /// `n` prefix tokens but leave the codes/scales **in the resident
+    /// shared payload** — the engine reads them through
+    /// [`SharedQuantRows`] and the PR-4 attach memcpy disappears from
+    /// the hot path. The region stays read-only until copy-on-write
+    /// ([`CtCache::materialize_shared`] + [`CtCache::clear_shared`]).
+    pub fn attach_prefix_alias(
+        &mut self,
+        sp: Arc<SharedPrefix>,
+        n: usize,
+    ) -> Result<usize, String> {
+        let seg = self.attach_prefix_impl(&sp.payload, n, false)?;
+        self.shared_src = Some(sp);
+        Ok(seg)
+    }
+
+    fn attach_prefix_impl(
+        &mut self,
+        payload: &crate::kvcache::PrefixPayload,
+        n: usize,
+        copy_payload: bool,
+    ) -> Result<usize, String> {
         let crate::kvcache::PrefixPayload::Quant {
             full_len,
             k_codes,
@@ -360,14 +423,20 @@ impl CtCache {
                     .ok_or("prefix exceeds cache capacity")?;
                 let slot = place.slot;
                 debug_assert_eq!(slot, pos, "fresh cache places prefill sequentially");
-                let src_c = (l * full_len + pos) * kvd;
-                let dst_c = (l * c + slot) * kvd;
-                let src_s = (l * full_len + pos) * sc;
-                let dst_s = (l * c + slot) * sc;
-                self.k_codes[dst_c..dst_c + kvd].copy_from_slice(&k_codes[src_c..src_c + kvd]);
-                self.v_codes[dst_c..dst_c + kvd].copy_from_slice(&v_codes[src_c..src_c + kvd]);
-                self.k_scales[dst_s..dst_s + sc].copy_from_slice(&k_scales[src_s..src_s + sc]);
-                self.v_scales[dst_s..dst_s + sc].copy_from_slice(&v_scales[src_s..src_s + sc]);
+                if copy_payload {
+                    let src_c = (l * full_len + pos) * kvd;
+                    let dst_c = (l * c + slot) * kvd;
+                    let src_s = (l * full_len + pos) * sc;
+                    let dst_s = (l * c + slot) * sc;
+                    self.k_codes[dst_c..dst_c + kvd]
+                        .copy_from_slice(&k_codes[src_c..src_c + kvd]);
+                    self.v_codes[dst_c..dst_c + kvd]
+                        .copy_from_slice(&v_codes[src_c..src_c + kvd]);
+                    self.k_scales[dst_s..dst_s + sc]
+                        .copy_from_slice(&k_scales[src_s..src_s + sc]);
+                    self.v_scales[dst_s..dst_s + sc]
+                        .copy_from_slice(&v_scales[src_s..src_s + sc]);
+                }
                 let tag = tags[l * full_len + pos];
                 self.tags[l * c + slot] = tag;
                 self.mask[l * c + slot] = 1.0;
@@ -384,6 +453,44 @@ impl CtCache {
         Ok(seg)
     }
 
+    /// Copy the aliased payload rows into this cache's own slabs — the
+    /// memcpy half of copy-on-write, run once per session at most,
+    /// right before [`CtCache::clear_shared`]. No-op when the region
+    /// was attached by copy (or there is none). The shared region is
+    /// read-only until CoW, so slots `0..shared_len` still hold
+    /// positions `0..shared_len` in every layer.
+    pub fn materialize_shared(&mut self) {
+        let Some(sp) = self.shared_src.take() else {
+            return;
+        };
+        let PrefixPayload::Quant {
+            full_len,
+            k_codes,
+            k_scales,
+            v_codes,
+            v_scales,
+            ..
+        } = &sp.payload
+        else {
+            return;
+        };
+        let full_len = *full_len;
+        let (c, kvd) = (self.cfg.capacity, self.cfg.kv_dim());
+        let sc = self.cfg.hkv * self.cfg.groups();
+        for l in 0..self.cfg.layers {
+            for slot in 0..self.shared_len {
+                let src_c = (l * full_len + slot) * kvd;
+                let dst_c = (l * c + slot) * kvd;
+                let src_s = (l * full_len + slot) * sc;
+                let dst_s = (l * c + slot) * sc;
+                self.k_codes[dst_c..dst_c + kvd].copy_from_slice(&k_codes[src_c..src_c + kvd]);
+                self.v_codes[dst_c..dst_c + kvd].copy_from_slice(&v_codes[src_c..src_c + kvd]);
+                self.k_scales[dst_s..dst_s + sc].copy_from_slice(&k_scales[src_s..src_s + sc]);
+                self.v_scales[dst_s..dst_s + sc].copy_from_slice(&v_scales[src_s..src_s + sc]);
+            }
+        }
+    }
+
     /// Export the first `n` prefill tokens as a shareable payload — the
     /// publish half of prefix sharing. Valid right after
     /// [`CtCache::write_prefill`] (slots `0..n` hold positions `0..n`
@@ -392,7 +499,9 @@ impl CtCache {
     pub fn export_prefix(&self, n: usize) -> Option<crate::kvcache::PrefixPayload> {
         let (c, kvd) = (self.cfg.capacity, self.cfg.kv_dim());
         let sc = self.cfg.hkv * self.cfg.groups();
-        if n == 0 || n > c {
+        // an aliased cache doesn't hold the shared rows in its slabs
+        // (and an attached session never publishes anyway)
+        if n == 0 || n > c || self.shared_src.is_some() {
             return None;
         }
         for t in &self.tables {
@@ -636,6 +745,19 @@ impl CtCache {
     pub fn snapshot_state(&self) -> CtSnapshot {
         let (c, kvd) = (self.cfg.capacity, self.cfg.kv_dim());
         let sc = self.cfg.hkv * self.cfg.groups(); // scales per slot
+        // aliased shared rows live in the resident payload, not the
+        // slabs — the snapshot overlays them so a restore (into a cache
+        // with no attachment) is self-contained
+        let overlay = self.shared_src.as_ref().and_then(|sp| match &sp.payload {
+            PrefixPayload::Quant { full_len, k_codes, k_scales, v_codes, v_scales, .. } => Some((
+                *full_len,
+                k_codes.as_slice(),
+                k_scales.as_slice(),
+                v_codes.as_slice(),
+                v_scales.as_slice(),
+            )),
+            PrefixPayload::Fp32 { .. } => None,
+        });
         let mut layers = Vec::with_capacity(self.cfg.layers);
         for l in 0..self.cfg.layers {
             let slots = self.tables[l].live_slot_ids();
@@ -649,6 +771,17 @@ impl CtCache {
             };
             for &s in &slots {
                 ls.tags.push(self.tags[l * c + s]);
+                if s < self.shared_len {
+                    if let Some((fl, pk, pks, pv, pvs)) = overlay {
+                        let cb = (l * fl + s) * kvd;
+                        let sb = (l * fl + s) * sc;
+                        ls.k_codes.extend_from_slice(&pk[cb..cb + kvd]);
+                        ls.k_scales.extend_from_slice(&pks[sb..sb + sc]);
+                        ls.v_codes.extend_from_slice(&pv[cb..cb + kvd]);
+                        ls.v_scales.extend_from_slice(&pvs[sb..sb + sc]);
+                        continue;
+                    }
+                }
                 let cb = (l * c + s) * kvd;
                 let sb = (l * c + s) * sc;
                 ls.k_codes.extend_from_slice(&self.k_codes[cb..cb + kvd]);
@@ -759,8 +892,11 @@ impl CtCache {
         self.packed_bits_written = snap.packed_bits_written;
         self.tokens_written = snap.tokens_written;
         // a still-active shared attachment is re-linked by the session
-        // after the restore (Session::rebuild_from -> reattach_prefix)
+        // after the restore (Session::rebuild_from -> reattach_prefix);
+        // the snapshot materialized any aliased rows, so the restored
+        // cache owns its slabs outright
         self.shared_len = 0;
+        self.shared_src = None;
         self.check_invariants()
     }
 
@@ -1039,6 +1175,75 @@ mod tests {
         shared.soft_evict_slots(0, &[0, 1]);
         shared.soft_evict_slots(1, &[0, 1]);
         shared.check_invariants().unwrap();
+    }
+
+    /// The zero-copy alias attach must be observationally identical to
+    /// the copying attach: same metadata slabs, same snapshot image,
+    /// shared rows readable through the view, and materializing
+    /// (copy-on-write) reproduces the copied slabs bit-exactly.
+    #[test]
+    fn alias_attach_matches_copying_attach() {
+        use crate::kvcache::{BlockPool, PrefixGeom, PrefixIndex};
+        let cfg = cfg();
+        let mut rng = Rng::new(23);
+        let p_len = 24;
+        let kvd = cfg.kv_dim();
+        let mut k = vec![0f32; cfg.layers * p_len * kvd];
+        let mut v = vec![0f32; cfg.layers * p_len * kvd];
+        rng.fill_normal_f32(&mut k, 0.0, 1.0);
+        rng.fill_normal_f32(&mut v, 0.0, 1.0);
+        let mut full = CtCache::new(cfg.clone());
+        full.write_prefill(&k, &v, p_len, Precision::Nvfp4);
+        let n = 16;
+        let payload = full.export_prefix(n).expect("pristine region exports");
+        let pool = Arc::new(BlockPool::new(1 << 30));
+        let idx = PrefixIndex::new(pool, 8);
+        let geom = PrefixGeom {
+            kind: "quant",
+            layers: cfg.layers,
+            hkv: cfg.hkv,
+            dh: cfg.dh,
+            prec_tag: Precision::Nvfp4.tag(),
+        };
+        let tokens: Vec<i32> = (0..n as i32).collect();
+        let att = idx.publish(&tokens, geom, payload).expect("publish");
+
+        let mut copied = CtCache::new(cfg.clone());
+        let seg_c = copied.attach_prefix(att.payload(), n).unwrap();
+        copied.write_prefill_range(&k, &v, p_len, n, p_len, Precision::Nvfp4, seg_c);
+
+        let mut aliased = CtCache::new(cfg.clone());
+        let seg_a = aliased.attach_prefix_alias(att.shared_arc(), n).unwrap();
+        assert_eq!(seg_a, seg_c);
+        aliased.write_prefill_range(&k, &v, p_len, n, p_len, Precision::Nvfp4, seg_a);
+
+        // metadata is slab-resident either way
+        assert_eq!(aliased.tags, copied.tags);
+        assert_eq!(aliased.mask, copied.mask);
+        assert_eq!(aliased.tables, copied.tables);
+        assert_eq!(aliased.segments, copied.segments);
+        assert_eq!(aliased.tokens_written, copied.tokens_written);
+        aliased.check_invariants().unwrap();
+        // the view exposes the resident rows, bit-equal to the copy
+        let view = aliased.view();
+        let sh = view.shared.expect("aliased view advertises shared rows");
+        assert_eq!((sh.len, sh.full_len), (n, n));
+        let pr = &sh.k_codes[(sh.full_len + 3) * kvd..][..kvd]; // layer 1, slot 3
+        let sr = &copied.k_codes[(cfg.capacity + 3) * kvd..][..kvd];
+        assert_eq!(pr, sr);
+        // an aliased cache never exports (its slabs lack the rows)
+        assert!(aliased.export_prefix(n).is_none());
+        // suspend-to-host overlays the payload: identical images
+        assert_eq!(aliased.snapshot_state(), copied.snapshot_state());
+        // copy-on-write: materialize then clear — full bit-identity
+        aliased.materialize_shared();
+        assert!(aliased.view().shared.is_none());
+        assert_eq!(aliased.k_codes, copied.k_codes);
+        assert_eq!(aliased.v_codes, copied.v_codes);
+        assert_eq!(aliased.k_scales, copied.k_scales);
+        assert_eq!(aliased.v_scales, copied.v_scales);
+        aliased.clear_shared();
+        aliased.check_invariants().unwrap();
     }
 
     #[test]

@@ -7,9 +7,12 @@
 //! compaction** (§5.1) whose cost this module measures for Figure 7 /
 //! Table 5.
 
-use crate::runtime::DecodeOut;
+use std::sync::Arc;
+
+use crate::runtime::{DecodeOut, SharedFp32Rows};
 
 use super::block_table::SlotId;
+use super::prefix::{PrefixPayload, SharedPrefix};
 
 /// Compact suspend-to-host image of an [`Fp32Cache`]: the live f32
 /// rows, the ring-buffer residue, and the gather counters. Unlike the
@@ -73,6 +76,13 @@ pub struct Fp32Cache {
     /// (copy-on-write). 0 = none. They are front-contiguous and never
     /// evicted while shared, so `compact_gather` leaves them in place.
     shared_len: usize,
+    /// When the shared region was attached by **aliasing**
+    /// ([`Fp32Cache::attach_prefix_alias`]): the resident entry whose
+    /// payload physically holds the K/V rows for slots `0..shared_len`.
+    /// The cache's own slabs are stale there until
+    /// [`Fp32Cache::materialize_shared`]. Mask/slot_pos are always
+    /// slab-resident.
+    shared_src: Option<Arc<SharedPrefix>>,
 }
 
 impl Fp32Cache {
@@ -95,6 +105,7 @@ impl Fp32Cache {
             gather_calls: 0,
             gather_nanos: 0,
             shared_len: 0,
+            shared_src: None,
         }
     }
 
@@ -111,8 +122,28 @@ impl Fp32Cache {
     }
 
     /// Copy-on-write completed: the region is privately owned now.
+    /// Aliased caches must [`Fp32Cache::materialize_shared`] first.
     pub fn clear_shared(&mut self) {
+        debug_assert!(
+            self.shared_src.is_none(),
+            "clear_shared before materialize_shared would expose stale slab rows"
+        );
         self.shared_len = 0;
+    }
+
+    /// The aliased shared rows for the engine view, when this cache was
+    /// attached zero-copy — `None` once materialized (or never aliased).
+    pub fn shared_rows(&self) -> Option<SharedFp32Rows<'_>> {
+        self.shared_src.as_ref().and_then(|sp| match &sp.payload {
+            PrefixPayload::Fp32 { full_len, k, v } => Some(SharedFp32Rows {
+                id: sp.id(),
+                len: self.shared_len,
+                full_len: *full_len,
+                k,
+                v,
+            }),
+            PrefixPayload::Quant { .. } => None,
+        })
     }
 
     pub fn buf_fill(&self) -> usize {
@@ -196,6 +227,26 @@ impl Fp32Cache {
         payload: &crate::kvcache::PrefixPayload,
         n: usize,
     ) -> Result<(), String> {
+        self.attach_prefix_impl(payload, n, true)
+    }
+
+    /// Zero-copy variant of [`Fp32Cache::attach_prefix`]: mark slots
+    /// `0..n` live but leave the K/V rows **in the resident shared
+    /// payload** — the engine reads them through [`SharedFp32Rows`].
+    /// The region stays read-only until copy-on-write
+    /// ([`Fp32Cache::materialize_shared`] + [`Fp32Cache::clear_shared`]).
+    pub fn attach_prefix_alias(&mut self, sp: Arc<SharedPrefix>, n: usize) -> Result<(), String> {
+        self.attach_prefix_impl(&sp.payload, n, false)?;
+        self.shared_src = Some(sp);
+        Ok(())
+    }
+
+    fn attach_prefix_impl(
+        &mut self,
+        payload: &crate::kvcache::PrefixPayload,
+        n: usize,
+        copy_payload: bool,
+    ) -> Result<(), String> {
         let crate::kvcache::PrefixPayload::Fp32 { full_len, k, v } = payload else {
             return Err("quant payload attached to an fp32 cache".into());
         };
@@ -211,12 +262,16 @@ impl Fp32Cache {
         }
         for l in 0..self.layers {
             for pos in 0..n {
-                let src = (l * full_len + pos) * self.kv_dim;
-                let (kk, vv) = (
-                    k[src..src + self.kv_dim].to_vec(),
-                    v[src..src + self.kv_dim].to_vec(),
-                );
-                self.write_slot_layer(l, pos, &kk, &vv);
+                if copy_payload {
+                    let src = (l * full_len + pos) * self.kv_dim;
+                    let (kk, vv) = (
+                        k[src..src + self.kv_dim].to_vec(),
+                        v[src..src + self.kv_dim].to_vec(),
+                    );
+                    self.write_slot_layer(l, pos, &kk, &vv);
+                } else {
+                    self.mask[l * self.capacity + pos] = 1.0;
+                }
             }
         }
         for pos in 0..n {
@@ -226,10 +281,33 @@ impl Fp32Cache {
         Ok(())
     }
 
+    /// Copy the aliased payload rows into this cache's own slabs — the
+    /// memcpy half of copy-on-write, right before
+    /// [`Fp32Cache::clear_shared`]. No-op when the region was attached
+    /// by copy (or there is none).
+    pub fn materialize_shared(&mut self) {
+        let Some(sp) = self.shared_src.take() else {
+            return;
+        };
+        let PrefixPayload::Fp32 { full_len, k, v } = &sp.payload else {
+            return;
+        };
+        let (full_len, kvd) = (*full_len, self.kv_dim);
+        for l in 0..self.layers {
+            for pos in 0..self.shared_len {
+                let src = (l * full_len + pos) * kvd;
+                let dst = (l * self.capacity + pos) * kvd;
+                self.k[dst..dst + kvd].copy_from_slice(&k[src..src + kvd]);
+                self.v[dst..dst + kvd].copy_from_slice(&v[src..src + kvd]);
+            }
+        }
+    }
+
     /// Export the first `n` prefill rows as a shareable payload. Valid
     /// while slots `0..n` still hold positions `0..n`.
     pub fn export_prefix(&self, n: usize) -> Option<crate::kvcache::PrefixPayload> {
-        if n == 0 || n > self.capacity {
+        // an aliased cache doesn't hold the shared rows in its slabs
+        if n == 0 || n > self.capacity || self.shared_src.is_some() {
             return None;
         }
         for slot in 0..n {
@@ -392,10 +470,26 @@ impl Fp32Cache {
     pub fn snapshot_state(&self) -> Fp32CacheSnapshot {
         let kvd = self.kv_dim;
         let live: Vec<SlotId> = (0..self.capacity).filter(|&s| self.slot_pos[s] >= 0).collect();
+        // aliased shared rows live in the resident payload, not the
+        // slabs — overlay them so a restore is self-contained
+        let overlay = self.shared_src.as_ref().and_then(|sp| match &sp.payload {
+            PrefixPayload::Fp32 { full_len, k, v } => {
+                Some((*full_len, k.as_slice(), v.as_slice()))
+            }
+            PrefixPayload::Quant { .. } => None,
+        });
         let mut k = Vec::with_capacity(self.layers * live.len() * kvd);
         let mut v = Vec::with_capacity(self.layers * live.len() * kvd);
         for l in 0..self.layers {
             for &s in &live {
+                if s < self.shared_len {
+                    if let Some((fl, pk, pv)) = overlay {
+                        let base = (l * fl + s) * kvd;
+                        k.extend_from_slice(&pk[base..base + kvd]);
+                        v.extend_from_slice(&pv[base..base + kvd]);
+                        continue;
+                    }
+                }
                 let base = (l * self.capacity + s) * kvd;
                 k.extend_from_slice(&self.k[base..base + kvd]);
                 v.extend_from_slice(&self.v[base..base + kvd]);
@@ -488,8 +582,10 @@ impl Fp32Cache {
         self.gather_calls = snap.gather_calls;
         self.gather_nanos = snap.gather_nanos;
         // a still-active shared attachment is re-linked by the session
-        // after the restore (Session::rebuild_from -> reattach_prefix)
+        // after the restore (Session::rebuild_from -> reattach_prefix);
+        // the snapshot materialized any aliased rows
         self.shared_len = 0;
+        self.shared_src = None;
         self.check_invariants()
     }
 
@@ -674,6 +770,57 @@ mod tests {
         shared.clear_shared();
         shared.evict_positions(&[0, 1]);
         shared.check_invariants().unwrap();
+    }
+
+    /// The zero-copy alias attach must be observationally identical to
+    /// the copying attach: same metadata, same snapshot image, rows
+    /// readable through [`Fp32Cache::shared_rows`], and materializing
+    /// (copy-on-write) reproduces the copied slabs bit-exactly.
+    #[test]
+    fn alias_attach_matches_copying_attach() {
+        use crate::kvcache::{BlockPool, PrefixGeom, PrefixIndex};
+        let mut full = mk();
+        let p = 16;
+        let k: Vec<f32> = (0..2 * p * 8).map(|i| i as f32 * 0.25).collect();
+        let v: Vec<f32> = (0..2 * p * 8).map(|i| -(i as f32) * 0.5).collect();
+        full.write_prefill(&k, &v, p);
+        let n = 8;
+        let payload = full.export_prefix(n).expect("pristine region exports");
+        let pool = Arc::new(BlockPool::new(1 << 30));
+        let idx = PrefixIndex::new(pool, 8);
+        let geom = PrefixGeom { kind: "fp32", layers: 2, hkv: 1, dh: 8, prec_tag: 0 };
+        let tokens: Vec<i32> = (0..n as i32).collect();
+        let att = idx.publish(&tokens, geom, payload).expect("publish");
+
+        let mut copied = mk();
+        copied.attach_prefix(att.payload(), n).unwrap();
+        copied.write_prefill_range(&k, &v, p, n, p);
+
+        let mut aliased = mk();
+        aliased.attach_prefix_alias(att.shared_arc(), n).unwrap();
+        aliased.write_prefill_range(&k, &v, p, n, p);
+        assert_eq!(aliased.shared_len(), n);
+        assert_eq!(aliased.mask, copied.mask);
+        assert_eq!(aliased.slot_pos, copied.slot_pos);
+        aliased.check_invariants().unwrap();
+        // rows readable through the alias, bit-equal to the copy
+        let sh = aliased.shared_rows().expect("aliased rows advertised");
+        assert_eq!((sh.len, sh.full_len), (n, n));
+        let pr = &sh.k[(sh.full_len + 3) * 8..][..8]; // layer 1, slot 3
+        let sr = &copied.k[(copied.capacity + 3) * 8..][..8];
+        assert_eq!(pr, sr);
+        // an aliased cache never exports
+        assert!(aliased.export_prefix(n).is_none());
+        // suspend-to-host overlays the payload: identical images
+        assert_eq!(aliased.snapshot_state(), copied.snapshot_state());
+        // copy-on-write: materialize then clear — full bit-identity
+        aliased.materialize_shared();
+        assert!(aliased.shared_rows().is_none());
+        assert_eq!(aliased.k, copied.k);
+        assert_eq!(aliased.v, copied.v);
+        aliased.clear_shared();
+        aliased.evict_positions(&[0, 1]);
+        aliased.check_invariants().unwrap();
     }
 
     #[test]

@@ -257,6 +257,8 @@ fn cmd_info() -> i32 {
             println!("model: {:?}", m.model);
             println!("quant capacities: {:?}", m.quant_caps);
             println!("fp32 capacities: {:?}", m.fp32_caps);
+            println!("batch widths: {:?}", m.batch_widths);
+            println!("prefill chunk lens: {:?}", m.prefill_chunk_lens);
             println!("weights: {} tensors", m.weights.len());
             0
         }

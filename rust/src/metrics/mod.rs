@@ -70,6 +70,22 @@ pub struct Breakdown {
     pub refresh_calls: u64,
     pub policy_calls: u64,
     pub gather_calls: u64,
+    /// Actual PJRT decode executes this session caused (diffed from
+    /// [`crate::runtime::ExecStats`] around each engine call): fused
+    /// batches count 1, per-member fallback counts 1 per member.
+    /// Engines without a PJRT surface (test fakes) report 0.
+    pub pjrt_decode_executes: u64,
+    /// PJRT prefill executes (whole-prompt calls + per-chunk executes).
+    pub pjrt_prefill_executes: u64,
+    /// Decode executes attributable to the per-member fallback path (a
+    /// subset of `pjrt_decode_executes`): nonzero means some step ran
+    /// without a covering batched artifact.
+    pub pjrt_fallback_executes: u64,
+    /// Chunk requests served from the engine's whole-prompt memo
+    /// (no execute issued).
+    pub prefill_memo_hits: u64,
+    /// Memo/chunk-state entries evicted by the engine's LRU cap.
+    pub prefill_memo_evictions: u64,
 }
 
 impl Breakdown {
@@ -119,6 +135,11 @@ impl Breakdown {
         self.refresh_calls += o.refresh_calls;
         self.policy_calls += o.policy_calls;
         self.gather_calls += o.gather_calls;
+        self.pjrt_decode_executes += o.pjrt_decode_executes;
+        self.pjrt_prefill_executes += o.pjrt_prefill_executes;
+        self.pjrt_fallback_executes += o.pjrt_fallback_executes;
+        self.prefill_memo_hits += o.prefill_memo_hits;
+        self.prefill_memo_evictions += o.prefill_memo_evictions;
     }
 }
 
@@ -207,6 +228,24 @@ pub struct SchedSnapshot {
     pub prefix_resident_bytes: u64,
     /// Gauge: resident shared-prefix entries.
     pub prefix_resident_entries: u64,
+    /// Zero-copy prefix attaches: the session's block table aliased the
+    /// resident payload instead of memcpying it into its own cache.
+    pub prefix_alias_hits: u64,
+    /// Bytes the alias attaches did **not** copy (the PR-4 attach
+    /// memcpy this counter proves is gone from the hot path).
+    pub prefix_alias_bytes: u64,
+    /// Actual PJRT decode executes across all workers (fused batch = 1;
+    /// fallback member = 1 each). With batched artifacts compiled and a
+    /// homogeneous batch this advances by exactly 1 per fused step.
+    pub pjrt_decode_executes: u64,
+    /// PJRT prefill executes (whole-prompt + per-chunk).
+    pub pjrt_prefill_executes: u64,
+    /// Decode executes that took the counted per-member fallback.
+    pub pjrt_fallback_executes: u64,
+    /// Engine prefill-memo hits (chunk served without an execute).
+    pub prefill_memo_hits: u64,
+    /// Engine prefill-memo/chunk-state LRU evictions.
+    pub prefill_memo_evictions: u64,
 }
 
 impl SchedSnapshot {
@@ -256,6 +295,13 @@ impl SchedSnapshot {
         j.set("prefix_reclaims", Json::Num(self.prefix_reclaims as f64));
         j.set("prefix_resident_bytes", Json::Num(self.prefix_resident_bytes as f64));
         j.set("prefix_resident_entries", Json::Num(self.prefix_resident_entries as f64));
+        j.set("prefix_alias_hits", Json::Num(self.prefix_alias_hits as f64));
+        j.set("prefix_alias_bytes", Json::Num(self.prefix_alias_bytes as f64));
+        j.set("pjrt_decode_executes", Json::Num(self.pjrt_decode_executes as f64));
+        j.set("pjrt_prefill_executes", Json::Num(self.pjrt_prefill_executes as f64));
+        j.set("pjrt_fallback_executes", Json::Num(self.pjrt_fallback_executes as f64));
+        j.set("prefill_memo_hits", Json::Num(self.prefill_memo_hits as f64));
+        j.set("prefill_memo_evictions", Json::Num(self.prefill_memo_evictions as f64));
         j
     }
 
@@ -280,6 +326,16 @@ impl SchedSnapshot {
                 self.fused_steps,
                 self.fused_sessions,
                 self.fused_sessions as f64 / self.fused_steps as f64
+            ));
+        }
+        if self.pjrt_decode_executes + self.pjrt_prefill_executes > 0 {
+            s.push_str(&format!(
+                "\npjrt: {} decode executes ({} fallback) / {} prefill executes, memo {} hits / {} evictions",
+                self.pjrt_decode_executes,
+                self.pjrt_fallback_executes,
+                self.pjrt_prefill_executes,
+                self.prefill_memo_hits,
+                self.prefill_memo_evictions
             ));
         }
         if self.prefill_chunk_tokens > 0 {
@@ -307,14 +363,16 @@ impl SchedSnapshot {
         }
         if self.prefix_enabled {
             s.push_str(&format!(
-                "\nprefix: {} hits / {} misses, {} resident ({} B), cow {} (+{} denied), reclaims {}",
+                "\nprefix: {} hits / {} misses, {} resident ({} B), cow {} (+{} denied), reclaims {}, alias {} ({} B uncopied)",
                 self.prefix_hits,
                 self.prefix_misses,
                 self.prefix_resident_entries,
                 self.prefix_resident_bytes,
                 self.prefix_cow_faults,
                 self.prefix_cow_denied,
-                self.prefix_reclaims
+                self.prefix_reclaims,
+                self.prefix_alias_hits,
+                self.prefix_alias_bytes
             ));
         }
         s
@@ -491,6 +549,54 @@ mod tests {
         assert!(summary.contains("cow 1 (+1 denied)"));
         // sharing disabled: the prefix line is omitted entirely
         assert!(!SchedSnapshot::default().summary().contains("prefix:"));
+    }
+
+    #[test]
+    fn sched_snapshot_pjrt_and_alias_fields_surface() {
+        let s = SchedSnapshot {
+            pjrt_decode_executes: 11,
+            pjrt_prefill_executes: 4,
+            pjrt_fallback_executes: 2,
+            prefill_memo_hits: 3,
+            prefill_memo_evictions: 1,
+            prefix_enabled: true,
+            prefix_alias_hits: 6,
+            prefix_alias_bytes: 8192,
+            ..SchedSnapshot::default()
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("pjrt_decode_executes").and_then(Json::as_usize), Some(11));
+        assert_eq!(j.get("pjrt_prefill_executes").and_then(Json::as_usize), Some(4));
+        assert_eq!(j.get("pjrt_fallback_executes").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("prefill_memo_hits").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("prefill_memo_evictions").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("prefix_alias_hits").and_then(Json::as_usize), Some(6));
+        assert_eq!(j.get("prefix_alias_bytes").and_then(Json::as_usize), Some(8192));
+        let summary = s.summary();
+        assert!(summary.contains("pjrt: 11 decode executes (2 fallback)"));
+        assert!(summary.contains("memo 3 hits / 1 evictions"));
+        assert!(summary.contains("alias 6 (8192 B uncopied)"));
+        // no executes recorded (fake engines): the pjrt line is omitted
+        assert!(!SchedSnapshot::default().summary().contains("pjrt:"));
+    }
+
+    #[test]
+    fn breakdown_pjrt_counters_merge() {
+        let mut a = Breakdown {
+            pjrt_decode_executes: 3,
+            pjrt_prefill_executes: 1,
+            pjrt_fallback_executes: 2,
+            prefill_memo_hits: 1,
+            prefill_memo_evictions: 1,
+            ..Default::default()
+        };
+        let b = Breakdown { pjrt_decode_executes: 4, prefill_memo_hits: 2, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.pjrt_decode_executes, 7);
+        assert_eq!(a.pjrt_prefill_executes, 1);
+        assert_eq!(a.pjrt_fallback_executes, 2);
+        assert_eq!(a.prefill_memo_hits, 3);
+        assert_eq!(a.prefill_memo_evictions, 1);
     }
 
     #[test]

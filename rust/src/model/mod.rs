@@ -44,6 +44,16 @@ pub struct Manifest {
     pub model: ModelConfig,
     pub quant_caps: Vec<usize>,
     pub fp32_caps: Vec<usize>,
+    /// Compiled fused-decode batch widths (ascending, e.g. `[1, 2, 4, 8]`):
+    /// each `(capacity, width)` pair of both families has a
+    /// `decode_*_cC_bB` artifact. Empty for pre-batched artifact sets —
+    /// the engine then falls back to per-member executes.
+    pub batch_widths: Vec<usize>,
+    /// Compiled chunked-prefill chunk lengths (ascending, e.g.
+    /// `[8, 16, 32]`): each has a `prefill_chunk_pP_nN` artifact. Empty
+    /// for pre-chunked artifact sets — the engine then falls back to
+    /// slicing the whole-prompt prefill.
+    pub prefill_chunk_lens: Vec<usize>,
     pub micro_c: usize,
     pub golden_attn_c: usize,
     pub artifacts_dir: String,
@@ -100,10 +110,18 @@ impl Manifest {
                     .collect()
             })
             .unwrap_or_default();
+        let list = |k: &str| -> Vec<usize> {
+            j.get(k)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default()
+        };
         Ok(Manifest {
             model,
             quant_caps: caps("quant"),
             fp32_caps: caps("fp32"),
+            batch_widths: list("batch_widths"),
+            prefill_chunk_lens: list("prefill_chunk_lens"),
             micro_c: j.get("micro_c").and_then(Json::as_usize).unwrap_or(1024),
             golden_attn_c: j
                 .get("golden_attn_c")
@@ -129,6 +147,38 @@ impl Manifest {
 
     pub fn prefill_name(&self) -> String {
         format!("prefill_p{}", self.model.prefill_len)
+    }
+
+    /// Fused multi-request decode artifact (quant family) at compiled
+    /// batch width `b`.
+    pub fn decode_quant_batch_name(&self, capacity: usize, b: usize) -> String {
+        format!("decode_quant_c{capacity}_b{b}")
+    }
+
+    /// Fused multi-request decode artifact (f32 family) at compiled
+    /// batch width `b`.
+    pub fn decode_fp32_batch_name(&self, capacity: usize, b: usize) -> String {
+        format!("decode_fp32_c{capacity}_b{b}")
+    }
+
+    /// Chunked-prefill artifact computing `n` prompt positions per
+    /// execute at a runtime start offset.
+    pub fn prefill_chunk_name(&self, n: usize) -> String {
+        format!("prefill_chunk_p{}_n{n}", self.model.prefill_len)
+    }
+
+    /// Smallest compiled fused-decode width that covers a batch of `n`
+    /// members (the padding mask absorbs the slack). `None` when no
+    /// batched artifacts exist or even the widest cannot cover `n` —
+    /// callers then split greedily via [`Manifest::widest_batch_width`].
+    pub fn pick_batch_width(&self, n: usize) -> Option<usize> {
+        self.batch_widths.iter().copied().find(|&b| b >= n)
+    }
+
+    /// Widest compiled fused-decode width `<= n` (greedy split step for
+    /// batches wider than the widest artifact).
+    pub fn widest_batch_width(&self, n: usize) -> Option<usize> {
+        self.batch_widths.iter().copied().filter(|&b| b <= n).max()
     }
 
     /// Smallest exported quant capacity that can hold `budget` + headroom.
@@ -167,6 +217,20 @@ mod tests {
         // every advertised artifact exists on disk
         for c in &m.quant_caps {
             assert!(std::path::Path::new(&m.hlo_path(&m.decode_quant_name(*c))).exists());
+            for b in &m.batch_widths {
+                let name = m.decode_quant_batch_name(*c, *b);
+                assert!(std::path::Path::new(&m.hlo_path(&name)).exists(), "{name}");
+            }
+        }
+        for c in &m.fp32_caps {
+            for b in &m.batch_widths {
+                let name = m.decode_fp32_batch_name(*c, *b);
+                assert!(std::path::Path::new(&m.hlo_path(&name)).exists(), "{name}");
+            }
+        }
+        for n in &m.prefill_chunk_lens {
+            let name = m.prefill_chunk_name(*n);
+            assert!(std::path::Path::new(&m.hlo_path(&name)).exists(), "{name}");
         }
     }
 
@@ -190,6 +254,8 @@ mod tests {
             model: m,
             quant_caps: vec![512, 1024, 2048],
             fp32_caps: vec![1024, 4096],
+            batch_widths: vec![1, 2, 4, 8],
+            prefill_chunk_lens: vec![8, 16, 32],
             micro_c: 1024,
             golden_attn_c: 128,
             artifacts_dir: ".".into(),
@@ -200,5 +266,14 @@ mod tests {
         assert_eq!(man.pick_quant_cap(64), Some(512));
         assert_eq!(man.pick_quant_cap(4096), None);
         assert_eq!(man.pick_fp32_cap(2000), Some(4096));
+        assert_eq!(man.pick_batch_width(1), Some(1));
+        assert_eq!(man.pick_batch_width(3), Some(4));
+        assert_eq!(man.pick_batch_width(8), Some(8));
+        assert_eq!(man.pick_batch_width(9), None);
+        assert_eq!(man.widest_batch_width(9), Some(8));
+        assert_eq!(man.widest_batch_width(3), Some(2));
+        assert_eq!(man.widest_batch_width(0), None);
+        assert_eq!(man.decode_quant_batch_name(512, 4), "decode_quant_c512_b4");
+        assert_eq!(man.prefill_chunk_name(16), "prefill_chunk_p64_n16");
     }
 }

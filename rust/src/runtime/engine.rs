@@ -5,7 +5,7 @@
 //! construction and shared by every call (`execute_b`), so a decode step
 //! only transfers the per-request cache tensors and scalars.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
@@ -25,6 +25,39 @@ pub struct QuantCache<'a> {
     pub buf_k: &'a [f32],    // [L, BUF, Hkv, Dh]
     pub buf_v: &'a [f32],
     pub buf_mask: &'a [f32], // [L, BUF]
+    /// Shared-prefix payload rows this cache aliases instead of owning:
+    /// slab rows `0..shared.len` are placeholders and the true K/V rows
+    /// live in one resident copy referenced here. `None` for caches that
+    /// own (or have materialized) every row.
+    pub shared: Option<SharedQuantRows<'a>>,
+}
+
+/// Borrowed rows of a shared prompt-prefix payload a quantized cache
+/// aliases instead of copying. Payload layout is `[L, full_len, ...]`
+/// (row stride `full_len` per layer); the aliasing cache maps payload
+/// row `s < len` to its own slot `s`. `id` identifies the physical copy
+/// so a fused batch stages each resident prefix at most once.
+#[derive(Clone, Copy)]
+pub struct SharedQuantRows<'a> {
+    pub id: u64,
+    /// Rows of the payload live in the aliasing cache (the attach length).
+    pub len: usize,
+    /// Payload row stride per layer (the published prefix length).
+    pub full_len: usize,
+    pub k_codes: &'a [u8],   // [L, full_len, Hkv, Dh]
+    pub k_scales: &'a [f32], // [L, full_len, Hkv, G]
+    pub v_codes: &'a [u8],
+    pub v_scales: &'a [f32],
+}
+
+/// F32 twin of [`SharedQuantRows`] for the FullKV / eviction families.
+#[derive(Clone, Copy)]
+pub struct SharedFp32Rows<'a> {
+    pub id: u64,
+    pub len: usize,
+    pub full_len: usize,
+    pub k: &'a [f32], // [L, full_len, Hkv, Dh]
+    pub v: &'a [f32],
 }
 
 /// Borrowed view of a request's cache in whichever family it lives —
@@ -42,6 +75,8 @@ pub enum CacheView<'a> {
         buf_k: &'a [f32],
         buf_v: &'a [f32],
         buf_mask: &'a [f32],
+        /// Aliased shared-prefix rows (see [`QuantCache::shared`]).
+        shared: Option<SharedFp32Rows<'a>>,
     },
 }
 
@@ -56,6 +91,32 @@ pub struct BatchDecodeReq<'a> {
     pub buf_idx: i32,
     /// Borrowed view of this member's cache slabs.
     pub view: CacheView<'a>,
+}
+
+/// Cumulative PJRT-execute ledger an engine exposes for the serving
+/// metrics ([`DecodeEngine::exec_stats`]): how many device launches the
+/// decode and prefill paths actually issued, how many batch members had
+/// to fall back to per-member executes, and how the chunked-prefill
+/// memo behaved. Monotone counters; callers diff around a call to
+/// attribute executes to it.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ExecStats {
+    /// Decode-step executes: one per fused `decode_batch` launch and one
+    /// per single-request `decode` (a fused step over a covered batch
+    /// contributes exactly 1).
+    pub decode_executes: u64,
+    /// Prefill executes: whole-prompt modules plus one per chunk-artifact
+    /// launch.
+    pub prefill_executes: u64,
+    /// Batch members advanced by per-member fallback executes (no batched
+    /// artifact covered them); these members also count in
+    /// `decode_executes`.
+    pub fallback_executes: u64,
+    /// Chunked-prefill requests served by a memoized whole-prompt image.
+    pub prefill_memo_hits: u64,
+    /// Memo entries evicted by the LRU bound (the evicted prompt pays a
+    /// re-execute if it resumes).
+    pub prefill_memo_evictions: u64,
 }
 
 /// The engine surface the serving session/worker loop drives — one
@@ -183,6 +244,12 @@ pub trait DecodeEngine {
             .map(|r| self.decode(r.token, r.pos, r.buf_idx, &r.view))
             .collect()
     }
+
+    /// Cumulative device-launch ledger (see [`ExecStats`]). Engines that
+    /// do not issue real executes report zeros.
+    fn exec_stats(&self) -> ExecStats {
+        ExecStats::default()
+    }
 }
 
 /// Outputs of one decode step.
@@ -218,8 +285,8 @@ pub struct PrefillChunkOut {
 
 /// Slice positions `[start, start + len)` out of a full prefill — the
 /// shared body of the default [`DecodeEngine::prefill_chunk`] and the
-/// memoizing [`Engine`] override. Logits are copied only for the final
-/// chunk (the only one whose logits a caller may read).
+/// memo-fallback path of the [`Engine`] override. Logits are copied only
+/// for the final chunk (the only one whose logits a caller may read).
 fn slice_prefill_chunk(
     m: &crate::model::ModelConfig,
     pf: &PrefillOut,
@@ -244,34 +311,61 @@ fn slice_prefill_chunk(
     Ok(PrefillChunkOut { logits, k, v, obs })
 }
 
-/// Prompts whose full-prefill image the chunked-prefill memo keeps warm
-/// at once. Each entry is a whole-prompt fp32 [`PrefillOut`] — the
-/// largest host allocation in the process at real model dims — so the
-/// cap is deliberately tight: the scheduler runs **one** prefill lane
-/// per batch, so 2 covers the active lane plus one rotation. A worker
+/// Default cap on prompts whose full-prefill image the memo-fallback
+/// path keeps warm at once (overridable via `THINKV_PREFILL_MEMO_CAP`).
+/// Each entry is a whole-prompt fp32 [`PrefillOut`] — the largest host
+/// allocation in the process at real model dims — so the cap is
+/// deliberately tight: the scheduler runs **one** prefill lane per
+/// batch, so 2 covers the active lane plus one rotation. A worker
 /// alternating more than two mid-prefill prompts (or a session
-/// abandoned mid-prefill, whose entry is only reclaimed by this FIFO)
-/// pays a bounded re-execute instead of pinning unbounded host memory.
+/// abandoned mid-prefill, whose entry is only reclaimed by the LRU
+/// bound) pays a bounded re-execute instead of pinning unbounded host
+/// memory. The same cap bounds the chunk-artifact past-row states,
+/// which are the same shape but have no fallback cost beyond re-running
+/// earlier chunks.
 const PREFILL_MEMO_CAP: usize = 2;
+
+/// Per-prompt accumulator for the chunked-prefill artifacts: the exact
+/// post-RoPE K/V rows earlier chunks produced, kept in whole-prompt
+/// layout (`[L, P, Hkv, Dh]`) — what the next chunk execute attends
+/// against. Rows at or past the running chunk's start are ignored by
+/// the artifact, so stale tails are harmless.
+struct ChunkState {
+    /// Positions `0..filled` hold real rows (monotone high-water mark).
+    filled: usize,
+    past_k: Vec<f32>,
+    past_v: Vec<f32>,
+}
 
 pub struct Engine {
     client: xla::PjRtClient,
     pub manifest: Manifest,
     weight_bufs: Vec<xla::PjRtBuffer>,
     exes: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
-    /// Memoized full-prompt prefills, keyed by token vector (FIFO,
-    /// bounded by [`PREFILL_MEMO_CAP`]). The chunked-prefill entry
-    /// point slices the single-request prefill artifact per chunk;
-    /// this keeps every in-flight prompt's successive chunks from
-    /// re-executing it (one PJRT execute per prompt, not per chunk),
-    /// even when the scheduler alternates prefill lanes between
-    /// sessions mid-prefill. Entries retire at their final chunk. A
-    /// true chunked-prefill artifact slots in behind
-    /// [`DecodeEngine::prefill_chunk`] without touching any caller.
+    /// Memoized full-prompt prefills, keyed by token vector, kept in LRU
+    /// order (back = most recent) and bounded by [`Engine::memo_cap`].
+    /// This is the **fallback** chunked-prefill path for builds without
+    /// `prefill_chunk_*` artifacts (or chunk geometries that are not a
+    /// compiled multiple): the whole-prompt artifact runs once and
+    /// successive chunks slice the memoized image. Entries retire at
+    /// their final chunk; hits and evictions are counted in
+    /// [`ExecStats`].
     prefill_memo: RefCell<Vec<(Vec<i32>, PrefillOut)>>,
+    /// LRU bound for [`Engine::prefill_memo`] and the chunk-artifact
+    /// states (`THINKV_PREFILL_MEMO_CAP`, default [`PREFILL_MEMO_CAP`]).
+    memo_cap: usize,
+    /// Past-row accumulators for the chunk-artifact prefill path, keyed
+    /// by token vector (same LRU discipline as the memo). An evicted
+    /// mid-prefill prompt re-runs its earlier chunks on resume.
+    chunk_states: RefCell<Vec<(Vec<i32>, ChunkState)>>,
     /// Cumulative PJRT execute wall-time, for the Table-5 style breakdown.
-    pub exec_nanos: std::cell::Cell<u64>,
-    pub exec_calls: std::cell::Cell<u64>,
+    pub exec_nanos: Cell<u64>,
+    pub exec_calls: Cell<u64>,
+    decode_execs: Cell<u64>,
+    prefill_execs: Cell<u64>,
+    fallback_execs: Cell<u64>,
+    memo_hits: Cell<u64>,
+    memo_evicts: Cell<u64>,
 }
 
 impl Engine {
@@ -304,14 +398,26 @@ impl Engine {
                     .map_err(to_anyhow)
             })
             .collect::<Result<Vec<_>>>()?;
+        let memo_cap = std::env::var("THINKV_PREFILL_MEMO_CAP")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(PREFILL_MEMO_CAP);
         Ok(Engine {
             client,
             manifest,
             weight_bufs,
             exes: RefCell::new(HashMap::new()),
             prefill_memo: RefCell::new(Vec::new()),
-            exec_nanos: std::cell::Cell::new(0),
-            exec_calls: std::cell::Cell::new(0),
+            memo_cap,
+            chunk_states: RefCell::new(Vec::new()),
+            exec_nanos: Cell::new(0),
+            exec_calls: Cell::new(0),
+            decode_execs: Cell::new(0),
+            prefill_execs: Cell::new(0),
+            fallback_execs: Cell::new(0),
+            memo_hits: Cell::new(0),
+            memo_evicts: Cell::new(0),
         })
     }
 
@@ -386,12 +492,28 @@ impl Engine {
     ) -> Result<DecodeOut> {
         match view {
             CacheView::Quant(q) => self.decode_quant(token, pos, buf_idx, q),
-            CacheView::Fp32 { capacity, k, v, mask, buf_k, buf_v, buf_mask } => self
-                .decode_fp32(*capacity, token, pos, buf_idx, k, v, mask, buf_k, buf_v, buf_mask),
+            CacheView::Fp32 { capacity, k, v, mask, buf_k, buf_v, buf_mask, shared } => {
+                self.decode_fp32(
+                    *capacity,
+                    token,
+                    pos,
+                    buf_idx,
+                    k,
+                    v,
+                    mask,
+                    buf_k,
+                    buf_v,
+                    buf_mask,
+                    shared.as_ref(),
+                )
+            }
         }
     }
 
-    /// Run one decode step over the quantized paged cache.
+    /// Run one decode step over the quantized paged cache. When the view
+    /// aliases a shared prefix, the single-request artifact (which has no
+    /// block table) gets an overlaid copy of the payload rows — the fused
+    /// batched path avoids this copy via the arena's prefix segment.
     pub fn decode_quant(
         &self,
         token: i32,
@@ -408,16 +530,41 @@ impl Engine {
             m.groups(),
             m.buf_slots,
         );
+        let (kvd, sc) = (hkv * dh, hkv * g);
+        let owned;
+        let (kc, ks, vc, vs): (&[u8], &[f32], &[u8], &[f32]) = match &cache.shared {
+            Some(sh) => {
+                let mut kc = cache.k_codes.to_vec();
+                let mut ks = cache.k_scales.to_vec();
+                let mut vc = cache.v_codes.to_vec();
+                let mut vs = cache.v_scales.to_vec();
+                for li in 0..l {
+                    let (dst, src) = ((li * c) * kvd, (li * sh.full_len) * kvd);
+                    kc[dst..dst + sh.len * kvd]
+                        .copy_from_slice(&sh.k_codes[src..src + sh.len * kvd]);
+                    vc[dst..dst + sh.len * kvd]
+                        .copy_from_slice(&sh.v_codes[src..src + sh.len * kvd]);
+                    let (dsts, srcs) = ((li * c) * sc, (li * sh.full_len) * sc);
+                    ks[dsts..dsts + sh.len * sc]
+                        .copy_from_slice(&sh.k_scales[srcs..srcs + sh.len * sc]);
+                    vs[dsts..dsts + sh.len * sc]
+                        .copy_from_slice(&sh.v_scales[srcs..srcs + sh.len * sc]);
+                }
+                owned = (kc, ks, vc, vs);
+                (&owned.0, &owned.1, &owned.2, &owned.3)
+            }
+            None => (cache.k_codes, cache.k_scales, cache.v_codes, cache.v_scales),
+        };
         let name = self.manifest.decode_quant_name(c);
         let exe = self.exe(&name)?;
         let dyn_bufs = [
             self.buf_i32(&[token], &[1])?,
             self.buf_i32(&[pos], &[1])?,
             self.buf_i32(&[buf_idx], &[1])?,
-            self.buf_u8(cache.k_codes, &[l, c, hkv, dh])?,
-            self.buf_f32(cache.k_scales, &[l, c, hkv, g])?,
-            self.buf_u8(cache.v_codes, &[l, c, hkv, dh])?,
-            self.buf_f32(cache.v_scales, &[l, c, hkv, g])?,
+            self.buf_u8(kc, &[l, c, hkv, dh])?,
+            self.buf_f32(ks, &[l, c, hkv, g])?,
+            self.buf_u8(vc, &[l, c, hkv, dh])?,
+            self.buf_f32(vs, &[l, c, hkv, g])?,
             self.buf_u8(cache.tags, &[l, c])?,
             self.buf_f32(cache.mask, &[l, c])?,
             self.buf_f32(cache.buf_k, &[l, b, hkv, dh])?,
@@ -427,6 +574,7 @@ impl Engine {
         let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
         args.extend(dyn_bufs.iter());
         let outs = self.run_tuple(&exe, &args)?;
+        self.decode_execs.set(self.decode_execs.get() + 1);
         decode_out(outs)
     }
 
@@ -444,17 +592,34 @@ impl Engine {
         buf_k: &[f32],
         buf_v: &[f32],
         buf_mask: &[f32],
+        shared: Option<&SharedFp32Rows>,
     ) -> Result<DecodeOut> {
         let m = self.model().clone();
         let (l, c, hkv, dh, b) = (m.n_layers, capacity, m.n_kv_heads, m.d_head, m.buf_slots);
+        let kvd = hkv * dh;
+        let owned;
+        let (kc, vc): (&[f32], &[f32]) = match shared {
+            Some(sh) => {
+                let mut k = k_cache.to_vec();
+                let mut v = v_cache.to_vec();
+                for li in 0..l {
+                    let (dst, src) = ((li * c) * kvd, (li * sh.full_len) * kvd);
+                    k[dst..dst + sh.len * kvd].copy_from_slice(&sh.k[src..src + sh.len * kvd]);
+                    v[dst..dst + sh.len * kvd].copy_from_slice(&sh.v[src..src + sh.len * kvd]);
+                }
+                owned = (k, v);
+                (&owned.0, &owned.1)
+            }
+            None => (k_cache, v_cache),
+        };
         let name = self.manifest.decode_fp32_name(c);
         let exe = self.exe(&name)?;
         let dyn_bufs = [
             self.buf_i32(&[token], &[1])?,
             self.buf_i32(&[pos], &[1])?,
             self.buf_i32(&[buf_idx], &[1])?,
-            self.buf_f32(k_cache, &[l, c, hkv, dh])?,
-            self.buf_f32(v_cache, &[l, c, hkv, dh])?,
+            self.buf_f32(kc, &[l, c, hkv, dh])?,
+            self.buf_f32(vc, &[l, c, hkv, dh])?,
             self.buf_f32(mask, &[l, c])?,
             self.buf_f32(buf_k, &[l, b, hkv, dh])?,
             self.buf_f32(buf_v, &[l, b, hkv, dh])?,
@@ -463,6 +628,7 @@ impl Engine {
         let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
         args.extend(dyn_bufs.iter());
         let outs = self.run_tuple(&exe, &args)?;
+        self.decode_execs.set(self.decode_execs.get() + 1);
         decode_out(outs)
     }
 
@@ -479,6 +645,7 @@ impl Engine {
         let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
         args.push(&tok_buf);
         let outs = self.run_tuple(&exe, &args)?;
+        self.prefill_execs.set(self.prefill_execs.get() + 1);
         if outs.len() != 4 {
             bail!("prefill returned {} outputs", outs.len());
         }
@@ -531,21 +698,421 @@ impl Engine {
             outs[1].to_vec::<f32>().map_err(to_anyhow)?,
         ))
     }
+
+    /// Per-member fallback for batches no batched artifact covers: the
+    /// pre-tentpole behavior, kept countable so the serving metrics can
+    /// show when launch amortization is actually happening.
+    fn decode_batch_fallback(&self, reqs: &[BatchDecodeReq<'_>]) -> Result<Vec<DecodeOut>> {
+        self.fallback_execs
+            .set(self.fallback_execs.get() + reqs.len() as u64);
+        reqs.iter()
+            .map(|r| Engine::decode(self, r.token, r.pos, r.buf_idx, &r.view))
+            .collect()
+    }
+
+    /// One fused execute of `decode_quant_c{c}_b{bw}` over `reqs.len()`
+    /// live lanes (ragged lanes padded and masked out by `member`).
+    ///
+    /// Arena layout (matches `decode_quant_batch_shapes`): lane `i`'s
+    /// slot `s` lives at arena row `i*C + s`; one shared prompt prefix
+    /// is staged exactly once at rows `bw*C ..`, and aliasing lanes'
+    /// block tables redirect their prefix slots there. Tags, the CT
+    /// eviction mask, and the ring buffers stay per-lane (they diverge
+    /// per session even over aliased payload rows).
+    fn run_quant_batch(
+        &self,
+        reqs: &[BatchDecodeReq<'_>],
+        bw: usize,
+        c: usize,
+    ) -> Result<Vec<DecodeOut>> {
+        let m = self.model().clone();
+        let (l, hkv, dh, g, bufs, p) =
+            (m.n_layers, m.n_kv_heads, m.d_head, m.groups(), m.buf_slots, m.prefill_len);
+        let (kvd, sc) = (hkv * dh, hkv * g);
+        let a = bw * c + p;
+        let n = reqs.len();
+        debug_assert!(n <= bw, "batch of {n} exceeds compiled width {bw}");
+
+        let mut token = vec![0i32; bw];
+        let mut pos = vec![0i32; bw];
+        let mut buf_idx = vec![0i32; bw];
+        let mut member = vec![0f32; bw];
+        let mut bt = vec![0i32; bw * l * c];
+        let mut k_codes = vec![0u8; l * a * kvd];
+        let mut k_scales = vec![0f32; l * a * sc];
+        let mut v_codes = vec![0u8; l * a * kvd];
+        let mut v_scales = vec![0f32; l * a * sc];
+        let mut tags = vec![0u8; bw * l * c];
+        let mut mask = vec![0f32; bw * l * c];
+        let mut buf_k = vec![0f32; bw * l * bufs * kvd];
+        let mut buf_v = vec![0f32; bw * l * bufs * kvd];
+        let mut buf_mask = vec![0f32; bw * l * bufs];
+
+        // one shared-prefix segment per fused call: the first aliasing
+        // lane elects the resident copy; lanes aliasing a *different*
+        // prefix get their rows composed into their private segment
+        let chosen = reqs.iter().find_map(|r| match &r.view {
+            CacheView::Quant(q) => q.shared.as_ref(),
+            _ => None,
+        });
+        if let Some(sh) = chosen {
+            for li in 0..l {
+                let (dst, src) = ((li * a + bw * c) * kvd, (li * sh.full_len) * kvd);
+                let rows = sh.full_len * kvd;
+                k_codes[dst..dst + rows].copy_from_slice(&sh.k_codes[src..src + rows]);
+                v_codes[dst..dst + rows].copy_from_slice(&sh.v_codes[src..src + rows]);
+                let (dsts, srcs) = ((li * a + bw * c) * sc, (li * sh.full_len) * sc);
+                let srows = sh.full_len * sc;
+                k_scales[dsts..dsts + srows].copy_from_slice(&sh.k_scales[srcs..srcs + srows]);
+                v_scales[dsts..dsts + srows].copy_from_slice(&sh.v_scales[srcs..srcs + srows]);
+            }
+        }
+
+        for (i, r) in reqs.iter().enumerate() {
+            let q = match &r.view {
+                CacheView::Quant(q) => q,
+                _ => bail!("mixed cache families in one fused quant batch"),
+            };
+            token[i] = r.token;
+            pos[i] = r.pos;
+            buf_idx[i] = r.buf_idx;
+            member[i] = 1.0;
+            for li in 0..l {
+                let (dst, src) = ((li * a + i * c) * kvd, (li * c) * kvd);
+                k_codes[dst..dst + c * kvd].copy_from_slice(&q.k_codes[src..src + c * kvd]);
+                v_codes[dst..dst + c * kvd].copy_from_slice(&q.v_codes[src..src + c * kvd]);
+                let (dsts, srcs) = ((li * a + i * c) * sc, (li * c) * sc);
+                k_scales[dsts..dsts + c * sc].copy_from_slice(&q.k_scales[srcs..srcs + c * sc]);
+                v_scales[dsts..dsts + c * sc].copy_from_slice(&q.v_scales[srcs..srcs + c * sc]);
+            }
+            tags[i * l * c..(i + 1) * l * c].copy_from_slice(q.tags);
+            mask[i * l * c..(i + 1) * l * c].copy_from_slice(q.mask);
+            buf_k[i * l * bufs * kvd..(i + 1) * l * bufs * kvd].copy_from_slice(q.buf_k);
+            buf_v[i * l * bufs * kvd..(i + 1) * l * bufs * kvd].copy_from_slice(q.buf_v);
+            buf_mask[i * l * bufs..(i + 1) * l * bufs].copy_from_slice(q.buf_mask);
+            for li in 0..l {
+                let row = (i * l + li) * c;
+                for s in 0..c {
+                    bt[row + s] = (i * c + s) as i32;
+                }
+            }
+            if let Some(sh) = &q.shared {
+                if chosen.map(|e| e.id) == Some(sh.id) {
+                    for li in 0..l {
+                        let row = (i * l + li) * c;
+                        for s in 0..sh.len {
+                            bt[row + s] = (bw * c + s) as i32;
+                        }
+                    }
+                } else {
+                    for li in 0..l {
+                        let (dst, src) = ((li * a + i * c) * kvd, (li * sh.full_len) * kvd);
+                        let rows = sh.len * kvd;
+                        k_codes[dst..dst + rows].copy_from_slice(&sh.k_codes[src..src + rows]);
+                        v_codes[dst..dst + rows].copy_from_slice(&sh.v_codes[src..src + rows]);
+                        let (dsts, srcs) = ((li * a + i * c) * sc, (li * sh.full_len) * sc);
+                        let srows = sh.len * sc;
+                        k_scales[dsts..dsts + srows]
+                            .copy_from_slice(&sh.k_scales[srcs..srcs + srows]);
+                        v_scales[dsts..dsts + srows]
+                            .copy_from_slice(&sh.v_scales[srcs..srcs + srows]);
+                    }
+                }
+            }
+        }
+
+        let exe = self.exe(&self.manifest.decode_quant_batch_name(c, bw))?;
+        let dyn_bufs = [
+            self.buf_i32(&token, &[bw])?,
+            self.buf_i32(&pos, &[bw])?,
+            self.buf_i32(&buf_idx, &[bw])?,
+            self.buf_f32(&member, &[bw])?,
+            self.buf_i32(&bt, &[bw, l, c])?,
+            self.buf_u8(&k_codes, &[l, a, hkv, dh])?,
+            self.buf_f32(&k_scales, &[l, a, hkv, g])?,
+            self.buf_u8(&v_codes, &[l, a, hkv, dh])?,
+            self.buf_f32(&v_scales, &[l, a, hkv, g])?,
+            self.buf_u8(&tags, &[bw, l, c])?,
+            self.buf_f32(&mask, &[bw, l, c])?,
+            self.buf_f32(&buf_k, &[bw, l, bufs, hkv, dh])?,
+            self.buf_f32(&buf_v, &[bw, l, bufs, hkv, dh])?,
+            self.buf_f32(&buf_mask, &[bw, l, bufs])?,
+        ];
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.extend(dyn_bufs.iter());
+        let outs = self.run_tuple(&exe, &args)?;
+        self.decode_execs.set(self.decode_execs.get() + 1);
+        split_batch_out(&m, outs, n, c)
+    }
+
+    /// One fused execute of `decode_fp32_c{c}_b{bw}` — the f32-arena twin
+    /// of [`Engine::run_quant_batch`] (same block-table contract).
+    fn run_fp32_batch(
+        &self,
+        reqs: &[BatchDecodeReq<'_>],
+        bw: usize,
+        c: usize,
+    ) -> Result<Vec<DecodeOut>> {
+        let m = self.model().clone();
+        let (l, hkv, dh, bufs, p) =
+            (m.n_layers, m.n_kv_heads, m.d_head, m.buf_slots, m.prefill_len);
+        let kvd = hkv * dh;
+        let a = bw * c + p;
+        let n = reqs.len();
+        debug_assert!(n <= bw, "batch of {n} exceeds compiled width {bw}");
+
+        let mut token = vec![0i32; bw];
+        let mut pos = vec![0i32; bw];
+        let mut buf_idx = vec![0i32; bw];
+        let mut member = vec![0f32; bw];
+        let mut bt = vec![0i32; bw * l * c];
+        let mut k_cache = vec![0f32; l * a * kvd];
+        let mut v_cache = vec![0f32; l * a * kvd];
+        let mut mask_all = vec![0f32; bw * l * c];
+        let mut buf_k = vec![0f32; bw * l * bufs * kvd];
+        let mut buf_v = vec![0f32; bw * l * bufs * kvd];
+        let mut buf_mask = vec![0f32; bw * l * bufs];
+
+        let chosen = reqs.iter().find_map(|r| match &r.view {
+            CacheView::Fp32 { shared, .. } => shared.as_ref(),
+            _ => None,
+        });
+        if let Some(sh) = chosen {
+            for li in 0..l {
+                let (dst, src) = ((li * a + bw * c) * kvd, (li * sh.full_len) * kvd);
+                let rows = sh.full_len * kvd;
+                k_cache[dst..dst + rows].copy_from_slice(&sh.k[src..src + rows]);
+                v_cache[dst..dst + rows].copy_from_slice(&sh.v[src..src + rows]);
+            }
+        }
+
+        for (i, r) in reqs.iter().enumerate() {
+            let (k, v, mask, bk, bv, bm, shared) = match &r.view {
+                CacheView::Fp32 { k, v, mask, buf_k, buf_v, buf_mask, shared, .. } => {
+                    (*k, *v, *mask, *buf_k, *buf_v, *buf_mask, shared.as_ref())
+                }
+                _ => bail!("mixed cache families in one fused fp32 batch"),
+            };
+            token[i] = r.token;
+            pos[i] = r.pos;
+            buf_idx[i] = r.buf_idx;
+            member[i] = 1.0;
+            for li in 0..l {
+                let (dst, src) = ((li * a + i * c) * kvd, (li * c) * kvd);
+                k_cache[dst..dst + c * kvd].copy_from_slice(&k[src..src + c * kvd]);
+                v_cache[dst..dst + c * kvd].copy_from_slice(&v[src..src + c * kvd]);
+            }
+            mask_all[i * l * c..(i + 1) * l * c].copy_from_slice(mask);
+            buf_k[i * l * bufs * kvd..(i + 1) * l * bufs * kvd].copy_from_slice(bk);
+            buf_v[i * l * bufs * kvd..(i + 1) * l * bufs * kvd].copy_from_slice(bv);
+            buf_mask[i * l * bufs..(i + 1) * l * bufs].copy_from_slice(bm);
+            for li in 0..l {
+                let row = (i * l + li) * c;
+                for s in 0..c {
+                    bt[row + s] = (i * c + s) as i32;
+                }
+            }
+            if let Some(sh) = shared {
+                if chosen.map(|e| e.id) == Some(sh.id) {
+                    for li in 0..l {
+                        let row = (i * l + li) * c;
+                        for s in 0..sh.len {
+                            bt[row + s] = (bw * c + s) as i32;
+                        }
+                    }
+                } else {
+                    for li in 0..l {
+                        let (dst, src) = ((li * a + i * c) * kvd, (li * sh.full_len) * kvd);
+                        let rows = sh.len * kvd;
+                        k_cache[dst..dst + rows].copy_from_slice(&sh.k[src..src + rows]);
+                        v_cache[dst..dst + rows].copy_from_slice(&sh.v[src..src + rows]);
+                    }
+                }
+            }
+        }
+
+        let exe = self.exe(&self.manifest.decode_fp32_batch_name(c, bw))?;
+        let dyn_bufs = [
+            self.buf_i32(&token, &[bw])?,
+            self.buf_i32(&pos, &[bw])?,
+            self.buf_i32(&buf_idx, &[bw])?,
+            self.buf_f32(&member, &[bw])?,
+            self.buf_i32(&bt, &[bw, l, c])?,
+            self.buf_f32(&k_cache, &[l, a, hkv, dh])?,
+            self.buf_f32(&v_cache, &[l, a, hkv, dh])?,
+            self.buf_f32(&mask_all, &[bw, l, c])?,
+            self.buf_f32(&buf_k, &[bw, l, bufs, hkv, dh])?,
+            self.buf_f32(&buf_v, &[bw, l, bufs, hkv, dh])?,
+            self.buf_f32(&buf_mask, &[bw, l, bufs])?,
+        ];
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.extend(dyn_bufs.iter());
+        let outs = self.run_tuple(&exe, &args)?;
+        self.decode_execs.set(self.decode_execs.get() + 1);
+        split_batch_out(&m, outs, n, c)
+    }
+
+    /// Can `[start, start+len)` be served by the chunk artifacts? Both
+    /// ends must sit on the smallest compiled chunk's grid (every larger
+    /// compiled length is a multiple of it, so any on-grid span covers
+    /// greedily); `len == 0` (logits-only final chunk) needs a whole
+    /// prefill and stays on the memo path.
+    fn can_chunk(&self, start: usize, len: usize) -> bool {
+        match self.manifest.prefill_chunk_lens.iter().min() {
+            Some(&g) => len > 0 && start % g == 0 && len % g == 0,
+            None => false,
+        }
+    }
+
+    /// Serve one prefill chunk with the `prefill_chunk_p{P}_n{N}`
+    /// artifacts: take (or create) this prompt's past-row state, catch
+    /// up rows `[filled, start)` that an attach skipped, then cover
+    /// `[start, start+len)` greedily with compiled sub-chunks — one
+    /// PJRT execute per sub-chunk, no whole-prompt execute anywhere.
+    fn prefill_chunk_hlo(
+        &self,
+        tokens: &[i32],
+        start: usize,
+        len: usize,
+    ) -> Result<PrefillChunkOut> {
+        let m = self.model().clone();
+        let p = m.prefill_len;
+        let kvd = m.n_kv_heads * m.d_head;
+        let mut st = {
+            let mut states = self.chunk_states.borrow_mut();
+            match states.iter().position(|(t, _)| t.as_slice() == tokens) {
+                Some(i) => states.remove(i).1,
+                None => ChunkState {
+                    filled: 0,
+                    past_k: vec![0f32; m.n_layers * p * kvd],
+                    past_v: vec![0f32; m.n_layers * p * kvd],
+                },
+            }
+        };
+        if st.filled < start {
+            // a shared-prefix attach starts mid-prompt: the skipped rows
+            // must exist before this chunk can attend over them
+            self.run_chunks(tokens, st.filled, start - st.filled, &mut st)?;
+        }
+        let out = self.run_chunks(tokens, start, len, &mut st)?;
+        if start + len < p {
+            // prompt still mid-prefill: keep the state warm (LRU, back =
+            // most recent); the final chunk retires it instead
+            let mut states = self.chunk_states.borrow_mut();
+            if states.len() >= self.memo_cap {
+                states.remove(0);
+                self.memo_evicts.set(self.memo_evicts.get() + 1);
+            }
+            states.push((tokens.to_vec(), st));
+        }
+        Ok(out)
+    }
+
+    /// Cover `[start, start+len)` with compiled chunk executes (largest
+    /// first), appending each sub-chunk's K/V to `st` so later chunks
+    /// attend over it. Logits are captured from the sub-execute that
+    /// ends at `prefill_len` — the whole-prompt last-position logits.
+    fn run_chunks(
+        &self,
+        tokens: &[i32],
+        start: usize,
+        len: usize,
+        st: &mut ChunkState,
+    ) -> Result<PrefillChunkOut> {
+        let m = self.model().clone();
+        let p = m.prefill_len;
+        let l = m.n_layers;
+        let kvd = m.n_kv_heads * m.d_head;
+        let g = *self
+            .manifest
+            .prefill_chunk_lens
+            .iter()
+            .min()
+            .context("no chunk artifacts")?;
+        let mut lens: Vec<usize> = self
+            .manifest
+            .prefill_chunk_lens
+            .iter()
+            .copied()
+            .filter(|&cl| cl % g == 0)
+            .collect();
+        lens.sort_unstable_by(|x, y| y.cmp(x));
+        let mut k = vec![0f32; l * len * kvd];
+        let mut v = vec![0f32; l * len * kvd];
+        let mut logits = Vec::new();
+        let mut off = 0usize;
+        while off < len {
+            let rem = len - off;
+            let n = lens
+                .iter()
+                .copied()
+                .find(|&cl| cl <= rem)
+                .with_context(|| format!("no chunk artifact covers remaining {rem} rows"))?;
+            let s0 = start + off;
+            let mut toks = vec![0i32; n];
+            for (j, t) in toks.iter_mut().enumerate() {
+                if s0 + j < tokens.len() && s0 + j < p {
+                    *t = tokens[s0 + j];
+                }
+            }
+            let exe = self.exe(&self.manifest.prefill_chunk_name(n))?;
+            let dyn_bufs = [
+                self.buf_i32(&toks, &[n])?,
+                self.buf_i32(&[s0 as i32], &[1])?,
+                self.buf_f32(&st.past_k, &[l, p, m.n_kv_heads, m.d_head])?,
+                self.buf_f32(&st.past_v, &[l, p, m.n_kv_heads, m.d_head])?,
+            ];
+            let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+            args.extend(dyn_bufs.iter());
+            let outs = self.run_tuple(&exe, &args)?;
+            self.prefill_execs.set(self.prefill_execs.get() + 1);
+            if outs.len() != 4 {
+                bail!("prefill chunk returned {} outputs", outs.len());
+            }
+            let ck = outs[1].to_vec::<f32>().map_err(to_anyhow)?;
+            let cv = outs[2].to_vec::<f32>().map_err(to_anyhow)?;
+            for li in 0..l {
+                let src = (li * n) * kvd;
+                let dst = (li * len + off) * kvd;
+                k[dst..dst + n * kvd].copy_from_slice(&ck[src..src + n * kvd]);
+                v[dst..dst + n * kvd].copy_from_slice(&cv[src..src + n * kvd]);
+                let past = (li * p + s0) * kvd;
+                st.past_k[past..past + n * kvd].copy_from_slice(&ck[src..src + n * kvd]);
+                st.past_v[past..past + n * kvd].copy_from_slice(&cv[src..src + n * kvd]);
+            }
+            if s0 + n == p {
+                logits = outs[0].to_vec::<f32>().map_err(to_anyhow)?;
+            }
+            st.filled = st.filled.max(s0 + n);
+            off += n;
+        }
+        // the chunk artifacts do not compute the SnapKV observation
+        // statistic (it needs the last obs_window whole-prompt queries);
+        // obs-consuming modes take the whole-prompt prefill path
+        Ok(PrefillChunkOut { logits, k, v, obs: vec![0f32; l * len] })
+    }
 }
 
 /// The fused decode surface over the PJRT artifacts. `decode_batch`
-/// uses the trait default (map over [`Engine::decode`]): a compatible
-/// batch shares one compiled module, which the executable cache
-/// resolves/compiles on the first member and serves warm to the rest.
-/// The current artifacts are single-request HLO, so the per-member
-/// execute remains — a multi-request decode artifact slots in behind
-/// `decode_batch` without touching any caller; the launch-amortization
-/// effect on real hardware is priced by
-/// [`crate::sim::ServingCost::decode_step_per_session`] vs
-/// [`crate::sim::ServingCost::decode_step`]. `prefill_chunk` likewise
-/// slices the single-request prefill artifact (memoized per prompt so
-/// a chunked prefill still costs one execute, paid on the first chunk);
-/// a chunked-prefill artifact replaces the memo the same way.
+/// drives the multi-request `decode_*_c{C}_b{B}` modules: the batch is
+/// padded up to the narrowest compiled width that covers it (ragged
+/// lanes masked out by `member`), each lane's slabs land in a private
+/// segment of one physical arena, a shared prompt prefix is staged in
+/// the arena's extra prefix segment exactly once, and per-lane block
+/// tables gather every view — **one PJRT execute advances the whole
+/// batch**. Batches wider than the widest compiled module split
+/// greedily into fused sub-executes; a build without batched artifacts
+/// (or a heterogeneous direct call) falls back to per-member executes,
+/// counted in [`ExecStats::fallback_executes`]. The launch-amortization
+/// effect is priced by [`crate::sim::ServingCost::decode_step`] vs
+/// [`crate::sim::ServingCost::decode_step_per_session`] and re-anchored
+/// against measured execute times in `bench_scheduler`.
+///
+/// `prefill_chunk` drives the `prefill_chunk_p{P}_n{N}` modules the
+/// same way — one execute per chunk against the accumulated past rows —
+/// and falls back to a bounded LRU-memoized whole-prompt prefill when
+/// chunk artifacts are absent or the chunk geometry is off the compiled
+/// grid.
 impl DecodeEngine for Engine {
     fn model(&self) -> &crate::model::ModelConfig {
         Engine::model(self)
@@ -559,6 +1126,43 @@ impl DecodeEngine for Engine {
         Engine::decode(self, token, pos, buf_idx, view)
     }
 
+    fn decode_batch(&self, reqs: &[BatchDecodeReq<'_>]) -> Result<Vec<DecodeOut>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        // family/capacity homogeneity: the scheduler's BatchKey grouping
+        // guarantees it; a heterogeneous direct call falls back
+        let fused_ok = !self.manifest.batch_widths.is_empty()
+            && match &reqs[0].view {
+                CacheView::Quant(q0) => reqs.iter().all(
+                    |r| matches!(&r.view, CacheView::Quant(q) if q.capacity == q0.capacity),
+                ),
+                CacheView::Fp32 { capacity: c0, .. } => reqs.iter().all(
+                    |r| matches!(&r.view, CacheView::Fp32 { capacity, .. } if capacity == c0),
+                ),
+            };
+        if !fused_ok {
+            return self.decode_batch_fallback(reqs);
+        }
+        let mut outs = Vec::with_capacity(reqs.len());
+        let mut rest = reqs;
+        while !rest.is_empty() {
+            let n = rest.len();
+            let bw = self
+                .manifest
+                .pick_batch_width(n)
+                .or_else(|| self.manifest.widest_batch_width(n))
+                .expect("batch_widths checked nonempty");
+            let (chunk, tail) = rest.split_at(n.min(bw));
+            outs.extend(match &chunk[0].view {
+                CacheView::Quant(q) => self.run_quant_batch(chunk, bw, q.capacity)?,
+                CacheView::Fp32 { capacity, .. } => self.run_fp32_batch(chunk, bw, *capacity)?,
+            });
+            rest = tail;
+        }
+        Ok(outs)
+    }
+
     fn prefill_chunk(
         &self,
         tokens: &[i32],
@@ -566,40 +1170,63 @@ impl DecodeEngine for Engine {
         len: usize,
         _view: &CacheView,
     ) -> Result<PrefillChunkOut> {
-        if start == 0 && len == self.model().prefill_len {
+        let p = self.model().prefill_len;
+        if start == 0 && len == p {
             // whole-prompt "chunk" (the chunking-disabled path): run the
             // prefill directly and move its buffers through — no memo
             // entry, no slice copy
             let PrefillOut { logits, k, v, obs } = Engine::prefill(self, tokens)?;
             return Ok(PrefillChunkOut { logits, k, v, obs });
         }
-        let hit = self
+        if self.can_chunk(start, len) {
+            return self.prefill_chunk_hlo(tokens, start, len);
+        }
+        // fallback: slice a memoized whole-prompt prefill (LRU, back =
+        // most recently used)
+        let found = self
             .prefill_memo
             .borrow()
             .iter()
-            .any(|(t, _)| t.as_slice() == tokens);
-        if !hit {
-            let pf = Engine::prefill(self, tokens)?;
-            let mut memo = self.prefill_memo.borrow_mut();
-            if memo.len() >= PREFILL_MEMO_CAP {
-                memo.remove(0); // oldest prompt pays a re-execute if resumed
+            .position(|(t, _)| t.as_slice() == tokens);
+        let out = match found {
+            Some(i) => {
+                self.memo_hits.set(self.memo_hits.get() + 1);
+                let mut memo = self.prefill_memo.borrow_mut();
+                let entry = memo.remove(i);
+                let out = slice_prefill_chunk(self.model(), &entry.1, start, len)?;
+                memo.push(entry);
+                out
             }
-            memo.push((tokens.to_vec(), pf));
-        }
-        let out = {
-            let memo = self.prefill_memo.borrow();
-            let (_, pf) = memo
-                .iter()
-                .find(|(t, _)| t.as_slice() == tokens)
-                .expect("memo filled above");
-            slice_prefill_chunk(self.model(), pf, start, len)?
+            None => {
+                let pf = Engine::prefill(self, tokens)?;
+                let out = slice_prefill_chunk(self.model(), &pf, start, len)?;
+                let mut memo = self.prefill_memo.borrow_mut();
+                if memo.len() >= self.memo_cap {
+                    memo.remove(0); // least-recent prompt pays a re-execute
+                    self.memo_evicts.set(self.memo_evicts.get() + 1);
+                }
+                memo.push((tokens.to_vec(), pf));
+                out
+            }
         };
         // the final chunk retires the entry: the prompt is fully sliced
         // and a stale image must not outlive its session
-        if start + len == self.model().prefill_len {
-            self.prefill_memo.borrow_mut().retain(|(t, _)| t.as_slice() != tokens);
+        if start + len == p {
+            self.prefill_memo
+                .borrow_mut()
+                .retain(|(t, _)| t.as_slice() != tokens);
         }
         Ok(out)
+    }
+
+    fn exec_stats(&self) -> ExecStats {
+        ExecStats {
+            decode_executes: self.decode_execs.get(),
+            prefill_executes: self.prefill_execs.get(),
+            fallback_executes: self.fallback_execs.get(),
+            prefill_memo_hits: self.memo_hits.get(),
+            prefill_memo_evictions: self.memo_evicts.get(),
+        }
     }
 }
 
@@ -613,6 +1240,41 @@ fn decode_out(outs: Vec<xla::Literal>) -> Result<DecodeOut> {
         new_v: outs[2].to_vec::<f32>().map_err(to_anyhow)?,
         probs: outs[3].to_vec::<f32>().map_err(to_anyhow)?,
     })
+}
+
+/// Split stacked batched-decode outputs (`logits (B,V)`, `new_k/new_v
+/// (B,L,Hkv,Dh)`, `probs (B,L,H,C+BUF)`) back into the first `n` live
+/// lanes' per-member [`DecodeOut`]s (padded lanes are dropped).
+fn split_batch_out(
+    m: &crate::model::ModelConfig,
+    outs: Vec<xla::Literal>,
+    n: usize,
+    c: usize,
+) -> Result<Vec<DecodeOut>> {
+    if outs.len() != 4 {
+        bail!("batched decode returned {} outputs, want 4", outs.len());
+    }
+    let logits_all = outs[0].to_vec::<f32>().map_err(to_anyhow)?;
+    let k_all = outs[1].to_vec::<f32>().map_err(to_anyhow)?;
+    let v_all = outs[2].to_vec::<f32>().map_err(to_anyhow)?;
+    let probs_all = outs[3].to_vec::<f32>().map_err(to_anyhow)?;
+    let kvd = m.n_kv_heads * m.d_head;
+    let (sv, sk, sp) = (
+        m.vocab,
+        m.n_layers * kvd,
+        m.n_layers * m.n_heads * (c + m.buf_slots),
+    );
+    if logits_all.len() < n * sv || k_all.len() < n * sk || probs_all.len() < n * sp {
+        bail!("batched decode outputs narrower than {n} lanes");
+    }
+    Ok((0..n)
+        .map(|i| DecodeOut {
+            logits: logits_all[i * sv..(i + 1) * sv].to_vec(),
+            new_k: k_all[i * sk..(i + 1) * sk].to_vec(),
+            new_v: v_all[i * sk..(i + 1) * sk].to_vec(),
+            probs: probs_all[i * sp..(i + 1) * sp].to_vec(),
+        })
+        .collect())
 }
 
 fn to_anyhow(e: xla::Error) -> anyhow::Error {

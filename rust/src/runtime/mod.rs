@@ -12,7 +12,7 @@ pub mod engine;
 pub mod weights;
 
 pub use engine::{
-    BatchDecodeReq, CacheView, DecodeEngine, DecodeOut, Engine, PrefillChunkOut, PrefillOut,
-    QuantCache,
+    BatchDecodeReq, CacheView, DecodeEngine, DecodeOut, Engine, ExecStats, PrefillChunkOut,
+    PrefillOut, QuantCache, SharedFp32Rows, SharedQuantRows,
 };
 pub use weights::{load_weights, Tensor};

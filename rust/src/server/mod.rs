@@ -16,10 +16,15 @@
 //! the cross-session prefix-sharing counters (`prefix_hits`,
 //! `prefix_misses`, `prefix_inserts`, `prefix_cow_faults`,
 //! `prefix_cow_denied`, `prefix_reclaims`, `prefix_resident_bytes`,
-//! `prefix_resident_entries`), and the chunked-prefill lane counters
-//! (`prefill_chunk_tokens`, `prefill_chunks`,
-//! `prefill_interleaved_steps`, `prefill_queue_depth`) alongside the
-//! serving totals.
+//! `prefix_resident_entries`, plus the zero-copy attach counters
+//! `prefix_alias_hits`/`prefix_alias_bytes`), the chunked-prefill lane
+//! counters (`prefill_chunk_tokens`, `prefill_chunks`,
+//! `prefill_interleaved_steps`, `prefill_queue_depth`), and the
+//! PJRT-execute ledger (`pjrt_decode_executes` — one per fused batch,
+//! one per counted fallback member `pjrt_fallback_executes` —
+//! `pjrt_prefill_executes`, and the engine prefill-memo
+//! `prefill_memo_hits`/`prefill_memo_evictions`) alongside the serving
+//! totals.
 //! Per-request replies carry `preemptions` (recompute resets),
 //! `swap_ins` (zero-replay resumes), and the TTFT decomposition
 //! (`prefill_ms` engine time + `prefill_chunks`; `ttft_ms -
@@ -223,6 +228,21 @@ fn handle_conn(
         out.set("total_ms", Json::Num(result.total_ms));
         out.set("avg_bits", Json::Num(result.avg_bits));
         out.set("live_tokens", Json::Num(result.live_tokens as f64));
+        // actual PJRT executes this request caused (0 under fake
+        // engines; decode executes are only attributable on the
+        // single-session path — fused batches land in `stats`)
+        out.set(
+            "pjrt_decode_executes",
+            Json::Num(result.breakdown.pjrt_decode_executes as f64),
+        );
+        out.set(
+            "pjrt_prefill_executes",
+            Json::Num(result.breakdown.pjrt_prefill_executes as f64),
+        );
+        out.set(
+            "pjrt_fallback_executes",
+            Json::Num(result.breakdown.pjrt_fallback_executes as f64),
+        );
         out.set("preemptions", Json::Num(result.preemptions as f64));
         out.set("swap_ins", Json::Num(result.swap_ins as f64));
         if let Some(e) = &result.error {

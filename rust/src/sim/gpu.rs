@@ -246,6 +246,47 @@ impl ServingCost {
         2.0 * snapshot_bytes / (self.gpu.host_link_gbps * 1e9) * 1e3
     }
 
+    /// Re-anchor the analytic launch-amortization and host-link terms
+    /// against **measured** numbers (e.g. `bench_scheduler`'s measured
+    /// PJRT execute sweep): replaces the profile's per-layer launch
+    /// overhead and device<->host link bandwidth in place, so every
+    /// analytically-priced assertion can re-run against measured
+    /// anchors instead of datasheet guesses. Non-positive or non-finite
+    /// inputs leave the corresponding term unchanged — a failed
+    /// measurement must not zero the model.
+    pub fn reanchor(&mut self, launch_us_per_layer: f64, host_link_gbps: f64) {
+        if launch_us_per_layer > 0.0 && launch_us_per_layer.is_finite() {
+            self.gpu.launch_us = launch_us_per_layer;
+        }
+        if host_link_gbps > 0.0 && host_link_gbps.is_finite() {
+            self.gpu.host_link_gbps = host_link_gbps;
+        }
+    }
+
+    /// Least-squares intercept of measured execute time (µs) against
+    /// batch width: the per-execute launch/runtime overhead a fused
+    /// step pays once however wide it is — the quantity batching
+    /// amortizes. Divide by `n_layers` to feed
+    /// [`ServingCost::reanchor`]. Returns `None` without at least two
+    /// distinct widths (no slope to separate the intercept from);
+    /// negative intercepts (measurement noise) clamp to 0.
+    pub fn launch_intercept_us(points: &[(usize, f64)]) -> Option<f64> {
+        let n = points.len() as f64;
+        let first = points.first()?.0;
+        if points.iter().all(|&(b, _)| b == first) {
+            return None;
+        }
+        let sx: f64 = points.iter().map(|&(b, _)| b as f64).sum();
+        let sy: f64 = points.iter().map(|&(_, t)| t).sum();
+        let sxx: f64 = points.iter().map(|&(b, _)| (b as f64) * (b as f64)).sum();
+        let sxy: f64 = points.iter().map(|&(b, t)| b as f64 * t).sum();
+        let denom = n * sxx - sx * sx;
+        if denom.abs() < f64::EPSILON {
+            return None;
+        }
+        Some(((sy * sxx - sx * sxy) / denom).max(0.0))
+    }
+
     /// Recompute cost (ms) of a preempted request: replay
     /// `replay_steps` decode steps (the generated CoT so far) at the
     /// running batch's step time. This is what suspend-to-host
@@ -367,6 +408,49 @@ mod tests {
         // FullKV at 16K tokens swaps 100x+ more bytes than ThinKV
         let full_snap = c.model.fullkv_bytes_per_token() * 16_384.0;
         assert!(c.swap_roundtrip_ms(full_snap) > 50.0 * swap);
+    }
+
+    /// Re-anchoring swaps the datasheet launch/link guesses for
+    /// measured ones, and the amortization ordering (fused < N singles
+    /// for batch >= 4) must survive any positive anchor.
+    #[test]
+    fn reanchor_applies_measured_terms_and_preserves_amortization() {
+        let mut c = cost();
+        c.reanchor(9.5, 12.0);
+        assert!((c.gpu.launch_us - 9.5).abs() < 1e-12);
+        assert!((c.gpu.host_link_gbps - 12.0).abs() < 1e-12);
+        // bad measurements leave the model untouched
+        c.reanchor(-1.0, f64::NAN);
+        assert!((c.gpu.launch_us - 9.5).abs() < 1e-12);
+        assert!((c.gpu.host_link_gbps - 12.0).abs() < 1e-12);
+        c.reanchor(0.0, 0.0);
+        assert!((c.gpu.launch_us - 9.5).abs() < 1e-12);
+        let kv = c.model.kv_bytes_per_token(3.4) * 1024.0;
+        let single = c.decode_step(1, kv, 0.0, false, 0.0);
+        for batch in [4usize, 8, 16] {
+            let fused = c.decode_step(batch, kv, 0.0, false, 0.0);
+            assert!(
+                fused.total_us() < batch as f64 * single.total_us(),
+                "fused not amortizing at batch {batch} under measured anchors"
+            );
+        }
+    }
+
+    /// The intercept of execute time vs batch width is the per-execute
+    /// launch overhead — recovered exactly from synthetic linear data.
+    #[test]
+    fn launch_intercept_recovers_fixed_overhead() {
+        // t(B) = 120 + 35 * B
+        let pts: Vec<(usize, f64)> =
+            [1usize, 2, 4, 8].iter().map(|&b| (b, 120.0 + 35.0 * b as f64)).collect();
+        let a = ServingCost::launch_intercept_us(&pts).unwrap();
+        assert!((a - 120.0).abs() < 1e-9, "intercept {a}");
+        // all-equal widths: intercept is unidentifiable
+        assert!(ServingCost::launch_intercept_us(&[(4, 1.0), (4, 2.0)]).is_none());
+        assert!(ServingCost::launch_intercept_us(&[]).is_none());
+        // noise can drive the fit negative; it clamps to 0
+        let neg = ServingCost::launch_intercept_us(&[(1, 0.0), (2, 50.0)]).unwrap();
+        assert_eq!(neg, 0.0);
     }
 
     #[test]

@@ -17,7 +17,9 @@ use std::cell::{Cell, RefCell};
 use anyhow::Result;
 
 use crate::model::{Manifest, ModelConfig};
-use crate::runtime::{BatchDecodeReq, CacheView, DecodeEngine, DecodeOut, PrefillChunkOut, PrefillOut};
+use crate::runtime::{
+    BatchDecodeReq, CacheView, DecodeEngine, DecodeOut, ExecStats, PrefillChunkOut, PrefillOut,
+};
 use crate::util::rng::Rng;
 
 /// Tiny dims, no artifact files needed (nothing loads HLO).
@@ -39,6 +41,8 @@ pub fn tiny_manifest() -> Manifest {
         },
         quant_caps: vec![128],
         fp32_caps: vec![256],
+        batch_widths: vec![],
+        prefill_chunk_lens: vec![],
         micro_c: 128,
         golden_attn_c: 128,
         artifacts_dir: ".".into(),
@@ -188,6 +192,13 @@ pub struct MeteredEngine {
     clock: Cell<u64>,
     /// Clock value at the start of each fused decode call, in order.
     step_marks: RefCell<Vec<u64>>,
+    /// Mirrors the real engine's PJRT ledger: one decode execute per
+    /// fused [`DecodeEngine::decode_batch`] call (whatever its width),
+    /// one per standalone decode, one prefill execute per prefill /
+    /// chunk call — so artifact-free benches can gate on
+    /// `fused_executes > 0` against the exact production counters.
+    decode_execs: Cell<u64>,
+    prefill_execs: Cell<u64>,
 }
 
 impl MeteredEngine {
@@ -196,6 +207,8 @@ impl MeteredEngine {
             inner: CausalEngine::new(m),
             clock: Cell::new(0),
             step_marks: RefCell::new(Vec::new()),
+            decode_execs: Cell::new(0),
+            prefill_execs: Cell::new(0),
         }
     }
 
@@ -223,6 +236,7 @@ impl DecodeEngine for MeteredEngine {
 
     fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
         self.tick(self.inner.model().prefill_len as u64);
+        self.prefill_execs.set(self.prefill_execs.get() + 1);
         self.inner.prefill(tokens)
     }
 
@@ -234,18 +248,35 @@ impl DecodeEngine for MeteredEngine {
         view: &CacheView,
     ) -> Result<PrefillChunkOut> {
         self.tick(len.max(1) as u64);
+        self.prefill_execs.set(self.prefill_execs.get() + 1);
         self.inner.prefill_chunk(tokens, start, len, view)
     }
 
     fn decode(&self, token: i32, pos: i32, buf_idx: i32, view: &CacheView) -> Result<DecodeOut> {
         self.tick(1);
+        self.decode_execs.set(self.decode_execs.get() + 1);
         self.inner.decode(token, pos, buf_idx, view)
     }
 
     fn decode_batch(&self, reqs: &[BatchDecodeReq<'_>]) -> Result<Vec<DecodeOut>> {
         self.step_marks.borrow_mut().push(self.clock.get());
+        // one fused execute per call, like the batched-artifact engine;
+        // members still cost one clock unit each (the fused call's work
+        // scales with width even when the launch is amortized)
+        self.decode_execs.set(self.decode_execs.get() + 1);
         reqs.iter()
-            .map(|r| self.decode(r.token, r.pos, r.buf_idx, &r.view))
+            .map(|r| {
+                self.tick(1);
+                self.inner.decode(r.token, r.pos, r.buf_idx, &r.view)
+            })
             .collect()
+    }
+
+    fn exec_stats(&self) -> ExecStats {
+        ExecStats {
+            decode_executes: self.decode_execs.get(),
+            prefill_executes: self.prefill_execs.get(),
+            ..ExecStats::default()
+        }
     }
 }

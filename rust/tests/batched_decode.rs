@@ -1,5 +1,5 @@
 //! Cross-session batched decode: correctness properties that must hold
-//! for the fused worker path without any PJRT artifacts.
+//! for the fused worker path.
 //!
 //! The core bar (ISSUE 3): batching is **stream-invariant** — advancing
 //! sessions through `Scheduler::next_batch` + `advance_batch` (the real
@@ -9,6 +9,14 @@
 //! sizes, compression-mode mixes, and sampling temperatures. A
 //! deterministic [`DecodeEngine`] fake stands in for the PJRT engine so
 //! the property runs everywhere (CI has no artifacts).
+//!
+//! The `artifact_*` lanes (ISSUE 6) raise the same bar against the real
+//! PJRT engine and its compiled batched-decode artifacts: one execute
+//! per fused step when a compiled width covers the batch (asserted via
+//! the scheduler's PJRT ledger), counted greedy splits beyond the
+//! widest width, both cache families, and shared-prefix aliasing that
+//! is bit-invisible in the output. They self-skip (loudly) when `make
+//! artifacts` has not run.
 
 use std::sync::{mpsc, Arc};
 
@@ -16,9 +24,9 @@ use anyhow::Result;
 use thinkv::coordinator::{
     advance_batch, CompressionMode, RequestResult, Scheduler, ServeConfig, Session, StepOutcome,
 };
-use thinkv::kvcache::BlockPool;
-use thinkv::model::{Manifest, ModelConfig};
-use thinkv::runtime::{CacheView, DecodeEngine, DecodeOut, PrefillOut};
+use thinkv::kvcache::{BlockPool, PrefixIndex};
+use thinkv::model::{default_artifacts_dir, Manifest, ModelConfig};
+use thinkv::runtime::{CacheView, DecodeEngine, DecodeOut, Engine, PrefillOut};
 use thinkv::util::prop;
 use thinkv::util::rng::Rng;
 
@@ -42,6 +50,8 @@ fn tiny_manifest() -> Manifest {
         },
         quant_caps: vec![128],
         fp32_caps: vec![256],
+        batch_widths: vec![],
+        prefill_chunk_lens: vec![],
         micro_c: 128,
         golden_attn_c: 128,
         artifacts_dir: ".".into(),
@@ -132,7 +142,7 @@ fn cfg_for(tag: usize, max_new: usize, temperature: f64) -> ServeConfig {
 /// Reference: each session advanced alone, one `Session::step` at a
 /// time (no scheduler, no batching).
 fn run_sequential(
-    engine: &FakeEngine,
+    engine: &dyn DecodeEngine,
     man: &Manifest,
     cfgs: &[ServeConfig],
     prompts: &[Vec<i32>],
@@ -153,14 +163,14 @@ fn run_sequential(
 }
 
 /// Batched: the production path — scheduler batch formation plus the
-/// worker chunk body (`advance_batch`, one fused call per step) —
-/// driven with randomized batch caps and chunk lengths.
-fn run_batched(
-    engine: &FakeEngine,
+/// worker chunk body (`advance_batch`, one fused call per step). `pick`
+/// supplies each round's (batch cap, chunk length).
+fn run_batched_with(
+    engine: &dyn DecodeEngine,
     man: &Manifest,
     cfgs: &[ServeConfig],
     prompts: &[Vec<i32>],
-    g: &mut prop::Gen,
+    mut pick: impl FnMut() -> (usize, usize),
 ) -> (Vec<Vec<i32>>, thinkv::metrics::SchedSnapshot) {
     let pool = Arc::new(BlockPool::new(u64::MAX / 2));
     let sched = Scheduler::new(Arc::clone(&pool));
@@ -178,8 +188,7 @@ fn run_batched(
     }
     drop(tx);
     while sched.inflight() > 0 {
-        let max = g.usize(1, 6);
-        let chunk = g.usize(1, 7);
+        let (max, chunk) = pick();
         let batch = sched.next_batch(max).expect("runnable batch while inflight");
         advance_batch(&sched, engine, chunk, batch);
     }
@@ -190,6 +199,18 @@ fn run_batched(
         assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
     }
     (results.into_iter().map(|r| r.tokens).collect(), snap)
+}
+
+/// [`run_batched_with`] driven by randomized batch caps / chunk lengths
+/// from the property generator (the artifact-free lanes).
+fn run_batched(
+    engine: &dyn DecodeEngine,
+    man: &Manifest,
+    cfgs: &[ServeConfig],
+    prompts: &[Vec<i32>],
+    g: &mut prop::Gen,
+) -> (Vec<Vec<i32>>, thinkv::metrics::SchedSnapshot) {
+    run_batched_with(engine, man, cfgs, prompts, || (g.usize(1, 6), g.usize(1, 7)))
 }
 
 /// Batched decode must be stream-invariant: identical token streams to
@@ -278,4 +299,219 @@ fn mixed_family_batches_complete_and_match() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-gated lanes: identical bar, real PJRT engine (ISSUE 6).
+// ---------------------------------------------------------------------------
+
+fn artifacts_ready() -> bool {
+    let dir = default_artifacts_dir();
+    std::path::Path::new(&format!("{dir}/model_config.json")).exists()
+}
+
+fn real_cfg(mode: CompressionMode, max_new: usize) -> ServeConfig {
+    ServeConfig {
+        mode,
+        budget: 256,
+        max_new_tokens: max_new,
+        workers: 1,
+        temperature: 0.8,
+        ..ServeConfig::default()
+    }
+}
+
+/// Distinct prompts of ragged lengths (all under the compiled prefill
+/// length), so per-session positions and memo keys never collide.
+fn real_prompts(n: usize, vocab: usize, salt: u64) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(0xA11A5 ^ salt);
+    (0..n)
+        .map(|i| (0..9 + 5 * i).map(|_| rng.below(vocab) as i32).collect())
+        .collect()
+}
+
+/// The tentpole acceptance bar, quant family: with the compiled batch
+/// widths covering every batch the scheduler forms, a fused step issues
+/// **exactly one** PJRT execute (the ragged batch pads into the next
+/// compiled width instead of falling back per member), and the token
+/// streams stay bit-identical to per-session sequential decode.
+#[test]
+fn artifact_quant_fused_step_is_one_execute_and_stream_invariant() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::new().expect("engine");
+    let man = engine.manifest.clone();
+    // 5 is deliberately not a compiled width: the fused call must pad
+    // into width 8, not split or fall back
+    let n = 5;
+    let cfgs: Vec<ServeConfig> = (0..n)
+        .map(|_| real_cfg(CompressionMode::thinkv_default(), 6))
+        .collect();
+    let prompts = real_prompts(n, man.model.vocab, 1);
+
+    let sequential = run_sequential(&engine, &man, &cfgs, &prompts);
+    let (batched, snap) = run_batched_with(&engine, &man, &cfgs, &prompts, || (6, 3));
+
+    assert_eq!(sequential, batched, "fused PJRT decode must be stream-invariant");
+    assert!(snap.fused_steps > 0, "batched run must fuse");
+    assert_eq!(
+        snap.pjrt_decode_executes, snap.fused_steps,
+        "compiled widths cover every batch: exactly 1 execute per fused step"
+    );
+    assert_eq!(snap.pjrt_fallback_executes, 0, "no per-member fallback");
+    // every whole-prompt prefill either executed or hit the engine memo
+    assert_eq!(snap.pjrt_prefill_executes + snap.prefill_memo_hits, n as u64);
+}
+
+/// Same bar for the fp32 cache family (FullKV sessions batch through
+/// the fp32 batched artifacts, not the quant ones).
+#[test]
+fn artifact_fp32_fused_step_is_one_execute_and_stream_invariant() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::new().expect("engine");
+    let man = engine.manifest.clone();
+    let n = 3;
+    let cfgs: Vec<ServeConfig> =
+        (0..n).map(|_| real_cfg(CompressionMode::FullKv, 5)).collect();
+    let prompts = real_prompts(n, man.model.vocab, 2);
+
+    let sequential = run_sequential(&engine, &man, &cfgs, &prompts);
+    let (batched, snap) = run_batched_with(&engine, &man, &cfgs, &prompts, || (4, 2));
+
+    assert_eq!(sequential, batched, "fp32 fused decode must be stream-invariant");
+    assert!(snap.fused_steps > 0);
+    assert_eq!(snap.pjrt_decode_executes, snap.fused_steps);
+    assert_eq!(snap.pjrt_fallback_executes, 0);
+    assert_eq!(snap.pjrt_prefill_executes + snap.prefill_memo_hits, n as u64);
+}
+
+/// A batch wider than the widest compiled width cannot be one execute:
+/// the engine must split it greedily into compiled sub-batches (8 + 2
+/// for 10 members), every sub-execute landing in the ledger — never
+/// silently degrading to per-member fallback, never changing streams.
+#[test]
+fn artifact_batch_beyond_widest_width_splits_counted() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::new().expect("engine");
+    let man = engine.manifest.clone();
+    let widest = *man.batch_widths.iter().max().expect("compiled batch widths");
+    let n = widest + 2;
+    let cfgs: Vec<ServeConfig> = (0..n)
+        .map(|_| real_cfg(CompressionMode::thinkv_default(), 5))
+        .collect();
+    let prompts = real_prompts(n, man.model.vocab, 3);
+
+    let sequential = run_sequential(&engine, &man, &cfgs, &prompts);
+    let (batched, snap) = run_batched_with(&engine, &man, &cfgs, &prompts, || (n + 2, 2));
+
+    assert_eq!(sequential, batched, "split fused decode must be stream-invariant");
+    assert!(
+        snap.pjrt_decode_executes > snap.fused_steps,
+        "width {} batches exceed the widest compiled width {widest}: \
+         {} executes over {} steps must show the split",
+        n,
+        snap.pjrt_decode_executes,
+        snap.fused_steps
+    );
+    assert_eq!(snap.pjrt_fallback_executes, 0, "greedy split, not fallback");
+}
+
+/// Acceptance (ISSUE 6): shared-prefix members reference **one physical
+/// copy** of the prefix — and the aliasing is invisible in the output.
+/// A session attached to a resident prefix (block tables pointing into
+/// the shared rows, zero payload copies) must produce a token stream
+/// bit-identical to the same request decoded with sharing disabled.
+#[test]
+fn artifact_shared_prefix_alias_is_bit_invariant() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::new().expect("engine");
+    let man = engine.manifest.clone();
+    let cfg = real_cfg(CompressionMode::thinkv_default(), 6);
+    // common-system-prompt workload: a 32-token block-aligned system
+    // prefix (4 trie blocks of 8) plus distinct 24-token tails
+    let vocab = man.model.vocab;
+    let system: Vec<i32> = (0..32).map(|i| ((i * 7) % vocab) as i32).collect();
+    let mut rng = Rng::new(0xBEEF);
+    let mut tail = || (0..24).map(|_| rng.below(vocab) as i32).collect::<Vec<i32>>();
+    let mut pub_prompt = system.clone();
+    pub_prompt.extend(tail());
+    let mut shr_prompt = system.clone();
+    shr_prompt.extend(tail());
+
+    // shared lane: the publisher completes first (publishing its
+    // prefill), then the sharer attaches the resident blocks at
+    // construction and prefills only its delta
+    let pool = Arc::new(BlockPool::new(u64::MAX / 2));
+    let idx = PrefixIndex::new(Arc::clone(&pool), 8);
+    let sched = Scheduler::with_prefix(Arc::clone(&pool), None, Some(Arc::clone(&idx)));
+    let (tx, rx) = mpsc::channel();
+    let drain = |sched: &Scheduler| {
+        while sched.inflight() > 0 {
+            let batch = sched.next_batch(4).expect("runnable batch while inflight");
+            advance_batch(sched, &engine, 4, batch);
+        }
+    };
+    let publisher = Session::with_parts(
+        1,
+        pub_prompt,
+        &cfg,
+        &man,
+        Some(Arc::clone(&pool)),
+        Some(Arc::clone(&idx)),
+    )
+    .expect("publisher session");
+    sched.submit(publisher, tx.clone());
+    drain(&sched);
+    let sharer = Session::with_parts(
+        2,
+        shr_prompt.clone(),
+        &cfg,
+        &man,
+        Some(Arc::clone(&pool)),
+        Some(Arc::clone(&idx)),
+    )
+    .expect("sharer session");
+    sched.submit(sharer, tx.clone());
+    drain(&sched);
+    drop(tx);
+    let mut results: Vec<RequestResult> = rx.iter().collect();
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results.len(), 2);
+    for r in &results {
+        assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+    }
+    let snap = sched.snapshot();
+    assert!(snap.prefix_hits >= 1, "sharer must hit the resident prefix");
+    assert!(
+        snap.prefix_alias_hits >= 1,
+        "attachment must alias the shared rows, not memcpy them"
+    );
+    assert!(snap.prefix_alias_bytes > 0, "aliased bytes must be accounted");
+
+    // unshared control: same request id, prompt, and config — no index,
+    // so the whole prompt is prefilled into private rows
+    let pool2 = Arc::new(BlockPool::new(u64::MAX / 2));
+    let sched2 = Scheduler::new(Arc::clone(&pool2));
+    let (tx2, rx2) = mpsc::channel();
+    let solo = Session::with_pool(2, shr_prompt, &cfg, &man, Some(Arc::clone(&pool2)))
+        .expect("solo session");
+    sched2.submit(solo, tx2);
+    drain(&sched2);
+    let solo_res = rx2.iter().next().expect("solo result");
+    assert!(solo_res.error.is_none(), "solo failed: {:?}", solo_res.error);
+    assert_eq!(
+        results[1].tokens, solo_res.tokens,
+        "aliased shared-prefix decode must be bit-identical to unshared decode"
+    );
 }

@@ -144,6 +144,7 @@ fn decode_step_deterministic_and_probs_normalized() {
         buf_k: &buf_k,
         buf_v: &buf_v,
         buf_mask: &buf_mask,
+        shared: None,
     };
     let a = eng.decode_quant(5, 0, 0, &cache).unwrap();
     let bb = eng.decode_quant(5, 0, 0, &cache).unwrap();
@@ -194,7 +195,7 @@ fn prefill_then_decode_consistency_quant_vs_fp32() {
     let zbk = vec![0f32; l * b * kvd];
     let zbm = vec![0f32; l * b];
     let fp = eng
-        .decode_fp32(capf, 17, p as i32, 0, &kf, &vf, &maskf, &zbk, &zbk, &zbm)
+        .decode_fp32(capf, 17, p as i32, 0, &kf, &vf, &maskf, &zbk, &zbk, &zbm, None)
         .unwrap();
 
     // FP8 quantized path
