@@ -43,11 +43,13 @@ test: tier1
 # inside the bench double as acceptance checks (throughput must rise
 # with decode batch size, fused step must beat N single steps, sharing
 # must multiply admission, chunked prefill must keep running-session
-# TPOT strictly below the whole-prompt baseline), and the greps pin the
-# prefix-hit, interleaved-prefill, fused-execute, and prefix-alias
-# counters nonzero so none of those paths can silently regress
-# (always-miss sharing / whole-prompt prefill / per-member decode
-# executes / attach-by-memcpy).
+# TPOT strictly below the whole-prompt baseline, the goodput policy
+# must strictly beat FIFO on SLO attainment over a pinned-seed arrival
+# trace), and the greps pin the prefix-hit, interleaved-prefill,
+# fused-execute, prefix-alias, and goodput counters nonzero so none of
+# those paths can silently regress (always-miss sharing / whole-prompt
+# prefill / per-member decode executes / attach-by-memcpy /
+# never-scoring SLO ledger).
 # (No pipe here: a pipe would discard the bench's own exit status under
 # POSIX sh; capture to a file so both the bench result and the grep gate
 # propagate.)
@@ -58,6 +60,7 @@ bench-smoke:
 	  && grep -Eq "^prefill_interleaved=[1-9][0-9]*$$" bench_smoke.out \
 	  && grep -Eq "^fused_executes=[1-9][0-9]*$$" bench_smoke.out \
 	  && grep -Eq "^prefix_alias_hits=[1-9][0-9]*$$" bench_smoke.out \
+	  && grep -Eq "^goodput=[1-9][0-9]*$$" bench_smoke.out \
 	  && grep -q "skipping real-coordinator" bench_smoke.out; \
 	status=$$?; rm -f bench_smoke.out; exit $$status
 

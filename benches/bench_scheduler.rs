@@ -8,16 +8,21 @@
 //! without cross-session prefix sharing, driven artifact-free on a
 //! causal engine fake), and the **arrival-burst chunked-prefill sweep**
 //! (running-session TPOT while long prompts prefill whole vs chunked,
-//! measured on a deterministic engine-time clock) — plus a real
-//! coordinator oversubscription mini-run comparing both preemption
-//! policies when artifacts exist.
+//! measured on a deterministic engine-time clock), and the **SLO
+//! goodput sweep** (one deterministic multi-tenant arrival trace
+//! replayed under throughput-greedy FIFO vs the goodput policy; the
+//! slack-ordered scheduler must strictly raise SLO attainment) — plus
+//! a real coordinator oversubscription mini-run comparing both
+//! preemption policies when artifacts exist.
 
 use std::sync::{mpsc, Arc};
 
 use thinkv::bench::{write_results, Table};
-use thinkv::coordinator::{advance_batch, CompressionMode, Scheduler, ServeConfig, Session};
+use thinkv::coordinator::{
+    advance_batch, CompressionMode, SchedPolicy, Scheduler, ServeConfig, Session, SloTarget,
+};
 use thinkv::kvcache::{BlockPool, PrefixIndex};
-use thinkv::sim::{GpuProfile, LrmProfile, ServingCost};
+use thinkv::sim::{ArrivalTrace, GpuProfile, LrmProfile, ServingCost, TenantClass};
 use thinkv::testkit::{share_manifest, CausalEngine, MeteredEngine};
 
 fn drain(sched: &Scheduler, engine: &CausalEngine) {
@@ -450,6 +455,181 @@ fn main() {
     println!("fused_executes={total_fused_execs}");
     assert!(total_fused_execs > 0, "burst sweep must record fused executes");
 
+    // Part 6.5: SLO goodput sweep (ISSUE 7). Replay one deterministic
+    // multi-tenant arrival trace twice — throughput-greedy FIFO vs the
+    // goodput policy — on the metered causal fake with a pool sized for
+    // ~2 concurrent admissions, so arrivals queue. The trace
+    // oversubscribes the engine with a steady stream of long math
+    // sessions and lands periodic bursts of tight-TTFT chat sessions
+    // on top: under FIFO the chats wait out the whole math backlog and
+    // blow their deadline, under slack-ordered admission they are
+    // lifted over it. Engine time is the scheduler clock
+    // (`drive_clock`), so both replays — and their SLO verdicts — are
+    // bit-reproducible.
+    let mut t9 = Table::new(
+        "SLO goodput: deterministic trace replay, throughput policy vs goodput policy (ticks)",
+        &["policy", "goodput", "violations", "chat_met", "chat_viol", "chat_ttft_p50", "chat_ttft_p99"],
+    );
+    let slo_mix = vec![
+        TenantClass {
+            system_prompt_len: 48,
+            tail_len: 16,
+            max_new_tokens: 16,
+            rate: 0.0,
+            burst_every: 20,
+            burst_size: 2,
+            slo: SloTarget::new(100_000, 0),
+            ..TenantClass::math()
+        },
+        TenantClass {
+            system_prompt_len: 16,
+            tail_len: 8,
+            max_new_tokens: 4,
+            rate: 0.0,
+            burst_every: 100,
+            burst_size: 2,
+            slo: SloTarget::new(1_500, 0),
+            ..TenantClass::chat()
+        },
+    ];
+    let slo_trace = ArrivalTrace::generate(&slo_mix, 2026, 600, man.model.vocab);
+    assert_eq!(
+        slo_trace.digest(),
+        ArrivalTrace::generate(&slo_mix, 2026, 600, man.model.vocab).digest(),
+        "arrival trace must be seed-deterministic"
+    );
+    println!(
+        "slo_trace: {} arrivals ({:?} per class), digest={:016x}",
+        slo_trace.events.len(),
+        slo_trace.per_class,
+        slo_trace.digest()
+    );
+    let slo_base = ServeConfig {
+        mode: CompressionMode::parse("thinkv").expect("mode"),
+        budget: 64,
+        max_new_tokens: 16,
+        workers: 1,
+        temperature: 0.0,
+        ..ServeConfig::default()
+    };
+    // pool for ~2 concurrent admissions of the heaviest class
+    let per_adm = Session::new(0, slo_trace.events[0].prompt.clone(), &slo_base, &man)
+        .expect("probe")
+        .admission_bytes();
+    let replay = |goodput: bool| {
+        let engine = MeteredEngine::new(man.model.clone());
+        let pool = Arc::new(BlockPool::new(per_adm * 2 + 4096));
+        let sched = Scheduler::new(Arc::clone(&pool));
+        sched.set_prefill_chunking(16, 0);
+        if goodput {
+            sched.set_policy(SchedPolicy::Goodput);
+        }
+        let (tx, rx) = mpsc::channel();
+        let mut next = 0usize;
+        let mut results = Vec::new();
+        loop {
+            // the engine's logical clock is the arrival timeline
+            sched.drive_clock(engine.clock());
+            while next < slo_trace.events.len() && slo_trace.events[next].at <= engine.clock() {
+                let e = &slo_trace.events[next];
+                let cfg = ServeConfig {
+                    max_new_tokens: e.max_new_tokens,
+                    slo_class: Some(e.class_name.to_string()),
+                    slo: e.slo,
+                    ..slo_base.clone()
+                };
+                let sess =
+                    Session::with_pool(e.id, e.prompt.clone(), &cfg, &man, Some(Arc::clone(&pool)))
+                        .expect("arrival session");
+                sched.submit(sess, tx.clone());
+                next += 1;
+            }
+            results.extend(rx.try_iter());
+            if results.len() >= slo_trace.events.len() {
+                break;
+            }
+            if sched.inflight() == 0 {
+                if next < slo_trace.events.len() {
+                    // idle: fast-forward the clock to the next arrival
+                    let gap = slo_trace.events[next].at.saturating_sub(engine.clock()).max(1);
+                    engine.tick(gap);
+                }
+                continue;
+            }
+            let batch = sched.next_batch(4).expect("runnable while inflight");
+            advance_batch(&sched, &engine, 2, batch);
+        }
+        assert!(
+            results.iter().all(|r| r.error.is_none()),
+            "every replayed arrival must complete cleanly"
+        );
+        let snap = sched.snapshot();
+        sched.shutdown();
+        snap
+    };
+    // same-seed determinism: two independent replays of each policy
+    // must produce bit-identical snapshots (counters + percentiles)
+    let fifo = replay(false);
+    assert_eq!(fifo, replay(false), "throughput replay must be deterministic");
+    let slo = replay(true);
+    assert_eq!(slo, replay(true), "goodput replay must be deterministic");
+    assert!(slo.sched_policy_goodput && !fifo.sched_policy_goodput);
+    let chat_of = |s: &thinkv::metrics::SchedSnapshot| {
+        s.slo_classes.iter().find(|c| c.name == "chat").cloned().unwrap_or_default()
+    };
+    let (cf, cg) = (chat_of(&fifo), chat_of(&slo));
+    for s in [&fifo, &slo] {
+        assert_eq!(s.completions, slo_trace.events.len() as u64, "every arrival completes");
+        assert!(s.pool_peak <= s.pool_capacity, "pool overflow");
+        // the class ledgers must fold exactly into the global counters
+        let by_class: (u64, u64) = s
+            .slo_classes
+            .iter()
+            .fold((0, 0), |(g, v), c| (g + c.goodput, v + c.violations));
+        assert_eq!(by_class, (s.goodput, s.slo_violations), "class ledgers out of sync");
+        assert!(s.goodput + s.slo_violations <= s.completions, "goodput over-counted");
+    }
+    // both policies serve the same classed arrivals; the goodput policy
+    // must strictly convert more of them into met SLOs — that is the
+    // whole point of deadline-slack scheduling
+    assert_eq!(
+        fifo.goodput + fifo.slo_violations,
+        slo.goodput + slo.slo_violations,
+        "policies must score the same classed population"
+    );
+    assert!(
+        slo.goodput > fifo.goodput,
+        "goodput policy must strictly beat FIFO ({} vs {})",
+        slo.goodput,
+        fifo.goodput
+    );
+    assert!(
+        cg.goodput > cf.goodput && cg.violations <= cf.violations,
+        "the win must come from the tight-TTFT chat class \
+         (goodput {} vs {}, violations {} vs {})",
+        cg.goodput,
+        cf.goodput,
+        cg.violations,
+        cf.violations
+    );
+    for (name, s, c) in [("throughput", &fifo, &cf), ("goodput", &slo, &cg)] {
+        t9.row(&[
+            name.to_string(),
+            format!("{}", s.goodput),
+            format!("{}", s.slo_violations),
+            format!("{}", c.goodput),
+            format!("{}", c.violations),
+            format!("{}", c.ttft_p50),
+            format!("{}", c.ttft_p99),
+        ]);
+    }
+    t9.print();
+    // machine-greppable gate: CI asserts the goodput-policy replay
+    // actually met SLOs, so the slack-ordered path cannot silently
+    // regress to never-scoring
+    println!("goodput={}", slo.goodput);
+    assert!(slo.goodput > 0, "goodput replay must meet SLOs");
+
     // Part 7: real coordinator oversubscription mini-run (CPU PJRT),
     // recompute preemption vs suspend-to-host swap
     let artifacts = format!("{}/model_config.json", thinkv::model::default_artifacts_dir());
@@ -459,6 +639,7 @@ fn main() {
     j.set("launch_amortization", t4.to_json());
     j.set("prefix_sharing", t6.to_json());
     j.set("arrival_burst", t7.to_json());
+    j.set("slo_goodput", t9.to_json());
     if std::path::Path::new(&artifacts).exists()
         && std::env::var("THINKV_BENCH_REAL").map(|v| v == "1").unwrap_or(true)
     {

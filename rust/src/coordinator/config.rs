@@ -76,6 +76,35 @@ impl CompressionMode {
     }
 }
 
+/// Per-class SLO target a session is scheduled against.
+///
+/// Both fields are in **scheduler ticks**: wall-clock milliseconds on
+/// the live path, deterministic engine-time units when a logical clock
+/// drives the scheduler (`Scheduler::drive_clock`, the trace-replay
+/// harness). `0` disables that half of the target. TPOT is fixed-point
+/// milli-ticks per token so [`crate::metrics::SchedSnapshot`] stays
+/// `Eq`-comparable (bit-reproducible runs compare snapshots directly).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SloTarget {
+    /// Time-to-first-token ceiling in ticks (0 = no TTFT target).
+    pub ttft_ticks: u64,
+    /// Time-per-output-token ceiling in milli-ticks (0 = no TPOT target).
+    pub tpot_milli_ticks: u64,
+}
+
+impl SloTarget {
+    /// A target with both halves set.
+    pub fn new(ttft_ticks: u64, tpot_milli_ticks: u64) -> SloTarget {
+        SloTarget { ttft_ticks, tpot_milli_ticks }
+    }
+
+    /// True when neither half is set (the session is unclassed /
+    /// best-effort and never counts toward goodput or violations).
+    pub fn is_none(&self) -> bool {
+        self.ttft_ticks == 0 && self.tpot_milli_ticks == 0
+    }
+}
+
 /// Top-level serving configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -130,6 +159,20 @@ pub struct ServeConfig {
     /// depends only on the tokens before it), which holds for the real
     /// engine.
     pub prefix_share: bool,
+    /// Tenant-class label sessions built from this config carry (e.g.
+    /// `"chat"`, `"math"`, `"coding"`). Classed sessions are scored
+    /// against `slo` at completion; `None` = best-effort (never counted
+    /// in goodput or violations).
+    pub slo_class: Option<String>,
+    /// Per-class TTFT/TPOT target (ticks; see [`SloTarget`]). Ignored
+    /// unless `slo_class` is set.
+    pub slo: SloTarget,
+    /// Schedule to goodput (requests meeting their SLO) instead of raw
+    /// throughput: deadline-slack ordering replaces FIFO in admission
+    /// and batch formation, preemption prefers deadline-hopeless
+    /// victims, and hopeless victims skip the swap-out copy. Off =
+    /// PR 1–6 throughput-greedy behavior, bit-for-bit.
+    pub slo_aware: bool,
 }
 
 impl Default for ServeConfig {
@@ -150,6 +193,9 @@ impl Default for ServeConfig {
             pool_bytes: None,
             swap_bytes: None,
             prefix_share: false,
+            slo_class: None,
+            slo: SloTarget::default(),
+            slo_aware: false,
         }
     }
 }
@@ -176,5 +222,14 @@ mod tests {
         .collect();
         let set: std::collections::BTreeSet<_> = labels.iter().collect();
         assert_eq!(set.len(), labels.len());
+    }
+
+    #[test]
+    fn slo_target_none_detection() {
+        assert!(SloTarget::default().is_none());
+        assert!(!SloTarget::new(100, 0).is_none());
+        assert!(!SloTarget::new(0, 500).is_none());
+        assert!(ServeConfig::default().slo.is_none());
+        assert!(ServeConfig::default().slo_class.is_none());
     }
 }

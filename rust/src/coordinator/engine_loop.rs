@@ -151,6 +151,11 @@ impl Coordinator {
         if let Some(tokens) = cfg.prefill_chunk_tokens {
             scheduler.set_prefill_chunking(tokens.max(1), 0);
         }
+        // SLO-aware goodput policy: admission, batch steering, and
+        // victim selection order by TTFT-deadline slack instead of FIFO
+        if cfg.slo_aware {
+            scheduler.set_policy(super::scheduler::SchedPolicy::Goodput);
+        }
         let mut workers = Vec::new();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         for w in 0..cfg.workers.max(1) {
@@ -526,6 +531,19 @@ pub fn advance_batch(
                         }
                     }
                 }
+            }
+        }
+        // SLO bookkeeping: sync the scheduler clock to the engine's
+        // deterministic time (when it meters one), then stamp the
+        // first-token tick of every member that just produced its first
+        // token — exited members are still present here, so a session
+        // finishing this very step gets stamped before dispatch
+        if let Some(t) = engine.logical_now() {
+            scheduler.drive_clock(t);
+        }
+        for m in members.iter_mut() {
+            if m.session.first_token_at.is_some() && m.session.slo.first_token_tick.is_none() {
+                m.session.slo.first_token_tick = Some(scheduler.now_ticks());
             }
         }
         // retire exited members (highest index first so removals are

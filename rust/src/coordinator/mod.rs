@@ -92,8 +92,8 @@ pub mod session;
 #[cfg(test)]
 pub(crate) mod test_support;
 
-pub use config::{CompressionMode, ServeConfig};
+pub use config::{CompressionMode, ServeConfig, SloTarget};
 pub use engine_loop::{advance_batch, Coordinator, RequestHandle, RequestResult};
 pub use sampler::Sampler;
-pub use scheduler::{Entry, Scheduler};
-pub use session::{Session, StepOutcome, StepPrep};
+pub use scheduler::{Entry, SchedPolicy, Scheduler};
+pub use session::{Session, SloState, StepOutcome, StepPrep};

@@ -57,17 +57,74 @@
 //! long-prompt arrival advances chunk-by-chunk between its batch-mates'
 //! decode steps instead of head-of-line-blocking the whole batch on an
 //! inline whole-prompt prefill.
+//!
+//! **SLO-aware goodput policy ([`SchedPolicy::Goodput`]):** when
+//! enabled, FIFO gives way to TTFT-deadline slack wherever ordering
+//! matters — admission picks the tightest-slack waiter, batch formation
+//! seeds each batch with the most urgent runnable session, preemption
+//! prefers deadline-hopeless victims (and skips the swap-out copy for
+//! them: the snapshot would be spent preserving progress for a request
+//! that already lost), and terminating classed sessions are scored
+//! against their [`SloTarget`](super::config::SloTarget) into global
+//! and per-class goodput / violation books. The scheduler clock is
+//! wall-clock milliseconds by default; a deterministic harness drives
+//! it with [`Scheduler::drive_clock`] instead, so trace replays are
+//! bit-reproducible from a seed.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use crate::kvcache::{BlockPool, PrefixIndex, SwapPool};
-use crate::metrics::SchedSnapshot;
+use crate::metrics::{SchedSnapshot, SloClassSnap};
 use crate::runtime::ExecStats;
 
 use super::engine_loop::RequestResult;
 use super::session::Session;
+
+/// Which objective admission, batch formation, and preemption steer
+/// toward.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Throughput-greedy FIFO everywhere (the pre-SLO behavior).
+    #[default]
+    Throughput,
+    /// Goodput: order by TTFT-deadline slack, prefer deadline-hopeless
+    /// preemption victims, and skip the swap copy for them.
+    Goodput,
+}
+
+/// Per-tenant-class SLO ledger: verdict counts plus raw latency
+/// samples, reduced to percentiles at snapshot time.
+#[derive(Default)]
+struct ClassBook {
+    name: String,
+    goodput: u64,
+    violations: u64,
+    ttft: Vec<u64>,
+    tpot_milli: Vec<u64>,
+}
+
+/// Nearest-rank percentile over an already-sorted sample: element
+/// `⌈p·n/100⌉ − 1`, or 0 on an empty sample.
+fn pct(sorted: &[u64], p: usize) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    sorted[((sorted.len() * p + 99) / 100).max(1) - 1]
+}
+
+/// Deadline-slack ordering key: urgent targeted sessions first (by
+/// ascending TTFT slack), then untargeted / already-served ones (FIFO
+/// by queue index), deadline-hopeless ones last.
+fn slack_key(s: &Session, now: u64, idx: usize) -> (u8, i64, usize) {
+    match s.slo.ttft_slack(now) {
+        Some(sl) if sl < 0 => (2, sl, idx),
+        Some(sl) => (0, sl, idx),
+        None => (1, 0, idx),
+    }
+}
 
 /// One scheduled request: the session plus its completion channel.
 pub struct Entry {
@@ -175,6 +232,24 @@ pub struct Scheduler {
     prefill_memo_hits: AtomicU64,
     /// Engine prefill-memo / chunk-state LRU evictions.
     prefill_memo_evicts: AtomicU64,
+    /// [`SchedPolicy::Goodput`] flag: deadline-slack ordering replaces
+    /// FIFO when set.
+    goodput_mode: AtomicBool,
+    /// Epoch for the wall-clock tick source (milliseconds since
+    /// construction) used until a logical clock drives the scheduler.
+    epoch: Instant,
+    /// Deterministic logical clock, advanced monotonically by
+    /// [`Scheduler::drive_clock`]; once any drive has happened it
+    /// replaces the wall clock as the tick source for good.
+    clock: AtomicU64,
+    /// True once `drive_clock` ran (the run is on logical time).
+    logical: AtomicBool,
+    /// Classed sessions that terminated meeting their SLO target.
+    goodput: AtomicU64,
+    /// Classed sessions that terminated missing it (failures included).
+    slo_violations: AtomicU64,
+    /// Per-class goodput/violation counts and latency samples.
+    slo_book: Mutex<Vec<ClassBook>>,
 }
 
 impl Scheduler {
@@ -229,6 +304,51 @@ impl Scheduler {
             pjrt_fallback_execs: AtomicU64::new(0),
             prefill_memo_hits: AtomicU64::new(0),
             prefill_memo_evicts: AtomicU64::new(0),
+            goodput_mode: AtomicBool::new(false),
+            epoch: Instant::now(),
+            clock: AtomicU64::new(0),
+            logical: AtomicBool::new(false),
+            goodput: AtomicU64::new(0),
+            slo_violations: AtomicU64::new(0),
+            slo_book: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Switch the scheduling objective (default
+    /// [`SchedPolicy::Throughput`] — the pre-SLO FIFO behavior).
+    pub fn set_policy(&self, policy: SchedPolicy) {
+        self.goodput_mode.store(policy == SchedPolicy::Goodput, Ordering::SeqCst);
+    }
+
+    /// The active scheduling objective.
+    pub fn policy(&self) -> SchedPolicy {
+        if self.goodput_policy() {
+            SchedPolicy::Goodput
+        } else {
+            SchedPolicy::Throughput
+        }
+    }
+
+    fn goodput_policy(&self) -> bool {
+        self.goodput_mode.load(Ordering::SeqCst)
+    }
+
+    /// Advance the deterministic logical clock (monotonic `fetch_max`).
+    /// The first drive switches the scheduler's tick source from
+    /// wall-clock milliseconds to this clock permanently — mixing the
+    /// two would break bit-reproducible replays.
+    pub fn drive_clock(&self, ticks: u64) {
+        self.clock.fetch_max(ticks, Ordering::SeqCst);
+        self.logical.store(true, Ordering::SeqCst);
+    }
+
+    /// Current scheduler time in ticks: the logical clock when driven,
+    /// wall-clock milliseconds since construction otherwise.
+    pub fn now_ticks(&self) -> u64 {
+        if self.logical.load(Ordering::SeqCst) {
+            self.clock.load(Ordering::SeqCst)
+        } else {
+            self.epoch.elapsed().as_millis() as u64
         }
     }
 
@@ -308,7 +428,10 @@ impl Scheduler {
     }
 
     /// Enqueue a request; it is admitted as soon as its KV demand fits.
-    pub fn submit(&self, session: Session, done_tx: mpsc::Sender<RequestResult>) {
+    /// Stamps the session's SLO submission tick — TTFT slack is
+    /// measured from here, queueing time included.
+    pub fn submit(&self, mut session: Session, done_tx: mpsc::Sender<RequestResult>) {
+        session.slo.submitted_at = self.now_ticks();
         self.inflight.fetch_add(1, Ordering::SeqCst);
         let mut inner = self.inner.lock().unwrap();
         inner.waiting.push_back(Entry { session, done_tx });
@@ -316,14 +439,26 @@ impl Scheduler {
         self.cv.notify_all();
     }
 
-    /// Admit waiting sessions (FIFO) while their admission reserve fits.
-    /// Paused while any admitted session is starving for growth bytes.
+    /// Admit waiting sessions while their admission reserve fits — FIFO
+    /// under the throughput policy, tightest-TTFT-slack first under
+    /// goodput (hopeless and untargeted waiters admit last). Paused
+    /// while any admitted session is starving for growth bytes.
     fn try_admit(&self, inner: &mut Inner) {
         if !inner.starving.is_empty() {
             return;
         }
-        while let Some(front) = inner.waiting.front() {
-            let need = front.session.admission_bytes();
+        let goodput = self.goodput_policy();
+        loop {
+            let pick = if goodput && inner.waiting.len() > 1 {
+                let now = self.now_ticks();
+                (0..inner.waiting.len())
+                    .min_by_key(|&i| slack_key(&inner.waiting[i].session, now, i))
+                    .expect("waiting is non-empty")
+            } else {
+                0
+            };
+            let Some(cand) = inner.waiting.get(pick) else { break };
+            let need = cand.session.admission_bytes();
             if !self.pool.reserve(need) {
                 // before refusing: reclaim resident prefixes no session
                 // references any more, then retry once
@@ -335,7 +470,7 @@ impl Scheduler {
                     break;
                 }
             }
-            let mut entry = inner.waiting.pop_front().expect("front exists");
+            let mut entry = inner.waiting.remove(pick).expect("index valid");
             entry.session.grant(need);
             let seq = inner.next_admit_seq;
             inner.next_admit_seq += 1;
@@ -381,6 +516,7 @@ impl Scheduler {
     pub fn next_batch(&self, max: usize) -> Option<Vec<Entry>> {
         let max = max.max(1);
         let chunked = self.prefill_chunk_tokens().is_some();
+        let goodput = self.goodput_policy();
         let budget = self.token_budget(max);
         let mut inner = self.inner.lock().unwrap();
         loop {
@@ -388,6 +524,20 @@ impl Scheduler {
                 return None;
             }
             self.try_admit(&mut inner);
+            // goodput: seed the batch with the most urgent runnable
+            // session (tightest TTFT slack) instead of the FIFO front;
+            // hopeless sessions sort last, so salvageable deadlines run
+            // ahead of already-lost ones
+            if goodput && inner.runnable.len() > 1 {
+                let now = self.now_ticks();
+                let best = (0..inner.runnable.len())
+                    .min_by_key(|&i| slack_key(&inner.runnable[i].session, now, i))
+                    .expect("runnable is non-empty");
+                if best != 0 {
+                    let urgent = inner.runnable.remove(best).expect("index valid");
+                    inner.runnable.push_front(urgent);
+                }
+            }
             if let Some(first) = inner.runnable.pop_front() {
                 inner.held.insert(first.session.id);
                 let key = first.session.compat_key();
@@ -516,7 +666,19 @@ impl Scheduler {
             .filter(|(id, _)| **id != entry.session.id)
             .max_by_key(|(_, seq)| **seq)
             .map(|(id, seq)| (*id, *seq));
-        match youngest {
+        // Goodput mode steers the choice toward a victim whose deadline
+        // is already lost (or, failing that, the most slack to spare) —
+        // but only among *younger* sessions reachable in the runnable /
+        // stalled queues, so the oldest-always-progresses guarantee and
+        // the held-victim mark path stay exactly as before.
+        let victim = match (self.goodput_policy(), youngest) {
+            (true, Some(_)) => self
+                .goodput_victim(&inner, my_seq)
+                .map(|vid| (vid, *inner.admitted.get(&vid).expect("victim admitted")))
+                .or(youngest),
+            (_, y) => y,
+        };
+        match victim {
             None if inner.pending_preempts == 0 => {
                 // Alone in the pool and still out of memory: this single
                 // request's KV demand exceeds the pool.
@@ -586,9 +748,13 @@ impl Scheduler {
     /// no queue and not in `admitted` — so the only shared state the
     /// copy touches is the byte-atomic pools.
     fn preempt_unlocked(&self, mut entry: Entry) {
+        // A deadline-hopeless victim under the goodput policy skips the
+        // swap-out copy: host bytes and memcpy time would be spent
+        // preserving progress for a request that already lost its SLO.
+        let hopeless = self.goodput_policy() && entry.session.slo.hopeless(self.now_ticks());
         let swapped = match &self.swap {
-            Some(sp) => entry.session.suspend_to(sp),
-            None => false,
+            Some(sp) if !hopeless => entry.session.suspend_to(sp),
+            _ => false,
         };
         if !swapped {
             entry.session.reset_for_preemption();
@@ -602,11 +768,93 @@ impl Scheduler {
         self.cv.notify_all();
     }
 
+    /// Goodput-mode preemption choice: among admitted sessions younger
+    /// than `my_seq` that sit in the runnable or stalled queues (so
+    /// they can be preempted directly), pick a deadline-hopeless one
+    /// first (its SLO is already lost — evicting it costs no goodput),
+    /// then an untargeted one, then the targeted one with the most
+    /// TTFT slack to spare; age breaks ties (youngest first). `None`
+    /// when no such session exists — the caller falls back to the
+    /// youngest-by-age rule.
+    fn goodput_victim(&self, inner: &Inner, my_seq: u64) -> Option<u64> {
+        let now = self.now_ticks();
+        let mut best: Option<(u8, i64, u64, u64)> = None; // (rank, slack, seq, id)
+        for e in inner.runnable.iter().chain(inner.stalled.iter()) {
+            let seq = match inner.admitted.get(&e.session.id) {
+                Some(s) if *s > my_seq => *s,
+                _ => continue,
+            };
+            let (rank, slack) = match e.session.slo.ttft_slack(now) {
+                Some(s) if s < 0 => (0u8, s), // hopeless: preempt first
+                None => (1, 0),               // no live TTFT deadline
+                Some(s) => (2, s),
+            };
+            let better = match best {
+                None => true,
+                Some((br, bs, bq, _)) => {
+                    rank < br
+                        || (rank == br
+                            && match rank {
+                                0 => slack < bs, // most hopeless
+                                2 => slack > bs, // most slack to spare
+                                _ => seq > bq,   // youngest
+                            })
+                        || (rank == br && slack == bs && seq > bq)
+                }
+            };
+            if better {
+                best = Some((rank, slack, seq, e.session.id));
+            }
+        }
+        best.map(|(_, _, _, id)| id)
+    }
+
+    /// Stamp a terminating session's finish tick and, when it carries a
+    /// tenant class with a live target, score it: met-SLO terminations
+    /// count toward goodput, everything else (hard failures included)
+    /// toward violations — in the global pair and the per-class book
+    /// together, so the class counts always sum to the global ones.
+    fn note_slo_outcome(&self, session: &mut Session, failed: bool) {
+        if session.slo.finished_tick.is_none() {
+            session.slo.finished_tick = Some(self.now_ticks());
+        }
+        if !session.slo.classed() {
+            return;
+        }
+        let met = !failed && session.slo.met(session.tokens.len()).unwrap_or(false);
+        if met {
+            self.goodput.fetch_add(1, Ordering::SeqCst);
+        } else {
+            self.slo_violations.fetch_add(1, Ordering::SeqCst);
+        }
+        let mut book = self.slo_book.lock().unwrap();
+        let idx = match book.iter().position(|c| c.name == session.slo.class) {
+            Some(i) => i,
+            None => {
+                book.push(ClassBook { name: session.slo.class.clone(), ..ClassBook::default() });
+                book.len() - 1
+            }
+        };
+        let cb = &mut book[idx];
+        if met {
+            cb.goodput += 1;
+        } else {
+            cb.violations += 1;
+        }
+        if let Some(t) = session.slo.ttft() {
+            cb.ttft.push(t);
+        }
+        if let Some(t) = session.slo.tpot_milli(session.tokens.len()) {
+            cb.tpot_milli.push(t);
+        }
+    }
+
     /// Terminate a request with an error result.
     fn fail(&self, inner: &mut Inner, mut entry: Entry, why: &str) {
         inner.forget(entry.session.id);
         entry.session.release_pool();
         entry.session.finished_at = Some(std::time::Instant::now());
+        self.note_slo_outcome(&mut entry.session, true);
         let mut result = RequestResult::from_session(&entry.session);
         result.error = Some(why.to_string());
         let _ = entry.done_tx.send(result);
@@ -615,10 +863,11 @@ impl Scheduler {
         inner.unstall();
     }
 
-    fn finish(&self, session: &mut Session, counter: &AtomicU64) {
+    fn finish(&self, session: &mut Session, counter: &AtomicU64, failed: bool) {
         let mut inner = self.inner.lock().unwrap();
         inner.forget(session.id);
         session.release_pool();
+        self.note_slo_outcome(session, failed);
         counter.fetch_add(1, Ordering::SeqCst);
         self.inflight.fetch_sub(1, Ordering::SeqCst);
         inner.unstall();
@@ -629,14 +878,14 @@ impl Scheduler {
     /// Bookkeeping for a successfully finished session (the worker sends
     /// the result).
     pub fn complete(&self, session: &mut Session) {
-        self.finish(session, &self.completions);
+        self.finish(session, &self.completions, false);
     }
 
     /// Bookkeeping for a session that terminated with a decode error
     /// (the worker sends the error result) — counted as a failure, not a
     /// completion, so `stats` distinguishes the two.
     pub fn complete_failed(&self, session: &mut Session) {
-        self.finish(session, &self.failures);
+        self.finish(session, &self.failures, true);
     }
 
     pub fn shutdown(&self) {
@@ -648,6 +897,30 @@ impl Scheduler {
     pub fn snapshot(&self) -> SchedSnapshot {
         let swap = self.swap.as_ref().map(|s| s.stats()).unwrap_or_default();
         let prefix = self.prefix.as_ref().map(|p| p.stats()).unwrap_or_default();
+        // per-class books reduce to nearest-rank percentiles here so the
+        // snapshot stays a flat, Eq-comparable value (the book lock is
+        // released before the scheduler lock is taken — same order as
+        // the finish path, never inverted)
+        let slo_classes: Vec<SloClassSnap> = {
+            let book = self.slo_book.lock().unwrap();
+            book.iter()
+                .map(|c| {
+                    let mut ttft = c.ttft.clone();
+                    ttft.sort_unstable();
+                    let mut tpot = c.tpot_milli.clone();
+                    tpot.sort_unstable();
+                    SloClassSnap {
+                        name: c.name.clone(),
+                        goodput: c.goodput,
+                        violations: c.violations,
+                        ttft_p50: pct(&ttft, 50),
+                        ttft_p99: pct(&ttft, 99),
+                        tpot_p50_milli: pct(&tpot, 50),
+                        tpot_p99_milli: pct(&tpot, 99),
+                    }
+                })
+                .collect()
+        };
         let inner = self.inner.lock().unwrap();
         // queued prefill work: sessions in any scheduler queue still
         // owing prompt tokens (held members are not visible here)
@@ -703,6 +976,10 @@ impl Scheduler {
             pjrt_fallback_executes: self.pjrt_fallback_execs.load(Ordering::SeqCst),
             prefill_memo_hits: self.prefill_memo_hits.load(Ordering::SeqCst),
             prefill_memo_evictions: self.prefill_memo_evicts.load(Ordering::SeqCst),
+            sched_policy_goodput: self.goodput_policy(),
+            goodput: self.goodput.load(Ordering::SeqCst),
+            slo_violations: self.slo_violations.load(Ordering::SeqCst),
+            slo_classes,
         }
     }
 }
@@ -710,7 +987,7 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::config::{CompressionMode, ServeConfig};
+    use crate::coordinator::config::{CompressionMode, ServeConfig, SloTarget};
     use crate::model::{Manifest, ModelConfig};
 
     /// Hand-built manifest: tiny dims, no artifact files needed (the
@@ -1309,6 +1586,147 @@ mod tests {
         let snap = sched.snapshot();
         assert_eq!(snap.running, 2);
         assert_eq!(snap.queue_depth, 0);
+        assert!(snap.pool_peak <= snap.pool_capacity);
+    }
+
+    /// Goodput policy: next() serves the tightest-TTFT-slack runnable
+    /// session instead of the FIFO front; untargeted sessions come
+    /// next, deadline-hopeless ones last.
+    #[test]
+    fn goodput_policy_pulls_tightest_slack_first() {
+        let man = tiny_manifest();
+        let pool = Arc::new(BlockPool::new(u64::MAX / 2));
+        let sched = Scheduler::new(Arc::clone(&pool));
+        sched.set_policy(SchedPolicy::Goodput);
+        assert_eq!(sched.policy(), SchedPolicy::Goodput);
+        sched.drive_clock(50);
+        let classed = |id: u64, ttft: u64| {
+            let cfg = ServeConfig {
+                slo_class: Some("t".into()),
+                slo: SloTarget::new(ttft, 0),
+                ..tiny_cfg()
+            };
+            mk_session(id, &cfg, &man, &pool)
+        };
+        let (tx, _rx) = mpsc::channel();
+        sched.submit(classed(1, 500), tx.clone()); // deadline 550
+        sched.submit(classed(2, 100), tx.clone()); // deadline 150: urgent
+        sched.submit(mk_session(3, &tiny_cfg(), &man, &pool), tx.clone()); // best-effort
+        sched.submit(classed(4, 10), tx.clone()); // deadline 60
+        sched.drive_clock(100); // session 4's deadline is now lost
+        let mut order = Vec::new();
+        let mut held = Vec::new();
+        for _ in 0..4 {
+            let e = sched.next().expect("runnable");
+            order.push(e.session.id);
+            held.push(e);
+        }
+        assert_eq!(order, vec![2, 1, 3, 4], "slack order, hopeless last");
+        assert!(sched.snapshot().sched_policy_goodput);
+    }
+
+    /// Terminating classed sessions fold into the goodput / violation
+    /// counters and the per-class book; best-effort sessions never
+    /// count, and the class counts sum to the global pair.
+    #[test]
+    fn slo_outcomes_fold_into_goodput_books() {
+        let man = tiny_manifest();
+        let pool = Arc::new(BlockPool::new(u64::MAX / 2));
+        let sched = Scheduler::new(Arc::clone(&pool));
+        sched.drive_clock(0);
+        let cfg = ServeConfig {
+            slo_class: Some("chat".into()),
+            slo: SloTarget::new(100, 0),
+            ..tiny_cfg()
+        };
+        let (tx, _rx) = mpsc::channel();
+        sched.submit(mk_session(1, &cfg, &man, &pool), tx.clone());
+        sched.submit(mk_session(2, &cfg, &man, &pool), tx.clone());
+        sched.submit(mk_session(3, &tiny_cfg(), &man, &pool), tx.clone());
+        // id 1 gets its first token at tick 60 (met), id 2 at tick 500
+        // (violated), id 3 is best-effort and never scored
+        let mut a = sched.next().unwrap();
+        assert_eq!(a.session.id, 1);
+        a.session.slo.first_token_tick = Some(60);
+        sched.complete(&mut a.session);
+        sched.drive_clock(500);
+        let mut b = sched.next().unwrap();
+        assert_eq!(b.session.id, 2);
+        b.session.slo.first_token_tick = Some(500);
+        sched.complete(&mut b.session);
+        let mut c = sched.next().unwrap();
+        assert_eq!(c.session.id, 3);
+        sched.complete(&mut c.session);
+        let snap = sched.snapshot();
+        assert_eq!(snap.goodput, 1);
+        assert_eq!(snap.slo_violations, 1);
+        assert_eq!(snap.completions, 3, "goodput counts a subset of completions");
+        assert_eq!(snap.slo_classes.len(), 1, "best-effort never enters the book");
+        let cls = &snap.slo_classes[0];
+        assert_eq!(cls.name, "chat");
+        assert_eq!(cls.goodput + cls.violations, snap.goodput + snap.slo_violations);
+        assert_eq!(cls.ttft_p50, 60, "sorted samples [60, 500]");
+        assert_eq!(cls.ttft_p99, 500);
+    }
+
+    /// Regression (preemption storm): an oversubscribed arrival wave
+    /// whose sessions keep demanding growth drives repeated preemption
+    /// with the starving gate active. The storm must drain — every
+    /// request completes, no re-admission livelock — and no session is
+    /// preempted an unbounded number of times.
+    #[test]
+    fn preemption_storm_drains_without_livelock() {
+        let cfg = tiny_cfg();
+        let man = tiny_manifest();
+        let probe = mk_session(0, &cfg, &man, &Arc::new(BlockPool::new(u64::MAX / 2)));
+        let per = probe.admission_bytes();
+        let pool = Arc::new(BlockPool::new(2 * per));
+        let sched = Scheduler::new(Arc::clone(&pool));
+        sched.set_policy(SchedPolicy::Goodput);
+        sched.drive_clock(1);
+        let (tx, rx) = mpsc::channel();
+        for id in 1..=6u64 {
+            sched.submit(mk_session(id, &cfg, &man, &pool), tx.clone());
+        }
+        let mut pulls: BTreeMap<u64, u32> = BTreeMap::new();
+        let mut done = 0;
+        let mut iters = 0u32;
+        while done < 6 {
+            iters += 1;
+            assert!(iters < 1_000, "re-admission livelock: {done} done after {iters} pulls");
+            let mut e = sched.next().expect("runnable session");
+            let n = {
+                let c = pulls.entry(e.session.id).or_insert(0);
+                *c += 1;
+                *c
+            };
+            assert!(
+                e.session.preemptions <= 8,
+                "unbounded preemption churn for session {}",
+                e.session.id
+            );
+            if n == 1 {
+                // first chunk finishes the prompt work
+                e.session.test_fake_prefill();
+                sched.yield_back(e);
+            } else if n == 2 && sched.snapshot().running > 1 {
+                // growth demand under pressure: someone gets preempted
+                sched.cannot_grow(e);
+            } else if n >= 3 {
+                e.session.finished_at = Some(std::time::Instant::now());
+                let _ = e.done_tx.send(RequestResult::from_session(&e.session));
+                sched.complete(&mut e.session);
+                done += 1;
+            } else {
+                sched.yield_back(e);
+            }
+        }
+        drop(tx);
+        assert_eq!(rx.iter().count(), 6, "every request completes");
+        let snap = sched.snapshot();
+        assert_eq!(snap.completions, 6);
+        assert_eq!(snap.rejections, 0, "no request failed out of the storm");
+        assert!(snap.preemptions >= 1, "the storm actually preempted");
         assert!(snap.pool_peak <= snap.pool_capacity);
     }
 }

@@ -48,7 +48,7 @@ use crate::runtime::{CacheView, DecodeEngine, DecodeOut, ExecStats};
 use crate::sim::harness::EvictKind;
 use crate::thought::classifier::{Classifier, ClassifierConfig};
 
-use super::config::{CompressionMode, ServeConfig};
+use super::config::{CompressionMode, ServeConfig, SloTarget};
 use super::sampler::Sampler;
 
 /// Result of advancing a session by one decode step.
@@ -205,6 +205,81 @@ enum PrefillCursor {
     Done,
 }
 
+/// Per-session SLO bookkeeping (tenant class, targets, tick stamps on
+/// the scheduler's clock — wall milliseconds live, deterministic
+/// engine-time units under the trace-replay harness). The first-token
+/// stamp is **sticky** across recompute preemption: the client-visible
+/// first token happened exactly once, so a replayed session does not
+/// get a fresh TTFT.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SloState {
+    /// Tenant-class label ([`ServeConfig::slo_class`]); empty =
+    /// unclassed / best-effort.
+    pub class: String,
+    /// TTFT/TPOT targets in ticks (both 0 = no target).
+    pub target: SloTarget,
+    /// Scheduler-clock tick the session was submitted at.
+    pub submitted_at: u64,
+    /// Tick the first generated token landed at.
+    pub first_token_tick: Option<u64>,
+    /// Tick the session completed (or failed) at.
+    pub finished_tick: Option<u64>,
+}
+
+impl SloState {
+    /// True when this session counts toward per-class goodput/violation
+    /// accounting (a class label *and* a real target).
+    pub fn classed(&self) -> bool {
+        !self.class.is_empty() && !self.target.is_none()
+    }
+
+    /// TTFT slack at `now`: ticks left before the TTFT deadline blows.
+    /// `None` when no TTFT target applies or the first token already
+    /// landed (the deadline race is over).
+    pub fn ttft_slack(&self, now: u64) -> Option<i64> {
+        if self.target.ttft_ticks == 0 || self.first_token_tick.is_some() {
+            return None;
+        }
+        Some((self.submitted_at + self.target.ttft_ticks) as i64 - now as i64)
+    }
+
+    /// Deadline-hopeless: the TTFT deadline passed with no first token —
+    /// no scheduling decision can still save this request's SLO.
+    pub fn hopeless(&self, now: u64) -> bool {
+        matches!(self.ttft_slack(now), Some(s) if s < 0)
+    }
+
+    /// Observed TTFT in ticks (first token − submit), once known.
+    pub fn ttft(&self) -> Option<u64> {
+        self.first_token_tick.map(|t| t.saturating_sub(self.submitted_at))
+    }
+
+    /// Observed TPOT in milli-ticks per token over `n_tokens` generated
+    /// tokens (first-token → finish over `n_tokens − 1` gaps; 0 when
+    /// fewer than two tokens were generated).
+    pub fn tpot_milli(&self, n_tokens: usize) -> Option<u64> {
+        let first = self.first_token_tick?;
+        let fin = self.finished_tick?;
+        if n_tokens < 2 {
+            return Some(0);
+        }
+        Some(fin.saturating_sub(first) * 1000 / (n_tokens as u64 - 1))
+    }
+
+    /// Did the request meet its SLO over `n_tokens` generated tokens?
+    /// `None` for unclassed sessions (they never count either way).
+    pub fn met(&self, n_tokens: usize) -> Option<bool> {
+        if !self.classed() {
+            return None;
+        }
+        let ttft_ok = self.target.ttft_ticks == 0
+            || self.ttft().is_some_and(|t| t <= self.target.ttft_ticks);
+        let tpot_ok = self.target.tpot_milli_ticks == 0
+            || self.tpot_milli(n_tokens).map_or(true, |t| t <= self.target.tpot_milli_ticks);
+        Some(ttft_ok && tpot_ok)
+    }
+}
+
 pub struct Session {
     pub id: u64,
     pub prompt: Vec<i32>,
@@ -222,6 +297,10 @@ pub struct Session {
     pub created: std::time::Instant,
     pub first_token_at: Option<std::time::Instant>,
     pub finished_at: Option<std::time::Instant>,
+    /// SLO class + targets + tick stamps on the scheduler's clock.
+    /// Stamped by the scheduler (`submit`) and the batched worker
+    /// (first-token tick); evaluated once at completion.
+    pub slo: SloState,
     /// Where prompt prefill stands — chunked prefill advances this
     /// cursor one chunk at a time; the whole-prompt path runs it to
     /// `Done` in one [`Session::prefill`] call.
@@ -322,6 +401,11 @@ impl Session {
             created: std::time::Instant::now(),
             first_token_at: None,
             finished_at: None,
+            slo: SloState {
+                class: cfg.slo_class.clone().unwrap_or_default(),
+                target: cfg.slo,
+                ..SloState::default()
+            },
             prefill: PrefillCursor::NotStarted,
             preemptions: 0,
             swap_outs: 0,
@@ -637,6 +721,9 @@ impl Session {
         }
         self.prefill = PrefillCursor::NotStarted;
         self.first_token_at = None;
+        // slo.first_token_tick is deliberately NOT cleared: the
+        // client-visible first token happened once; the replay does not
+        // restart the TTFT clock (the SLO verdict stays honest).
     }
 
     /// True once prompt prefill has completed (the first token was
@@ -944,6 +1031,31 @@ mod tests {
     use super::*;
     use crate::coordinator::test_support::{tiny_cfg, tiny_manifest, FakeEngine};
     use crate::kvcache::SnapshotPayload;
+
+    #[test]
+    fn slo_state_slack_and_verdicts() {
+        let mut s = SloState {
+            class: "chat".into(),
+            target: SloTarget::new(100, 2_000),
+            submitted_at: 50,
+            ..SloState::default()
+        };
+        assert!(s.classed());
+        assert_eq!(s.ttft_slack(60), Some(90));
+        assert!(!s.hopeless(150), "on the deadline is still meetable");
+        assert!(s.hopeless(151));
+        s.first_token_tick = Some(120);
+        assert_eq!(s.ttft_slack(500), None, "race over once the token lands");
+        assert!(!s.hopeless(500));
+        s.finished_tick = Some(130);
+        assert_eq!(s.ttft(), Some(70));
+        // 5 tokens over 10 ticks = 2500 milli-ticks/token
+        assert_eq!(s.tpot_milli(5), Some(2_500));
+        assert_eq!(s.met(5), Some(false), "TPOT 2500 > target 2000");
+        s.target = SloTarget::new(100, 0);
+        assert_eq!(s.met(5), Some(true), "TTFT 70 <= 100, no TPOT target");
+        assert_eq!(SloState::default().met(5), None, "unclassed never counts");
+    }
 
     /// Failure injection for the swap-in error path: a snapshot that
     /// fails to restore must release both the swap-pool reservation and

@@ -9,7 +9,7 @@
 
 use thinkv::coordinator::{CompressionMode, Coordinator, ServeConfig};
 use thinkv::server::Server;
-use thinkv::sim::{run_method, DatasetProfile, Method, SimConfig, Trace};
+use thinkv::sim::{run_method, DatasetProfile, Method, SimConfig, TenantClass, Trace};
 use thinkv::util::cli::Args;
 use thinkv::util::rng::Rng;
 
@@ -40,9 +40,11 @@ USAGE: thinkv <cmd> [--flags]
             --budget 1024 --max-tokens 128 --workers 2
             --pool-mb 0 --swap-mb 0 --max-decode-batch 8
             --prefill-chunk 0 --prefix-share
+            --slo-class chat|math|coding --slo-aware
   serve     --addr 127.0.0.1:7799 --mode thinkv --budget 1024
             --pool-mb 0 --swap-mb 0 --max-decode-batch 8
             --prefill-chunk 0 --prefix-share
+            --slo-class chat|math|coding --slo-aware
   sim       --mode thinkv --dataset aime --budget 1024 --scale 0.5
   calibrate --prompts 8 --layers 8
   info
@@ -64,7 +66,13 @@ USAGE: thinkv <cmd> [--flags]
   sessions attach the resident read-only blocks, are admitted for only
   their delta bytes, and privatize via copy-on-write on the first
   divergent write — multiplying max concurrency for
-  common-system-prompt workloads."
+  common-system-prompt workloads. --slo-class tags every request with a
+  builtin tenant class (chat/math/coding) whose TTFT/TPOT target it is
+  scored against at completion; stats then report goodput, violations,
+  and per-class latency percentiles. --slo-aware switches the scheduler
+  from throughput-greedy FIFO to goodput scheduling: admission and
+  batch order follow TTFT-deadline slack, and preemption prefers
+  deadline-hopeless victims."
     );
 }
 
@@ -80,6 +88,16 @@ fn serve_config(args: &Args) -> ServeConfig {
     // --prefill-chunk N splits prompt prefill into N-token chunks
     // co-scheduled with decode steps (0 = whole-prompt prefill)
     let prefill_chunk = args.usize_or("prefill-chunk", 0);
+    // --slo-class tags requests with a builtin tenant class (and its
+    // TTFT/TPOT target); --slo-aware flips the scheduler to the
+    // goodput policy (deadline-slack ordering instead of FIFO)
+    let slo_class = args.get("slo-class").and_then(|name| {
+        let c = TenantClass::by_name(name);
+        if c.is_none() {
+            eprintln!("unknown --slo-class {name} (want chat|math|coding); ignoring");
+        }
+        c
+    });
     ServeConfig {
         mode,
         budget: args.usize_or("budget", 1024),
@@ -93,6 +111,9 @@ fn serve_config(args: &Args) -> ServeConfig {
         pool_bytes: (pool_mb > 0).then_some(pool_mb << 20),
         swap_bytes: (swap_mb > 0).then_some(swap_mb << 20),
         prefix_share: args.bool("prefix-share"),
+        slo_class: slo_class.as_ref().map(|c| c.name.to_string()),
+        slo: slo_class.map(|c| c.slo).unwrap_or_default(),
+        slo_aware: args.bool("slo-aware"),
         ..ServeConfig::default()
     }
 }

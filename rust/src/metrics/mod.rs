@@ -5,8 +5,11 @@
 //! swap-in/out counts, bytes moved, restore latency, recompute
 //! fallbacks) added for the preemption fast path, the cross-session
 //! batched-decode counters (fused steps, session-steps advanced,
-//! decode-batch size histogram), and the chunked-prefill lane counters
-//! (chunk size, chunks run, interleaved steps, prefill-queue depth).
+//! decode-batch size histogram), the chunked-prefill lane counters
+//! (chunk size, chunks run, interleaved steps, prefill-queue depth),
+//! and the SLO-aware goodput counters (policy echo, global and
+//! per-class goodput / violation counts, TTFT/TPOT percentiles —
+//! [`SloClassSnap`]).
 
 use std::time::Instant;
 
@@ -143,6 +146,43 @@ impl Breakdown {
     }
 }
 
+/// Per-tenant-class SLO scoreboard inside [`SchedSnapshot`]: verdict
+/// counts plus nearest-rank latency percentiles, all integer-typed
+/// (ticks / milli-ticks) so the snapshot stays `Eq`-comparable across
+/// bit-reproducible replays.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SloClassSnap {
+    /// Tenant-class label (`"chat"`, `"math"`, ...).
+    pub name: String,
+    /// Sessions of this class that finished meeting their SLO target.
+    pub goodput: u64,
+    /// Sessions of this class that finished missing it (failures
+    /// included).
+    pub violations: u64,
+    /// TTFT p50 across finished classed sessions, in scheduler ticks.
+    pub ttft_p50: u64,
+    pub ttft_p99: u64,
+    /// TPOT p50 in milli-ticks per output token (fixed-point, so 2500
+    /// = 2.5 ticks/token).
+    pub tpot_p50_milli: u64,
+    pub tpot_p99_milli: u64,
+}
+
+impl SloClassSnap {
+    /// JSON object for the `stats` command / bench result files.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()));
+        j.set("goodput", Json::Num(self.goodput as f64));
+        j.set("violations", Json::Num(self.violations as f64));
+        j.set("ttft_p50", Json::Num(self.ttft_p50 as f64));
+        j.set("ttft_p99", Json::Num(self.ttft_p99 as f64));
+        j.set("tpot_p50_milli", Json::Num(self.tpot_p50_milli as f64));
+        j.set("tpot_p99_milli", Json::Num(self.tpot_p99_milli as f64));
+        j
+    }
+}
+
 /// Point-in-time view of the memory-aware scheduler and its block pool
 /// (Tables 2/3 serving discipline: admissions, preemptions, KV bytes).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
@@ -246,6 +286,18 @@ pub struct SchedSnapshot {
     pub prefill_memo_hits: u64,
     /// Engine prefill-memo/chunk-state LRU evictions.
     pub prefill_memo_evictions: u64,
+    /// True when the scheduler runs the goodput (SLO-aware) policy —
+    /// deadline-slack ordering instead of FIFO.
+    pub sched_policy_goodput: bool,
+    /// Classed sessions that finished meeting their SLO target.
+    pub goodput: u64,
+    /// Classed sessions that finished missing it (failures included).
+    /// `goodput + slo_violations` = classed terminations; the per-class
+    /// counts in `slo_classes` sum to the same pair.
+    pub slo_violations: u64,
+    /// Per-tenant-class scoreboards, in first-termination order (empty
+    /// until a classed session finishes).
+    pub slo_classes: Vec<SloClassSnap>,
 }
 
 impl SchedSnapshot {
@@ -302,6 +354,13 @@ impl SchedSnapshot {
         j.set("pjrt_fallback_executes", Json::Num(self.pjrt_fallback_executes as f64));
         j.set("prefill_memo_hits", Json::Num(self.prefill_memo_hits as f64));
         j.set("prefill_memo_evictions", Json::Num(self.prefill_memo_evictions as f64));
+        j.set(
+            "sched_policy",
+            Json::Str(if self.sched_policy_goodput { "goodput" } else { "throughput" }.into()),
+        );
+        j.set("goodput", Json::Num(self.goodput as f64));
+        j.set("slo_violations", Json::Num(self.slo_violations as f64));
+        j.set("slo_classes", Json::Arr(self.slo_classes.iter().map(|c| c.to_json()).collect()));
         j
     }
 
@@ -360,6 +419,26 @@ impl SchedSnapshot {
                 self.swap_capacity,
                 self.swap_peak
             ));
+        }
+        if self.goodput + self.slo_violations > 0 || self.sched_policy_goodput {
+            s.push_str(&format!(
+                "\nslo ({}): goodput {}, violations {}",
+                if self.sched_policy_goodput { "goodput policy" } else { "throughput policy" },
+                self.goodput,
+                self.slo_violations
+            ));
+            for c in &self.slo_classes {
+                s.push_str(&format!(
+                    " | {}: {}/{} met, ttft p50/p99 {}/{}, tpot p50/p99 {}/{} milli",
+                    c.name,
+                    c.goodput,
+                    c.goodput + c.violations,
+                    c.ttft_p50,
+                    c.ttft_p99,
+                    c.tpot_p50_milli,
+                    c.tpot_p99_milli
+                ));
+            }
         }
         if self.prefix_enabled {
             s.push_str(&format!(
@@ -578,6 +657,53 @@ mod tests {
         assert!(summary.contains("alias 6 (8192 B uncopied)"));
         // no executes recorded (fake engines): the pjrt line is omitted
         assert!(!SchedSnapshot::default().summary().contains("pjrt:"));
+    }
+
+    /// Satellite: the SLO/goodput fields surface in JSON (round-trip
+    /// through the per-class array included) and the summary, and stay
+    /// omitted from the summary for an unclassed throughput run.
+    #[test]
+    fn sched_snapshot_slo_fields_surface() {
+        let s = SchedSnapshot {
+            sched_policy_goodput: true,
+            goodput: 7,
+            slo_violations: 3,
+            slo_classes: vec![
+                SloClassSnap {
+                    name: "chat".into(),
+                    goodput: 5,
+                    violations: 3,
+                    ttft_p50: 40,
+                    ttft_p99: 210,
+                    tpot_p50_milli: 1500,
+                    tpot_p99_milli: 2500,
+                },
+                SloClassSnap { name: "math".into(), goodput: 2, ..SloClassSnap::default() },
+            ],
+            ..SchedSnapshot::default()
+        };
+        // per-class counts sum to the global pair by construction here;
+        // the scheduler test asserts the live invariant
+        let class_total: u64 = s.slo_classes.iter().map(|c| c.goodput + c.violations).sum();
+        assert_eq!(class_total, s.goodput + s.slo_violations);
+        let j = s.to_json();
+        assert_eq!(j.get("sched_policy").and_then(Json::as_str), Some("goodput"));
+        assert_eq!(j.get("goodput").and_then(Json::as_usize), Some(7));
+        assert_eq!(j.get("slo_violations").and_then(Json::as_usize), Some(3));
+        let classes = j.get("slo_classes").and_then(Json::as_arr).expect("classes array");
+        assert_eq!(classes.len(), 2);
+        assert_eq!(classes[0].get("name").and_then(Json::as_str), Some("chat"));
+        assert_eq!(classes[0].get("ttft_p99").and_then(Json::as_usize), Some(210));
+        assert_eq!(classes[1].get("goodput").and_then(Json::as_usize), Some(2));
+        let summary = s.summary();
+        assert!(summary.contains("slo (goodput policy): goodput 7, violations 3"));
+        assert!(summary.contains("chat: 5/8 met"));
+        // throughput policy with no classed terminations: line omitted
+        assert!(!SchedSnapshot::default().summary().contains("slo ("));
+        assert_eq!(
+            SchedSnapshot::default().to_json().get("sched_policy").and_then(Json::as_str),
+            Some("throughput")
+        );
     }
 
     #[test]

@@ -250,6 +250,15 @@ pub trait DecodeEngine {
     fn exec_stats(&self) -> ExecStats {
         ExecStats::default()
     }
+
+    /// Deterministic logical time, for engines that meter their own
+    /// work (one unit per prefill token / decode member-step). Workers
+    /// feed this into the scheduler's logical clock so SLO accounting
+    /// is bit-reproducible in trace replays; `None` (the default, real
+    /// PJRT engines) leaves the scheduler on wall-clock time.
+    fn logical_now(&self) -> Option<u64> {
+        None
+    }
 }
 
 /// Outputs of one decode step.

@@ -23,8 +23,11 @@
 //! PJRT-execute ledger (`pjrt_decode_executes` — one per fused batch,
 //! one per counted fallback member `pjrt_fallback_executes` —
 //! `pjrt_prefill_executes`, and the engine prefill-memo
-//! `prefill_memo_hits`/`prefill_memo_evictions`) alongside the serving
-//! totals.
+//! `prefill_memo_hits`/`prefill_memo_evictions`), and the SLO-goodput
+//! ledger (`sched_policy` — `"goodput"`/`"throughput"` — global
+//! `goodput`/`slo_violations`, plus a `slo_classes` array with
+//! per-tenant-class goodput, violations, and TTFT/TPOT p50/p99 in
+//! scheduler ticks) alongside the serving totals.
 //! Per-request replies carry `preemptions` (recompute resets),
 //! `swap_ins` (zero-replay resumes), and the TTFT decomposition
 //! (`prefill_ms` engine time + `prefill_chunks`; `ttft_ms -

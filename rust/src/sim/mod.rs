@@ -8,7 +8,10 @@
 //!   streams with tri-modal attention sparsity (Obs. 1), importance
 //!   hierarchy R>E>T with outlier transition anchors (Obs. 2), and
 //!   association decay across transitions (Obs. 3), parameterized per
-//!   dataset (AIME / LiveCodeBench / MATH-500 / GSM8K, Fig 10f mixes).
+//!   dataset (AIME / LiveCodeBench / MATH-500 / GSM8K, Fig 10f mixes);
+//!   plus the deterministic multi-tenant [`ArrivalTrace`] generator —
+//!   seeded Poisson + bursty arrivals over SLO-classed tenant mixes
+//!   with shared per-class system prompts.
 //! * [`oracle`] — counterfactual accuracy oracle: pass@1 as a function of
 //!   which tokens a policy retained, at what precision; quantization-noise
 //!   driven generation-length inflation (Fig 2/10d); endless-loop failure
@@ -25,4 +28,4 @@ pub mod trace;
 pub use gpu::{GpuProfile, LrmProfile, ServingCost};
 pub use harness::{run_method, Method, SimConfig, SimResult};
 pub use oracle::Oracle;
-pub use trace::{DatasetProfile, Trace, TraceSegment};
+pub use trace::{ArrivalEvent, ArrivalTrace, DatasetProfile, TenantClass, Trace, TraceSegment};

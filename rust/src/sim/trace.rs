@@ -17,6 +17,7 @@
 //! (classifier, TBE, baselines, oracle) consumes only such statistics, so
 //! curve *shapes* transfer.
 
+use crate::coordinator::SloTarget;
 use crate::kvcache::Thought;
 use crate::util::rng::Rng;
 
@@ -339,6 +340,221 @@ fn dirichlet_like(rng: &mut Rng, n: usize) -> Vec<f64> {
     w
 }
 
+// ---------------------------------------------------------------------------
+// Multi-tenant arrival traces (ISSUE 7)
+// ---------------------------------------------------------------------------
+
+/// One tenant class in a multi-tenant arrival trace: a [`DatasetProfile`]
+/// (the session *shape* — long-CoT math, coding, short chat), a shared
+/// system prompt every session in the class opens with, an arrival
+/// process (seeded Poisson plus optional periodic bursts), and the
+/// per-class [`SloTarget`] the scheduler scores completions against.
+#[derive(Debug, Clone)]
+pub struct TenantClass {
+    pub name: &'static str,
+    /// Workload shape this class draws from (R-KV / ThinKV eval mixes).
+    pub dataset: DatasetProfile,
+    /// Shared system-prompt length in tokens: every session in the
+    /// class starts with the same class-specific token prefix (the
+    /// prefix-sharing workload shape).
+    pub system_prompt_len: usize,
+    /// Per-session private prompt tail length in tokens.
+    pub tail_len: usize,
+    pub max_new_tokens: usize,
+    /// Mean Poisson arrival rate, arrivals per tick (0 = bursts only).
+    pub rate: f64,
+    /// Every `burst_every` ticks, `burst_size` extra arrivals land on
+    /// the same tick (0 = no bursts; the Poisson process alone).
+    pub burst_every: u64,
+    pub burst_size: usize,
+    /// TTFT/TPOT target for the class (ticks; 0 halves disabled).
+    pub slo: SloTarget,
+}
+
+impl TenantClass {
+    /// Short interactive chat: tiny prompts, short generations, tight
+    /// TTFT — the latency-sensitive tenant.
+    pub fn chat() -> TenantClass {
+        TenantClass {
+            name: "chat",
+            dataset: DatasetProfile::gsm8k(),
+            system_prompt_len: 16,
+            tail_len: 8,
+            max_new_tokens: 8,
+            rate: 0.004,
+            burst_every: 400,
+            burst_size: 3,
+            slo: SloTarget::new(250, 100_000),
+        }
+    }
+
+    /// Long-CoT math reasoning: long prompts and very long generations,
+    /// throughput-oriented (generous TTFT, bounded TPOT).
+    pub fn math() -> TenantClass {
+        TenantClass {
+            name: "math",
+            dataset: DatasetProfile::aime(),
+            system_prompt_len: 48,
+            tail_len: 16,
+            max_new_tokens: 64,
+            rate: 0.002,
+            burst_every: 0,
+            burst_size: 0,
+            slo: SloTarget::new(4_000, 400_000),
+        }
+    }
+
+    /// Coding: long prompts, medium generations, intermediate targets.
+    pub fn coding() -> TenantClass {
+        TenantClass {
+            name: "coding",
+            dataset: DatasetProfile::livecodebench(),
+            system_prompt_len: 32,
+            tail_len: 16,
+            max_new_tokens: 32,
+            rate: 0.003,
+            burst_every: 0,
+            burst_size: 0,
+            slo: SloTarget::new(2_000, 250_000),
+        }
+    }
+
+    /// Resolve a builtin class by name (the `--slo-class` CLI values).
+    pub fn by_name(name: &str) -> Option<TenantClass> {
+        match name.to_ascii_lowercase().as_str() {
+            "chat" => Some(Self::chat()),
+            "math" => Some(Self::math()),
+            "coding" | "code" => Some(Self::coding()),
+            _ => None,
+        }
+    }
+}
+
+/// One arrival in the merged multi-tenant stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrivalEvent {
+    /// Arrival tick (deterministic logical time).
+    pub at: u64,
+    /// Index into the class list the trace was generated from.
+    pub class_id: usize,
+    pub class_name: &'static str,
+    /// Session id, assigned in merged arrival order (1-based).
+    pub id: u64,
+    /// Prompt tokens: the class's shared system prefix + a private tail.
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub slo: SloTarget,
+}
+
+/// A deterministic multi-tenant arrival trace: the merged, time-sorted
+/// stream of [`ArrivalEvent`]s drawn from a set of [`TenantClass`]es.
+/// Same `(classes, seed, horizon, vocab)` → byte-identical trace; each
+/// class draws from its own forked PRNG stream, so adding a class never
+/// perturbs the arrivals of the others.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrivalTrace {
+    pub seed: u64,
+    pub horizon: u64,
+    pub events: Vec<ArrivalEvent>,
+    /// Sessions generated per class (index-aligned with the class list).
+    pub per_class: Vec<usize>,
+}
+
+impl ArrivalTrace {
+    /// Generate the merged arrival stream over `[0, horizon)` ticks.
+    /// Poisson gaps are sampled as `-ln(U)/rate` per class; bursts land
+    /// `burst_size` arrivals on every `burst_every` tick boundary. All
+    /// prompt tokens are drawn below `vocab`.
+    pub fn generate(
+        classes: &[TenantClass],
+        seed: u64,
+        horizon: u64,
+        vocab: usize,
+    ) -> ArrivalTrace {
+        let mut root = Rng::new(seed);
+        // (at, class_id, prompt, class) in per-class generation order;
+        // the stable sort below keeps that order inside a tick.
+        let mut raw: Vec<(u64, usize, Vec<i32>)> = Vec::new();
+        let mut per_class = vec![0usize; classes.len()];
+        for (ci, c) in classes.iter().enumerate() {
+            let mut rng = root.fork(ci as u64 + 1);
+            let system: Vec<i32> =
+                (0..c.system_prompt_len).map(|_| rng.below(vocab.max(1)) as i32).collect();
+            let mut mk_prompt = |rng: &mut Rng| -> Vec<i32> {
+                let mut p = system.clone();
+                p.extend((0..c.tail_len).map(|_| rng.below(vocab.max(1)) as i32));
+                p
+            };
+            // Poisson process: exponential inter-arrival gaps
+            if c.rate > 0.0 {
+                let mut t = 0.0f64;
+                loop {
+                    let u = rng.f64().max(1e-12);
+                    t += -u.ln() / c.rate;
+                    if t >= horizon as f64 {
+                        break;
+                    }
+                    let prompt = mk_prompt(&mut rng);
+                    raw.push((t as u64, ci, prompt));
+                    per_class[ci] += 1;
+                }
+            }
+            // periodic bursts: a cluster on the same tick
+            if c.burst_every > 0 && c.burst_size > 0 {
+                let mut bt = c.burst_every;
+                while bt < horizon {
+                    for _ in 0..c.burst_size {
+                        let prompt = mk_prompt(&mut rng);
+                        raw.push((bt, ci, prompt));
+                        per_class[ci] += 1;
+                    }
+                    bt += c.burst_every;
+                }
+            }
+        }
+        raw.sort_by_key(|(at, ci, _)| (*at, *ci));
+        let events = raw
+            .into_iter()
+            .enumerate()
+            .map(|(i, (at, ci, prompt))| ArrivalEvent {
+                at,
+                class_id: ci,
+                class_name: classes[ci].name,
+                id: i as u64 + 1,
+                prompt,
+                max_new_tokens: classes[ci].max_new_tokens,
+                slo: classes[ci].slo,
+            })
+            .collect();
+        ArrivalTrace { seed, horizon, events, per_class }
+    }
+
+    /// FNV-1a digest over the full arrival stream (ticks, class ids,
+    /// prompt bytes, budgets, targets) — a one-number determinism
+    /// witness for golden tests and bench output.
+    pub fn digest(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut eat = |h: &mut u64, x: u64| {
+            for b in x.to_le_bytes() {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        };
+        for e in &self.events {
+            eat(&mut h, e.at);
+            eat(&mut h, e.class_id as u64);
+            eat(&mut h, e.id);
+            eat(&mut h, e.max_new_tokens as u64);
+            eat(&mut h, e.slo.ttft_ticks);
+            eat(&mut h, e.slo.tpot_milli_ticks);
+            for &t in &e.prompt {
+                eat(&mut h, t as u64);
+            }
+        }
+        h
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -443,5 +659,83 @@ mod tests {
     fn llm_mode_is_single_thought() {
         let t = Trace::generate(&DatasetProfile::longwriter(), 7, 0.2);
         assert!(t.token_thought.iter().all(|&x| x == Thought::Reasoning));
+    }
+
+    fn mix() -> Vec<TenantClass> {
+        vec![TenantClass::chat(), TenantClass::math(), TenantClass::coding()]
+    }
+
+    #[test]
+    fn arrival_trace_is_seed_deterministic() {
+        let a = ArrivalTrace::generate(&mix(), 11, 4_000, 64);
+        let b = ArrivalTrace::generate(&mix(), 11, 4_000, 64);
+        assert_eq!(a, b);
+        assert_eq!(a.digest(), b.digest());
+        let c = ArrivalTrace::generate(&mix(), 12, 4_000, 64);
+        assert_ne!(a.digest(), c.digest(), "different seeds must diverge");
+    }
+
+    #[test]
+    fn arrival_trace_is_sorted_and_counted() {
+        let t = ArrivalTrace::generate(&mix(), 3, 6_000, 64);
+        assert!(!t.events.is_empty());
+        for w in t.events.windows(2) {
+            assert!(w[0].at <= w[1].at, "events must be time-sorted");
+            assert!(w[0].id < w[1].id, "ids assigned in merged order");
+        }
+        assert_eq!(t.per_class.iter().sum::<usize>(), t.events.len());
+        // every class produced at least one arrival over this horizon
+        assert!(t.per_class.iter().all(|&n| n > 0), "{:?}", t.per_class);
+    }
+
+    #[test]
+    fn arrival_trace_shares_system_prompts_within_class() {
+        let classes = mix();
+        let t = ArrivalTrace::generate(&classes, 5, 6_000, 64);
+        for (ci, c) in classes.iter().enumerate() {
+            let prompts: Vec<&Vec<i32>> = t
+                .events
+                .iter()
+                .filter(|e| e.class_id == ci)
+                .map(|e| &e.prompt)
+                .collect();
+            assert!(prompts.len() > 1, "class {ci} too sparse to check sharing");
+            let prefix = &prompts[0][..c.system_prompt_len];
+            for p in &prompts {
+                assert_eq!(p.len(), c.system_prompt_len + c.tail_len);
+                assert_eq!(&p[..c.system_prompt_len], prefix, "shared prefix drifted");
+            }
+            // SLO + budget carried per event
+            for e in t.events.iter().filter(|e| e.class_id == ci) {
+                assert_eq!(e.slo, c.slo);
+                assert_eq!(e.max_new_tokens, c.max_new_tokens);
+                assert_eq!(e.class_name, c.name);
+            }
+        }
+    }
+
+    #[test]
+    fn arrival_trace_bursts_cluster() {
+        // bursts only: every arrival sits exactly on a burst boundary
+        let c = TenantClass {
+            rate: 0.0,
+            burst_every: 500,
+            burst_size: 4,
+            ..TenantClass::chat()
+        };
+        let t = ArrivalTrace::generate(&[c], 9, 2_000, 64);
+        assert_eq!(t.events.len(), 3 * 4, "3 boundaries x 4 arrivals");
+        for e in &t.events {
+            assert_eq!(e.at % 500, 0, "burst arrival off the boundary: {}", e.at);
+        }
+    }
+
+    #[test]
+    fn builtin_classes_resolve_by_name() {
+        for name in ["chat", "math", "coding", "code"] {
+            let c = TenantClass::by_name(name).expect(name);
+            assert!(!c.slo.is_none(), "{name} must carry a real SLO target");
+        }
+        assert!(TenantClass::by_name("nope").is_none());
     }
 }

@@ -224,7 +224,11 @@ impl MeteredEngine {
         self.step_marks.borrow().clone()
     }
 
-    fn tick(&self, units: u64) {
+    /// Advance the clock without doing engine work — trace-replay
+    /// harnesses fast-forward idle gaps between arrivals with this, so
+    /// arrival times land on the same deterministic timeline as the
+    /// metered engine calls.
+    pub fn tick(&self, units: u64) {
         self.clock.set(self.clock.get() + units);
     }
 }
@@ -278,5 +282,12 @@ impl DecodeEngine for MeteredEngine {
             prefill_executes: self.prefill_execs.get(),
             ..ExecStats::default()
         }
+    }
+
+    /// The logical clock doubles as the scheduler's deterministic tick
+    /// source: workers feed it through `Scheduler::drive_clock`, so SLO
+    /// accounting (TTFT/TPOT in ticks) is bit-reproducible.
+    fn logical_now(&self) -> Option<u64> {
+        Some(self.clock.get())
     }
 }

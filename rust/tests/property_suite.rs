@@ -763,3 +763,171 @@ fn fp32_backend_snapshot_roundtrip_bit_exact() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// SLO goodput accounting (ISSUE 7)
+// ---------------------------------------------------------------------------
+
+/// Goodput accounting must balance for any randomized mix of classed /
+/// unclassed sessions, termination orders, verdicts, and clock skews
+/// driven through the production scheduler on its logical clock:
+/// `goodput + slo_violations` counts exactly the classed terminations
+/// (best-effort sessions never score), every verdict matches the same
+/// `met()` the scheduler applies, the per-class books fold to the
+/// global pair, and the snapshot's SLO surface survives a JSON round
+/// trip bit-exactly.
+#[test]
+fn slo_goodput_accounting_balances_and_roundtrips() {
+    use std::sync::mpsc;
+    use thinkv::coordinator::{SchedPolicy, Scheduler, ServeConfig, Session, SloTarget};
+    use thinkv::testkit::tiny_manifest;
+
+    prop::check(15, |g| {
+        let man = tiny_manifest();
+        let pool = Arc::new(BlockPool::new(u64::MAX / 2));
+        let sched = Scheduler::new(Arc::clone(&pool));
+        let goodput_mode = g.bool();
+        if goodput_mode {
+            sched.set_policy(SchedPolicy::Goodput);
+        }
+        let mut now = 1u64;
+        sched.drive_clock(now);
+        let (tx, _rx) = mpsc::channel();
+
+        // submit a random tenant mix: some sessions carry a class label,
+        // some a live target, some neither — only label AND target score
+        let n = g.usize(1, 20);
+        for id in 1..=n as u64 {
+            let label =
+                if g.chance(0.8) { Some(*g.pick(&["chat", "math", "bulk"])) } else { None };
+            let target = if g.chance(0.75) {
+                SloTarget::new(
+                    g.usize(1, 60) as u64,
+                    if g.bool() { g.usize(200, 4000) as u64 } else { 0 },
+                )
+            } else {
+                SloTarget::default()
+            };
+            let cfg = ServeConfig {
+                max_new_tokens: 8,
+                slo_class: label.map(str::to_string),
+                slo: target,
+                ..ServeConfig::default()
+            };
+            now += g.usize(0, 10) as u64;
+            sched.drive_clock(now);
+            let s = Session::with_pool(id, vec![1, 2, 3], &cfg, &man, Some(Arc::clone(&pool)))
+                .map_err(|e| format!("session: {e}"))?;
+            sched.submit(s, tx.clone());
+        }
+
+        // terminate every session with a randomized history — maybe a
+        // first token, a few generated tokens, maybe a hard failure —
+        // predicting each verdict with the scheduler's own met()
+        let mut want: Vec<(String, u64, u64)> = Vec::new();
+        let mut ok = 0u64;
+        for _ in 0..n {
+            let mut e = sched.next().ok_or("scheduler stopped early")?;
+            if g.chance(0.8) {
+                now += g.usize(0, 90) as u64;
+                sched.drive_clock(now);
+                e.session.slo.first_token_tick = Some(now);
+            }
+            for t in 0..g.usize(0, 5) {
+                e.session.tokens.push(t as i32);
+            }
+            now += g.usize(0, 60) as u64;
+            sched.drive_clock(now);
+            let failed = g.chance(0.2);
+            if e.session.slo.classed() {
+                let mut probe = e.session.slo.clone();
+                probe.finished_tick = Some(now);
+                let met = !failed && probe.met(e.session.tokens.len()).unwrap_or(false);
+                match want.iter().position(|(c, _, _)| *c == probe.class) {
+                    Some(i) => {
+                        if met {
+                            want[i].1 += 1;
+                        } else {
+                            want[i].2 += 1;
+                        }
+                    }
+                    None => want.push((probe.class.clone(), met as u64, !met as u64)),
+                }
+            }
+            if failed {
+                sched.complete_failed(&mut e.session);
+            } else {
+                sched.complete(&mut e.session);
+                ok += 1;
+            }
+        }
+
+        let snap = sched.snapshot();
+        if snap.sched_policy_goodput != goodput_mode {
+            return Err("policy flag drifted".into());
+        }
+        if snap.completions != ok {
+            return Err(format!("completions {} != {ok}", snap.completions));
+        }
+        let (wg, wv) = want.iter().fold((0u64, 0u64), |(a, b), r| (a + r.1, b + r.2));
+        if (snap.goodput, snap.slo_violations) != (wg, wv) {
+            return Err(format!(
+                "global pair ({}, {}) != predicted ({wg}, {wv})",
+                snap.goodput, snap.slo_violations
+            ));
+        }
+        if snap.goodput + snap.slo_violations > n as u64 {
+            return Err("scored more sessions than terminated".into());
+        }
+        // class books appear in first-termination order and fold to the
+        // global pair
+        if snap.slo_classes.len() != want.len() {
+            return Err(format!(
+                "class book count {} != {}",
+                snap.slo_classes.len(),
+                want.len()
+            ));
+        }
+        for (c, (name, cg, cv)) in snap.slo_classes.iter().zip(&want) {
+            if (&c.name, c.goodput, c.violations) != (name, *cg, *cv) {
+                return Err(format!(
+                    "class {} book ({}, {}) != predicted {name} ({cg}, {cv})",
+                    c.name, c.goodput, c.violations
+                ));
+            }
+            if c.ttft_p99 < c.ttft_p50 || c.tpot_p99_milli < c.tpot_p50_milli {
+                return Err(format!("class {} percentiles out of order", c.name));
+            }
+        }
+
+        // the SLO surface must survive serialization exactly
+        let j = snap.to_json();
+        let back = json::parse(&j.to_string()).map_err(|e| format!("parse: {e}"))?;
+        if back != j {
+            return Err("snapshot JSON does not round-trip".into());
+        }
+        let policy = back.get("sched_policy").and_then(|v| v.as_str()).ok_or("sched_policy")?;
+        if policy != if goodput_mode { "goodput" } else { "throughput" } {
+            return Err(format!("sched_policy serialized as {policy}"));
+        }
+        for (key, val) in [("goodput", wg), ("slo_violations", wv)] {
+            let got = back.get(key).and_then(|v| v.as_f64()).ok_or(key)?;
+            if got != val as f64 {
+                return Err(format!("{key} serialized as {got}, want {val}"));
+            }
+        }
+        let classes = back.get("slo_classes").and_then(|v| v.as_arr()).ok_or("slo_classes")?;
+        if classes.len() != want.len() {
+            return Err("serialized class count drifted".into());
+        }
+        for (c, (name, cg, cv)) in classes.iter().zip(&want) {
+            let cname = c.get("name").and_then(|v| v.as_str()).ok_or("class name")?;
+            let cgood = c.get("goodput").and_then(|v| v.as_f64()).ok_or("class goodput")?;
+            let cviol = c.get("violations").and_then(|v| v.as_f64()).ok_or("class violations")?;
+            if cname != name || cgood != *cg as f64 || cviol != *cv as f64 {
+                return Err(format!("class {cname} serialized as ({cgood}, {cviol})"));
+            }
+        }
+        Ok(())
+    });
+}
