@@ -61,6 +61,7 @@ bench-smoke:
 	  && grep -Eq "^fused_executes=[1-9][0-9]*$$" bench_smoke.out \
 	  && grep -Eq "^prefix_alias_hits=[1-9][0-9]*$$" bench_smoke.out \
 	  && grep -Eq "^goodput=[1-9][0-9]*$$" bench_smoke.out \
+	  && grep -Eq "^policy_divergence=0$$" bench_smoke.out \
 	  && grep -q "skipping real-coordinator" bench_smoke.out; \
 	status=$$?; rm -f bench_smoke.out; exit $$status
 

@@ -11,19 +11,26 @@
 //! measured on a deterministic engine-time clock), and the **SLO
 //! goodput sweep** (one deterministic multi-tenant arrival trace
 //! replayed under throughput-greedy FIFO vs the goodput policy; the
-//! slack-ordered scheduler must strictly raise SLO attainment) — plus
-//! a real coordinator oversubscription mini-run comparing both
-//! preemption policies when artifacts exist.
+//! slack-ordered scheduler must strictly raise SLO attainment), and the
+//! **policy-arena divergence sweep** (every registered eviction policy
+//! driven through the live fp32 arena, its retention audit log replayed
+//! through the sim-oracle twin; the summed mismatch count is the
+//! greppable `policy_divergence=0` gate) — plus a real coordinator
+//! oversubscription mini-run comparing both preemption policies when
+//! artifacts exist.
 
 use std::sync::{mpsc, Arc};
 
+use thinkv::baselines::PolicyKind;
 use thinkv::bench::{write_results, Table};
 use thinkv::coordinator::{
     advance_batch, CompressionMode, SchedPolicy, Scheduler, ServeConfig, Session, SloTarget,
 };
 use thinkv::kvcache::{BlockPool, PrefixIndex};
-use thinkv::sim::{ArrivalTrace, GpuProfile, LrmProfile, ServingCost, TenantClass};
-use thinkv::testkit::{share_manifest, CausalEngine, MeteredEngine};
+use thinkv::sim::{
+    replay_divergence, ArrivalTrace, GpuProfile, LrmProfile, ServingCost, TenantClass,
+};
+use thinkv::testkit::{drive_arena, share_manifest, CausalEngine, MeteredEngine};
 
 fn drain(sched: &Scheduler, engine: &CausalEngine) {
     while sched.inflight() > 0 {
@@ -630,6 +637,38 @@ fn main() {
     println!("goodput={}", slo.goodput);
     assert!(slo.goodput > 0, "goodput replay must meet SLOs");
 
+    // Part 6.75: policy-arena divergence sweep (ISSUE 8). Drive every
+    // registered eviction policy through the live fp32 arena with the
+    // retention audit log on, then replay each recorded history through
+    // the sim-oracle twin. The summed mismatch count is the
+    // machine-greppable gate: any live/sim drift — a policy losing
+    // state, a nondeterministic tiebreak, an audit event recorded out
+    // of order — surfaces as a nonzero divergence.
+    let mut t10 = Table::new(
+        "Policy arena: live-vs-sim replay divergence (fp32 arena, audit-log replay)",
+        &["policy", "events", "evicted", "skipped", "retained_B", "mismatches"],
+    );
+    let mut total_mismatches = 0usize;
+    for kind in PolicyKind::ALL {
+        let run = drive_arena(kind, 24, 40, 7);
+        let d = replay_divergence(&run.trace);
+        total_mismatches += d.mismatches;
+        t10.row(&[
+            kind.name().to_string(),
+            format!("{}", d.events),
+            format!("{}", run.counters.evicted),
+            format!("{}", run.counters.skipped),
+            format!("{}", run.counters.retained_bytes),
+            format!("{}", d.mismatches),
+        ]);
+    }
+    t10.print();
+    // machine-greppable gate: CI greps this line for exactly 0, so a
+    // policy whose live decisions stop replaying in the sim twin fails
+    // the bench-smoke lane even before the conformance suite runs
+    println!("policy_divergence={total_mismatches}");
+    assert_eq!(total_mismatches, 0, "live policies must replay exactly in the sim twin");
+
     // Part 7: real coordinator oversubscription mini-run (CPU PJRT),
     // recompute preemption vs suspend-to-host swap
     let artifacts = format!("{}/model_config.json", thinkv::model::default_artifacts_dir());
@@ -640,6 +679,7 @@ fn main() {
     j.set("prefix_sharing", t6.to_json());
     j.set("arrival_burst", t7.to_json());
     j.set("slo_goodput", t9.to_json());
+    j.set("policy_arena", t10.to_json());
     if std::path::Path::new(&artifacts).exists()
         && std::env::var("THINKV_BENCH_REAL").map(|v| v == "1").unwrap_or(true)
     {

@@ -41,6 +41,18 @@ pub trait EvictionPolicy: Send {
         true
     }
 
+    /// Decide whether the K/V entry the current step is about to produce
+    /// at `pos` should **never be materialized** (SkipKV's selective
+    /// KV-generation skipping — a never-materialize axis, not an
+    /// eviction axis). The live backend consults this after feeding the
+    /// step's attention row to [`EvictionPolicy::observe`]; a `true`
+    /// skips the cache append entirely, so the position consumes neither
+    /// pool bytes nor a cache row. Default: never skip.
+    fn skip_kv(&mut self, pos: usize) -> bool {
+        let _ = pos;
+        false
+    }
+
     /// Clone into a new boxed policy carrying the same accumulated
     /// statistics — suspend-to-host snapshots
     /// ([`crate::kvcache::swap::Fp32Snapshot`]) duplicate the policy so
@@ -412,13 +424,27 @@ impl EvictionPolicy for RaaS {
 pub struct SnapKv {
     /// Positions chosen at prefill (protected).
     pub prefill_keep: Vec<usize>,
+    /// Deferred-priming target: while `prefill_keep` is empty, the
+    /// *first* observed attention row primes the protected set with its
+    /// top `keep_n` positions. The live serving path prefills in chunks
+    /// and has no whole-prompt observation scores, so priming happens on
+    /// the first decode step instead — deterministic, and replayable
+    /// because observed rows are part of the retention trace. 0 = never
+    /// prime (an explicit prefill set was supplied).
+    pub keep_n: usize,
 }
 
 impl SnapKv {
     /// `obs[pos]` = prefill observation scores; keep top `keep_n`.
     pub fn from_prefill_obs(obs: &[f32], keep_n: usize) -> SnapKv {
         let keep = crate::util::stats::top_k(obs, keep_n);
-        SnapKv { prefill_keep: keep }
+        SnapKv { prefill_keep: keep, keep_n: 0 }
+    }
+
+    /// Deferred priming (live path): the protected set is captured from
+    /// the first observed attention row instead of prefill scores.
+    pub fn deferred(keep_n: usize) -> SnapKv {
+        SnapKv { prefill_keep: Vec::new(), keep_n }
     }
 }
 
@@ -427,7 +453,18 @@ impl EvictionPolicy for SnapKv {
         "SnapKV"
     }
 
-    fn observe(&mut self, _attn: &PosAttn) {}
+    fn observe(&mut self, attn: &PosAttn) {
+        if self.prefill_keep.is_empty() && self.keep_n > 0 && !attn.attn.is_empty() {
+            // first row primes the protected set (position tie-break
+            // keeps the choice deterministic)
+            let mut scored = attn.attn.clone();
+            scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+            let mut keep: Vec<usize> =
+                scored.into_iter().take(self.keep_n).map(|(p, _)| p).collect();
+            keep.sort_unstable();
+            self.prefill_keep = keep;
+        }
+    }
 
     fn select_evictions(&mut self, live: &[usize], target: usize) -> Vec<usize> {
         if live.len() <= target {
@@ -503,6 +540,330 @@ impl EvictionPolicy for StreamingLlm {
     fn box_clone(&self) -> Box<dyn EvictionPolicy> {
         Box::new(self.clone())
     }
+}
+
+// ---------------------------------------------------------------------------
+// Crystal-KV — answer-first retention (PAPERS.md)
+// ---------------------------------------------------------------------------
+
+/// Crystal-KV: reasoning models spend most tokens *thinking*, but the
+/// final answer is synthesized from a small answer-adjacent suffix plus a
+/// few high-attention anchors. The policy protects the attention sinks
+/// and a trailing answer window outright, ranks the older history by
+/// cumulative attention, and evicts the lowest-mass positions first.
+#[derive(Debug, Clone)]
+pub struct CrystalKv {
+    cum: BTreeMap<usize, f64>,
+    /// Trailing answer-window size (protected while older history can
+    /// still cover the eviction need).
+    pub answer_window: usize,
+    /// Leading attention sinks — immortal, like StreamingLLM's.
+    pub sinks: usize,
+}
+
+impl CrystalKv {
+    pub fn new() -> CrystalKv {
+        CrystalKv { cum: BTreeMap::new(), answer_window: 16, sinks: 4 }
+    }
+}
+
+impl Default for CrystalKv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EvictionPolicy for CrystalKv {
+    fn name(&self) -> &'static str {
+        "Crystal-KV"
+    }
+
+    fn observe(&mut self, attn: &PosAttn) {
+        for (p, a) in &attn.attn {
+            *self.cum.entry(*p).or_insert(0.0) += *a as f64;
+        }
+    }
+
+    fn select_evictions(&mut self, live: &[usize], target: usize) -> Vec<usize> {
+        if live.len() <= target {
+            return Vec::new();
+        }
+        let need = live.len() - target;
+        let tail: std::collections::BTreeSet<usize> =
+            live.iter().rev().take(self.answer_window).copied().collect();
+        let mut candidates: Vec<(f64, usize)> = live
+            .iter()
+            .filter(|&&p| p >= self.sinks && !tail.contains(&p))
+            .map(|&p| (self.cum.get(&p).copied().unwrap_or(0.0), p))
+            .collect();
+        candidates.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let mut out: Vec<usize> = candidates.into_iter().take(need).map(|(_, p)| p).collect();
+        if out.len() < need {
+            // the answer window must yield (oldest first) before the
+            // budget is violated; the sinks stay immortal
+            let chosen: std::collections::BTreeSet<usize> = out.iter().copied().collect();
+            out.extend(
+                live.iter()
+                    .filter(|&&p| p >= self.sinks && !chosen.contains(&p))
+                    .take(need - out.len()),
+            );
+        }
+        out
+    }
+
+    fn needs_gather(&self) -> bool {
+        true // importance eviction leaves holes, like R-KV
+    }
+
+    fn box_clone(&self) -> Box<dyn EvictionPolicy> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SkipKV — selective skipping of KV *generation* (PAPERS.md)
+// ---------------------------------------------------------------------------
+
+/// SkipKV: the never-materialize axis. When the attention row of the
+/// step that produced a token is highly concentrated (one cached
+/// position dominates), the freshly decoded token is redundant with what
+/// the model already attended to, and its K/V entry is never written —
+/// the live backend consults [`EvictionPolicy::skip_kv`] before the
+/// append, so a skipped position consumes neither pool bytes nor a
+/// cache row. Eviction falls back to a sliding window over the
+/// materialized positions (sinks immortal).
+#[derive(Debug, Clone)]
+pub struct SkipKv {
+    /// Max attention mass in the last observed row — the concentration
+    /// signal the skip decision reads.
+    last_max: f32,
+    /// Rows whose max exceeds this mark the new token skippable.
+    pub threshold: f32,
+    pub sinks: usize,
+}
+
+impl SkipKv {
+    pub fn new() -> SkipKv {
+        SkipKv { last_max: 0.0, threshold: 0.35, sinks: 4 }
+    }
+}
+
+impl Default for SkipKv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EvictionPolicy for SkipKv {
+    fn name(&self) -> &'static str {
+        "SkipKV"
+    }
+
+    fn observe(&mut self, attn: &PosAttn) {
+        self.last_max = attn.attn.iter().map(|(_, a)| *a).fold(0.0, f32::max);
+    }
+
+    fn skip_kv(&mut self, pos: usize) -> bool {
+        pos > self.sinks && self.last_max > self.threshold
+    }
+
+    fn select_evictions(&mut self, live: &[usize], target: usize) -> Vec<usize> {
+        if live.len() <= target {
+            return Vec::new();
+        }
+        let need = live.len() - target;
+        live.iter()
+            .filter(|&&p| p >= self.sinks) // sinks are immortal
+            .take(need)
+            .copied()
+            .collect()
+    }
+
+    fn needs_gather(&self) -> bool {
+        false // window eviction plus skips: no holes to compact
+    }
+
+    fn box_clone(&self) -> Box<dyn EvictionPolicy> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PolicyKind registry — the pluggable live policy arena
+// ---------------------------------------------------------------------------
+
+/// Registry of live-arena retention policies: one variant per
+/// [`EvictionPolicy`] implementation the serving path can run over the
+/// f32 paged cache, selectable end-to-end via `ServeConfig::policy` /
+/// `--policy` / the server wire protocol. Adding a policy = adding a
+/// variant here plus its [`PolicyKind::build`] arm; the conformance
+/// battery (`tests/policy_arena.rs`) and the bench-smoke divergence
+/// sweep iterate [`PolicyKind::ALL`] and pick it up automatically.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PolicyKind {
+    #[default]
+    FullKv,
+    H2O,
+    Rkv,
+    RaaS,
+    SnapKv,
+    StreamingLlm,
+    LazyEviction,
+    CrystalKv,
+    SkipKv,
+}
+
+impl PolicyKind {
+    /// Every registered policy, in display order.
+    pub const ALL: [PolicyKind; 9] = [
+        PolicyKind::FullKv,
+        PolicyKind::H2O,
+        PolicyKind::Rkv,
+        PolicyKind::RaaS,
+        PolicyKind::SnapKv,
+        PolicyKind::StreamingLlm,
+        PolicyKind::LazyEviction,
+        PolicyKind::CrystalKv,
+        PolicyKind::SkipKv,
+    ];
+
+    /// Display name — always equal to the built policy's
+    /// [`EvictionPolicy::name`].
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::FullKv => "FullKV",
+            PolicyKind::H2O => "H2O",
+            PolicyKind::Rkv => "R-KV",
+            PolicyKind::RaaS => "RaaS",
+            PolicyKind::SnapKv => "SnapKV",
+            PolicyKind::StreamingLlm => "StreamingLLM",
+            PolicyKind::LazyEviction => "LazyEviction",
+            PolicyKind::CrystalKv => "Crystal-KV",
+            PolicyKind::SkipKv => "SkipKV",
+        }
+    }
+
+    /// Parse a `--policy` flag / wire-protocol value.
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "fullkv" | "full" => PolicyKind::FullKv,
+            "h2o" => PolicyKind::H2O,
+            "rkv" | "r-kv" => PolicyKind::Rkv,
+            "raas" => PolicyKind::RaaS,
+            "snapkv" => PolicyKind::SnapKv,
+            "streaming" | "streamingllm" => PolicyKind::StreamingLlm,
+            "lazyeviction" | "lazy" => PolicyKind::LazyEviction,
+            "crystalkv" | "crystal-kv" | "crystal" => PolicyKind::CrystalKv,
+            "skipkv" | "skip-kv" | "skip" => PolicyKind::SkipKv,
+            _ => return None,
+        })
+    }
+
+    /// Build a fresh policy instance for a serving budget of `budget`
+    /// tokens (SnapKV sizes its deferred prefill-keep set from it). The
+    /// sim-oracle replay rebuilds the twin with the traced budget, so
+    /// live and replayed instances always start from identical state.
+    pub fn build(self, budget: usize) -> Box<dyn EvictionPolicy> {
+        match self {
+            PolicyKind::FullKv => Box::new(FullKv),
+            PolicyKind::H2O => Box::new(H2O::new()),
+            PolicyKind::Rkv => Box::new(Rkv::new()),
+            PolicyKind::RaaS => Box::new(RaaS::new()),
+            PolicyKind::SnapKv => Box::new(SnapKv::deferred((budget / 2).max(1))),
+            PolicyKind::StreamingLlm => Box::new(StreamingLlm::new(4)),
+            PolicyKind::LazyEviction => Box::new(LazyEviction::new()),
+            PolicyKind::CrystalKv => Box::new(CrystalKv::new()),
+            PolicyKind::SkipKv => Box::new(SkipKv::new()),
+        }
+    }
+
+    /// Effective token budget for this policy: FullKV never evicts, so
+    /// its live backend runs unbounded.
+    pub fn budget_for(self, budget: usize) -> usize {
+        match self {
+            PolicyKind::FullKv => usize::MAX,
+            _ => budget,
+        }
+    }
+
+    /// Whether the *live* arena compacts after this policy's evictions.
+    /// Only the policies whose original systems pay the gather cost
+    /// (Figure 7) compact; the rest tolerate holes / stay contiguous.
+    pub fn gather(self) -> bool {
+        matches!(self, PolicyKind::Rkv | PolicyKind::CrystalKv)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Retention audit surface: counters, trace, guarded-region filter
+// ---------------------------------------------------------------------------
+
+/// Per-policy retention counters a live backend accumulates and the
+/// scheduler/stats surface reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RetentionCounters {
+    /// Positions evicted from the cache by the policy.
+    pub evicted: u64,
+    /// Positions whose K/V was never materialized
+    /// ([`EvictionPolicy::skip_kv`]).
+    pub skipped: u64,
+    /// Live cache bytes retained at sample time.
+    pub retained_bytes: u64,
+}
+
+/// One recorded policy decision in a [`RetentionTrace`] — the exact
+/// inputs the live backend handed the policy and the output it got back,
+/// so a sim twin can replay the identical call sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RetentionEvent {
+    /// One decode step's attention row fed to
+    /// [`EvictionPolicy::observe`].
+    Observe { step: usize, attn: Vec<(usize, f32)> },
+    /// The step's token was materialized (skip declined).
+    Keep { pos: usize },
+    /// The step's token was never materialized
+    /// ([`EvictionPolicy::skip_kv`] returned true).
+    Skip { pos: usize },
+    /// One [`EvictionPolicy::select_evictions`] call: the live set and
+    /// target it saw, and the positions it proposed (pre
+    /// guarded-region filtering, so the replay mirrors the raw call).
+    Evict { live: Vec<usize>, target: usize, evicted: Vec<usize> },
+}
+
+/// Compact audit log of every retention decision a live backend made:
+/// (pos, kept/evicted/skipped, step) plus the attention history that
+/// drove it. `sim::oracle::replay_divergence` replays the same history
+/// through a freshly built sim twin and diffs the two decision streams.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RetentionTrace {
+    /// Which registered policy produced the decisions.
+    pub kind: PolicyKind,
+    /// Token budget the live backend ran with (the twin is rebuilt with
+    /// the same budget).
+    pub budget: usize,
+    pub events: Vec<RetentionEvent>,
+}
+
+impl RetentionTrace {
+    pub fn new(kind: PolicyKind, budget: usize) -> RetentionTrace {
+        RetentionTrace { kind, budget, events: Vec::new() }
+    }
+}
+
+/// Split an eviction proposal around a read-only guarded region
+/// `[0, guard)` — the shared-prefix rows a sibling session still reads.
+/// Returns the allowed positions plus how many the guard blocked. This
+/// is the one guarded-region filter every call-site (fp32 eviction, and
+/// the quant backends' pre-privatization checks) routes through, so the
+/// read-only invariant lives in exactly one place.
+pub fn filter_guarded(evict: Vec<usize>, guard: usize) -> (Vec<usize>, usize) {
+    if guard == 0 {
+        return (evict, 0);
+    }
+    let before = evict.len();
+    let allowed: Vec<usize> = evict.into_iter().filter(|&p| p >= guard).collect();
+    let blocked = before - allowed.len();
+    (allowed, blocked)
 }
 
 #[cfg(test)]
@@ -639,5 +1000,107 @@ mod tests {
             assert_eq!(set.len(), 30, "{} duplicates", p.name());
             assert!(ev.iter().all(|e| live.contains(e)), "{} invalid", p.name());
         }
+    }
+
+    #[test]
+    fn snapkv_deferred_primes_from_first_row() {
+        let mut p = SnapKv::deferred(2);
+        assert!(p.prefill_keep.is_empty());
+        steps(&mut p, &[vec![(0, 0.1), (1, 0.9), (2, 0.05), (3, 0.8)]]);
+        assert_eq!(p.prefill_keep, vec![1, 3]);
+        // later rows must not re-prime
+        steps(&mut p, &[vec![(0, 0.9), (1, 0.1), (2, 0.9), (3, 0.1)]]);
+        assert_eq!(p.prefill_keep, vec![1, 3]);
+        let evicted = p.select_evictions(&[0, 1, 2, 3], 2);
+        assert_eq!(evicted, vec![0, 2]);
+    }
+
+    #[test]
+    fn crystal_kv_protects_sinks_and_answer_window() {
+        let mut p = CrystalKv::new();
+        p.answer_window = 2;
+        p.sinks = 1;
+        // position 3 carries the attention mass; 4 and 5 are nonetheless
+        // protected as the trailing answer window, 0 as a sink
+        let rows: Vec<Vec<(usize, f32)>> = (0..8)
+            .map(|_| vec![(1, 0.01), (2, 0.02), (3, 0.9), (4, 0.03), (5, 0.04)])
+            .collect();
+        steps(&mut p, &rows);
+        let evicted = p.select_evictions(&[0, 1, 2, 3, 4, 5], 4);
+        assert_eq!(evicted, vec![1, 2], "{evicted:?}");
+        assert!(p.needs_gather());
+    }
+
+    #[test]
+    fn crystal_kv_yields_answer_window_before_violating_budget() {
+        let mut p = CrystalKv::new();
+        p.answer_window = 4;
+        p.sinks = 1;
+        // live fits entirely in sinks + answer window, but budget says
+        // evict 2: the window yields oldest-first, sinks never do
+        let evicted = p.select_evictions(&[0, 1, 2, 3, 4], 3);
+        assert_eq!(evicted, vec![1, 2]);
+    }
+
+    #[test]
+    fn skip_kv_skips_on_concentrated_attention() {
+        let mut p = SkipKv::new();
+        steps(&mut p, &[vec![(0, 0.9), (1, 0.05)]]);
+        assert!(p.skip_kv(10), "concentrated row must skip");
+        assert!(!p.skip_kv(2), "sink positions never skip");
+        steps(&mut p, &[vec![(0, 0.2), (1, 0.2), (2, 0.2)]]);
+        assert!(!p.skip_kv(10), "diffuse row must materialize");
+        // window eviction keeps the sinks
+        let evicted = p.select_evictions(&[0, 1, 2, 3, 4, 5, 6, 7], 6);
+        assert_eq!(evicted, vec![4, 5]);
+        assert!(!p.needs_gather());
+    }
+
+    #[test]
+    fn policy_kind_registry_is_consistent() {
+        for kind in PolicyKind::ALL {
+            let built = kind.build(64);
+            assert_eq!(built.name(), kind.name(), "{kind:?} name mismatch");
+            assert_eq!(
+                PolicyKind::parse(kind.name()),
+                Some(kind),
+                "{kind:?} display name must round-trip through parse"
+            );
+            assert_eq!(PolicyKind::parse(&kind.name().to_ascii_uppercase()), Some(kind));
+        }
+        assert_eq!(PolicyKind::parse("rkv"), Some(PolicyKind::Rkv));
+        assert_eq!(PolicyKind::parse("crystal"), Some(PolicyKind::CrystalKv));
+        assert_eq!(PolicyKind::parse("skip"), Some(PolicyKind::SkipKv));
+        assert_eq!(PolicyKind::parse("nope"), None);
+        assert_eq!(PolicyKind::FullKv.budget_for(128), usize::MAX);
+        assert_eq!(PolicyKind::H2O.budget_for(128), 128);
+        assert!(PolicyKind::Rkv.gather() && PolicyKind::CrystalKv.gather());
+        assert!(!PolicyKind::SkipKv.gather() && !PolicyKind::SnapKv.gather());
+    }
+
+    #[test]
+    fn filter_guarded_splits_around_region() {
+        assert_eq!(filter_guarded(vec![1, 5, 9], 0), (vec![1, 5, 9], 0));
+        assert_eq!(filter_guarded(vec![1, 5, 9], 6), (vec![9], 2));
+        assert_eq!(filter_guarded(vec![1, 2], 6), (vec![], 2));
+        assert_eq!(filter_guarded(Vec::new(), 6), (vec![], 0));
+    }
+
+    #[test]
+    fn retention_trace_records_events() {
+        let mut t = RetentionTrace::new(PolicyKind::SkipKv, 32);
+        t.events.push(RetentionEvent::Observe { step: 0, attn: vec![(0, 1.0)] });
+        t.events.push(RetentionEvent::Skip { pos: 7 });
+        t.events.push(RetentionEvent::Keep { pos: 8 });
+        t.events.push(RetentionEvent::Evict {
+            live: vec![0, 1, 2],
+            target: 2,
+            evicted: vec![1],
+        });
+        assert_eq!(t.kind, PolicyKind::SkipKv);
+        assert_eq!(t.budget, 32);
+        assert_eq!(t.events.len(), 4);
+        let c = RetentionCounters { evicted: 1, skipped: 1, retained_bytes: 256 };
+        assert_eq!(c, c);
     }
 }

@@ -15,6 +15,7 @@ pub mod eviction;
 pub mod quant_baselines;
 
 pub use eviction::{
-    EvictionPolicy, FullKv, LazyEviction, PosAttn, RaaS, Rkv, SnapKv, StreamingLlm, H2O,
+    filter_guarded, CrystalKv, EvictionPolicy, FullKv, LazyEviction, PolicyKind, PosAttn, RaaS,
+    RetentionCounters, RetentionEvent, RetentionTrace, Rkv, SkipKv, SnapKv, StreamingLlm, H2O,
 };
 pub use quant_baselines::{Kivi, PmKvq};

@@ -1,6 +1,7 @@
 //! Serving configuration: which compression mode a session runs, budgets,
 //! sampling, worker counts.
 
+use crate::baselines::eviction::PolicyKind;
 use crate::compress::tbq::PrecisionAssignment;
 use crate::quant::Precision;
 
@@ -74,6 +75,25 @@ impl CompressionMode {
             _ => return None,
         })
     }
+
+    /// Registered arena policy this mode maps to, when the mode runs on
+    /// the fp32 cache path (`None` for the quantized-cache modes, which
+    /// have no pluggable eviction policy).
+    pub fn policy_kind(&self) -> Option<PolicyKind> {
+        use crate::sim::harness::EvictKind as E;
+        Some(match self {
+            CompressionMode::FullKv => PolicyKind::FullKv,
+            CompressionMode::Evict(k) => match k {
+                E::H2O => PolicyKind::H2O,
+                E::Rkv | E::RkvOverlapped => PolicyKind::Rkv,
+                E::LazyEviction => PolicyKind::LazyEviction,
+                E::RaaS => PolicyKind::RaaS,
+                E::SnapKv => PolicyKind::SnapKv,
+                E::StreamingLlm => PolicyKind::StreamingLlm,
+            },
+            _ => return None,
+        })
+    }
 }
 
 /// Per-class SLO target a session is scheduled against.
@@ -109,6 +129,13 @@ impl SloTarget {
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     pub mode: CompressionMode,
+    /// Explicit arena-policy override (`--policy`): run this registered
+    /// [`PolicyKind`] on the fp32 cache path regardless of what `mode`
+    /// would map to. `None` = derive the policy from `mode`
+    /// ([`CompressionMode::policy_kind`]); quantized-cache modes ignore
+    /// the derived value but an explicit override still forces the
+    /// session onto the fp32 arena.
+    pub policy: Option<PolicyKind>,
     /// KV cache token budget k.
     pub budget: usize,
     /// Compiled cache capacity to use (>= budget; picked from manifest).
@@ -175,10 +202,29 @@ pub struct ServeConfig {
     pub slo_aware: bool,
 }
 
+impl ServeConfig {
+    /// Arena policy sessions built from this config run on the fp32
+    /// path: the explicit `--policy` override when present, else the
+    /// policy `mode` maps to, else `None` (quantized-cache session).
+    pub fn policy_kind(&self) -> Option<PolicyKind> {
+        self.policy.or_else(|| self.mode.policy_kind())
+    }
+
+    /// Display label for stats surfaces: the arena policy's registered
+    /// name, or the quant backend's policy label placeholder.
+    pub fn policy_label(&self) -> String {
+        match self.policy_kind() {
+            Some(k) => k.name().to_string(),
+            None => String::new(),
+        }
+    }
+}
+
 impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
             mode: CompressionMode::thinkv_default(),
+            policy: None,
             budget: 1024,
             capacity: None,
             max_new_tokens: 192,
@@ -222,6 +268,27 @@ mod tests {
         .collect();
         let set: std::collections::BTreeSet<_> = labels.iter().collect();
         assert_eq!(set.len(), labels.len());
+    }
+
+    #[test]
+    fn policy_kind_derivation_and_override() {
+        use crate::sim::harness::EvictKind;
+        // mode-derived: fp32-path modes map onto the arena registry
+        let mut cfg = ServeConfig { mode: CompressionMode::FullKv, ..Default::default() };
+        assert_eq!(cfg.policy_kind(), Some(PolicyKind::FullKv));
+        cfg.mode = CompressionMode::Evict(EvictKind::SnapKv);
+        assert_eq!(cfg.policy_kind(), Some(PolicyKind::SnapKv));
+        assert_eq!(cfg.policy_label(), "SnapKV");
+        // quantized-cache modes have no arena policy...
+        cfg.mode = CompressionMode::thinkv_default();
+        assert_eq!(cfg.policy_kind(), None);
+        assert_eq!(cfg.policy_label(), "");
+        // ...unless --policy forces one (which wins over any mode)
+        cfg.policy = Some(PolicyKind::CrystalKv);
+        assert_eq!(cfg.policy_kind(), Some(PolicyKind::CrystalKv));
+        assert_eq!(cfg.policy_label(), "Crystal-KV");
+        cfg.mode = CompressionMode::Evict(EvictKind::H2O);
+        assert_eq!(cfg.policy_kind(), Some(PolicyKind::CrystalKv));
     }
 
     #[test]

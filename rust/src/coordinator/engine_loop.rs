@@ -61,6 +61,15 @@ pub struct RequestResult {
     /// the TTFT decomposition: chunks the prompt was computed in and
     /// the engine time they took.)
     pub restore_ns: u64,
+    /// Display name of the retention policy that served this request
+    /// (`"none"` when no fp32 policy arena was configured).
+    pub policy: &'static str,
+    /// Positions the policy evicted from this request's cache.
+    pub evicted: u64,
+    /// Positions the policy never materialized (SkipKV axis).
+    pub skipped: u64,
+    /// KV bytes retained at completion.
+    pub retained_bytes: u64,
     /// Set when the request terminated abnormally (e.g. its KV demand
     /// exceeded the block pool).
     pub error: Option<String>,
@@ -100,6 +109,10 @@ impl RequestResult {
             swap_outs: s.swap_outs,
             swap_ins: s.swap_ins,
             restore_ns: s.restore_ns,
+            policy: s.policy_label,
+            evicted: s.retention().evicted,
+            skipped: s.retention().skipped,
+            retained_bytes: s.retention().retained_bytes,
             error: None,
         }
     }
@@ -243,9 +256,12 @@ impl Coordinator {
     }
 
     /// Scheduler + pool counters (admissions, preemptions, queue depth,
-    /// pool used/peak/free).
+    /// pool used/peak/free), stamped with the configured retention-
+    /// policy label so `stats` consumers see which arena served them.
     pub fn sched_stats(&self) -> SchedSnapshot {
-        self.scheduler.snapshot()
+        let mut snap = self.scheduler.snapshot();
+        snap.policy = self.cfg.policy_label();
+        snap
     }
 
     pub fn shutdown(mut self) {

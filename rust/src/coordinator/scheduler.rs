@@ -244,6 +244,13 @@ pub struct Scheduler {
     clock: AtomicU64,
     /// True once `drive_clock` ran (the run is on logical time).
     logical: AtomicBool,
+    /// Retention-arena counters folded from each session's backend at
+    /// termination ([`Session::retention`]): positions the live policy
+    /// evicted, positions it never materialized (SkipKV axis), and the
+    /// bytes still retained when the session finished.
+    policy_evictions: AtomicU64,
+    policy_skips: AtomicU64,
+    policy_retained_bytes: AtomicU64,
     /// Classed sessions that terminated meeting their SLO target.
     goodput: AtomicU64,
     /// Classed sessions that terminated missing it (failures included).
@@ -304,6 +311,9 @@ impl Scheduler {
             pjrt_fallback_execs: AtomicU64::new(0),
             prefill_memo_hits: AtomicU64::new(0),
             prefill_memo_evicts: AtomicU64::new(0),
+            policy_evictions: AtomicU64::new(0),
+            policy_skips: AtomicU64::new(0),
+            policy_retained_bytes: AtomicU64::new(0),
             goodput_mode: AtomicBool::new(false),
             epoch: Instant::now(),
             clock: AtomicU64::new(0),
@@ -849,9 +859,20 @@ impl Scheduler {
         }
     }
 
+    /// Fold a terminating session's retention counters into the global
+    /// tallies (before its pool release, while the backend's byte
+    /// accounting is still live).
+    fn fold_retention(&self, session: &Session) {
+        let r = session.retention();
+        self.policy_evictions.fetch_add(r.evicted, Ordering::SeqCst);
+        self.policy_skips.fetch_add(r.skipped, Ordering::SeqCst);
+        self.policy_retained_bytes.fetch_add(r.retained_bytes, Ordering::SeqCst);
+    }
+
     /// Terminate a request with an error result.
     fn fail(&self, inner: &mut Inner, mut entry: Entry, why: &str) {
         inner.forget(entry.session.id);
+        self.fold_retention(&entry.session);
         entry.session.release_pool();
         entry.session.finished_at = Some(std::time::Instant::now());
         self.note_slo_outcome(&mut entry.session, true);
@@ -866,6 +887,7 @@ impl Scheduler {
     fn finish(&self, session: &mut Session, counter: &AtomicU64, failed: bool) {
         let mut inner = self.inner.lock().unwrap();
         inner.forget(session.id);
+        self.fold_retention(session);
         session.release_pool();
         self.note_slo_outcome(session, failed);
         counter.fetch_add(1, Ordering::SeqCst);
@@ -976,6 +998,12 @@ impl Scheduler {
             pjrt_fallback_executes: self.pjrt_fallback_execs.load(Ordering::SeqCst),
             prefill_memo_hits: self.prefill_memo_hits.load(Ordering::SeqCst),
             prefill_memo_evictions: self.prefill_memo_evicts.load(Ordering::SeqCst),
+            // the retention-policy label is config-scoped, not visible
+            // here — `Coordinator::sched_stats` stamps it
+            policy: String::new(),
+            policy_evictions: self.policy_evictions.load(Ordering::SeqCst),
+            policy_skips: self.policy_skips.load(Ordering::SeqCst),
+            policy_retained_bytes: self.policy_retained_bytes.load(Ordering::SeqCst),
             sched_policy_goodput: self.goodput_policy(),
             goodput: self.goodput.load(Ordering::SeqCst),
             slo_violations: self.slo_violations.load(Ordering::SeqCst),

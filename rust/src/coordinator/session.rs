@@ -34,7 +34,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::baselines::eviction::EvictionPolicy;
+use crate::baselines::eviction::RetentionCounters;
 use crate::baselines::quant_baselines::PmKvq;
 use crate::compress::tbe::{Tbe, TbeConfig};
 use crate::compress::tbq::Tbq;
@@ -45,7 +45,6 @@ use crate::kvcache::{
 use crate::metrics::Breakdown;
 use crate::quant::Precision;
 use crate::runtime::{CacheView, DecodeEngine, DecodeOut, ExecStats};
-use crate::sim::harness::EvictKind;
 use crate::thought::classifier::{Classifier, ClassifierConfig};
 
 use super::config::{CompressionMode, ServeConfig, SloTarget};
@@ -83,47 +82,29 @@ pub fn build_backend(
 ) -> Result<Box<dyn KvBackend>> {
     let m = manifest.model.clone();
     let kv_dim = m.n_kv_heads * m.d_head;
+    // the fp32 policy arena serves FullKV, every eviction baseline, and
+    // any explicit `--policy` override (which wins over the mode): the
+    // registry supplies the policy instance, its effective budget, and
+    // whether evictions compact ([`PolicyKind`] is the single list a
+    // new policy registers in). This also fixes the old SnapKV wiring,
+    // which silently substituted StreamingLLM on the live path —
+    // deferred priming now captures the protected set from the first
+    // observed attention row instead.
+    if let Some(kind) = cfg.policy_kind() {
+        let need = m.prefill_len + cfg.max_new_tokens + m.buf_slots;
+        let capacity = manifest
+            .pick_fp32_cap(need.min(*manifest.fp32_caps.last().unwrap_or(&need)))
+            .or(manifest.fp32_caps.last().copied())
+            .ok_or_else(|| anyhow::anyhow!("no fp32 artifact"))?;
+        return Ok(Box::new(Fp32Backend::new(
+            Fp32Cache::new(m.n_layers, capacity, kv_dim, m.buf_slots),
+            kind.build(cfg.budget),
+            kind.budget_for(cfg.budget),
+            kind.gather(),
+            capacity,
+        )));
+    }
     match &cfg.mode {
-        CompressionMode::FullKv | CompressionMode::Evict(_) => {
-            let need = m.prefill_len + cfg.max_new_tokens + m.buf_slots;
-            let capacity = manifest
-                .pick_fp32_cap(need.min(*manifest.fp32_caps.last().unwrap_or(&need)))
-                .or(manifest.fp32_caps.last().copied())
-                .ok_or_else(|| anyhow::anyhow!("no fp32 artifact"))?;
-            let (policy, gather, budget): (Box<dyn EvictionPolicy>, bool, usize) = match &cfg.mode
-            {
-                CompressionMode::FullKv => {
-                    (Box::new(crate::baselines::eviction::FullKv), false, usize::MAX)
-                }
-                CompressionMode::Evict(kind) => {
-                    let p: Box<dyn EvictionPolicy> = match kind {
-                        EvictKind::H2O => Box::new(crate::baselines::eviction::H2O::new()),
-                        EvictKind::Rkv | EvictKind::RkvOverlapped => {
-                            Box::new(crate::baselines::eviction::Rkv::new())
-                        }
-                        EvictKind::LazyEviction => {
-                            Box::new(crate::baselines::eviction::LazyEviction::new())
-                        }
-                        EvictKind::RaaS => Box::new(crate::baselines::eviction::RaaS::new()),
-                        EvictKind::SnapKv => {
-                            Box::new(crate::baselines::eviction::StreamingLlm::new(4))
-                        } // prefill-obs wired post-prefill
-                        EvictKind::StreamingLlm => {
-                            Box::new(crate::baselines::eviction::StreamingLlm::new(4))
-                        }
-                    };
-                    (p, kind == &EvictKind::Rkv || kind == &EvictKind::RkvOverlapped, cfg.budget)
-                }
-                _ => unreachable!(),
-            };
-            Ok(Box::new(Fp32Backend::new(
-                Fp32Cache::new(m.n_layers, capacity, kv_dim, m.buf_slots),
-                policy,
-                budget,
-                gather,
-                capacity,
-            )))
-        }
         CompressionMode::ThinKv { .. } | CompressionMode::Kivi(_) | CompressionMode::PmKvq => {
             let headroom = cfg.budget + m.buf_slots + 64;
             let want = match &cfg.mode {
@@ -180,6 +161,9 @@ pub fn build_backend(
                 refresh: cfg.refresh,
             });
             Ok(Box::new(QuantBackend::new(cache, tbq, tbe, classifier, pmkvq)))
+        }
+        CompressionMode::FullKv | CompressionMode::Evict(_) => {
+            unreachable!("fp32-path modes resolve through the policy arena above")
         }
     }
 }
@@ -287,6 +271,11 @@ pub struct Session {
     pub pos: usize,
     pub max_new_tokens: usize,
     pub mode_label: String,
+    /// Display name of the retention policy managing this session's
+    /// cache ([`KvBackend::policy_name`]), priced once at construction
+    /// from the probe backend — available even before the lazy backend
+    /// build and after a preemption drops the slabs.
+    pub policy_label: &'static str,
     /// Built lazily on the first decode step and dropped on preemption,
     /// so sessions waiting for admission (and preempted ones) hold no
     /// cache slabs — process memory tracks the pool, not the submit
@@ -382,6 +371,7 @@ impl Session {
         let compat_key = probe.compat_key();
         let step_headroom = probe.step_headroom_bytes();
         let prefix_geom = probe.prefix_geom();
+        let policy_label = probe.policy_name();
         drop(probe);
         // the attachment holds a reference, so a matched prefix stays
         // resident from admission pricing through prefill
@@ -395,6 +385,7 @@ impl Session {
             pos: 0,
             max_new_tokens: cfg.max_new_tokens,
             mode_label: cfg.mode.label(),
+            policy_label,
             backend: None,
             sampler: Sampler::new(cfg.temperature, 32, cfg.seed ^ id),
             breakdown: Breakdown::default(),
@@ -455,6 +446,13 @@ impl Session {
 
     pub fn gather_stats(&self) -> (u64, u64, u64) {
         self.backend.as_ref().map_or((0, 0, 0), |b| b.gather_stats())
+    }
+
+    /// Retention counters from the live backend (evictions, never-
+    /// materialized skips, retained bytes); zeros before the backend
+    /// exists or on the quantized path.
+    pub fn retention(&self) -> RetentionCounters {
+        self.backend.as_ref().map_or_else(RetentionCounters::default, |b| b.retention())
     }
 
     /// Current live KV bytes under packed accounting.

@@ -29,7 +29,10 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::baselines::eviction::{EvictionPolicy, PosAttn};
+use crate::baselines::eviction::{
+    filter_guarded, EvictionPolicy, PolicyKind, PosAttn, RetentionCounters, RetentionEvent,
+    RetentionTrace,
+};
 use crate::baselines::quant_baselines::PmKvq;
 use crate::compress::tbe::{Tbe, TbeStats};
 use crate::compress::tbq::Tbq;
@@ -244,6 +247,20 @@ pub trait KvBackend: Send {
     /// (gather_calls, gather_bytes, gather_nanos) — fp32 backend only.
     fn gather_stats(&self) -> (u64, u64, u64) {
         (0, 0, 0)
+    }
+
+    /// Display name of the retention policy managing this cache:
+    /// the arena policy's [`EvictionPolicy::name`] for the fp32 backend,
+    /// `"TBE"`/`"none"` for the quantized cache.
+    fn policy_name(&self) -> &'static str {
+        "none"
+    }
+
+    /// Retention counters accumulated so far (evictions, never-
+    /// materialized skips, live retained bytes). Zeros for backends
+    /// without a live policy arena.
+    fn retention(&self) -> RetentionCounters {
+        RetentionCounters::default()
     }
 
     /// Exact host bytes a [`KvBackend::snapshot`] taken right now would
@@ -564,6 +581,14 @@ impl KvBackend for QuantBackend {
         self.tbe.as_ref().map(|t| t.stats.clone())
     }
 
+    fn policy_name(&self) -> &'static str {
+        if self.tbe.is_some() {
+            "TBE"
+        } else {
+            "none"
+        }
+    }
+
     fn snapshot_bytes(&self) -> u64 {
         self.cache.snapshot_host_bytes()
     }
@@ -617,6 +642,14 @@ pub struct Fp32Backend {
     capacity: usize,
     /// Cross-session shared-prefix attachment; None = unshared session.
     att: Option<Arc<AttachedPrefix>>,
+    /// Optional retention audit log ([`Fp32Backend::enable_trace`]):
+    /// every policy call's inputs and outputs, replayable by
+    /// `sim::oracle::replay_divergence`.
+    trace: Option<RetentionTrace>,
+    /// Positions evicted from the cache so far.
+    evicted_ct: u64,
+    /// Positions never materialized ([`EvictionPolicy::skip_kv`]).
+    skipped_ct: u64,
 }
 
 impl Fp32Backend {
@@ -627,7 +660,38 @@ impl Fp32Backend {
         gather: bool,
         capacity: usize,
     ) -> Fp32Backend {
-        Fp32Backend { cache, policy, budget, gather, capacity, att: None }
+        Fp32Backend {
+            cache,
+            policy,
+            budget,
+            gather,
+            capacity,
+            att: None,
+            trace: None,
+            evicted_ct: 0,
+            skipped_ct: 0,
+        }
+    }
+
+    /// Start recording every retention decision (observe / keep / skip /
+    /// select-evictions calls) into a [`RetentionTrace`]. `kind` must
+    /// describe the policy this backend runs and `budget` the value it
+    /// was built with ([`PolicyKind::build`]) so the sim twin can be
+    /// reconstructed in an identical starting state.
+    pub fn enable_trace(&mut self, kind: PolicyKind, budget: usize) {
+        self.trace = Some(RetentionTrace::new(kind, budget));
+    }
+
+    /// Take the recorded audit log; recording stops.
+    pub fn take_trace(&mut self) -> Option<RetentionTrace> {
+        self.trace.take()
+    }
+
+    /// Positions currently resident in the cache slab (sorted; the ring
+    /// buffer is not included) — exactly the `live` set the policy's
+    /// [`EvictionPolicy::select_evictions`] calls see.
+    pub fn live_positions(&self) -> Vec<usize> {
+        self.cache.live_positions()
     }
 
     fn shared_discount(&self) -> u64 {
@@ -660,7 +724,10 @@ impl Fp32Backend {
                 return evict;
             }
         }
-        evict.into_iter().filter(|&p| p >= shared).collect()
+        // denied CoW: the guarded region stays read-only, drop the
+        // blocked positions (one shared guarded-region filter — the
+        // same helper the quant call-sites gate on)
+        filter_guarded(evict, shared).0
     }
 
     /// Policy eviction honoring a read-only shared prefix: select
@@ -671,6 +738,15 @@ impl Fp32Backend {
     /// never starve eviction while non-shared victims exist.
     fn select_evictions_shared(&mut self, live: &[usize], target: usize) -> Vec<usize> {
         let evict = self.policy.select_evictions(live, target);
+        if let Some(t) = self.trace.as_mut() {
+            // record the raw proposal (pre CoW / guard filtering): the
+            // replay twin mirrors the policy call, not the cache
+            t.events.push(RetentionEvent::Evict {
+                live: live.to_vec(),
+                target,
+                evicted: evict.clone(),
+            });
+        }
         let evict = Self::cow_filter(&self.att, &mut self.cache, evict);
         if !evict.is_empty() {
             return evict;
@@ -679,8 +755,17 @@ impl Fp32Backend {
         if shared == 0 {
             return evict; // the policy genuinely refused to evict
         }
-        let free: Vec<usize> = live.iter().copied().filter(|&p| p >= shared).collect();
-        self.policy.select_evictions(&free, target.saturating_sub(shared))
+        let free = filter_guarded(live.to_vec(), shared).0;
+        let free_target = target.saturating_sub(shared);
+        let evict = self.policy.select_evictions(&free, free_target);
+        if let Some(t) = self.trace.as_mut() {
+            t.events.push(RetentionEvent::Evict {
+                live: free,
+                target: free_target,
+                evicted: evict.clone(),
+            });
+        }
+        evict
     }
 }
 
@@ -748,6 +833,7 @@ impl KvBackend for Fp32Backend {
                 if evict.is_empty() {
                     bail!("fp32 cache full and policy refuses to evict");
                 }
+                self.evicted_ct += evict.len() as u64;
                 self.cache.evict_positions(&evict);
                 bd.policy_ns += tp.elapsed().as_nanos() as u64;
                 bd.policy_calls += 1;
@@ -803,10 +889,28 @@ impl KvBackend for Fp32Backend {
             }
             pos_attn.push((p as usize, acc / (model.n_layers * model.n_heads) as f32));
         }
-        self.policy.observe(&PosAttn { step: pos, attn: pos_attn });
+        let row = PosAttn { step: pos, attn: pos_attn };
+        self.policy.observe(&row);
+        if let Some(t) = self.trace.as_mut() {
+            t.events.push(RetentionEvent::Observe { step: pos, attn: row.attn });
+        }
         bd.policy_ns += tp.elapsed().as_nanos() as u64;
 
-        self.cache.push_token(out, pos);
+        // SkipKV's never-materialize axis: the policy may veto the
+        // append outright — the position then consumes neither pool
+        // bytes nor a cache row (downstream attention masks treat it
+        // exactly like an already-evicted position).
+        if self.policy.skip_kv(pos) {
+            self.skipped_ct += 1;
+            if let Some(t) = self.trace.as_mut() {
+                t.events.push(RetentionEvent::Skip { pos });
+            }
+        } else {
+            if let Some(t) = self.trace.as_mut() {
+                t.events.push(RetentionEvent::Keep { pos });
+            }
+            self.cache.push_token(out, pos);
+        }
 
         // budget enforcement
         if self.budget != usize::MAX {
@@ -816,6 +920,7 @@ impl KvBackend for Fp32Backend {
                 let target = self.budget.saturating_sub(self.cache.buf_fill());
                 let evict = self.select_evictions_shared(&live, target);
                 if !evict.is_empty() {
+                    self.evicted_ct += evict.len() as u64;
                     self.cache.evict_positions(&evict);
                     bd.policy_calls += 1;
                     if self.gather {
@@ -855,6 +960,18 @@ impl KvBackend for Fp32Backend {
 
     fn gather_stats(&self) -> (u64, u64, u64) {
         (self.cache.gather_calls, self.cache.gather_bytes, self.cache.gather_nanos)
+    }
+
+    fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    fn retention(&self) -> RetentionCounters {
+        RetentionCounters {
+            evicted: self.evicted_ct,
+            skipped: self.skipped_ct,
+            retained_bytes: self.bytes_used(),
+        }
     }
 
     fn snapshot_bytes(&self) -> u64 {

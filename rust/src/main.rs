@@ -7,6 +7,7 @@
 //!   sim        run the trace-simulation harness for one method
 //!   info       print artifact manifest info
 
+use thinkv::baselines::PolicyKind;
 use thinkv::coordinator::{CompressionMode, Coordinator, ServeConfig};
 use thinkv::server::Server;
 use thinkv::sim::{run_method, DatasetProfile, Method, SimConfig, TenantClass, Trace};
@@ -40,10 +41,12 @@ USAGE: thinkv <cmd> [--flags]
             --budget 1024 --max-tokens 128 --workers 2
             --pool-mb 0 --swap-mb 0 --max-decode-batch 8
             --prefill-chunk 0 --prefix-share
+            --policy h2o|rkv|raas|snapkv|streaming|lazy|crystal|skip|fullkv
             --slo-class chat|math|coding --slo-aware
   serve     --addr 127.0.0.1:7799 --mode thinkv --budget 1024
             --pool-mb 0 --swap-mb 0 --max-decode-batch 8
             --prefill-chunk 0 --prefix-share
+            --policy h2o|rkv|raas|snapkv|streaming|lazy|crystal|skip|fullkv
             --slo-class chat|math|coding --slo-aware
   sim       --mode thinkv --dataset aime --budget 1024 --scale 0.5
   calibrate --prompts 8 --layers 8
@@ -72,7 +75,12 @@ USAGE: thinkv <cmd> [--flags]
   and per-class latency percentiles. --slo-aware switches the scheduler
   from throughput-greedy FIFO to goodput scheduling: admission and
   batch order follow TTFT-deadline slack, and preemption prefers
-  deadline-hopeless victims."
+  deadline-hopeless victims. --policy overrides the retention policy
+  on the uncompressed fp32 cache with any arena registry entry
+  (including Crystal-KV answer-first retention and SkipKV selective
+  never-materialize), independent of --mode; per-request output and
+  stats then report the policy name with its evicted / skipped /
+  retained-bytes counters."
     );
 }
 
@@ -98,8 +106,20 @@ fn serve_config(args: &Args) -> ServeConfig {
         }
         c
     });
+    // --policy picks a live eviction-arena registry entry explicitly
+    // (overrides the mode-derived policy; forces the fp32 arena path)
+    let policy = args.get("policy").and_then(|name| {
+        let p = PolicyKind::parse(name);
+        if p.is_none() {
+            eprintln!(
+                "unknown --policy {name} (want fullkv|h2o|rkv|raas|snapkv|streaming|lazy|crystal|skip); ignoring"
+            );
+        }
+        p
+    });
     ServeConfig {
         mode,
+        policy,
         budget: args.usize_or("budget", 1024),
         max_new_tokens: args.usize_or("max-tokens", 128),
         workers: args.usize_or("workers", 2),
@@ -122,7 +142,15 @@ fn cmd_generate(args: &Args) -> i32 {
     let cfg = serve_config(args);
     let n = args.usize_or("requests", 4);
     let share = cfg.prefix_share;
-    println!("mode={} budget={} requests={n}", cfg.mode.label(), cfg.budget);
+    match cfg.policy_kind() {
+        Some(kind) => println!(
+            "mode={} policy={} budget={} requests={n}",
+            cfg.mode.label(),
+            kind.name(),
+            cfg.budget
+        ),
+        None => println!("mode={} budget={} requests={n}", cfg.mode.label(), cfg.budget),
+    }
     let coordinator = match Coordinator::start(cfg) {
         Ok(c) => c,
         Err(e) => {
@@ -151,10 +179,10 @@ fn cmd_generate(args: &Args) -> i32 {
                 // ttft decomposition: prefill_ms is the engine half,
                 // the rest of ttft is scheduling/queue wait
                 println!(
-                    "  req {}: {} tokens, ttft {:.1} ms (prefill {:.1} ms / {} chunks), tpot {:.2} ms, avg_bits {:.2}, live {}, ct_reuses {}, recompute_preempts {}, swap_ins {}",
+                    "  req {}: {} tokens, ttft {:.1} ms (prefill {:.1} ms / {} chunks), tpot {:.2} ms, avg_bits {:.2}, live {}, ct_reuses {}, recompute_preempts {}, swap_ins {}, policy {} (evicted {}, skipped {}, retained {} B)",
                     r.id, r.tokens.len(), r.ttft_ms, r.breakdown.prefill_exec_ns as f64 / 1e6,
                     r.breakdown.prefill_chunks, r.tpot_ms, r.avg_bits, r.live_tokens, r.ct_reuses,
-                    r.preemptions, r.swap_ins
+                    r.preemptions, r.swap_ins, r.policy, r.evicted, r.skipped, r.retained_bytes
                 );
             }
             println!(

@@ -286,6 +286,18 @@ pub struct SchedSnapshot {
     pub prefill_memo_hits: u64,
     /// Engine prefill-memo/chunk-state LRU evictions.
     pub prefill_memo_evictions: u64,
+    /// Retention-policy label of the live eviction arena (empty = no
+    /// fp32 policy arena configured). Stamped from the serve config by
+    /// the coordinator; the scheduler itself only tallies counters.
+    pub policy: String,
+    /// Positions evicted by the live retention policy, summed over
+    /// terminated sessions.
+    pub policy_evictions: u64,
+    /// Positions never materialized (SkipKV's never-materialize axis:
+    /// no pool bytes, no cache row), summed over terminated sessions.
+    pub policy_skips: u64,
+    /// KV bytes still retained at session termination, summed.
+    pub policy_retained_bytes: u64,
     /// True when the scheduler runs the goodput (SLO-aware) policy —
     /// deadline-slack ordering instead of FIFO.
     pub sched_policy_goodput: bool,
@@ -354,6 +366,10 @@ impl SchedSnapshot {
         j.set("pjrt_fallback_executes", Json::Num(self.pjrt_fallback_executes as f64));
         j.set("prefill_memo_hits", Json::Num(self.prefill_memo_hits as f64));
         j.set("prefill_memo_evictions", Json::Num(self.prefill_memo_evictions as f64));
+        j.set("policy", Json::Str(self.policy.clone()));
+        j.set("policy_evictions", Json::Num(self.policy_evictions as f64));
+        j.set("policy_skips", Json::Num(self.policy_skips as f64));
+        j.set("policy_retained_bytes", Json::Num(self.policy_retained_bytes as f64));
         j.set(
             "sched_policy",
             Json::Str(if self.sched_policy_goodput { "goodput" } else { "throughput" }.into()),
@@ -418,6 +434,12 @@ impl SchedSnapshot {
                 self.swap_used,
                 self.swap_capacity,
                 self.swap_peak
+            ));
+        }
+        if !self.policy.is_empty() {
+            s.push_str(&format!(
+                "\npolicy {}: {} evicted, {} skipped, {} B retained",
+                self.policy, self.policy_evictions, self.policy_skips, self.policy_retained_bytes
             ));
         }
         if self.goodput + self.slo_violations > 0 || self.sched_policy_goodput {
@@ -534,6 +556,31 @@ mod tests {
         assert!(s.summary().contains("preempt 1"));
         // swap disabled (capacity 0): the summary stays a single line
         assert!(!s.summary().contains("swap:"));
+    }
+
+    /// Satellite regression: the live arena's policy identity and
+    /// retention counters must survive the full metrics path — snapshot
+    /// → JSON text → reparse — and show up in the human summary, so a
+    /// server client can tell *which* policy served it and what it cost.
+    #[test]
+    fn sched_snapshot_policy_fields_roundtrip_json() {
+        let s = SchedSnapshot {
+            policy: "Crystal-KV".into(),
+            policy_evictions: 12,
+            policy_skips: 5,
+            policy_retained_bytes: 4096,
+            ..SchedSnapshot::default()
+        };
+        let text = s.to_json().to_string();
+        let j = crate::util::json::parse(&text).expect("snapshot JSON reparses");
+        assert_eq!(j.get("policy").and_then(Json::as_str), Some("Crystal-KV"));
+        assert_eq!(j.get("policy_evictions").and_then(Json::as_usize), Some(12));
+        assert_eq!(j.get("policy_skips").and_then(Json::as_usize), Some(5));
+        assert_eq!(j.get("policy_retained_bytes").and_then(Json::as_usize), Some(4096));
+        let summary = s.summary();
+        assert!(summary.contains("policy Crystal-KV: 12 evicted, 5 skipped, 4096 B retained"));
+        // no arena configured: the policy line is omitted entirely
+        assert!(!SchedSnapshot::default().summary().contains("policy "));
     }
 
     #[test]

@@ -33,6 +33,11 @@
 //! (`prefill_ms` engine time + `prefill_chunks`; `ttft_ms -
 //! prefill_ms` is scheduling wait) so clients can tell the two
 //! preemption flavors apart and see where first-token latency went.
+//! Retention-arena provenance rides along too: `policy` (the live
+//! eviction policy's display name) with its `evicted` / `skipped` /
+//! `retained_bytes` counters per request, and the aggregate
+//! `policy`/`policy_evictions`/`policy_skips`/`policy_retained_bytes`
+//! rows in `stats`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -231,6 +236,12 @@ fn handle_conn(
         out.set("total_ms", Json::Num(result.total_ms));
         out.set("avg_bits", Json::Num(result.avg_bits));
         out.set("live_tokens", Json::Num(result.live_tokens as f64));
+        // retention-arena provenance: which policy served this request
+        // and what it evicted / never materialized / still held
+        out.set("policy", Json::Str(result.policy.into()));
+        out.set("evicted", Json::Num(result.evicted as f64));
+        out.set("skipped", Json::Num(result.skipped as f64));
+        out.set("retained_bytes", Json::Num(result.retained_bytes as f64));
         // actual PJRT executes this request caused (0 under fake
         // engines; decode executes are only attributable on the
         // single-session path — fused batches land in `stats`)

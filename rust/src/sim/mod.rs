@@ -27,5 +27,5 @@ pub mod trace;
 
 pub use gpu::{GpuProfile, LrmProfile, ServingCost};
 pub use harness::{run_method, Method, SimConfig, SimResult};
-pub use oracle::Oracle;
+pub use oracle::{replay_divergence, Oracle, ReplayDiff};
 pub use trace::{ArrivalEvent, ArrivalTrace, DatasetProfile, TenantClass, Trace, TraceSegment};

@@ -13,6 +13,7 @@
 //!   reasoning-critical tokens inflates generation length (up to ~5× at
 //!   2-bit uniform), eroding memory savings and slightly hurting accuracy.
 
+use crate::baselines::{PosAttn, RetentionEvent, RetentionTrace};
 use crate::quant::Precision;
 use crate::util::rng::Rng;
 
@@ -144,6 +145,63 @@ impl Oracle {
     }
 }
 
+/// Outcome of replaying a live backend's retention audit log through a
+/// freshly built sim twin of the same policy (the differential half of
+/// the policy-arena conformance suite).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayDiff {
+    /// Events replayed (observed attention rows, keep/skip verdicts,
+    /// eviction selections).
+    pub events: usize,
+    /// Events where the twin disagreed with the recorded decision.
+    pub mismatches: usize,
+    /// Fidelity-weighted divergence in `[0, 1]`: the fp32 arena stores
+    /// losslessly, so the weight is `fidelity(None)` and the score is
+    /// simply the mismatch fraction. `0.0` = the live backend and the
+    /// sim twin made bit-identical decisions.
+    pub divergence: f64,
+    /// Index of the first mismatching event (`None` = exact replay).
+    pub first_mismatch: Option<usize>,
+}
+
+/// Differential conformance oracle: rebuild `trace.kind` from the
+/// [`PolicyKind`](crate::baselines::PolicyKind) registry with the
+/// recorded build budget, feed it the recorded observation history, and
+/// check every keep / skip / evict decision against what the live
+/// backend actually did. Deterministic policies must replay exactly
+/// (divergence `0.0`); any drift pinpoints the first divergent event.
+pub fn replay_divergence(trace: &RetentionTrace) -> ReplayDiff {
+    let mut twin = trace.kind.build(trace.budget);
+    let mut mismatches = 0usize;
+    let mut first = None;
+    for (i, ev) in trace.events.iter().enumerate() {
+        let agrees = match ev {
+            RetentionEvent::Observe { step, attn } => {
+                twin.observe(&PosAttn { step: *step, attn: attn.clone() });
+                true
+            }
+            RetentionEvent::Keep { pos } => !twin.skip_kv(*pos),
+            RetentionEvent::Skip { pos } => twin.skip_kv(*pos),
+            RetentionEvent::Evict { live, target, evicted } => {
+                twin.select_evictions(live, *target) == *evicted
+            }
+        };
+        if !agrees {
+            mismatches += 1;
+            if first.is_none() {
+                first = Some(i);
+            }
+        }
+    }
+    let events = trace.events.len();
+    ReplayDiff {
+        events,
+        mismatches,
+        divergence: fidelity(None) * mismatches as f64 / events.max(1) as f64,
+        first_mismatch: first,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -235,6 +293,95 @@ mod tests {
         let qthink = 0.27 * 0.12 * q2 + 0.73 * q4; // rough mix
         let inflt = 1.0 + o.infl_a * qthink.powf(o.infl_p);
         assert!(inflt < 1.35, "ThinKV inflation {inflt}");
+    }
+
+    #[test]
+    fn replay_divergence_zero_on_faithful_trace_and_flags_tampering() {
+        use crate::baselines::PolicyKind;
+        // a faithful H2O history: the recorded decisions are literally
+        // what a fresh twin produces, so replay must be exact
+        let mut probe = PolicyKind::H2O.build(8);
+        let mut trace = RetentionTrace::new(PolicyKind::H2O, 8);
+        let live: Vec<usize> = (0..12).collect();
+        for step in 0..6 {
+            let attn: Vec<(usize, f32)> =
+                live.iter().map(|&p| (p, ((p * 7 + step) % 13) as f32 / 13.0)).collect();
+            probe.observe(&PosAttn { step, attn: attn.clone() });
+            trace.events.push(RetentionEvent::Observe { step, attn });
+            let pos = 12 + step;
+            assert!(!probe.skip_kv(pos));
+            trace.events.push(RetentionEvent::Keep { pos });
+        }
+        let evicted = probe.select_evictions(&live, 8);
+        trace.events.push(RetentionEvent::Evict { live: live.clone(), target: 8, evicted });
+        let d = replay_divergence(&trace);
+        assert_eq!(d.mismatches, 0, "faithful trace must replay exactly");
+        assert_eq!(d.divergence, 0.0);
+        assert_eq!(d.first_mismatch, None);
+        assert_eq!(d.events, trace.events.len());
+
+        // tamper with the recorded eviction: the diff localizes it
+        let mut bad = trace.clone();
+        if let Some(RetentionEvent::Evict { evicted, .. }) = bad.events.last_mut() {
+            evicted.clear();
+        }
+        let d = replay_divergence(&bad);
+        assert_eq!(d.mismatches, 1);
+        assert_eq!(d.first_mismatch, Some(bad.events.len() - 1));
+        assert!(d.divergence > 0.0);
+    }
+
+    /// FNV-1a over a canonical byte encoding of the oracle inputs and
+    /// outputs — any nondeterminism (map iteration order, uninitialized
+    /// float paths) shows up as a digest mismatch between runs.
+    fn fnv_digest(records: &[RetentionRecord], out: &OracleOut) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        for r in records {
+            eat(&(r.seg as u64).to_le_bytes());
+            eat(&r.kept_info_fid.to_bits().to_le_bytes());
+            eat(&(r.min_kept_count as u64).to_le_bytes());
+            eat(&r.importance.to_bits().to_le_bytes());
+            eat(&[r.anchor as u8]);
+        }
+        eat(&out.pass1.to_bits().to_le_bytes());
+        eat(&out.p_correct.to_bits().to_le_bytes());
+        eat(&out.len_inflation.to_bits().to_le_bytes());
+        eat(&out.looped.to_bits().to_le_bytes());
+        h
+    }
+
+    /// Satellite golden: `Oracle::evaluate` is a pure function of
+    /// (trace, records, qloss, seed). Two fully independent
+    /// reconstructions of the same seeded inputs must produce
+    /// bit-identical outputs — compared through an FNV-1a digest so any
+    /// single-bit drift in any field fails loudly.
+    #[test]
+    fn oracle_evaluate_is_deterministic_golden() {
+        let run = || {
+            let trace = Trace::generate(&DatasetProfile::aime(), 41, 0.3);
+            let records: Vec<RetentionRecord> = trace
+                .segments
+                .iter()
+                .map(|s| RetentionRecord {
+                    seg: s.id,
+                    kept_info_fid: if s.id % 3 == 0 { 0.4 } else { 0.9 },
+                    min_kept_count: s.len.min(2),
+                    importance: s.importance,
+                    anchor: s.anchor,
+                })
+                .collect();
+            let out = Oracle::default().evaluate(&trace, &records, 0.01, 99);
+            fnv_digest(&records, &out)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "oracle digest must be reproducible from the seed");
     }
 
     #[test]

@@ -16,6 +16,9 @@ use std::cell::{Cell, RefCell};
 
 use anyhow::Result;
 
+use crate::baselines::{PolicyKind, RetentionCounters, RetentionTrace};
+use crate::kvcache::{Fp32Backend, Fp32Cache, KvBackend};
+use crate::metrics::Breakdown;
 use crate::model::{Manifest, ModelConfig};
 use crate::runtime::{
     BatchDecodeReq, CacheView, DecodeEngine, DecodeOut, ExecStats, PrefillChunkOut, PrefillOut,
@@ -59,6 +62,71 @@ pub fn share_manifest() -> Manifest {
     man.model.buf_slots = 4;
     man.model.prefill_len = 96;
     man
+}
+
+/// Everything one policy-arena drive leaves behind: the retention audit
+/// log, the backend's counters, the high-water live-token mark, and the
+/// final live position set — the raw material for the conformance
+/// battery and the sim-oracle differential replay.
+pub struct ArenaRun {
+    pub trace: RetentionTrace,
+    pub counters: RetentionCounters,
+    pub max_live: usize,
+    pub live: Vec<usize>,
+}
+
+/// Drive a fresh [`Fp32Backend`] built from `kind`'s registry entry
+/// through a seeded prefill + `steps` decode absorptions with retention
+/// tracing enabled. The synthetic K/V and attention rows follow the same
+/// distribution idiom as [`CausalEngine`], so policy decisions exercise
+/// realistic (non-degenerate) attention mass while staying bit-
+/// reproducible from `seed`.
+pub fn drive_arena(kind: PolicyKind, budget: usize, steps: usize, seed: u64) -> ArenaRun {
+    let man = tiny_manifest();
+    let m = &man.model;
+    let kvd = m.n_kv_heads * m.d_head;
+    let capacity = man.fp32_caps[0];
+    let mut backend = Fp32Backend::new(
+        Fp32Cache::new(m.n_layers, capacity, kvd, m.buf_slots),
+        kind.build(budget),
+        kind.budget_for(budget),
+        kind.gather(),
+        capacity,
+    );
+    backend.enable_trace(kind, budget);
+
+    let p_len = m.prefill_len;
+    let mut rng = Rng::new(seed ^ 0xA1E7A);
+    let mut k = vec![0f32; m.n_layers * p_len * kvd];
+    let mut v = vec![0f32; m.n_layers * p_len * kvd];
+    rng.fill_normal_f32(&mut k, 0.0, 1.0);
+    rng.fill_normal_f32(&mut v, 0.0, 1.0);
+    let pf = PrefillOut { logits: vec![0.0; m.vocab], k, v, obs: vec![0.0; m.n_layers * p_len] };
+    backend.write_prefill(&pf, p_len);
+
+    let span = capacity + m.buf_slots;
+    let mut bd = Breakdown::default();
+    let mut max_live = backend.live_tokens();
+    for i in 0..steps {
+        let pos = p_len + i;
+        backend.make_room(pos, &mut bd).expect("arena make_room");
+        let mut new_k = vec![0f32; m.n_layers * kvd];
+        let mut new_v = vec![0f32; m.n_layers * kvd];
+        let mut probs = vec![0f32; m.n_layers * m.n_heads * span];
+        rng.fill_normal_f32(&mut new_k, 0.0, 1.0);
+        rng.fill_normal_f32(&mut new_v, 0.0, 1.0);
+        rng.fill_normal_f32(&mut probs, 0.5, 0.2);
+        for p in probs.iter_mut() {
+            *p = p.abs();
+        }
+        let out = DecodeOut { logits: vec![0.0; m.vocab], new_k, new_v, probs };
+        backend.absorb(&out, pos, m, &mut bd).expect("arena absorb");
+        max_live = max_live.max(backend.live_tokens());
+    }
+    let counters = backend.retention();
+    let live = backend.live_positions();
+    let trace = backend.take_trace().expect("trace enabled");
+    ArenaRun { trace, counters, max_live, live }
 }
 
 /// Deterministic causal engine stand-in (see module docs). Outputs are

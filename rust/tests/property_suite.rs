@@ -5,7 +5,7 @@
 
 use std::sync::Arc;
 
-use thinkv::baselines::eviction::Rkv;
+use thinkv::baselines::PolicyKind;
 use thinkv::compress::tbe::{Tbe, TbeConfig};
 use thinkv::compress::tbq::{PrecisionAssignment, Tbq};
 use thinkv::kvcache::{
@@ -683,82 +683,97 @@ fn shared_prefix_backend_snapshot_roundtrip_bit_exact() {
     });
 }
 
-/// Same fidelity property for the f32 backend: the live rows, buffer
-/// residue, and the eviction policy's accumulated statistics must all
-/// survive the round trip (identical eviction decisions afterwards).
+/// Same fidelity property for the f32 backend, parameterized over
+/// **every** registered arena policy: the live rows, buffer residue,
+/// and each policy's accumulated statistics (`box_clone` state) must
+/// all survive the round trip — identical eviction/skip decisions
+/// afterwards, for H2O and RaaS and SnapKV and Crystal-KV alike.
 #[test]
-fn fp32_backend_snapshot_roundtrip_bit_exact() {
-    prop::check(10, |g| {
+fn fp32_backend_snapshot_roundtrip_bit_exact_for_every_policy() {
+    prop::check(4, |g| {
         let m = tiny_model();
         let kvd = m.n_kv_heads * m.d_head;
         let capacity = 64;
         let span = capacity + m.buf_slots;
         let budget = *g.pick(&[24usize, 32, 48]);
-        let mk = || {
-            Fp32Backend::new(
-                Fp32Cache::new(m.n_layers, capacity, kvd, m.buf_slots),
-                Box::new(Rkv::new()),
-                budget,
-                true, // gather compaction, R-KV style
-                capacity,
-            )
-        };
-        let mut rng = Rng::new(g.usize(0, 1 << 30) as u64);
-        let mut bd = Breakdown::default();
-        let mut backend = mk();
-        backend.write_prefill(&fake_prefill(&mut rng, &m), m.prefill_len);
-        let mut pos = m.prefill_len;
-        for _ in 0..g.usize(5, 60) {
-            let out = fake_decode(&mut rng, &m, span);
-            backend.make_room(pos, &mut bd).map_err(|e| format!("make_room: {e}"))?;
-            backend.absorb(&out, pos, &m, &mut bd).map_err(|e| format!("absorb: {e}"))?;
-            pos += 1;
-        }
-
-        let snap_a = backend.snapshot().map_err(|e| e.to_string())?;
-        if snap_a.bytes != backend.snapshot_bytes() {
-            return Err("snapshot_bytes must price the snapshot exactly".into());
-        }
-        let mut resumed = mk();
-        resumed
-            .restore(backend.snapshot().map_err(|e| e.to_string())?)
-            .map_err(|e| format!("restore: {e}"))?;
-        if resumed.bytes_used() != backend.bytes_used() {
-            return Err("restored footprint drifted".into());
-        }
-        let snap_b = resumed.snapshot().map_err(|e| e.to_string())?;
-        let (SnapshotPayload::Fp32(fa), SnapshotPayload::Fp32(fb)) =
-            (&snap_a.payload, &snap_b.payload)
-        else {
-            return Err("wrong payload kind".into());
-        };
-        if fa.cache != fb.cache {
-            return Err("fp32 cache image not bit-exact after restore".into());
-        }
-
-        // behavioral: the cloned policy must make identical eviction
-        // decisions (gather timing counters excluded: wall-clock)
-        for _ in 0..16 {
-            let out = fake_decode(&mut rng, &m, span);
-            for b in [&mut backend, &mut resumed] {
-                b.make_room(pos, &mut bd).map_err(|e| format!("cont make_room: {e}"))?;
-                b.absorb(&out, pos, &m, &mut bd).map_err(|e| format!("cont absorb: {e}"))?;
+        let seed = g.usize(0, 1 << 30) as u64;
+        // FullKV never evicts: prefill + steps + the 16-step
+        // continuation must fit the slab + ring (64 + 8) with slack
+        let steps = g.usize(5, 32);
+        for (ki, kind) in PolicyKind::ALL.into_iter().enumerate() {
+            let name = kind.name();
+            let mk = || {
+                Fp32Backend::new(
+                    Fp32Cache::new(m.n_layers, capacity, kvd, m.buf_slots),
+                    kind.build(budget),
+                    kind.budget_for(budget),
+                    kind.gather(),
+                    capacity,
+                )
+            };
+            let mut rng = Rng::new(seed.wrapping_add(ki as u64));
+            let mut bd = Breakdown::default();
+            let mut backend = mk();
+            backend.write_prefill(&fake_prefill(&mut rng, &m), m.prefill_len);
+            let mut pos = m.prefill_len;
+            for _ in 0..steps {
+                let out = fake_decode(&mut rng, &m, span);
+                backend.make_room(pos, &mut bd).map_err(|e| format!("{name} make_room: {e}"))?;
+                backend.absorb(&out, pos, &m, &mut bd).map_err(|e| format!("{name} absorb: {e}"))?;
+                pos += 1;
             }
-            pos += 1;
-        }
-        let fin_a = backend.snapshot().map_err(|e| e.to_string())?;
-        let fin_b = resumed.snapshot().map_err(|e| e.to_string())?;
-        let (SnapshotPayload::Fp32(fa), SnapshotPayload::Fp32(fb)) =
-            (&fin_a.payload, &fin_b.payload)
-        else {
-            return Err("wrong payload kind".into());
-        };
-        let mut ca = fa.cache.clone();
-        let mut cb = fb.cache.clone();
-        ca.gather_nanos = 0;
-        cb.gather_nanos = 0;
-        if ca != cb {
-            return Err("original and resumed fp32 backends diverged".into());
+
+            let snap_a = backend.snapshot().map_err(|e| e.to_string())?;
+            if snap_a.bytes != backend.snapshot_bytes() {
+                return Err(format!("{name}: snapshot_bytes must price the snapshot exactly"));
+            }
+            let mut resumed = mk();
+            resumed
+                .restore(backend.snapshot().map_err(|e| e.to_string())?)
+                .map_err(|e| format!("{name} restore: {e}"))?;
+            if resumed.bytes_used() != backend.bytes_used() {
+                return Err(format!("{name}: restored footprint drifted"));
+            }
+            let snap_b = resumed.snapshot().map_err(|e| e.to_string())?;
+            let (SnapshotPayload::Fp32(fa), SnapshotPayload::Fp32(fb)) =
+                (&snap_a.payload, &snap_b.payload)
+            else {
+                return Err(format!("{name}: wrong payload kind"));
+            };
+            if fa.cache != fb.cache {
+                return Err(format!("{name}: fp32 cache image not bit-exact after restore"));
+            }
+
+            // behavioral: the cloned policy must make identical eviction
+            // and skip decisions (gather timing excluded: wall-clock)
+            for _ in 0..16 {
+                let out = fake_decode(&mut rng, &m, span);
+                for b in [&mut backend, &mut resumed] {
+                    b.make_room(pos, &mut bd).map_err(|e| format!("{name} cont make_room: {e}"))?;
+                    b.absorb(&out, pos, &m, &mut bd)
+                        .map_err(|e| format!("{name} cont absorb: {e}"))?;
+                }
+                pos += 1;
+            }
+            // (retention counters restart at zero on the resumed
+            // backend — decisions, not tallies, are what must agree)
+            if backend.live_positions() != resumed.live_positions() {
+                return Err(format!("{name}: original and resumed made different evictions"));
+            }
+            let fin_a = backend.snapshot().map_err(|e| e.to_string())?;
+            let fin_b = resumed.snapshot().map_err(|e| e.to_string())?;
+            let (SnapshotPayload::Fp32(fa), SnapshotPayload::Fp32(fb)) =
+                (&fin_a.payload, &fin_b.payload)
+            else {
+                return Err(format!("{name}: wrong payload kind"));
+            };
+            let mut ca = fa.cache.clone();
+            let mut cb = fb.cache.clone();
+            ca.gather_nanos = 0;
+            cb.gather_nanos = 0;
+            if ca != cb {
+                return Err(format!("{name}: original and resumed fp32 backends diverged"));
+            }
         }
         Ok(())
     });
