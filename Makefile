@@ -45,11 +45,13 @@ test: tier1
 # must multiply admission, chunked prefill must keep running-session
 # TPOT strictly below the whole-prompt baseline, the goodput policy
 # must strictly beat FIFO on SLO attainment over a pinned-seed arrival
-# trace), and the greps pin the prefix-hit, interleaved-prefill,
-# fused-execute, prefix-alias, and goodput counters nonzero so none of
-# those paths can silently regress (always-miss sharing / whole-prompt
-# prefill / per-member decode executes / attach-by-memcpy /
-# never-scoring SLO ledger).
+# trace, the skewed 2-replica fleet must live-migrate and not lose
+# goodput to a singleton), and the greps pin the prefix-hit,
+# interleaved-prefill, fused-execute, prefix-alias, goodput, migration,
+# and lane-width counters nonzero so none of those paths can silently
+# regress (always-miss sharing / whole-prompt prefill / per-member
+# decode executes / attach-by-memcpy / never-scoring SLO ledger /
+# never-migrating replica tier).
 # (No pipe here: a pipe would discard the bench's own exit status under
 # POSIX sh; capture to a file so both the bench result and the grep gate
 # propagate.)
@@ -62,6 +64,8 @@ bench-smoke:
 	  && grep -Eq "^prefix_alias_hits=[1-9][0-9]*$$" bench_smoke.out \
 	  && grep -Eq "^goodput=[1-9][0-9]*$$" bench_smoke.out \
 	  && grep -Eq "^policy_divergence=0$$" bench_smoke.out \
+	  && grep -Eq "^migrations=[1-9][0-9]*$$" bench_smoke.out \
+	  && grep -Eq "^lane_width=[1-9][0-9]*$$" bench_smoke.out \
 	  && grep -q "skipping real-coordinator" bench_smoke.out; \
 	status=$$?; rm -f bench_smoke.out; exit $$status
 

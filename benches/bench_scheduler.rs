@@ -15,16 +15,22 @@
 //! **policy-arena divergence sweep** (every registered eviction policy
 //! driven through the live fp32 arena, its retention audit log replayed
 //! through the sim-oracle twin; the summed mismatch count is the
-//! greppable `policy_divergence=0` gate) — plus a real coordinator
-//! oversubscription mini-run comparing both preemption policies when
-//! artifacts exist.
+//! greppable `policy_divergence=0` gate), and the **skewed-load
+//! replica fleet sweep** (one pinned-seed bursty trace with every
+//! arrival landed on replica 0, replayed through a singleton vs a
+//! 2-replica router whose rebalance pass live-migrates sessions hot →
+//! cold; fleet goodput must not lose to the singleton, and the
+//! greppable `migrations=` / `lane_width=` lines gate that the fleet
+//! actually moved sessions) — plus a real coordinator oversubscription
+//! mini-run comparing both preemption policies when artifacts exist.
 
 use std::sync::{mpsc, Arc};
 
 use thinkv::baselines::PolicyKind;
 use thinkv::bench::{write_results, Table};
 use thinkv::coordinator::{
-    advance_batch, CompressionMode, SchedPolicy, Scheduler, ServeConfig, Session, SloTarget,
+    advance_batch, CompressionMode, Router, SchedPolicy, Scheduler, ServeConfig, Session,
+    SloTarget,
 };
 use thinkv::kvcache::{BlockPool, PrefixIndex};
 use thinkv::sim::{
@@ -669,6 +675,161 @@ fn main() {
     println!("policy_divergence={total_mismatches}");
     assert_eq!(total_mismatches, 0, "live policies must replay exactly in the sim twin");
 
+    // Part 6.9: skewed-load replica fleet sweep (ISSUE 9). One
+    // pinned-seed bursty arrival trace replayed twice: every arrival
+    // pinned onto replica 0 of a singleton, then the same skewed
+    // arrivals in front of a 2-replica Router whose per-loop rebalance
+    // pass live-migrates queued sessions off the hot replica through
+    // the KvSnapshot path. Each replica owns a MeteredEngine; the
+    // logical clocks are synced to the fleet max every loop, so the
+    // replay and its SLO verdicts are engine-time deterministic. The
+    // fleet must convert at least as many arrivals into met SLOs as
+    // the singleton, and must actually migrate to do it.
+    let mut t11 = Table::new(
+        "Replica fleet: pinned-seed skewed trace, singleton vs 2-replica router (live migration)",
+        &["fleet", "goodput", "violations", "migrations", "migration_KB", "lane_peak"],
+    );
+    let fleet_mix = vec![
+        TenantClass {
+            system_prompt_len: 48,
+            tail_len: 16,
+            max_new_tokens: 16,
+            rate: 0.0,
+            burst_every: 20,
+            burst_size: 2,
+            slo: SloTarget::new(100_000, 0),
+            ..TenantClass::math()
+        },
+        TenantClass {
+            system_prompt_len: 16,
+            tail_len: 8,
+            max_new_tokens: 4,
+            rate: 0.0,
+            burst_every: 100,
+            burst_size: 2,
+            slo: SloTarget::new(1_500, 0),
+            ..TenantClass::chat()
+        },
+    ];
+    let fleet_trace = ArrivalTrace::generate(&fleet_mix, 909, 600, man.model.vocab);
+    assert!(!fleet_trace.events.is_empty());
+    let fleet_base = ServeConfig {
+        mode: CompressionMode::parse("thinkv").expect("mode"),
+        budget: 64,
+        max_new_tokens: 16,
+        workers: 1,
+        temperature: 0.0,
+        ..ServeConfig::default()
+    };
+    // per-replica pool: two admissions of the heaviest arrival, so the
+    // hot replica queues and the rebalance pass has work to move
+    let max_adm = fleet_trace
+        .events
+        .iter()
+        .map(|e| {
+            Session::new(0, e.prompt.clone(), &fleet_base, &man)
+                .expect("probe")
+                .admission_bytes()
+        })
+        .max()
+        .expect("nonempty trace");
+    let fleet_replay = |replicas: usize| {
+        let router = Router::new(replicas, max_adm * 2 + 4096, Some(64u64 << 20), false, 16);
+        let engines: Vec<MeteredEngine> =
+            (0..replicas).map(|_| MeteredEngine::new(man.model.clone())).collect();
+        let (tx, rx) = mpsc::channel();
+        let mut next = 0usize;
+        let mut results = Vec::new();
+        loop {
+            // sync every engine (and scheduler clock) to the fleet max
+            let now = engines.iter().map(|e| e.clock()).max().expect("engines");
+            for (i, e) in engines.iter().enumerate() {
+                let behind = now.saturating_sub(e.clock());
+                if behind > 0 {
+                    e.tick(behind);
+                }
+                router.replicas()[i].scheduler().drive_clock(now);
+            }
+            // the skew: every arrival lands on replica 0
+            while next < fleet_trace.events.len() && fleet_trace.events[next].at <= now {
+                let e = &fleet_trace.events[next];
+                let cfg = ServeConfig {
+                    max_new_tokens: e.max_new_tokens,
+                    slo_class: Some(e.class_name.to_string()),
+                    slo: e.slo,
+                    ..fleet_base.clone()
+                };
+                let pool = Arc::clone(router.replicas()[0].scheduler().pool());
+                let sess = Session::with_pool(e.id, e.prompt.clone(), &cfg, &man, Some(pool))
+                    .expect("arrival session");
+                router.submit_to(0, sess, tx.clone());
+                next += 1;
+            }
+            results.extend(rx.try_iter());
+            if results.len() >= fleet_trace.events.len() {
+                break;
+            }
+            if router.inflight() == 0 {
+                if next < fleet_trace.events.len() {
+                    let gap = fleet_trace.events[next].at.saturating_sub(now).max(1);
+                    engines[0].tick(gap);
+                }
+                continue;
+            }
+            router.rebalance();
+            for (i, r) in router.replicas().iter().enumerate() {
+                let sched = r.scheduler();
+                if sched.inflight() > 0 {
+                    let batch = sched.next_batch(4).expect("runnable while inflight");
+                    advance_batch(sched, &engines[i], 2, batch);
+                }
+            }
+        }
+        assert!(
+            results.iter().all(|r: &thinkv::coordinator::RequestResult| r.error.is_none()),
+            "every fleet arrival must complete cleanly"
+        );
+        let snap = router.snapshot();
+        assert_eq!(snap.completions, fleet_trace.events.len() as u64);
+        assert!(snap.pool_peak <= snap.pool_capacity, "pool overflow");
+        router.shutdown();
+        snap
+    };
+    let single = fleet_replay(1);
+    let fleet = fleet_replay(2);
+    assert_eq!(single.migrations, 0, "a singleton has nowhere to migrate");
+    assert!(fleet.migrations > 0, "the skewed fleet must live-migrate");
+    assert!(fleet.migration_bytes > 0, "migrated snapshots move bytes");
+    assert_eq!(
+        single.goodput + single.slo_violations,
+        fleet.goodput + fleet.slo_violations,
+        "both fleets must score the same classed population"
+    );
+    assert!(
+        fleet.goodput >= single.goodput,
+        "2-replica goodput must not lose to the singleton ({} vs {})",
+        fleet.goodput,
+        single.goodput
+    );
+    for (name, s) in [("singleton", &single), ("2-replica", &fleet)] {
+        t11.row(&[
+            name.to_string(),
+            format!("{}", s.goodput),
+            format!("{}", s.slo_violations),
+            format!("{}", s.migrations),
+            format!("{:.1}", s.migration_bytes as f64 / 1024.0),
+            format!("{}", s.lane_peak),
+        ]);
+    }
+    t11.print();
+    // machine-greppable gates: CI asserts the fleet actually migrated
+    // and the lane bookkeeping saw real batch lanes, so the replica
+    // tier cannot silently regress to never-moving sessions
+    println!("migrations={}", fleet.migrations);
+    assert!(fleet.migrations > 0, "fleet sweep must record migrations");
+    println!("lane_width={}", fleet.lane_peak.max(single.lane_peak));
+    assert!(fleet.lane_peak > 0, "fleet sweep must record lane widths");
+
     // Part 7: real coordinator oversubscription mini-run (CPU PJRT),
     // recompute preemption vs suspend-to-host swap
     let artifacts = format!("{}/model_config.json", thinkv::model::default_artifacts_dir());
@@ -680,6 +841,7 @@ fn main() {
     j.set("arrival_burst", t7.to_json());
     j.set("slo_goodput", t9.to_json());
     j.set("policy_arena", t10.to_json());
+    j.set("replica_fleet", t11.to_json());
     if std::path::Path::new(&artifacts).exists()
         && std::env::var("THINKV_BENCH_REAL").map(|v| v == "1").unwrap_or(true)
     {

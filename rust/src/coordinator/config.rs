@@ -200,6 +200,21 @@ pub struct ServeConfig {
     /// victims, and hopeless victims skip the swap-out copy. Off =
     /// PR 1–6 throughput-greedy behavior, bit-for-bit.
     pub slo_aware: bool,
+    /// Replica-fleet width: the coordinator runs this many independent
+    /// replicas (each with its own `BlockPool`, `SwapPool`, scheduler
+    /// and worker pool) behind a `Router` that places new sessions by
+    /// least-loaded-lane scoring and live-migrates suspended sessions
+    /// from hot to cold replicas via the `KvSnapshot` path. `1` (the
+    /// default) is byte-identical to the legacy single-scheduler path.
+    /// `pool_bytes`/`swap_bytes`/`workers` are **per replica**.
+    pub replicas: usize,
+    /// Proactive idle swap-out: a prefilled session that has sat
+    /// runnable without being pulled by a worker for at least this many
+    /// scheduler ticks is suspended to the swap pool *before* pool
+    /// pressure forces a preemption, so admission and migration find
+    /// free device bytes instead of triggering preemption storms.
+    /// `None` = off. Requires `swap_bytes`.
+    pub idle_swap_ticks: Option<u64>,
 }
 
 impl ServeConfig {
@@ -242,6 +257,8 @@ impl Default for ServeConfig {
             slo_class: None,
             slo: SloTarget::default(),
             slo_aware: false,
+            replicas: 1,
+            idle_swap_ticks: None,
         }
     }
 }

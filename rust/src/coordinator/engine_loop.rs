@@ -9,17 +9,18 @@
 //! its own cache, sampler, and position; the fused call only amortizes
 //! launches).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
 
 use anyhow::Result;
 
-use crate::kvcache::{BlockPool, PrefixIndex, SwapPool};
+use crate::kvcache::BlockPool;
 use crate::metrics::{Breakdown, SchedSnapshot};
 use crate::runtime::{BatchDecodeReq, DecodeEngine, Engine};
 
 use super::config::ServeConfig;
+use super::replica::Router;
 use super::scheduler::{Entry, Scheduler};
 use super::session::{Session, StepOutcome, StepPrep};
 
@@ -130,14 +131,20 @@ impl RequestHandle {
     }
 }
 
-/// The serving coordinator (leader): owns the scheduler and the workers.
+/// The serving coordinator (leader): owns the replica [`Router`] and
+/// the per-replica decode workers.
 pub struct Coordinator {
     cfg: ServeConfig,
-    scheduler: Arc<Scheduler>,
+    router: Arc<Router>,
     workers: Vec<thread::JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
     next_id: AtomicU64,
     manifest: crate::model::Manifest,
 }
+
+/// How often the background rebalancer looks for a hot/cold replica
+/// imbalance (fleet mode only).
+const REBALANCE_INTERVAL: std::time::Duration = std::time::Duration::from_millis(2);
 
 impl Coordinator {
     pub fn start(cfg: ServeConfig) -> Result<Coordinator> {
@@ -146,64 +153,92 @@ impl Coordinator {
 
     pub fn start_with_dir(cfg: ServeConfig, artifacts_dir: &str) -> Result<Coordinator> {
         let manifest = crate::model::Manifest::load(artifacts_dir)?;
-        let pool = Arc::new(BlockPool::new(
+        // the replica fleet: per-replica block/swap pools, a fleet-global
+        // prefix index (resident payloads charged once, to replica 0's
+        // pool), suspend-to-host preemption per replica
+        let router = Arc::new(Router::new(
+            cfg.replicas.max(1),
             cfg.pool_bytes.unwrap_or(UNBOUNDED_POOL_BYTES),
+            cfg.swap_bytes,
+            cfg.prefix_share,
+            PREFIX_BLOCK_TOKENS,
         ));
-        // suspend-to-host preemption: swapped sessions resume instead of
-        // recomputing whenever their snapshot fits this host pool
-        let swap = cfg.swap_bytes.map(|b| Arc::new(SwapPool::new(b)));
-        // cross-session prefix sharing: the index accounts its resident
-        // payloads against the same block pool the scheduler admits
-        // from, at the CT block granularity
-        let prefix = cfg
-            .prefix_share
-            .then(|| PrefixIndex::new(Arc::clone(&pool), PREFIX_BLOCK_TOKENS));
-        let scheduler = Arc::new(Scheduler::with_prefix(pool, swap, prefix));
-        // stall-free chunked prefill: long prompts advance in
-        // fixed-token chunks co-scheduled with fused decode steps
-        if let Some(tokens) = cfg.prefill_chunk_tokens {
-            scheduler.set_prefill_chunking(tokens.max(1), 0);
+        for r in router.replicas() {
+            let scheduler = r.scheduler();
+            // stall-free chunked prefill: long prompts advance in
+            // fixed-token chunks co-scheduled with fused decode steps
+            if let Some(tokens) = cfg.prefill_chunk_tokens {
+                scheduler.set_prefill_chunking(tokens.max(1), 0);
+            }
+            // SLO-aware goodput policy: admission, batch steering, and
+            // victim selection order by TTFT-deadline slack, not FIFO
+            if cfg.slo_aware {
+                scheduler.set_policy(super::scheduler::SchedPolicy::Goodput);
+            }
+            // proactive idle swap-out (flag-gated): idle sessions park
+            // in host memory before pool pressure forces preemption
+            if let Some(k) = cfg.idle_swap_ticks {
+                scheduler.set_idle_swap(k);
+            }
         }
-        // SLO-aware goodput policy: admission, batch steering, and
-        // victim selection order by TTFT-deadline slack instead of FIFO
-        if cfg.slo_aware {
-            scheduler.set_policy(super::scheduler::SchedPolicy::Goodput);
-        }
+        let stop = Arc::new(AtomicBool::new(false));
         let mut workers = Vec::new();
+        let per_replica = cfg.workers.max(1);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        for w in 0..cfg.workers.max(1) {
-            let scheduler = Arc::clone(&scheduler);
-            let chunk = cfg.chunk.max(1);
-            let max_batch = cfg.max_decode_batch.max(1);
-            let dir = artifacts_dir.to_string();
-            let ready = ready_tx.clone();
-            workers.push(
-                thread::Builder::new()
-                    .name(format!("thinkv-decode-{w}"))
-                    .spawn(move || {
-                        let engine = match Engine::with_dir(&dir) {
-                            Ok(e) => {
-                                let _ = ready.send(Ok(()));
-                                e
-                            }
-                            Err(e) => {
-                                let _ = ready.send(Err(e));
-                                return;
-                            }
-                        };
-                        worker_loop(&scheduler, &engine, chunk, max_batch);
-                    })
-                    .expect("spawn decode worker"),
-            );
+        for r in router.replicas() {
+            for w in 0..per_replica {
+                let scheduler = Arc::clone(r.scheduler());
+                let chunk = cfg.chunk.max(1);
+                let max_batch = cfg.max_decode_batch.max(1);
+                let dir = artifacts_dir.to_string();
+                let ready = ready_tx.clone();
+                let rid = r.id();
+                workers.push(
+                    thread::Builder::new()
+                        .name(format!("thinkv-decode-{rid}-{w}"))
+                        .spawn(move || {
+                            let engine = match Engine::with_dir(&dir) {
+                                Ok(e) => {
+                                    let _ = ready.send(Ok(()));
+                                    e
+                                }
+                                Err(e) => {
+                                    let _ = ready.send(Err(e));
+                                    return;
+                                }
+                            };
+                            worker_loop(&scheduler, &engine, chunk, max_batch);
+                        })
+                        .expect("spawn decode worker"),
+                );
+            }
         }
         drop(ready_tx);
-        for _ in 0..cfg.workers.max(1) {
+        for _ in 0..router.replicas().len() * per_replica {
             ready_rx.recv()??;
+        }
+        // live rebalancer: migrate sessions off hot replicas while the
+        // fleet is imbalanced (no-op thread never spawned for N = 1)
+        if router.replicas().len() > 1 {
+            let router = Arc::clone(&router);
+            let stop = Arc::clone(&stop);
+            workers.push(
+                thread::Builder::new()
+                    .name("thinkv-rebalance".into())
+                    .spawn(move || {
+                        while !stop.load(Ordering::SeqCst) {
+                            router.rebalance();
+                            thread::sleep(REBALANCE_INTERVAL);
+                        }
+                    })
+                    .expect("spawn rebalancer"),
+            );
         }
         Ok(Coordinator {
             cfg,
-            scheduler,
+            router,
             workers,
+            stop,
             next_id: AtomicU64::new(1),
             manifest,
         })
@@ -213,27 +248,67 @@ impl Coordinator {
         &self.cfg
     }
 
+    /// The replica fleet behind this coordinator.
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
     /// Submit a prompt; returns a handle to await the result. Fails fast
     /// when the request's KV demand can never fit the pool.
     pub fn submit(&self, prompt: Vec<i32>) -> Result<RequestHandle> {
+        self.submit_inner(prompt, None)
+    }
+
+    /// [`Coordinator::submit`] with a streaming sink: every decode chunk
+    /// flushes the tokens generated since the last flush as one frame
+    /// into `frames`. The bounded channel is the per-connection
+    /// backpressure: a slow consumer stalls only its own session's
+    /// worker at chunk granularity, and a disconnected one detaches the
+    /// sink instead of wedging the batch.
+    pub fn submit_with_stream(
+        &self,
+        prompt: Vec<i32>,
+        frames: mpsc::SyncSender<Vec<i32>>,
+    ) -> Result<RequestHandle> {
+        self.submit_inner(prompt, Some(frames))
+    }
+
+    fn submit_inner(
+        &self,
+        prompt: Vec<i32>,
+        frames: Option<mpsc::SyncSender<Vec<i32>>>,
+    ) -> Result<RequestHandle> {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        let session = Session::with_parts(
+        // least-loaded-lane placement, decided before the session binds
+        // to a pool (the key probe is side-effect free); a 1-replica
+        // fleet always places on replica 0 — the legacy path
+        let replica = if self.router.replicas().len() > 1 {
+            let key = Session::probe_key(&self.cfg, &self.manifest)?;
+            self.router.place(&key)
+        } else {
+            0
+        };
+        let scheduler = self.router.replicas()[replica].scheduler();
+        let mut session = Session::with_parts(
             id,
             prompt,
             &self.cfg,
             &self.manifest,
-            Some(Arc::clone(self.scheduler.pool())),
-            self.scheduler.prefix_index().cloned(),
+            Some(Arc::clone(scheduler.pool())),
+            self.router.prefix_index().cloned(),
         )?;
-        if session.admission_bytes() > self.scheduler.pool().capacity() {
+        if let Some(tx) = frames {
+            session.set_stream(tx);
+        }
+        if session.admission_bytes() > scheduler.pool().capacity() {
             anyhow::bail!(
                 "request {id}: admission demand {} B exceeds pool capacity {} B",
                 session.admission_bytes(),
-                self.scheduler.pool().capacity()
+                scheduler.pool().capacity()
             );
         }
         let (tx, rx) = mpsc::channel();
-        self.scheduler.submit(session, tx);
+        self.router.submit_to(replica, session, tx);
         Ok(RequestHandle { id, rx })
     }
 
@@ -247,25 +322,28 @@ impl Coordinator {
     }
 
     pub fn inflight(&self) -> u64 {
-        self.scheduler.inflight()
+        self.router.inflight()
     }
 
-    /// The global KV block pool (memory accounting).
+    /// Replica 0's KV block pool (memory accounting; per replica in a
+    /// fleet — see [`Coordinator::router`] for the rest).
     pub fn pool(&self) -> &BlockPool {
-        self.scheduler.pool()
+        self.router.replicas()[0].scheduler().pool()
     }
 
-    /// Scheduler + pool counters (admissions, preemptions, queue depth,
-    /// pool used/peak/free), stamped with the configured retention-
-    /// policy label so `stats` consumers see which arena served them.
+    /// Fleet-merged scheduler + pool counters (admissions, preemptions,
+    /// queue depth, pool used/peak/free, migrations), stamped with the
+    /// configured retention-policy label so `stats` consumers see which
+    /// arena served them.
     pub fn sched_stats(&self) -> SchedSnapshot {
-        let mut snap = self.scheduler.snapshot();
+        let mut snap = self.router.snapshot();
         snap.policy = self.cfg.policy_label();
         snap
     }
 
     pub fn shutdown(mut self) {
-        self.scheduler.shutdown();
+        self.stop.store(true, Ordering::SeqCst);
+        self.router.shutdown();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -274,7 +352,8 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.scheduler.shutdown();
+        self.stop.store(true, Ordering::SeqCst);
+        self.router.shutdown();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -350,6 +429,10 @@ enum ChunkEnd {
 /// Hand one session back to the scheduler / submitter according to how
 /// its chunk ended.
 fn dispatch(scheduler: &Scheduler, mut item: Entry, end: ChunkEnd) {
+    // one streaming frame per chunk boundary: tokens generated since
+    // the last flush (no-op for non-streaming sessions; recompute
+    // replay never re-sends — the flushed high-water mark survives)
+    item.session.flush_stream();
     match end {
         ChunkEnd::Yield => scheduler.yield_back(item),
         ChunkEnd::NeedMemory => scheduler.cannot_grow(item),
@@ -580,6 +663,9 @@ pub fn advance_batch(
 fn worker_loop(scheduler: &Scheduler, engine: &Engine, chunk: usize, max_batch: usize) {
     while let Some(batch) = scheduler.next_batch(max_batch) {
         advance_batch(scheduler, engine, chunk, batch);
+        // proactive idle swap-out (no-op unless --idle-swap-ticks set):
+        // park idle sessions in host memory while we hold no batch
+        scheduler.sweep_idle();
     }
 }
 

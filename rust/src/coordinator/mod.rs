@@ -86,6 +86,7 @@
 
 pub mod config;
 pub mod engine_loop;
+pub mod replica;
 pub mod sampler;
 pub mod scheduler;
 pub mod session;
@@ -94,6 +95,7 @@ pub(crate) mod test_support;
 
 pub use config::{CompressionMode, ServeConfig, SloTarget};
 pub use engine_loop::{advance_batch, Coordinator, RequestHandle, RequestResult};
+pub use replica::{Replica, Router};
 pub use sampler::Sampler;
 pub use scheduler::{Entry, SchedPolicy, Scheduler};
 pub use session::{Session, SloState, StepOutcome, StepPrep};

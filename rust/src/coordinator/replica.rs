@@ -1,0 +1,253 @@
+//! The multi-replica serving tier: a [`Router`] in front of N
+//! [`Replica`]s, each a full memory-aware [`Scheduler`] with its own
+//! [`BlockPool`] / [`SwapPool`], plus **live session migration** —
+//! `Router::rebalance` suspends a victim on a hot replica through the
+//! existing `KvSnapshot` path and resumes it mid-decode on a cold one,
+//! bit-exactly, with tokens / sampler / SLO clock intact. ThinKV makes
+//! this cheap: a compressed session snapshot is a few hundred KB, so
+//! moving a session costs less than recomputing even a short prefix.
+//!
+//! The router also owns the fleet-global [`PrefixIndex`]: a shared
+//! system prompt is resident **once per fleet** (charged to replica 0's
+//! pool), not once per replica; per-session CoW privatizations charge
+//! the owning session's replica pool (see `AttachedPrefix::rebind_charge`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+use crate::kvcache::{BatchKey, BlockPool, PrefixIndex, SwapPool};
+use crate::metrics::SchedSnapshot;
+
+use super::engine_loop::RequestResult;
+use super::scheduler::Scheduler;
+use super::session::Session;
+
+/// One serving replica: a scheduler bound to its own device block pool
+/// and (optionally) host swap pool. Worker threads are owned by the
+/// [`super::Coordinator`]; deterministic harnesses drive the scheduler
+/// directly with [`super::advance_batch`].
+pub struct Replica {
+    id: usize,
+    scheduler: Arc<Scheduler>,
+}
+
+impl Replica {
+    /// Build a replica over fresh pools. `prefix` is the fleet-shared
+    /// index (same `Arc` on every replica, or `None`).
+    pub fn new(
+        id: usize,
+        pool: Arc<BlockPool>,
+        swap: Option<Arc<SwapPool>>,
+        prefix: Option<Arc<PrefixIndex>>,
+    ) -> Replica {
+        Replica { id, scheduler: Arc::new(Scheduler::with_prefix(pool, swap, prefix)) }
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn scheduler(&self) -> &Arc<Scheduler> {
+        &self.scheduler
+    }
+}
+
+/// Fleet front end: places new sessions by least-loaded-lane scoring,
+/// owns the fleet-global prefix index, and live-migrates sessions off
+/// hot replicas ([`Router::rebalance`]).
+pub struct Router {
+    replicas: Vec<Replica>,
+    prefix: Option<Arc<PrefixIndex>>,
+    migrations: AtomicU64,
+    migration_bytes: AtomicU64,
+    migration_ns: AtomicU64,
+}
+
+/// A replica must lead the coldest one by at least this many queued
+/// sessions before `rebalance` moves anything — hysteresis so a fleet
+/// in steady state does not thrash sessions back and forth.
+const REBALANCE_GAP: usize = 2;
+
+impl Router {
+    /// Build an `n`-replica fleet. Every replica gets its own pools
+    /// (`pool_bytes` / `swap_bytes` are **per replica**); the fleet
+    /// prefix index accounts residency against replica 0's pool, so a
+    /// 1-replica router is byte-identical to the legacy single
+    /// scheduler. `prefix_block` is the trie granularity in tokens.
+    pub fn new(
+        n: usize,
+        pool_bytes: u64,
+        swap_bytes: Option<u64>,
+        prefix_share: bool,
+        prefix_block: usize,
+    ) -> Router {
+        let n = n.max(1);
+        let pools: Vec<Arc<BlockPool>> =
+            (0..n).map(|_| Arc::new(BlockPool::new(pool_bytes))).collect();
+        let prefix = prefix_share.then(|| PrefixIndex::new(Arc::clone(&pools[0]), prefix_block));
+        let replicas = pools
+            .into_iter()
+            .enumerate()
+            .map(|(id, pool)| {
+                let swap = swap_bytes.map(|b| Arc::new(SwapPool::new(b)));
+                Replica::new(id, pool, swap, prefix.clone())
+            })
+            .collect();
+        Router {
+            replicas,
+            prefix,
+            migrations: AtomicU64::new(0),
+            migration_bytes: AtomicU64::new(0),
+            migration_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn replicas(&self) -> &[Replica] {
+        &self.replicas
+    }
+
+    /// The fleet-shared prefix index (resident payloads charged once,
+    /// to replica 0's pool).
+    pub fn prefix_index(&self) -> Option<&Arc<PrefixIndex>> {
+        self.prefix.as_ref()
+    }
+
+    /// Live migrations completed so far.
+    pub fn migrations(&self) -> u64 {
+        self.migrations.load(Ordering::SeqCst)
+    }
+
+    /// Least-loaded-lane placement: the replica where this session's
+    /// `BatchKey` lane is shortest (a lone fp32 session lands where it
+    /// cannot cap a quant-heavy queue's batch width), total queued load
+    /// breaking ties, replica id breaking those — so placement is
+    /// deterministic and replica 0 wins an empty-fleet tie, keeping the
+    /// 1-replica path byte-identical to the legacy scheduler.
+    pub fn place(&self, key: &BatchKey) -> usize {
+        self.replicas
+            .iter()
+            .map(|r| {
+                let lane = r
+                    .scheduler
+                    .lane_occupancy()
+                    .iter()
+                    .find(|(k, _)| k == key)
+                    .map_or(0, |(_, n)| *n);
+                (lane, r.scheduler.load(), r.id)
+            })
+            .min()
+            .map(|(_, _, id)| id)
+            .expect("router has at least one replica")
+    }
+
+    /// Place and submit a session; returns the chosen replica id. The
+    /// session must have been built against that replica's pool — use
+    /// [`Router::place`] first, or go through `Coordinator::submit`
+    /// which does both.
+    pub fn submit_to(
+        &self,
+        replica: usize,
+        session: Session,
+        done_tx: mpsc::Sender<RequestResult>,
+    ) {
+        self.replicas[replica].scheduler.submit(session, done_tx);
+    }
+
+    /// One rebalance pass: while the most loaded replica leads the
+    /// least loaded by at least [`REBALANCE_GAP`] queued sessions,
+    /// live-migrate one session hot → cold (suspend on the source via
+    /// its swap pool, rebind to the destination pool + fleet prefix,
+    /// resume there with zero recompute steps). Bounded at one
+    /// migration per replica per pass. Returns migrations performed.
+    pub fn rebalance(&self) -> usize {
+        if self.replicas.len() < 2 {
+            return 0;
+        }
+        let mut moved = 0;
+        for _ in 0..self.replicas.len() {
+            let loads: Vec<usize> =
+                self.replicas.iter().map(|r| r.scheduler.load()).collect();
+            let hot = (0..loads.len()).max_by_key(|&i| loads[i]).expect("nonempty");
+            let cold = (0..loads.len()).min_by_key(|&i| loads[i]).expect("nonempty");
+            if hot == cold || loads[hot] < loads[cold] + REBALANCE_GAP {
+                break;
+            }
+            if !self.migrate_one(hot, cold) {
+                break;
+            }
+            moved += 1;
+        }
+        moved
+    }
+
+    /// Migrate one session from `hot` to `cold`. Returns false when no
+    /// session on `hot` is safely migratable (or `hot` has no swap pool
+    /// to stage the snapshot through).
+    fn migrate_one(&self, hot: usize, cold: usize) -> bool {
+        let src = &self.replicas[hot].scheduler;
+        let dst = &self.replicas[cold].scheduler;
+        let Some(swap) = src.swap_pool().cloned() else { return false };
+        let Some(mut entry) = src.take_for_migration() else { return false };
+        let t0 = std::time::Instant::now();
+        // priced before the move so the destination's cost-ordered
+        // resume sees the same restore-vs-recompute tradeoff a local
+        // preemption victim would
+        let live_bytes = entry.session.bytes_used().max(entry.session.admission_bytes());
+        let replay_steps = entry.session.pos.max(1);
+        if !entry.session.suspend_to(&swap) {
+            // snapshot did not fit the source swap pool: hand the
+            // untouched victim straight back — migration is strictly
+            // opportunistic and never degrades a session to recompute
+            src.return_from_migration(entry);
+            return false;
+        }
+        let bytes = entry.session.suspended_bytes().unwrap_or(0);
+        // carry the deterministic clock across: the destination's tick
+        // source must be at least the source's or the migrated
+        // session's SLO stamps would travel back in time
+        if let Some(t) = src.logical_clock() {
+            dst.drive_clock(t);
+        }
+        entry.session.rebind_for_migration(Arc::clone(dst.pool()), self.prefix.clone());
+        dst.price_resume(&mut entry.session, live_bytes, replay_steps);
+        dst.resubmit(entry.session, entry.done_tx);
+        src.migration_release();
+        self.migrations.fetch_add(1, Ordering::SeqCst);
+        self.migration_bytes.fetch_add(bytes, Ordering::SeqCst);
+        self.migration_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::SeqCst);
+        true
+    }
+
+    /// Per-replica snapshots, replica order.
+    pub fn replica_snapshots(&self) -> Vec<SchedSnapshot> {
+        self.replicas.iter().map(|r| r.scheduler.snapshot()).collect()
+    }
+
+    /// Fleet-merged snapshot: counters and pool gauges summed across
+    /// replicas (prefix books kept from replica 0 — the index is
+    /// fleet-shared, so every replica reports the same values), stamped
+    /// with the router's migration counters.
+    pub fn snapshot(&self) -> SchedSnapshot {
+        let mut snaps = self.replica_snapshots().into_iter();
+        let mut merged = snaps.next().expect("router has at least one replica");
+        for s in snaps {
+            merged.merge_replica(&s);
+        }
+        merged.migrations = self.migrations.load(Ordering::SeqCst);
+        merged.migration_bytes = self.migration_bytes.load(Ordering::SeqCst);
+        merged.migration_ns = self.migration_ns.load(Ordering::SeqCst);
+        merged
+    }
+
+    /// Total sessions submitted and not yet finished, fleet-wide.
+    pub fn inflight(&self) -> u64 {
+        self.replicas.iter().map(|r| r.scheduler.inflight()).sum()
+    }
+
+    /// Stop every replica's scheduler (workers drain and exit).
+    pub fn shutdown(&self) {
+        for r in &self.replicas {
+            r.scheduler.shutdown();
+        }
+    }
+}

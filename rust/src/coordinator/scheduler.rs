@@ -76,9 +76,10 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
 
-use crate::kvcache::{BlockPool, PrefixIndex, SwapPool};
+use crate::kvcache::{BatchKey, BlockPool, PrefixIndex, SwapPool};
 use crate::metrics::{SchedSnapshot, SloClassSnap};
 use crate::runtime::ExecStats;
+use crate::sim::{GpuProfile, LrmProfile, ServingCost};
 
 use super::engine_loop::RequestResult;
 use super::session::Session;
@@ -182,6 +183,17 @@ impl Inner {
 /// Decode-batch sizes above this all land in the last histogram bucket.
 pub(crate) const BATCH_HIST_BUCKETS: usize = 16;
 
+/// Lane starvation bound: after this many consecutive batches seeded
+/// off the FIFO front (because a wider lane existed elsewhere), the
+/// front entry's lane is forced regardless of width, so a lone session
+/// in a narrow lane is never starved by a perpetually-wide one.
+const LANE_SKIP_BOUND: u64 = 4;
+
+/// Resume-ordering starvation bound: a preempted session that has
+/// waited this many scheduler ticks is never jumped by a cheaper
+/// resume, regardless of its modeled restore cost.
+pub(crate) const RESUME_AGE_BOUND_TICKS: u64 = 250;
+
 pub struct Scheduler {
     pool: Arc<BlockPool>,
     /// Host-side pool for suspend-to-host preemption; `None` = every
@@ -257,6 +269,21 @@ pub struct Scheduler {
     slo_violations: AtomicU64,
     /// Per-class goodput/violation counts and latency samples.
     slo_book: Mutex<Vec<ClassBook>>,
+    /// Serving-time cost model pricing the swap-vs-recompute resume
+    /// ordering (satellite of the replica tier; fixed A100 anchor).
+    cost: ServingCost,
+    /// High-water mark of the widest per-`BatchKey` runnable lane seen
+    /// during batch formation.
+    lane_peak: AtomicU64,
+    /// Batches whose seed jumped off the FIFO front to a wider lane.
+    lane_switches: AtomicU64,
+    /// Consecutive batches that skipped the FIFO front's lane (bounded
+    /// by [`LANE_SKIP_BOUND`]).
+    lane_skip_run: AtomicU64,
+    /// Proactive idle swap-out threshold in scheduler ticks (0 = off).
+    idle_swap_ticks: AtomicU64,
+    /// Sessions proactively suspended by [`Scheduler::sweep_idle`].
+    idle_swapouts: AtomicU64,
 }
 
 impl Scheduler {
@@ -321,6 +348,12 @@ impl Scheduler {
             goodput: AtomicU64::new(0),
             slo_violations: AtomicU64::new(0),
             slo_book: Mutex::new(Vec::new()),
+            cost: ServingCost::new(GpuProfile::a100_80gb(), LrmProfile::r1_llama_8b()),
+            lane_peak: AtomicU64::new(0),
+            lane_switches: AtomicU64::new(0),
+            lane_skip_run: AtomicU64::new(0),
+            idle_swap_ticks: AtomicU64::new(0),
+            idle_swapouts: AtomicU64::new(0),
         }
     }
 
@@ -360,6 +393,27 @@ impl Scheduler {
         } else {
             self.epoch.elapsed().as_millis() as u64
         }
+    }
+
+    /// The deterministic clock value when this scheduler is on logical
+    /// time, `None` while it still runs on wall clock. The router uses
+    /// this to carry a migrating session's SLO clock to the destination
+    /// replica without ever mixing tick sources.
+    pub fn logical_clock(&self) -> Option<u64> {
+        if self.logical.load(Ordering::SeqCst) {
+            Some(self.clock.load(Ordering::SeqCst))
+        } else {
+            None
+        }
+    }
+
+    /// Enable proactive idle swap-out: a prefilled runnable session not
+    /// pulled by any worker for `ticks` scheduler ticks is suspended to
+    /// the swap pool by [`Scheduler::sweep_idle`] before pool pressure
+    /// forces a preemption. 0 disables (the default). No-op without a
+    /// swap pool.
+    pub fn set_idle_swap(&self, ticks: u64) {
+        self.idle_swap_ticks.store(ticks, Ordering::SeqCst);
     }
 
     /// Enable Sarathi-style chunked prefill: each decode batch carries
@@ -442,9 +496,25 @@ impl Scheduler {
     /// measured from here, queueing time included.
     pub fn submit(&self, mut session: Session, done_tx: mpsc::Sender<RequestResult>) {
         session.slo.submitted_at = self.now_ticks();
+        session.last_ran_tick = session.slo.submitted_at;
         self.inflight.fetch_add(1, Ordering::SeqCst);
         let mut inner = self.inner.lock().unwrap();
         inner.waiting.push_back(Entry { session, done_tx });
+        self.try_admit(&mut inner);
+        self.cv.notify_all();
+    }
+
+    /// Re-enqueue a session migrated from another replica. Identical to
+    /// [`Scheduler::submit`] except that the SLO submission stamp is
+    /// **preserved** (the request's TTFT clock started on the source
+    /// replica) and the session joins the cost-ordered resume region at
+    /// the front of the waiting line rather than the FIFO tail — it was
+    /// already admitted once and carries restorable progress.
+    pub fn resubmit(&self, mut session: Session, done_tx: mpsc::Sender<RequestResult>) {
+        session.last_ran_tick = self.now_ticks();
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        let mut inner = self.inner.lock().unwrap();
+        self.requeue_resume(&mut inner, Entry { session, done_tx });
         self.try_admit(&mut inner);
         self.cv.notify_all();
     }
@@ -482,6 +552,7 @@ impl Scheduler {
             }
             let mut entry = inner.waiting.remove(pick).expect("index valid");
             entry.session.grant(need);
+            entry.session.resume_cost_ns = None;
             let seq = inner.next_admit_seq;
             inner.next_admit_seq += 1;
             inner.admitted.insert(entry.session.id, seq);
@@ -547,6 +618,47 @@ impl Scheduler {
                     let urgent = inner.runnable.remove(best).expect("index valid");
                     inner.runnable.push_front(urgent);
                 }
+            }
+            // Per-`BatchKey` lanes: tally runnable width per compat key
+            // and, under the throughput policy, seed the batch from the
+            // *widest* lane (ties go to the FIFO front's lane) instead
+            // of blindly from the front — a lone fp32 session can no
+            // longer cap batch width for a quant-heavy queue. A skip
+            // run longer than [`LANE_SKIP_BOUND`] forces the front's
+            // lane so narrow lanes are bounded-starved, not starved.
+            // Goodput mode keeps its slack-ordered seed (urgency beats
+            // width) but still feeds the lane gauges.
+            if inner.runnable.len() > 1 {
+                // (key, width, first index) in front-to-back order, so
+                // widths[0] is always the front entry's lane
+                let mut widths: Vec<(BatchKey, usize, usize)> = Vec::new();
+                for (i, e) in inner.runnable.iter().enumerate() {
+                    let k = e.session.compat_key();
+                    match widths.iter_mut().find(|(wk, _, _)| *wk == k) {
+                        Some((_, n, _)) => *n += 1,
+                        None => widths.push((k, 1, i)),
+                    }
+                }
+                let widest = widths.iter().map(|w| w.1).max().unwrap_or(1);
+                self.lane_peak.fetch_max(widest as u64, Ordering::SeqCst);
+                if !goodput && widths.len() > 1 {
+                    let skips = self.lane_skip_run.load(Ordering::SeqCst);
+                    if widths[0].1 < widest && skips < LANE_SKIP_BOUND {
+                        let lead = widths
+                            .iter()
+                            .find(|w| w.1 == widest)
+                            .expect("a widest lane exists")
+                            .2;
+                        let seed = inner.runnable.remove(lead).expect("index valid");
+                        inner.runnable.push_front(seed);
+                        self.lane_skip_run.store(skips + 1, Ordering::SeqCst);
+                        self.lane_switches.fetch_add(1, Ordering::SeqCst);
+                    } else {
+                        self.lane_skip_run.store(0, Ordering::SeqCst);
+                    }
+                }
+            } else if inner.runnable.len() == 1 {
+                self.lane_peak.fetch_max(1, Ordering::SeqCst);
             }
             if let Some(first) = inner.runnable.pop_front() {
                 inner.held.insert(first.session.id);
@@ -632,7 +744,8 @@ impl Scheduler {
     /// Return a still-running session after a chunk of steps. Honors any
     /// pending preemption mark set while the worker held it (the
     /// snapshot copy runs after the scheduler lock is released).
-    pub fn yield_back(&self, entry: Entry) {
+    pub fn yield_back(&self, mut entry: Entry) {
+        entry.session.last_ran_tick = self.now_ticks();
         let mut inner = self.inner.lock().unwrap();
         inner.held.remove(&entry.session.id);
         // the session ran a full chunk, so it is no longer starving (a
@@ -758,6 +871,11 @@ impl Scheduler {
     /// no queue and not in `admitted` — so the only shared state the
     /// copy touches is the byte-atomic pools.
     fn preempt_unlocked(&self, mut entry: Entry) {
+        // resume-cost inputs must be read before the suspend/reset
+        // mutates them: the live device footprint prices the swap round
+        // trip, the current position the recompute replay
+        let live_bytes = entry.session.bytes_used().max(entry.session.admission_bytes());
+        let replay_steps = entry.session.pos.max(1);
         // A deadline-hopeless victim under the goodput policy skips the
         // swap-out copy: host bytes and memcpy time would be spent
         // preserving progress for a request that already lost its SLO.
@@ -769,13 +887,197 @@ impl Scheduler {
         if !swapped {
             entry.session.reset_for_preemption();
         }
+        self.price_resume(&mut entry.session, live_bytes, replay_steps);
         self.preemptions.fetch_add(1, Ordering::SeqCst);
         let mut inner = self.inner.lock().unwrap();
         inner.pending_preempts -= 1;
-        inner.waiting.push_front(entry);
+        self.requeue_resume(&mut inner, entry);
         inner.unstall();
         self.try_admit(&mut inner);
         self.cv.notify_all();
+    }
+
+    /// Stamp a vacated session's modeled resume cost —
+    /// `min(`[`ServingCost::swap_roundtrip_ms`]`, `[`ServingCost::recompute_ms`]`)`
+    /// in nanoseconds of modeled serving time — plus the tick it was
+    /// vacated at, for the cost-ordered requeue's starvation age bound.
+    pub(crate) fn price_resume(&self, session: &mut Session, live_bytes: u64, replay: usize) {
+        let swap_ms = self.cost.swap_roundtrip_ms(live_bytes as f64);
+        let rec_ms = self.cost.recompute_ms(1, live_bytes as f64, replay.max(1));
+        session.resume_cost_ns = Some((swap_ms.min(rec_ms) * 1e6) as u64);
+        session.preempted_at_tick = self.now_ticks();
+    }
+
+    /// Cost-ordered resume requeue (replaces the old unconditional
+    /// `waiting.push_front`): vacated sessions form a contiguous region
+    /// at the front of the waiting line, ordered by ascending modeled
+    /// resume cost (`min(restore-bytes, recompute-steps)` serving time),
+    /// always ahead of fresh arrivals. A resume that has already waited
+    /// [`RESUME_AGE_BOUND_TICKS`] is never jumped by a cheaper one, so
+    /// an expensive fp32 restore cannot be starved by a stream of cheap
+    /// quant resumes.
+    fn requeue_resume(&self, inner: &mut Inner, entry: Entry) {
+        let my_cost = entry.session.resume_cost_ns.unwrap_or(0);
+        let now = self.now_ticks();
+        let mut idx = 0;
+        while idx < inner.waiting.len() {
+            let s = &inner.waiting[idx].session;
+            // fresh arrivals (no resume cost) end the resume region
+            let Some(c) = s.resume_cost_ns else { break };
+            let aged = now.saturating_sub(s.preempted_at_tick) >= RESUME_AGE_BOUND_TICKS;
+            if aged || c <= my_cost {
+                idx += 1;
+            } else {
+                break;
+            }
+        }
+        inner.waiting.insert(idx, entry);
+    }
+
+    /// Proactive idle swap-out sweep ([`Scheduler::set_idle_swap`]):
+    /// suspend every prefilled runnable session that no worker has
+    /// pulled for the configured number of ticks, releasing its device
+    /// bytes to the pool *before* pressure forces a preemption — so
+    /// admission and migration find free bytes instead of triggering
+    /// preemption storms. Returns the number of sessions suspended.
+    /// Swapped sessions rejoin the waiting line through the same
+    /// cost-ordered resume region as preemption victims (they hold
+    /// restorable progress), but count as `idle_swapouts`, not
+    /// preemptions. Workers call this once per batch pull; deterministic
+    /// harnesses call it explicitly.
+    pub fn sweep_idle(&self) -> usize {
+        let k = self.idle_swap_ticks.load(Ordering::SeqCst);
+        let Some(swap) = self.swap.as_ref() else { return 0 };
+        if k == 0 {
+            return 0;
+        }
+        let now = self.now_ticks();
+        let mut victims = Vec::new();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let mut i = 0;
+            while i < inner.runnable.len() {
+                let s = &inner.runnable[i].session;
+                let idle = s.prefill_done()
+                    && !s.is_suspended()
+                    && !inner.preempt_marks.contains(&s.id)
+                    && now.saturating_sub(s.last_ran_tick) >= k;
+                if idle {
+                    // detach but stay admitted until the copy succeeds;
+                    // pending_preempts keeps the "alone -> fail" path
+                    // parked while the copy runs outside the lock
+                    let e = inner.runnable.remove(i).expect("index valid");
+                    inner.pending_preempts += 1;
+                    victims.push(e);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        let mut swapped = 0;
+        for mut entry in victims {
+            let live_bytes = entry.session.bytes_used().max(entry.session.admission_bytes());
+            let replay_steps = entry.session.pos.max(1);
+            if entry.session.suspend_to(swap) {
+                swapped += 1;
+                self.idle_swapouts.fetch_add(1, Ordering::SeqCst);
+                self.price_resume(&mut entry.session, live_bytes, replay_steps);
+                entry.session.last_ran_tick = self.now_ticks();
+                let mut inner = self.inner.lock().unwrap();
+                inner.forget(entry.session.id);
+                inner.pending_preempts -= 1;
+                self.requeue_resume(&mut inner, entry);
+                inner.unstall();
+                self.try_admit(&mut inner);
+                self.cv.notify_all();
+            } else {
+                // snapshot didn't fit: put it back exactly as it was
+                // (still admitted, bytes untouched) — idle swap-out is
+                // opportunistic and must never degrade to a recompute
+                let mut inner = self.inner.lock().unwrap();
+                inner.pending_preempts -= 1;
+                entry.session.last_ran_tick = self.now_ticks();
+                inner.runnable.push_back(entry);
+                inner.unstall();
+                self.cv.notify_all();
+            }
+        }
+        swapped
+    }
+
+    /// Detach one migratable session for the router: the youngest
+    /// prefilled, unmarked runnable session (back of the queue — least
+    /// progress at risk, and the FIFO front keeps its
+    /// oldest-always-progresses guarantee). The entry leaves this
+    /// scheduler's admitted set and inflight count but still holds its
+    /// pool reservation; the router must either suspend it and
+    /// [`Scheduler::resubmit`] it elsewhere (then call
+    /// [`Scheduler::migration_release`] here so freed bytes wake
+    /// stalled sessions), or hand it back via
+    /// [`Scheduler::return_from_migration`]. `None` when nothing is
+    /// safely migratable (empty queue, mid-prefill only, or starving
+    /// sessions whose byte accounting a detach would race).
+    pub fn take_for_migration(&self) -> Option<Entry> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.starving.is_empty() {
+            return None;
+        }
+        let idx = inner.runnable.iter().rposition(|e| {
+            e.session.prefill_done() && !inner.preempt_marks.contains(&e.session.id)
+        })?;
+        let entry = inner.runnable.remove(idx).expect("index valid");
+        inner.forget(entry.session.id);
+        inner.pending_preempts += 1;
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+        Some(entry)
+    }
+
+    /// The source-side epilogue of a migration: the victim taken by
+    /// [`Scheduler::take_for_migration`] has been suspended (its device
+    /// bytes came back to this pool) and resubmitted on another
+    /// replica. Wake stalled sessions and admit against the freed
+    /// bytes.
+    pub fn migration_release(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.pending_preempts -= 1;
+        inner.unstall();
+        self.try_admit(&mut inner);
+        self.cv.notify_all();
+    }
+
+    /// Abort a migration: re-admit the untouched victim exactly where
+    /// it came from (back of runnable, still holding its reservation).
+    pub fn return_from_migration(&self, entry: Entry) {
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        let mut inner = self.inner.lock().unwrap();
+        inner.pending_preempts -= 1;
+        let seq = inner.next_admit_seq;
+        inner.next_admit_seq += 1;
+        inner.admitted.insert(entry.session.id, seq);
+        inner.runnable.push_back(entry);
+        self.cv.notify_all();
+    }
+
+    /// Point-in-time per-`BatchKey` lane occupancy over the runnable
+    /// queue, front-to-back — the router's least-loaded-lane placement
+    /// input.
+    pub fn lane_occupancy(&self) -> Vec<(BatchKey, usize)> {
+        let inner = self.inner.lock().unwrap();
+        let mut widths: Vec<(BatchKey, usize)> = Vec::new();
+        for e in inner.runnable.iter().chain(inner.stalled.iter()) {
+            let k = e.session.compat_key();
+            match widths.iter_mut().find(|(wk, _)| *wk == k) {
+                Some((_, n)) => *n += 1,
+                None => widths.push((k, 1)),
+            }
+        }
+        widths
+    }
+
+    /// Total sessions queued or admitted (the router's load tiebreak).
+    pub fn load(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.waiting.len() + inner.runnable.len() + inner.stalled.len() + inner.held.len()
     }
 
     /// Goodput-mode preemption choice: among admitted sessions younger
@@ -953,6 +1255,17 @@ impl Scheduler {
             .chain(inner.stalled.iter())
             .filter(|e| !e.session.prefill_done())
             .count();
+        // distinct per-`BatchKey` runnable lanes right now (gauge)
+        let lanes = {
+            let mut keys: Vec<BatchKey> = Vec::new();
+            for e in inner.runnable.iter() {
+                let k = e.session.compat_key();
+                if !keys.contains(&k) {
+                    keys.push(k);
+                }
+            }
+            keys.len()
+        };
         SchedSnapshot {
             pool_capacity: self.pool.capacity(),
             pool_used: self.pool.used(),
@@ -1008,6 +1321,16 @@ impl Scheduler {
             goodput: self.goodput.load(Ordering::SeqCst),
             slo_violations: self.slo_violations.load(Ordering::SeqCst),
             slo_classes,
+            lanes,
+            lane_peak: self.lane_peak.load(Ordering::SeqCst),
+            lane_switches: self.lane_switches.load(Ordering::SeqCst),
+            idle_swapouts: self.idle_swapouts.load(Ordering::SeqCst),
+            // replica-fleet counters live on the router; a bare
+            // scheduler is a one-replica fleet that never migrates
+            replicas: 1,
+            migrations: 0,
+            migration_bytes: 0,
+            migration_ns: 0,
         }
     }
 }
@@ -1756,5 +2079,130 @@ mod tests {
         assert_eq!(snap.rejections, 0, "no request failed out of the storm");
         assert!(snap.preemptions >= 1, "the storm actually preempted");
         assert!(snap.pool_peak <= snap.pool_capacity);
+    }
+
+    /// Cost-ordered resume requeue (satellite of ISSUE 9): vacated
+    /// sessions form a contiguous front region of the waiting line
+    /// ordered by ascending modeled resume cost, a resume older than
+    /// [`RESUME_AGE_BOUND_TICKS`] is never jumped by a cheaper one, and
+    /// fresh arrivals always queue behind the whole region.
+    #[test]
+    fn resume_requeue_orders_by_cost_with_age_bound() {
+        let cfg = tiny_cfg();
+        let man = tiny_manifest();
+        // zero-capacity pool: nothing ever admits, so the waiting line
+        // keeps exactly the order the requeue chose
+        let pool = Arc::new(BlockPool::new(0));
+        let sched = Scheduler::new(Arc::clone(&pool));
+        sched.drive_clock(1);
+        let (tx, _rx) = mpsc::channel();
+        // fresh arrival: ends the resume region, must stay last throughout
+        sched.submit(mk_session(10, &cfg, &man, &pool), tx.clone());
+        // expensive resume, vacated at tick 1 (it will age below)
+        let mut a = mk_session(1, &cfg, &man, &pool);
+        a.resume_cost_ns = Some(500_000);
+        a.preempted_at_tick = 1;
+        sched.resubmit(a, tx.clone());
+        sched.drive_clock(1 + RESUME_AGE_BOUND_TICKS);
+        // a cheap resume arriving after the bound may not jump aged A
+        let mut b = mk_session(2, &cfg, &man, &pool);
+        b.resume_cost_ns = Some(100_000);
+        b.preempted_at_tick = sched.now_ticks();
+        sched.resubmit(b, tx.clone());
+        // a mid-cost resume sorts behind the cheaper fresh-aged B
+        let mut c = mk_session(3, &cfg, &man, &pool);
+        c.resume_cost_ns = Some(300_000);
+        c.preempted_at_tick = sched.now_ticks();
+        sched.resubmit(c, tx.clone());
+        // the cheapest resume jumps B and C but still not aged A
+        let mut d = mk_session(4, &cfg, &man, &pool);
+        d.resume_cost_ns = Some(10_000);
+        d.preempted_at_tick = sched.now_ticks();
+        sched.resubmit(d, tx.clone());
+        let ids: Vec<u64> = {
+            let inner = sched.inner.lock().unwrap();
+            inner.waiting.iter().map(|e| e.session.id).collect()
+        };
+        assert_eq!(
+            ids,
+            vec![1, 4, 2, 3, 10],
+            "aged-first, then ascending cost, fresh arrival last"
+        );
+        sched.shutdown();
+    }
+
+    /// Admission clears the resume-cost stamp, so a session that cycles
+    /// through admit -> vacate re-enters the region with fresh pricing
+    /// (and an admitted session never reads a stale stamp).
+    #[test]
+    fn admission_clears_resume_cost_stamp() {
+        let cfg = tiny_cfg();
+        let man = tiny_manifest();
+        let pool = Arc::new(BlockPool::new(u64::MAX / 2));
+        let sched = Scheduler::new(Arc::clone(&pool));
+        sched.drive_clock(1);
+        let (tx, _rx) = mpsc::channel();
+        let mut s = mk_session(1, &cfg, &man, &pool);
+        s.resume_cost_ns = Some(123);
+        sched.resubmit(s, tx);
+        let e = sched.next().expect("admitted");
+        assert_eq!(e.session.resume_cost_ns, None, "stamp cleared on grant");
+        sched.shutdown();
+    }
+
+    /// Proactive idle swap-out (satellite of ISSUE 9): a prefilled
+    /// runnable session untouched for the configured ticks is suspended
+    /// to the swap pool by the sweep — counted as `idle_swapouts`, not a
+    /// preemption — while busier sessions and already-suspended ones are
+    /// left alone, and the victim resumes bit-accurately off the
+    /// snapshot.
+    #[test]
+    fn idle_sweep_suspends_stale_runnables() {
+        let cfg = tiny_cfg();
+        let man = tiny_manifest();
+        let pool = Arc::new(BlockPool::new(u64::MAX / 2));
+        let swap = Arc::new(SwapPool::new(64 << 20));
+        let sched = Scheduler::with_swap(Arc::clone(&pool), Some(Arc::clone(&swap)));
+        sched.drive_clock(10);
+        let (tx, _rx) = mpsc::channel();
+        sched.submit(mk_session(1, &cfg, &man, &pool), tx.clone());
+        sched.submit(mk_session(2, &cfg, &man, &pool), tx.clone());
+        let mut a = sched.next().expect("runnable");
+        let mut b = sched.next().expect("runnable");
+        assert_eq!((a.session.id, b.session.id), (1, 2));
+        a.session.test_fake_prefill();
+        b.session.test_fake_prefill();
+        let a_bytes = a.session.bytes_used();
+        sched.yield_back(a); // last ran at tick 10
+        assert_eq!(sched.sweep_idle(), 0, "sweep is off by default");
+        sched.set_idle_swap(5);
+        sched.drive_clock(14);
+        sched.yield_back(b); // last ran at tick 14
+        assert_eq!(sched.sweep_idle(), 0, "nothing has sat idle 5 ticks yet");
+        sched.drive_clock(16);
+        assert_eq!(sched.sweep_idle(), 1, "only the tick-10 session is idle");
+        let snap = sched.snapshot();
+        assert_eq!(snap.idle_swapouts, 1);
+        assert_eq!(snap.preemptions, 0, "idle swap-out is not a preemption");
+        assert_eq!(snap.swap_outs, 1);
+        assert!(snap.swap_used > 0, "snapshot charged to the swap pool");
+        sched.drive_clock(22);
+        assert_eq!(sched.sweep_idle(), 1, "second session idle now; suspended one skipped");
+        assert_eq!(sched.snapshot().idle_swapouts, 2);
+        // the pool is effectively unbounded, so both victims re-admitted
+        // immediately; the first one resumes with zero recompute resets
+        let mut e = loop {
+            let e = sched.next().expect("runnable");
+            if e.session.id == 1 {
+                break e;
+            }
+            sched.yield_back(e);
+        };
+        assert!(e.session.is_suspended());
+        e.session.resume_from_swap().unwrap();
+        assert_eq!(e.session.preemptions, 0, "never reset for recompute");
+        assert_eq!(e.session.bytes_used(), a_bytes, "bit-accurate restore");
+        assert_eq!(e.session.pos, man.model.prefill_len);
+        sched.shutdown();
     }
 }

@@ -329,6 +329,25 @@ pub struct Session {
     pool: Option<Arc<BlockPool>>,
     /// Bytes currently held in the pool on this session's behalf.
     reserved_bytes: u64,
+    /// Modeled resume cost in nanoseconds of serving time
+    /// (`min(swap restore, recompute replay)`), stamped by the
+    /// scheduler when the session is vacated with restorable progress;
+    /// `None` for fresh arrivals. Orders the waiting line's resume
+    /// region; cleared on (re)admission.
+    pub(crate) resume_cost_ns: Option<u64>,
+    /// Scheduler tick this session was last vacated at (the resume
+    /// ordering's starvation age bound reads it).
+    pub(crate) preempted_at_tick: u64,
+    /// Scheduler tick this session last ran (or was submitted) — the
+    /// proactive idle swap-out sweep compares it against `now`.
+    pub(crate) last_ran_tick: u64,
+    /// Streaming sink: one frame of newly generated tokens per chunk
+    /// boundary. The channel is **bounded** — a slow consumer applies
+    /// backpressure to the decode worker at chunk granularity.
+    pub(crate) stream_tx: Option<std::sync::mpsc::SyncSender<Vec<i32>>>,
+    /// Tokens already emitted to `stream_tx`; survives recompute
+    /// preemption so a bit-identical replay never re-sends a frame.
+    pub(crate) streamed_tokens: usize,
 }
 
 impl Session {
@@ -374,10 +393,16 @@ impl Session {
         let policy_label = probe.policy_name();
         drop(probe);
         // the attachment holds a reference, so a matched prefix stays
-        // resident from admission pricing through prefill
+        // resident from admission pricing through prefill; CoW
+        // privatization must charge *this session's* pool, which under
+        // a fleet-global index is not the index's own pool
         let prefix_att = prefix
             .as_ref()
-            .and_then(|idx| idx.attach(&prompt, prefix_geom, manifest.model.prefill_len));
+            .and_then(|idx| idx.attach(&prompt, prefix_geom, manifest.model.prefill_len))
+            .map(|att| match &pool {
+                Some(p) => att.rebind_charge(Arc::clone(p)),
+                None => att,
+            });
         Ok(Session {
             id,
             prompt,
@@ -413,7 +438,65 @@ impl Session {
             manifest: manifest.clone(),
             pool,
             reserved_bytes: 0,
+            resume_cost_ns: None,
+            preempted_at_tick: 0,
+            last_ran_tick: 0,
+            stream_tx: None,
+            streamed_tokens: 0,
         })
+    }
+
+    /// Price the batched-decode compatibility key for a config/manifest
+    /// pair without constructing a session — the router's placement
+    /// probe (side-effect free: no pool charge, no prefix attach).
+    pub fn probe_key(cfg: &ServeConfig, manifest: &crate::model::Manifest) -> Result<BatchKey> {
+        Ok(build_backend(cfg, manifest)?.compat_key())
+    }
+
+    /// Attach a streaming sink: every chunk boundary flushes the tokens
+    /// generated since the last flush as one frame.
+    pub fn set_stream(&mut self, tx: std::sync::mpsc::SyncSender<Vec<i32>>) {
+        self.stream_tx = Some(tx);
+    }
+
+    /// Emit tokens generated since the last flush to the streaming sink
+    /// (no-op without one). Blocks when the bounded channel is full —
+    /// per-connection backpressure, surfaced to the decode worker at
+    /// chunk granularity. A disconnected consumer drops the sink so a
+    /// dead client cannot stall the batch again.
+    pub fn flush_stream(&mut self) {
+        let Some(tx) = self.stream_tx.as_ref() else { return };
+        if self.tokens.len() <= self.streamed_tokens {
+            return;
+        }
+        let frame = self.tokens[self.streamed_tokens..].to_vec();
+        let n = frame.len();
+        if tx.send(frame).is_err() {
+            self.stream_tx = None;
+            return;
+        }
+        self.streamed_tokens += n;
+    }
+
+    /// Rebind a **suspended** session to another replica's pool and the
+    /// (fleet-shared) prefix index — the device-side half of live
+    /// migration. Legal only while the session holds no pool bytes
+    /// (post-`suspend_to`: the reservation was released to the source
+    /// pool, the host snapshot's bytes stay charged to the source swap
+    /// pool it rides in). Any prefix attachment is re-created so later
+    /// CoW privatization charges the *destination* pool.
+    pub(crate) fn rebind_for_migration(
+        &mut self,
+        pool: Arc<BlockPool>,
+        prefix: Option<Arc<PrefixIndex>>,
+    ) {
+        debug_assert!(self.suspended.is_some(), "only suspended sessions migrate");
+        debug_assert_eq!(self.reserved_bytes, 0, "migrating session must hold no pool bytes");
+        if let Some(att) = self.prefix_att.take() {
+            self.prefix_att = Some(att.rebind_charge(Arc::clone(&pool)));
+        }
+        self.pool = Some(pool);
+        self.prefix_index = prefix;
     }
 
     fn ensure_backend(&mut self) -> Result<()> {
@@ -498,6 +581,12 @@ impl Session {
     /// True while this session's cache lives in the host swap pool.
     pub fn is_suspended(&self) -> bool {
         self.suspended.is_some()
+    }
+
+    /// Device bytes of the suspended snapshot (what a migration moves);
+    /// `None` while running.
+    pub fn suspended_bytes(&self) -> Option<u64> {
+        self.suspended.as_ref().map(|s| s.snap.device_bytes)
     }
 
     /// Batched-decode compatibility key: sessions with equal keys run
@@ -794,8 +883,12 @@ impl Session {
                     // second-chance lookup: a sharer submitted before us
                     // may have published between admission and now
                     if let Some(idx) = &self.prefix_index {
-                        self.prefix_att =
-                            idx.attach_quiet(&self.prompt, self.prefix_geom, p_len);
+                        self.prefix_att = idx
+                            .attach_quiet(&self.prompt, self.prefix_geom, p_len)
+                            .map(|att| match &self.pool {
+                                Some(p) => att.rebind_charge(Arc::clone(p)),
+                                None => att,
+                            });
                     }
                 }
                 let backend = self.backend.as_mut().expect("backend built above");
@@ -837,7 +930,12 @@ impl Session {
                         {
                             // the publisher shares its own prefix too:
                             // the residency charge moves to the index
-                            // and this session pays its delta
+                            // and this session pays its delta (CoW, if
+                            // it comes, charges the session's pool)
+                            let att = match &self.pool {
+                                Some(p) => att.rebind_charge(Arc::clone(p)),
+                                None => att,
+                            };
                             backend.reattach_prefix(Arc::clone(&att));
                             self.prefix_att = Some(att);
                         }

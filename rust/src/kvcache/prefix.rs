@@ -171,6 +171,13 @@ pub struct AttachedPrefix {
     cow_reserved: AtomicU64,
     /// Guards the single refcount drop (privatize vs handle drop).
     detached: AtomicBool,
+    /// The pool CoW privatization charges: the **owning session's**
+    /// pool. With a per-scheduler index this is the index's own pool;
+    /// with a fleet-global index it is the session's replica pool —
+    /// charging `index.pool` there would leak the private copy's bytes
+    /// into the fleet pool while the session's own accounting released
+    /// them to its replica pool.
+    charge: Arc<BlockPool>,
 }
 
 impl AttachedPrefix {
@@ -213,7 +220,7 @@ impl AttachedPrefix {
         if self.privatized.load(Ordering::SeqCst) {
             return true;
         }
-        if !self.index.pool.reserve(self.bytes) {
+        if !self.charge.reserve(self.bytes) {
             self.index.cow_denied.fetch_add(1, Ordering::SeqCst);
             return false;
         }
@@ -222,6 +229,41 @@ impl AttachedPrefix {
         self.release_ref();
         self.index.cow_faults.fetch_add(1, Ordering::SeqCst);
         true
+    }
+
+    /// A fresh handle on the same shared entry whose CoW bytes charge
+    /// `pool` instead of this handle's pool — sessions on replica pools
+    /// (and migrating sessions changing replicas) re-anchor their
+    /// attachment with this. Preserves privatization/CoW state; an
+    /// active handle bumps the shared refcount for the new handle (the
+    /// old one releases its reference when dropped, so the entry's
+    /// count never dips — reclaim can never race the swap). Returns the
+    /// same handle when the charge pool already matches.
+    pub fn rebind_charge(self: &Arc<Self>, pool: Arc<BlockPool>) -> Arc<AttachedPrefix> {
+        if Arc::ptr_eq(&self.charge, &pool) {
+            return Arc::clone(self);
+        }
+        let active = self.is_active();
+        if active {
+            // bump-before-release: the old handle still holds its ref,
+            // so the count stays >= 1 throughout and reclaim (which only
+            // touches zero-ref entries, under the trie lock) is safe
+            self.shared.refs.fetch_add(1, Ordering::SeqCst);
+        }
+        Arc::new(AttachedPrefix {
+            shared: Arc::clone(&self.shared),
+            index: Arc::clone(&self.index),
+            attach_len: self.attach_len,
+            bytes: self.bytes,
+            privatized: AtomicBool::new(!active),
+            cow_reserved: AtomicU64::new({
+                let moved = self.cow_reserved.swap(0, Ordering::SeqCst);
+                debug_assert_eq!(moved, 0, "rebind with undrained CoW bytes crosses pools");
+                moved
+            }),
+            detached: AtomicBool::new(!active),
+            charge: pool,
+        })
     }
 
     /// Count this attach as served by **aliasing** the resident payload
@@ -442,6 +484,7 @@ impl PrefixIndex {
             privatized: AtomicBool::new(false),
             cow_reserved: AtomicU64::new(0),
             detached: AtomicBool::new(false),
+            charge: Arc::clone(&self.pool),
         }))
     }
 
@@ -491,6 +534,7 @@ impl PrefixIndex {
                     privatized: AtomicBool::new(false),
                     cow_reserved: AtomicU64::new(0),
                     detached: AtomicBool::new(false),
+                    charge: Arc::clone(&self.pool),
                 }));
             }
         }
@@ -527,6 +571,7 @@ impl PrefixIndex {
             privatized: AtomicBool::new(false),
             cow_reserved: AtomicU64::new(0),
             detached: AtomicBool::new(false),
+            charge: Arc::clone(&self.pool),
         }))
     }
 
@@ -765,5 +810,116 @@ mod tests {
         let s = idx.stats();
         assert_eq!(s.alias_hits, 2);
         assert_eq!(s.alias_bytes, 192);
+    }
+
+    /// Fleet-global index regression (ISSUE 9 bugfix): a session on a
+    /// replica pool re-anchors its attachment with `rebind_charge`, and
+    /// its CoW privatization then charges the **replica** pool — not the
+    /// fleet pool the index accounts residency against. The rebind's
+    /// bump-before-release keeps the shared refcount >= 1 throughout, so
+    /// reclaim can never take the entry out from under the swap.
+    #[test]
+    fn rebind_charge_moves_cow_to_replica_pool() {
+        let g = geom();
+        let fleet = Arc::new(BlockPool::new(1 << 30));
+        let replica = Arc::new(BlockPool::new(1 << 30));
+        let idx = PrefixIndex::new(Arc::clone(&fleet), 8);
+        let tokens: Vec<i32> = (0..8).collect();
+        drop(idx.publish(&tokens, g, payload(8, &g)).expect("publish"));
+        let residency = g.bytes_for(8);
+        assert_eq!(fleet.used(), residency, "residency on the fleet pool");
+
+        let att = idx.attach(&tokens, g, 32).expect("hit");
+        // same-pool rebind is a no-op returning the same handle
+        let same = att.rebind_charge(Arc::clone(&fleet));
+        assert!(Arc::ptr_eq(&att, &same));
+        drop(same);
+        let moved = att.rebind_charge(Arc::clone(&replica));
+        assert!(moved.is_active(), "rebind preserves the shared state");
+        // both handles alive: refcount covers them, nothing reclaimable
+        assert_eq!(idx.reclaim_unreferenced(u64::MAX), 0);
+        drop(att);
+        assert_eq!(idx.reclaim_unreferenced(u64::MAX), 0, "new handle still holds a ref");
+
+        assert!(moved.try_privatize(), "replica pool has room");
+        assert_eq!(moved.take_cow_reserved(), residency);
+        assert_eq!(replica.used(), residency, "CoW charged the replica pool");
+        assert_eq!(fleet.used(), residency, "fleet pool holds residency only");
+        assert_eq!(idx.stats().cow_faults, 1);
+
+        // privatization dropped the last ref: residency reclaims from
+        // the fleet pool, and the replica charge is untouched
+        drop(moved);
+        assert_eq!(idx.reclaim_unreferenced(u64::MAX), residency);
+        assert_eq!(fleet.used(), 0);
+        assert_eq!(replica.used(), residency);
+    }
+
+    /// Concurrency regression (ISSUE 9 bugfix): replica threads hammer
+    /// attach -> rebind-to-own-pool -> (sometimes) privatize -> drop
+    /// while a reclaimer loops over the index. No referenced entry may
+    /// ever be reclaimed mid-use, and at quiescence every book balances:
+    /// fleet pool == resident gauge, replica pools fully drained.
+    #[test]
+    fn concurrent_attach_reclaim_across_replica_pools() {
+        let g = geom();
+        let fleet = Arc::new(BlockPool::new(1 << 30));
+        let idx = PrefixIndex::new(Arc::clone(&fleet), 8);
+        let streams: Vec<Vec<i32>> = (0..4).map(|s| (s * 100..s * 100 + 8).collect()).collect();
+        for s in &streams {
+            drop(idx.publish(s, g, payload(8, &g)).expect("publish"));
+        }
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            for t in 0..3usize {
+                let idx = &idx;
+                let streams = &streams;
+                scope.spawn(move || {
+                    let replica = Arc::new(BlockPool::new(1 << 30));
+                    for i in 0..400usize {
+                        let tokens = &streams[(t + i) % streams.len()];
+                        // entries race the reclaimer, so a miss is legal;
+                        // an attached handle must stay fully usable
+                        let Some(att) = idx.attach(tokens, g, 32) else { continue };
+                        let mine = att.rebind_charge(Arc::clone(&replica));
+                        drop(att);
+                        assert_eq!(mine.attach_len(), 8);
+                        assert_eq!(mine.payload().full_len(), 8, "payload gone mid-use");
+                        if i % 3 == 0 && mine.try_privatize() {
+                            // drain the CoW reserve the way Session does,
+                            // then release it so the books can balance
+                            let b = mine.take_cow_reserved();
+                            assert_eq!(b, g.bytes_for(8));
+                            replica.release(b);
+                        }
+                        drop(mine);
+                    }
+                    assert_eq!(replica.used(), 0, "replica pool drained");
+                });
+            }
+            scope.spawn(|| {
+                while !stop.load(Ordering::SeqCst) {
+                    idx.reclaim_unreferenced(1);
+                    std::thread::yield_now();
+                }
+            });
+            // republisher keeps reclaimed streams resident so attachers
+            // make progress for the whole run
+            for _ in 0..200usize {
+                for s in &streams {
+                    if let Some(att) = idx.publish(s, g, payload(8, &g)) {
+                        drop(att);
+                    }
+                }
+                std::thread::yield_now();
+            }
+            stop.store(true, Ordering::SeqCst);
+        });
+        idx.reclaim_unreferenced(u64::MAX);
+        let s = idx.stats();
+        assert_eq!(s.resident_entries, 0, "everything unreferenced reclaims");
+        assert_eq!(s.resident_bytes, 0);
+        assert_eq!(fleet.used(), 0, "fleet pool balanced after the storm");
+        assert_eq!(s.cow_denied, 0, "replica pools never ran out");
     }
 }

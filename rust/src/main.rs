@@ -80,7 +80,14 @@ USAGE: thinkv <cmd> [--flags]
   (including Crystal-KV answer-first retention and SkipKV selective
   never-materialize), independent of --mode; per-request output and
   stats then report the policy name with its evicted / skipped /
-  retained-bytes counters."
+  retained-bytes counters. --replicas N serves from a fleet of N
+  scheduler replicas behind a router (--pool-mb / --swap-mb / --workers
+  are per replica): new sessions place on the least-loaded lane and the
+  router live-migrates suspended snapshots off hot replicas — stats
+  gain replicas / migrations / migration_bytes / lane counters.
+  --idle-swap-ticks K proactively suspends sessions idle for K
+  scheduler ticks to the swap pool (needs --swap-mb) so admission and
+  migration find free bytes before preemption storms hit."
     );
 }
 
@@ -117,6 +124,11 @@ fn serve_config(args: &Args) -> ServeConfig {
         }
         p
     });
+    // --replicas N runs a fleet of N independent scheduler replicas
+    // behind a router (pool/swap/workers are per replica); sessions are
+    // live-migrated off hot replicas. --idle-swap-ticks K proactively
+    // suspends sessions idle >= K scheduler ticks to the swap pool.
+    let idle_swap = args.u64_or("idle-swap-ticks", 0);
     ServeConfig {
         mode,
         policy,
@@ -134,6 +146,8 @@ fn serve_config(args: &Args) -> ServeConfig {
         slo_class: slo_class.as_ref().map(|c| c.name.to_string()),
         slo: slo_class.map(|c| c.slo).unwrap_or_default(),
         slo_aware: args.bool("slo-aware"),
+        replicas: args.usize_or("replicas", 1),
+        idle_swap_ticks: (idle_swap > 0).then_some(idle_swap),
         ..ServeConfig::default()
     }
 }

@@ -310,6 +310,28 @@ pub struct SchedSnapshot {
     /// Per-tenant-class scoreboards, in first-termination order (empty
     /// until a classed session finishes).
     pub slo_classes: Vec<SloClassSnap>,
+    /// Gauge: distinct `BatchKey` lanes among runnable sessions at
+    /// snapshot time (0 = empty queue, 1 = homogeneous).
+    pub lanes: usize,
+    /// High-water mark of the widest runnable lane ever observed by
+    /// batch formation.
+    pub lane_peak: u64,
+    /// Times batch formation rotated a wider lane ahead of a narrower
+    /// front lane (bounded by the anti-starvation skip limit).
+    pub lane_switches: u64,
+    /// Sessions proactively suspended to host after sitting idle for
+    /// `--idle-swap-ticks` scheduler ticks (0 when the flag is off).
+    pub idle_swapouts: u64,
+    /// Replicas merged into this snapshot (1 = a single scheduler; the
+    /// router stamps the fleet width on merged views).
+    pub replicas: usize,
+    /// Live migrations completed: victim suspended on one replica and
+    /// resumed on another with zero recompute steps.
+    pub migrations: u64,
+    /// Snapshot bytes moved across replicas by those migrations.
+    pub migration_bytes: u64,
+    /// Cumulative wall time spent inside migration suspend+resume.
+    pub migration_ns: u64,
 }
 
 impl SchedSnapshot {
@@ -377,7 +399,96 @@ impl SchedSnapshot {
         j.set("goodput", Json::Num(self.goodput as f64));
         j.set("slo_violations", Json::Num(self.slo_violations as f64));
         j.set("slo_classes", Json::Arr(self.slo_classes.iter().map(|c| c.to_json()).collect()));
+        j.set("lanes", Json::Num(self.lanes as f64));
+        j.set("lane_peak", Json::Num(self.lane_peak as f64));
+        j.set("lane_switches", Json::Num(self.lane_switches as f64));
+        j.set("idle_swapouts", Json::Num(self.idle_swapouts as f64));
+        j.set("replicas", Json::Num(self.replicas as f64));
+        j.set("migrations", Json::Num(self.migrations as f64));
+        j.set("migration_bytes", Json::Num(self.migration_bytes as f64));
+        j.set("migration_ms", Json::Num(self.migration_ns as f64 / 1e6));
         j
+    }
+
+    /// Fleet-merged view: fold another replica's snapshot into this one.
+    ///
+    /// Counters and pool/swap gauges sum; the batch histogram merges
+    /// element-wise; boolean config flags OR; `lane_peak` takes the max.
+    /// Prefix counters are **not** summed — with a fleet-global
+    /// [`crate::kvcache::PrefixIndex`] every replica reports the same
+    /// shared books, so the caller keeps the first replica's values.
+    /// Per-class SLO scoreboards merge by class name (counts sum,
+    /// percentiles take the element-wise max — a conservative fleet
+    /// tail estimate without re-deriving the underlying samples).
+    pub fn merge_replica(&mut self, other: &SchedSnapshot) {
+        self.pool_capacity += other.pool_capacity;
+        self.pool_used += other.pool_used;
+        self.pool_peak += other.pool_peak;
+        self.pool_free += other.pool_free;
+        self.admissions += other.admissions;
+        self.preemptions += other.preemptions;
+        self.completions += other.completions;
+        self.rejections += other.rejections;
+        self.queue_depth += other.queue_depth;
+        self.running += other.running;
+        self.inflight += other.inflight;
+        self.fused_steps += other.fused_steps;
+        self.fused_sessions += other.fused_sessions;
+        if self.batch_hist.len() < other.batch_hist.len() {
+            self.batch_hist.resize(other.batch_hist.len(), 0);
+        }
+        for (i, &n) in other.batch_hist.iter().enumerate() {
+            self.batch_hist[i] += n;
+        }
+        self.prefill_chunk_tokens = self.prefill_chunk_tokens.max(other.prefill_chunk_tokens);
+        self.prefill_chunks += other.prefill_chunks;
+        self.prefill_interleaved_steps += other.prefill_interleaved_steps;
+        self.prefill_queue_depth += other.prefill_queue_depth;
+        self.swap_capacity += other.swap_capacity;
+        self.swap_used += other.swap_used;
+        self.swap_peak += other.swap_peak;
+        self.swap_outs += other.swap_outs;
+        self.swap_ins += other.swap_ins;
+        self.swap_bytes_out += other.swap_bytes_out;
+        self.swap_bytes_in += other.swap_bytes_in;
+        self.swap_restore_ns += other.swap_restore_ns;
+        self.swap_fallbacks += other.swap_fallbacks;
+        self.prefix_enabled |= other.prefix_enabled;
+        self.pjrt_decode_executes += other.pjrt_decode_executes;
+        self.pjrt_prefill_executes += other.pjrt_prefill_executes;
+        self.pjrt_fallback_executes += other.pjrt_fallback_executes;
+        self.prefill_memo_hits += other.prefill_memo_hits;
+        self.prefill_memo_evictions += other.prefill_memo_evictions;
+        if self.policy.is_empty() {
+            self.policy = other.policy.clone();
+        }
+        self.policy_evictions += other.policy_evictions;
+        self.policy_skips += other.policy_skips;
+        self.policy_retained_bytes += other.policy_retained_bytes;
+        self.sched_policy_goodput |= other.sched_policy_goodput;
+        self.goodput += other.goodput;
+        self.slo_violations += other.slo_violations;
+        for oc in &other.slo_classes {
+            match self.slo_classes.iter_mut().find(|c| c.name == oc.name) {
+                Some(c) => {
+                    c.goodput += oc.goodput;
+                    c.violations += oc.violations;
+                    c.ttft_p50 = c.ttft_p50.max(oc.ttft_p50);
+                    c.ttft_p99 = c.ttft_p99.max(oc.ttft_p99);
+                    c.tpot_p50_milli = c.tpot_p50_milli.max(oc.tpot_p50_milli);
+                    c.tpot_p99_milli = c.tpot_p99_milli.max(oc.tpot_p99_milli);
+                }
+                None => self.slo_classes.push(oc.clone()),
+            }
+        }
+        self.lanes += other.lanes;
+        self.lane_peak = self.lane_peak.max(other.lane_peak);
+        self.lane_switches += other.lane_switches;
+        self.idle_swapouts += other.idle_swapouts;
+        self.replicas += other.replicas;
+        self.migrations += other.migrations;
+        self.migration_bytes += other.migration_bytes;
+        self.migration_ns += other.migration_ns;
     }
 
     /// One-line human summary for CLI output (plus a swap line when
@@ -461,6 +572,21 @@ impl SchedSnapshot {
                     c.tpot_p99_milli
                 ));
             }
+        }
+        if self.lane_peak > 0 {
+            s.push_str(&format!(
+                "\nlanes: {} live (peak width {}), {} switches, {} idle swap-outs",
+                self.lanes, self.lane_peak, self.lane_switches, self.idle_swapouts
+            ));
+        }
+        if self.replicas > 1 || self.migrations > 0 {
+            s.push_str(&format!(
+                "\nfleet: {} replicas, {} migrations ({} B moved, {:.2} ms)",
+                self.replicas,
+                self.migrations,
+                self.migration_bytes,
+                self.migration_ns as f64 / 1e6
+            ));
         }
         if self.prefix_enabled {
             s.push_str(&format!(

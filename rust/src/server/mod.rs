@@ -6,6 +6,19 @@
 //!       "total_ms": 450.0, "avg_bits": 4.4}
 //! plus {"cmd": "stats"} / {"cmd": "shutdown"} control lines.
 //!
+//! Adding `"stream": true` to a request switches it to streaming: the
+//! server emits one `{"id": ..., "stream": true, "tokens": [...]}`
+//! frame per decode chunk (the tokens generated since the previous
+//! frame), then the usual full reply with `"done": true`. Frames ride a
+//! bounded per-request channel, so a slow TCP peer backpressures only
+//! its own session's decode worker at chunk granularity.
+//!
+//! With `--replicas N` the coordinator runs a replica fleet behind a
+//! router; `stats` then reports the fleet-merged snapshot — per-lane
+//! occupancy (`lanes`/`lane_peak`/`lane_switches`), proactive
+//! `idle_swapouts`, and the live-migration ledger
+//! (`replicas`/`migrations`/`migration_bytes`/`migration_ms`).
+//!
 //! Malformed request lines never kill the connection: the server replies
 //! `{"id": ..., "error": "..."}` (id `null` when the line did not parse)
 //! and keeps reading. `stats` reports the scheduler/pool counters
@@ -203,9 +216,37 @@ fn handle_conn(
                 continue;
             }
         };
+        let streaming = req.get("stream").and_then(Json::as_bool).unwrap_or(false);
         // a failed submit (e.g. demand exceeds the pool) or a dropped
         // session is a per-request error, not a connection error
-        let result = match coordinator.submit(prompt).and_then(|h| h.wait()) {
+        let result = if streaming {
+            // streaming mode: one line-JSON frame per decode chunk. The
+            // bounded channel is the per-connection backpressure — a
+            // slow TCP peer fills it and stalls only this session's
+            // decode worker, never the accept loop or other batches.
+            let (ftx, frx) = std::sync::mpsc::sync_channel::<Vec<i32>>(8);
+            match coordinator.submit_with_stream(prompt, ftx) {
+                Ok(handle) => {
+                    // forward frames until the session drops its sender
+                    // (finish or failure), then the final reply follows
+                    for frame in frx.iter() {
+                        let mut f = Json::obj();
+                        f.set("id", req_id.clone());
+                        f.set("stream", Json::Bool(true));
+                        f.set(
+                            "tokens",
+                            Json::Arr(frame.iter().map(|&t| Json::Num(t as f64)).collect()),
+                        );
+                        writeln!(writer, "{}", f.to_string())?;
+                    }
+                    handle.wait()
+                }
+                Err(e) => Err(e),
+            }
+        } else {
+            coordinator.submit(prompt).and_then(|h| h.wait())
+        };
+        let result = match result {
             Ok(r) => r,
             Err(e) => {
                 let mut err = Json::obj();
@@ -218,6 +259,10 @@ fn handle_conn(
         served.fetch_add(1, Ordering::SeqCst);
         let mut out = Json::obj();
         out.set("id", req_id);
+        if streaming {
+            // lets a streaming client tell the final reply from frames
+            out.set("done", Json::Bool(true));
+        }
         out.set(
             "tokens",
             Json::Arr(result.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
@@ -291,6 +336,38 @@ impl Client {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+    }
+
+    /// Streaming request: returns the per-chunk token frames in arrival
+    /// order plus the final reply object (`"done": true`). The
+    /// concatenated frames equal the final reply's `tokens` array.
+    pub fn request_stream(&mut self, prompt: &[i32], id: u64) -> Result<(Vec<Vec<i32>>, Json)> {
+        let mut req = Json::obj();
+        req.set(
+            "prompt",
+            Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()),
+        );
+        req.set("id", Json::Num(id as f64));
+        req.set("stream", Json::Bool(true));
+        writeln!(self.writer, "{}", req.to_string())?;
+        let mut frames = Vec::new();
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                anyhow::bail!("server closed mid-stream");
+            }
+            let j = parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+            if j.get("stream").and_then(Json::as_bool).unwrap_or(false) {
+                let frame = j
+                    .get("tokens")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(|x| x.as_f64().map(|v| v as i32)).collect())
+                    .unwrap_or_default();
+                frames.push(frame);
+            } else {
+                return Ok((frames, j));
+            }
+        }
     }
 
     pub fn stats(&mut self) -> Result<Json> {

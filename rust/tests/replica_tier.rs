@@ -1,0 +1,309 @@
+//! Multi-replica serving tier (ISSUE 9), artifact-free.
+//!
+//! Three bars:
+//!
+//! * **Differential** — a 1-replica `Router` must be byte-identical to
+//!   the legacy single `Scheduler`: same per-request token streams,
+//!   bit-equal `SchedSnapshot` (counters, gauges, histograms).
+//! * **Live migration (deterministic acceptance)** — suspend a session
+//!   mid-decode on a hot replica, resume it on a cold one: the token
+//!   stream is bit-identical to a standalone reference, zero recompute
+//!   steps are paid, the SLO submission stamp survives the move, and
+//!   `migrations` / `migration_bytes` surface in the fleet-merged
+//!   snapshot and its JSON.
+//! * **Migration-point property** — the same holds at every mid-decode
+//!   migration point across a sweep of pinned seeds.
+
+use std::sync::{mpsc, Arc};
+
+use thinkv::coordinator::{
+    advance_batch, CompressionMode, RequestResult, Router, Scheduler, ServeConfig, Session,
+    SloTarget, StepOutcome,
+};
+use thinkv::kvcache::BlockPool;
+use thinkv::testkit::{share_manifest, CausalEngine};
+use thinkv::util::json::Json;
+
+fn base_cfg() -> ServeConfig {
+    ServeConfig {
+        mode: CompressionMode::thinkv_default(),
+        budget: 64,
+        max_new_tokens: 8,
+        workers: 1,
+        temperature: 0.8,
+        ..ServeConfig::default()
+    }
+}
+
+fn prompt_for(s: usize, vocab: usize) -> Vec<i32> {
+    (0..8).map(|i| ((i * 5 + s * 17) % vocab) as i32).collect()
+}
+
+/// Standalone reference stream: the same session decoded to completion
+/// with no scheduler involved.
+fn reference_tokens(id: u64, prompt: Vec<i32>, cfg: &ServeConfig) -> Vec<i32> {
+    let man = share_manifest();
+    let engine = CausalEngine::new(man.model.clone());
+    let mut s = Session::new(id, prompt, cfg, &man).expect("reference session");
+    while !matches!(s.step(&engine).expect("step"), StepOutcome::Finished) {}
+    s.tokens
+}
+
+fn drive(sched: &Scheduler, engine: &CausalEngine) {
+    while sched.inflight() > 0 {
+        let batch = sched.next_batch(4).expect("runnable while inflight");
+        advance_batch(sched, engine, 2, batch);
+    }
+}
+
+/// Differential bar: the 1-replica router IS the legacy scheduler.
+/// Both runs share a tight pool (2 admissions for 6 arrivals, so the
+/// queueing and recompute-preemption machinery is exercised), a pinned
+/// logical clock, and identical sessions; streams and the full snapshot
+/// must match bit-for-bit.
+#[test]
+fn single_replica_router_matches_legacy_scheduler() {
+    let man = share_manifest();
+    let cfg = base_cfg();
+    let per_adm = Session::new(0, prompt_for(0, man.model.vocab), &cfg, &man)
+        .expect("probe")
+        .admission_bytes();
+    let pool_bytes = per_adm * 2 + 4096;
+
+    // legacy: one Scheduler in front of its own pool
+    let legacy_pool = Arc::new(BlockPool::new(pool_bytes));
+    let legacy = Scheduler::new(Arc::clone(&legacy_pool));
+    legacy.drive_clock(1);
+    let engine = CausalEngine::new(man.model.clone());
+    let (tx, rx) = mpsc::channel();
+    for s in 0..6usize {
+        let sess = Session::with_pool(
+            s as u64 + 1,
+            prompt_for(s, man.model.vocab),
+            &cfg,
+            &man,
+            Some(Arc::clone(&legacy_pool)),
+        )
+        .expect("session");
+        legacy.submit(sess, tx.clone());
+    }
+    drive(&legacy, &engine);
+    drop(tx);
+    let mut legacy_results: Vec<RequestResult> = rx.iter().collect();
+    legacy_results.sort_by_key(|r| r.id);
+    let legacy_snap = legacy.snapshot();
+    legacy.shutdown();
+
+    // fleet of one: same pool bytes, same arrivals, driven identically
+    let router = Router::new(1, pool_bytes, None, false, 16);
+    let fleet = router.replicas()[0].scheduler();
+    fleet.drive_clock(1);
+    let engine2 = CausalEngine::new(man.model.clone());
+    let (tx2, rx2) = mpsc::channel();
+    for s in 0..6usize {
+        let sess = Session::with_pool(
+            s as u64 + 1,
+            prompt_for(s, man.model.vocab),
+            &cfg,
+            &man,
+            Some(Arc::clone(fleet.pool())),
+        )
+        .expect("session");
+        router.submit_to(0, sess, tx2.clone());
+    }
+    drive(fleet, &engine2);
+    drop(tx2);
+    let mut fleet_results: Vec<RequestResult> = rx2.iter().collect();
+    fleet_results.sort_by_key(|r| r.id);
+    let fleet_snap = router.snapshot();
+
+    assert_eq!(legacy_results.len(), 6);
+    assert_eq!(fleet_results.len(), 6);
+    for (a, b) in legacy_results.iter().zip(&fleet_results) {
+        assert!(a.error.is_none() && b.error.is_none());
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "request {} stream diverged", a.id);
+        assert_eq!(a.preemptions, b.preemptions);
+    }
+    assert_eq!(legacy_snap, fleet_snap, "1-replica fleet snapshot must be bit-identical");
+    assert_eq!(fleet_snap.replicas, 1);
+    assert_eq!(fleet_snap.migrations, 0);
+    assert_eq!(router.rebalance(), 0, "a fleet of one never migrates");
+    router.shutdown();
+}
+
+/// Deterministic acceptance bar: three classed sessions land on replica
+/// 0, decode a couple of steps, then `rebalance` live-migrates one to
+/// the idle replica 1. Streams stay bit-identical to standalone
+/// references, zero recompute is paid (`preemptions == 0`, exactly one
+/// swap round trip), the pre-migration SLO stamps decide the verdicts,
+/// and the fleet snapshot + JSON surface the migration counters.
+#[test]
+fn live_migration_is_bit_exact_and_counted() {
+    let man = share_manifest();
+    let cfg = ServeConfig {
+        max_new_tokens: 16,
+        slo_class: Some("chat".into()),
+        slo: SloTarget::new(50, 0),
+        ..base_cfg()
+    };
+    let prompts: Vec<Vec<i32>> = (0..3).map(|s| prompt_for(s, man.model.vocab)).collect();
+    let refs: Vec<Vec<i32>> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| reference_tokens(i as u64 + 1, p.clone(), &cfg))
+        .collect();
+
+    let router = Router::new(2, u64::MAX / 4, Some(64 << 20), false, 16);
+    let s0 = router.replicas()[0].scheduler();
+    let s1 = router.replicas()[1].scheduler();
+    s0.drive_clock(1);
+    s1.drive_clock(1);
+    let e0 = CausalEngine::new(man.model.clone());
+    let e1 = CausalEngine::new(man.model.clone());
+    let (tx, rx) = mpsc::channel();
+    for (i, p) in prompts.iter().enumerate() {
+        let sess =
+            Session::with_pool(i as u64 + 1, p.clone(), &cfg, &man, Some(Arc::clone(s0.pool())))
+                .expect("session");
+        router.submit_to(0, sess, tx.clone());
+    }
+    // every TTFT deadline (50 ticks) is already lost when decode starts:
+    // the verdicts below can only come out (0 met, 3 violated) if the
+    // migrated session keeps its tick-1 submission stamp
+    s0.drive_clock(200);
+    s1.drive_clock(200);
+    // all three prefill and decode two steps on the hot replica
+    for _ in 0..3 {
+        let batch = s0.next_batch(1).expect("runnable");
+        advance_batch(s0, &e0, 2, batch);
+    }
+    assert_eq!(s0.load(), 3);
+    assert_eq!(s1.load(), 0);
+    let moved = router.rebalance();
+    assert_eq!(moved, 1, "3-vs-0 skew is one migration over the gap");
+    assert_eq!(router.migrations(), 1);
+
+    // drain both replicas, each on its own engine
+    loop {
+        let (i0, i1) = (s0.inflight(), s1.inflight());
+        if i0 + i1 == 0 {
+            break;
+        }
+        if i0 > 0 {
+            let batch = s0.next_batch(2).expect("runnable");
+            advance_batch(s0, &e0, 4, batch);
+        }
+        if i1 > 0 {
+            let batch = s1.next_batch(2).expect("runnable");
+            advance_batch(s1, &e1, 4, batch);
+        }
+    }
+    drop(tx);
+    let mut results: Vec<RequestResult> = rx.iter().collect();
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results.len(), 3);
+    for (r, want) in results.iter().zip(&refs) {
+        assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+        assert_eq!(&r.tokens, want, "request {} must decode bit-identically", r.id);
+        assert_eq!(r.preemptions, 0, "migration must cost zero recompute resets");
+    }
+    let swap_ins: u64 = results.iter().map(|r| r.swap_ins).sum();
+    assert_eq!(swap_ins, 1, "exactly the migrated session restores from a snapshot");
+
+    let merged = router.snapshot();
+    assert_eq!(merged.replicas, 2);
+    assert_eq!(merged.migrations, 1);
+    assert!(merged.migration_bytes > 0, "a snapshot's bytes moved");
+    assert_eq!(merged.preemptions, 0);
+    assert_eq!((merged.swap_outs, merged.swap_ins), (1, 1));
+    assert_eq!(merged.swap_used, 0, "swap bytes returned after the resume");
+    assert_eq!(
+        (merged.goodput, merged.slo_violations),
+        (0, 3),
+        "pre-migration SLO stamps must decide every verdict"
+    );
+    // the counters must be visible in the JSON stats surface and the
+    // human summary (server `stats` reply / `thinkv generate` output)
+    let j = merged.to_json();
+    assert_eq!(j.get("migrations").and_then(Json::as_usize), Some(1));
+    assert!(j.get("migration_bytes").and_then(Json::as_usize).unwrap_or(0) > 0);
+    assert_eq!(j.get("replicas").and_then(Json::as_usize), Some(2));
+    assert!(merged.summary().contains("1 migrations"), "summary: {}", merged.summary());
+    router.shutdown();
+}
+
+/// Property bar: migration is stream-preserving at *every* mid-decode
+/// point. Sweep pinned seeds and migration points (1..=4 single-step
+/// pulls before the rebalance); whichever sessions move, all streams
+/// must equal their standalone references with zero recompute.
+#[test]
+fn migration_at_any_mid_decode_point_preserves_streams() {
+    let man = share_manifest();
+    for pre in 1usize..=4 {
+        let cfg = ServeConfig { seed: 40 + pre as u64, ..base_cfg() };
+        let prompts: Vec<Vec<i32>> = (0..4).map(|s| prompt_for(s, man.model.vocab)).collect();
+        let refs: Vec<Vec<i32>> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| reference_tokens(i as u64 + 1, p.clone(), &cfg))
+            .collect();
+        let router = Router::new(2, u64::MAX / 4, Some(64 << 20), false, 16);
+        let s0 = router.replicas()[0].scheduler();
+        let s1 = router.replicas()[1].scheduler();
+        s0.drive_clock(1);
+        s1.drive_clock(1);
+        let e0 = CausalEngine::new(man.model.clone());
+        let e1 = CausalEngine::new(man.model.clone());
+        let (tx, rx) = mpsc::channel();
+        for (i, p) in prompts.iter().enumerate() {
+            let sess = Session::with_pool(
+                i as u64 + 1,
+                p.clone(),
+                &cfg,
+                &man,
+                Some(Arc::clone(s0.pool())),
+            )
+            .expect("session");
+            router.submit_to(0, sess, tx.clone());
+        }
+        // vary the migration point: `pre` single-step pulls leave the
+        // front `pre` sessions at different decode depths
+        for _ in 0..pre {
+            let batch = s0.next_batch(1).expect("runnable");
+            advance_batch(s0, &e0, 1, batch);
+        }
+        let moved = router.rebalance();
+        assert!(moved >= 1, "pre={pre}: the 4-vs-0 skew must migrate");
+        assert_eq!(moved as u64, router.migrations());
+        loop {
+            let (i0, i1) = (s0.inflight(), s1.inflight());
+            if i0 + i1 == 0 {
+                break;
+            }
+            if i0 > 0 {
+                let batch = s0.next_batch(2).expect("runnable");
+                advance_batch(s0, &e0, 4, batch);
+            }
+            if i1 > 0 {
+                let batch = s1.next_batch(2).expect("runnable");
+                advance_batch(s1, &e1, 4, batch);
+            }
+        }
+        drop(tx);
+        let mut results: Vec<RequestResult> = rx.iter().collect();
+        results.sort_by_key(|r| r.id);
+        assert_eq!(results.len(), 4);
+        for (r, want) in results.iter().zip(&refs) {
+            assert!(r.error.is_none(), "pre={pre}: request {} failed", r.id);
+            assert_eq!(&r.tokens, want, "pre={pre}: request {} stream diverged", r.id);
+            assert_eq!(r.preemptions, 0, "pre={pre}: recompute paid for a migration");
+        }
+        let swap_ins: u64 = results.iter().map(|r| r.swap_ins).sum();
+        assert_eq!(swap_ins, moved as u64, "pre={pre}: one snapshot restore per migration");
+        let merged = router.snapshot();
+        assert_eq!(merged.migrations, moved as u64);
+        assert_eq!(merged.preemptions, 0, "pre={pre}: no preemption storm");
+        router.shutdown();
+    }
+}
