@@ -5,22 +5,46 @@
 #   make doc         — rustdoc with warnings denied (the docs gate)
 #   make doc-links   — README/ARCHITECTURE cross-references must resolve
 #   make bench-smoke — one-iteration bench_scheduler run (bench rot gate)
-#   make check       — fmt + clippy + doc + doc-links + tier1 (what CI runs)
+#   make xtask-lint  — SchedSnapshot counter-map drift lint (+ its tests)
+#   make loom        — exhaustive-interleaving models of the lock dances
+#   make check       — fmt + clippy + doc + doc-links + xtask-lint +
+#                      tier1 + loom (what CI runs)
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: check fmt clippy doc doc-links tier1 test bench-smoke artifacts clean
+.PHONY: check fmt clippy doc doc-links xtask-lint loom tier1 test bench-smoke artifacts clean
 
-check: fmt clippy doc doc-links tier1
+check: fmt clippy doc doc-links xtask-lint tier1 loom
 
 fmt:
 	$(CARGO) fmt --check
 
 # Lint allowlist: `too_many_arguments` is endemic to the engine FFI
-# surface (cache slabs are passed as flat tensors by design).
+# surface (cache slabs are passed as flat tensors by design). On top of
+# the default set (denied), a curated slice of pedantic lints that have
+# caught real bugs here: by-value args that force clones, lossless
+# `as` casts that hide width changes, and clones of values never used
+# again.
 clippy:
-	$(CARGO) clippy --all-targets -- -D warnings -A clippy::too_many_arguments
+	$(CARGO) clippy --all-targets -- -D warnings -A clippy::too_many_arguments \
+	  -W clippy::needless_pass_by_value -W clippy::cast_lossless \
+	  -W clippy::redundant_clone
+
+# Counter-map drift lint: the SchedSnapshot JSON keys, the
+# ARCHITECTURE.md counter map, and the README stats ledger must agree
+# in both directions. The xtask unit tests prove the detector fires on
+# seeded drift.
+xtask-lint:
+	$(CARGO) run -p xtask --quiet -- lint
+	$(CARGO) test -p xtask -q
+
+# Deterministic interleaving models (syncx::model) of the three
+# cross-lock dances; each ships a seeded-bug variant proving the model
+# catches the race it guards. See ARCHITECTURE.md "Invariants and
+# analysis".
+loom:
+	$(CARGO) test --test loom_models -q
 
 # Docs gate: the rustdoc surface (crate/module docs, intra-doc links,
 # doc examples) must build warning-free so it cannot rot.

@@ -129,7 +129,7 @@ impl EvictionPolicy for H2O {
     fn observe(&mut self, attn: &PosAttn) {
         self.last_step = attn.step;
         for (p, a) in &attn.attn {
-            *self.cum.entry(*p).or_insert(0.0) += *a as f64;
+            *self.cum.entry(*p).or_insert(0.0) += f64::from(*a);
         }
     }
 
@@ -201,8 +201,8 @@ impl EvictionPolicy for Rkv {
             *v *= self.decay;
         }
         for (p, a) in &attn.attn {
-            *self.cum.entry(*p).or_insert(0.0) += *a as f64;
-            *self.recent.entry(*p).or_insert(0.0) += *a as f64;
+            *self.cum.entry(*p).or_insert(0.0) += f64::from(*a);
+            *self.recent.entry(*p).or_insert(0.0) += f64::from(*a);
         }
     }
 
@@ -293,10 +293,10 @@ impl EvictionPolicy for LazyEviction {
 
     fn observe(&mut self, attn: &PosAttn) {
         self.step = attn.step;
-        let rel = (self.attend_threshold as f64)
+        let rel = f64::from(self.attend_threshold)
             .max(1.4 / attn.attn.len().max(1) as f64) as f32;
         for (p, a) in &attn.attn {
-            *self.cum.entry(*p).or_insert(0.0) += *a as f64;
+            *self.cum.entry(*p).or_insert(0.0) += f64::from(*a);
             if *a > rel {
                 if let Some(&prev) = self.last_attended.get(p) {
                     if attn.step.saturating_sub(prev) > self.lag {
@@ -580,7 +580,7 @@ impl EvictionPolicy for CrystalKv {
 
     fn observe(&mut self, attn: &PosAttn) {
         for (p, a) in &attn.attn {
-            *self.cum.entry(*p).or_insert(0.0) += *a as f64;
+            *self.cum.entry(*p).or_insert(0.0) += f64::from(*a);
         }
     }
 

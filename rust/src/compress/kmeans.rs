@@ -29,7 +29,7 @@ pub fn kmeans_select(points: &[Vec<f32>], k: usize, seed: u64, iters: usize) -> 
     // k-means++ seeding
     let mut centroids: Vec<Vec<f32>> = Vec::with_capacity(k);
     centroids.push(points[rng.below(n)].clone());
-    let mut d2: Vec<f64> = points.iter().map(|p| dist2(p, &centroids[0]) as f64).collect();
+    let mut d2: Vec<f64> = points.iter().map(|p| f64::from(dist2(p, &centroids[0]))).collect();
     while centroids.len() < k {
         let idx = rng.weighted(&d2);
         centroids.push(points[idx].clone());
@@ -66,7 +66,7 @@ pub fn kmeans_select(points: &[Vec<f32>], k: usize, seed: u64, iters: usize) -> 
         for (i, p) in points.iter().enumerate() {
             counts[assign[i]] += 1;
             for (s, &x) in sums[assign[i]].iter_mut().zip(p) {
-                *s += x as f64;
+                *s += f64::from(x);
             }
         }
         for c in 0..k {

@@ -120,6 +120,7 @@ impl RequestResult {
 }
 
 /// Handle for awaiting one submitted request.
+#[must_use = "dropping a RequestHandle discards the request's only result receiver"]
 pub struct RequestHandle {
     pub id: u64,
     rx: mpsc::Receiver<RequestResult>,

@@ -73,13 +73,14 @@
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar};
 use std::time::Instant;
 
 use crate::kvcache::{BatchKey, BlockPool, PrefixIndex, SwapPool};
 use crate::metrics::{SchedSnapshot, SloClassSnap};
 use crate::runtime::ExecStats;
 use crate::sim::{GpuProfile, LrmProfile, ServingCost};
+use crate::syncx::{rank, RankedMutex};
 
 use super::engine_loop::RequestResult;
 use super::session::Session;
@@ -205,7 +206,11 @@ pub struct Scheduler {
     /// eviction/preemption never reclaims a prefix any session (running
     /// or suspended) still references.
     prefix: Option<Arc<PrefixIndex>>,
-    inner: Mutex<Inner>,
+    /// The scheduler's one big lock, ranked [`rank::SCHED_INNER`] —
+    /// the *lowest* rank in the crate's lock hierarchy, because the
+    /// admission / finish / CoW-drain paths take every other lock
+    /// (prefix trie root, residency cells, SLO book) while holding it.
+    inner: RankedMutex<Inner>,
     cv: Condvar,
     stop: AtomicBool,
     inflight: AtomicU64,
@@ -267,8 +272,10 @@ pub struct Scheduler {
     goodput: AtomicU64,
     /// Classed sessions that terminated missing it (failures included).
     slo_violations: AtomicU64,
-    /// Per-class goodput/violation counts and latency samples.
-    slo_book: Mutex<Vec<ClassBook>>,
+    /// Per-class goodput/violation counts and latency samples. Ranked
+    /// [`rank::SLO_BOOK`]: `note_slo_outcome` takes it while holding
+    /// the scheduler lock (finish path), never the other way around.
+    slo_book: RankedMutex<Vec<ClassBook>>,
     /// Serving-time cost model pricing the swap-vs-recompute resume
     /// ordering (satellite of the replica tier; fixed A100 anchor).
     cost: ServingCost,
@@ -308,17 +315,20 @@ impl Scheduler {
             pool,
             swap,
             prefix,
-            inner: Mutex::new(Inner {
-                waiting: VecDeque::new(),
-                runnable: VecDeque::new(),
-                stalled: VecDeque::new(),
-                admitted: BTreeMap::new(),
-                held: BTreeSet::new(),
-                preempt_marks: BTreeSet::new(),
-                starving: BTreeSet::new(),
-                pending_preempts: 0,
-                next_admit_seq: 0,
-            }),
+            inner: RankedMutex::new(
+                &rank::SCHED_INNER,
+                Inner {
+                    waiting: VecDeque::new(),
+                    runnable: VecDeque::new(),
+                    stalled: VecDeque::new(),
+                    admitted: BTreeMap::new(),
+                    held: BTreeSet::new(),
+                    preempt_marks: BTreeSet::new(),
+                    starving: BTreeSet::new(),
+                    pending_preempts: 0,
+                    next_admit_seq: 0,
+                },
+            ),
             cv: Condvar::new(),
             stop: AtomicBool::new(false),
             inflight: AtomicU64::new(0),
@@ -347,7 +357,7 @@ impl Scheduler {
             logical: AtomicBool::new(false),
             goodput: AtomicU64::new(0),
             slo_violations: AtomicU64::new(0),
-            slo_book: Mutex::new(Vec::new()),
+            slo_book: RankedMutex::new(&rank::SLO_BOOK, Vec::new()),
             cost: ServingCost::new(GpuProfile::a100_80gb(), LrmProfile::r1_llama_8b()),
             lane_peak: AtomicU64::new(0),
             lane_switches: AtomicU64::new(0),
@@ -498,7 +508,7 @@ impl Scheduler {
         session.slo.submitted_at = self.now_ticks();
         session.last_ran_tick = session.slo.submitted_at;
         self.inflight.fetch_add(1, Ordering::SeqCst);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         inner.waiting.push_back(Entry { session, done_tx });
         self.try_admit(&mut inner);
         self.cv.notify_all();
@@ -513,7 +523,7 @@ impl Scheduler {
     pub fn resubmit(&self, mut session: Session, done_tx: mpsc::Sender<RequestResult>) {
         session.last_ran_tick = self.now_ticks();
         self.inflight.fetch_add(1, Ordering::SeqCst);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         self.requeue_resume(&mut inner, Entry { session, done_tx });
         self.try_admit(&mut inner);
         self.cv.notify_all();
@@ -539,19 +549,22 @@ impl Scheduler {
             };
             let Some(cand) = inner.waiting.get(pick) else { break };
             let need = cand.session.admission_bytes();
-            if !self.pool.reserve(need) {
+            let lease = self.pool.lease(need).or_else(|| {
                 // before refusing: reclaim resident prefixes no session
                 // references any more, then retry once
-                let reclaimable = self
+                let reclaimed = self
                     .prefix
                     .as_ref()
                     .map_or(0, |p| p.reclaim_unreferenced(need.saturating_sub(self.pool.free())));
-                if reclaimable == 0 || !self.pool.reserve(need) {
-                    break;
+                if reclaimed == 0 {
+                    None
+                } else {
+                    self.pool.lease(need)
                 }
-            }
+            });
+            let Some(lease) = lease else { break };
             let mut entry = inner.waiting.remove(pick).expect("index valid");
-            entry.session.grant(need);
+            entry.session.grant(lease);
             entry.session.resume_cost_ns = None;
             let seq = inner.next_admit_seq;
             inner.next_admit_seq += 1;
@@ -599,7 +612,7 @@ impl Scheduler {
         let chunked = self.prefill_chunk_tokens().is_some();
         let goodput = self.goodput_policy();
         let budget = self.token_budget(max);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         loop {
             if self.stop.load(Ordering::SeqCst) {
                 return None;
@@ -693,10 +706,9 @@ impl Scheduler {
                         i += 1;
                         continue;
                     }
-                    let bond = s.step_headroom_bytes();
-                    if !self.pool.reserve(bond) {
+                    let Some(bond) = self.pool.lease(s.step_headroom_bytes()) else {
                         break;
-                    }
+                    };
                     let mut entry = inner.runnable.remove(i).expect("index valid");
                     entry.session.add_growth_bond(bond);
                     inner.held.insert(entry.session.id);
@@ -706,7 +718,7 @@ impl Scheduler {
                 }
                 return Some(batch);
             }
-            inner = self.cv.wait(inner).unwrap();
+            inner = inner.wait_on(&self.cv);
         }
     }
 
@@ -746,7 +758,7 @@ impl Scheduler {
     /// snapshot copy runs after the scheduler lock is released).
     pub fn yield_back(&self, mut entry: Entry) {
         entry.session.last_ran_tick = self.now_ticks();
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         inner.held.remove(&entry.session.id);
         // the session ran a full chunk, so it is no longer starving (a
         // still-starved step re-enters through cannot_grow instead)
@@ -773,14 +785,14 @@ impl Scheduler {
             // prefix cache yields before any live session is preempted
             // (only entries with zero refs are ever reclaimed)
             if p.reclaim_unreferenced(entry.session.step_headroom_bytes()) > 0 {
-                let mut inner = self.inner.lock().unwrap();
+                let mut inner = self.inner.lock();
                 inner.held.remove(&entry.session.id);
                 inner.runnable.push_front(entry);
                 self.cv.notify_all();
                 return;
             }
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         inner.held.remove(&entry.session.id);
         let my_seq = *inner.admitted.get(&entry.session.id).expect("caller is admitted");
         let youngest = inner
@@ -889,7 +901,7 @@ impl Scheduler {
         }
         self.price_resume(&mut entry.session, live_bytes, replay_steps);
         self.preemptions.fetch_add(1, Ordering::SeqCst);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         inner.pending_preempts -= 1;
         self.requeue_resume(&mut inner, entry);
         inner.unstall();
@@ -954,7 +966,7 @@ impl Scheduler {
         let now = self.now_ticks();
         let mut victims = Vec::new();
         {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.inner.lock();
             let mut i = 0;
             while i < inner.runnable.len() {
                 let s = &inner.runnable[i].session;
@@ -983,7 +995,7 @@ impl Scheduler {
                 self.idle_swapouts.fetch_add(1, Ordering::SeqCst);
                 self.price_resume(&mut entry.session, live_bytes, replay_steps);
                 entry.session.last_ran_tick = self.now_ticks();
-                let mut inner = self.inner.lock().unwrap();
+                let mut inner = self.inner.lock();
                 inner.forget(entry.session.id);
                 inner.pending_preempts -= 1;
                 self.requeue_resume(&mut inner, entry);
@@ -994,7 +1006,7 @@ impl Scheduler {
                 // snapshot didn't fit: put it back exactly as it was
                 // (still admitted, bytes untouched) — idle swap-out is
                 // opportunistic and must never degrade to a recompute
-                let mut inner = self.inner.lock().unwrap();
+                let mut inner = self.inner.lock();
                 inner.pending_preempts -= 1;
                 entry.session.last_ran_tick = self.now_ticks();
                 inner.runnable.push_back(entry);
@@ -1018,7 +1030,7 @@ impl Scheduler {
     /// safely migratable (empty queue, mid-prefill only, or starving
     /// sessions whose byte accounting a detach would race).
     pub fn take_for_migration(&self) -> Option<Entry> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         if !inner.starving.is_empty() {
             return None;
         }
@@ -1038,7 +1050,7 @@ impl Scheduler {
     /// replica. Wake stalled sessions and admit against the freed
     /// bytes.
     pub fn migration_release(&self) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         inner.pending_preempts -= 1;
         inner.unstall();
         self.try_admit(&mut inner);
@@ -1049,7 +1061,7 @@ impl Scheduler {
     /// it came from (back of runnable, still holding its reservation).
     pub fn return_from_migration(&self, entry: Entry) {
         self.inflight.fetch_add(1, Ordering::SeqCst);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         inner.pending_preempts -= 1;
         let seq = inner.next_admit_seq;
         inner.next_admit_seq += 1;
@@ -1062,7 +1074,7 @@ impl Scheduler {
     /// queue, front-to-back — the router's least-loaded-lane placement
     /// input.
     pub fn lane_occupancy(&self) -> Vec<(BatchKey, usize)> {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.inner.lock();
         let mut widths: Vec<(BatchKey, usize)> = Vec::new();
         for e in inner.runnable.iter().chain(inner.stalled.iter()) {
             let k = e.session.compat_key();
@@ -1076,7 +1088,7 @@ impl Scheduler {
 
     /// Total sessions queued or admitted (the router's load tiebreak).
     pub fn load(&self) -> usize {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.inner.lock();
         inner.waiting.len() + inner.runnable.len() + inner.stalled.len() + inner.held.len()
     }
 
@@ -1139,7 +1151,7 @@ impl Scheduler {
         } else {
             self.slo_violations.fetch_add(1, Ordering::SeqCst);
         }
-        let mut book = self.slo_book.lock().unwrap();
+        let mut book = self.slo_book.lock();
         let idx = match book.iter().position(|c| c.name == session.slo.class) {
             Some(i) => i,
             None => {
@@ -1187,7 +1199,7 @@ impl Scheduler {
     }
 
     fn finish(&self, session: &mut Session, counter: &AtomicU64, failed: bool) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         inner.forget(session.id);
         self.fold_retention(session);
         session.release_pool();
@@ -1220,13 +1232,14 @@ impl Scheduler {
     /// Point-in-time counters for metrics / the server `stats` command.
     pub fn snapshot(&self) -> SchedSnapshot {
         let swap = self.swap.as_ref().map(|s| s.stats()).unwrap_or_default();
+        let pool_audit = self.pool.audit();
         let prefix = self.prefix.as_ref().map(|p| p.stats()).unwrap_or_default();
         // per-class books reduce to nearest-rank percentiles here so the
         // snapshot stays a flat, Eq-comparable value (the book lock is
         // released before the scheduler lock is taken — same order as
         // the finish path, never inverted)
         let slo_classes: Vec<SloClassSnap> = {
-            let book = self.slo_book.lock().unwrap();
+            let book = self.slo_book.lock();
             book.iter()
                 .map(|c| {
                     let mut ttft = c.ttft.clone();
@@ -1245,7 +1258,7 @@ impl Scheduler {
                 })
                 .collect()
         };
-        let inner = self.inner.lock().unwrap();
+        let inner = self.inner.lock();
         // queued prefill work: sessions in any scheduler queue still
         // owing prompt tokens (held members are not visible here)
         let prefill_queue_depth = inner
@@ -1271,6 +1284,8 @@ impl Scheduler {
             pool_used: self.pool.used(),
             pool_peak: self.pool.peak(),
             pool_free: self.pool.free(),
+            pool_leases: pool_audit.live,
+            pool_leased_bytes: pool_audit.leased,
             admissions: self.admissions.load(Ordering::SeqCst),
             preemptions: self.preemptions.load(Ordering::SeqCst),
             completions: self.completions.load(Ordering::SeqCst),
@@ -1797,7 +1812,7 @@ mod tests {
         // reaches when its own growth failed while a preemption was in
         // flight (cannot_grow's pending-preempts branch).
         {
-            let mut inner = sched.inner.lock().unwrap();
+            let mut inner = sched.inner.lock();
             inner.held.remove(&younger.session.id);
             inner.starving.insert(younger.session.id);
             inner.stalled.push_back(younger);
@@ -1807,7 +1822,7 @@ mod tests {
         assert_eq!(snap.preemptions, 1, "stalled victim preempted directly");
         assert_eq!(snap.running, 1, "victim left the admitted set");
         {
-            let inner = sched.inner.lock().unwrap();
+            let inner = sched.inner.lock();
             assert!(inner.preempt_marks.is_empty(), "no unhonorable mark left behind");
             assert!(inner.stalled.is_empty(), "freed bytes unstalled the caller");
             assert_eq!(inner.waiting.front().map(|e| e.session.id), Some(2));
@@ -2120,7 +2135,7 @@ mod tests {
         d.preempted_at_tick = sched.now_ticks();
         sched.resubmit(d, tx.clone());
         let ids: Vec<u64> = {
-            let inner = sched.inner.lock().unwrap();
+            let inner = sched.inner.lock();
             inner.waiting.iter().map(|e| e.session.id).collect()
         };
         assert_eq!(

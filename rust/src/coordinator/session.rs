@@ -39,8 +39,8 @@ use crate::baselines::quant_baselines::PmKvq;
 use crate::compress::tbe::{Tbe, TbeConfig};
 use crate::compress::tbq::Tbq;
 use crate::kvcache::{
-    AttachedPrefix, BatchKey, BlockPool, CacheConfig, CtCache, Fp32Backend, Fp32Cache, KvBackend,
-    KvSnapshot, PrefixGeom, PrefixIndex, QuantBackend, SwapPool,
+    AttachedPrefix, BatchKey, BlockPool, ByteLease, CacheConfig, CtCache, Fp32Backend, Fp32Cache,
+    KvBackend, KvSnapshot, PrefixGeom, PrefixIndex, QuantBackend, SwapLease, SwapPool,
 };
 use crate::metrics::Breakdown;
 use crate::quant::Precision;
@@ -52,6 +52,7 @@ use super::sampler::Sampler;
 
 /// Result of advancing a session by one decode step.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[must_use = "an unhandled NeedMemory or Finished outcome strands the session"]
 pub enum StepOutcome {
     /// The session produced a token and can keep going.
     Running,
@@ -65,6 +66,7 @@ pub enum StepOutcome {
 /// Outcome of the pre-decode half of a (possibly batched) step:
 /// everything [`Session::begin_step`] does before the engine call.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[must_use = "an unhandled NeedMemory or Finished prep strands the session"]
 pub enum StepPrep {
     /// The session is ready for the fused engine call with these
     /// decode-step scalars (token, position, ring-buffer fill).
@@ -168,11 +170,11 @@ pub fn build_backend(
     }
 }
 
-/// A suspended session's cache image plus the swap pool holding its
-/// byte reservation (released on resume, drop, or reset).
+/// A suspended session's cache image plus the ledgered swap-pool lease
+/// backing it (settled on resume, drop, or reset).
 struct SuspendedKv {
     snap: KvSnapshot,
-    pool: Arc<SwapPool>,
+    lease: SwapLease,
 }
 
 /// Prompt-prefill cursor: prefill is a little state machine now that a
@@ -327,8 +329,10 @@ pub struct Session {
     cfg: ServeConfig,
     manifest: crate::model::Manifest,
     pool: Option<Arc<BlockPool>>,
-    /// Bytes currently held in the pool on this session's behalf.
-    reserved_bytes: u64,
+    /// The ledgered pool charge backing every byte this session holds
+    /// (admission grant + growth bonds + drained CoW reservations);
+    /// `None` while the session holds nothing.
+    lease: Option<ByteLease>,
     /// Modeled resume cost in nanoseconds of serving time
     /// (`min(swap restore, recompute replay)`), stamped by the
     /// scheduler when the session is vacated with restorable progress;
@@ -437,7 +441,7 @@ impl Session {
             cfg: cfg.clone(),
             manifest: manifest.clone(),
             pool,
-            reserved_bytes: 0,
+            lease: None,
             resume_cost_ns: None,
             preempted_at_tick: 0,
             last_ran_tick: 0,
@@ -491,7 +495,12 @@ impl Session {
         prefix: Option<Arc<PrefixIndex>>,
     ) {
         debug_assert!(self.suspended.is_some(), "only suspended sessions migrate");
-        debug_assert_eq!(self.reserved_bytes, 0, "migrating session must hold no pool bytes");
+        debug_assert_eq!(self.reserved_bytes(), 0, "migrating session must hold no pool bytes");
+        // the lease (if any) is empty by the assert above, but it still
+        // pins the *source* pool — settle it so nothing crosses replicas
+        if let Some(lease) = self.lease.take() {
+            lease.settle();
+        }
         if let Some(att) = self.prefix_att.take() {
             self.prefix_att = Some(att.rebind_charge(Arc::clone(&pool)));
         }
@@ -604,53 +613,72 @@ impl Session {
         self.step_headroom
     }
 
-    /// Credit pool bytes the scheduler already reserved on this
+    /// Bytes currently held in the pool on this session's behalf (the
+    /// live lease's size).
+    pub(crate) fn reserved_bytes(&self) -> u64 {
+        self.lease.as_ref().map_or(0, |l| l.bytes())
+    }
+
+    /// Absorb a pool lease into this session's own (creating it if the
+    /// session holds nothing yet). Both must charge the session's pool.
+    fn absorb_lease(&mut self, incoming: ByteLease) {
+        match &mut self.lease {
+            Some(l) => l.merge(incoming),
+            None => self.lease = Some(incoming),
+        }
+    }
+
+    /// Credit a pool lease the scheduler already charged on this
     /// session's behalf (the batch-formation growth bond). The surplus
     /// flows back through the post-step reservation true-up.
-    pub(crate) fn add_growth_bond(&mut self, bytes: u64) {
+    pub(crate) fn add_growth_bond(&mut self, bond: ByteLease) {
         debug_assert!(self.pool.is_some(), "growth bond without a pool");
-        self.reserved_bytes += bytes;
+        self.absorb_lease(bond);
     }
 
-    /// Record an admission reserve the scheduler already charged to the
-    /// pool on this session's behalf.
-    pub(crate) fn grant(&mut self, bytes: u64) {
-        debug_assert_eq!(self.reserved_bytes, 0, "double admission grant");
-        self.reserved_bytes = bytes;
+    /// Record the admission lease the scheduler charged to the pool on
+    /// this session's behalf.
+    pub(crate) fn grant(&mut self, lease: ByteLease) {
+        debug_assert!(self.lease.is_none(), "double admission grant");
+        self.lease = Some(lease);
     }
 
-    /// Fold pool bytes a copy-on-write privatization reserved directly
-    /// (outside this session's reservation) into `reserved_bytes`, so
-    /// every byte flows through the one release path.
+    /// Fold the pool lease a copy-on-write privatization charged
+    /// directly (outside this session's lease) into it, so every byte
+    /// flows through the one settle path.
     fn drain_cow(&mut self) {
-        if let Some(att) = &self.prefix_att {
-            let b = att.take_cow_reserved();
-            if b > 0 {
-                self.reserved_bytes += b;
-            }
+        let Some(att) = &self.prefix_att else { return };
+        if let Some(cow) = att.take_cow_lease() {
+            self.absorb_lease(cow);
         }
     }
 
     /// Return every byte this session holds to the pool.
     pub(crate) fn release_pool(&mut self) {
         self.drain_cow();
-        if let Some(pool) = &self.pool {
-            if self.reserved_bytes > 0 {
-                pool.release(self.reserved_bytes);
-            }
+        if let Some(lease) = self.lease.take() {
+            lease.settle();
         }
-        self.reserved_bytes = 0;
     }
 
     /// Grow the reservation to `want` bytes; false if the pool is out of
     /// memory (caller must preempt someone and retry).
     fn ensure_reserved(&mut self, want: u64) -> bool {
         let Some(pool) = &self.pool else { return true };
-        if want > self.reserved_bytes {
-            if !pool.reserve(want - self.reserved_bytes) {
-                return false;
+        let held = self.reserved_bytes();
+        if want > held {
+            let delta = want - held;
+            match &mut self.lease {
+                Some(l) => {
+                    if !l.grow(delta) {
+                        return false;
+                    }
+                }
+                None => match pool.lease(delta) {
+                    Some(l) => self.lease = Some(l),
+                    None => return false,
+                },
             }
-            self.reserved_bytes = want;
         }
         true
     }
@@ -659,23 +687,26 @@ impl Session {
     /// called after every append/evict/requant so the pool stays
     /// byte-accurate (surplus from the pre-step worst-case reserve goes
     /// back immediately). A copy-on-write that fired during the step
-    /// already reserved its bytes in the pool; drain them into
-    /// `reserved_bytes` first so the true-up never double-charges.
+    /// already charged its lease in the pool; drain it into this
+    /// session's lease first so the true-up never double-charges.
     fn sync_pool(&mut self) {
         self.drain_cow();
         let cur = self.bytes_used();
-        let Some(pool) = &self.pool else { return };
-        if cur < self.reserved_bytes {
-            pool.release(self.reserved_bytes - cur);
-            self.reserved_bytes = cur;
-        } else if cur > self.reserved_bytes {
+        if self.pool.is_none() {
+            return;
+        }
+        let held = self.reserved_bytes();
+        if cur < held {
+            self.lease
+                .as_mut()
+                .expect("nonzero holding implies a lease")
+                .shrink(held - cur);
+        } else if cur > held {
             // Growth is pre-reserved, so this only fires if an admission
             // estimate undershot; true up best-effort to keep pool books
             // honest.
             debug_assert!(false, "KV growth exceeded its pre-step reserve");
-            if pool.reserve(cur - self.reserved_bytes) {
-                self.reserved_bytes = cur;
-            }
+            let _ = self.ensure_reserved(cur);
         }
     }
 
@@ -709,14 +740,14 @@ impl Session {
         // price first, copy after: a snapshot that will not fit the swap
         // pool must cost O(1), not a discarded full cache copy
         let need = backend.snapshot_bytes();
-        if !swap.reserve(need) {
+        let Some(lease) = swap.lease(need) else {
             swap.note_fallback();
             return false;
-        }
+        };
         let snap = match backend.snapshot() {
             Ok(s) => s,
             Err(_) => {
-                swap.release(need);
+                lease.settle();
                 swap.note_fallback();
                 return false;
             }
@@ -726,7 +757,7 @@ impl Session {
         self.swap_outs += 1;
         self.backend = None; // device slabs freed
         self.release_pool(); // device bytes back to the block pool
-        self.suspended = Some(SuspendedKv { snap, pool: Arc::clone(swap) });
+        self.suspended = Some(SuspendedKv { snap, lease });
         true
     }
 
@@ -735,16 +766,17 @@ impl Session {
     /// engine work, no replayed decode steps. No-op when the session is
     /// not suspended.
     pub(crate) fn resume_from_swap(&mut self) -> Result<()> {
-        let Some(SuspendedKv { snap, pool }) = self.suspended.take() else {
+        let Some(SuspendedKv { snap, lease }) = self.suspended.take() else {
             return Ok(());
         };
         let bytes = snap.bytes;
+        let pool = Arc::clone(lease.pool());
         let t0 = std::time::Instant::now();
         let result = self.rebuild_from(snap);
-        // the swap reservation is released on both paths — a failed
-        // restore must not strand host bytes (the caller then resets
-        // for recompute, returning the block-pool reservation too)
-        pool.release(bytes);
+        // the swap lease is settled on both paths — a failed restore
+        // must not strand host bytes (the caller then resets for
+        // recompute, returning the block-pool reservation too)
+        lease.settle();
         match &result {
             Ok(()) => {
                 let ns = t0.elapsed().as_nanos() as u64;
@@ -776,8 +808,9 @@ impl Session {
     /// Drop a suspended snapshot (if any) and return its swap bytes —
     /// the session is leaving the system without resuming.
     fn drop_swap(&mut self) {
-        if let Some(SuspendedKv { snap, pool }) = self.suspended.take() {
-            pool.release(snap.bytes);
+        if let Some(SuspendedKv { snap, lease }) = self.suspended.take() {
+            debug_assert_eq!(lease.bytes(), snap.bytes, "swap lease drifted from its snapshot");
+            lease.settle();
         }
     }
 
@@ -1166,8 +1199,7 @@ mod tests {
             Session::with_pool(1, vec![1, 2, 3], &cfg, &man, Some(Arc::clone(&pool))).unwrap();
         // admit by hand, as the scheduler would
         let need = s.admission_bytes();
-        assert!(pool.reserve(need));
-        s.grant(need);
+        s.grant(pool.lease(need).expect("admission fits"));
         s.test_fake_prefill();
         let swap = Arc::new(SwapPool::new(64 << 20));
         assert!(s.suspend_to(&swap));
@@ -1184,8 +1216,7 @@ mod tests {
         }
         // re-admission reserve, as the scheduler would
         let readmit = s.admission_bytes();
-        assert!(pool.reserve(readmit));
-        s.grant(readmit);
+        s.grant(pool.lease(readmit).expect("re-admission fits"));
         let engine = FakeEngine::new(man.model.clone());
         let prep = s.begin_step(&engine).expect("fallback, not failure");
         assert!(matches!(prep, StepPrep::Ready { .. }));
@@ -1251,8 +1282,7 @@ mod tests {
             .collect();
         for s in sessions.iter_mut() {
             let need = s.admission_bytes();
-            assert!(pool.reserve(need));
-            s.grant(need);
+            s.grant(pool.lease(need).expect("admission fits"));
         }
         // serialize: session 1 publishes, 2 and 3 attach at prefill
         for s in sessions.iter_mut() {
@@ -1280,12 +1310,15 @@ mod tests {
         for s in &sessions {
             assert!(s.admission_bytes() < s.admission_est);
         }
-        // books: sessions + residency, nothing else
-        let session_bytes: u64 = sessions.iter().map(|s| s.reserved_bytes).sum();
+        // books: sessions + residency, nothing else — and the lease
+        // ledger explains every byte
+        let session_bytes: u64 = sessions.iter().map(|s| s.reserved_bytes()).sum();
         assert_eq!(pool.used(), session_bytes + shared_bytes);
+        pool.assert_conserved();
         drop(sessions);
         assert_eq!(pool.used(), shared_bytes, "only the resident prefix remains");
         assert_eq!(idx.reclaim_unreferenced(u64::MAX), shared_bytes);
         assert_eq!(pool.used(), 0);
+        pool.assert_conserved();
     }
 }

@@ -20,7 +20,11 @@
 //!   fused engine call).
 //! * [`pool`] — [`pool::BlockPool`], the global physical-byte pool the
 //!   memory-aware scheduler reserves against for admission control and
-//!   preemption (max batch-size experiments, Tables 2/3).
+//!   preemption (max batch-size experiments, Tables 2/3), plus the
+//!   typed byte ledger ([`pool::Lease`]/[`pool::ByteLease`]): every
+//!   long-lived charge is a `#[must_use]` lease that debug-panics when
+//!   dropped unsettled, and [`pool::BlockPool::audit`] checks
+//!   `used == Σ live leases` at quiescent points.
 //! * [`swap`] — suspend-to-host preemption: [`swap::KvSnapshot`] images
 //!   produced by [`backend::KvBackend::snapshot`] and the byte-accounted
 //!   host-side [`swap::SwapPool`] they live in while a preempted session
@@ -44,9 +48,9 @@ pub use backend::{BatchKey, Fp32Backend, KvBackend, QuantBackend};
 pub use block_table::{BlockEntry, LayerTable, SlotId};
 pub use ct::{CacheConfig, CtCache, CtSnapshot, SegmentInfo};
 pub use fp32::{Fp32Cache, Fp32CacheSnapshot};
-pub use pool::BlockPool;
+pub use pool::{BlockPool, ByteLease, Lease, LeaseLedger, PoolAudit, PoolLike};
 pub use prefix::{AttachedPrefix, PrefixGeom, PrefixIndex, PrefixPayload, PrefixStats, SharedPrefix};
-pub use swap::{KvSnapshot, SnapshotPayload, SwapPool, SwapStats};
+pub use swap::{KvSnapshot, SnapshotPayload, SwapLease, SwapPool, SwapStats};
 
 /// The three thought types (paper Observation 1b: T sparsest, then R, then E).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]

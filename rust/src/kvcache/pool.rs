@@ -5,8 +5,189 @@
 //! The pool tracks *bytes*, not slots, because ThinKV requests with mixed
 //! precision consume different amounts per token (packed accounting,
 //! DESIGN §4).
+//!
+//! # The byte ledger
+//!
+//! Every long-lived charge against a pool is a typed [`Lease`]
+//! (admission grants, growth bonds, CoW reservations, prefix residency,
+//! swap snapshots). A lease is `#[must_use]` and **debug-panics if
+//! dropped without being settled or transferred** — forgetting to
+//! return bytes becomes a test failure instead of a slow capacity leak.
+//! Each pool keeps a [`LeaseLedger`] (live lease count + leased bytes),
+//! and [`BlockPool::audit`] exposes the conservation check
+//! `pool.used == Σ live-lease bytes` that the integration suites assert
+//! at scheduler quiescent points.
+//!
+//! The raw [`BlockPool::reserve`]/[`BlockPool::release`] pair remains
+//! as the *unledgered* escape hatch (tests and benches that deliberately
+//! drain a pool, transient probes). Raw charges are invisible to the
+//! ledger, so [`BlockPool::assert_conserved`] is only meaningful at
+//! points where no raw charge is outstanding.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Live-lease accounting for one pool: how many [`Lease`]s exist and
+/// how many bytes they hold. Maintained by the lease lifecycle, read by
+/// [`BlockPool::audit`].
+#[derive(Debug, Default)]
+pub struct LeaseLedger {
+    live: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl LeaseLedger {
+    /// Number of live leases.
+    pub fn live(&self) -> u64 {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    /// Total bytes held by live leases.
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::SeqCst)
+    }
+}
+
+/// Point-in-time conservation snapshot of one pool; see
+/// [`BlockPool::audit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolAudit {
+    /// Bytes the pool itself counts as in use.
+    pub used: u64,
+    /// Bytes held by live leases.
+    pub leased: u64,
+    /// Number of live leases.
+    pub live: u64,
+}
+
+impl PoolAudit {
+    /// True when every used byte is explained by a live lease.
+    pub fn conserved(&self) -> bool {
+        self.used == self.leased
+    }
+}
+
+/// A pool a [`Lease`] can charge: byte reserve/release plus the ledger
+/// the lease lifecycle maintains. Implemented by [`BlockPool`] (device
+/// KV bytes) and [`SwapPool`](super::SwapPool) (host snapshot bytes).
+pub trait PoolLike: Send + Sync {
+    /// Try to take `bytes` from the pool; false if it would overflow.
+    fn try_reserve_raw(&self, bytes: u64) -> bool;
+    /// Return `bytes` to the pool.
+    fn release_raw(&self, bytes: u64);
+    /// The pool's lease ledger.
+    fn ledger(&self) -> &LeaseLedger;
+    /// Diagnostic name, printed when a lease leaks.
+    fn pool_name(&self) -> &'static str;
+}
+
+/// An owned, typed charge of `bytes` against a pool.
+///
+/// Created by [`Lease::charge`] (or the pools' `lease()` conveniences),
+/// resized with [`grow`](Lease::grow)/[`shrink`](Lease::shrink), moved
+/// between owners with [`merge`](Lease::merge), and returned to the
+/// pool with [`settle`](Lease::settle). Dropping a lease any other way
+/// self-heals (the bytes are released and the ledger stays consistent)
+/// and then **panics in debug builds** — an unsettled drop is a byte
+/// leak in the accounting model even though the pool recovers.
+#[must_use = "a Lease is owned pool capacity: settle(), merge, or store it"]
+#[derive(Debug)]
+pub struct Lease<P: PoolLike> {
+    pool: Arc<P>,
+    bytes: u64,
+    settled: bool,
+}
+
+/// A lease of device KV bytes against a [`BlockPool`].
+pub type ByteLease = Lease<BlockPool>;
+
+impl<P: PoolLike> Lease<P> {
+    /// Charge `bytes` against `pool`; `None` if the pool is full.
+    /// A zero-byte lease always succeeds (an empty-but-armed charge:
+    /// sessions park one while holding no bytes).
+    pub fn charge(pool: &Arc<P>, bytes: u64) -> Option<Lease<P>> {
+        if !pool.try_reserve_raw(bytes) {
+            return None;
+        }
+        let ledger = pool.ledger();
+        ledger.live.fetch_add(1, Ordering::SeqCst);
+        ledger.bytes.fetch_add(bytes, Ordering::SeqCst);
+        Some(Lease { pool: Arc::clone(pool), bytes, settled: false })
+    }
+
+    /// Bytes this lease currently holds.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// The pool this lease charges.
+    pub fn pool(&self) -> &Arc<P> {
+        &self.pool
+    }
+
+    /// Enlarge the lease by `delta` bytes; false (lease unchanged) if
+    /// the pool cannot cover it.
+    pub fn grow(&mut self, delta: u64) -> bool {
+        if !self.pool.try_reserve_raw(delta) {
+            return false;
+        }
+        self.pool.ledger().bytes.fetch_add(delta, Ordering::SeqCst);
+        self.bytes += delta;
+        true
+    }
+
+    /// Return `delta` of this lease's bytes to the pool early.
+    pub fn shrink(&mut self, delta: u64) {
+        debug_assert!(delta <= self.bytes, "lease shrink below zero");
+        let delta = delta.min(self.bytes);
+        self.pool.release_raw(delta);
+        self.pool.ledger().bytes.fetch_sub(delta, Ordering::SeqCst);
+        self.bytes -= delta;
+    }
+
+    /// Absorb `other` into this lease (ownership transfer, e.g. a CoW
+    /// reservation draining into its session's admission lease). Both
+    /// leases must charge the same pool.
+    pub fn merge(&mut self, other: Lease<P>) {
+        debug_assert!(
+            Arc::ptr_eq(&self.pool, &other.pool),
+            "merging leases across pools ({} vs {})",
+            self.pool.pool_name(),
+            other.pool.pool_name()
+        );
+        let mut other = other;
+        self.bytes += other.bytes;
+        // disarm: its Drop then only retires the ledger's live count —
+        // the bytes now live here, so neither pool nor ledger changes
+        other.bytes = 0;
+        other.settled = true;
+    }
+
+    /// Return every byte to the pool and retire the lease.
+    pub fn settle(mut self) {
+        self.settled = true;
+        // Drop performs the release
+    }
+}
+
+impl<P: PoolLike> Drop for Lease<P> {
+    fn drop(&mut self) {
+        // always self-heal first so the ledger and pool stay consistent
+        // even when the leak panic below unwinds (or is caught)
+        self.pool.release_raw(self.bytes);
+        let ledger = self.pool.ledger();
+        ledger.bytes.fetch_sub(self.bytes, Ordering::SeqCst);
+        ledger.live.fetch_sub(1, Ordering::SeqCst);
+        if !self.settled && cfg!(debug_assertions) && !std::thread::panicking() {
+            panic!(
+                "leaked lease: {} bytes against pool `{}` dropped without \
+                 settle()/merge() — a charge path lost track of its bytes",
+                self.bytes,
+                self.pool.pool_name()
+            );
+        }
+    }
+}
 
 #[derive(Debug)]
 pub struct BlockPool {
@@ -15,6 +196,7 @@ pub struct BlockPool {
     used_bytes: AtomicU64,
     /// High-water mark for reporting.
     peak_bytes: AtomicU64,
+    ledger: LeaseLedger,
 }
 
 impl BlockPool {
@@ -23,6 +205,7 @@ impl BlockPool {
             capacity_bytes,
             used_bytes: AtomicU64::new(0),
             peak_bytes: AtomicU64::new(0),
+            ledger: LeaseLedger::default(),
         }
     }
 
@@ -43,6 +226,11 @@ impl BlockPool {
     }
 
     /// Try to reserve `bytes`; false if the pool would overflow.
+    ///
+    /// This is the **unledgered** escape hatch: the charge is invisible
+    /// to [`BlockPool::audit`]. Long-lived charges should go through
+    /// [`BlockPool::lease`] instead.
+    #[must_use = "a failed reserve means the bytes were NOT taken"]
     pub fn reserve(&self, bytes: u64) -> bool {
         let mut cur = self.used_bytes.load(Ordering::Relaxed);
         loop {
@@ -70,12 +258,58 @@ impl BlockPool {
         debug_assert!(prev >= bytes, "pool release underflow");
     }
 
+    /// Charge `bytes` as a ledgered [`ByteLease`]; `None` if full.
+    pub fn lease(self: &Arc<Self>, bytes: u64) -> Option<ByteLease> {
+        Lease::charge(self, bytes)
+    }
+
+    /// Conservation snapshot: pool-counted bytes vs ledgered leases.
+    pub fn audit(&self) -> PoolAudit {
+        PoolAudit {
+            used: self.used(),
+            leased: self.ledger.bytes(),
+            live: self.ledger.live(),
+        }
+    }
+
+    /// Assert `pool.used == Σ live-lease bytes`. Call only at quiescent
+    /// points with no raw (unledgered) charge outstanding.
+    #[track_caller]
+    pub fn assert_conserved(&self) {
+        let a = self.audit();
+        assert!(
+            a.conserved(),
+            "pool byte-conservation violated: used={} but leases hold {} across {} leases",
+            a.used,
+            a.leased,
+            a.live
+        );
+    }
+
     /// Max concurrent requests whose per-request KV footprint is `bytes`.
     pub fn max_batch(&self, bytes_per_request: u64) -> usize {
         if bytes_per_request == 0 {
             return usize::MAX;
         }
         (self.capacity_bytes / bytes_per_request) as usize
+    }
+}
+
+impl PoolLike for BlockPool {
+    fn try_reserve_raw(&self, bytes: u64) -> bool {
+        self.reserve(bytes)
+    }
+
+    fn release_raw(&self, bytes: u64) {
+        self.release(bytes);
+    }
+
+    fn ledger(&self) -> &LeaseLedger {
+        &self.ledger
+    }
+
+    fn pool_name(&self) -> &'static str {
+        "kv"
     }
 }
 
@@ -121,5 +355,92 @@ mod tests {
         let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
         assert!(total <= 10_000);
         assert_eq!(p.used(), total);
+    }
+
+    #[test]
+    fn lease_lifecycle_conserves_bytes() {
+        let p = Arc::new(BlockPool::new(1000));
+        let mut a = p.lease(300).expect("fits");
+        let b = p.lease(200).expect("fits");
+        assert_eq!(p.used(), 500);
+        p.assert_conserved();
+        assert!(a.grow(100));
+        assert_eq!(a.bytes(), 400);
+        a.shrink(50);
+        assert_eq!(p.used(), 550);
+        p.assert_conserved();
+        a.merge(b);
+        assert_eq!(a.bytes(), 550);
+        let audit = p.audit();
+        assert_eq!(audit.live, 1, "merge retires the absorbed lease");
+        p.assert_conserved();
+        a.settle();
+        assert_eq!(p.used(), 0);
+        assert_eq!(p.audit().live, 0);
+        p.assert_conserved();
+    }
+
+    #[test]
+    fn lease_charge_fails_closed_when_full() {
+        let p = Arc::new(BlockPool::new(100));
+        let l = p.lease(80).expect("fits");
+        assert!(p.lease(30).is_none(), "over-capacity lease must fail");
+        assert_eq!(p.used(), 80, "failed charge leaves no residue");
+        p.assert_conserved();
+        let mut l = l;
+        assert!(!l.grow(30), "over-capacity grow must fail");
+        assert_eq!(l.bytes(), 80);
+        l.settle();
+        p.assert_conserved();
+    }
+
+    #[test]
+    fn zero_byte_lease_is_legal() {
+        let p = Arc::new(BlockPool::new(10));
+        let mut l = p.lease(0).expect("zero-byte lease always fits");
+        assert!(l.grow(10));
+        l.shrink(10);
+        l.settle();
+        p.assert_conserved();
+    }
+
+    /// Seeded violation: the leak detector is itself regression-tested.
+    #[cfg(debug_assertions)]
+    #[test]
+    fn leaked_lease_panics_and_self_heals() {
+        let p = Arc::new(BlockPool::new(1000));
+        let err = std::panic::catch_unwind({
+            let p = Arc::clone(&p);
+            move || {
+                let _leak = p.lease(123).expect("fits");
+                // dropped here without settle(): the detector fires
+            }
+        })
+        .expect_err("an unsettled drop must panic in debug builds");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("leaked lease"), "got: {msg}");
+        assert!(msg.contains("123"), "got: {msg}");
+        // the drop self-healed before panicking: no residue, ledger
+        // consistent, pool still fully usable
+        assert_eq!(p.used(), 0);
+        assert_eq!(p.audit().live, 0);
+        p.assert_conserved();
+    }
+
+    #[test]
+    fn conservation_check_catches_raw_imbalance() {
+        let p = Arc::new(BlockPool::new(1000));
+        assert!(p.reserve(10)); // raw charge: invisible to the ledger
+        assert!(!p.audit().conserved());
+        let err = std::panic::catch_unwind({
+            let p = Arc::clone(&p);
+            move || p.assert_conserved()
+        });
+        assert!(err.is_err(), "raw imbalance must fail the audit");
+        p.release(10);
+        p.assert_conserved();
     }
 }

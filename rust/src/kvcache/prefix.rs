@@ -34,10 +34,12 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::quant::{packed_bits_per_elem, Precision};
+use crate::syncx::{rank, RankedMutex};
 
+use super::pool::ByteLease;
 use super::BlockPool;
 
 /// Geometry + precision key a payload is only valid for: sessions may
@@ -115,6 +117,11 @@ pub struct SharedPrefix {
     pub payload: PrefixPayload,
     /// Sessions currently attached (including suspended ones).
     refs: AtomicUsize,
+    /// The ledgered pool charge backing this entry's residency. Taken
+    /// out (and settled) by [`PrefixIndex::reclaim_unreferenced`]; if
+    /// the entry instead dies with the index (trie teardown), `Drop`
+    /// settles it quietly — the documented transfer rule for residency.
+    residency: RankedMutex<Option<ByteLease>>,
     /// Process-unique identity, used by the fused-decode engine to
     /// dedupe batch members aliasing the same physical prefix copy.
     id: u64,
@@ -139,6 +146,17 @@ impl SharedPrefix {
     }
 }
 
+impl Drop for SharedPrefix {
+    fn drop(&mut self) {
+        // index teardown: the entry leaves the trie without passing
+        // through reclaim, so its residency charge settles here — the
+        // one place a residency lease may end other than reclaim
+        if let Some(lease) = self.residency.lock().take() {
+            lease.settle();
+        }
+    }
+}
+
 impl std::fmt::Debug for SharedPrefix {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("SharedPrefix")
@@ -155,6 +173,7 @@ impl std::fmt::Debug for SharedPrefix {
 /// A session's handle on a [`SharedPrefix`]: holds one reference, knows
 /// how many tokens this session attached, and carries the
 /// copy-on-write state.
+#[must_use = "an AttachedPrefix holds a shared-prefix reference: store it or the ref drops"]
 pub struct AttachedPrefix {
     shared: Arc<SharedPrefix>,
     index: Arc<PrefixIndex>,
@@ -165,10 +184,13 @@ pub struct AttachedPrefix {
     /// active ([`PrefixGeom::bytes_for`] of `attach_len`).
     bytes: u64,
     privatized: AtomicBool,
-    /// Pool bytes reserved by [`AttachedPrefix::try_privatize`], not yet
-    /// folded into the owning session's reservation (drained by
-    /// `Session::sync_pool`).
-    cow_reserved: AtomicU64,
+    /// The ledgered pool charge created by
+    /// [`AttachedPrefix::try_privatize`], not yet folded into the
+    /// owning session's lease (drained by `Session::sync_pool` /
+    /// `release_pool` via [`AttachedPrefix::take_cow_lease`]). Ranked
+    /// above every scheduler lock: the drain runs on `fail`/`finish`
+    /// paths that hold the scheduler's inner lock.
+    cow: RankedMutex<Option<ByteLease>>,
     /// Guards the single refcount drop (privatize vs handle drop).
     detached: AtomicBool,
     /// The pool CoW privatization charges: the **owning session's**
@@ -216,16 +238,17 @@ impl AttachedPrefix {
     /// marks the attachment privatized. Returns false (leaving the
     /// region read-only) when the pool cannot cover the now-private
     /// copy — the caller must leave the shared blocks untouched.
+    #[must_use = "a denied CoW means the shared region must stay read-only"]
     pub fn try_privatize(&self) -> bool {
         if self.privatized.load(Ordering::SeqCst) {
             return true;
         }
-        if !self.charge.reserve(self.bytes) {
+        let Some(lease) = self.charge.lease(self.bytes) else {
             self.index.cow_denied.fetch_add(1, Ordering::SeqCst);
             return false;
-        }
+        };
         self.privatized.store(true, Ordering::SeqCst);
-        self.cow_reserved.fetch_add(self.bytes, Ordering::SeqCst);
+        *self.cow.lock() = Some(lease);
         self.release_ref();
         self.index.cow_faults.fetch_add(1, Ordering::SeqCst);
         true
@@ -256,11 +279,13 @@ impl AttachedPrefix {
             attach_len: self.attach_len,
             bytes: self.bytes,
             privatized: AtomicBool::new(!active),
-            cow_reserved: AtomicU64::new({
-                let moved = self.cow_reserved.swap(0, Ordering::SeqCst);
-                debug_assert_eq!(moved, 0, "rebind with undrained CoW bytes crosses pools");
-                moved
-            }),
+            cow: {
+                debug_assert!(
+                    self.cow.lock().is_none(),
+                    "rebind with an undrained CoW lease crosses pools"
+                );
+                RankedMutex::new(&rank::PREFIX_COW, None)
+            },
             detached: AtomicBool::new(!active),
             charge: pool,
         })
@@ -273,10 +298,12 @@ impl AttachedPrefix {
         self.index.note_alias(self.bytes);
     }
 
-    /// Drain pool bytes reserved by a privatization so the owning
-    /// session can fold them into its reservation.
-    pub fn take_cow_reserved(&self) -> u64 {
-        self.cow_reserved.swap(0, Ordering::SeqCst)
+    /// Drain the pool lease created by a privatization so the owning
+    /// session can fold it into its own lease. `None` once drained (or
+    /// if no privatization happened).
+    #[must_use = "the drained CoW lease must be merged into the session's lease"]
+    pub fn take_cow_lease(&self) -> Option<ByteLease> {
+        self.cow.lock().take()
     }
 
     fn release_ref(&self) {
@@ -352,7 +379,9 @@ pub struct PrefixIndex {
     /// Trie granularity — prefixes match in whole blocks, mirroring the
     /// CT block table's physical block size.
     block_size: usize,
-    root: Mutex<TrieNode>,
+    /// Ranked above the scheduler's inner lock: `try_admit` reclaims
+    /// with that lock held.
+    root: RankedMutex<TrieNode>,
     hits: AtomicU64,
     misses: AtomicU64,
     inserts: AtomicU64,
@@ -376,7 +405,7 @@ impl PrefixIndex {
         Arc::new(PrefixIndex {
             pool,
             block_size,
-            root: Mutex::new(TrieNode::default()),
+            root: RankedMutex::new(&rank::PREFIX_ROOT, TrieNode::default()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             inserts: AtomicU64::new(0),
@@ -455,7 +484,7 @@ impl PrefixIndex {
         if limit == 0 {
             return None;
         }
-        let root = self.root.lock().unwrap();
+        let root = self.root.lock();
         let mut node = &*root;
         let mut best: Option<(Arc<SharedPrefix>, usize)> = None;
         let mut depth = 0;
@@ -482,7 +511,7 @@ impl PrefixIndex {
             index: Arc::clone(self),
             attach_len,
             privatized: AtomicBool::new(false),
-            cow_reserved: AtomicU64::new(0),
+            cow: RankedMutex::new(&rank::PREFIX_COW, None),
             detached: AtomicBool::new(false),
             charge: Arc::clone(&self.pool),
         }))
@@ -504,7 +533,7 @@ impl PrefixIndex {
         if n == 0 || n % self.block_size != 0 || payload.full_len() != n {
             return None;
         }
-        let mut root = self.root.lock().unwrap();
+        let mut root = self.root.lock();
         // dedupe: someone published these tokens (or a longer prefix of
         // the same stream) between our miss and now
         {
@@ -532,17 +561,17 @@ impl PrefixIndex {
                     index: Arc::clone(self),
                     attach_len: n,
                     privatized: AtomicBool::new(false),
-                    cow_reserved: AtomicU64::new(0),
+                    cow: RankedMutex::new(&rank::PREFIX_COW, None),
                     detached: AtomicBool::new(false),
                     charge: Arc::clone(&self.pool),
                 }));
             }
         }
         let bytes = geom.bytes_for(n);
-        if !self.pool.reserve(bytes) {
+        let Some(residency) = self.pool.lease(bytes) else {
             self.publish_fails.fetch_add(1, Ordering::SeqCst);
             return None;
-        }
+        };
         let shared = Arc::new(SharedPrefix {
             geom,
             full_len: n,
@@ -551,6 +580,7 @@ impl PrefixIndex {
             refs: AtomicUsize::new(1), // the publisher attaches
             id: NEXT_PREFIX_ID.fetch_add(1, Ordering::SeqCst),
             last_touch: AtomicU64::new(0),
+            residency: RankedMutex::new(&rank::PREFIX_RESIDENCY, Some(residency)),
         });
         self.touch(&shared);
         let mut node = &mut *root;
@@ -569,7 +599,7 @@ impl PrefixIndex {
             index: Arc::clone(self),
             attach_len: n,
             privatized: AtomicBool::new(false),
-            cow_reserved: AtomicU64::new(0),
+            cow: RankedMutex::new(&rank::PREFIX_COW, None),
             detached: AtomicBool::new(false),
             charge: Arc::clone(&self.pool),
         }))
@@ -584,7 +614,7 @@ impl PrefixIndex {
         if need == 0 {
             return 0;
         }
-        let mut root = self.root.lock().unwrap();
+        let mut root = self.root.lock();
         let mut candidates: Vec<Arc<SharedPrefix>> = Vec::new();
         collect_unreferenced(&root, &mut candidates);
         if candidates.is_empty() {
@@ -607,7 +637,16 @@ impl PrefixIndex {
         drop(root);
         let mut released = 0u64;
         for v in &victims {
-            self.pool.release(v.bytes);
+            // settle the residency lease (the ledgered charge created at
+            // publish); residency ranks above root, but taking it after
+            // the trie unlock keeps the critical section minimal
+            match v.residency.lock().take() {
+                Some(lease) => {
+                    debug_assert_eq!(lease.bytes(), v.bytes, "residency lease drifted");
+                    lease.settle();
+                }
+                None => debug_assert!(false, "reclaimed entry had no residency lease"),
+            }
             released += v.bytes;
             self.resident_bytes.fetch_sub(v.bytes, Ordering::SeqCst);
             self.resident_entries.fetch_sub(1, Ordering::SeqCst);
@@ -727,8 +766,9 @@ mod tests {
         assert!(a.is_active() && b.is_active());
         assert!(a.try_privatize(), "pool has room");
         assert!(!a.is_active());
-        assert_eq!(a.take_cow_reserved(), g.bytes_for(8));
-        assert_eq!(a.take_cow_reserved(), 0, "drained once");
+        let cow = a.take_cow_lease().expect("privatize parked a lease");
+        assert_eq!(cow.bytes(), g.bytes_for(8));
+        assert!(a.take_cow_lease().is_none(), "drained once");
         assert_eq!(pool.used(), 2 * g.bytes_for(8), "residency + private copy");
         // exhaust the pool: b's CoW is denied and it stays shared
         assert!(pool.reserve(pool.free()));
@@ -741,6 +781,7 @@ mod tests {
         assert_eq!(idx.reclaim_unreferenced(u64::MAX), 0);
         drop(b);
         assert_eq!(idx.reclaim_unreferenced(u64::MAX), g.bytes_for(8));
+        cow.settle();
     }
 
     #[test]
@@ -842,7 +883,8 @@ mod tests {
         assert_eq!(idx.reclaim_unreferenced(u64::MAX), 0, "new handle still holds a ref");
 
         assert!(moved.try_privatize(), "replica pool has room");
-        assert_eq!(moved.take_cow_reserved(), residency);
+        let cow = moved.take_cow_lease().expect("privatize parked a lease");
+        assert_eq!(cow.bytes(), residency);
         assert_eq!(replica.used(), residency, "CoW charged the replica pool");
         assert_eq!(fleet.used(), residency, "fleet pool holds residency only");
         assert_eq!(idx.stats().cow_faults, 1);
@@ -853,6 +895,8 @@ mod tests {
         assert_eq!(idx.reclaim_unreferenced(u64::MAX), residency);
         assert_eq!(fleet.used(), 0);
         assert_eq!(replica.used(), residency);
+        cow.settle();
+        replica.assert_conserved();
     }
 
     /// Concurrency regression (ISSUE 9 bugfix): replica threads hammer
@@ -886,11 +930,11 @@ mod tests {
                         assert_eq!(mine.attach_len(), 8);
                         assert_eq!(mine.payload().full_len(), 8, "payload gone mid-use");
                         if i % 3 == 0 && mine.try_privatize() {
-                            // drain the CoW reserve the way Session does,
-                            // then release it so the books can balance
-                            let b = mine.take_cow_reserved();
-                            assert_eq!(b, g.bytes_for(8));
-                            replica.release(b);
+                            // drain the CoW lease the way Session does,
+                            // then settle it so the books can balance
+                            let cow = mine.take_cow_lease().expect("privatize parked a lease");
+                            assert_eq!(cow.bytes(), g.bytes_for(8));
+                            cow.settle();
                         }
                         drop(mine);
                     }

@@ -30,6 +30,7 @@
 //! [`KvBackend::restore`]: super::KvBackend::restore
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::baselines::eviction::EvictionPolicy;
 use crate::compress::tbe::TbeStats;
@@ -37,7 +38,11 @@ use crate::thought::classifier::ClassifierState;
 
 use super::ct::CtSnapshot;
 use super::fp32::Fp32CacheSnapshot;
+use super::pool::{Lease, LeaseLedger, PoolAudit, PoolLike};
 use super::Thought;
+
+/// A ledgered lease of host snapshot bytes against a [`SwapPool`].
+pub type SwapLease = Lease<SwapPool>;
 
 /// Host-side image of a [`QuantBackend`](super::QuantBackend): the
 /// compacted CT cache plus every piece of decode-loop policy state that
@@ -78,6 +83,7 @@ pub enum SnapshotPayload {
 
 /// A suspended request's complete cache state, living in host memory
 /// while the request waits for re-admission.
+#[must_use = "dropping a KvSnapshot discards a session's only restorable cache image"]
 pub struct KvSnapshot {
     /// Host bytes this snapshot occupies — what [`SwapPool::reserve`]
     /// charges on swap-out and [`SwapPool::release`] returns on swap-in.
@@ -170,12 +176,40 @@ impl SwapPool {
 
     /// Try to reserve `bytes` of host memory; false if the pool would
     /// overflow (the caller must fall back to recompute preemption).
+    ///
+    /// Unledgered escape hatch — long-lived charges should be a
+    /// [`SwapLease`] via [`SwapPool::lease`] instead.
+    #[must_use = "a failed reserve means the bytes were NOT taken"]
     pub fn reserve(&self, bytes: u64) -> bool {
         self.bytes.reserve(bytes)
     }
 
     pub fn release(&self, bytes: u64) {
         self.bytes.release(bytes)
+    }
+
+    /// Charge `bytes` as a ledgered [`SwapLease`]; `None` if full (the
+    /// caller must fall back to recompute preemption).
+    pub fn lease(self: &Arc<Self>, bytes: u64) -> Option<SwapLease> {
+        Lease::charge(self, bytes)
+    }
+
+    /// Conservation snapshot; see [`super::BlockPool::audit`].
+    pub fn audit(&self) -> PoolAudit {
+        self.bytes.audit()
+    }
+
+    /// Assert `used == Σ live-lease bytes` at a quiescent point.
+    #[track_caller]
+    pub fn assert_conserved(&self) {
+        let a = self.audit();
+        assert!(
+            a.conserved(),
+            "swap-pool byte-conservation violated: used={} but leases hold {} across {} leases",
+            a.used,
+            a.leased,
+            a.live
+        );
     }
 
     /// Record a completed swap-out of `bytes` (already reserved).
@@ -208,6 +242,24 @@ impl SwapPool {
             restore_ns: self.restore_ns.load(Ordering::SeqCst),
             fallbacks: self.fallbacks.load(Ordering::SeqCst),
         }
+    }
+}
+
+impl PoolLike for SwapPool {
+    fn try_reserve_raw(&self, bytes: u64) -> bool {
+        self.bytes.reserve(bytes)
+    }
+
+    fn release_raw(&self, bytes: u64) {
+        self.bytes.release(bytes);
+    }
+
+    fn ledger(&self) -> &LeaseLedger {
+        self.bytes.ledger()
+    }
+
+    fn pool_name(&self) -> &'static str {
+        "swap"
     }
 }
 

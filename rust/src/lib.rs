@@ -36,11 +36,14 @@
 //! * [`compress`] / [`thought`] / [`baselines`] — ThinKV policies and the
 //!   paper's comparison systems.
 //! * [`sim`] / [`bench`] — trace simulator, GPU cost model, bench tables.
+//! * [`syncx`] — ranked-lock facade (lock-hierarchy enforcement) and the
+//!   deterministic interleaving explorer behind `make loom`.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the model
 //! once, and the Rust binary is self-contained afterwards.
 
 pub mod util;
+pub mod syncx;
 pub mod quant;
 pub mod kvcache;
 pub mod thought;

@@ -192,6 +192,13 @@ pub struct SchedSnapshot {
     pub pool_used: u64,
     pub pool_peak: u64,
     pub pool_free: u64,
+    /// Live byte leases charged against the pool (ledger gauge).
+    pub pool_leases: u64,
+    /// Bytes those live leases hold; equals `pool_used` at quiescent
+    /// points (the conservation invariant [`BlockPool::audit`] checks).
+    ///
+    /// [`BlockPool::audit`]: crate::kvcache::BlockPool::audit
+    pub pool_leased_bytes: u64,
     /// Total admissions (re-admissions after preemption included).
     pub admissions: u64,
     /// Sessions preempted (reset + requeued) to reclaim KV bytes.
@@ -342,6 +349,8 @@ impl SchedSnapshot {
         j.set("pool_used", Json::Num(self.pool_used as f64));
         j.set("pool_peak", Json::Num(self.pool_peak as f64));
         j.set("pool_free", Json::Num(self.pool_free as f64));
+        j.set("pool_leases", Json::Num(self.pool_leases as f64));
+        j.set("pool_leased_bytes", Json::Num(self.pool_leased_bytes as f64));
         j.set("admissions", Json::Num(self.admissions as f64));
         j.set("preemptions", Json::Num(self.preemptions as f64));
         j.set("completions", Json::Num(self.completions as f64));
@@ -425,6 +434,8 @@ impl SchedSnapshot {
         self.pool_used += other.pool_used;
         self.pool_peak += other.pool_peak;
         self.pool_free += other.pool_free;
+        self.pool_leases += other.pool_leases;
+        self.pool_leased_bytes += other.pool_leased_bytes;
         self.admissions += other.admissions;
         self.preemptions += other.preemptions;
         self.completions += other.completions;

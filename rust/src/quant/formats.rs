@@ -96,7 +96,7 @@ fn tables() -> &'static Tables {
         }
         let mut pos: Vec<(f32, u8)> = (0..0x80u16)
             .filter(|&c| !((c >> 3) == 0xF && (c & 7) == 7))
-            .map(|c| (decode[c as usize], c as u8))
+            .map(|c| (decode[usize::from(c)], c as u8))
             .collect();
         pos.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         Tables {
@@ -132,7 +132,7 @@ pub fn e4m3_encode(x: f32) -> u8 {
 }
 
 pub fn e4m3_decode(code: u8) -> f32 {
-    tables().decode[code as usize]
+    tables().decode[usize::from(code)]
 }
 
 /// Snap onto the E4M3 grid: decode(encode(x)).
@@ -306,7 +306,7 @@ mod tests {
             let t = e4m3_table();
             let best = (0..0x7Fu8)
                 .filter(|&c| !((c >> 3) == 0xF && (c & 7) == 7))
-                .map(|c| t[c as usize])
+                .map(|c| t[usize::from(c)])
                 .fold((f32::INFINITY, 0.0f32), |(bd, bv), v| {
                     let d = (v - mag).abs();
                     if d < bd {

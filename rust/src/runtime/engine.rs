@@ -584,7 +584,7 @@ impl Engine {
         args.extend(dyn_bufs.iter());
         let outs = self.run_tuple(&exe, &args)?;
         self.decode_execs.set(self.decode_execs.get() + 1);
-        decode_out(outs)
+        decode_out(&outs)
     }
 
     /// Run one decode step over an f32 paged cache (FullKV / eviction-only).
@@ -638,7 +638,7 @@ impl Engine {
         args.extend(dyn_bufs.iter());
         let outs = self.run_tuple(&exe, &args)?;
         self.decode_execs.set(self.decode_execs.get() + 1);
-        decode_out(outs)
+        decode_out(&outs)
     }
 
     /// Run prompt prefill (tokens padded/truncated to the exported length).
@@ -851,7 +851,7 @@ impl Engine {
         args.extend(dyn_bufs.iter());
         let outs = self.run_tuple(&exe, &args)?;
         self.decode_execs.set(self.decode_execs.get() + 1);
-        split_batch_out(&m, outs, n, c)
+        split_batch_out(&m, &outs, n, c)
     }
 
     /// One fused execute of `decode_fp32_c{c}_b{bw}` — the f32-arena twin
@@ -958,7 +958,7 @@ impl Engine {
         args.extend(dyn_bufs.iter());
         let outs = self.run_tuple(&exe, &args)?;
         self.decode_execs.set(self.decode_execs.get() + 1);
-        split_batch_out(&m, outs, n, c)
+        split_batch_out(&m, &outs, n, c)
     }
 
     /// Can `[start, start+len)` be served by the chunk artifacts? Both
@@ -1239,7 +1239,7 @@ impl DecodeEngine for Engine {
     }
 }
 
-fn decode_out(outs: Vec<xla::Literal>) -> Result<DecodeOut> {
+fn decode_out(outs: &[xla::Literal]) -> Result<DecodeOut> {
     if outs.len() != 4 {
         bail!("decode step returned {} outputs, want 4", outs.len());
     }
@@ -1256,7 +1256,7 @@ fn decode_out(outs: Vec<xla::Literal>) -> Result<DecodeOut> {
 /// lanes' per-member [`DecodeOut`]s (padded lanes are dropped).
 fn split_batch_out(
     m: &crate::model::ModelConfig,
-    outs: Vec<xla::Literal>,
+    outs: &[xla::Literal],
     n: usize,
     c: usize,
 ) -> Result<Vec<DecodeOut>> {

@@ -235,7 +235,7 @@ fn handle_conn(
                         f.set("stream", Json::Bool(true));
                         f.set(
                             "tokens",
-                            Json::Arr(frame.iter().map(|&t| Json::Num(t as f64)).collect()),
+                            Json::Arr(frame.iter().map(|&t| Json::Num(f64::from(t))).collect()),
                         );
                         writeln!(writer, "{}", f.to_string())?;
                     }
@@ -265,7 +265,7 @@ fn handle_conn(
         }
         out.set(
             "tokens",
-            Json::Arr(result.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+            Json::Arr(result.tokens.iter().map(|&t| Json::Num(f64::from(t))).collect()),
         );
         out.set("ttft_ms", Json::Num(result.ttft_ms));
         // ttft decomposition: engine prefill time vs scheduling wait
@@ -329,7 +329,7 @@ impl Client {
         let mut req = Json::obj();
         req.set(
             "prompt",
-            Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()),
+            Json::Arr(prompt.iter().map(|&t| Json::Num(f64::from(t))).collect()),
         );
         req.set("id", Json::Num(id as f64));
         writeln!(self.writer, "{}", req.to_string())?;
@@ -345,7 +345,7 @@ impl Client {
         let mut req = Json::obj();
         req.set(
             "prompt",
-            Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()),
+            Json::Arr(prompt.iter().map(|&t| Json::Num(f64::from(t))).collect()),
         );
         req.set("id", Json::Num(id as f64));
         req.set("stream", Json::Bool(true));

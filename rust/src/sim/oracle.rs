@@ -338,7 +338,7 @@ mod tests {
         let mut h = 0xcbf2_9ce4_8422_2325u64;
         let mut eat = |bytes: &[u8]| {
             for &b in bytes {
-                h ^= b as u64;
+                h ^= u64::from(b);
                 h = h.wrapping_mul(0x0000_0100_0000_01b3);
             }
         };
@@ -347,7 +347,7 @@ mod tests {
             eat(&r.kept_info_fid.to_bits().to_le_bytes());
             eat(&(r.min_kept_count as u64).to_le_bytes());
             eat(&r.importance.to_bits().to_le_bytes());
-            eat(&[r.anchor as u8]);
+            eat(&[u8::from(r.anchor)]);
         }
         eat(&out.pass1.to_bits().to_le_bytes());
         eat(&out.p_correct.to_bits().to_le_bytes());

@@ -536,7 +536,7 @@ impl ArrivalTrace {
         let mut h = 0xcbf2_9ce4_8422_2325u64;
         let mut eat = |h: &mut u64, x: u64| {
             for b in x.to_le_bytes() {
-                *h ^= b as u64;
+                *h ^= u64::from(b);
                 *h = h.wrapping_mul(0x100_0000_01b3);
             }
         };

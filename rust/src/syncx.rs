@@ -1,0 +1,422 @@
+//! Instrumented synchronization facade: lock wrappers that carry a
+//! static **lock rank** and enforce the crate-wide lock hierarchy at
+//! run time in debug builds.
+//!
+//! The serving tier holds at most two locks at once, but *which* two is
+//! a correctness contract: `Scheduler::try_admit` calls into the prefix
+//! trie with the scheduler inner lock held, and `Session::release_pool`
+//! drains CoW reservations (a per-attachment cell) from `fail`/`finish`
+//! paths that also hold the inner lock. Instead of relying on reviewer
+//! vigilance, every `Mutex`/`RwLock` on those paths is a
+//! [`RankedMutex`]/[`RankedRwLock`] carrying one of the [`rank`]
+//! constants; debug builds keep a thread-local stack of held ranks and
+//! panic — with **both** acquisition sites — whenever a thread acquires
+//! a lock whose rank is not strictly greater than every rank it already
+//! holds. Release builds compile the checks out entirely (the wrappers
+//! are zero-cost shims over `std::sync`).
+//!
+//! The hierarchy (must acquire in strictly increasing rank order):
+//!
+//! | rank | constant | protects |
+//! |-----:|----------|----------|
+//! | 20 | [`rank::SCHED_INNER`]      | scheduler queues + admission state |
+//! | 30 | [`rank::SLO_BOOK`]         | per-class SLO attainment ledger |
+//! | 40 | [`rank::PREFIX_ROOT`]      | prefix-index trie root |
+//! | 50 | [`rank::PREFIX_RESIDENCY`] | a resident prefix's pool lease |
+//! | 60 | [`rank::PREFIX_COW`]       | an attachment's CoW lease cell |
+//!
+//! Poisoning is treated as fatal inside the facade (`lock()` unwraps),
+//! matching the crate's existing `.lock().unwrap()` convention — a
+//! panic while holding a scheduler lock is unrecoverable anyway.
+//!
+//! The [`model`] submodule hosts the deterministic interleaving
+//! explorer (`make loom`) that model-checks the three hand-rolled lock
+//! dances; see `rust/tests/loom_models.rs`.
+//!
+//! Under `--cfg loom` the facade would re-export the `loom` crate's
+//! permutation-testing lock types instead; the container image does not
+//! ship the `loom` crate, so that path is gated off and the in-repo
+//! explorer in [`model`] fills the role with zero dependencies.
+
+pub mod model;
+
+#[cfg(loom)]
+pub use loom::sync::{Mutex as RankedMutexInner, RwLock as RankedRwLockInner};
+#[cfg(not(loom))]
+use std::sync::{Mutex as RankedMutexInner, RwLock as RankedRwLockInner};
+
+use std::panic::Location;
+use std::sync::{Condvar, MutexGuard, RwLockReadGuard, RwLockWriteGuard};
+
+/// A static lock rank: a level in the crate-wide lock hierarchy plus a
+/// human-readable name for diagnostics. Declare one `static` per lock
+/// family (see [`rank`]); the pointer doubles as the lock's identity in
+/// panic messages.
+#[derive(Debug)]
+pub struct LockRank {
+    /// Diagnostic name, printed on violation.
+    pub name: &'static str,
+    /// Hierarchy level. A thread may only acquire a lock whose order is
+    /// **strictly greater** than the maximum order it currently holds
+    /// (strict, so two locks of the same family can never nest).
+    pub order: u32,
+}
+
+/// The crate's lock hierarchy. Gaps between levels are deliberate:
+/// future locks slot in without renumbering.
+pub mod rank {
+    use super::LockRank;
+
+    /// Scheduler queues + admission state (`Scheduler.inner`).
+    pub static SCHED_INNER: LockRank = LockRank { name: "sched.inner", order: 20 };
+    /// Per-class SLO attainment ledger (`Scheduler.slo_book`), taken
+    /// from `finish`/`fail` with the inner lock held.
+    pub static SLO_BOOK: LockRank = LockRank { name: "sched.slo_book", order: 30 };
+    /// Prefix-index trie root (`PrefixIndex.root`), taken from
+    /// `try_admit` reclamation with the inner lock held.
+    pub static PREFIX_ROOT: LockRank = LockRank { name: "prefix.root", order: 40 };
+    /// A resident `SharedPrefix`'s pool-lease cell; taken only after
+    /// the trie root is released (reclaim) or during publish.
+    pub static PREFIX_RESIDENCY: LockRank = LockRank { name: "prefix.residency", order: 50 };
+    /// An `AttachedPrefix`'s CoW-lease cell, drained by
+    /// `Session::release_pool` under the inner lock.
+    pub static PREFIX_COW: LockRank = LockRank { name: "prefix.cow", order: 60 };
+}
+
+#[cfg(debug_assertions)]
+mod held {
+    //! Thread-local stack of (rank, acquisition site) for every ranked
+    //! lock the current thread holds. Entries carry a unique id so
+    //! guards dropped out of LIFO order unwind correctly.
+
+    use super::LockRank;
+    use std::cell::RefCell;
+    use std::panic::Location;
+
+    struct Held {
+        rank: &'static LockRank,
+        site: &'static Location<'static>,
+        id: u64,
+    }
+
+    thread_local! {
+        static STACK: RefCell<Vec<Held>> = const { RefCell::new(Vec::new()) };
+        static NEXT_ID: RefCell<u64> = const { RefCell::new(0) };
+    }
+
+    /// Check `rank` against every held rank, then push it. Panics with
+    /// both acquisition sites on an out-of-rank acquire. Returns the
+    /// entry id [`released`] pops by.
+    pub fn acquired(rank: &'static LockRank, site: &'static Location<'static>) -> u64 {
+        STACK.with(|stack| {
+            let stack = stack.borrow();
+            if let Some(worst) = stack.iter().max_by_key(|h| h.rank.order) {
+                assert!(
+                    rank.order > worst.rank.order,
+                    "lock-rank violation: acquiring `{}` (rank {}) at {} \
+                     while holding `{}` (rank {}) acquired at {}",
+                    rank.name,
+                    rank.order,
+                    site,
+                    worst.rank.name,
+                    worst.rank.order,
+                    worst.site,
+                );
+            }
+        });
+        let id = NEXT_ID.with(|n| {
+            let mut n = n.borrow_mut();
+            *n += 1;
+            *n
+        });
+        STACK.with(|stack| stack.borrow_mut().push(Held { rank, site, id }));
+        id
+    }
+
+    /// Pop the entry pushed by [`acquired`]; by id, not position —
+    /// guards may drop in any order.
+    pub fn released(id: u64) {
+        STACK.with(|stack| {
+            let mut stack = stack.borrow_mut();
+            if let Some(pos) = stack.iter().position(|h| h.id == id) {
+                stack.remove(pos);
+            }
+        });
+    }
+}
+
+/// A [`std::sync::Mutex`] that participates in the lock hierarchy.
+#[derive(Debug)]
+pub struct RankedMutex<T> {
+    rank: &'static LockRank,
+    inner: RankedMutexInner<T>,
+}
+
+impl<T> RankedMutex<T> {
+    pub fn new(rank: &'static LockRank, value: T) -> RankedMutex<T> {
+        RankedMutex { rank, inner: RankedMutexInner::new(value) }
+    }
+
+    /// Acquire the lock, enforcing the rank discipline in debug builds.
+    /// Poisoning is fatal (unwrapped), per crate convention.
+    #[track_caller]
+    pub fn lock(&self) -> RankedGuard<'_, T> {
+        let site = Location::caller();
+        RankedGuard {
+            inner: Some(self.inner.lock().unwrap()),
+            token: HeldToken::acquire(self.rank, site),
+        }
+    }
+
+    /// Consume the mutex and return its value (no rank check: nothing
+    /// is acquired — exclusive access is proven by ownership).
+    pub fn into_inner(self) -> T {
+        self.inner.into_inner().unwrap()
+    }
+}
+
+/// Debug-only record of a held ranked lock; release builds are a ZST.
+#[derive(Debug)]
+struct HeldToken {
+    #[cfg(debug_assertions)]
+    id: u64,
+}
+
+impl HeldToken {
+    #[allow(unused_variables)]
+    fn acquire(rank: &'static LockRank, site: &'static Location<'static>) -> HeldToken {
+        HeldToken {
+            #[cfg(debug_assertions)]
+            id: held::acquired(rank, site),
+        }
+    }
+}
+
+impl Drop for HeldToken {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        held::released(self.id);
+    }
+}
+
+/// Guard for a [`RankedMutex`]; unregisters its rank on drop.
+///
+/// The inner guard lives in an `Option` only so [`RankedGuard::wait_on`]
+/// can move it out while the struct's `Drop` glue still runs; it is
+/// `Some` at every other moment.
+#[derive(Debug)]
+pub struct RankedGuard<'a, T> {
+    inner: Option<MutexGuard<'a, T>>,
+    token: HeldToken,
+}
+
+impl<'a, T> RankedGuard<'a, T> {
+    /// Block on `cv`, releasing and re-acquiring the underlying mutex.
+    /// The rank entry is kept across the wait: the thread holds no
+    /// *other* lock while blocked (the hierarchy already guaranteed the
+    /// waited-on lock is its maximum), and keeping the entry means the
+    /// re-acquire needs no re-check.
+    pub fn wait_on(mut self, cv: &Condvar) -> RankedGuard<'a, T> {
+        let guard = self.inner.take().expect("guard present outside wait_on");
+        self.inner = Some(cv.wait(guard).unwrap());
+        self
+    }
+}
+
+impl<T> std::ops::Deref for RankedGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard present outside wait_on")
+    }
+}
+
+impl<T> std::ops::DerefMut for RankedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard present outside wait_on")
+    }
+}
+
+/// A [`std::sync::RwLock`] that participates in the lock hierarchy.
+/// Readers and writers are ranked identically: a read lock still
+/// excludes writers, so holding one while acquiring a lower rank can
+/// deadlock all the same.
+#[derive(Debug)]
+pub struct RankedRwLock<T> {
+    rank: &'static LockRank,
+    inner: RankedRwLockInner<T>,
+}
+
+impl<T> RankedRwLock<T> {
+    pub fn new(rank: &'static LockRank, value: T) -> RankedRwLock<T> {
+        RankedRwLock { rank, inner: RankedRwLockInner::new(value) }
+    }
+
+    #[track_caller]
+    pub fn read(&self) -> RankedReadGuard<'_, T> {
+        let site = Location::caller();
+        RankedReadGuard {
+            inner: self.inner.read().unwrap(),
+            _token: HeldToken::acquire(self.rank, site),
+        }
+    }
+
+    #[track_caller]
+    pub fn write(&self) -> RankedWriteGuard<'_, T> {
+        let site = Location::caller();
+        RankedWriteGuard {
+            inner: self.inner.write().unwrap(),
+            _token: HeldToken::acquire(self.rank, site),
+        }
+    }
+}
+
+/// Shared guard for a [`RankedRwLock`].
+#[derive(Debug)]
+pub struct RankedReadGuard<'a, T> {
+    inner: RwLockReadGuard<'a, T>,
+    _token: HeldToken,
+}
+
+impl<T> std::ops::Deref for RankedReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+/// Exclusive guard for a [`RankedRwLock`].
+#[derive(Debug)]
+pub struct RankedWriteGuard<'a, T> {
+    inner: RwLockWriteGuard<'a, T>,
+    _token: HeldToken,
+}
+
+impl<T> std::ops::Deref for RankedWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> std::ops::DerefMut for RankedWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    static LOW: LockRank = LockRank { name: "test.low", order: 10 };
+    static HIGH: LockRank = LockRank { name: "test.high", order: 99 };
+
+    #[test]
+    fn in_order_nesting_is_fine() {
+        let a = RankedMutex::new(&LOW, 1u32);
+        let b = RankedMutex::new(&HIGH, 2u32);
+        let ga = a.lock();
+        let gb = b.lock();
+        assert_eq!(*ga + *gb, 3);
+    }
+
+    #[test]
+    fn reacquire_after_release_is_fine() {
+        let a = RankedMutex::new(&HIGH, 0u32);
+        for _ in 0..3 {
+            let mut g = a.lock();
+            *g += 1;
+        }
+        assert_eq!(a.into_inner(), 3);
+    }
+
+    #[test]
+    fn out_of_order_drop_unwinds_correctly() {
+        // drop the *outer* (lower-rank) guard first; the held stack
+        // must still unwind by id, leaving HIGH registered so that a
+        // subsequent LOW acquire is (correctly) rejected.
+        let a = RankedMutex::new(&LOW, ());
+        let b = RankedMutex::new(&HIGH, ());
+        let ga = a.lock();
+        let gb = b.lock();
+        drop(ga);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = a.lock(); // HIGH still held: out of rank
+        }));
+        assert!(err.is_err(), "acquire below a held rank must panic");
+        drop(gb);
+        let _ga = a.lock(); // all released: fine again
+    }
+
+    /// Seeded violation: the detector itself is regression-tested.
+    #[test]
+    fn out_of_rank_acquire_panics_with_both_sites() {
+        let hi = RankedMutex::new(&HIGH, ());
+        let lo = RankedMutex::new(&LOW, ());
+        let _g = hi.lock();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _bad = lo.lock();
+        }))
+        .expect_err("out-of-rank acquire must panic in debug builds");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| (*err.downcast_ref::<&str>().unwrap_or(&"")).to_string());
+        assert!(msg.contains("lock-rank violation"), "got: {msg}");
+        assert!(msg.contains("test.low") && msg.contains("test.high"), "got: {msg}");
+        // both acquisition sites: this file appears twice
+        assert!(msg.matches("syncx.rs").count() >= 2, "got: {msg}");
+    }
+
+    #[test]
+    fn same_rank_nesting_panics() {
+        let a = RankedMutex::new(&HIGH, ());
+        let b = RankedMutex::new(&HIGH, ());
+        let _ga = a.lock();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _gb = b.lock();
+        }));
+        assert!(err.is_err(), "same-rank nesting must panic (strict order)");
+    }
+
+    #[test]
+    fn rwlock_ranks_apply_to_readers_and_writers() {
+        let rw = RankedRwLock::new(&HIGH, 5u32);
+        {
+            let r = rw.read();
+            assert_eq!(*r, 5);
+        }
+        {
+            let mut w = rw.write();
+            *w += 1;
+        }
+        let lo = RankedMutex::new(&LOW, ());
+        let _r = rw.read();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _bad = lo.lock();
+        }));
+        assert!(err.is_err(), "read guards must enforce rank too");
+    }
+
+    #[test]
+    fn condvar_wait_keeps_rank_registered() {
+        use std::sync::{Arc, Condvar};
+        let m = Arc::new(RankedMutex::new(&LOW, false));
+        let cv = Arc::new(Condvar::new());
+        let (m2, cv2) = (Arc::clone(&m), Arc::clone(&cv));
+        let waiter = std::thread::spawn(move || {
+            let mut g = m2.lock();
+            while !*g {
+                g = g.wait_on(&cv2);
+            }
+            *g
+        });
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        {
+            let mut g = m.lock();
+            *g = true;
+        }
+        cv.notify_all();
+        assert!(waiter.join().unwrap());
+    }
+}

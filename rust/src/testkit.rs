@@ -232,7 +232,7 @@ impl DecodeEngine for CausalEngine {
         let m = &self.m;
         let span = capacity + m.buf_slots;
         let kvd = m.n_kv_heads * m.d_head;
-        let seed = ((token as u32 as u64) << 32) | pos as u32 as u64;
+        let seed = (u64::from(token as u32) << 32) | u64::from(pos as u32);
         let mut rng = Rng::new(seed ^ 0x5EED_CAFE);
         let mut logits = vec![0f32; m.vocab];
         let mut new_k = vec![0f32; m.n_layers * kvd];

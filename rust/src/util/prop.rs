@@ -34,7 +34,7 @@ impl Gen {
     }
 
     pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
-        self.rng.uniform(lo as f64, hi as f64) as f32
+        self.rng.uniform(f64::from(lo), f64::from(hi)) as f32
     }
 
     pub fn bool(&mut self) -> bool {

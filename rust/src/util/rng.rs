@@ -16,8 +16,8 @@ const MUL: u128 = 0x2360ed051fc65da44385df649fccf645;
 impl Rng {
     pub fn new(seed: u64) -> Rng {
         let mut r = Rng {
-            state: (seed as u128).wrapping_mul(0x9e3779b97f4a7c15) ^ 0x853c49e6748fea9b2c0,
-            inc: ((seed as u128) << 1) | 1,
+            state: u128::from(seed).wrapping_mul(0x9e3779b97f4a7c15) ^ 0x853c49e6748fea9b2c0,
+            inc: (u128::from(seed) << 1) | 1,
         };
         for _ in 0..4 {
             r.next_u64();
@@ -122,7 +122,7 @@ impl Rng {
 
     pub fn fill_normal_f32(&mut self, out: &mut [f32], mean: f32, std: f32) {
         for x in out.iter_mut() {
-            *x = self.normal_with(mean as f64, std as f64) as f32;
+            *x = self.normal_with(f64::from(mean), f64::from(std)) as f32;
         }
     }
 }

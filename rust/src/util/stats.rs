@@ -157,7 +157,7 @@ mod tests {
 
     #[test]
     fn running_merge() {
-        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin()).collect();
+        let xs: Vec<f64> = (0..100).map(|i| f64::from(i).sin()).collect();
         let mut a = Running::new();
         let mut b = Running::new();
         for (i, x) in xs.iter().enumerate() {

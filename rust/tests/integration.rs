@@ -313,6 +313,10 @@ fn scheduler_completes_oversubscribed_batch_within_pool() {
     assert_eq!(stats.queue_depth, 0);
     assert_eq!(stats.running, 0);
     assert_eq!(stats.pool_used, 0, "all bytes returned at quiescence");
+    // ledger conservation at quiescence: used == Σ live-lease bytes
+    // (and both are zero here — no admission/bond/CoW lease leaked)
+    coordinator.pool().assert_conserved();
+    assert_eq!((stats.pool_leases, stats.pool_leased_bytes), (0, 0));
 }
 
 /// The ISSUE 2 acceptance scenario: with suspend-to-host swap enabled,
@@ -391,6 +395,12 @@ fn swapped_preemption_preserves_streams_with_zero_recompute() {
     assert_eq!(stats.swap_bytes_in, stats.swap_bytes_out);
     assert_eq!(stats.swap_used, 0, "swap pool drained at quiescence");
     assert_eq!(stats.pool_used, 0);
+    // both ledgers must balance at quiescence: every admission, growth
+    // bond, and swap-stage lease was settled exactly once
+    coordinator.pool().assert_conserved();
+    if let Some(swap) = coordinator.router().replicas()[0].scheduler().swap_pool() {
+        swap.assert_conserved();
+    }
 }
 
 #[test]

@@ -1,0 +1,444 @@
+//! `make loom` — exhaustive interleaving checks for the scheduler's
+//! three hairiest lock dances, driven by the in-crate explorer
+//! (`thinkv::syncx::model`, the container carries no external loom
+//! crate).
+//!
+//! Each model abstracts one real dance into cooperative state-machine
+//! threads whose atomic actions are the real code's critical sections
+//! (one action = one region executed under the scheduler lock, or one
+//! lock-free step between regions — exactly the granularity at which
+//! the real threads interleave). The invariants are the ones the
+//! production comments promise:
+//!
+//! * **Model A — `preempt_unlocked`**: the snapshot copy runs outside
+//!   the scheduler lock with the victim detached; `pending_preempts`
+//!   is the only thing standing between a starving session and a
+//!   spurious "KV demand exceeds the pool" failure. Checked: no
+//!   spurious failure, the victim requeues exactly once, pool bytes
+//!   conserve across every interleaving.
+//! * **Model B — `rebind_charge` vs `reclaim_unreferenced`**: a
+//!   migrating session re-attaches to the fleet prefix by bumping the
+//!   new handle's ref **before** releasing the old one, so a
+//!   concurrent reclaim pass never observes a transient zero refcount
+//!   on a still-referenced prefix. The seeded release-before-bump
+//!   variant must be caught.
+//! * **Model C — `take_for_migration` / `migration_release`**: the
+//!   migrated session lands on exactly one replica, `pending_preempts`
+//!   returns to zero once the source is released, and bytes conserve
+//!   across both device pools and the staging swap pool.
+
+use thinkv::syncx::model::{explore, Step, Thread};
+
+/// Device bytes the modeled victim / migrant holds.
+const BYTES: u64 = 4;
+/// Bytes the modeled starving / admitting session needs.
+const NEED: u64 = 3;
+/// Device pool capacity for models A and C.
+const POOL: u64 = 4;
+
+// ---------------------------------------------------------------------
+// Model A: preempt_unlocked vs a starving session
+// ---------------------------------------------------------------------
+
+/// Shared variables of the preemption dance. `pool_free + victim_held +
+/// starver_held` is the conservation sum ([`POOL`]).
+#[derive(Debug, Clone, PartialEq)]
+struct Preempt {
+    pool_free: u64,
+    victim_held: u64,
+    starver_held: u64,
+    /// `Inner::pending_preempts`: detached victims whose copy still
+    /// runs outside the lock.
+    pending: usize,
+    /// Starver parked in `stalled` (waiting for the victim's bytes).
+    stalled: bool,
+    /// `unstall()` ran and woke the starver.
+    woken: bool,
+    /// Starver took the spurious-failure branch.
+    failed: bool,
+    /// Times the victim was requeued to the waiting line.
+    requeued: u32,
+    /// Starver's growth reservation succeeded.
+    grew: bool,
+    /// Model the guard (`true` = production code, `false` = seeded bug
+    /// that ignores `pending_preempts` in the alone-check).
+    guarded: bool,
+}
+
+impl Preempt {
+    fn new(guarded: bool) -> Preempt {
+        Preempt {
+            pool_free: POOL - BYTES,
+            victim_held: BYTES,
+            starver_held: 0,
+            pending: 0,
+            stalled: false,
+            woken: false,
+            failed: false,
+            requeued: 0,
+            grew: false,
+            guarded,
+        }
+    }
+}
+
+/// Preemptor critical section 1 (`yield_back` honoring a mark /
+/// `cannot_grow` youngest-victim branch): detach the victim under the
+/// lock and raise `pending_preempts`.
+fn p_detach(s: &mut Preempt) -> Step {
+    s.pending += 1;
+    Step::Ran
+}
+
+/// Preemptor step 2 (**outside** the lock): the snapshot copy finishes
+/// and the victim's device bytes return to the pool.
+fn p_copy_release(s: &mut Preempt) -> Step {
+    s.pool_free += s.victim_held;
+    s.victim_held = 0;
+    Step::Ran
+}
+
+/// Preemptor critical section 3 (`preempt_unlocked` tail): drop
+/// `pending_preempts`, requeue the victim, unstall parked sessions.
+fn p_requeue(s: &mut Preempt) -> Step {
+    s.pending -= 1;
+    s.requeued += 1;
+    if s.stalled {
+        s.stalled = false;
+        s.woken = true;
+    }
+    Step::Ran
+}
+
+/// Starver critical section (`cannot_grow` finding no admitted peers):
+/// grow if the bytes are back; otherwise it *looks* alone — fail
+/// outright unless the `pending_preempts` guard says a detached
+/// victim's bytes are still in flight, in which case park in `stalled`.
+/// While the victim is still admitted (neither detached nor requeued)
+/// the real code would preempt it instead — that branch is outside this
+/// model, so the action blocks until the detach happened.
+fn s_grow_or_park(s: &mut Preempt) -> Step {
+    if s.pool_free >= NEED {
+        s.pool_free -= NEED;
+        s.starver_held += NEED;
+        s.grew = true;
+        return Step::Ran;
+    }
+    if s.pending == 0 && s.requeued == 0 {
+        return Step::Blocked; // victim still admitted: not the alone path
+    }
+    if s.guarded && s.pending > 0 {
+        s.stalled = true;
+    } else {
+        s.failed = true;
+    }
+    Step::Ran
+}
+
+/// Starver retry after an unstall wake-up (the re-pulled step).
+fn s_retry(s: &mut Preempt) -> Step {
+    if s.grew || s.failed {
+        return Step::Ran; // already resolved, nothing to retry
+    }
+    if !s.woken {
+        return Step::Blocked; // parked: only `unstall` can wake us
+    }
+    if s.pool_free < NEED {
+        return Step::Blocked;
+    }
+    s.pool_free -= NEED;
+    s.starver_held += NEED;
+    s.grew = true;
+    Step::Ran
+}
+
+fn preempt_threads() -> Vec<Thread<Preempt>> {
+    vec![
+        Thread::new("preemptor", vec![p_detach, p_copy_release, p_requeue]),
+        Thread::new("starver", vec![s_grow_or_park, s_retry]),
+    ]
+}
+
+fn preempt_invariant(s: &Preempt) {
+    assert_eq!(
+        s.pool_free + s.victim_held + s.starver_held,
+        POOL,
+        "pool bytes not conserved: {s:?}"
+    );
+    assert!(s.requeued <= 1, "victim requeued more than once: {s:?}");
+    assert!(
+        !s.failed,
+        "spurious failure: starver failed while a preemption was in flight: {s:?}"
+    );
+}
+
+/// Every interleaving of the guarded (production) dance keeps the
+/// invariants: the starver either grows immediately or parks and is
+/// woken, never failing while the victim's bytes are in flight.
+#[test]
+fn preempt_dance_never_spuriously_fails() {
+    let n = explore(&Preempt::new(true), &preempt_threads(), &preempt_invariant);
+    assert!(n >= 2, "expected multiple schedules, got {n}");
+    // terminal sanity via a second pass: once both threads finish, the
+    // starver holds its bytes and nothing is pending
+    explore(&Preempt::new(true), &preempt_threads(), &|s| {
+        if s.requeued == 1 && s.grew {
+            assert_eq!(s.pending, 0, "pending_preempts leaked: {s:?}");
+        }
+    });
+}
+
+/// Seeded violation: with the `pending_preempts` guard removed, some
+/// schedule runs the starver's alone-check while the victim's copy is
+/// mid-flight — the explorer must reach the spurious failure.
+#[test]
+fn preempt_dance_without_pending_guard_is_caught() {
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        explore(&Preempt::new(false), &preempt_threads(), &preempt_invariant)
+    }));
+    let msg = format!("{:?}", err.expect_err("unguarded dance must spuriously fail"));
+    assert!(msg.contains("spurious failure"), "got: {msg}");
+}
+
+// ---------------------------------------------------------------------
+// Model B: rebind_charge vs reclaim_unreferenced
+// ---------------------------------------------------------------------
+
+/// Shared variables of the rebind/reclaim dance on one shared prefix.
+#[derive(Debug, Clone, PartialEq)]
+struct Rebind {
+    /// `SharedPrefix` refcount (the migrating session holds one ref
+    /// through its old attachment handle at the start).
+    refs: u32,
+    /// Residency payload still resident (its lease is live).
+    resident: bool,
+    /// Pool bytes the residency lease holds.
+    pool_used: u64,
+    /// The reclaim pass freed the entry.
+    reclaimed: bool,
+    /// The rebind completed (new handle live, old released).
+    rebound: bool,
+}
+
+impl Rebind {
+    fn new() -> Rebind {
+        Rebind { refs: 1, resident: true, pool_used: BYTES, reclaimed: false, rebound: false }
+    }
+}
+
+/// Rebind step 1 — production order (`AttachedPrefix::rebind_charge`):
+/// the **new** handle's reference is taken first.
+fn rb_bump_new(s: &mut Rebind) -> Step {
+    s.refs += 1;
+    Step::Ran
+}
+
+/// Rebind step 2: the old handle drops its reference.
+fn rb_release_old(s: &mut Rebind) -> Step {
+    s.refs -= 1;
+    s.rebound = true;
+    Step::Ran
+}
+
+/// One `reclaim_unreferenced` pass under the trie root lock: frees the
+/// entry iff nobody references it (a no-op pass otherwise — the real
+/// scan just moves on).
+fn rc_scan(s: &mut Rebind) -> Step {
+    if s.refs == 0 && s.resident {
+        s.resident = false;
+        s.pool_used -= BYTES;
+        s.reclaimed = true;
+    }
+    Step::Ran
+}
+
+fn rebind_invariant(s: &Rebind) {
+    assert!(
+        !(s.reclaimed && s.refs > 0),
+        "reclaim freed a prefix a live attachment still references: {s:?}"
+    );
+    assert!(
+        !s.rebound || s.resident,
+        "rebound attachment points at a reclaimed payload: {s:?}"
+    );
+    let expect = if s.resident { BYTES } else { 0 };
+    assert_eq!(s.pool_used, expect, "residency bytes drifted: {s:?}");
+}
+
+/// Production order (bump-before-release): no interleaving lets the
+/// reclaim pass observe a transient zero refcount.
+#[test]
+fn rebind_bump_before_release_survives_concurrent_reclaim() {
+    let threads = vec![
+        Thread::new("rebind", vec![rb_bump_new, rb_release_old]),
+        Thread::new("reclaimer", vec![rc_scan]),
+    ];
+    let n = explore(&Rebind::new(), &threads, &rebind_invariant);
+    assert!(n >= 3, "expected one schedule per scan position, got {n}");
+}
+
+/// Seeded violation: releasing the old ref before bumping the new one
+/// opens a zero-ref window; a reclaim pass landing inside it frees the
+/// still-referenced prefix, and the invariant must catch it.
+#[test]
+fn rebind_release_before_bump_is_caught() {
+    let threads = vec![
+        // buggy order: old ref dropped first
+        Thread::new("rebind-buggy", vec![rb_release_old, rb_bump_new]),
+        Thread::new("reclaimer", vec![rc_scan]),
+    ];
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        explore(&Rebind::new(), &threads, &rebind_invariant)
+    }));
+    let msg = format!("{:?}", err.expect_err("zero-ref window must be reachable"));
+    assert!(
+        msg.contains("reclaimed payload") || msg.contains("still references"),
+        "got: {msg}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Model C: take_for_migration / migration_release vs a source admitter
+// ---------------------------------------------------------------------
+
+/// Shared variables of the migration dance: one session moving from the
+/// source replica to the destination while the source keeps admitting.
+#[derive(Debug, Clone, PartialEq)]
+struct Migrate {
+    src_free: u64,
+    /// Bytes the migrant holds in the source pool.
+    migrant_held: u64,
+    /// Bytes the source's own waiting session holds after admission.
+    admitted_held: u64,
+    /// Snapshot bytes staged in the swap pool.
+    swap_used: u64,
+    /// Source `pending_preempts` (raised by `take_for_migration`).
+    pending: usize,
+    /// Where the migrant currently is: 1 = source runnable queue,
+    /// 2 = detached (in flight), 3 = destination waiting line.
+    migrant_at: u8,
+    /// `migration_release` ran on the source.
+    released: bool,
+    /// The source admitter got its session in.
+    admitted: bool,
+}
+
+impl Migrate {
+    fn new() -> Migrate {
+        Migrate {
+            src_free: POOL - BYTES,
+            migrant_held: BYTES,
+            admitted_held: 0,
+            swap_used: 0,
+            pending: 0,
+            migrant_at: 1,
+            released: false,
+            admitted: false,
+        }
+    }
+}
+
+/// Migrator critical section 1 (`take_for_migration`): detach the
+/// migrant from the source's queues; it keeps its pool bytes.
+fn m_take(s: &mut Migrate) -> Step {
+    s.migrant_at = 2;
+    s.pending += 1;
+    Step::Ran
+}
+
+/// Migrator step 2 (outside the source lock): suspend to the staging
+/// swap pool — device bytes come home, snapshot bytes go host-side.
+fn m_suspend(s: &mut Migrate) -> Step {
+    s.swap_used += BYTES;
+    s.src_free += s.migrant_held;
+    s.migrant_held = 0;
+    Step::Ran
+}
+
+/// Migrator step 3 (`rebind_for_migration` + destination `resubmit`):
+/// the migrant joins the destination's waiting line; the snapshot
+/// drains from swap when it restores there (modeled at resubmit — the
+/// restore path settles the stage lease).
+fn m_resubmit(s: &mut Migrate) -> Step {
+    s.migrant_at = 3;
+    s.swap_used -= BYTES;
+    Step::Ran
+}
+
+/// Migrator critical section 4 (`migration_release` on the source):
+/// drop `pending_preempts` so freed bytes reach waiters.
+fn m_release(s: &mut Migrate) -> Step {
+    s.pending -= 1;
+    s.released = true;
+    Step::Ran
+}
+
+/// One source `try_admit` pass: admit the waiting session iff its
+/// reserve fits right now (no-op otherwise, like a real failed pass).
+fn m_admit(s: &mut Migrate) -> Step {
+    if !s.admitted && s.src_free >= NEED {
+        s.src_free -= NEED;
+        s.admitted_held += NEED;
+        s.admitted = true;
+    }
+    Step::Ran
+}
+
+fn migrate_invariant(s: &Migrate) {
+    assert_eq!(
+        s.src_free + s.migrant_held + s.admitted_held,
+        POOL,
+        "source pool bytes not conserved: {s:?}"
+    );
+    assert!(s.swap_used <= BYTES, "swap pool over-staged: {s:?}");
+    // the migrant exists in exactly one place at all times
+    assert!(matches!(s.migrant_at, 1..=3), "migrant lost: {s:?}");
+    assert!(
+        !(s.migrant_held > 0 && s.migrant_at == 3),
+        "migrant resubmitted while still holding source bytes: {s:?}"
+    );
+    if s.released {
+        assert_eq!(s.pending, 0, "pending_preempts leaked past release: {s:?}");
+        assert_eq!(s.migrant_at, 3, "released before the migrant landed: {s:?}");
+    }
+}
+
+/// Every interleaving of the migration dance with a concurrent source
+/// admitter conserves bytes in both pools, lands the migrant exactly
+/// once, and returns `pending_preempts` to zero.
+#[test]
+fn migration_dance_is_exactly_once_and_conserving() {
+    let threads = vec![
+        Thread::new("migrator", vec![m_take, m_suspend, m_resubmit, m_release]),
+        Thread::new("src-admitter", vec![m_admit]),
+    ];
+    let n = explore(&Migrate::new(), &threads, &migrate_invariant);
+    assert!(n >= 5, "expected one schedule per admit position, got {n}");
+    // terminal check: whatever the admit position, the final state has
+    // the migrant at the destination and zero staged swap bytes
+    explore(&Migrate::new(), &threads, &|s| {
+        if s.released {
+            assert_eq!((s.migrant_at, s.swap_used), (3, 0), "bad terminal: {s:?}");
+        }
+    });
+}
+
+/// The admitter can only squeeze in once the migrant's bytes are home:
+/// schedules where the admit pass runs before `m_suspend` are no-ops
+/// (NEED > src_free), proving migration never double-frees bytes early.
+#[test]
+fn admission_cannot_use_bytes_before_the_snapshot_copy_returns_them() {
+    // thread order variant: admitter runs its single pass first in some
+    // schedules; it must only succeed when src_free >= NEED, which is
+    // impossible while the migrant still holds BYTES of POOL
+    let threads = vec![
+        Thread::new("src-admitter", vec![m_admit]),
+        Thread::new("migrator", vec![m_take, m_suspend, m_resubmit, m_release]),
+    ];
+    explore(&Migrate::new(), &threads, &|s| {
+        if s.admitted && s.migrant_held > 0 {
+            panic!("admitter used bytes the migrant still holds: {s:?}");
+        }
+        migrate_invariant(s);
+    });
+}

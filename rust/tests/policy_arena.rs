@@ -266,6 +266,9 @@ fn denied_cow_keeps_shared_prefix_read_only_without_starving_eviction() {
 
     // the sharer attaches the read-only region, then the pool is
     // drained so its copy-on-write can never be granted
+    // quiescent point: the only pool charge is the published prefix's
+    // residency lease, so the byte ledger must balance exactly
+    pool.assert_conserved();
     let att = idx.attach(&tokens, geom, m.prefill_len).expect("prefix attaches");
     let budget = 20usize;
     let mut sharer = mk(PolicyKind::StreamingLlm, budget);
@@ -310,6 +313,10 @@ fn denied_cow_keeps_shared_prefix_read_only_without_starving_eviction() {
     let trace = sharer.take_trace().expect("trace enabled");
     let d = replay_divergence(&trace);
     assert_eq!(d.mismatches, 0, "guarded run must replay (first at {:?})", d.first_mismatch);
+    // returning the raw drain charge restores conservation: what's left
+    // in the pool is exactly the residency lease again
+    pool.release(free);
+    pool.assert_conserved();
 }
 
 /// End-to-end: every registry entry is selectable through

@@ -126,6 +126,10 @@ fn single_replica_router_matches_legacy_scheduler() {
         assert_eq!(a.preemptions, b.preemptions);
     }
     assert_eq!(legacy_snap, fleet_snap, "1-replica fleet snapshot must be bit-identical");
+    // quiescent point: every session terminated, so the byte ledger on
+    // both pools must balance (no leaked admission/bond/CoW leases)
+    legacy_pool.assert_conserved();
+    fleet.pool().assert_conserved();
     assert_eq!(fleet_snap.replicas, 1);
     assert_eq!(fleet_snap.migrations, 0);
     assert_eq!(router.rebalance(), 0, "a fleet of one never migrates");
@@ -211,6 +215,12 @@ fn live_migration_is_bit_exact_and_counted() {
     let swap_ins: u64 = results.iter().map(|r| r.swap_ins).sum();
     assert_eq!(swap_ins, 1, "exactly the migrated session restores from a snapshot");
 
+    // quiescent point: fleet drained — device and swap ledgers on both
+    // replicas must balance (the migration rebound its leases cleanly)
+    s0.pool().assert_conserved();
+    s1.pool().assert_conserved();
+    s0.swap_pool().expect("swap enabled").assert_conserved();
+    s1.swap_pool().expect("swap enabled").assert_conserved();
     let merged = router.snapshot();
     assert_eq!(merged.replicas, 2);
     assert_eq!(merged.migrations, 1);
@@ -304,6 +314,8 @@ fn migration_at_any_mid_decode_point_preserves_streams() {
         let merged = router.snapshot();
         assert_eq!(merged.migrations, moved as u64);
         assert_eq!(merged.preemptions, 0, "pre={pre}: no preemption storm");
+        s0.pool().assert_conserved();
+        s1.pool().assert_conserved();
         router.shutdown();
     }
 }

@@ -1,0 +1,363 @@
+//! Repo lint driver: `cargo run -p xtask -- lint` (or `make xtask-lint`).
+//!
+//! Three surfaces describe the `SchedSnapshot` counter set and drift
+//! independently under review pressure:
+//!
+//! 1. the code itself — the `.set("…")` calls in
+//!    `SchedSnapshot::to_json` (`rust/src/metrics/mod.rs`);
+//! 2. the counter map — the table under "## Where each SchedSnapshot
+//!    counter is incremented" in `docs/ARCHITECTURE.md`, whose first
+//!    cell names counters in backticks (slash- or comma-grouped, with
+//!    `pool_*`-style wildcard rows);
+//! 3. the README stats ledger — the `{"cmd": "stats"}` bullet listing
+//!    every key a server `stats` reply carries.
+//!
+//! `lint` parses all three and fails on drift in *either* direction: a
+//! JSON key no doc mentions, or a doc entry naming a key the code no
+//! longer emits. Backticked identifiers in the README bullet that are
+//! not top-level keys must be on the small per-class/server-field
+//! allowlist ([`README_EXTRA`]). The parsers are deliberately dumb
+//! (substring scans, no regex, no deps) and each refuses to pass when
+//! its anchor text vanishes — moving a surface breaks the lint loudly
+//! instead of silently scanning nothing.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Heading the ARCHITECTURE.md counter-map parser anchors on.
+const ARCH_HEADING: &str = "## Where each SchedSnapshot counter is incremented";
+
+/// Backticked identifiers the README stats bullet may use that are not
+/// top-level `SchedSnapshot` JSON keys: fields of the per-class
+/// `slo_classes` scoreboards plus the two keys the *server* adds to
+/// the reply.
+const README_EXTRA: &[&str] = &[
+    "served",
+    "mode",
+    "name",
+    "violations",
+    "ttft_p50",
+    "ttft_p99",
+    "tpot_p50_milli",
+    "tpot_p99_milli",
+];
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+fn read(path: &Path) -> String {
+    match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("xtask: cannot read {}: {e}", path.display());
+            std::process::exit(2);
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("lint") => lint(),
+        other => {
+            eprintln!(
+                "usage: cargo run -p xtask -- lint{}",
+                other.map_or(String::new(), |c| format!(" (unknown command `{c}`)"))
+            );
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn lint() -> ExitCode {
+    let root = repo_root();
+    let metrics = read(&root.join("rust/src/metrics/mod.rs"));
+    let arch = read(&root.join("docs/ARCHITECTURE.md"));
+    let readme = read(&root.join("README.md"));
+    let errs = run_lint(&metrics, &arch, &readme);
+    if errs.is_empty() {
+        let n = snapshot_keys(&metrics).len();
+        println!("xtask lint: {n} SchedSnapshot keys consistent across code and docs");
+        ExitCode::SUCCESS
+    } else {
+        for e in &errs {
+            eprintln!("xtask lint: {e}");
+        }
+        eprintln!("xtask lint: {} drift error(s)", errs.len());
+        ExitCode::FAILURE
+    }
+}
+
+/// All drift errors across the three surfaces (empty = consistent).
+fn run_lint(metrics: &str, arch: &str, readme: &str) -> Vec<String> {
+    let keys = snapshot_keys(metrics);
+    let (arch_exact, arch_wild) = arch_counters(arch);
+    let readme_keys = readme_counters(readme);
+    let mut errs = Vec::new();
+
+    // Anchor guards: an empty parse means the surface moved, not that
+    // there is nothing to check.
+    if keys.is_empty() {
+        errs.push("no `.set` keys under `impl SchedSnapshot` — did to_json move?".into());
+    }
+    if arch_exact.is_empty() && arch_wild.is_empty() {
+        errs.push(format!("no counter-map rows under \"{ARCH_HEADING}\" — table moved?"));
+    }
+    if readme_keys.is_empty() {
+        errs.push("no keys in the README `{\"cmd\": \"stats\"}` bullet — did it move?".into());
+    }
+    if !errs.is_empty() {
+        return errs;
+    }
+
+    let covered = |k: &str| {
+        arch_exact.iter().any(|a| a == k) || arch_wild.iter().any(|w| k.starts_with(w.as_str()))
+    };
+    for k in &keys {
+        if !covered(k) {
+            errs.push(format!(
+                "SchedSnapshot emits `{k}` but the ARCHITECTURE.md counter map has no row for it"
+            ));
+        }
+        if !readme_keys.iter().any(|r| r == k) {
+            errs.push(format!(
+                "SchedSnapshot emits `{k}` but the README stats ledger does not document it"
+            ));
+        }
+    }
+    for a in &arch_exact {
+        if !keys.iter().any(|k| k == a) {
+            errs.push(format!(
+                "ARCHITECTURE.md lists `{a}` but SchedSnapshot::to_json emits no such key"
+            ));
+        }
+    }
+    for r in &readme_keys {
+        if !keys.iter().any(|k| k == r) && !README_EXTRA.contains(&r.as_str()) {
+            errs.push(format!(
+                "README stats ledger mentions `{r}`: not a SchedSnapshot key or known field"
+            ));
+        }
+    }
+    errs
+}
+
+/// JSON keys emitted by `SchedSnapshot::to_json`: the first string
+/// literal after every `.set(` between `impl SchedSnapshot` and the
+/// next top-level `impl` (rustfmt may put the key on its own line, so
+/// the scan skips whitespace before the opening quote).
+fn snapshot_keys(src: &str) -> Vec<String> {
+    let Some(start) = src.find("impl SchedSnapshot") else {
+        return Vec::new();
+    };
+    let body = &src[start..];
+    let end = body[1..].find("\nimpl ").map_or(body.len(), |i| i + 1);
+    let mut rest = &body[..end];
+    let mut keys = Vec::new();
+    while let Some(i) = rest.find(".set(") {
+        rest = &rest[i + ".set(".len()..];
+        if let Some(lit) = rest.trim_start().strip_prefix('"') {
+            if let Some(q) = lit.find('"') {
+                keys.push(lit[..q].to_string());
+            }
+        }
+    }
+    keys
+}
+
+/// Counter names from the ARCHITECTURE.md map: `(exact, wildcard
+/// prefixes)`. Rows group related counters with ` / ` or `, `; a name
+/// ending in `*` (e.g. `pool_*`) covers every key with that prefix.
+fn arch_counters(doc: &str) -> (Vec<String>, Vec<String>) {
+    let Some(start) = doc.find(ARCH_HEADING) else {
+        return (Vec::new(), Vec::new());
+    };
+    let (mut exact, mut wild) = (Vec::new(), Vec::new());
+    for line in doc[start..].lines().skip(1) {
+        if line.starts_with("## ") {
+            break;
+        }
+        let Some(row) = line.strip_prefix('|') else {
+            continue;
+        };
+        let Some(cell) = row.split('|').next() else {
+            continue;
+        };
+        for tok in backticked(cell) {
+            if let Some(prefix) = tok.strip_suffix('*') {
+                wild.push(prefix.to_string());
+            } else if is_key_ident(&tok) {
+                exact.push(tok);
+            }
+        }
+    }
+    (exact, wild)
+}
+
+/// Backticked key-like identifiers in the README stats bullet: from
+/// the start of the line holding the `{"cmd": "stats"}` marker to the
+/// start of the line holding `{"cmd": "shutdown"}` (both markers sit
+/// inside backtick spans, so the region must begin at a line boundary
+/// to keep backtick parity right).
+fn readme_counters(readme: &str) -> Vec<String> {
+    let Some(hit) = readme.find(r#"{"cmd": "stats"}"#) else {
+        return Vec::new();
+    };
+    let start = readme[..hit].rfind('\n').map_or(0, |i| i + 1);
+    let region = &readme[start..];
+    let end = region
+        .find(r#"{"cmd": "shutdown"}"#)
+        .map_or(region.len(), |i| region[..i].rfind('\n').map_or(region.len(), |j| j + 1));
+    let mut out: Vec<String> = backticked(&region[..end])
+        .into_iter()
+        .filter(|t| is_key_ident(t))
+        .collect();
+    out.dedup();
+    out
+}
+
+/// Contents of every `` `…` `` span, in order.
+fn backticked(s: &str) -> Vec<String> {
+    s.split('`')
+        .enumerate()
+        .filter_map(|(i, seg)| (i % 2 == 1).then(|| seg.to_string()))
+        .collect()
+}
+
+/// True for snake_case counter names: lowercase-letter head, then
+/// lowercase alphanumerics and underscores. Rejects prose, flags
+/// (`--idle-swap-ticks`), and quoted values (`"goodput"`).
+fn is_key_ident(s: &str) -> bool {
+    let mut chars = s.chars();
+    chars.next().is_some_and(|c| c.is_ascii_lowercase())
+        && chars.all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const METRICS_FIXTURE: &str = r#"
+impl SloClassSnap {
+    pub fn to_json(&self) -> Json {
+        j.set("name", Json::Str(self.name.clone()));
+    }
+}
+impl SchedSnapshot {
+    pub fn to_json(&self) -> Json {
+        j.set("pool_used", Json::Num(self.pool_used as f64));
+        j.set("pool_leases", Json::Num(self.pool_leases as f64));
+        j.set(
+            "batch_hist",
+            Json::Arr(Vec::new()),
+        );
+        j.set("admissions", Json::Num(self.admissions as f64));
+        j
+    }
+}
+"#;
+
+    const ARCH_FIXTURE: &str = "\
+## Where each SchedSnapshot counter is incremented
+
+| Counter | Incremented in |
+|---|---|
+| `admissions` | `Scheduler::try_admit` |
+| `pool_*` | read from the `BlockPool` |
+| `batch_hist` | `Scheduler::note_fused_step` |
+
+## Threading model
+";
+
+    const README_FIXTURE: &str = "\
+Control lines:
+
+* `{\"cmd\": \"stats\"}` → counters: `pool_used`, `pool_leases`,
+  `admissions`, `batch_hist` (per-class: `name`, `ttft_p50`), the
+  `--idle-swap-ticks` flag and `\"goodput\"` mode, plus `served`.
+* `{\"cmd\": \"shutdown\"}` → `{\"ok\": true}`.
+";
+
+    #[test]
+    fn snapshot_keys_scan_handles_multiline_set_and_scopes_to_impl() {
+        let keys = snapshot_keys(METRICS_FIXTURE);
+        assert_eq!(keys, ["pool_used", "pool_leases", "batch_hist", "admissions"]);
+        assert!(!keys.contains(&"name".to_string()), "SloClassSnap keys must not leak in");
+    }
+
+    #[test]
+    fn arch_parser_splits_groups_and_wildcards() {
+        let (exact, wild) = arch_counters(ARCH_FIXTURE);
+        assert_eq!(exact, ["admissions", "batch_hist"]);
+        assert_eq!(wild, ["pool_"]);
+    }
+
+    #[test]
+    fn readme_parser_keeps_keys_and_drops_flags_and_quoted_values() {
+        let keys = readme_counters(README_FIXTURE);
+        assert_eq!(
+            keys,
+            ["pool_used", "pool_leases", "admissions", "batch_hist", "name", "ttft_p50", "served"]
+        );
+    }
+
+    #[test]
+    fn consistent_fixture_passes() {
+        let errs = run_lint(METRICS_FIXTURE, ARCH_FIXTURE, README_FIXTURE);
+        assert!(errs.is_empty(), "unexpected drift: {errs:?}");
+    }
+
+    #[test]
+    fn seeded_new_key_without_docs_is_caught_in_both_directions() {
+        let drifted = METRICS_FIXTURE.replace(
+            "j.set(\"admissions\"",
+            "j.set(\"bogus_key\", Json::Num(0.0));\n        j.set(\"admissions\"",
+        );
+        let errs = run_lint(&drifted, ARCH_FIXTURE, README_FIXTURE);
+        assert!(
+            errs.iter().any(|e| e.contains("`bogus_key`") && e.contains("counter map")),
+            "ARCH-side drift not caught: {errs:?}"
+        );
+        assert!(
+            errs.iter().any(|e| e.contains("`bogus_key`") && e.contains("stats ledger")),
+            "README-side drift not caught: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn seeded_stale_arch_row_is_caught() {
+        let drifted = ARCH_FIXTURE.replace("`batch_hist`", "`batch_hist`, `removed_counter`");
+        let errs = run_lint(METRICS_FIXTURE, &drifted, README_FIXTURE);
+        assert!(
+            errs.iter().any(|e| e.contains("`removed_counter`") && e.contains("no such key")),
+            "stale ARCH entry not caught: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn seeded_unknown_readme_mention_is_caught() {
+        let drifted = README_FIXTURE.replace("`served`", "`served`, `mystery_key`");
+        let errs = run_lint(METRICS_FIXTURE, ARCH_FIXTURE, &drifted);
+        assert!(
+            errs.iter().any(|e| e.contains("`mystery_key`")),
+            "unknown README mention not caught: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn missing_anchors_fail_instead_of_passing_vacuously() {
+        let errs = run_lint("fn main() {}", "# nothing", "# nothing");
+        assert_eq!(errs.len(), 3, "every vanished surface must error: {errs:?}");
+    }
+
+    #[test]
+    fn real_repo_surfaces_are_consistent() {
+        let root = repo_root();
+        let metrics = std::fs::read_to_string(root.join("rust/src/metrics/mod.rs")).unwrap();
+        let arch = std::fs::read_to_string(root.join("docs/ARCHITECTURE.md")).unwrap();
+        let readme = std::fs::read_to_string(root.join("README.md")).unwrap();
+        let errs = run_lint(&metrics, &arch, &readme);
+        assert!(errs.is_empty(), "live drift between code and docs: {errs:?}");
+    }
+}
